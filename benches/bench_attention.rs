@@ -1,0 +1,56 @@
+//! Kernel-level benchmark: all precision allocations of the attention lab
+//! at the paper's benchmark shape family, plus PASA's preprocessing
+//! overhead (the paper's claimed-negligible batched GEMM).
+
+use pasa::attention::{
+    naive_attention_f32, run_attention, to_fp16_inputs, Allocation, AttentionConfig,
+};
+use pasa::bench::Bencher;
+use pasa::numerics::Format;
+use pasa::tensor::GemmPrecision;
+use pasa::workloads::{gen_case, Distribution, Pcg64};
+
+fn main() {
+    let b = Bencher::default();
+    let dist = Distribution::Uniform { x0: 5.0, am: 1.0 };
+    println!("# bench_attention — lab kernels (items = attention tokens/iter)\n");
+
+    for &(s, d) in &[(512usize, 128usize), (1280, 128)] {
+        let mut rng = Pcg64::new(1, 0);
+        let case = to_fp16_inputs(&gen_case(dist, s, s, d, &mut rng));
+        println!("## shape ({s}, {d})");
+        let r = b.run(&format!("naive f32 {s}x{d}"), s as f64, || {
+            naive_attention_f32(&case)
+        });
+        println!("{r}");
+        for alloc in Allocation::all() {
+            let cfg = AttentionConfig::new(alloc);
+            let r = b.run(&format!("{} {s}x{d}", alloc.name()), s as f64, || {
+                run_attention(&case, &cfg)
+            });
+            println!("{r}");
+        }
+        // PASA preprocessing overhead alone: K' = M·K per 128-block.
+        let m = pasa::attention::shifting_matrix(
+            128,
+            (d as f64).sqrt(),
+            pasa::attention::PAPER_BETA,
+            Format::F16,
+        );
+        let r = b.run(&format!("pasa preprocess K' {s}x{d}"), s as f64, || {
+            let mut outs = Vec::new();
+            let mut r0 = 0;
+            while r0 < s {
+                let r1 = (r0 + 128).min(s);
+                outs.push(pasa::attention::preprocess_k(
+                    &case.k.rows_slice(r0, r1),
+                    &m,
+                    GemmPrecision::ACC32_STORE16,
+                ));
+                r0 = r1;
+            }
+            outs
+        });
+        println!("{r}\n");
+    }
+}

@@ -1,0 +1,21 @@
+//! Regenerates the paper's Fig. 10 (hybrid-distribution RMSE sweeps).
+
+use pasa::bench::Bencher;
+use pasa::experiments::{self, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions {
+        heads: 2,
+        seq: 640,
+        ..Default::default()
+    };
+    let b = Bencher::quick();
+    for id in ["fig10a", "fig10b"] {
+        let mut out = String::new();
+        let r = b.run(id, 1.0, || {
+            out = experiments::run(id, &opts).unwrap();
+        });
+        println!("{out}");
+        println!("{r}\n");
+    }
+}

@@ -1,0 +1,22 @@
+//! Regenerates the paper's Fig. 9 (uniform-distribution RMSE sweeps) and
+//! times the harness. The printed rows are the figure's series.
+
+use pasa::bench::Bencher;
+use pasa::experiments::{self, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions {
+        heads: 2,
+        seq: 640,
+        ..Default::default()
+    };
+    let b = Bencher::quick();
+    for id in ["fig9a", "fig9b"] {
+        let mut out = String::new();
+        let r = b.run(id, 1.0, || {
+            out = experiments::run(id, &opts).unwrap();
+        });
+        println!("{out}");
+        println!("{r}\n");
+    }
+}

@@ -1,0 +1,63 @@
+//! Coordinator-substrate benchmark: paged KV pool allocate/write/assemble
+//! throughput (the L3 hot path around each decode step).
+
+use pasa::bench::Bencher;
+use pasa::coordinator::{KvPool, SeqCache};
+
+fn main() {
+    let b = Bencher::default();
+    let (layers, width, page_tokens) = (4usize, 256usize, 32usize);
+    println!("# bench_kv_cache — paged pool ops\n");
+
+    let r = b.run("alloc+release 512-token seq", 512.0, || {
+        let mut pool = KvPool::new(1024, page_tokens, width);
+        let mut s = SeqCache::new(layers);
+        s.ensure_capacity(&mut pool, 512).unwrap();
+        s.release(&mut pool);
+        pool.used_pages()
+    });
+    println!("{r}");
+
+    let mut pool = KvPool::new(4096, page_tokens, width);
+    let mut s = SeqCache::new(layers);
+    s.ensure_capacity(&mut pool, 512).unwrap();
+    let krow = vec![1.0f32; width];
+    let vrow = vec![2.0f32; width];
+    let r = b.run("write_row x 4 layers", 4.0, || {
+        for l in 0..layers {
+            s.write_row(&mut pool, l, 200, &krow, &vrow);
+        }
+    });
+    println!("{r}");
+
+    s.len_tokens = 512;
+    let mut dense = vec![0.0f32; 512 * width];
+    let r = b.run("fill_dense one layer (512 tok)", 512.0, || {
+        s.fill_dense(&pool, 0, false, &mut dense);
+        dense[0]
+    });
+    println!("{r}");
+
+    // Full batch assembly, the per-decode-step cost: B=4, K+V, all layers.
+    let seqs: Vec<SeqCache> = (0..4)
+        .map(|_| {
+            let mut c = SeqCache::new(layers);
+            c.ensure_capacity(&mut pool, 512).unwrap();
+            c.len_tokens = 400;
+            c
+        })
+        .collect();
+    let mut batch = vec![0.0f32; layers * 4 * 512 * width];
+    let r = b.run("assemble decode batch (4x4 layers, K+V)", 4.0, || {
+        let sf = 512 * width;
+        for (i, c) in seqs.iter().enumerate() {
+            for l in 0..layers {
+                let off = (l * 4 + i) * sf;
+                c.fill_dense(&pool, l, false, &mut batch[off..off + sf]);
+                c.fill_dense(&pool, l, true, &mut batch[off..off + sf]);
+            }
+        }
+        batch[0]
+    });
+    println!("{r}");
+}

@@ -1,0 +1,65 @@
+//! End-to-end serving benchmark (requires `make artifacts`): decode-step
+//! latency and tokens/s per guard policy — the paper's serving-side
+//! framing (FA low-precision throughput vs robustness).
+
+use pasa::bench::Bencher;
+use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request};
+use pasa::model::Sampling;
+use pasa::runtime::ModelRuntime;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let art = Path::new("artifacts");
+    if !art.join("manifest.txt").exists() {
+        println!("artifacts/ missing — run `make artifacts`; skipping bench_serving");
+        return Ok(());
+    }
+    let rt = ModelRuntime::load(art)?;
+    println!("# bench_serving — full stack over {:?}\n", rt.dims);
+
+    for policy in [
+        GuardPolicy::AlwaysFa16,
+        GuardPolicy::AlwaysPasa,
+        GuardPolicy::AlwaysFa32,
+        GuardPolicy::Adaptive,
+    ] {
+        let mut cfg = EngineConfig::default();
+        cfg.policy = policy;
+        let mut eng = Engine::new(&rt, cfg);
+        for i in 0..8 {
+            let id = eng.fresh_id();
+            eng.submit(Request::new(id, format!("count up: {}", ["one","two","three","four"][i % 4]))
+                .with_params(GenParams {
+                    max_new_tokens: 24,
+                    sampling: Sampling::Greedy,
+                    stop_at_eos: false,
+                }));
+        }
+        let t0 = Instant::now();
+        eng.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<24} tok/s={:>7.1}  step_mean={:>7.2}ms  ttft_p95={:>7.2}ms  wall={:.2}s",
+            format!("{policy:?}"),
+            eng.metrics.tokens_generated as f64 / wall,
+            eng.metrics.step_latency.mean() * 1e3,
+            eng.metrics.ttft.percentile(95.0) * 1e3,
+            wall
+        );
+    }
+
+    // Raw decode-step latency through the head kernels.
+    let b = Bencher::quick();
+    let n = 512 * 128;
+    let q = vec![0.1f32; n];
+    let k = vec![0.2f32; n];
+    let v = vec![0.3f32; n];
+    for alloc in ["pasa", "fa16_32", "fa32"] {
+        let r = b.run(&format!("head kernel {alloc} (512x128)"), 512.0, || {
+            rt.head(alloc, &q, &k, &v).unwrap()
+        });
+        println!("{r}");
+    }
+    Ok(())
+}

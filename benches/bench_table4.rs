@@ -1,0 +1,19 @@
+//! Regenerates Table 4 (NaN percentages) and times the harness.
+
+use pasa::bench::Bencher;
+use pasa::experiments::{self, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions {
+        heads: 2,
+        seq: 640,
+        ..Default::default()
+    };
+    let b = Bencher::quick();
+    let mut out = String::new();
+    let r = b.run("table4", 1.0, || {
+        out = experiments::run("table4", &opts).unwrap();
+    });
+    println!("{out}");
+    println!("{r}");
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. The rust attention lab (bit-exact FP16 emulation) shows the paper's
+//!    headline behaviour: partially-low-precision FA overflows on biased
+//!    data; PASA does not.
+//! 2. The AOT runtime loads the Pallas-built HLO head kernels and runs the
+//!    same comparison through PJRT (requires `make artifacts`).
+//!
+//! Run: cargo run --release --example quickstart
+
+use pasa::attention::{
+    flash_attention, naive_attention_f32, pasa_attention, to_fp16_inputs, Allocation,
+    AttentionConfig,
+};
+use pasa::numerics::{has_overflow, relative_rmse};
+use pasa::runtime::ModelRuntime;
+use pasa::workloads::{gen_case, Distribution, Pcg64};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. attention lab (software FP16) ==");
+    // The paper's Fig 9(a) overflow point: uniform mean 30, amplitude 0.5.
+    let dist = Distribution::Uniform { x0: 30.0, am: 0.5 };
+    let mut rng = Pcg64::new(7, 0);
+    let case = to_fp16_inputs(&gen_case(dist, 512, 512, 128, &mut rng));
+    let golden = naive_attention_f32(&case);
+
+    let fa = flash_attention(&case, &AttentionConfig::new(Allocation::Fa16_32));
+    println!(
+        "FA(FP16-FP32): overflow = {} (paper: overflows at x0=30)",
+        has_overflow(&fa.data)
+    );
+    let pasa_out = pasa_attention(&case, &AttentionConfig::new(Allocation::Pasa16));
+    println!(
+        "PASA(FP16):    overflow = {}, RMSE vs golden = {:.3e}",
+        has_overflow(&pasa_out.data),
+        relative_rmse(&pasa_out.data, &golden.data)
+    );
+
+    println!("\n== 2. AOT runtime (PJRT, Pallas-built kernels) ==");
+    let art = Path::new("artifacts");
+    if !art.join("manifest.txt").exists() {
+        println!("artifacts/ missing — run `make artifacts` first; skipping runtime demo");
+        return Ok(());
+    }
+    let rt = ModelRuntime::load(art)?;
+    // Benign inputs through the pasa and fa32 head modules.
+    let n = 512 * 128;
+    let mut rng = Pcg64::new(8, 0);
+    let q: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let k: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let o_pasa = rt.head("pasa", &q, &k, &v)?;
+    let o_fa32 = rt.head("fa32", &q, &k, &v)?;
+    println!(
+        "head kernels agree: PASA-vs-FA32 RMSE = {:.3e}",
+        relative_rmse(&o_pasa, &o_fa32)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

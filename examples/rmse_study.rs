@@ -1,0 +1,22 @@
+//! Numerical accuracy study — regenerates the paper's Figs. 9–10 RMSE
+//! sweeps and Table 4 at a configurable size.
+//!
+//! Run: cargo run --release --example rmse_study
+//! (paper-fidelity size: pasa repro --exp fig9a --heads 16 --seq 1280)
+
+use pasa::experiments::{self, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions {
+        heads: 2,
+        seq: 640,
+        dim: 128,
+        trace_scale: 8,
+        seed: 42,
+    };
+    for id in ["fig9a", "fig9b", "fig10a", "fig10b", "table4"] {
+        println!("{}", experiments::run(id, &opts)?);
+    }
+    println!("rmse_study OK (reduced size; use the `pasa repro` CLI for paper-scale runs)");
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT pipeline (L2 -> runtime): lower the model to HLO text artifacts.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto):
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Exports, per attention allocation in --allocs (default pasa + fa16_32):
+  * prefill_<alloc>.hlo.txt  — batch 1, seq PREFILL_SEQ prompt processing,
+  * decode_<alloc>.hlo.txt   — batch DECODE_BATCH single-token step,
+  * head_<alloc>.hlo.txt     — standalone single-head attention kernel
+                               (quickstart / runtime benches).
+plus manifest.txt (module + parameter inventory the rust loader parses).
+
+Python runs once at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_SEQ = 256
+DECODE_BATCH = 4
+HEAD_SEQ = 512
+HEAD_DIM = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big
+    # constant arrays as "{...}", which the runtime-side text parser would
+    # silently read as garbage (PASA bakes the shifting matrix M in as an
+    # f16 constant).
+    return comp.as_hlo_text(True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg):
+    shapes = M.param_shapes(cfg)
+    return [spec(shapes[n]) for n in M.param_names(cfg)]
+
+
+def make_prefill_fn(cfg):
+    names = M.param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        tokens, seq_len = args[len(names)], args[len(names) + 1]
+        logits, kc, vc = M.prefill(params, tokens, seq_len, cfg)
+        return logits, kc, vc
+
+    return fn
+
+
+def make_decode_fn(cfg):
+    names = M.param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        token, pos, kc, vc = args[len(names) : len(names) + 4]
+        return M.decode_step(params, token, pos, kc, vc, cfg)
+
+    return fn
+
+
+def make_head_fn(alloc):
+    """Standalone single-head attention module: (q, k, v) -> O."""
+    if alloc == "pasa":
+        from .kernels.pasa import pasa_attention
+
+        def fn(q, k, v):
+            return (pasa_attention(q, k, v),)
+
+    else:
+        from .kernels.flash import flash_attention
+
+        def fn(q, k, v):
+            return (flash_attention(q, k, v, allocation=alloc),)
+
+    return fn
+
+
+def export(out_dir: str, allocs):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    base = M.ModelConfig()
+    kvw = base.head_width
+
+    for alloc in allocs:
+        cfg = M.ModelConfig(**{**base.__dict__, "attention": alloc})
+
+        # Prefill: batch 1, fixed prompt bucket.
+        pf = make_prefill_fn(cfg)
+        args = param_specs(cfg) + [
+            spec((1, PREFILL_SEQ), jnp.int32),
+            spec((1,), jnp.int32),
+        ]
+        text = to_hlo_text(jax.jit(pf).lower(*args))
+        name = f"prefill_{alloc}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"module {name} {name}.hlo.txt kind=prefill attention={alloc} "
+            f"batch=1 seq={PREFILL_SEQ} maxseq={cfg.max_seq}"
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+        # Decode: fixed batch bucket against the full cache.
+        df = make_decode_fn(cfg)
+        cache = spec((cfg.n_layers, DECODE_BATCH, cfg.max_seq, kvw))
+        args = param_specs(cfg) + [
+            spec((DECODE_BATCH,), jnp.int32),
+            spec((DECODE_BATCH,), jnp.int32),
+            cache,
+            cache,
+        ]
+        text = to_hlo_text(jax.jit(df).lower(*args))
+        name = f"decode_{alloc}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"module {name} {name}.hlo.txt kind=decode attention={alloc} "
+            f"batch={DECODE_BATCH} maxseq={cfg.max_seq}"
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+        # Standalone head kernel.
+        hf = make_head_fn(alloc)
+        args = [spec((HEAD_SEQ, HEAD_DIM))] * 3
+        text = to_hlo_text(jax.jit(hf).lower(*args))
+        name = f"head_{alloc}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"module {name} {name}.hlo.txt kind=head attention={alloc} "
+            f"seq={HEAD_SEQ} dim={HEAD_DIM}"
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+    # Parameter + config inventory (the rust loader's contract).
+    shapes = M.param_shapes(base)
+    for n in M.param_names(base):
+        dims = "x".join(str(d) for d in shapes[n]) or "scalar"
+        manifest.append(f"param {n} {dims}")
+    manifest.append(
+        "config "
+        f"vocab_size={base.vocab_size} d_model={base.d_model} "
+        f"n_layers={base.n_layers} n_heads={base.n_heads} "
+        f"d_head={base.d_head} d_ff={base.d_ff} max_seq={base.max_seq} "
+        f"prefill_seq={PREFILL_SEQ} decode_batch={DECODE_BATCH} "
+        f"pad={M.PAD} bos={M.BOS} eos={M.EOS}"
+    )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest ({len(manifest)} entries)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--allocs", default="pasa,fa16_32,fa32", help="comma-separated allocations"
+    )
+    args = ap.parse_args()
+    export(args.out, [a for a in args.allocs.split(",") if a])
+
+
+if __name__ == "__main__":
+    main()

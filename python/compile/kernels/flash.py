@@ -1,0 +1,146 @@
+"""Flash Attention 2 Pallas kernel (L1 baseline) under the paper's
+precision allocations (Figs. 1-3).
+
+* 'fa32'    — Fig. 1: FP16 inputs, FP32 accumulate, FP32 S, FP32 softmax.
+* 'fa16_32' — Fig. 2: S stored FP16 (the overflow site), FP32 softmax.
+* 'fa16'    — Fig. 3: everything FP16.
+
+Same tiling/masking structure as the PASA kernel so kernel-vs-kernel
+comparisons isolate the algorithm, not the plumbing. interpret=True only
+(see pasa.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .pasa import MASK_FLOOR, _exp16, _pad_to
+
+ALLOCATIONS = ("fa32", "fa16_32", "fa16")
+
+
+def _flash_kernel(
+    lens_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+    alpha: float,
+    allocation: str,
+    causal: bool,
+):
+    kv_len = lens_ref[0]
+    q_pos0 = lens_ref[1]
+    score_dtype = jnp.float32 if allocation == "fa32" else jnp.float16
+    vec_dtype = jnp.float16 if allocation == "fa16" else jnp.float32
+    qb = q_ref[...].astype(jnp.float16)
+    d = qb.shape[-1]
+    rows = q_pos0 + pl.program_id(0) * block_q + jax.lax.iota(jnp.int32, block_q)
+    inv_alpha = vec_dtype(1.0 / alpha)
+    floor = vec_dtype(MASK_FLOOR)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = k_ref[pl.dslice(j * block_kv, block_kv), :].astype(jnp.float16)
+        vb = v_ref[pl.dslice(j * block_kv, block_kv), :].astype(jnp.float16)
+
+        # Eq. (1): S = Q K^T — FP32 accumulate; the *store* dtype is the
+        # allocation's overflow decision.
+        s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32).astype(score_dtype)
+        # Eq. (2): static scaling (inf/alpha = inf — overflow propagates).
+        s = (s.astype(vec_dtype)) * inv_alpha
+
+        cols = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        valid = (cols < kv_len)[None, :]
+        if causal:
+            valid = valid & (cols[None, :] <= rows[:, None])
+        s = jnp.where(valid, s, floor)
+
+        # Eqs. (4)-(6): online softmax.
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        # exp at >= f32 internal precision (see pasa._exp16).
+        p = jnp.exp((s - m_new[:, None]).astype(jnp.float32)).astype(vec_dtype)
+        p = jnp.where(valid, p, vec_dtype(0.0))
+        decay = jnp.exp((m - m_new).astype(jnp.float32)).astype(vec_dtype)
+        l = (decay * l + jnp.sum(p, axis=1).astype(vec_dtype)).astype(vec_dtype)
+
+        # Eq. (7): output update.
+        pv = jnp.dot(
+            p.astype(jnp.float16), vb, preferred_element_type=jnp.float32
+        ).astype(vec_dtype)
+        acc = (decay[:, None] * acc + pv).astype(vec_dtype)
+        return m_new, l, acc
+
+    m0 = jnp.full((block_q,), floor, vec_dtype)
+    l0 = jnp.zeros((block_q,), vec_dtype)
+    a0 = jnp.zeros((block_q, d), vec_dtype)
+    _, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+
+    # Eq. (8).
+    l = jnp.maximum(l, vec_dtype(1e-30) if vec_dtype == jnp.float32 else vec_dtype(6e-8))
+    o_ref[...] = (acc / l[:, None]).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("allocation", "block_q", "block_kv", "causal", "interpret"),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    kv_len=None,
+    q_pos0=0,
+    *,
+    allocation: str = "fa32",
+    block_q: int = 128,
+    block_kv: int = 128,
+    causal: bool = False,
+    interpret: bool = True,
+):
+    """FA2 over one head: q (S1, d), k/v (S2, d) -> (S1, d) float32."""
+    assert allocation in ALLOCATIONS, allocation
+    s1, d = q.shape
+    s2 = k.shape[0]
+    alpha = float(np.sqrt(d))
+    if kv_len is None:
+        kv_len = s2
+
+    s1p = max(block_q, ((s1 + block_q - 1) // block_q) * block_q)
+    s2p = max(block_kv, ((s2 + block_kv - 1) // block_kv) * block_kv)
+
+    qp = _pad_to(q.astype(jnp.float16), s1p, 0)
+    kp = _pad_to(k.astype(jnp.float16), s2p, 0)
+    vp = _pad_to(v.astype(jnp.float16), s2p, 0)
+    lens = jnp.asarray([jnp.int32(kv_len), jnp.int32(q_pos0)], dtype=jnp.int32)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv=s2p // block_kv,
+        alpha=alpha,
+        allocation=allocation,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(s1p // block_q,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((s2p, d), lambda i: (0, 0)),
+            pl.BlockSpec((s2p, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s1p, d), jnp.float32),
+        interpret=interpret,
+    )(lens, qp, kp, vp)
+    return out[:s1]

@@ -1,0 +1,249 @@
+"""PASA Pallas kernel (L1) — Algorithm 1 of the paper.
+
+Fully-FP16 flash attention with online pseudo-average shifting and global
+recovering:
+
+* the shifting matrix M = (I - beta*J/s2)/alpha is built host-side in
+  float16 (Eq. 10) and applied to every KV block as a batched GEMM
+  (Eq. 11) — K' = M @ K,
+* the kernel sweeps KV blocks with an online (m, l, F-bar, O) carry; the
+  correction terms dm'_{j-1} = c*(F^{j-1} - F^j), dm'_j = c*(S'-bar - F^j)
+  re-express each block's local softmax stats in a common frame
+  (Theorem 2.1, Algorithm 1 lines 13-18),
+* the correction factor c is the *effective invariant* of the rounded M
+  (b'n/(a'-b'n)), matching the rust implementation — see DESIGN.md
+  "PASA deviations" for why this zeroes the aliasing error that the
+  nominal beta/(1-beta) leaves once alpha is folded into M.
+
+interpret=True everywhere: real-TPU lowering would emit a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. On TPU the same
+BlockSpec structure maps Q/K'/V tiles into VMEM and the two jnp.dot calls
+onto the MXU (see DESIGN.md Hardware-Adaptation).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BETA = 0.984497  # the paper's adopted value (solved at n=128, FP16)
+MASK_FLOOR = np.float16(-30000.0)  # finite FP16 "-inf" (avoids inf-inf=NaN)
+
+
+def _exp16(x):
+    """FP16 exp computed at FP32 internal precision, rounded once to FP16.
+
+    Matches the rust lab's emulation (and real vector units' internal
+    precision). Also required for portability: xla_extension 0.5.1's CPU
+    f16 `exponential` mishandles large-negative inputs (masked scores at
+    -30000 must flush to 0, not NaN), while computing in f32 and
+    downcasting is correct on every backend.
+    """
+    return jnp.exp(x.astype(jnp.float32)).astype(jnp.float16)
+
+
+def shifting_matrix(s2: int, alpha: float, beta: float) -> np.ndarray:
+    """M = (I - beta*J/s2)/alpha rounded to FP16 (Eq. 10)."""
+    off = np.float16(-beta / (s2 * alpha))
+    diag = np.float16((1.0 - beta / s2) / alpha)
+    m = np.full((s2, s2), off, dtype=np.float16)
+    np.fill_diagonal(m, diag)
+    return m
+
+
+def effective_invariant(m: np.ndarray) -> float:
+    """Recovery constant c of the *rounded* M: c = b'n/(a' - b'n).
+
+    Adding c*rowmean(S') to S' = S @ M reproduces a'*S up to a per-row
+    constant that softmax ignores (generalizes the paper's Eq. 20 to the
+    alpha-folded M of Eq. 10).
+    """
+    n = m.shape[0]
+    if n == 1:
+        return 0.0
+    off = -float(m[0, 1])
+    if off == 0.0:
+        return 0.0  # beta = 0: PASA degrades to FA2
+    a = float(m[0, 0]) + off
+    bn = off * n
+    return bn / (a - bn)
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pasa_kernel(
+    lens_ref,
+    q_ref,
+    kp_ref,
+    v_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+    c_eff: float,
+    causal: bool,
+):
+    """One Q block: sweep all KV blocks with the Algorithm-1 carry."""
+    kv_len = lens_ref[0]
+    q_pos0 = lens_ref[1]
+    qb = q_ref[...].astype(jnp.float16)  # (block_q, d)
+    d = qb.shape[-1]
+    rows = q_pos0 + pl.program_id(0) * block_q + jax.lax.iota(jnp.int32, block_q)
+    # The correction factor stays in f32 (precomputed host-side constant,
+    # like the paper's FP64-solved beta): rounding c itself to FP16 would
+    # put an Inva-amplified error back into the exponent.
+    c32 = jnp.float32(c_eff)
+
+    def body(j, carry):
+        m, l, fbar, acc = carry
+        kb = kp_ref[pl.dslice(j * block_kv, block_kv), :].astype(jnp.float16)
+        vb = v_ref[pl.dslice(j * block_kv, block_kv), :].astype(jnp.float16)
+
+        # Line 11: S' = Q K'^T — FP16 in, FP32 accumulate, FP16 store
+        # (matrix-engine semantics).
+        s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32).astype(jnp.float16)
+
+        # Line 13: pseudo-average BEFORE masking (the recovery identity
+        # S = S' + c*rowmean(S') is algebraic over the whole block).
+        sbar = jnp.mean(s.astype(jnp.float32), axis=1).astype(jnp.float16)
+
+        # Padding / causal mask.
+        cols = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        valid = (cols < kv_len)[None, :]
+        if causal:
+            valid = valid & (cols[None, :] <= rows[:, None])
+        s = jnp.where(valid, s, MASK_FLOOR)
+
+        # Line 12: local stats.
+        m_loc = jnp.max(s, axis=1)
+        p = _exp16(s - m_loc[:, None])
+        p = jnp.where(valid, p, jnp.float16(0.0))
+        l_loc = jnp.sum(p.astype(jnp.float32), axis=1).astype(jnp.float16)
+
+        # Line 14 (Eq. 15): running pseudo-average, incremental form.
+        fbar_prev = fbar
+        fbar = (fbar + (sbar - fbar) / jnp.float16(j + 1)).astype(jnp.float16)
+
+        # Line 15: correction terms (f16 differences are Sterbenz-exact;
+        # the c multiply runs in f32 and rounds once to f16).
+        dm_prev = (c32 * (fbar_prev - fbar).astype(jnp.float32)).astype(jnp.float16)
+        dm_cur = (c32 * (sbar - fbar).astype(jnp.float32)).astype(jnp.float16)
+
+        # Line 16: corrected running maximum.
+        m_new = jnp.maximum(m + dm_prev, m_loc + dm_cur)
+
+        # Line 17: rescale exponents (both <= 0 — attenuators).
+        scale_prev = _exp16((m - m_new) + dm_prev)
+        scale_cur = _exp16((m_loc - m_new) + dm_cur)
+
+        # Line 18: corrected softmax denominator.
+        l = (scale_prev * l + scale_cur * l_loc).astype(jnp.float16)
+
+        # Lines 19-20: corrected output update.
+        pv = jnp.dot(p, vb, preferred_element_type=jnp.float32).astype(jnp.float16)
+        acc = (scale_prev[:, None] * acc + scale_cur[:, None] * pv).astype(jnp.float16)
+        return m_new, l, fbar, acc
+
+    m0 = jnp.full((block_q,), MASK_FLOOR, jnp.float16)
+    l0 = jnp.zeros((block_q,), jnp.float16)
+    f0 = jnp.zeros((block_q,), jnp.float16)
+    a0 = jnp.zeros((block_q, d), jnp.float16)
+    _, l, _, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, f0, a0))
+
+    # Line 22: O = O / l (guard padded rows against 0/0).
+    l = jnp.maximum(l, jnp.float16(6e-8))
+    o_ref[...] = (acc / l[:, None]).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta", "block_q", "block_kv", "causal", "interpret"),
+)
+def pasa_attention(
+    q,
+    k,
+    v,
+    kv_len=None,
+    q_pos0=0,
+    *,
+    beta: float = DEFAULT_BETA,
+    block_q: int = 128,
+    block_kv: int = 128,
+    causal: bool = False,
+    interpret: bool = True,
+):
+    """PASA attention over one head: q (S1, d), k/v (S2, d) -> (S1, d) f32.
+
+    kv_len (scalar, default S2) marks valid KV rows; q_pos0 is the absolute
+    position of q's first row (for causal decode against a longer cache).
+    """
+    s1, d = q.shape
+    s2 = k.shape[0]
+    alpha = math.sqrt(d)
+    if kv_len is None:
+        kv_len = s2
+
+    s1p = max(block_q, ((s1 + block_q - 1) // block_q) * block_q)
+    s2p = max(block_kv, ((s2 + block_kv - 1) // block_kv) * block_kv)
+    n_kv = s2p // block_kv
+
+    qp = _pad_to(q.astype(jnp.float16), s1p, 0)
+    kp_in = _pad_to(k.astype(jnp.float16), s2p, 0)
+    vp = _pad_to(v.astype(jnp.float16), s2p, 0)
+
+    # Pre-processing (Algorithm 1 line 6): K'_j = M K_j per block, as FP16
+    # GEMMs with FP32 accumulation. Statically unrolled plain 2-D dots, NOT
+    # a batched einsum: xla_extension 0.5.1's CPU backend miscompiles
+    # dot_general with batch dims on f16 operands (verified by the
+    # differential op probes — see DESIGN.md §Runtime-portability).
+    m_np = shifting_matrix(block_kv, alpha, beta)
+    c_eff = effective_invariant(m_np)
+    m16 = jnp.asarray(m_np)
+    kb = kp_in.reshape(n_kv, block_kv, d)
+    kprime = jnp.concatenate(
+        [
+            jnp.dot(m16, kb[i], preferred_element_type=jnp.float32).astype(
+                jnp.float16
+            )
+            for i in range(n_kv)
+        ],
+        axis=0,
+    )
+
+    lens = jnp.asarray(
+        [jnp.int32(kv_len), jnp.int32(q_pos0)], dtype=jnp.int32
+    )
+
+    kernel = functools.partial(
+        _pasa_kernel,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv=n_kv,
+        c_eff=c_eff,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(s1p // block_q,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # lens: tiny scalar vector
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((s2p, d), lambda i: (0, 0)),  # K' resident
+            pl.BlockSpec((s2p, d), lambda i: (0, 0)),  # V resident
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s1p, d), jnp.float32),
+        interpret=interpret,
+    )(lens, qp, kprime, vp)
+    return out[:s1]

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the attention kernels (L1 correctness signal).
+
+`attention_ref` is the golden high-precision attention (the paper's
+O_Golden in Eq. 19). `attention_fp16_partial_ref` emulates the
+"partially low-precision FA (FP16-FP32)" allocation of Fig. 2 — the score
+matrix is stored in float16 (the overflow site) while softmax runs in
+float32. These are the baselines every Pallas kernel is tested against.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Standard attention, float32 throughout: softmax(QK^T/sqrt(d)) V."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.einsum("...qd,...kd->...qk", q, k) / math.sqrt(d)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", p, v)
+
+
+def attention_ref_masked(q, k, v, kv_len=None, q_pos0=0, causal=False):
+    """Golden attention with padding and causal masks.
+
+    kv_len marks the number of valid KV rows (the rest is cache padding);
+    with causal=True query row r (absolute position q_pos0 + r) attends to
+    kv positions <= q_pos0 + r.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    s1, s2 = q.shape[-2], k.shape[-2]
+    s = jnp.einsum("...qd,...kd->...qk", q, k) / math.sqrt(d)
+    cols = jnp.arange(s2)
+    mask = jnp.ones((s1, s2), bool)
+    if kv_len is not None:
+        mask = mask & (cols[None, :] < kv_len)
+    if causal:
+        rows = jnp.arange(s1) + q_pos0
+        mask = mask & (cols[None, :] <= rows[:, None])
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # Guard fully-masked rows (all -inf) against inf - inf.
+    m = jnp.maximum(m, -3.0e4)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", p / jnp.maximum(denom, 1e-30), v)
+
+
+def attention_fp16_partial_ref(q, k, v):
+    """Fig. 2 allocation: S stored in FP16 (overflow site), FP32 softmax.
+
+    Reproduces the overflow -> inf -> NaN failure mode of partially
+    low-precision FA on data with large bias/amplitude.
+    """
+    q16 = q.astype(jnp.float16)
+    k16 = k.astype(jnp.float16)
+    d = q.shape[-1]
+    # Matrix engine: FP16 inputs, FP32 accumulate, FP16 store.
+    s = jnp.einsum(
+        "...qd,...kd->...qk", q16, k16, preferred_element_type=jnp.float32
+    ).astype(jnp.float16)
+    s = (s.astype(jnp.float32)) / math.sqrt(d)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32))
+
+
+def raw_scores(q, k):
+    """S = QK^T in float32 — the paper's overflow instrumentation point."""
+    return jnp.einsum(
+        "...qd,...kd->...qk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    )
+
+
+def relative_rmse(computed, golden):
+    """The paper's Eq. 19 metric."""
+    c = jnp.asarray(computed, jnp.float64)
+    g = jnp.asarray(golden, jnp.float64)
+    return float(jnp.linalg.norm(c - g) / jnp.linalg.norm(g))

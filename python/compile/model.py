@@ -1,0 +1,266 @@
+"""L2 — the JAX transformer served by the rust coordinator.
+
+A GPT-style byte-level LM whose attention is the L1 Pallas kernel (PASA by
+default, or any FA allocation for the baselines). Exposes the two entry
+points the serving runtime AOT-compiles:
+
+* `prefill(params, tokens, seq_len)`  — process a prompt, build KV caches,
+* `decode_step(params, token, pos, kcache, vcache)` — one token step
+  against the caches (the serving hot loop).
+
+Weights are a flat dict with a deterministic parameter order
+(`param_names`) shared with the rust weight loader; see aot.py for the
+on-disk format.
+"""
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.flash import flash_attention
+from .kernels.pasa import pasa_attention
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + serving-shape configuration."""
+
+    vocab_size: int = 259  # 256 bytes + PAD(256) + BOS(257) + EOS(258)
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_head: int = 32
+    d_ff: int = 1024
+    max_seq: int = 512
+    attention: str = "pasa"  # 'pasa' | 'fa32' | 'fa16_32' | 'fa16'
+    block_q: int = 128
+    block_kv: int = 128
+
+    @property
+    def head_width(self) -> int:
+        return self.n_heads * self.d_head
+
+
+PAD, BOS, EOS = 256, 257, 258
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter order — the rust loader's contract."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1_g",
+            f"l{i}.ln1_b",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.ln2_g",
+            f"l{i}.ln2_b",
+            f"l{i}.w1",
+            f"l{i}.b1",
+            f"l{i}.w2",
+            f"l{i}.b2",
+        ]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, h = cfg.d_model, cfg.head_width
+    shapes = {
+        "tok_emb": (cfg.vocab_size, d),
+        "pos_emb": (cfg.max_seq, d),
+        "lnf_g": (d,),
+        "lnf_b": (d,),
+    }
+    for i in range(cfg.n_layers):
+        shapes.update(
+            {
+                f"l{i}.ln1_g": (d,),
+                f"l{i}.ln1_b": (d,),
+                f"l{i}.wq": (d, h),
+                f"l{i}.wk": (d, h),
+                f"l{i}.wv": (d, h),
+                f"l{i}.wo": (h, d),
+                f"l{i}.ln2_g": (d,),
+                f"l{i}.ln2_b": (d,),
+                f"l{i}.w1": (d, cfg.d_ff),
+                f"l{i}.b1": (cfg.d_ff,),
+                f"l{i}.w2": (cfg.d_ff, d),
+                f"l{i}.b2": (d,),
+            }
+        )
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Scaled-normal init (0.02, residual projections down-scaled)."""
+    params = {}
+    shapes = param_shapes(cfg)
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            scale = 0.02
+            if name.endswith((".wo", ".w2")):
+                scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention_fn(cfg: ModelConfig):
+    """Per-head kernel closure for the configured allocation."""
+    if cfg.attention == "pasa":
+        return functools.partial(
+            pasa_attention, block_q=cfg.block_q, block_kv=cfg.block_kv
+        )
+    if cfg.attention == "ref":
+        # Pure-jnp float32 attention — differentiable, used by train.py
+        # (the Pallas kernels are inference kernels; training runs the
+        # mathematically-identical reference).
+        from .kernels.ref import attention_ref_masked
+
+        def ref_kern(q, k, v, kv_len=None, q_pos0=0, causal=False):
+            return attention_ref_masked(
+                q, k, v, kv_len=kv_len, q_pos0=q_pos0, causal=causal
+            )
+
+        return ref_kern
+    return functools.partial(
+        flash_attention,
+        allocation=cfg.attention,
+        block_q=cfg.block_q,
+        block_kv=cfg.block_kv,
+    )
+
+
+def _mha(cfg: ModelConfig, q, k, v, kv_len, q_pos0, causal):
+    """Multi-head attention via the L1 kernel, vmapped over (B, H).
+
+    q: (B, S1, H*dh); k, v: (B, S2, H*dh) -> (B, S1, H*dh).
+    kv_len, q_pos0: (B,) int32 per-sequence lengths/positions.
+    """
+    b, s1, _ = q.shape
+    s2 = k.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+    qh = q.reshape(b, s1, h, dh).transpose(0, 2, 1, 3)  # (B,H,S1,dh)
+    kh = k.reshape(b, s2, h, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, s2, h, dh).transpose(0, 2, 1, 3)
+    kern = _attention_fn(cfg)
+
+    def per_head(qi, ki, vi, kvl, qp0):
+        return kern(qi, ki, vi, kv_len=kvl, q_pos0=qp0, causal=causal)
+
+    per_seq = jax.vmap(per_head, in_axes=(0, 0, 0, None, None))  # over H
+    out = jax.vmap(per_seq, in_axes=(0, 0, 0, 0, 0))(qh, kh, vh, kv_len, q_pos0)
+    return out.transpose(0, 2, 1, 3).reshape(b, s1, h * dh)
+
+
+def _block(cfg: ModelConfig, params, i, x, k_all, v_all, kv_len, q_pos0, causal):
+    """One transformer block; k_all/v_all are the (possibly cached) KV."""
+    p = lambda n: params[f"l{i}.{n}"]
+    h = _layer_norm(x, p("ln1_g"), p("ln1_b"))
+    q = h @ p("wq")
+    attn = _mha(cfg, q, k_all, v_all, kv_len, q_pos0, causal)
+    x = x + attn @ p("wo")
+    h = _layer_norm(x, p("ln2_g"), p("ln2_b"))
+    x = x + (jax.nn.gelu(h @ p("w1") + p("b1")) @ p("w2") + p("b2"))
+    return x
+
+
+def prefill(params: Params, tokens, seq_len, cfg: ModelConfig):
+    """Process a (B, S) prompt.
+
+    Returns (logits (B, S, V), kcache, vcache) with caches shaped
+    (n_layers, B, max_seq, H*dh) — KV for positions >= seq_len is zero.
+    """
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None, :, :]
+    pad = cfg.max_seq - s
+    kcache = []
+    vcache = []
+    kv_len = seq_len.astype(jnp.int32)
+    q_pos0 = jnp.zeros((b,), jnp.int32)
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        k = h @ params[f"l{i}.wk"]
+        v = h @ params[f"l{i}.wv"]
+        x = _block(cfg, params, i, x, k, v, kv_len, q_pos0, causal=True)
+        kcache.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+        vcache.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T
+    return logits, jnp.stack(kcache), jnp.stack(vcache)
+
+
+def decode_step(params: Params, token, pos, kcache, vcache, cfg: ModelConfig):
+    """One decode step.
+
+    token: (B,) int32 current tokens; pos: (B,) their absolute positions.
+    kcache/vcache: (n_layers, B, max_seq, H*dh) — read-only inputs; the
+    step's KV rows are scattered in internally for attention.
+
+    Returns (logits (B, V), k_rows (n_layers, B, H*dh),
+    v_rows (n_layers, B, H*dh)) — only the *new* rows are returned (§Perf:
+    the rust coordinator owns the paged cache and writes the rows back
+    itself; returning full caches moved 32 MB/step over the PJRT boundary
+    for 32 KB of new information).
+    """
+    b = token.shape[0]
+    x = params["tok_emb"][token] + params["pos_emb"][pos]
+    x = x[:, None, :]  # (B, 1, D)
+    kv_len = (pos + 1).astype(jnp.int32)
+    new_k = []
+    new_v = []
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        k_new = h @ params[f"l{i}.wk"]  # (B, 1, H*dh)
+        v_new = h @ params[f"l{i}.wv"]
+        # Scatter this step's KV into the cache at each sequence's pos.
+        kc = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0)))(
+            kcache[i], k_new, pos
+        )
+        vc = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0)))(
+            vcache[i], v_new, pos
+        )
+        x = _block(cfg, params, i, x, kc, vc, kv_len, pos, causal=False)
+        new_k.append(k_new[:, 0, :])
+        new_v.append(v_new[:, 0, :])
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = (x @ params["tok_emb"].T)[:, 0, :]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def encode_text(text: str, max_len: int):
+    """Byte-level encoding with BOS, padded to max_len with PAD."""
+    ids = [BOS] + list(text.encode("utf-8"))[: max_len - 1]
+    n = len(ids)
+    return np.asarray(ids + [PAD] * (max_len - n), np.int32), n
+
+
+def decode_bytes(ids) -> str:
+    out = bytearray()
+    for t in ids:
+        if t in (PAD, BOS, EOS):
+            continue
+        if 0 <= t < 256:
+            out.append(int(t))
+    return out.decode("utf-8", errors="replace")

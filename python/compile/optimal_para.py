@@ -1,0 +1,49 @@
+"""Optimal accuracy condition for beta — the paper's Appendix C code,
+ported from torch to numpy (same fixed-point iteration, Eq. 22).
+
+    beta/(1-beta) = f(beta),  f(beta) = b*n/(a*(a-b*n)) + (1-a)/a
+    b = fl_tp(beta/n),        a = fl_tp(1 - beta/n) + b
+
+Run `python -m compile.optimal_para` to print the paper's Table 3 inputs:
+initial betas 1-2^-4, 1-2^-5, 1-2^-6 at n=128 solve to
+0.937500, 0.968994, 0.984497.
+"""
+
+import numpy as np
+
+
+def obtain_inv_pam(beta0: float, n: int, tp=np.float16, cp=np.float64) -> float:
+    """The practical invariant Inva1 under tp rounding (Eq. 20/21)."""
+    m0 = cp(1.0) - cp(beta0) / cp(n)
+    m1 = -cp(beta0) / cp(n)
+    m0 = tp(m0)  # fl_tp(1 - beta/n)
+    m1 = tp(m1)  # fl_tp(-beta/n)
+    b = cp(-m1)
+    a = cp(m0) + b
+    return float(b * n / (a * (a - b * n)) + (1.0 - a) / a)
+
+
+def optimal_beta(beta0: float, n: int, tol=1e-8, tp=np.float16, cp=np.float64) -> float:
+    """Fixed-point iteration beta_{k+1} = f(beta_k)/(1 + f(beta_k)) (Eq. 22)."""
+    err = 1.0
+    it = 0
+    while err > tol and it < 500:
+        inv = obtain_inv_pam(beta0, n, tp, cp)
+        beta = inv / (1.0 + inv)
+        err = abs(beta - beta0) / abs(beta0)
+        beta0 = beta
+        it += 1
+    return beta0
+
+
+def main():
+    print("======float16 (n=128)======")
+    print("Initial beta = 1-1/2**4, 1-1/2**5, 1-1/2**6")
+    beta0 = [1.0 - 1.0 / 2 ** (i + 4) for i in range(3)]
+    betas = [optimal_beta(b, 128) for b in beta0]
+    print(f"for float16, initial beta: {beta0}")
+    print(f"for float16, beta: {betas}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Train the small serving model on a synthetic corpus (build-time only).
+
+The E2E serving validation (examples/serve_e2e.rs) needs *real* weights so
+greedy decodes are meaningful text, not noise. We train the L2 transformer
+briefly on a deterministic synthetic corpus of templated sentences
+(counting, arithmetic, key-value recall) — enough structure for the loss
+to drop sharply and for generations to be visibly patterned.
+
+Training uses the differentiable 'ref' attention; serving uses the same
+weights through the PASA / FA Pallas kernels (the paper's setting: a model
+trained in high precision, served with low-precision attention).
+
+Usage: python -m compile.train --steps 300 --out ../artifacts
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+WORDS = "zero one two three four five six seven eight nine".split()
+
+
+def synthetic_corpus(n_lines: int, seed: int = 0):
+    """Deterministic templated sentences."""
+    rng = np.random.default_rng(seed)
+    lines = []
+    for _ in range(n_lines):
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            a = int(rng.integers(0, 6))
+            seq = " ".join(WORDS[a : a + 4])
+            lines.append(f"count up: {seq}.")
+        elif kind == 1:
+            a, b = int(rng.integers(0, 5)), int(rng.integers(0, 5))
+            lines.append(f"math: {a} plus {b} equals {a + b}.")
+        else:
+            k = WORDS[int(rng.integers(0, 10))]
+            v = WORDS[int(rng.integers(0, 10))]
+            lines.append(f"recall {k} maps to {v}; query {k} gives {v}.")
+    return lines
+
+
+def batches(lines, batch: int, seq: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    ids = [M.encode_text(t, seq + 1)[0] for t in lines]
+    lens = [M.encode_text(t, seq + 1)[1] for t in lines]
+    ids = np.stack(ids)
+    lens = np.asarray(lens)
+    while True:
+        sel = rng.integers(0, len(ids), batch)
+        yield ids[sel], lens[sel]
+
+
+def loss_fn(params, tokens, lens, cfg):
+    x = tokens[:, :-1]
+    y = tokens[:, 1:]
+    seq_len = jnp.minimum(lens, x.shape[1]).astype(jnp.int32)
+    logits, _, _ = M.prefill(params, x, seq_len, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, :, None], axis=-1)[:, :, 0]
+    mask = (jnp.arange(x.shape[1])[None, :] < (lens[:, None] - 1)) & (y != M.PAD)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def adam_update(params, grads, mstate, vstate, step, lr=3e-3, b1=0.9, b2=0.999):
+    out_p, out_m, out_v = {}, {}, {}
+    t = step + 1
+    for k in params:
+        m = b1 * mstate[k] + (1 - b1) * grads[k]
+        v = b2 * vstate[k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        out_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + 1e-8)
+        out_m[k] = m
+        out_v[k] = v
+    return out_p, out_m, out_v
+
+
+def train(cfg: M.ModelConfig, steps: int, batch: int, seq: int, seed: int = 0):
+    """Returns (params, loss_curve)."""
+    tcfg = M.ModelConfig(
+        **{**cfg.__dict__, "attention": "ref"}
+    )  # differentiable attention for training
+    params = M.init_params(jax.random.PRNGKey(seed), tcfg)
+    mstate = {k: jnp.zeros_like(v) for k, v in params.items()}
+    vstate = {k: jnp.zeros_like(v) for k, v in params.items()}
+    gen = batches(synthetic_corpus(4000), batch, seq)
+
+    @jax.jit
+    def step_fn(params, mstate, vstate, step, tokens, lens):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, lens, tcfg)
+        params, mstate, vstate = adam_update(params, grads, mstate, vstate, step)
+        return params, mstate, vstate, loss
+
+    curve = []
+    t0 = time.time()
+    for i in range(steps):
+        tokens, lens = next(gen)
+        params, mstate, vstate, loss = step_fn(
+            params, mstate, vstate, i, jnp.asarray(tokens), jnp.asarray(lens)
+        )
+        if i % 10 == 0 or i == steps - 1:
+            curve.append((i, float(loss)))
+            print(f"step {i:4d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    return params, curve
+
+
+def save_weights(path: str, params, cfg: M.ModelConfig):
+    """weights.bin: the rust loader's format (see rust/src/model/weights.rs).
+
+    Layout: magic 'PASAW001', u32 n; per param (in param_names order):
+    u32 name_len, name, u32 ndim, u32 dims..., f32 data (LE).
+    """
+    names = M.param_names(cfg)
+    with open(path, "wb") as f:
+        f.write(b"PASAW001")
+        f.write(np.uint32(len(names)).tobytes())
+        for n in names:
+            arr = np.asarray(params[n], np.float32)
+            nb = n.encode()
+            f.write(np.uint32(len(nb)).tobytes())
+            f.write(nb)
+            f.write(np.uint32(arr.ndim).tobytes())
+            f.write(np.asarray(arr.shape, np.uint32).tobytes())
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_weights(path: str):
+    """Inverse of save_weights (used by aot.py and tests)."""
+    params = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == b"PASAW001", "bad weights magic"
+        n = int(np.frombuffer(f.read(4), np.uint32)[0])
+        for _ in range(n):
+            ln = int(np.frombuffer(f.read(4), np.uint32)[0])
+            name = f.read(ln).decode()
+            nd = int(np.frombuffer(f.read(4), np.uint32)[0])
+            dims = np.frombuffer(f.read(4 * nd), np.uint32).astype(int)
+            cnt = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(f.read(4 * cnt), "<f4").reshape(dims)
+            params[name] = jnp.asarray(data)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig()
+    params, curve = train(cfg, args.steps, args.batch, args.seq)
+    os.makedirs(args.out, exist_ok=True)
+    save_weights(os.path.join(args.out, "weights.bin"), params, cfg)
+    with open(os.path.join(args.out, "loss_curve.txt"), "w") as f:
+        f.write("step\tloss\n")
+        for s, l in curve:
+            f.write(f"{s}\t{l:.6f}\n")
+    print(f"saved weights + loss curve to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""AOT export pipeline: HLO text must be runnable plain-HLO (no
+custom-calls) and the weights format must round-trip."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import make_head_fn, make_prefill_fn, make_decode_fn, spec, to_hlo_text
+from compile.train import save_weights, load_weights
+
+
+def test_head_module_lowering():
+    fn = make_head_fn("pasa")
+    text = to_hlo_text(jax.jit(fn).lower(*[spec((128, 32))] * 3))
+    assert "custom-call" not in text, "Mosaic custom-call would not run on CPU PJRT"
+    assert "ENTRY" in text
+
+
+def test_prefill_decode_lowering_small():
+    cfg = M.ModelConfig(
+        n_layers=1, d_model=32, n_heads=1, d_head=32, d_ff=64, max_seq=32,
+        block_q=32, block_kv=32,
+    )
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    pspecs = [spec(shapes[n]) for n in names]
+
+    pf = make_prefill_fn(cfg)
+    text = to_hlo_text(
+        jax.jit(pf).lower(*pspecs, spec((1, 16), jnp.int32), spec((1,), jnp.int32))
+    )
+    assert "custom-call" not in text
+
+    df = make_decode_fn(cfg)
+    cache = spec((cfg.n_layers, 2, cfg.max_seq, cfg.head_width))
+    text = to_hlo_text(
+        jax.jit(df).lower(
+            *pspecs, spec((2,), jnp.int32), spec((2,), jnp.int32), cache, cache
+        )
+    )
+    assert "custom-call" not in text
+
+
+def test_weights_round_trip(tmp_path):
+    cfg = M.ModelConfig(n_layers=1, d_model=32, n_heads=1, d_head=32, d_ff=64, max_seq=32)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    path = os.path.join(tmp_path, "w.bin")
+    save_weights(path, params, cfg)
+    loaded = load_weights(path)
+    assert set(loaded) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(loaded[k]))
+
+
+def test_manifest_artifacts_exist_if_built():
+    """If `make artifacts` has run, the manifest's modules must exist."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    for line in open(manifest):
+        parts = line.split()
+        if parts and parts[0] == "module":
+            assert os.path.exists(os.path.join(art, parts[2])), parts[2]

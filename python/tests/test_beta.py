@@ -1,0 +1,58 @@
+"""Optimal accuracy condition (Appendix A/C, Table 3) — python solver."""
+
+import numpy as np
+import pytest
+
+from compile.optimal_para import obtain_inv_pam, optimal_beta
+
+
+def test_paper_solutions_at_n128():
+    # Appendix A: initials 1-2^-4, 1-2^-5, 1-2^-6 solve to
+    # 0.937500, 0.968994, 0.984497.
+    expect = [0.937500, 0.968994, 0.984497]
+    for i, p in enumerate([4, 5, 6]):
+        b = optimal_beta(1.0 - 2.0**-p, 128)
+        assert abs(b - expect[i]) < 5e-6, (p, b)
+
+
+def test_fixed_point_is_consistent():
+    # At the solution, beta/(1-beta) equals the practical invariant.
+    for b0 in [0.9, 0.99, 0.999]:
+        b = optimal_beta(b0, 128)
+        inva = b / (1 - b)
+        inva1 = obtain_inv_pam(b, 128)
+        assert abs(inva - inva1) / inva < 1e-9
+
+
+def test_table3_initial_rel_errors():
+    # Paper Table 3: initial-beta relative invariance errors.
+    rows = {
+        0.9: 0.0032,
+        1 - 2.0**-4: 0.0,
+        1 - 2.0**-5: 0.0081,
+        1 - 2.0**-6: 0.0079,
+        0.99: 0.0323,
+        0.999: 0.0320,
+    }
+    for b0, expected in rows.items():
+        inva = b0 / (1 - b0)
+        inva1 = obtain_inv_pam(b0, 128)
+        rel = abs(inva - inva1) / inva
+        assert abs(rel - expected) < 6e-4, (b0, rel, expected)
+
+
+def test_beta_0p9375_exact_in_fp16():
+    # 0.9375 has integer invariant 15 and is exact in FP16: zero error.
+    assert obtain_inv_pam(0.9375, 128) == pytest.approx(15.0, abs=1e-12)
+
+
+def test_matches_rust_effective_invariant_shape():
+    # The kernel-side effective invariant (alpha-folded M) must be close
+    # to (but not necessarily equal to) the ideal invariant.
+    from compile.kernels.pasa import shifting_matrix, effective_invariant
+
+    for n in [32, 64, 128]:
+        m = shifting_matrix(n, alpha=np.sqrt(128.0), beta=0.984497)
+        c = effective_invariant(m)
+        ideal = 0.984497 / (1 - 0.984497)
+        assert abs(c - ideal) / ideal < 0.1, (n, c)

@@ -1,0 +1,84 @@
+"""L1 flash kernel vs pure-jnp oracle — the core correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.flash import flash_attention, ALLOCATIONS
+from compile.kernels.ref import (
+    attention_ref,
+    attention_ref_masked,
+    attention_fp16_partial_ref,
+    relative_rmse,
+)
+
+
+def _case(seed, s, d, x0=0.0, am=1.0):
+    rng = np.random.default_rng(seed)
+    mk = lambda: (rng.uniform(-am, am, (s, d)) + x0).astype(np.float32)
+    return jnp.asarray(mk()), jnp.asarray(mk()), jnp.asarray(mk())
+
+
+@pytest.mark.parametrize("alloc", ALLOCATIONS)
+def test_matches_ref_on_benign_data(alloc):
+    q, k, v = _case(0, 200, 64)
+    o = flash_attention(q, k, v, allocation=alloc)
+    g = attention_ref(q, k, v)
+    tol = {"fa32": 2e-3, "fa16_32": 5e-3, "fa16": 3e-2}[alloc]
+    assert relative_rmse(o, g) < tol
+
+
+def test_block_size_invariance():
+    q, k, v = _case(1, 160, 32, x0=2.0)
+    g = attention_ref(q, k, v)
+    for bq, bkv in [(32, 32), (64, 64), (128, 128), (64, 32)]:
+        o = flash_attention(q, k, v, allocation="fa32", block_q=bq, block_kv=bkv)
+        assert relative_rmse(o, g) < 2e-3, (bq, bkv)
+
+
+def test_fa16_32_overflows_on_large_mean():
+    # Fig. 9(a) x0=30: S ~ 30*30*128 = 115200 > 65504.
+    q, k, v = _case(2, 256, 128, x0=30.0, am=0.5)
+    o = flash_attention(q, k, v, allocation="fa16_32")
+    assert not bool(jnp.isfinite(o).all()), "expected NaN from FP16 store overflow"
+    o32 = flash_attention(q, k, v, allocation="fa32")
+    assert bool(jnp.isfinite(o32).all())
+
+
+def test_fa16_32_matches_partial_ref_failure_mode():
+    q, k, v = _case(3, 256, 128, x0=30.0, am=0.5)
+    ref = attention_fp16_partial_ref(q, k, v)
+    ker = flash_attention(q, k, v, allocation="fa16_32")
+    # Both paths must agree that the computation blew up.
+    assert bool(jnp.isfinite(ref).all()) == bool(jnp.isfinite(ker).all()) == False  # noqa: E712
+
+
+def test_kv_len_masking():
+    q, k, v = _case(4, 96, 32)
+    o = flash_attention(q, k, v, kv_len=50, allocation="fa32", block_q=32, block_kv=32)
+    g = attention_ref_masked(q, k, v, kv_len=50)
+    assert relative_rmse(o, g) < 2e-3
+    # Padding K/V rows beyond kv_len must not change the output.
+    k2 = k.at[50:].set(1e4)
+    v2 = v.at[50:].set(-1e4)
+    o2 = flash_attention(q, k2, v2, kv_len=50, allocation="fa32", block_q=32, block_kv=32)
+    assert relative_rmse(o2, o) < 1e-6
+
+
+def test_causal_masking():
+    q, k, v = _case(5, 64, 16)
+    o = flash_attention(q, k, v, causal=True, allocation="fa32", block_q=32, block_kv=32)
+    g = attention_ref_masked(q, k, v, causal=True)
+    assert relative_rmse(o, g) < 2e-3
+
+
+def test_decode_shape_q1():
+    # Single-query decode against a longer KV (the serving hot path).
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(0, 1, (1, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (128, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (128, 32)).astype(np.float32))
+    o = flash_attention(q, k, v, kv_len=77, allocation="fa32", block_q=32, block_kv=64)
+    g = attention_ref_masked(q, k, v, kv_len=77)
+    assert o.shape == (1, 32)
+    assert relative_rmse(o, g) < 2e-3

@@ -1,0 +1,91 @@
+"""L2 model tests: shapes, prefill/decode parity, mask correctness."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = M.ModelConfig(
+        n_layers=2, d_model=64, n_heads=2, d_head=32, d_ff=128, max_seq=64,
+        block_q=32, block_kv=32,
+    )
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_param_inventory(small):
+    cfg, params = small
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    assert set(names) == set(params.keys()) == set(shapes.keys())
+    for n in names:
+        assert tuple(params[n].shape) == tuple(shapes[n]), n
+
+
+def test_prefill_shapes(small):
+    cfg, params = small
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits, kc, vc = M.prefill(params, toks, jnp.asarray([16, 8]), cfg)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert kc.shape == (cfg.n_layers, 2, cfg.max_seq, cfg.head_width)
+    assert vc.shape == kc.shape
+    # Cache beyond the prompt is zero-padded.
+    assert bool((kc[:, :, 16:, :] == 0).all())
+
+
+def test_decode_matches_prefill(small):
+    cfg, params = small
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 255, (1, 12)), jnp.int32)
+    _, kc, vc = M.prefill(params, toks, jnp.asarray([12]), cfg)
+    # Decode token 12 and compare with a longer prefill.
+    nxt = jnp.asarray([42], jnp.int32)
+    dec_logits, _, _ = M.decode_step(
+        params, nxt, jnp.asarray([12], jnp.int32),
+        jnp.repeat(kc, 1, axis=1), jnp.repeat(vc, 1, axis=1), cfg,
+    )
+    toks2 = jnp.concatenate([toks, nxt[None, :]], axis=1)
+    pf_logits, _, _ = M.prefill(params, toks2, jnp.asarray([13]), cfg)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[0]), np.asarray(pf_logits[0, 12]), atol=2e-3, rtol=1e-2
+    )
+
+
+def test_padding_tokens_do_not_affect_prefix(small):
+    cfg, params = small
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, 255, (1, 16))
+    a = base.copy()
+    b = base.copy()
+    b[0, 10:] = 99  # garbage beyond seq_len
+    la, _, _ = M.prefill(params, jnp.asarray(a, jnp.int32), jnp.asarray([10]), cfg)
+    lb, _, _ = M.prefill(params, jnp.asarray(b, jnp.int32), jnp.asarray([10]), cfg)
+    np.testing.assert_allclose(
+        np.asarray(la[0, :10]), np.asarray(lb[0, :10]), atol=2e-3, rtol=1e-2
+    )
+
+
+def test_attention_allocations_agree_on_benign_weights(small):
+    cfg, params = small
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, 255, (1, 16)), jnp.int32)
+    outs = {}
+    for alloc in ["pasa", "fa32", "ref"]:
+        c = M.ModelConfig(**{**cfg.__dict__, "attention": alloc})
+        outs[alloc], _, _ = M.prefill(params, toks, jnp.asarray([16]), c)
+    a = np.asarray(outs["pasa"][0, :16])
+    b = np.asarray(outs["fa32"][0, :16])
+    r = np.asarray(outs["ref"][0, :16])
+    assert np.abs(a - r).max() < 0.1  # fp16 kernel vs fp32 ref: small drift
+    assert np.abs(b - r).max() < 0.05
+
+
+def test_encode_decode_text_round_trip():
+    ids, n = M.encode_text("hello", 16)
+    assert n == 6  # BOS + 5 bytes
+    assert ids[0] == M.BOS and ids[n:].tolist() == [M.PAD] * (16 - n)
+    assert M.decode_bytes(ids.tolist()) == "hello"

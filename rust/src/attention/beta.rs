@@ -1,0 +1,182 @@
+//! Optimal accuracy condition for β (S5) — paper §2.3, Appendices A–C.
+//!
+//! The shifting matrix M = (I − β·J/n)/α is *rounded* to FP16 before use,
+//! so the effective β differs from the nominal one; but the correction
+//! steps of Algorithm 1 use the exact invariant Inva = β/(1−β). The paper
+//! closes this gap by solving the fixed-point equation (Eq. 16/20/22)
+//!
+//! ```text
+//! β/(1−β) = f(β),   f(β) = b·n/(a·(a−b·n)) + (1−a)/a,
+//! b = fl_tp(β/n),   a = fl_tp(1 − β/n) + b,
+//! ```
+//!
+//! in FP64, where fl_tp is the FP16 (or BF16) rounding. The optimized β
+//! makes the ideal and rounded invariants agree exactly (Table 3).
+
+use crate::numerics::Format;
+
+/// The paper's adopted β (solved from initial 1 − 2⁻⁶ at n = 128, FP16).
+pub const PAPER_BETA: f64 = 0.984497;
+
+/// β candidates the paper derives from initial values 1−2⁻⁴, 1−2⁻⁵, 1−2⁻⁶.
+pub const PAPER_BETAS: [f64; 3] = [0.9375, 0.968994, 0.984497];
+
+/// The rounded-matrix parameters (a, b) of Eq. (21).
+pub fn rounded_params(beta: f64, n: usize, tp: Format) -> (f64, f64) {
+    let b = tp.fl(beta / n as f64);
+    let a = tp.fl(1.0 - beta / n as f64) + b;
+    (a, b)
+}
+
+/// The practical (rounded) invariant Inva₁ = b·n/(a(a−b·n)) + (1−a)/a.
+pub fn practical_invariant(beta: f64, n: usize, tp: Format) -> f64 {
+    let (a, b) = rounded_params(beta, n, tp);
+    let bn = b * n as f64;
+    bn / (a * (a - bn)) + (1.0 - a) / a
+}
+
+/// The ideal invariant Inva = β/(1−β).
+pub fn ideal_invariant(beta: f64) -> f64 {
+    beta / (1.0 - beta)
+}
+
+/// Solve the optimal accuracy condition by fixed-point iteration
+/// (Eq. 22): β_{k+1} = f(β_k) / (1 + f(β_k)). Mirrors the paper's
+/// `optimal_para.py` (Appendix C) including its FP64 carrier precision.
+pub fn solve_optimal_beta(beta0: f64, n: usize, tp: Format, tol: f64, max_iter: usize) -> f64 {
+    let mut beta0 = beta0;
+    let mut beta = beta0;
+    for _ in 0..max_iter {
+        let f = practical_invariant(beta0, n, tp);
+        beta = f / (1.0 + f);
+        let err = (beta - beta0).abs() / beta0.abs();
+        beta0 = beta;
+        if err <= tol {
+            break;
+        }
+    }
+    beta
+}
+
+/// One row of the paper's Table 3.
+#[derive(Clone, Debug)]
+pub struct InvarianceRow {
+    pub initial_beta: f64,
+    pub inva_initial: f64,
+    pub inva1_initial: f64,
+    pub rel_err_initial: f64,
+    pub optimized_beta: f64,
+    pub inva_optimized: f64,
+    pub inva1_optimized: f64,
+    pub rel_err_optimized: f64,
+}
+
+/// Regenerate Table 3 for a given block size n (the paper uses n = 128)
+/// and storage format tp (FP16 in the paper).
+pub fn table3(n: usize, tp: Format) -> Vec<InvarianceRow> {
+    let initials = [
+        0.9,
+        1.0 - 2f64.powi(-4),
+        1.0 - 2f64.powi(-5),
+        1.0 - 2f64.powi(-6),
+        0.99,
+        0.999,
+    ];
+    initials
+        .iter()
+        .map(|&b0| {
+            let inva = ideal_invariant(b0);
+            let inva1 = practical_invariant(b0, n, tp);
+            let opt = solve_optimal_beta(b0, n, tp, 1e-8, 200);
+            // After optimization the *ideal* invariant of the optimized β
+            // is compared against the rounded one (the paper's Table 3
+            // reports them equal).
+            let inva_opt = ideal_invariant(opt);
+            let inva1_opt = practical_invariant(opt, n, tp);
+            InvarianceRow {
+                initial_beta: b0,
+                inva_initial: inva,
+                inva1_initial: inva1,
+                rel_err_initial: ((inva - inva1) / inva).abs(),
+                optimized_beta: opt,
+                inva_optimized: inva_opt,
+                inva1_optimized: inva1_opt,
+                rel_err_optimized: ((inva_opt - inva1_opt) / inva_opt).abs(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_solutions_from_pow2_initials() {
+        // Paper §2.3: initials 1−2⁻⁴, 1−2⁻⁵, 1−2⁻⁶ solve to
+        // 0.937500, 0.968994, 0.984497 (n = 128, FP16).
+        let expect = [0.937500, 0.968994, 0.984497];
+        for (i, &p) in [4, 5, 6].iter().enumerate() {
+            let b0 = 1.0 - 2f64.powi(-p);
+            let b = solve_optimal_beta(b0, 128, Format::F16, 1e-8, 200);
+            assert!(
+                (b - expect[i]).abs() < 5e-6,
+                "initial {b0}: got {b}, want {}",
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn optimized_beta_has_zero_invariance_error() {
+        // Table 3's punchline: after optimization Inva == Inva1 exactly
+        // (to FP64 resolution).
+        for &b0 in &[0.9, 0.99, 0.999, 1.0 - 2f64.powi(-5)] {
+            let opt = solve_optimal_beta(b0, 128, Format::F16, 1e-10, 500);
+            let i = ideal_invariant(opt);
+            let i1 = practical_invariant(opt, 128, Format::F16);
+            assert!(
+                ((i - i1) / i).abs() < 1e-9,
+                "b0={b0}: inva {i} vs inva1 {i1}"
+            );
+        }
+    }
+
+    #[test]
+    fn table3_initial_rel_errors_match_paper() {
+        // Paper Table 3 initial-β relative errors:
+        // 0.9 -> 0.32%, 1−2⁻⁴ -> 0%, 1−2⁻⁵ -> 0.81%, 1−2⁻⁶ -> 0.79%,
+        // 0.99 -> 3.23%, 0.999 -> 3.20%.
+        let t = table3(128, Format::F16);
+        let expect = [0.0032, 0.0, 0.0081, 0.0079, 0.0323, 0.0320];
+        for (row, &e) in t.iter().zip(&expect) {
+            assert!(
+                (row.rel_err_initial - e).abs() < 6e-4,
+                "beta0={}: rel err {} vs paper {}",
+                row.initial_beta,
+                row.rel_err_initial,
+                e
+            );
+            assert!(row.rel_err_optimized < 1e-9);
+        }
+    }
+
+    #[test]
+    fn beta_0p9375_is_exact_in_fp16() {
+        // Appendix A: β = 0.9375 has an *integer* invariant (15) and is
+        // exactly representable — no rounding error at all.
+        let inva = ideal_invariant(0.9375);
+        assert_eq!(inva, 15.0);
+        let inva1 = practical_invariant(0.9375, 128, Format::F16);
+        assert!((inva1 - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bf16_branch_also_solves() {
+        let b = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::Bf16, 1e-8, 200);
+        assert!(b > 0.9 && b < 1.0);
+        let i = ideal_invariant(b);
+        let i1 = practical_invariant(b, 128, Format::Bf16);
+        assert!(((i - i1) / i).abs() < 1e-9);
+    }
+}

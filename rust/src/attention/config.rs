@@ -1,0 +1,155 @@
+//! Attention-lab configuration: block sizes and the precision allocations
+//! of the paper's Figs. 1–3 plus PASA.
+
+use crate::numerics::Format;
+use crate::tensor::GemmPrecision;
+
+/// Block sizes of the FA/PASA tiling (the paper's s1 × s2, typically 128).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSizes {
+    pub s1: usize,
+    pub s2: usize,
+}
+
+impl Default for BlockSizes {
+    fn default() -> Self {
+        BlockSizes { s1: 128, s2: 128 }
+    }
+}
+
+/// The precision allocation strategies evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Allocation {
+    /// Fig. 1 — "original FA (FP32)": FP16 inputs on the matrix engine,
+    /// FP32 accumulate, FP32 S, FP32 softmax/update. Never overflows.
+    Fa32,
+    /// Fig. 2 — "partially low-precision FA (FP16-FP32)": S leaves the
+    /// matrix engine in FP16 (the overflow site), softmax/update in FP32.
+    Fa16_32,
+    /// Fig. 3 — "fully low-precision FA": everything FP16.
+    Fa16,
+    /// PASA (Algorithm 1): fully FP16 with pseudo-average shifting and
+    /// global recovering.
+    Pasa16,
+}
+
+impl Allocation {
+    pub fn name(self) -> &'static str {
+        match self {
+            Allocation::Fa32 => "FA(FP32)",
+            Allocation::Fa16_32 => "FA(FP16-FP32)",
+            Allocation::Fa16 => "FA(FP16)",
+            Allocation::Pasa16 => "PASA(FP16)",
+        }
+    }
+
+    /// GEMM precision for the two matmuls (QKᵀ and PV).
+    pub fn gemm(self) -> GemmPrecision {
+        match self {
+            Allocation::Fa32 => GemmPrecision {
+                acc: Format::F32,
+                store: Format::F32,
+            },
+            // The matrix engine accumulates FP16 inputs in FP32 (CUBE / TC
+            // behaviour) and stores low-precision; the FP16 *store* of S is
+            // the paper's overflow site.
+            Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Pasa16 => {
+                GemmPrecision::ACC32_STORE16
+            }
+        }
+    }
+
+    /// Format of the softmax / online-update vector ops.
+    pub fn vector_fmt(self) -> Format {
+        match self {
+            Allocation::Fa32 | Allocation::Fa16_32 => Format::F32,
+            Allocation::Fa16 | Allocation::Pasa16 => Format::F16,
+        }
+    }
+
+    /// Format S is stored in between GEMM and softmax.
+    pub fn score_fmt(self) -> Format {
+        match self {
+            Allocation::Fa32 => Format::F32,
+            _ => Format::F16,
+        }
+    }
+
+    pub fn all() -> [Allocation; 4] {
+        [
+            Allocation::Fa32,
+            Allocation::Fa16_32,
+            Allocation::Fa16,
+            Allocation::Pasa16,
+        ]
+    }
+}
+
+/// Full configuration for one attention run.
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionConfig {
+    pub alloc: Allocation,
+    pub blocks: BlockSizes,
+    /// PASA's β (ignored by the FA allocations). Default: the paper's
+    /// optimized 0.984497 (solved from the optimal accuracy condition).
+    pub beta: f64,
+    /// Emulate FP16 accumulation *inside* the matrix engine too (the
+    /// strictest reading of Fig. 3). Slow — per-step rounding; used by
+    /// tests, off by default (CUBE/TC accumulate FP32 internally).
+    pub strict_fp16_accum: bool,
+}
+
+impl AttentionConfig {
+    pub fn new(alloc: Allocation) -> AttentionConfig {
+        AttentionConfig {
+            alloc,
+            blocks: BlockSizes::default(),
+            beta: crate::attention::beta::PAPER_BETA,
+            strict_fp16_accum: false,
+        }
+    }
+
+    pub fn with_blocks(mut self, s1: usize, s2: usize) -> Self {
+        self.blocks = BlockSizes { s1, s2 };
+        self
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    pub fn gemm(&self) -> GemmPrecision {
+        let mut g = self.alloc.gemm();
+        if self.strict_fp16_accum && self.alloc != Allocation::Fa32 {
+            g.acc = Format::F16;
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_table() {
+        assert_eq!(Allocation::Fa32.score_fmt(), Format::F32);
+        assert_eq!(Allocation::Fa16_32.score_fmt(), Format::F16);
+        assert_eq!(Allocation::Fa16_32.vector_fmt(), Format::F32);
+        assert_eq!(Allocation::Fa16.vector_fmt(), Format::F16);
+        assert_eq!(Allocation::Pasa16.vector_fmt(), Format::F16);
+    }
+
+    #[test]
+    fn strict_accum_flag() {
+        let mut c = AttentionConfig::new(Allocation::Fa16);
+        assert_eq!(c.gemm().acc, Format::F32);
+        c.strict_fp16_accum = true;
+        assert_eq!(c.gemm().acc, Format::F16);
+        // Fa32 is unaffected by the strict flag.
+        let mut c = AttentionConfig::new(Allocation::Fa32);
+        c.strict_fp16_accum = true;
+        assert_eq!(c.gemm().acc, Format::F32);
+    }
+}

@@ -1,0 +1,160 @@
+//! Flash Attention 2 (§1.1, Eqs. 1–8) under each precision allocation of
+//! Figs. 1–3 (S4).
+//!
+//! The block loop is the paper's: for each Q block i sweep the KV blocks j,
+//! maintaining the online (m, l, O) triplet. Precision emulation:
+//! * GEMMs run at `cfg.gemm()` (FP32 acc; store FP32 for Fa32, FP16
+//!   otherwise — the FP16 store of S is the overflow site),
+//! * the static scaling, softmax and online update run at
+//!   `cfg.alloc.vector_fmt()` (FP32 for Fa32/Fa16_32, FP16 for Fa16).
+//!
+//! Overflow semantics follow IEEE: S elements beyond ±65504 become ±inf;
+//! +inf makes the row max infinite and `exp(inf − inf) = NaN` poisons the
+//! row — exactly the paper's INF/NaN failure mode.
+
+use super::config::AttentionConfig;
+use crate::tensor::{matmul_nn, matmul_nt, ops, Matrix};
+use crate::workloads::AttentionCase;
+
+/// FA2 forward pass for one head.
+pub fn flash_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
+    let (s1_total, d) = case.q.shape();
+    let s2_total = case.k.rows;
+    let alpha = (d as f64).sqrt() as f32;
+    let inv_alpha = 1.0 / alpha;
+    let bs = cfg.blocks;
+    let vfmt = cfg.alloc.vector_fmt();
+    let sfmt = cfg.alloc.score_fmt();
+    let gemm = cfg.gemm();
+
+    let mut out = Matrix::zeros(s1_total, d);
+
+    let mut i0 = 0;
+    while i0 < s1_total {
+        let i1 = (i0 + bs.s1).min(s1_total);
+        let qi = case.q.rows_slice(i0, i1);
+        let rows = i1 - i0;
+
+        // Online state: m starts at −inf (Eq. 4's identity element),
+        // l at 0, O at 0.
+        let mut m = vec![f32::NEG_INFINITY; rows];
+        let mut l = vec![0.0f32; rows];
+        let mut oi = Matrix::zeros(rows, d);
+
+        let mut j0 = 0;
+        while j0 < s2_total {
+            let j1 = (j0 + bs.s2).min(s2_total);
+            let kj = case.k.rows_slice(j0, j1);
+            let vj = case.v.rows_slice(j0, j1);
+
+            // Eq. (1): S = Q_i·K_jᵀ — the matrix-engine GEMM; the store
+            // format decides whether |S| > 65504 overflows.
+            let s = matmul_nt(&qi, &kj, gemm);
+            // Eq. (2): static scaling S/α in the score format (inf/α = inf).
+            let s = ops::scale(&s, inv_alpha, sfmt);
+
+            // Eq. (4): m_j = max(m_{j−1}, rowmax(S)).
+            let row_m = ops::rowmax(&s);
+            let m_new: Vec<f32> = m.iter().zip(&row_m).map(|(&a, &b)| a.max(b)).collect();
+
+            // Eq. (5): P = exp(S − m) — attenuator, never overflows.
+            let p = ops::exp_sub_rowbias(&s, &m_new, vfmt);
+
+            // Eq. (6): l = exp(m_{j−1} − m_j)·l + rowsum(P).
+            let decay: Vec<f32> = m
+                .iter()
+                .zip(&m_new)
+                .map(|(&a, &b)| vfmt.round((a - b).exp()))
+                .collect();
+            let row_l = ops::rowsum(&p, vfmt);
+            for r in 0..rows {
+                l[r] = vfmt.round(vfmt.round(decay[r] * l[r]) + row_l[r]);
+            }
+
+            // Eq. (7): O = exp(m_{j−1} − m_j)·O + P·V_j.
+            let pv = matmul_nn(&p, &vj, gemm);
+            ops::scale_add_rows(&mut oi, &decay, &pv, vfmt);
+
+            m = m_new;
+            j0 = j1;
+        }
+
+        // Eq. (8): O_i = O_i / l.
+        let oi = ops::div_rows(&oi, &l, vfmt);
+        for r in 0..rows {
+            out.row_mut(i0 + r).copy_from_slice(oi.row(r));
+        }
+        i0 = i1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::config::Allocation;
+    use crate::attention::naive::naive_attention_f32;
+    use crate::numerics::{has_overflow, relative_rmse, Format};
+    use crate::workloads::{gen_case, Distribution, Pcg64};
+
+    fn rounded_case(dist: Distribution, s: usize, d: usize, seed: u64) -> AttentionCase {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut c = gen_case(dist, s, s, d, &mut rng);
+        c.q.round_to(Format::F16);
+        c.k.round_to(Format::F16);
+        c.v.round_to(Format::F16);
+        c
+    }
+
+    #[test]
+    fn fa32_matches_naive_closely() {
+        let c = rounded_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 200, 32, 1);
+        let golden = naive_attention_f32(&c);
+        let cfg = AttentionConfig::new(Allocation::Fa32).with_blocks(64, 64);
+        let o = flash_attention(&c, &cfg);
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 1e-5, "rmse {e}");
+    }
+
+    #[test]
+    fn block_size_does_not_change_math() {
+        let c = rounded_case(Distribution::Uniform { x0: 2.0, am: 1.0 }, 150, 16, 2);
+        let a = flash_attention(&c, &AttentionConfig::new(Allocation::Fa32).with_blocks(32, 32));
+        let b = flash_attention(&c, &AttentionConfig::new(Allocation::Fa32).with_blocks(150, 150));
+        let e = relative_rmse(&a.data, &b.data);
+        assert!(e < 1e-5, "rmse {e}");
+    }
+
+    #[test]
+    fn ragged_tail_blocks_handled() {
+        // 100 is not a multiple of 64 — tail blocks of 36.
+        let c = rounded_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 100, 8, 3);
+        let golden = naive_attention_f32(&c);
+        let o = flash_attention(&c, &AttentionConfig::new(Allocation::Fa32).with_blocks(64, 64));
+        assert!(relative_rmse(&o.data, &golden.data) < 1e-5);
+    }
+
+    #[test]
+    fn fa16_32_overflows_on_large_mean() {
+        // Fig. 9(a)'s x0 = 30 point: uniform mean 30 at d=128 makes
+        // S ≈ 30·30·128 = 115200 > 65504 — the FP16 store overflows and
+        // the output is poisoned with NaN.
+        let c = rounded_case(Distribution::Uniform { x0: 30.0, am: 0.5 }, 256, 128, 4);
+        let o = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+        assert!(has_overflow(&o.data), "expected NaN/inf in output");
+        // While FA(FP32) sails through:
+        let o32 = flash_attention(&c, &AttentionConfig::new(Allocation::Fa32));
+        assert!(!has_overflow(&o32.data));
+    }
+
+    #[test]
+    fn fa16_accuracy_degrades_but_works_on_small_data() {
+        let c = rounded_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 128, 64, 5);
+        let golden = naive_attention_f32(&c);
+        let o = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16));
+        assert!(!has_overflow(&o.data));
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 5e-2, "rmse {e}");
+        assert!(e > 1e-6, "suspiciously exact for full FP16");
+    }
+}

@@ -1,0 +1,70 @@
+//! Attention lab (S4): the paper's algorithm and every baseline, under
+//! bit-exact precision emulation.
+//!
+//! Entry point: [`run_attention`] dispatches an [`AttentionConfig`] over a
+//! single-head [`crate::workloads::AttentionCase`]; inputs are rounded to
+//! the FP16 grid first (models store activations in half precision — the
+//! paper's premise that "input tensors are within the normal range of low
+//! precision formats").
+
+pub mod beta;
+pub mod config;
+pub mod flash;
+pub mod naive;
+pub mod pasa;
+pub mod shifting;
+
+pub use beta::{solve_optimal_beta, PAPER_BETA, PAPER_BETAS};
+pub use config::{Allocation, AttentionConfig, BlockSizes};
+pub use flash::flash_attention;
+pub use naive::{naive_attention_f32, raw_scores_f32};
+pub use pasa::pasa_attention;
+pub use shifting::{preprocess_k, shifting_inverse, shifting_matrix};
+
+use crate::numerics::Format;
+use crate::tensor::Matrix;
+use crate::workloads::AttentionCase;
+
+/// Round a case's Q/K/V onto the FP16 grid (the model's storage format).
+pub fn to_fp16_inputs(case: &AttentionCase) -> AttentionCase {
+    let mut c = case.clone();
+    c.q.round_to(Format::F16);
+    c.k.round_to(Format::F16);
+    c.v.round_to(Format::F16);
+    c
+}
+
+/// Run one attention configuration over a case with FP16-gridded inputs.
+pub fn run_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
+    match cfg.alloc {
+        Allocation::Pasa16 => pasa_attention(case, cfg),
+        _ => flash_attention(case, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::relative_rmse;
+    use crate::workloads::{gen_case, Distribution, Pcg64};
+
+    #[test]
+    fn dispatch_covers_all_allocations() {
+        let mut rng = Pcg64::new(1, 0);
+        let c = to_fp16_inputs(&gen_case(
+            Distribution::Uniform { x0: 0.0, am: 1.0 },
+            96,
+            96,
+            16,
+            &mut rng,
+        ));
+        let golden = naive_attention_f32(&c);
+        for alloc in Allocation::all() {
+            let cfg = AttentionConfig::new(alloc).with_blocks(32, 32);
+            let o = run_attention(&c, &cfg);
+            assert_eq!(o.shape(), golden.shape());
+            let e = relative_rmse(&o.data, &golden.data);
+            assert!(e < 5e-2, "{}: rmse {e}", alloc.name());
+        }
+    }
+}

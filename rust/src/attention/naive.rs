@@ -1,0 +1,89 @@
+//! Golden-reference standard attention (§1.1's four steps) in full
+//! precision — the `O_Golden` of the paper's RMSE metric (Eq. 19).
+
+use crate::tensor::{matmul_nn, matmul_nt, ops, GemmPrecision, Matrix};
+use crate::workloads::AttentionCase;
+
+/// O = softmax(Q·Kᵀ/α)·V with f32 GEMMs and f64-carried softmax.
+pub fn naive_attention_f32(case: &AttentionCase) -> Matrix {
+    let d = case.head_dim();
+    let alpha = (d as f64).sqrt() as f32;
+    let s = matmul_nt(&case.q, &case.k, GemmPrecision::F32);
+    let scaled = ops::scale(&s, 1.0 / alpha, crate::numerics::Format::F32);
+    let p = ops::softmax_rows_f32(&scaled);
+    matmul_nn(&p, &case.v, GemmPrecision::F32)
+}
+
+/// The raw attention score matrix S = Q·Kᵀ (pre-scaling) in f32 — used by
+/// the overflow studies (the paper's instrumentation checks max |S| against
+/// 65504 at exactly this point).
+pub fn raw_scores_f32(case: &AttentionCase) -> Matrix {
+    matmul_nt(&case.q, &case.k, GemmPrecision::F32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{gen_case, Distribution, Pcg64};
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let mut rng = Pcg64::new(5, 0);
+        let c = gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 16, 24, 8, &mut rng);
+        let o = naive_attention_f32(&c);
+        assert_eq!(o.shape(), (16, 8));
+        // Each output row lies within the convex hull of V's rows:
+        for j in 0..8 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..24 {
+                lo = lo.min(c.v.at(r, j));
+                hi = hi.max(c.v.at(r, j));
+            }
+            for i in 0..16 {
+                let x = o.at(i, j);
+                assert!(x >= lo - 1e-4 && x <= hi + 1e-4, "({i},{j})={x} not in [{lo},{hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_value_rows_pass_through() {
+        // If all V rows are identical, attention output equals that row
+        // regardless of the scores.
+        let mut rng = Pcg64::new(6, 0);
+        let mut c = gen_case(Distribution::Uniform { x0: 5.0, am: 2.0 }, 8, 12, 4, &mut rng);
+        for r in 0..12 {
+            for j in 0..4 {
+                c.v.set(r, j, (j as f32) - 1.5);
+            }
+        }
+        let o = naive_attention_f32(&c);
+        for i in 0..8 {
+            for j in 0..4 {
+                assert!((o.at(i, j) - ((j as f32) - 1.5)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_translation_invariance() {
+        // Eq. (9): adding a constant row vector to K's contribution leaves
+        // the output unchanged (softmax translation invariance).
+        let mut rng = Pcg64::new(7, 0);
+        let c = gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 8, 16, 4, &mut rng);
+        let o1 = naive_attention_f32(&c);
+        // Shift every K row by the same vector k0 — scores change by a
+        // row-constant Q·k0ᵀ, softmax unchanged.
+        let mut c2 = c.clone();
+        let k0 = [0.5f32, -1.0, 2.0, 0.25];
+        for r in 0..16 {
+            for j in 0..4 {
+                c2.k.set(r, j, c2.k.at(r, j) - k0[j]);
+            }
+        }
+        let o2 = naive_attention_f32(&c2);
+        for (a, b) in o1.data.iter().zip(&o2.data) {
+            assert!((a - b).abs() < 2e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! PASA — Algorithm 1 (S4): fully-FP16 flash attention with online
+//! pseudo-average shifting and global recovering.
+//!
+//! Pipeline per Q block i, sweeping KV blocks j:
+//!
+//! 1. (once per KV block) K'_j = M·K_j — batched GEMM folding the β-scaled
+//!    pseudo-average subtraction *and* the 1/α static scaling (Eq. 10–12),
+//! 2. S' = Q_i·K'_jᵀ — bias and amplitude collapsed ⇒ no FP16 overflow,
+//! 3. local softmax stats (m'_j, P, l'_j) on S',
+//! 4. global recovering: running pseudo-average F̄ʲ (Eq. 15) and the
+//!    correction terms Δm'_{j−1}, Δm'_j re-express every block's stats in
+//!    a common frame (Theorem 2.1 / Eq. 13–14),
+//! 5. corrected online update of (m, l, O); final O = O/l.
+//!
+//! All vector ops run in FP16 (Algorithm 1's annotations); the correction
+//! factor Inva = β/(1−β) is exact in FP16 for the optimized β values
+//! (Appendix A), which is precisely why the optimal accuracy condition
+//! exists.
+//!
+//! Deviation from the paper's line 4 (documented): we initialize
+//! m₀ = −inf, not 0. With m₀ = 0 and l₀ = 0, the phantom term
+//! m₀ + Δm'₀ = −Inva·F̄¹ can exceed the genuine block-1 maximum whenever
+//! the data mean is strongly negative (the paper's own SVD case), driving
+//! every exp to zero and the output to 0/0 = NaN. m₀ = −inf is the correct
+//! identity for the max and reproduces the paper's intent; a regression
+//! test pins this down.
+
+use super::config::AttentionConfig;
+use super::shifting::{effective_invariant, preprocess_k, shifting_matrix};
+use crate::numerics::Format;
+use crate::tensor::{matmul_nn, matmul_nt, ops, Matrix};
+use crate::workloads::AttentionCase;
+
+/// PASA forward pass for one head (Algorithm 1).
+///
+/// Correction-factor note (documented deviation; see DESIGN.md): the
+/// paper's Inva = β/(1−β) is the recovery constant of the *ideal* M, and
+/// its optimal-accuracy condition (Eq. 20) analyses M without the α
+/// folding of Eq. 10. We instead read the **effective invariant off the
+/// rounded M actually used** (`effective_invariant`), which zeroes the
+/// aliasing error for any block width — including the ragged tail block,
+/// whose different width would otherwise leave an O(1) error in the
+/// exponent. For the ideal α-less M the two definitions coincide, and the
+/// β solved from the paper's condition is still the default hyperparameter.
+pub fn pasa_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
+    let (s1_total, d) = case.q.shape();
+    let s2_total = case.k.rows;
+    let alpha = (d as f64).sqrt();
+    let beta = cfg.beta;
+    let bs = cfg.blocks;
+    let vfmt = Format::F16; // Algorithm 1: every vector op is FP16
+    let gemm = cfg.gemm();
+
+    // Pre-processing (line 6): K'_j = M·K_j for every KV block; the ragged
+    // tail gets its own, smaller M. Each block carries the effective
+    // correction factor c_j of its rounded M (constants precomputed at
+    // high precision, like the paper's FP64-solved β).
+    let mut kp_blocks: Vec<Matrix> = Vec::new();
+    let mut block_inva: Vec<f32> = Vec::new();
+    let m_full = shifting_matrix(bs.s2, alpha, beta, Format::F16);
+    let inva_main = effective_invariant(&m_full);
+    let mut j0 = 0;
+    while j0 < s2_total {
+        let j1 = (j0 + bs.s2).min(s2_total);
+        let kj = case.k.rows_slice(j0, j1);
+        let (m, c) = if j1 - j0 == bs.s2 {
+            (m_full.clone(), inva_main)
+        } else {
+            let m_tail = shifting_matrix(j1 - j0, alpha, beta, Format::F16);
+            let c_tail = effective_invariant(&m_tail);
+            (m_tail, c_tail)
+        };
+        kp_blocks.push(preprocess_k(&kj, &m, gemm));
+        block_inva.push(c);
+        j0 = j1;
+    }
+
+    let mut out = Matrix::zeros(s1_total, d);
+
+    let mut i0 = 0;
+    while i0 < s1_total {
+        let i1 = (i0 + bs.s1).min(s1_total);
+        let qi = case.q.rows_slice(i0, i1);
+        let rows = i1 - i0;
+
+        // Line 4 (amended): m₀ = −inf, l₀ = 0, F̄⁰ = 0, O = 0.
+        let mut m = vec![f32::NEG_INFINITY; rows];
+        let mut l = vec![0.0f32; rows];
+        let mut fbar = vec![0.0f32; rows];
+        let mut oi = Matrix::zeros(rows, d);
+
+        let mut j0 = 0;
+        let mut jidx = 0usize;
+        while j0 < s2_total {
+            let j1 = (j0 + bs.s2).min(s2_total);
+            let vj = case.v.rows_slice(j0, j1);
+            let kp = &kp_blocks[jidx];
+
+            // Line 11: S' = Q_i·K'_jᵀ — shifted+scaled scores, FP16 store.
+            let s = matmul_nt(&qi, kp, gemm);
+
+            // Line 12: local softmax stats.
+            let m_loc = ops::rowmax(&s);
+            let p = ops::exp_sub_rowbias(&s, &m_loc, vfmt);
+            // Vector reduce with f32 internal precision, one f16 round on
+            // store — matches the Pallas kernel (and NPU vector units).
+            let l_loc: Vec<f32> = ops::rowmean_acc32(&p, vfmt)
+                .iter()
+                .map(|&m| vfmt.round(m * p.cols as f32))
+                .collect();
+
+            // Line 13: pseudo-average of the shifted block.
+            let sbar = ops::rowmean_acc32(&s, vfmt);
+
+            // Line 14 (Eq. 15): running global pseudo-average, computed in
+            // the incremental form F̄ += (S̄' − F̄)/j — algebraically the
+            // paper's ((j−1)F̄ + S̄')/j but immune to FP16 overflow of the
+            // (j−1)·F̄ product at long sequence lengths.
+            let jf = (jidx + 1) as f32;
+            let fbar_prev: Vec<f32> = fbar.clone();
+            for r in 0..rows {
+                let delta = vfmt.round(sbar[r] - fbar[r]);
+                fbar[r] = vfmt.round(fbar[r] + vfmt.round(delta / jf));
+            }
+
+            // Line 15: correction terms of the maximum,
+            // Δm'_{j−1} = Inva·(F̄ʲ⁻¹ − F̄ʲ), Δm'_j = Inva·(S̄'ʲ − F̄ʲ).
+            // A ragged tail block shifted with its own β_w gets the extra
+            // (c_w − c_main)·S̄' term so its true offset is still recovered.
+            let inva_j = block_inva[jidx];
+            let dinva = vfmt.round(inva_j - inva_main);
+            let dm_prev: Vec<f32> = (0..rows)
+                .map(|r| vfmt.round(inva_main * vfmt.round(fbar_prev[r] - fbar[r])))
+                .collect();
+            let dm_cur: Vec<f32> = (0..rows)
+                .map(|r| {
+                    let base = vfmt.round(inva_main * vfmt.round(sbar[r] - fbar[r]));
+                    if dinva == 0.0 {
+                        base
+                    } else {
+                        vfmt.round(base + vfmt.round(dinva * sbar[r]))
+                    }
+                })
+                .collect();
+
+            // Line 16: m_j = max(m_{j−1} + Δm'_{j−1}, m'_j + Δm'_j).
+            let m_new: Vec<f32> = (0..rows)
+                .map(|r| {
+                    let a = vfmt.round(m[r] + dm_prev[r]); // −inf + finite = −inf
+                    let b = vfmt.round(m_loc[r] + dm_cur[r]);
+                    a.max(b)
+                })
+                .collect();
+
+            // Line 17: Δm_{j−1} = m_{j−1} − m_j + Δm'_{j−1},
+            //          Δm_j     = m'_j   − m_j + Δm'_j   (both ≤ 0).
+            let scale_prev: Vec<f32> = (0..rows)
+                .map(|r| {
+                    let dm = vfmt.round(vfmt.round(m[r] - m_new[r]) + dm_prev[r]);
+                    vfmt.round(dm.exp())
+                })
+                .collect();
+            let scale_cur: Vec<f32> = (0..rows)
+                .map(|r| {
+                    let dm = vfmt.round(vfmt.round(m_loc[r] - m_new[r]) + dm_cur[r]);
+                    vfmt.round(dm.exp())
+                })
+                .collect();
+
+            // Line 18: l_j = exp(Δm_{j−1})·l_{j−1} + exp(Δm_j)·l'_j.
+            for r in 0..rows {
+                l[r] = vfmt.round(
+                    vfmt.round(scale_prev[r] * l[r]) + vfmt.round(scale_cur[r] * l_loc[r]),
+                );
+            }
+
+            // Lines 19–20: O = exp(Δm_j)·(P·V_j) + exp(Δm_{j−1})·O.
+            let pv = matmul_nn(&p, &vj, gemm);
+            let pv_scaled = ops::scale_rows(&pv, &scale_cur, vfmt);
+            ops::scale_add_rows(&mut oi, &scale_prev, &pv_scaled, vfmt);
+
+            m = m_new;
+            j0 = j1;
+            jidx += 1;
+        }
+
+        // Line 22: O_i = O_i / l.
+        let oi = ops::div_rows(&oi, &l, vfmt);
+        for r in 0..rows {
+            out.row_mut(i0 + r).copy_from_slice(oi.row(r));
+        }
+        i0 = i1;
+    }
+    out
+}
+
+/// β = 0 degrades PASA to plain FA2 (§2.2: "PASA completely degrades into
+/// the FA2.0 algorithm when β is set to zero") — exposed for tests.
+pub fn pasa_is_fa2_at_beta_zero() -> bool {
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::config::Allocation;
+    use crate::attention::flash::flash_attention;
+    use crate::attention::naive::naive_attention_f32;
+    use crate::numerics::{has_overflow, relative_rmse};
+    use crate::workloads::{gen_case, Distribution, Pcg64};
+
+    fn rounded_case(dist: Distribution, s: usize, d: usize, seed: u64) -> AttentionCase {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut c = gen_case(dist, s, s, d, &mut rng);
+        c.q.round_to(Format::F16);
+        c.k.round_to(Format::F16);
+        c.v.round_to(Format::F16);
+        c
+    }
+
+    fn pasa_cfg() -> AttentionConfig {
+        AttentionConfig::new(Allocation::Pasa16).with_blocks(64, 64)
+    }
+
+    #[test]
+    fn matches_golden_on_benign_data() {
+        let c = rounded_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 192, 32, 1);
+        let golden = naive_attention_f32(&c);
+        let o = pasa_attention(&c, &pasa_cfg());
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 2e-2, "rmse {e}");
+        assert!(!has_overflow(&o.data));
+    }
+
+    #[test]
+    fn survives_large_mean_where_fa16_32_dies() {
+        // Fig. 9(a) x0 = 30: FA(FP16-FP32) overflows, PASA must not.
+        let c = rounded_case(Distribution::Uniform { x0: 30.0, am: 0.5 }, 256, 128, 2);
+        let fa = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+        assert!(has_overflow(&fa.data), "premise: FA16-32 overflows");
+        let o = pasa_attention(&c, &pasa_cfg());
+        assert!(!has_overflow(&o.data), "PASA must avoid overflow");
+        let golden = naive_attention_f32(&c);
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 5e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn survives_strongly_negative_mean() {
+        // The SVD-like regime: every score deeply negative. This is the
+        // case that motivates the m₀ = −inf amendment.
+        let c = rounded_case(Distribution::Uniform { x0: -25.0, am: 0.5 }, 192, 128, 3);
+        let o = pasa_attention(&c, &pasa_cfg());
+        assert!(!has_overflow(&o.data), "NaN/inf in PASA output");
+        let golden = naive_attention_f32(&c);
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 5e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn beta_zero_degrades_to_fa2() {
+        // §2.2: β = 0 makes M = I/α and all corrections vanish; PASA must
+        // then agree with plain full-FP16 FA bit-for-bit-ish (same ops, S
+        // scaled inside vs outside the GEMM differ by one rounding).
+        let c = rounded_case(Distribution::Uniform { x0: 0.5, am: 1.0 }, 128, 16, 4);
+        let p = pasa_attention(&c, &pasa_cfg().with_beta(0.0));
+        let f = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16).with_blocks(64, 64));
+        let e = relative_rmse(&p.data, &f.data);
+        assert!(e < 5e-3, "beta=0 PASA vs FA16 rmse {e}");
+    }
+
+    #[test]
+    fn block_size_invariance() {
+        let c = rounded_case(Distribution::Uniform { x0: 5.0, am: 2.0 }, 160, 32, 5);
+        let golden = naive_attention_f32(&c);
+        for &(s1, s2) in &[(32usize, 32usize), (64, 64), (160, 160), (64, 32)] {
+            let o = pasa_attention(&c, &pasa_cfg().with_blocks(s1, s2));
+            let e = relative_rmse(&o.data, &golden.data);
+            assert!(e < 3e-2, "blocks ({s1},{s2}): rmse {e}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_blocks() {
+        let c = rounded_case(Distribution::Uniform { x0: 1.0, am: 1.0 }, 100, 16, 6);
+        let golden = naive_attention_f32(&c);
+        let o = pasa_attention(&c, &pasa_cfg().with_blocks(64, 64));
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 3e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn more_accurate_than_fa16_32_on_biased_data() {
+        // The paper's accuracy claim (Fig. 9a): for non-zero mean, PASA's
+        // RMSE beats partially-low-precision FA (at the paper's default
+        // 128-blocks; averaged over heads to wash out seed luck).
+        let mut tot_fa = 0.0;
+        let mut tot_p = 0.0;
+        for seed in 0..4u64 {
+            let c = rounded_case(Distribution::Uniform { x0: 20.0, am: 2.0 }, 256, 128, seed);
+            let golden = naive_attention_f32(&c);
+            let fa = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+            let p = pasa_attention(&c, &AttentionConfig::new(Allocation::Pasa16));
+            tot_fa += relative_rmse(&fa.data, &golden.data);
+            tot_p += relative_rmse(&p.data, &golden.data);
+        }
+        assert!(
+            tot_p < tot_fa,
+            "PASA mean rmse {} should beat FA16-32 mean rmse {}",
+            tot_p / 4.0,
+            tot_fa / 4.0
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! The shifting matrix M (S4) — paper Eq. (10)–(12) and Theorem 2.1.
+//!
+//! ```text
+//! M = I/α − β·J/(α·s₂)
+//! ```
+//!
+//! Applying M to the right of Kᵀ subtracts β× the pseudo-average of K along
+//! the sequence dimension *and* applies the static 1/α scaling, in a single
+//! batched GEMM that runs on the matrix engine — the paper's replacement
+//! for the vector-unit mean-subtract of SageAttention.
+
+use crate::numerics::Format;
+use crate::tensor::{matmul_nn, GemmPrecision, Matrix};
+
+/// Build M ∈ R^{n×n} for block size `n`, head-dim scale α = √d, rounded to
+/// `fmt` (Algorithm 1: M's precision is FP16).
+pub fn shifting_matrix(n: usize, alpha: f64, beta: f64, fmt: Format) -> Matrix {
+    let diag = fmt.fl((1.0 - beta / n as f64) / alpha) as f32;
+    let off = fmt.fl(-beta / (n as f64 * alpha)) as f32;
+    let mut m = Matrix::full(n, n, off);
+    for i in 0..n {
+        m.set(i, i, diag);
+    }
+    m
+}
+
+/// Theorem 2.1: for M = I − λJ (n×n, λ·n ≠ 1), M⁻¹ = I + λ/(1−λn)·J.
+/// Returned in f32 for verification/tests.
+pub fn shifting_inverse(n: usize, lambda: f64) -> Matrix {
+    assert!(
+        (1.0 - lambda * n as f64).abs() > 1e-12,
+        "shifting matrix is singular at λ·n = 1"
+    );
+    let off = (lambda / (1.0 - lambda * n as f64)) as f32;
+    let mut m = Matrix::full(n, n, off);
+    for i in 0..n {
+        m.set(i, i, 1.0 + off);
+    }
+    m
+}
+
+/// Preprocess one KV block: K'_j = M·K_j (equivalently K'ᵀ = Kᵀ·M since M
+/// is symmetric) — Algorithm 1 line 6, a batched GEMM on the matrix
+/// engine. `gemm` controls the engine's accumulate/store precision.
+pub fn preprocess_k(k_block: &Matrix, m: &Matrix, gemm: GemmPrecision) -> Matrix {
+    assert_eq!(m.rows, k_block.rows, "M size must match the KV block rows");
+    matmul_nn(m, k_block, gemm)
+}
+
+/// The *effective* recovery invariant of a rounded shifting matrix.
+///
+/// Writing the stored matrix as M_fp = a'I − b'J (a' = diag + b'), the
+/// mean-leakage-free recovery constant is c_eff = b'n/(a' − b'n): adding
+/// c_eff·rowmean(S') to S' = S·M_fp reproduces a'·S + (per-row constant),
+/// i.e. the true scores up to the common temperature a'α ≈ 1 and a shift
+/// softmax ignores. This generalizes the paper's Eq. 20 (whose a, b omit
+/// the α folding of Eq. 10) and makes the correction exact for *any*
+/// rounded M — including ragged tail blocks of a different width, where
+/// the paper's fixed Inva = β/(1−β) leaves an O(1) aliasing error in the
+/// exponent (see DESIGN.md §PASA-deviations and the regression tests).
+pub fn effective_invariant(m: &Matrix) -> f32 {
+    let n = m.rows;
+    if n == 1 {
+        return 0.0;
+    }
+    let off = -(m.at(0, 1) as f64);
+    if off == 0.0 {
+        return 0.0; // β = 0: PASA degrades to FA2, no correction
+    }
+    let a = m.at(0, 0) as f64 + off;
+    let bn = off * n as f64;
+    (bn / (a - bn)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::rowmean;
+
+    #[test]
+    fn m_subtracts_scaled_mean() {
+        // K' = M·K must equal (K − β·K̄)/α where K̄ broadcasts the
+        // per-column mean over rows (Eq. 11).
+        let n = 8;
+        let d = 4;
+        let alpha = (d as f64).sqrt();
+        let beta = 0.9375; // exact in FP16 — no rounding noise in this test
+        let m = shifting_matrix(n, alpha, beta, Format::F32);
+        let mut k = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                k.set(i, j, (i * d + j) as f32 * 0.25 - 3.0);
+            }
+        }
+        let kp = preprocess_k(&k, &m, GemmPrecision::F32);
+        // column means of K
+        let kt = k.transpose();
+        let col_means = rowmean(&kt, Format::F32);
+        for i in 0..n {
+            for j in 0..d {
+                let expect = (k.at(i, j) - beta as f32 * col_means[j]) / alpha as f32;
+                assert!(
+                    (kp.at(i, j) - expect).abs() < 1e-5,
+                    "({i},{j}): {} vs {expect}",
+                    kp.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn theorem_2_1_inverse() {
+        // M = I − λJ, M⁻¹ = I + λ/(1−λn)J; their product must be I.
+        let n = 6;
+        let lambda = 0.984497 / n as f64;
+        let mut m = Matrix::full(n, n, -lambda as f32);
+        for i in 0..n {
+            m.set(i, i, 1.0 - lambda as f32);
+        }
+        let minv = shifting_inverse(n, lambda);
+        let prod = matmul_nn(&m, &minv, GemmPrecision::F32);
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod.at(i, j) - expect).abs() < 1e-5,
+                    "({i},{j}) = {}",
+                    prod.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn inverse_rejects_lambda_n_equal_one() {
+        // Theorem 2.1's condition: λ·n = 1 (β = 1) has no inverse.
+        shifting_inverse(4, 0.25);
+    }
+
+    #[test]
+    fn fp16_rounding_changes_effective_beta() {
+        // Appendix A's premise: (1 − β/s₂) and (−β/s₂) are not exactly
+        // representable, so the rounded M encodes a slightly different β.
+        let n = 128;
+        let m_exact = shifting_matrix(n, 1.0, 0.99, Format::F32);
+        let m_fp16 = shifting_matrix(n, 1.0, 0.99, Format::F16);
+        assert_ne!(m_exact.at(0, 1), m_fp16.at(0, 1));
+        // ... while the paper's optimized β = 0.9375 at α=1 survives:
+        // β/n = 0.9375/128 = 0.00732421875 = 15·2⁻11 exact in FP16.
+        let a = shifting_matrix(n, 1.0, 0.9375, Format::F32);
+        let b = shifting_matrix(n, 1.0, 0.9375, Format::F16);
+        assert_eq!(a.at(0, 1), b.at(0, 1));
+        assert_eq!(a.at(0, 0), b.at(0, 0));
+    }
+
+    #[test]
+    fn shift_reduces_mean_and_amplitude() {
+        // Fig. 5: applying M collapses both the bias and the amplitude of
+        // a biased K block.
+        use crate::numerics::{finite_mean, finite_range};
+        use crate::workloads::{Distribution, Pcg64};
+        let n = 128;
+        let d = 32;
+        let mut rng = Pcg64::new(3, 0);
+        let k = Distribution::Uniform { x0: 20.0, am: 0.5 }.matrix(n, d, &mut rng);
+        let m = shifting_matrix(n, (d as f64).sqrt(), PAPER_BETA_LOCAL, Format::F16);
+        let kp = preprocess_k(&k, &m, GemmPrecision::F32);
+        let (lo0, hi0) = finite_range(&k.data);
+        let (lo1, hi1) = finite_range(&kp.data);
+        assert!(hi1 - lo1 < (hi0 - lo0), "amplitude not reduced");
+        assert!(finite_mean(&kp.data).abs() < 0.1 * finite_mean(&k.data).abs());
+    }
+
+    const PAPER_BETA_LOCAL: f64 = 0.984497;
+}

@@ -1,0 +1,130 @@
+//! Bench harness (S14) — no criterion offline, so a small timed-run
+//! framework with warmup, repetitions and robust statistics. Used by all
+//! `benches/*.rs` targets (each with `harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub p95_s: f64,
+    /// Optional throughput annotation (items per iteration).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter / self.mean_s
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.4} ms/iter (median {:.4}, min {:.4}, p95 {:.4}; n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.median_s * 1e3,
+            self.min_s * 1e3,
+            self.p95_s * 1e3,
+            self.iters
+        )?;
+        if self.items_per_iter > 0.0 {
+            write!(f, "  [{:.1} items/s]", self.items_per_sec())?;
+        }
+        Ok(())
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop repeating once this much wall time is spent.
+    pub budget_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget_s: 5.0,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            budget_s: 2.0,
+        }
+    }
+
+    /// Time `f`, preventing dead-code elimination through the returned
+    /// value's drop.
+    pub fn run<T>(&self, name: &str, items_per_iter: f64, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            median_s: samples[n / 2],
+            min_s: samples[0],
+            p95_s: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            items_per_iter,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            budget_s: 0.5,
+        };
+        let r = b.run("spin", 100.0, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
+        assert!(r.items_per_sec() > 0.0);
+        assert!(format!("{r}").contains("spin"));
+    }
+}

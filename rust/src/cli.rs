@@ -1,0 +1,113 @@
+//! Minimal CLI argument parser (S13) — no clap offline.
+//!
+//! Grammar: `pasa <subcommand> [--flag value]... [--switch]...`
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(sc) = it.next() {
+            if sc.starts_with("--") {
+                bail!("expected a subcommand before flags, got {sc}");
+            }
+            out.subcommand = sc.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // A flag with a value, or a bare switch.
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), (*v).clone());
+                        it.next();
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                bail!("unexpected positional argument {a}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects a number: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv("repro --exp fig9a --heads 4 --verbose")).unwrap();
+        assert_eq!(a.subcommand, "repro");
+        assert_eq!(a.get("exp"), Some("fig9a"));
+        assert_eq!(a.get_usize("heads", 16).unwrap(), 4);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&argv("serve")).unwrap();
+        assert_eq!(a.get_usize("requests", 8).unwrap(), 8);
+        assert_eq!(a.get_or("policy", "adaptive"), "adaptive");
+        assert!(Args::parse(&argv("--oops first")).is_err());
+        assert!(Args::parse(&argv("run stray")).is_err());
+        let bad = Args::parse(&argv("run --n abc")).unwrap();
+        assert!(bad.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = Args::parse(&argv("repro --x0 -30")).unwrap();
+        assert_eq!(a.get_f64("x0", 0.0).unwrap(), -30.0);
+    }
+}

@@ -1,0 +1,412 @@
+//! Serving engine (S11): continuous-batching loop over the AOT model.
+//!
+//! One `step()` = one scheduler iteration:
+//!   1. admit queued requests into free decode slots (prefill, B=1 module,
+//!      KV seeded into the paged pool),
+//!   2. run one decode step per allocation group (slots pinned to PASA by
+//!      the overflow guard run separately from fast-path slots),
+//!   3. guard inspection: non-finite logits ⇒ replay the step under PASA
+//!      (functional cache-in/cache-out makes replay exact), pin the slot,
+//!   4. sample, write the new KV row back into the paged cache, retire
+//!      finished requests.
+//!
+//! The decode HLO has a fixed batch bucket B; inactive slots are masked by
+//! feeding pos=0/token=PAD and ignoring their outputs (their cache slots
+//! are re-assembled from the paged pool each step, so scribbles from
+//! masked lanes never persist).
+
+use super::guard::{Guard, GuardPolicy};
+use super::kv_cache::{KvPool, SeqCache};
+use super::metrics::Metrics;
+use super::request::{Completion, FinishReason, Phase, Request};
+use super::router::{Admission, Router};
+use crate::model::{sample, tokenizer, Specials};
+use crate::runtime::ModelRuntime;
+use crate::workloads::Pcg64;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub policy: GuardPolicy,
+    /// Total pages in the KV pool.
+    pub kv_pages: usize,
+    /// Tokens per page.
+    pub page_tokens: usize,
+    pub max_queue: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: GuardPolicy::Adaptive,
+            kv_pages: 4096,
+            page_tokens: 32,
+            max_queue: 256,
+        }
+    }
+}
+
+struct ActiveRequest {
+    req: Request,
+    guard: Guard,
+    cache: SeqCache,
+    /// Prompt + generated token ids.
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    phase: Phase,
+    prefill_done: Option<Instant>,
+    first_token: Option<Instant>,
+}
+
+/// The continuous-batching serving engine.
+pub struct Engine<'rt> {
+    rt: &'rt ModelRuntime,
+    pub cfg: EngineConfig,
+    pub router: Router,
+    pool: KvPool,
+    slots: Vec<Option<ActiveRequest>>,
+    pub metrics: Metrics,
+    completions: Vec<Completion>,
+    rng: Pcg64,
+    sp: Specials,
+    // Reusable batch assembly buffers (hot-loop allocation hoisting).
+    kbatch: Vec<f32>,
+    vbatch: Vec<f32>,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt ModelRuntime, cfg: EngineConfig) -> Engine<'rt> {
+        let d = rt.dims;
+        let b = d.decode_batch;
+        let cache_len = d.n_layers * b * d.max_seq * d.head_width();
+        let sp = Specials {
+            pad: d.pad,
+            bos: d.bos,
+            eos: d.eos,
+        };
+        Engine {
+            rt,
+            router: Router::new(cfg.max_queue, d.prefill_seq * 4),
+            pool: KvPool::new(cfg.kv_pages, cfg.page_tokens, d.head_width()),
+            slots: (0..b).map(|_| None).collect(),
+            metrics: Metrics::new(),
+            completions: Vec::new(),
+            rng: Pcg64::new(0xe61e, 0),
+            sp,
+            kbatch: vec![0.0; cache_len],
+            vbatch: vec![0.0; cache_len],
+            cfg,
+        }
+    }
+
+    /// Submit a request (admission-checked).
+    pub fn submit(&mut self, req: Request) -> Admission {
+        self.router.submit(req)
+    }
+
+    pub fn fresh_id(&mut self) -> u64 {
+        self.router.fresh_id()
+    }
+
+    /// True when no queued or active work remains.
+    pub fn idle(&self) -> bool {
+        self.router.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    pub fn kv_utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// One scheduler iteration. Returns the number of active slots after
+    /// the step (0 = fully idle).
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit_loop()?;
+        if self.slots.iter().any(|s| s.is_some()) {
+            self.decode_round()?;
+        }
+        Ok(self.active_count())
+    }
+
+    /// Run until the queue and all slots drain; returns completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while !self.idle() {
+            self.step()?;
+        }
+        Ok(self.take_completions())
+    }
+
+    // ---- admission / prefill ------------------------------------------
+
+    fn admit_loop(&mut self) -> Result<()> {
+        let d = self.rt.dims;
+        loop {
+            let free_slot = match self.slots.iter().position(|s| s.is_none()) {
+                Some(i) => i,
+                None => return Ok(()),
+            };
+            // Capacity check: a full-context sequence must fit in pages.
+            let need = SeqCache::pages_required(d.n_layers, d.max_seq, self.pool.page_tokens);
+            if self.pool.free_pages() < need {
+                return Ok(()); // backpressure: keep queued
+            }
+            let req = match self.router.pop() {
+                Some(r) => r,
+                None => return Ok(()),
+            };
+            let active = self.prefill_request(req)?;
+            self.slots[free_slot] = Some(active);
+        }
+    }
+
+    fn prefill_request(&mut self, req: Request) -> Result<ActiveRequest> {
+        let d = self.rt.dims;
+        let (mut ids, n) = tokenizer::encode(&req.prompt, d.prefill_seq, self.sp);
+        ids.truncate(d.prefill_seq);
+        let mut guard = Guard::new(self.cfg.policy);
+
+        let t0 = Instant::now();
+        let mut out = self
+            .rt
+            .prefill(guard.allocation(), &ids, n)
+            .context("prefill")?;
+        // Guard: inspect the last-prompt-token logits row for overflow.
+        let v = d.vocab_size;
+        let last_row = &out.logits[(n - 1) * v..n * v];
+        if guard.observe(last_row) {
+            self.metrics.overflow_steps += 1;
+            self.metrics.guard_switches += 1;
+            out = self
+                .rt
+                .prefill(guard.allocation(), &ids, n)
+                .context("prefill replay under PASA")?;
+        }
+        let prefill_done = Instant::now();
+        self.metrics.prefill_tokens += n as u64;
+
+        // Seed the paged cache from the dense prefill output.
+        let mut cache = SeqCache::new(d.n_layers);
+        cache.ensure_capacity(&mut self.pool, n)?;
+        let w = d.head_width();
+        let per_layer = d.max_seq * w;
+        for l in 0..d.n_layers {
+            for p in 0..n {
+                let off = l * per_layer + p * w;
+                let krow = out.cache.k[off..off + w].to_vec();
+                let vrow = out.cache.v[off..off + w].to_vec();
+                cache.write_row(&mut self.pool, l, p, &krow, &vrow);
+            }
+        }
+
+        // First generated token comes from the prompt's last logits row.
+        let last_row = &out.logits[(n - 1) * v..n * v];
+        let tok = sample(last_row, req.params.sampling, &mut self.rng);
+        let mut tokens: Vec<u32> = ids[..n].to_vec();
+        tokens.push(tok);
+
+        let mut ar = ActiveRequest {
+            req,
+            guard,
+            cache,
+            tokens,
+            prompt_len: n,
+            phase: Phase::Decoding,
+            prefill_done: Some(prefill_done),
+            first_token: Some(Instant::now()),
+        };
+        let _ = t0;
+        // Immediately-finished cases (max_new_tokens == 0 is nonsensical
+        // but must not wedge the slot).
+        if ar.req.params.max_new_tokens == 0 {
+            ar.phase = Phase::Finished(FinishReason::MaxTokens);
+        }
+        Ok(ar)
+    }
+
+    // ---- decode --------------------------------------------------------
+
+    /// Distinct allocations among active slots this round.
+    fn allocation_groups(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for s in self.slots.iter().flatten() {
+            let a = s.guard.allocation();
+            if !out.contains(&a) {
+                out.push(a);
+            }
+        }
+        out
+    }
+
+    fn decode_round(&mut self) -> Result<()> {
+        for alloc in self.allocation_groups() {
+            self.decode_group(alloc)?;
+        }
+        // Retire finished requests.
+        let b = self.slots.len();
+        for i in 0..b {
+            let done = matches!(
+                self.slots[i].as_ref().map(|s| s.phase),
+                Some(Phase::Finished(_))
+            );
+            if done {
+                let mut ar = self.slots[i].take().unwrap();
+                ar.cache.release(&mut self.pool);
+                self.finish(ar);
+            }
+        }
+        Ok(())
+    }
+
+    /// One batched decode step for every active slot on `alloc`.
+    fn decode_group(&mut self, alloc: &'static str) -> Result<()> {
+        let d = self.rt.dims;
+        let b = d.decode_batch;
+        let w = d.head_width();
+        let v = d.vocab_size;
+        let seq_floats = d.max_seq * w;
+
+        let members: Vec<usize> = (0..b)
+            .filter(|&i| {
+                self.slots[i]
+                    .as_ref()
+                    .map(|s| s.guard.allocation() == alloc && s.phase == Phase::Decoding)
+                    .unwrap_or(false)
+            })
+            .collect();
+        if members.is_empty() {
+            return Ok(());
+        }
+        self.metrics
+            .decode_batch_occupancy
+            .push(members.len());
+
+        // Assemble the dense batch caches from the paged pool.
+        self.kbatch.fill(0.0);
+        self.vbatch.fill(0.0);
+        let mut tokens = vec![self.sp.pad as i32; b];
+        let mut pos = vec![0i32; b];
+        for &i in &members {
+            let s = self.slots[i].as_ref().unwrap();
+            let p = s.tokens.len() - 1; // position of the token being fed
+            tokens[i] = *s.tokens.last().unwrap() as i32;
+            pos[i] = p as i32;
+            for l in 0..d.n_layers {
+                let off = (l * b + i) * seq_floats;
+                s.cache
+                    .fill_dense(&self.pool, l, false, &mut self.kbatch[off..off + seq_floats]);
+                s.cache
+                    .fill_dense(&self.pool, l, true, &mut self.vbatch[off..off + seq_floats]);
+            }
+        }
+
+        let t0 = Instant::now();
+        let (mut logits, mut kout, mut vout) = self
+            .rt
+            .decode(alloc, &tokens, &pos, &self.kbatch, &self.vbatch)
+            .context("decode")?;
+        self.metrics.decode_steps += 1;
+        self.metrics
+            .step_latency
+            .record(t0.elapsed().as_secs_f64());
+
+        // Guard pass: any member overflowing gets the whole group's step
+        // replayed under PASA (cache inputs unchanged — replay is exact).
+        let mut replay = false;
+        for &i in &members {
+            let row = &logits[i * v..(i + 1) * v];
+            let s = self.slots[i].as_mut().unwrap();
+            if s.guard.observe(row) {
+                replay = true;
+                self.metrics.guard_switches += 1;
+            }
+            if row.iter().any(|x| !x.is_finite()) {
+                self.metrics.overflow_steps += 1;
+            }
+        }
+        if replay {
+            let (l2, k2, v2) = self
+                .rt
+                .decode("pasa", &tokens, &pos, &self.kbatch, &self.vbatch)
+                .context("decode replay under PASA")?;
+            logits = l2;
+            kout = k2;
+            vout = v2;
+            self.metrics.decode_steps += 1;
+        }
+
+        // Write back the new KV row, sample, advance. The decode module
+        // returns only the new rows, shaped (L, B, W).
+        for &i in &members {
+            let s = self.slots[i].as_mut().unwrap();
+            let p = pos[i] as usize;
+            s.cache.ensure_capacity(&mut self.pool, p + 1)?;
+            for l in 0..d.n_layers {
+                let off = (l * b + i) * w;
+                let krow = kout[off..off + w].to_vec();
+                let vrow = vout[off..off + w].to_vec();
+                s.cache.write_row(&mut self.pool, l, p, &krow, &vrow);
+            }
+            let row = &logits[i * v..(i + 1) * v];
+            let tok = sample(row, s.req.params.sampling, &mut self.rng);
+            if s.first_token.is_none() {
+                s.first_token = Some(Instant::now());
+            }
+            s.tokens.push(tok);
+            self.metrics.tokens_generated += 1;
+
+            let generated = s.tokens.len() - s.prompt_len;
+            if s.req.params.stop_at_eos && tok == self.sp.eos {
+                s.phase = Phase::Finished(FinishReason::Eos);
+            } else if generated >= s.req.params.max_new_tokens {
+                s.phase = Phase::Finished(FinishReason::MaxTokens);
+            } else if s.tokens.len() >= d.max_seq {
+                s.phase = Phase::Finished(FinishReason::ContextFull);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, ar: ActiveRequest) {
+        let now = Instant::now();
+        let reason = match ar.phase {
+            Phase::Finished(r) => r,
+            _ => FinishReason::MaxTokens,
+        };
+        let queue_time = ar
+            .prefill_done
+            .map(|t| (t - ar.req.arrival).as_secs_f64())
+            .unwrap_or(0.0);
+        let ttft = ar
+            .first_token
+            .map(|t| (t - ar.req.arrival).as_secs_f64())
+            .unwrap_or(0.0);
+        let total = (now - ar.req.arrival).as_secs_f64();
+        self.metrics.ttft.record(ttft);
+        self.metrics.total_latency.record(total);
+        self.metrics.requests_completed += 1;
+        let gen_ids: Vec<u32> = ar.tokens[ar.prompt_len..].to_vec();
+        self.completions.push(Completion {
+            id: ar.req.id,
+            prompt: ar.req.prompt.clone(),
+            text: tokenizer::decode(&gen_ids, self.sp),
+            tokens: gen_ids,
+            reason,
+            prompt_tokens: ar.prompt_len,
+            queue_time,
+            prefill_time: queue_time,
+            first_token_latency: ttft,
+            total_latency: total,
+            allocation: ar.guard.allocation().to_string(),
+            guard_switches: ar.guard.switches,
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Adaptive PASA overflow guard (S11) — the paper's future-work feature
+//! ("it is also promising to design an adaptive mechanism to start PASA"),
+//! built here as a first-class coordinator policy.
+//!
+//! Policy: requests start on the fast partially-low-precision FA
+//! allocation; if a step's logits come back non-finite (the INF/NaN
+//! signature of a QKᵀ FP16 overflow), the step is *replayed* under PASA —
+//! safe because prefill/decode are functional (cache in → cache out) — and
+//! the request is pinned to PASA for its remaining lifetime.
+
+/// Which attention allocation the engine should run next for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GuardPolicy {
+    /// Always run PASA (the paper's robust default).
+    AlwaysPasa,
+    /// Always run partially-low-precision FA (fast but overflow-prone).
+    AlwaysFa16,
+    /// Full-precision FA reference.
+    AlwaysFa32,
+    /// Start on FA16-32, switch to PASA on overflow (sticky per request).
+    Adaptive,
+}
+
+impl GuardPolicy {
+    pub fn parse(s: &str) -> Option<GuardPolicy> {
+        match s {
+            "pasa" => Some(GuardPolicy::AlwaysPasa),
+            "fa16_32" | "fa16" => Some(GuardPolicy::AlwaysFa16),
+            "fa32" => Some(GuardPolicy::AlwaysFa32),
+            "adaptive" => Some(GuardPolicy::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request guard state.
+#[derive(Clone, Debug)]
+pub struct Guard {
+    policy: GuardPolicy,
+    pinned_pasa: bool,
+    pub switches: usize,
+}
+
+impl Guard {
+    pub fn new(policy: GuardPolicy) -> Guard {
+        Guard {
+            policy,
+            pinned_pasa: false,
+            switches: 0,
+        }
+    }
+
+    /// Allocation to use for the next step.
+    pub fn allocation(&self) -> &'static str {
+        match self.policy {
+            GuardPolicy::AlwaysPasa => "pasa",
+            GuardPolicy::AlwaysFa16 => "fa16_32",
+            GuardPolicy::AlwaysFa32 => "fa32",
+            GuardPolicy::Adaptive => {
+                if self.pinned_pasa {
+                    "pasa"
+                } else {
+                    "fa16_32"
+                }
+            }
+        }
+    }
+
+    /// Inspect a step's logits; returns true if the step must be replayed
+    /// under PASA (adaptive mode only).
+    pub fn observe(&mut self, logits: &[f32]) -> bool {
+        let overflowed = logits.iter().any(|x| !x.is_finite());
+        if !overflowed {
+            return false;
+        }
+        match self.policy {
+            GuardPolicy::Adaptive if !self.pinned_pasa => {
+                self.pinned_pasa = true;
+                self.switches += 1;
+                true
+            }
+            _ => false, // nothing left to switch to — surface the NaNs
+        }
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        self.pinned_pasa
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_switches_once_and_sticks() {
+        let mut g = Guard::new(GuardPolicy::Adaptive);
+        assert_eq!(g.allocation(), "fa16_32");
+        assert!(!g.observe(&[0.0, 1.0]));
+        assert_eq!(g.allocation(), "fa16_32");
+        assert!(g.observe(&[f32::NAN, 1.0])); // replay requested
+        assert_eq!(g.allocation(), "pasa");
+        assert_eq!(g.switches, 1);
+        // Further overflow (shouldn't happen under PASA) doesn't loop.
+        assert!(!g.observe(&[f32::INFINITY]));
+        assert_eq!(g.switches, 1);
+    }
+
+    #[test]
+    fn fixed_policies_never_switch() {
+        for (p, alloc) in [
+            (GuardPolicy::AlwaysPasa, "pasa"),
+            (GuardPolicy::AlwaysFa16, "fa16_32"),
+            (GuardPolicy::AlwaysFa32, "fa32"),
+        ] {
+            let mut g = Guard::new(p);
+            assert_eq!(g.allocation(), alloc);
+            assert!(!g.observe(&[f32::NAN]));
+            assert_eq!(g.allocation(), alloc);
+        }
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(GuardPolicy::parse("adaptive"), Some(GuardPolicy::Adaptive));
+        assert_eq!(GuardPolicy::parse("pasa"), Some(GuardPolicy::AlwaysPasa));
+        assert_eq!(GuardPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,324 @@
+//! Paged KV-cache manager (S11) — vLLM-style block allocator over host
+//! memory.
+//!
+//! The decode HLO consumes dense (L, B, max_seq, W) cache tensors, but the
+//! coordinator stores each request's KV in fixed-size *pages* (blocks of
+//! `page_tokens` token-rows), so resident memory is proportional to the
+//! tokens actually generated, admission is capacity-checked in pages, and
+//! shared prompt prefixes can be forked copy-on-write at page granularity.
+//! Dense tensors are assembled only at the batch boundary.
+
+use anyhow::{bail, Result};
+
+/// Identifier of one page in the pool arena.
+pub type PageId = u32;
+
+/// Fixed-capacity page pool. Each page holds `page_tokens` rows of
+/// `row_width` f32 (one layer's K *or* V slice of those tokens).
+pub struct KvPool {
+    pub page_tokens: usize,
+    pub row_width: usize,
+    arena: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<PageId>,
+    total_pages: usize,
+}
+
+impl KvPool {
+    pub fn new(total_pages: usize, page_tokens: usize, row_width: usize) -> KvPool {
+        KvPool {
+            page_tokens,
+            row_width,
+            arena: vec![0.0; total_pages * page_tokens * row_width],
+            refcount: vec![0; total_pages],
+            free: (0..total_pages as PageId).rev().collect(),
+            total_pages,
+        }
+    }
+
+    pub fn page_floats(&self) -> usize {
+        self.page_tokens * self.row_width
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.used_pages() as f64 / self.total_pages.max(1) as f64
+    }
+
+    fn alloc(&mut self) -> Result<PageId> {
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert_eq!(self.refcount[id as usize], 0);
+                self.refcount[id as usize] = 1;
+                // Fresh pages are zeroed: the PASA kernels' pseudo-average
+                // must not see stale garbage in masked positions.
+                let off = id as usize * self.page_floats();
+                let pf = self.page_floats();
+                self.arena[off..off + pf].fill(0.0);
+                Ok(id)
+            }
+            None => bail!("KV pool exhausted ({} pages)", self.total_pages),
+        }
+    }
+
+    fn retain(&mut self, id: PageId) {
+        self.refcount[id as usize] += 1;
+    }
+
+    fn release(&mut self, id: PageId) {
+        let rc = &mut self.refcount[id as usize];
+        assert!(*rc > 0, "double free of page {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    fn page(&self, id: PageId) -> &[f32] {
+        let off = id as usize * self.page_floats();
+        &self.arena[off..off + self.page_floats()]
+    }
+
+    fn page_mut(&mut self, id: PageId) -> &mut [f32] {
+        let off = id as usize * self.page_floats();
+        let pf = self.page_floats();
+        &mut self.arena[off..off + pf]
+    }
+}
+
+/// One sequence's paged cache: per layer, a page table for K and for V.
+#[derive(Clone, Debug, Default)]
+pub struct SeqCache {
+    /// pages[layer] = (k_pages, v_pages).
+    pages: Vec<(Vec<PageId>, Vec<PageId>)>,
+    pub len_tokens: usize,
+    n_layers: usize,
+}
+
+impl SeqCache {
+    pub fn new(n_layers: usize) -> SeqCache {
+        SeqCache {
+            pages: vec![(Vec::new(), Vec::new()); n_layers],
+            len_tokens: 0,
+            n_layers,
+        }
+    }
+
+    /// Pages needed (per layer, per K/V) for `tokens` rows.
+    fn pages_for(tokens: usize, page_tokens: usize) -> usize {
+        tokens.div_ceil(page_tokens)
+    }
+
+    /// Total pool pages this sequence would hold at `tokens` length.
+    pub fn pages_required(n_layers: usize, tokens: usize, page_tokens: usize) -> usize {
+        2 * n_layers * Self::pages_for(tokens, page_tokens)
+    }
+
+    /// Grow page tables to cover `tokens` rows, allocating from the pool.
+    pub fn ensure_capacity(&mut self, pool: &mut KvPool, tokens: usize) -> Result<()> {
+        let need = Self::pages_for(tokens, pool.page_tokens);
+        // Pre-check so a mid-way failure doesn't leak a partial grow.
+        let mut missing = 0usize;
+        for (kp, vp) in &self.pages {
+            missing += need.saturating_sub(kp.len()) + need.saturating_sub(vp.len());
+        }
+        if missing > pool.free_pages() {
+            bail!(
+                "KV pool exhausted: need {missing} pages, {} free",
+                pool.free_pages()
+            );
+        }
+        for (kp, vp) in &mut self.pages {
+            while kp.len() < need {
+                kp.push(pool.alloc()?);
+            }
+            while vp.len() < need {
+                vp.push(pool.alloc()?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write fork (prefix sharing): pages are shared, refcounted.
+    pub fn fork(&self, pool: &mut KvPool) -> SeqCache {
+        let mut out = self.clone();
+        for (kp, vp) in &mut out.pages {
+            for id in kp.iter().chain(vp.iter()) {
+                pool.retain(*id);
+            }
+        }
+        out
+    }
+
+    fn ensure_private(pool: &mut KvPool, id: &mut PageId) {
+        if pool.refcount[*id as usize] > 1 {
+            let copy: Vec<f32> = pool.page(*id).to_vec();
+            let fresh = pool.alloc().expect("CoW alloc");
+            pool.page_mut(fresh).copy_from_slice(&copy);
+            pool.release(*id);
+            *id = fresh;
+        }
+    }
+
+    /// Write one token's K and V rows for a layer at absolute position.
+    pub fn write_row(
+        &mut self,
+        pool: &mut KvPool,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let w = pool.row_width;
+        assert_eq!(k_row.len(), w);
+        assert_eq!(v_row.len(), w);
+        let (pg, off) = (pos / pool.page_tokens, pos % pool.page_tokens);
+        let (kp, vp) = &mut self.pages[layer];
+        let kid = &mut kp[pg];
+        Self::ensure_private(pool, kid);
+        let kid = *kid;
+        pool.page_mut(kid)[off * w..(off + 1) * w].copy_from_slice(k_row);
+        let vid = &mut vp[pg];
+        Self::ensure_private(pool, vid);
+        let vid = *vid;
+        pool.page_mut(vid)[off * w..(off + 1) * w].copy_from_slice(v_row);
+        self.len_tokens = self.len_tokens.max(pos + 1);
+    }
+
+    /// Assemble this sequence's K (or V) for `layer` into a dense
+    /// (max_seq, W) slice; positions beyond len are zeroed.
+    pub fn fill_dense(&self, pool: &KvPool, layer: usize, want_v: bool, out: &mut [f32]) {
+        let w = pool.row_width;
+        let pt = pool.page_tokens;
+        out.fill(0.0);
+        let (kp, vp) = &self.pages[layer];
+        let pages = if want_v { vp } else { kp };
+        let mut written = 0usize;
+        for (pi, &id) in pages.iter().enumerate() {
+            let rows = (self.len_tokens.saturating_sub(pi * pt)).min(pt);
+            if rows == 0 {
+                break;
+            }
+            let src = pool.page(id);
+            let dst_off = pi * pt * w;
+            if dst_off + rows * w > out.len() {
+                break; // dense buffer shorter than paged capacity
+            }
+            out[dst_off..dst_off + rows * w].copy_from_slice(&src[..rows * w]);
+            written += rows;
+        }
+        let _ = written;
+    }
+
+    /// Release all pages back to the pool.
+    pub fn release(&mut self, pool: &mut KvPool) {
+        for (kp, vp) in &mut self.pages {
+            for id in kp.drain(..).chain(vp.drain(..)) {
+                pool.release(id);
+            }
+        }
+        self.len_tokens = 0;
+    }
+
+    pub fn total_pages_held(&self) -> usize {
+        self.pages
+            .iter()
+            .map(|(k, v)| k.len() + v.len())
+            .sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> KvPool {
+        KvPool::new(64, 4, 8) // 64 pages, 4 tokens/page, width 8
+    }
+
+    #[test]
+    fn alloc_write_read_round_trip() {
+        let mut p = pool();
+        let mut s = SeqCache::new(2);
+        s.ensure_capacity(&mut p, 6).unwrap();
+        assert_eq!(s.total_pages_held(), 2 * 2 * 2); // 2 layers * K,V * 2 pages
+        let krow: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        s.write_row(&mut p, 1, 5, &krow, &vrow);
+        let mut dense = vec![1.0f32; 16 * 8];
+        s.fill_dense(&p, 1, false, &mut dense);
+        assert_eq!(&dense[5 * 8..6 * 8], krow.as_slice());
+        assert_eq!(&dense[..8], &[0.0; 8]); // untouched rows zeroed
+        s.fill_dense(&p, 1, true, &mut dense);
+        assert_eq!(&dense[5 * 8..6 * 8], vrow.as_slice());
+        s.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn capacity_exhaustion_is_clean() {
+        let mut p = KvPool::new(7, 4, 8); // too few pages for 2 layers x 2
+        let mut s = SeqCache::new(2);
+        let r = s.ensure_capacity(&mut p, 5); // needs 2 pages x4 = 8 > 7
+        assert!(r.is_err());
+        // Failed ensure must not leak pages.
+        assert_eq!(p.used_pages(), 0);
+        s.release(&mut p);
+    }
+
+    #[test]
+    fn fork_shares_then_copies_on_write() {
+        let mut p = pool();
+        let mut a = SeqCache::new(1);
+        a.ensure_capacity(&mut p, 4).unwrap();
+        let row = [7.0f32; 8];
+        a.write_row(&mut p, 0, 0, &row, &row);
+        let used_before = p.used_pages();
+        let mut b = a.fork(&mut p);
+        assert_eq!(p.used_pages(), used_before, "fork must not allocate");
+        // Writing through the fork triggers CoW — the original is intact.
+        let row2 = [9.0f32; 8];
+        b.write_row(&mut p, 0, 1, &row2, &row2);
+        assert!(p.used_pages() > used_before);
+        let mut da = vec![0.0; 4 * 8];
+        a.fill_dense(&p, 0, false, &mut da);
+        assert_eq!(&da[8..16], &[0.0; 8], "original must not see fork's write");
+        let mut db = vec![0.0; 4 * 8];
+        b.len_tokens = 2;
+        b.fill_dense(&p, 0, false, &mut db);
+        assert_eq!(&db[8..16], row2.as_slice());
+        assert_eq!(&db[..8], row.as_slice(), "fork sees shared prefix");
+        a.release(&mut p);
+        b.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn fresh_pages_are_zeroed() {
+        let mut p = pool();
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut p, 4).unwrap();
+        s.write_row(&mut p, 0, 0, &[5.0; 8], &[5.0; 8]);
+        s.release(&mut p);
+        // Reallocate: the recycled page must read as zeros.
+        let mut s2 = SeqCache::new(1);
+        s2.ensure_capacity(&mut p, 4).unwrap();
+        s2.len_tokens = 1;
+        let mut dense = vec![1.0; 4 * 8];
+        s2.fill_dense(&p, 0, false, &mut dense);
+        assert_eq!(&dense[..8], &[0.0; 8]);
+        s2.release(&mut p);
+    }
+}

@@ -1,0 +1,169 @@
+//! Serving metrics (S11): latency histograms, token counters, overflow
+//! switches — what the E2E example and bench harness report.
+
+use std::time::Instant;
+
+/// Streaming histogram with fixed log-spaced latency buckets (seconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>, // kept for exact percentiles at report time
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let bounds: Vec<f64> = (-4..=4).map(|e| 10f64.powi(e)).collect();
+        Histogram {
+            counts: vec![0; bounds.len() + 1],
+            bounds,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    pub decode_batch_occupancy: Vec<usize>,
+    pub guard_switches: u64,
+    pub overflow_steps: u64,
+    pub ttft: Histogram,       // time to first token
+    pub total_latency: Histogram,
+    pub step_latency: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            requests_completed: 0,
+            tokens_generated: 0,
+            prefill_tokens: 0,
+            decode_steps: 0,
+            decode_batch_occupancy: Vec::new(),
+            guard_switches: 0,
+            overflow_steps: 0,
+            ttft: Histogram::new(),
+            total_latency: Histogram::new(),
+            step_latency: Histogram::new(),
+        }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.tokens_generated as f64 / dt
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.decode_batch_occupancy.is_empty() {
+            return 0.0;
+        }
+        self.decode_batch_occupancy.iter().sum::<usize>() as f64
+            / self.decode_batch_occupancy.len() as f64
+    }
+
+    /// Human-readable serving report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} prefill_tokens={} steps={} occ={:.2} \
+             tok/s={:.1} ttft_mean={:.3}s ttft_p95={:.3}s lat_mean={:.3}s \
+             lat_p95={:.3}s step_mean={:.4}s guard_switches={} overflow_steps={}",
+            self.requests_completed,
+            self.tokens_generated,
+            self.prefill_tokens,
+            self.decode_steps,
+            self.mean_batch_occupancy(),
+            self.throughput_tok_s(),
+            self.ttft.mean(),
+            self.ttft.percentile(95.0),
+            self.total_latency.mean(),
+            self.total_latency.percentile(95.0),
+            self.step_latency.mean(),
+            self.guard_switches,
+            self.overflow_steps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 / 100.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.505).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 0.5).abs() < 0.02);
+        assert!((h.percentile(95.0) - 0.95).abs() < 0.02);
+        assert_eq!(h.max(), 1.0);
+    }
+
+    #[test]
+    fn metrics_report_nonempty() {
+        let mut m = Metrics::new();
+        m.requests_completed = 3;
+        m.tokens_generated = 42;
+        m.decode_batch_occupancy = vec![2, 4, 3];
+        m.ttft.record(0.1);
+        let r = m.report();
+        assert!(r.contains("requests=3"));
+        assert!(r.contains("occ=3.00"));
+    }
+}

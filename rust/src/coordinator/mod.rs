@@ -1,0 +1,16 @@
+//! L3 coordinator (S11): the serving system — router, paged KV cache,
+//! continuous-batching engine, adaptive PASA overflow guard, metrics.
+
+pub mod engine;
+pub mod guard;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use engine::{Engine, EngineConfig};
+pub use guard::{Guard, GuardPolicy};
+pub use kv_cache::{KvPool, SeqCache};
+pub use metrics::{Histogram, Metrics};
+pub use request::{Completion, FinishReason, GenParams, Phase, Priority, Request};
+pub use router::{Admission, Router};

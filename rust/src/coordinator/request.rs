@@ -1,0 +1,105 @@
+//! Request model (S11): what flows through the router → scheduler → engine.
+
+use crate::model::Sampling;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Generation parameters attached to a request.
+#[derive(Clone, Copy, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// Stop at EOS token.
+    pub stop_at_eos: bool,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 32,
+            sampling: Sampling::Greedy,
+            stop_at_eos: true,
+        }
+    }
+}
+
+/// Admission priority (higher first; FCFS within a class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Batch = 0,
+    Normal = 1,
+    Interactive = 2,
+}
+
+/// Why a request finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// Context window exhausted (hit max_seq).
+    ContextFull,
+    /// Rejected at admission (e.g. prompt too long).
+    Rejected,
+}
+
+/// Lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished(FinishReason),
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: String,
+    pub params: GenParams,
+    pub priority: Priority,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: impl Into<String>) -> Request {
+        Request {
+            id,
+            prompt: prompt.into(),
+            params: GenParams::default(),
+            priority: Priority::Normal,
+            arrival: Instant::now(),
+        }
+    }
+
+    pub fn with_params(mut self, params: GenParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+/// Completed request record.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub prompt: String,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub reason: FinishReason,
+    pub prompt_tokens: usize,
+    /// Wall times in seconds.
+    pub queue_time: f64,
+    pub prefill_time: f64,
+    pub first_token_latency: f64,
+    pub total_latency: f64,
+    /// Which attention allocation finished the request ("pasa", ...).
+    pub allocation: String,
+    /// How many times the overflow guard switched this request to PASA.
+    pub guard_switches: usize,
+}

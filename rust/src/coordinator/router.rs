@@ -1,0 +1,135 @@
+//! Request router (S11): admission control + priority/FCFS queueing.
+
+use super::request::{Request, RequestId};
+#[cfg(test)]
+use super::request::Priority;
+use std::collections::VecDeque;
+
+/// Admission verdict.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Queued,
+    /// Rejected with a reason (e.g. prompt longer than the prefill bucket).
+    Rejected(String),
+}
+
+/// Priority router: three FCFS lanes drained highest-priority-first.
+/// Backpressure: a configurable max queue depth rejects excess load
+/// instead of buffering unboundedly.
+pub struct Router {
+    lanes: [VecDeque<Request>; 3],
+    pub max_depth: usize,
+    pub max_prompt_bytes: usize,
+    next_id: RequestId,
+    total_admitted: u64,
+    total_rejected: u64,
+}
+
+impl Router {
+    pub fn new(max_depth: usize, max_prompt_bytes: usize) -> Router {
+        Router {
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            max_depth,
+            max_prompt_bytes,
+            next_id: 1,
+            total_admitted: 0,
+            total_rejected: 0,
+        }
+    }
+
+    pub fn fresh_id(&mut self) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Admit or reject a request.
+    pub fn submit(&mut self, req: Request) -> Admission {
+        if req.prompt.len() > self.max_prompt_bytes {
+            self.total_rejected += 1;
+            return Admission::Rejected(format!(
+                "prompt {}B exceeds {}B",
+                req.prompt.len(),
+                self.max_prompt_bytes
+            ));
+        }
+        if self.depth() >= self.max_depth {
+            self.total_rejected += 1;
+            return Admission::Rejected("queue full".into());
+        }
+        let lane = req.priority as usize;
+        self.lanes[lane].push_back(req);
+        self.total_admitted += 1;
+        Admission::Queued
+    }
+
+    /// Next request: highest priority lane first, FCFS within a lane.
+    pub fn pop(&mut self) -> Option<Request> {
+        for lane in (0..3).rev() {
+            if let Some(r) = self.lanes[lane].pop_front() {
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    pub fn depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.depth() == 0
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.total_admitted, self.total_rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(router: &mut Router, p: Priority) -> Request {
+        let id = router.fresh_id();
+        Request::new(id, "hi").with_priority(p)
+    }
+
+    #[test]
+    fn priority_order_then_fcfs() {
+        let mut r = Router::new(16, 1024);
+        let a = req(&mut r, Priority::Normal);
+        let b = req(&mut r, Priority::Interactive);
+        let c = req(&mut r, Priority::Normal);
+        let d = req(&mut r, Priority::Batch);
+        let (ia, ib, ic, id) = (a.id, b.id, c.id, d.id);
+        for x in [a, b, c, d] {
+            assert_eq!(r.submit(x), Admission::Queued);
+        }
+        assert_eq!(r.pop().unwrap().id, ib); // interactive first
+        assert_eq!(r.pop().unwrap().id, ia); // then FCFS normals
+        assert_eq!(r.pop().unwrap().id, ic);
+        assert_eq!(r.pop().unwrap().id, id); // batch last
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut r = Router::new(2, 1024);
+        for _ in 0..2 {
+            let x = req(&mut r, Priority::Normal);
+            assert_eq!(r.submit(x), Admission::Queued);
+        }
+        let x = req(&mut r, Priority::Normal);
+        assert!(matches!(r.submit(x), Admission::Rejected(_)));
+        assert_eq!(r.stats(), (2, 1));
+    }
+
+    #[test]
+    fn oversized_prompt_rejected() {
+        let mut r = Router::new(4, 8);
+        let id = r.fresh_id();
+        let x = Request::new(id, "a very long prompt indeed");
+        assert!(matches!(r.submit(x), Admission::Rejected(_)));
+    }
+}

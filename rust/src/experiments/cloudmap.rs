@@ -1,0 +1,161 @@
+//! Figures 7 and 11–14: distribution/range statistics of the model-shaped
+//! overflow traces (Qwen2, SVD-IMG2VID substitutes), before and after the
+//! PASA preprocessing.
+
+use super::ExpOptions;
+use crate::attention::{preprocess_k, shifting_matrix, PAPER_BETA};
+use crate::numerics::{finite_range, Format};
+use crate::tensor::{matmul_nt, GemmPrecision, Matrix};
+use crate::workloads::{all_traces, TraceSpec};
+
+fn trace_by_name(name: &str, scale: usize) -> Option<TraceSpec> {
+    all_traces(scale).into_iter().find(|t| t.name == name)
+}
+
+/// Fig. 7: center-line sampling of Q and K along head and sequence dims
+/// for the SVD trace — oscillation along the head dim, bias along the
+/// sequence dim, and the post-PASA collapse.
+pub fn fig7(opts: &ExpOptions) -> String {
+    let t = trace_by_name("svd-img2vid", opts.trace_scale.max(4)).unwrap();
+    let case = t.generate(opts.seed);
+    let mid_row = case.k.rows / 2;
+    let mid_col = case.k.cols / 2;
+    let head_line: Vec<f32> = (0..case.k.cols.min(16))
+        .map(|j| case.k.at(mid_row, j))
+        .collect();
+    let seq_line: Vec<f32> = (0..8).map(|i| case.k.at(i * case.k.rows / 8, mid_col)).collect();
+    // Post-PASA K'.
+    let alpha = (case.k.cols as f64).sqrt();
+    let bs = 128.min(case.k.rows);
+    let m = shifting_matrix(bs, alpha, PAPER_BETA, Format::F16);
+    let kp0 = preprocess_k(&case.k.rows_slice(0, bs), &m, GemmPrecision::ACC32_STORE16);
+    let head_line_p: Vec<f32> = (0..kp0.cols.min(16)).map(|j| kp0.at(bs / 2, j)).collect();
+    let fmt = |v: &[f32]| -> String {
+        v.iter().map(|x| format!("{x:.2}")).collect::<Vec<_>>().join(", ")
+    };
+    format!(
+        "# Fig 7 — Center-line Q/K Distribution (SVD-IMG2VID trace)\n\
+         K along head dim (oscillation):   [{}]\n\
+         K along seq dim (shared bias):    [{}]\n\
+         K' along head dim (post-PASA):    [{}]\n\
+         K range before: {:?}  after: {:?}\n",
+        fmt(&head_line),
+        fmt(&seq_line),
+        fmt(&head_line_p),
+        finite_range(&case.k.data),
+        finite_range(&kp0.data),
+    )
+}
+
+/// Figures 11–14: min/max cloud-map ranges for Q, K (figs 11–12) and the
+/// raw vs PASA-preprocessed score matrices (figs 13–14), compared against
+/// the paper's reported ranges.
+pub fn fig_cloud(name: &str, scores: bool, opts: &ExpOptions) -> String {
+    let t = trace_by_name(name, opts.trace_scale).unwrap();
+    let case = t.generate(opts.seed);
+    let c = crate::attention::to_fp16_inputs(&case);
+    let alpha = (c.k.cols as f64).sqrt();
+    if !scores {
+        let (qlo, qhi) = finite_range(&c.q.data);
+        let (klo, khi) = finite_range(&c.k.data);
+        let m = shifting_matrix(128, alpha, PAPER_BETA, Format::F16);
+        let kp = preprocess_blocks(&c.k, &m, 128);
+        let (plo, phi) = finite_range(&kp.data);
+        return format!(
+            "# Fig 11/12 — Q/K Cloud-map Ranges ({name}, shape {:?})\n\
+             | tensor | measured range | paper range |\n\
+             | Q | [{qlo:.2}, {qhi:.2}] | (not reported) |\n\
+             | K | [{klo:.2}, {khi:.2}] | [{:.2}, {:.2}] |\n\
+             | K' (post-PASA) | [{plo:.3}, {phi:.3}] | reduced ~25-30x |\n",
+            t.full_shape, t.paper_k_range.0, t.paper_k_range.1,
+        );
+    }
+    // Score matrices: raw S vs preprocessed S' (per-block shift).
+    let s = matmul_nt(&c.q, &c.k, GemmPrecision::F32);
+    let (slo, shi) = finite_range(&s.data);
+    let m = shifting_matrix(128, alpha, PAPER_BETA, Format::F16);
+    let kp = preprocess_blocks(&c.k, &m, 128);
+    let sp = matmul_nt(&c.q, &kp, GemmPrecision::ACC32_STORE16);
+    let (plo, phi) = finite_range(&sp.data);
+    let fp16_ok = plo > -65504.0 && phi < 65504.0;
+    format!(
+        "# Fig 13/14 — Score Matrix Ranges ({name})\n\
+         | matrix | measured range | paper range | fits FP16? |\n\
+         | S = QK^T (raw) | [{slo:.0}, {shi:.0}] | [{:.0}, {:.0}] | {} |\n\
+         | S' (post-PASA) | [{plo:.1}, {phi:.1}] | [{:.0}, {:.0}] | {} |\n",
+        t.paper_s_range.0,
+        t.paper_s_range.1,
+        if slo > -65504.0 && shi < 65504.0 { "yes" } else { "NO (overflow)" },
+        t.paper_s_range_pasa.0,
+        t.paper_s_range_pasa.1,
+        if fp16_ok { "yes" } else { "NO" },
+    )
+}
+
+/// Apply M per 128-row block of K (ragged tail gets its own M).
+fn preprocess_blocks(k: &Matrix, m128: &Matrix, bs: usize) -> Matrix {
+    let alpha = (k.cols as f64).sqrt();
+    let mut out = Matrix::zeros(k.rows, k.cols);
+    let mut r0 = 0;
+    while r0 < k.rows {
+        let r1 = (r0 + bs).min(k.rows);
+        let kb = k.rows_slice(r0, r1);
+        let kp = if r1 - r0 == bs {
+            preprocess_k(&kb, m128, GemmPrecision::ACC32_STORE16)
+        } else {
+            let mt = shifting_matrix(r1 - r0, alpha, PAPER_BETA, Format::F16);
+            preprocess_k(&kb, &mt, GemmPrecision::ACC32_STORE16)
+        };
+        for (i, r) in (r0..r1).enumerate() {
+            out.row_mut(r).copy_from_slice(kp.row(i));
+        }
+        r0 = r1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> ExpOptions {
+        ExpOptions {
+            trace_scale: 16,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn qwen2_scores_overflow_then_fit_after_pasa() {
+        let opts = fast_opts();
+        let rep = fig_cloud("qwen2-7b", true, &opts);
+        assert!(rep.contains("NO (overflow)"), "{rep}");
+        // the post-PASA row must fit
+        let last = rep.lines().last().unwrap();
+        assert!(last.contains("| yes |"), "{rep}");
+    }
+
+    #[test]
+    fn svd_scores_overflow_then_fit_after_pasa() {
+        let opts = fast_opts();
+        let rep = fig_cloud("svd-img2vid", true, &opts);
+        assert!(rep.contains("NO (overflow)"), "{rep}");
+        let last = rep.lines().last().unwrap();
+        assert!(last.contains("| yes |"), "{rep}");
+    }
+
+    #[test]
+    fn k_range_collapses() {
+        let opts = fast_opts();
+        let rep = fig_cloud("qwen2-7b", false, &opts);
+        assert!(rep.contains("K'"), "{rep}");
+    }
+
+    #[test]
+    fn fig7_reports_lines() {
+        let rep = fig7(&fast_opts());
+        assert!(rep.contains("K along head dim"));
+        assert!(rep.contains("post-PASA"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Experiment harness (S16): regenerates every table and figure of the
+//! paper's evaluation. Each experiment prints the same rows/series the
+//! paper reports; EXPERIMENTS.md records paper-vs-measured shape checks.
+//!
+//! Index (see DESIGN.md §4):
+//!   table1  — data-format ranges            (paper Table 1)
+//!   table3  — invariance under β            (paper Table 3)
+//!   table4  — NaN percentages               (paper Table 4)
+//!   fig5    — shifting reduces mean+amplitude (paper Fig. 5)
+//!   fig6    — resonance categories          (paper Fig. 6)
+//!   fig7    — center-line Q/K distributions (paper Fig. 7)
+//!   fig9a/b — RMSE sweeps, uniform          (paper Fig. 9)
+//!   fig10a/b— RMSE sweeps, hybrid           (paper Fig. 10)
+//!   fig11..14 — cloud-map ranges, Qwen2/SVD (paper Figs. 11–14)
+
+pub mod cloudmap;
+pub mod resonance_demo;
+pub mod rmse_sweep;
+pub mod shifting_stats;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+/// Common options for the experiment harness.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Heads per random benchmark case (paper: 16; fewer is faster with
+    /// identical per-head distribution).
+    pub heads: usize,
+    /// Sequence length for random benchmarks (paper: 1280).
+    pub seq: usize,
+    /// Head dim for random benchmarks (paper: 128).
+    pub dim: usize,
+    /// Model-trace sequence divisor (1 = the paper's full 5676/9216).
+    pub trace_scale: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            heads: 4,
+            seq: 1280,
+            dim: 128,
+            trace_scale: 4,
+            seed: 42,
+        }
+    }
+}
+
+/// Run one experiment by id; returns the printed report.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<String> {
+    Ok(match id {
+        "table1" => tables::table1(),
+        "table3" => tables::table3(),
+        "table4" => tables::table4(opts),
+        "fig5" => shifting_stats::fig5(opts),
+        "fig6" => resonance_demo::fig6(opts),
+        "fig7" => cloudmap::fig7(opts),
+        "fig9a" => rmse_sweep::fig9a(opts),
+        "fig9b" => rmse_sweep::fig9b(opts),
+        "fig10a" => rmse_sweep::fig10a(opts),
+        "fig10b" => rmse_sweep::fig10b(opts),
+        "fig11" => cloudmap::fig_cloud("qwen2-7b", false, opts),
+        "fig12" => cloudmap::fig_cloud("svd-img2vid", false, opts),
+        "fig13" => cloudmap::fig_cloud("qwen2-7b", true, opts),
+        "fig14" => cloudmap::fig_cloud("svd-img2vid", true, opts),
+        "all" => {
+            let mut out = String::new();
+            for id in ALL_EXPERIMENTS {
+                out.push_str(&run(id, opts)?);
+                out.push('\n');
+            }
+            out
+        }
+        _ => bail!("unknown experiment id {id}; known: {ALL_EXPERIMENTS:?}"),
+    })
+}
+
+pub const ALL_EXPERIMENTS: [&str; 14] = [
+    "table1", "table3", "table4", "fig5", "fig6", "fig7", "fig9a", "fig9b", "fig10a", "fig10b",
+    "fig11", "fig12", "fig13", "fig14",
+];

@@ -1,0 +1,184 @@
+//! Figures 9 and 10: relative-RMSE comparison of the three precision
+//! allocations (FA-FP32, FA-FP16/FP32, PASA-FP16) over the random
+//! benchmark distributions. Multi-threaded over heads (each head is an
+//! independent case, like the paper's (1, 16, 1280, 128) tensor).
+
+use super::ExpOptions;
+use crate::attention::{
+    naive_attention_f32, run_attention, to_fp16_inputs, Allocation, AttentionConfig,
+};
+use crate::numerics::relative_rmse;
+use crate::workloads::{gen_multihead, Distribution};
+
+/// RMSE (mean over heads) for one allocation on one distribution;
+/// NaN if any head overflowed (the paper plots a "NAN" marker).
+pub fn rmse_for(dist: Distribution, alloc: Allocation, opts: &ExpOptions) -> f64 {
+    let mh = gen_multihead(dist, opts.heads, opts.seq, opts.dim, opts.seed);
+    let cfg = AttentionConfig::new(alloc);
+    // One thread per head: the low-precision emulation is CPU-bound.
+    let errs: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = mh
+            .heads
+            .iter()
+            .map(|case| {
+                let cfg = cfg;
+                scope.spawn(move || {
+                    let c = to_fp16_inputs(case);
+                    let golden = naive_attention_f32(&c);
+                    let o = run_attention(&c, &cfg);
+                    relative_rmse(&o.data, &golden.data)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    if errs.iter().any(|e| e.is_nan()) {
+        f64::NAN
+    } else {
+        errs.iter().sum::<f64>() / errs.len() as f64
+    }
+}
+
+const ALLOCS: [Allocation; 3] = [Allocation::Fa32, Allocation::Fa16_32, Allocation::Pasa16];
+
+fn sweep(title: &str, dists: &[(f64, Distribution)], xlabel: &str, opts: &ExpOptions) -> String {
+    let mut out = format!("# {title}\n| {xlabel} | FA(FP32) | FA(FP16-FP32) | PASA(FP16) |\n");
+    for (x, dist) in dists {
+        let mut row = format!("| {x} |");
+        for alloc in ALLOCS {
+            let e = rmse_for(*dist, alloc, opts);
+            if e.is_nan() {
+                row.push_str(" NAN |");
+            } else {
+                row.push_str(&format!(" {e:.3e} |"));
+            }
+        }
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 9(a): uniform, Am = 0.5 fixed, mean x0 swept.
+pub fn fig9a(opts: &ExpOptions) -> String {
+    let xs = [0.0, 1.0, 5.0, 10.0, 20.0, 30.0];
+    let dists: Vec<(f64, Distribution)> = xs
+        .iter()
+        .map(|&x0| (x0, Distribution::Uniform { x0, am: 0.5 }))
+        .collect();
+    sweep(
+        "Fig 9(a) — RMSE, uniform, Am=0.5, varying mean x0",
+        &dists,
+        "x0",
+        opts,
+    )
+}
+
+/// Fig. 9(b): uniform, x0 = 20 fixed, amplitude Am swept.
+pub fn fig9b(opts: &ExpOptions) -> String {
+    let ams = [0.5, 1.0, 5.0, 10.0, 15.0, 20.0];
+    let dists: Vec<(f64, Distribution)> = ams
+        .iter()
+        .map(|&am| (am, Distribution::Uniform { x0: 20.0, am }))
+        .collect();
+    sweep(
+        "Fig 9(b) — RMSE, uniform, x0=20, varying amplitude Am",
+        &dists,
+        "Am",
+        opts,
+    )
+}
+
+/// Fig. 10(a): hybrid normal–Bernoulli, Am = 10 fixed, x0 swept.
+pub fn fig10a(opts: &ExpOptions) -> String {
+    let xs = [0.0, 1.0, 5.0, 10.0, 20.0, 30.0];
+    let dists: Vec<(f64, Distribution)> = xs
+        .iter()
+        .map(|&x0| {
+            (
+                x0,
+                Distribution::Hybrid {
+                    x0,
+                    am: 10.0,
+                    p: 0.001,
+                },
+            )
+        })
+        .collect();
+    sweep(
+        "Fig 10(a) — RMSE, hybrid, Am=10, varying mean x0",
+        &dists,
+        "x0",
+        opts,
+    )
+}
+
+/// Fig. 10(b): hybrid, x0 = 20 fixed, Am swept.
+pub fn fig10b(opts: &ExpOptions) -> String {
+    let ams = [10.0, 20.0, 50.0, 100.0];
+    let dists: Vec<(f64, Distribution)> = ams
+        .iter()
+        .map(|&am| {
+            (
+                am,
+                Distribution::Hybrid {
+                    x0: 20.0,
+                    am,
+                    p: 0.001,
+                },
+            )
+        })
+        .collect();
+    sweep(
+        "Fig 10(b) — RMSE, hybrid, x0=20, varying amplitude Am",
+        &dists,
+        "Am",
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> ExpOptions {
+        ExpOptions {
+            heads: 1,
+            seq: 256,
+            dim: 128,
+            trace_scale: 16,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn fig9a_shape_matches_paper() {
+        // Paper: overflow (NaN) appears at x0=30 only for FA(FP16-FP32);
+        // PASA and FA(FP32) never overflow; PASA beats FA16-32 on biased
+        // data but is behind FA(FP32).
+        let opts = fast_opts();
+        let x30 = Distribution::Uniform { x0: 30.0, am: 0.5 };
+        assert!(rmse_for(x30, Allocation::Fa16_32, &opts).is_nan());
+        let p = rmse_for(x30, Allocation::Pasa16, &opts);
+        let f32e = rmse_for(x30, Allocation::Fa32, &opts);
+        assert!(!p.is_nan() && !f32e.is_nan());
+        assert!(f32e < p, "FA32 {f32e} should beat PASA {p}");
+        let x10 = Distribution::Uniform { x0: 10.0, am: 0.5 };
+        let e_fa = rmse_for(x10, Allocation::Fa16_32, &opts);
+        let e_p = rmse_for(x10, Allocation::Pasa16, &opts);
+        assert!(e_p < e_fa, "PASA {e_p} should beat FA16-32 {e_fa} at x0=10");
+    }
+
+    #[test]
+    fn fig10b_overflow_at_large_amplitude() {
+        // Paper: hybrid x0=20 overflows FA(FP16-FP32) for Am >= ~20.
+        let opts = fast_opts();
+        let big = Distribution::Hybrid {
+            x0: 20.0,
+            am: 100.0,
+            p: 0.001,
+        };
+        assert!(rmse_for(big, Allocation::Fa16_32, &opts).is_nan());
+        assert!(!rmse_for(big, Allocation::Pasa16, &opts).is_nan());
+    }
+}

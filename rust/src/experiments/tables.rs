@@ -1,0 +1,148 @@
+//! Tables 1, 3 and 4 of the paper.
+
+use super::ExpOptions;
+use crate::attention::{beta, flash_attention, Allocation, AttentionConfig};
+use crate::numerics::{nan_percentage, Format};
+use crate::workloads::{gen_multihead, Distribution};
+
+/// Table 1: range and precision for the data formats.
+pub fn table1() -> String {
+    let mut out = String::from(
+        "# Table 1 — Range and Precision for Different Data Formats\n\
+         | Format | Precision | Overflow Boundary |\n",
+    );
+    for fmt in [Format::F8E4M3, Format::F16, Format::Bf16, Format::F32] {
+        out.push_str(&format!(
+            "| {} | {:.3e} | {:.5e} |\n",
+            fmt.name(),
+            fmt.eps(),
+            fmt.overflow_boundary()
+        ));
+    }
+    out
+}
+
+/// Table 3: invariance parameters under initial vs optimized β (FP16,
+/// n = 128 — the paper's setting).
+pub fn table3() -> String {
+    let mut out = String::from(
+        "# Table 3 — Invariance under Initial and Optimized beta (FP16, n=128)\n\
+         | init beta | Inva | Inva1 | rel err | opt beta | Inva | Inva1 | rel err |\n",
+    );
+    for row in beta::table3(128, Format::F16) {
+        out.push_str(&format!(
+            "| {:.6} | {:.4} | {:.4} | {:.2}% | {:.6} | {:.4} | {:.4} | {:.2}% |\n",
+            row.initial_beta,
+            row.inva_initial,
+            row.inva1_initial,
+            100.0 * row.rel_err_initial,
+            row.optimized_beta,
+            row.inva_optimized,
+            row.inva1_optimized,
+            100.0 * row.rel_err_optimized,
+        ));
+    }
+    out
+}
+
+/// Table 4: NaN percentages of the FA(FP16-FP32) output for the paper's
+/// six overflow cases (uniform & hybrid distributions).
+pub fn table4(opts: &ExpOptions) -> String {
+    let cases = [
+        ("Uniform", Distribution::Uniform { x0: 30.0, am: 0.5 }),
+        ("Uniform", Distribution::Uniform { x0: 20.0, am: 15.0 }),
+        ("Uniform", Distribution::Uniform { x0: 20.0, am: 20.0 }),
+        (
+            "Hybrid",
+            Distribution::Hybrid {
+                x0: 30.0,
+                am: 10.0,
+                p: 0.001,
+            },
+        ),
+        (
+            "Hybrid",
+            Distribution::Hybrid {
+                x0: 20.0,
+                am: 50.0,
+                p: 0.001,
+            },
+        ),
+        (
+            "Hybrid",
+            Distribution::Hybrid {
+                x0: 20.0,
+                am: 100.0,
+                p: 0.001,
+            },
+        ),
+    ];
+    let cfg = AttentionConfig::new(Allocation::Fa16_32);
+    let mut out = String::from(
+        "# Table 4 — NaN Percentages of FA(FP16-FP32) Output\n\
+         | # | Distribution | x0 | Am | NaN % | overflow? |\n",
+    );
+    for (i, (kind, dist)) in cases.iter().enumerate() {
+        let mh = gen_multihead(*dist, opts.heads, opts.seq, opts.dim, opts.seed + i as u64);
+        let mut nan_total = 0.0;
+        let mut n = 0usize;
+        for case in &mh.heads {
+            let c = crate::attention::to_fp16_inputs(case);
+            let o = flash_attention(&c, &cfg);
+            nan_total += nan_percentage(&o.data) * o.data.len() as f64 / 100.0;
+            n += o.data.len();
+        }
+        let pct = 100.0 * nan_total / n as f64;
+        let (x0, am) = match dist {
+            Distribution::Uniform { x0, am } => (*x0, *am),
+            Distribution::Hybrid { x0, am, .. } => (*x0, *am),
+        };
+        out.push_str(&format!(
+            "| {} | {kind} | {x0} | {am} | {pct:.2}% | {} |\n",
+            i + 1,
+            if pct > 0.0 { "YES" } else { "no" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_paper_rows() {
+        let t = table1();
+        assert!(t.contains("FP16"));
+        assert!(t.contains("6.55040e4"), "{t}");
+        assert!(t.contains("4.48000e2"), "{t}");
+    }
+
+    #[test]
+    fn table3_optimized_error_is_zero() {
+        let t = table3();
+        // every optimized rel-err column reads 0.00%
+        let zero_cols = t.matches("| 0.00% |\n").count();
+        assert_eq!(zero_cols, 6, "table:\n{t}");
+    }
+
+    #[test]
+    fn table4_overflow_pattern_matches_paper() {
+        // The paper's six cases all overflow at (1, 16, 1280, 128); at the
+        // reduced test size the low-probability-outlier cases (2, 5: tiny
+        // NaN percentages of 0.12%/0.04% in the paper) may not trigger,
+        // so require the strong cases and the 100% saturation of case 1.
+        let opts = ExpOptions {
+            heads: 1,
+            seq: 640,
+            dim: 128,
+            ..Default::default()
+        };
+        let t = table4(&opts);
+        assert!(t.matches("YES").count() >= 4, "table:\n{t}");
+        let line1 = t.lines().find(|l| l.starts_with("| 1 |")).unwrap();
+        assert!(line1.contains("100.00%"), "{line1}");
+        let line4 = t.lines().find(|l| l.starts_with("| 4 |")).unwrap();
+        assert!(line4.contains("100.00%"), "{line4}");
+    }
+}

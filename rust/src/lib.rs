@@ -1,0 +1,27 @@
+//! # PASA — Online Pseudo-average Shifting Attention
+//!
+//! Production-style reproduction of *"Online Pseudo-average Shifting
+//! Attention (PASA) for Robust Low-precision LLM Inference: Algorithms and
+//! Numerical Analysis"* (Cheng et al., 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas flash/PASA kernels (`python/compile/kernels/`),
+//! * **L2** — JAX transformer, AOT-lowered to HLO text (`python/compile/`),
+//! * **L3** — this crate: the serving coordinator, the PJRT runtime that
+//!   executes the AOT artifacts, and the bit-exact FP16 attention lab that
+//!   regenerates every table and figure of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod model;
+pub mod numerics;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod workloads;

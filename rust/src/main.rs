@@ -1,0 +1,156 @@
+//! `pasa` — leader entrypoint / CLI (S13).
+//!
+//! Subcommands:
+//!   repro      — regenerate a paper table/figure (see DESIGN.md §4)
+//!   serve      — run the serving engine on a synthetic request workload
+//!   solve-beta — solve the optimal accuracy condition (Eq. 16/22)
+//!   info       — print the artifact manifest and model dims
+//!   help
+
+use anyhow::{bail, Result};
+use pasa::attention::beta;
+use pasa::cli::Args;
+use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request};
+use pasa::experiments::{self, ExpOptions};
+use pasa::model::Sampling;
+use pasa::numerics::Format;
+use pasa::runtime::ModelRuntime;
+use std::path::Path;
+
+const HELP: &str = "\
+pasa — Online Pseudo-average Shifting Attention (paper reproduction)
+
+USAGE: pasa <subcommand> [flags]
+
+  repro --exp <id|all> [--heads N] [--seq N] [--dim N] [--scale N] [--seed N]
+        regenerate a paper table/figure (table1 table3 table4 fig5 fig6
+        fig7 fig9a fig9b fig10a fig10b fig11 fig12 fig13 fig14)
+  serve [--artifacts DIR] [--requests N] [--policy pasa|fa16_32|fa32|adaptive]
+        [--max-new N] [--temperature T]
+        run the serving engine over a synthetic prompt workload
+  solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
+        solve the optimal accuracy condition
+  info  [--artifacts DIR]
+        print the artifact manifest and model dims
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "repro" => cmd_repro(&args),
+        "serve" => cmd_serve(&args),
+        "solve-beta" => cmd_solve_beta(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}\n{HELP}"),
+    }
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let opts = ExpOptions {
+        heads: args.get_usize("heads", 4)?,
+        seq: args.get_usize("seq", 1280)?,
+        dim: args.get_usize("dim", 128)?,
+        trace_scale: args.get_usize("scale", 4)?,
+        seed: args.get_usize("seed", 42)? as u64,
+    };
+    let id = args.get_or("exp", "all");
+    let report = experiments::run(&id, &opts)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let n_requests = args.get_usize("requests", 8)?;
+    let max_new = args.get_usize("max-new", 24)?;
+    let temp = args.get_f64("temperature", 0.0)?;
+    let policy = GuardPolicy::parse(&args.get_or("policy", "adaptive"))
+        .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+
+    let rt = ModelRuntime::load(Path::new(&dir))?;
+    let mut cfg = EngineConfig::default();
+    cfg.policy = policy;
+    let mut eng = Engine::new(&rt, cfg);
+
+    let prompts = synthetic_prompts(n_requests);
+    let sampling = if temp > 0.0 {
+        Sampling::Temperature(temp as f32)
+    } else {
+        Sampling::Greedy
+    };
+    for p in prompts {
+        let id = eng.fresh_id();
+        let req = Request::new(id, p).with_params(GenParams {
+            max_new_tokens: max_new,
+            sampling,
+            stop_at_eos: true,
+        });
+        eng.submit(req);
+    }
+    let comps = eng.run_to_completion()?;
+    for c in &comps {
+        println!(
+            "[{:>3}] {:?} -> {:?} ({:?}, alloc={}, ttft={:.3}s)",
+            c.id, c.prompt, c.text, c.reason, c.allocation, c.first_token_latency
+        );
+    }
+    println!("\n{}", eng.metrics.report());
+    println!("kv pool utilization at end: {:.3}", eng.kv_utilization());
+    Ok(())
+}
+
+/// Prompts drawn from the training corpus templates (so a trained model
+/// produces meaningful continuations).
+pub fn synthetic_prompts(n: usize) -> Vec<String> {
+    let words = ["zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine"];
+    (0..n)
+        .map(|i| match i % 3 {
+            0 => format!("math: {} plus {} equals", i % 5, (i * 7 + 2) % 5),
+            1 => format!("count up: {}", words[i % 6]),
+            _ => format!("recall {} maps to", words[(i * 3) % 10]),
+        })
+        .collect()
+}
+
+fn cmd_solve_beta(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 128)?;
+    let init = args.get_f64("init", 1.0 - 2f64.powi(-6))?;
+    let fmt = match args.get_or("fmt", "fp16").as_str() {
+        "fp16" => Format::F16,
+        "bf16" => Format::Bf16,
+        other => bail!("unknown --fmt {other}"),
+    };
+    let b = beta::solve_optimal_beta(init, n, fmt, 1e-10, 500);
+    println!("optimal beta for n={n}, {}: {b:.6}", fmt.name());
+    println!(
+        "  ideal invariant     beta/(1-beta) = {:.6}",
+        beta::ideal_invariant(b)
+    );
+    println!(
+        "  practical invariant (Eq. 20)      = {:.6}",
+        beta::practical_invariant(b, n, fmt)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let m = pasa::model::Manifest::load(Path::new(&dir))?;
+    println!("model dims: {:?}", m.dims);
+    println!("modules:");
+    for e in &m.modules {
+        println!(
+            "  {:<18} kind={:<8} attention={:<8} {}",
+            e.name,
+            e.kind,
+            e.attention,
+            e.path.display()
+        );
+    }
+    println!("parameters: {} tensors", m.params.len());
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Serving-model configuration, parsed from `artifacts/manifest.txt`
+//! (the L2 AOT pipeline's contract — see python/compile/aot.py).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleEntry {
+    pub name: String,
+    pub path: PathBuf,
+    /// "prefill" | "decode" | "head".
+    pub kind: String,
+    /// "pasa" | "fa16_32" | "fa32".
+    pub attention: String,
+    pub attrs: HashMap<String, i64>,
+}
+
+/// Model architecture constants (mirror of python ModelConfig).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    pub decode_batch: usize,
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+}
+
+impl ModelDims {
+    pub fn head_width(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+}
+
+/// Parsed manifest: modules, parameter inventory, dims.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub modules: Vec<ModuleEntry>,
+    /// (name, dims) in the canonical parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub dims: ModelDims,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut modules = Vec::new();
+        let mut params = Vec::new();
+        let mut config: HashMap<String, i64> = HashMap::new();
+        for line in text.lines() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.first() {
+                Some(&"module") => {
+                    if parts.len() < 4 {
+                        bail!("bad module line: {line}");
+                    }
+                    let mut attrs = HashMap::new();
+                    let mut kind = String::new();
+                    let mut attention = String::new();
+                    for kv in &parts[3..] {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| anyhow!("bad attr {kv}"))?;
+                        match k {
+                            "kind" => kind = v.to_string(),
+                            "attention" => attention = v.to_string(),
+                            _ => {
+                                attrs.insert(k.to_string(), v.parse()?);
+                            }
+                        }
+                    }
+                    modules.push(ModuleEntry {
+                        name: parts[1].to_string(),
+                        path: dir.join(parts[2]),
+                        kind,
+                        attention,
+                        attrs,
+                    });
+                }
+                Some(&"param") => {
+                    let dims = if parts[2] == "scalar" {
+                        vec![]
+                    } else {
+                        parts[2]
+                            .split('x')
+                            .map(|d| d.parse().map_err(|e| anyhow!("bad dim {d}: {e}")))
+                            .collect::<Result<Vec<usize>>>()?
+                    };
+                    params.push((parts[1].to_string(), dims));
+                }
+                Some(&"config") => {
+                    for kv in &parts[1..] {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| anyhow!("bad config attr {kv}"))?;
+                        config.insert(k.to_string(), v.parse()?);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            Ok(*config.get(k).ok_or_else(|| anyhow!("config missing {k}"))? as usize)
+        };
+        let dims = ModelDims {
+            vocab_size: get("vocab_size")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_head: get("d_head")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            prefill_seq: get("prefill_seq")?,
+            decode_batch: get("decode_batch")?,
+            pad: get("pad")? as u32,
+            bos: get("bos")? as u32,
+            eos: get("eos")? as u32,
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            modules,
+            params,
+            dims,
+        })
+    }
+
+    /// Find a module by kind + attention allocation.
+    pub fn module(&self, kind: &str, attention: &str) -> Result<&ModuleEntry> {
+        self.modules
+            .iter()
+            .find(|m| m.kind == kind && m.attention == attention)
+            .ok_or_else(|| anyhow!("no module kind={kind} attention={attention}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "module prefill_pasa prefill_pasa.hlo.txt kind=prefill attention=pasa batch=1 seq=256 maxseq=512\n\
+             module decode_pasa decode_pasa.hlo.txt kind=decode attention=pasa batch=4 maxseq=512\n\
+             param tok_emb 259x256\n\
+             param lnf_g 256\n\
+             config vocab_size=259 d_model=256 n_layers=4 n_heads=8 d_head=32 d_ff=1024 \
+             max_seq=512 prefill_seq=256 decode_batch=4 pad=256 bos=257 eos=258\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("pasa_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.modules.len(), 2);
+        assert_eq!(m.params[0].0, "tok_emb");
+        assert_eq!(m.params[0].1, vec![259, 256]);
+        assert_eq!(m.params[1].1, vec![256]);
+        assert_eq!(m.dims.decode_batch, 4);
+        assert_eq!(m.dims.bos, 257);
+        let e = m.module("decode", "pasa").unwrap();
+        assert_eq!(e.attrs["batch"], 4);
+        assert!(m.module("decode", "fa8").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Serving-model substrate (S12): manifest/config parsing, weight loading,
+//! byte-level tokenizer and sampling.
+
+pub mod config;
+pub mod sampling;
+pub mod tokenizer;
+pub mod weights;
+
+pub use config::{Manifest, ModelDims, ModuleEntry};
+pub use sampling::{sample, Sampling};
+pub use tokenizer::{decode, encode, Specials};
+pub use weights::{ParamTensor, Weights};

@@ -1,0 +1,81 @@
+//! Byte-level tokenizer (S12) — mirrors python/compile/model.py's
+//! encode_text/decode_bytes exactly (vocab = 256 bytes + PAD/BOS/EOS).
+
+/// Token ids for the specials (must match the manifest's config line).
+#[derive(Clone, Copy, Debug)]
+pub struct Specials {
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+}
+
+impl Default for Specials {
+    fn default() -> Self {
+        Specials {
+            pad: 256,
+            bos: 257,
+            eos: 258,
+        }
+    }
+}
+
+/// Encode text: BOS + utf-8 bytes, truncated to `max_len`, padded with PAD.
+/// Returns (ids, valid_len).
+pub fn encode(text: &str, max_len: usize, sp: Specials) -> (Vec<u32>, usize) {
+    let mut ids = Vec::with_capacity(max_len);
+    ids.push(sp.bos);
+    for &b in text.as_bytes().iter().take(max_len.saturating_sub(1)) {
+        ids.push(b as u32);
+    }
+    let n = ids.len();
+    ids.resize(max_len, sp.pad);
+    (ids, n)
+}
+
+/// Decode ids back to text, skipping specials and invalid bytes.
+pub fn decode(ids: &[u32], sp: Specials) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&t| t < 256 && t != sp.pad && t != sp.bos && t != sp.eos)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_shape_and_padding() {
+        let sp = Specials::default();
+        let (ids, n) = encode("hello", 16, sp);
+        assert_eq!(n, 6);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(ids[0], sp.bos);
+        assert_eq!(&ids[1..6], &[104, 101, 108, 108, 111]);
+        assert!(ids[6..].iter().all(|&t| t == sp.pad));
+    }
+
+    #[test]
+    fn truncation() {
+        let sp = Specials::default();
+        let (ids, n) = encode("abcdefgh", 4, sp);
+        assert_eq!(n, 4);
+        assert_eq!(ids, vec![sp.bos, 97, 98, 99]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let sp = Specials::default();
+        let (ids, _) = encode("pasa attention!", 64, sp);
+        assert_eq!(decode(&ids, sp), "pasa attention!");
+    }
+
+    #[test]
+    fn decode_skips_specials_and_eos() {
+        let sp = Specials::default();
+        let ids = [sp.bos, 104, 105, sp.eos, sp.pad];
+        assert_eq!(decode(&ids, sp), "hi");
+    }
+}

@@ -1,0 +1,149 @@
+//! Weight loading — the `weights.bin` format written by
+//! python/compile/train.py::save_weights.
+//!
+//! Layout (little-endian): magic "PASAW001", u32 n; per parameter:
+//! u32 name_len, name bytes, u32 ndim, u32 dims[ndim], f32 data.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One named parameter tensor (row-major f32).
+#[derive(Clone, Debug)]
+pub struct ParamTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ParamTensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// All weights, preserving file order (the AOT argument order).
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub tensors: Vec<ParamTensor>,
+    pub by_name: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let mut cur = 0usize;
+        let take = |cur: &mut usize, n: usize| -> Result<&[u8]> {
+            if *cur + n > bytes.len() {
+                bail!("weights file truncated at offset {cur}");
+            }
+            let s = &bytes[*cur..*cur + n];
+            *cur += n;
+            Ok(s)
+        };
+        let magic = take(&mut cur, 8)?;
+        if magic != b"PASAW001" {
+            bail!("bad weights magic {:?}", magic);
+        }
+        let read_u32 = |cur: &mut usize| -> Result<u32> {
+            let b = take(cur, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+        let n = read_u32(&mut cur)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        let mut by_name = HashMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut cur)? as usize;
+            let name = String::from_utf8(take(&mut cur, name_len)?.to_vec())?;
+            let ndim = read_u32(&mut cur)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut cur)? as usize);
+            }
+            let count: usize = dims.iter().product::<usize>().max(1);
+            let raw = take(&mut cur, 4 * count)?;
+            let mut data = vec![0f32; count];
+            for (i, ch) in raw.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            by_name.insert(name.clone(), tensors.len());
+            tensors.push(ParamTensor { name, dims, data });
+        }
+        Ok(Weights { tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamTensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+    }
+
+    /// Verify the tensors match the manifest's parameter inventory
+    /// (names, order and shapes — the AOT argument contract).
+    pub fn check_against(&self, params: &[(String, Vec<usize>)]) -> Result<()> {
+        if self.tensors.len() != params.len() {
+            bail!(
+                "weights has {} tensors, manifest expects {}",
+                self.tensors.len(),
+                params.len()
+            );
+        }
+        for (t, (name, dims)) in self.tensors.iter().zip(params) {
+            if &t.name != name {
+                bail!("weight order mismatch: {} vs manifest {}", t.name, name);
+            }
+            if &t.dims != dims {
+                bail!("shape mismatch for {}: {:?} vs {:?}", name, t.dims, dims);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_weights_file(path: &Path) {
+        let mut buf: Vec<u8> = b"PASAW001".to_vec();
+        buf.extend(2u32.to_le_bytes());
+        for (name, dims, vals) in [
+            ("a", vec![2u32, 3u32], vec![1f32, 2., 3., 4., 5., 6.]),
+            ("b", vec![2u32], vec![7f32, 8.]),
+        ] {
+            buf.extend((name.len() as u32).to_le_bytes());
+            buf.extend(name.as_bytes());
+            buf.extend((dims.len() as u32).to_le_bytes());
+            for d in &dims {
+                buf.extend(d.to_le_bytes());
+            }
+            for v in &vals {
+                buf.extend(v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn round_trip() {
+        let p = std::env::temp_dir().join("pasa_weights_test.bin");
+        fake_weights_file(&p);
+        let w = Weights::load(&p).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.get("a").unwrap().dims, vec![2, 3]);
+        assert_eq!(w.get("b").unwrap().data, vec![7.0, 8.0]);
+        w.check_against(&[
+            ("a".into(), vec![2, 3]),
+            ("b".into(), vec![2]),
+        ])
+        .unwrap();
+        assert!(w
+            .check_against(&[("a".into(), vec![3, 2]), ("b".into(), vec![2])])
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join("pasa_weights_bad.bin");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(Weights::load(&p).is_err());
+    }
+}

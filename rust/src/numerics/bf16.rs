@@ -1,0 +1,146 @@
+//! Bit-exact software bfloat16 (BF16).
+//!
+//! The paper's Table 1 lists BF16 with precision 2^-8 = 3.906e-3 and the
+//! same overflow boundary as FP32 (3.4e38). Algorithm 1 notes that BF16
+//! inputs are converted to FP16 for PASA to keep the optimal accuracy;
+//! we still need BF16 itself to (a) regenerate Table 1 and (b) emulate the
+//! `tp = BF16` branch of the `fl_tp(.)` operator in Appendix A.
+
+/// Unit roundoff for bfloat16, 2^-8.
+pub const BF16_EPS: f32 = 3.90625e-3;
+
+/// Convert an `f32` to bfloat16 bits with RTNE.
+pub fn f32_to_bf16_bits(f: f32) -> u16 {
+    let x = f.to_bits();
+    if f.is_nan() {
+        // Quiet the NaN, keep the sign.
+        return ((x >> 16) as u16) | 0x0040;
+    }
+    let keep = x >> 16;
+    let rem = x & 0xffff;
+    let half = 0x8000u32;
+    let rounded = if rem > half || (rem == half && keep & 1 == 1) {
+        keep + 1 // may carry into the exponent — that is correct RTNE
+    } else {
+        keep
+    };
+    rounded as u16
+}
+
+/// Convert bfloat16 bits to `f32` (exact).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round an `f32` to the nearest bfloat16 value, returned as `f32`.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// `fl_BF16` from f64 (single rounding: f64 -> bf16 directly).
+pub fn fl_bf16_f64(x: f64) -> f64 {
+    if x.is_nan() {
+        return f64::NAN;
+    }
+    // bf16 has 8 mantissa bits; f64 -> f32 -> bf16 can double-round only if
+    // the f64 value is within 2^-29 ulp of a bf16 tie — we do it directly.
+    let bits = x.to_bits();
+    let sign = ((bits >> 48) & 0x8000) as u16;
+    let abs = x.abs();
+    if abs.is_infinite() {
+        return x;
+    }
+    if abs >= 3.3961775292304957e38 {
+        // >= (2 - 2^-9) * 2^127 rounds to inf
+        return if sign != 0 {
+            f64::NEG_INFINITY
+        } else {
+            f64::INFINITY
+        };
+    }
+    if abs == 0.0 {
+        return x;
+    }
+    let exp = (bits >> 52 & 0x7ff) as i32 - 1023;
+    if exp < -133 {
+        // below half the smallest subnormal (2^-133 ties to 0/min-sub)
+        let min_sub = 2f64.powi(-133);
+        let m = (abs / min_sub).round_ties_even();
+        return m * min_sub * if sign != 0 { -1.0 } else { 1.0 };
+    }
+    if exp < -126 {
+        // subnormal bf16: quantum 2^-133
+        let q = 2f64.powi(-133);
+        let m = (abs / q).round_ties_even();
+        return m * q * if sign != 0 { -1.0 } else { 1.0 };
+    }
+    // normal: quantum 2^(exp-7)
+    let q = 2f64.powi(exp - 7);
+    let m = (abs / q).round_ties_even();
+    let v = m * q;
+    if v >= 3.402823669209385e38 * 1.0000001 {
+        return if sign != 0 {
+            f64::NEG_INFINITY
+        } else {
+            f64::INFINITY
+        };
+    }
+    v * if sign != 0 { -1.0 } else { 1.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_exact_values() {
+        let two127 = 2f32.powi(127);
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 128.0, two127, -two127] {
+            assert_eq!(round_bf16(v), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn table1_bf16_precision() {
+        // Paper Table 1: BF16 precision 3.906e-3, overflow boundary 3.4e38
+        // (bf16 max = 0x7f7f = 3.3895e38; f32::MAX rounds *up* to inf).
+        assert!((BF16_EPS - 2f32.powi(-8)).abs() < 1e-12);
+        assert_eq!(round_bf16(1.0 + 2f32.powi(-9)), 1.0); // half-ulp absorbed
+        let bf16_max = bf16_bits_to_f32(0x7f7f);
+        assert!((bf16_max - 3.3895314e38).abs() < 1e31);
+        assert_eq!(round_bf16(bf16_max), bf16_max);
+        assert!(round_bf16(f32::MAX).is_infinite()); // RTNE carries past max
+        assert!(round_bf16(3.39e38) >= bf16_max);
+    }
+
+    #[test]
+    fn rtne_tie_behaviour() {
+        // 1 + 2^-9 ties between 1.0 (even mant) and 1 + 2^-8.
+        assert_eq!(round_bf16(1.0 + 2f32.powi(-9)), 1.0);
+        let odd = 1.0 + 2f32.powi(-8);
+        assert_eq!(round_bf16(odd + 2f32.powi(-9)), 1.0 + 2.0 * 2f32.powi(-8));
+    }
+
+    #[test]
+    fn carry_into_exponent() {
+        // Rounding 1.9999... up must carry cleanly to 2.0.
+        assert_eq!(round_bf16(1.999999), 2.0);
+    }
+
+    #[test]
+    fn f64_direct_matches_f32_path_generically() {
+        for i in 1..2000 {
+            let v = (i as f64) * 0.37 - 350.0;
+            assert_eq!(fl_bf16_f64(v) as f32, round_bf16(v as f32), "v={v}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert!(round_bf16(f32::INFINITY).is_infinite());
+        assert!(fl_bf16_f64(f64::INFINITY).is_infinite());
+    }
+}

@@ -1,0 +1,127 @@
+//! Error metrics for the numerical studies.
+//!
+//! The paper's accuracy metric is the relative root-mean-square error,
+//! Eq. (19): RMSE = ||O_computed - O_golden||_2 / ||O_golden||_2, plus the
+//! overflow metric "did INF/NaN appear" and the NaN percentage of Table 4.
+
+/// Relative RMSE per the paper's Eq. (19). Returns `f64::NAN` if either
+/// input contains non-finite values (an overflowed run has no RMSE — the
+/// paper plots a "NAN" text marker instead).
+pub fn relative_rmse(computed: &[f32], golden: &[f32]) -> f64 {
+    assert_eq!(computed.len(), golden.len(), "shape mismatch in RMSE");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&c, &g) in computed.iter().zip(golden) {
+        if !c.is_finite() || !g.is_finite() {
+            return f64::NAN;
+        }
+        let d = c as f64 - g as f64;
+        num += d * d;
+        den += (g as f64) * (g as f64);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Fraction of NaN elements, as a percentage (Table 4's "NAN PERCENTAGE").
+pub fn nan_percentage(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let n = v.iter().filter(|x| x.is_nan()).count();
+    100.0 * n as f64 / v.len() as f64
+}
+
+/// Fraction of non-finite (NaN or inf) elements, as a percentage.
+pub fn nonfinite_percentage(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let n = v.iter().filter(|x| !x.is_finite()).count();
+    100.0 * n as f64 / v.len() as f64
+}
+
+/// True if any element overflowed to inf or NaN — the paper's overflow
+/// detector ("whether the matmul result exceeds 65504").
+pub fn has_overflow(v: &[f32]) -> bool {
+    v.iter().any(|x| !x.is_finite())
+}
+
+/// Max absolute value over a slice, ignoring non-finite entries.
+pub fn max_abs(v: &[f32]) -> f32 {
+    v.iter()
+        .filter(|x| x.is_finite())
+        .fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// (min, max) over finite entries — used for the Fig. 11–14 range reports.
+pub fn finite_range(v: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in v {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    (lo, hi)
+}
+
+/// Mean over finite entries.
+pub fn finite_mean(v: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    let mut n = 0usize;
+    for &x in v {
+        if x.is_finite() {
+            s += x as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        s / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_basics() {
+        let g = [1.0f32, 2.0, 3.0];
+        assert_eq!(relative_rmse(&g, &g), 0.0);
+        let c = [1.1f32, 2.0, 3.0];
+        let e = relative_rmse(&c, &g);
+        // (1.1f32 − 1.0) carries f32 representation error ~1.5e-8.
+        let expect = (0.01f64 / 14.0).sqrt();
+        assert!((e - expect).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rmse_nan_on_overflow() {
+        let g = [1.0f32, 2.0];
+        assert!(relative_rmse(&[f32::INFINITY, 2.0], &g).is_nan());
+        assert!(relative_rmse(&[f32::NAN, 2.0], &g).is_nan());
+    }
+
+    #[test]
+    fn nan_pct() {
+        let v = [1.0f32, f32::NAN, 3.0, f32::NAN];
+        assert_eq!(nan_percentage(&v), 50.0);
+        assert_eq!(nonfinite_percentage(&[f32::INFINITY, 1.0]), 50.0);
+        assert!(!has_overflow(&[1.0, 2.0]));
+        assert!(has_overflow(&[1.0, f32::INFINITY]));
+    }
+
+    #[test]
+    fn ranges() {
+        let v = [-3.0f32, 7.0, f32::NAN, 1.0];
+        assert_eq!(finite_range(&v), (-3.0, 7.0));
+        assert_eq!(max_abs(&v), 7.0);
+        assert!((finite_mean(&v) - 5.0 / 3.0).abs() < 1e-9);
+    }
+}

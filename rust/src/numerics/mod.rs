@@ -1,0 +1,18 @@
+//! Software floating-point substrate (S1).
+//!
+//! Bit-exact binary16 / bfloat16 / FP8-E4M3 emulation with RTNE rounding,
+//! the `fl_tp(.)` operator of the paper's Appendix A, and the error metrics
+//! (relative RMSE of Eq. 19, NaN percentages of Table 4).
+
+pub mod bf16;
+pub mod error;
+pub mod f16;
+pub mod round;
+
+pub use bf16::{bf16_bits_to_f32, f32_to_bf16_bits, round_bf16};
+pub use error::{
+    finite_mean, finite_range, has_overflow, max_abs, nan_percentage, nonfinite_percentage,
+    relative_rmse,
+};
+pub use f16::{f16_bits_to_f32, f32_to_f16_bits, round_f16, F16, F16_EPS, F16_MAX};
+pub use round::Format;

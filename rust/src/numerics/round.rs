@@ -1,0 +1,140 @@
+//! Precision dispatch: the `fl_tp(.)` rounding operator over data formats.
+//!
+//! The attention lab emulates each precision allocation of Figs. 1–3 by
+//! re-rounding intermediate values to the storage format after every
+//! operation. `Format` enumerates the paper's Table 1 rows.
+
+use super::bf16::{fl_bf16_f64, round_bf16};
+use super::f16::{fl_f16_f64, round_f16};
+
+/// Floating-point data formats of the paper's Table 1.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Format {
+    /// IEEE binary16 — precision 4.88e-4, overflow at 65504.
+    F16,
+    /// bfloat16 — precision 3.906e-3, overflow at 3.4e38.
+    Bf16,
+    /// IEEE binary32 — precision 5.96e-8, overflow at 3.4e38.
+    F32,
+    /// 1-4-3 FP8 (E4M3) — precision 6.25e-2, overflow at 448. Included to
+    /// regenerate Table 1 and for the FP8 future-work extension bench.
+    F8E4M3,
+}
+
+impl Format {
+    /// Unit roundoff (the paper's "Precision" column of Table 1).
+    pub fn eps(self) -> f64 {
+        match self {
+            Format::F16 => 2f64.powi(-11),
+            Format::Bf16 => 2f64.powi(-8),
+            Format::F32 => 2f64.powi(-24),
+            Format::F8E4M3 => 2f64.powi(-4),
+        }
+    }
+
+    /// Largest finite value (the paper's "Overflow Boundary" column).
+    pub fn overflow_boundary(self) -> f64 {
+        match self {
+            Format::F16 => 65504.0,
+            Format::Bf16 => 3.3895313892515355e38,
+            Format::F32 => f32::MAX as f64,
+            Format::F8E4M3 => 448.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::F16 => "FP16",
+            Format::Bf16 => "BF16",
+            Format::F32 => "FP32",
+            Format::F8E4M3 => "FP8",
+        }
+    }
+
+    /// Round an f32 onto this format's grid (identity for F32).
+    #[inline]
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            Format::F16 => round_f16(x),
+            Format::Bf16 => round_bf16(x),
+            Format::F32 => x,
+            Format::F8E4M3 => round_f8e4m3(x),
+        }
+    }
+
+    /// Single-rounding `fl_tp` from f64 (Appendix A, Eq. 21).
+    #[inline]
+    pub fn fl(self, x: f64) -> f64 {
+        match self {
+            Format::F16 => fl_f16_f64(x),
+            Format::Bf16 => fl_bf16_f64(x),
+            Format::F32 => x as f32 as f64,
+            Format::F8E4M3 => round_f8e4m3(x as f32) as f64,
+        }
+    }
+}
+
+/// Round to FP8 E4M3 (OCP spec: bias 7, max 448, no inf — saturating NaN;
+/// we map overflow to NaN like E4M3FN).
+pub fn round_f8e4m3(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return x;
+    }
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let a = x.abs();
+    if a > 464.0 {
+        // beyond the rounding boundary (448 + half ulp 16) -> NaN (E4M3FN)
+        return f32::NAN;
+    }
+    // subnormal quantum 2^-9; normal quantum 2^(exp-3)
+    let exp = a.log2().floor() as i32;
+    let q = if exp < -6 {
+        2f32.powi(-9)
+    } else {
+        2f32.powi(exp - 3)
+    };
+    let m = (a as f64 / q as f64).round_ties_even() as f32;
+    let v = (m * q).min(448.0);
+    // m*q can round up to the next binade boundary; that is still on-grid
+    // except at 464 -> 448 saturation handled by min (448+16 ties to 448's
+    // even neighbour 480 which doesn't exist in E4M3FN -> saturate).
+    sign * v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows() {
+        // The exact rows of the paper's Table 1.
+        assert!((Format::F8E4M3.eps() - 6.25e-2).abs() < 1e-12);
+        assert_eq!(Format::F8E4M3.overflow_boundary(), 448.0);
+        assert!((Format::F16.eps() - 4.88e-4).abs() < 1e-6);
+        assert_eq!(Format::F16.overflow_boundary(), 65504.0);
+        assert!((Format::Bf16.eps() - 3.906e-3).abs() < 1e-6);
+        assert!(Format::Bf16.overflow_boundary() > 3.38e38);
+        assert!((Format::F32.eps() - 5.96e-8).abs() < 1e-10);
+        assert!(Format::F32.overflow_boundary() > 3.4e38);
+    }
+
+    #[test]
+    fn f8_grid() {
+        assert_eq!(round_f8e4m3(448.0), 448.0);
+        assert_eq!(round_f8e4m3(1.0), 1.0);
+        assert_eq!(round_f8e4m3(1.05), 1.0); // ulp at 1.0 is 0.125
+        assert_eq!(round_f8e4m3(1.07), 1.125);
+        assert!(round_f8e4m3(500.0).is_nan());
+        assert_eq!(round_f8e4m3(-448.0), -448.0);
+    }
+
+    #[test]
+    fn f32_identity() {
+        for &v in &[1.0f32, 1e-30, 3.0e38, -7.25] {
+            assert_eq!(Format::F32.round(v), v);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! PJRT client wrapper (RT): load HLO-text artifacts, compile once,
+//! execute from the serving hot path. Python never runs here.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Thin wrapper owning the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text module and compile it (HLO text, not serialized
+    /// proto — see DESIGN.md / aot.py for the jax>=0.5 id-width gotcha).
+    pub fn load_module(&self, path: &Path) -> Result<Executor> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executor {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled module ready to execute.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executor {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Borrow-based execute — avoids cloning long-lived weight literals on
+    /// every call (execute takes Borrow<Literal>).
+    pub fn run_borrowed(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal with the given dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,8 @@
+//! Runtime (RT): the xla-crate PJRT layer that loads and executes the AOT
+//! HLO-text artifacts from the L3 hot path.
+
+pub mod client;
+pub mod model_runtime;
+
+pub use client::{literal_f32, literal_i32, to_f32_vec, Executor, Runtime};
+pub use model_runtime::{HostCache, ModelRuntime, PrefillOutput};

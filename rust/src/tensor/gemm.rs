@@ -1,0 +1,222 @@
+//! Mixed-precision GEMM (S2).
+//!
+//! The paper's precision allocations (Figs. 1–3) differ in *where* the
+//! matmul accumulates and *what format* its result is stored in:
+//!
+//! * matrix engines (NPU CUBE / GPU TC) take FP16 inputs and accumulate in
+//!   either FP32 (Figs. 1–2) or FP16 (Fig. 3, "fully low precision"),
+//! * the result is stored to FP32 (Fig. 1) or FP16 (Figs. 2–3), where the
+//!   FP16 store is the overflow site the paper analyses (S = QK^T can
+//!   exceed 65504 even when inputs are modest — the GEMM "amplifier").
+//!
+//! `matmul_nt`/`matmul_nn` emulate all of these bit-exactly: inputs are
+//! assumed on the input format's grid already; `acc` controls per-step
+//! rounding of products and partial sums; `store` rounds the final element.
+
+use super::matrix::Matrix;
+use crate::numerics::Format;
+
+/// Accumulation and storage precision of one GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmPrecision {
+    /// Format products and running sums are rounded to after every step.
+    pub acc: Format,
+    /// Format the final element is rounded to on store.
+    pub store: Format,
+}
+
+impl GemmPrecision {
+    pub const F32: GemmPrecision = GemmPrecision {
+        acc: Format::F32,
+        store: Format::F32,
+    };
+    /// FP16 inputs, FP32 accumulate, FP16 store — Fig. 2 ("partially low
+    /// precision"): the overflow happens at the store.
+    pub const ACC32_STORE16: GemmPrecision = GemmPrecision {
+        acc: Format::F32,
+        store: Format::F16,
+    };
+    /// Fully FP16 — Fig. 3: every product and partial sum rounds to FP16.
+    pub const FULL16: GemmPrecision = GemmPrecision {
+        acc: Format::F16,
+        store: Format::F16,
+    };
+}
+
+/// C = A · Bᵀ with per-step precision emulation.
+/// A is (m × k), B is (n × k), C is (m × n): `C[i][j] = Σ_l A[i][l]·B[j][l]`.
+///
+/// This is the natural layout for S = Q·Kᵀ (both Q and K are (seq × d)).
+pub fn matmul_nt(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt: inner dims differ");
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let mut c = Matrix::zeros(m, n);
+    match p.acc {
+        Format::F32 => {
+            // Fast path: native f32 accumulate, round only on store.
+            // Four independent accumulators break the strict-FP reduction
+            // chain so the loop auto-vectorizes (§Perf: ~2.5x on the lab's
+            // GEMM-bound experiments). Matrix engines don't specify an
+            // accumulation order, so any f32 summation order is a valid
+            // emulation of the FP32-accumulate allocations.
+            for i in 0..m {
+                let ar = a.row(i);
+                let crow = c.row_mut(i);
+                for j in 0..n {
+                    let br = b.row(j);
+                    let mut acc = [0.0f32; 8];
+                    let mut ac = ar.chunks_exact(8);
+                    let mut bc = br.chunks_exact(8);
+                    for (aw, bw) in (&mut ac).zip(&mut bc) {
+                        for t in 0..8 {
+                            acc[t] += aw[t] * bw[t];
+                        }
+                    }
+                    let mut s = acc.iter().sum::<f32>();
+                    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+                        s += x * y;
+                    }
+                    crow[j] = p.store.round(s);
+                }
+            }
+        }
+        acc => {
+            // Emulated low-precision accumulate: round every product and
+            // every partial sum (sequential order, like a systolic chain).
+            for i in 0..m {
+                let ar = a.row(i);
+                let crow = c.row_mut(i);
+                for j in 0..n {
+                    let br = b.row(j);
+                    let mut s = 0.0f32;
+                    for l in 0..k {
+                        let prod = acc.round(ar[l] * br[l]);
+                        s = acc.round(s + prod);
+                    }
+                    crow[j] = p.store.round(s);
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A · B with per-step precision emulation.
+/// A is (m × k), B is (k × n), C is (m × n).
+pub fn matmul_nn(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul_nn: inner dims differ");
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    let mut c = Matrix::zeros(m, n);
+    match p.acc {
+        Format::F32 => {
+            // i-k-j loop order: stream B rows, accumulate into C rows.
+            for i in 0..m {
+                let ar = a.row(i);
+                // accumulate in a scratch f32 row, round once at the end
+                let mut acc_row = vec![0.0f32; n];
+                for (l, &al) in ar.iter().enumerate() {
+                    if al == 0.0 {
+                        continue;
+                    }
+                    let br = b.row(l);
+                    for j in 0..n {
+                        acc_row[j] += al * br[j];
+                    }
+                }
+                let crow = c.row_mut(i);
+                for j in 0..n {
+                    crow[j] = p.store.round(acc_row[j]);
+                }
+            }
+        }
+        acc => {
+            // Low-precision accumulate needs the dot-product order (i,j,l)
+            // so each element's partial sums round sequentially.
+            let bt = b.transpose();
+            for i in 0..m {
+                let ar = a.row(i);
+                let crow = c.row_mut(i);
+                for j in 0..n {
+                    let br = bt.row(j);
+                    let mut s = 0.0f32;
+                    for l in 0..k {
+                        let prod = acc.round(ar[l] * br[l]);
+                        s = acc.round(s + prod);
+                    }
+                    crow[j] = p.store.round(s);
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn nt_matches_nn_on_transpose() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(4, 3, &[1., 0., 1., 0., 1., 0., 1., 1., 1., 2., 2., 2.]);
+        let c1 = matmul_nt(&a, &b, GemmPrecision::F32);
+        let c2 = matmul_nn(&a, &b.transpose(), GemmPrecision::F32);
+        assert_eq!(c1, c2);
+        assert_eq!(c1.at(0, 0), 4.0);
+        assert_eq!(c1.at(1, 3), 30.0);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = m(2, 2, &[1.5, -2.0, 0.25, 7.0]);
+        let c = matmul_nn(&a, &Matrix::eye(2), GemmPrecision::F32);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn store16_overflows_at_65504() {
+        // Inputs are modest FP16 values but the dot product exceeds 65504:
+        // the Fig. 2 allocation stores S in FP16 and must produce inf.
+        let a = m(1, 128, &[30.0; 128]); // 30*30*128 = 115200 > 65504
+        let b = m(1, 128, &[30.0; 128]);
+        let c32 = matmul_nt(&a, &b, GemmPrecision::F32);
+        assert_eq!(c32.at(0, 0), 115200.0);
+        let c16 = matmul_nt(&a, &b, GemmPrecision::ACC32_STORE16);
+        assert!(c16.at(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn full16_accumulation_rounds_each_step() {
+        // 1 + 2^-11 absorbed at every add: summing 2048 copies of eps/?
+        // Classic: in FP16, 1.0 + 0.0004883 (=2^-11) = 1.0, so summing one
+        // 1.0 then many half-ulps stays exactly 1.0.
+        let k = 64;
+        let mut av = vec![2f32.powi(-11); k];
+        av[0] = 1.0;
+        let a = m(1, k, &av);
+        let b = m(1, k, &vec![1.0; k]);
+        let full = matmul_nt(&a, &b, GemmPrecision::FULL16);
+        assert_eq!(full.at(0, 0), 1.0);
+        let f32acc = matmul_nt(&a, &b, GemmPrecision::F32);
+        assert!(f32acc.at(0, 0) > 1.03);
+    }
+
+    #[test]
+    fn full16_can_overflow_in_accumulation() {
+        // Partial sums exceed 65504 before any store.
+        const K: usize = 8;
+        let k = K;
+        let a = m(1, k, &[200.0; K]);
+        let b = m(1, k, &[200.0; K]);
+        let c = matmul_nt(&a, &b, GemmPrecision::FULL16);
+        assert!(c.at(0, 0).is_infinite()); // 200*200*8 = 320000
+        let c32 = matmul_nt(&a, &b, GemmPrecision::ACC32_STORE16);
+        assert!(c32.at(0, 0).is_infinite()); // still inf on store
+        let cf = matmul_nt(&a, &b, GemmPrecision::F32);
+        assert_eq!(cf.at(0, 0), 320000.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Row-major matrix container for the attention lab (S2).
+//!
+//! All storage is `f32`; low-precision formats are emulated by keeping the
+//! values on the target format's grid (see `crate::numerics`). This makes a
+//! "FP16 matrix" a `Matrix` whose every element satisfies
+//! `x == round_f16(x)` — bit-exact w.r.t. hardware FP16 while keeping the
+//! hot loops in native f32.
+
+use crate::numerics::Format;
+
+/// Dense row-major `rows x cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "matrix shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn full(rows: usize, cols: usize, v: f32) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![v; rows * cols],
+        }
+    }
+
+    /// Identity matrix of size n.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Horizontal slice of rows `[r0, r1)` (copy).
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Round every element onto `fmt`'s grid (in place).
+    pub fn round_to(&mut self, fmt: Format) {
+        if fmt == Format::F32 {
+            return;
+        }
+        for x in &mut self.data {
+            *x = fmt.round(*x);
+        }
+    }
+
+    /// Rounded copy.
+    pub fn rounded(&self, fmt: Format) -> Matrix {
+        let mut m = self.clone();
+        m.round_to(fmt);
+        m
+    }
+
+    pub fn is_on_grid(&self, fmt: Format) -> bool {
+        self.data
+            .iter()
+            .all(|&x| x.is_nan() || fmt.round(x) == x || x.to_bits() == fmt.round(x).to_bits())
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.at(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn eye_and_slice() {
+        let i = Matrix::eye(3);
+        assert_eq!(i.at(1, 1), 1.0);
+        assert_eq!(i.at(1, 2), 0.0);
+        let s = i.rows_slice(1, 3);
+        assert_eq!(s.shape(), (2, 3));
+        assert_eq!(s.at(0, 1), 1.0);
+    }
+
+    #[test]
+    fn rounding_to_grid() {
+        let mut m = Matrix::from_vec(1, 2, vec![1.0001, 70000.0]);
+        m.round_to(Format::F16);
+        assert_eq!(m.at(0, 0), 1.0); // 1.0001 is within a half-ulp of 1.0
+        assert!(m.at(0, 1).is_infinite()); // overflow boundary 65504
+        assert!(m.is_on_grid(Format::F16));
+    }
+}

@@ -1,0 +1,9 @@
+//! Tensor mini-library (S2): row-major matrices, mixed-precision GEMM and
+//! the vector-unit ops used by the FA/PASA inner loops.
+
+pub mod gemm;
+pub mod matrix;
+pub mod ops;
+
+pub use gemm::{matmul_nn, matmul_nt, GemmPrecision};
+pub use matrix::Matrix;

@@ -1,0 +1,220 @@
+//! Row-wise reductions and elementwise ops with precision emulation (S2).
+//!
+//! These are the "vector unit" operations of the FA/PASA inner loop:
+//! rowmax, rowsum, rowmean, exp, scale/update. Each has a format-aware
+//! variant that rounds after every elementary operation, emulating a
+//! low-precision vector core (the paper notes NPUs have a *normal*
+//! vectorization capability — these ops are exactly where its rounding
+//! error accumulates).
+
+use super::matrix::Matrix;
+use crate::numerics::Format;
+
+/// Row maxima (exact in any format — max introduces no rounding).
+pub fn rowmax(m: &Matrix) -> Vec<f32> {
+    (0..m.rows)
+        .map(|r| m.row(r).iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)))
+        .collect()
+}
+
+/// Row sums with sequential accumulation rounded to `fmt` at each step.
+pub fn rowsum(m: &Matrix, fmt: Format) -> Vec<f32> {
+    (0..m.rows)
+        .map(|r| {
+            let mut s = 0.0f32;
+            for &x in m.row(r) {
+                s = fmt.round(s + x);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Row means: rowsum then divide, both rounded to `fmt`.
+pub fn rowmean(m: &Matrix, fmt: Format) -> Vec<f32> {
+    let n = m.cols as f32;
+    rowsum(m, fmt)
+        .into_iter()
+        .map(|s| fmt.round(s / n))
+        .collect()
+}
+
+/// Row means accumulated in f32 (matrix-engine semantics: a rowsum is a
+/// GEMM against the all-ones vector, which accumulates in FP32 on
+/// CUBE/TensorCores) with a single `fmt` rounding on store. PASA's
+/// pseudo-average measurement uses this: the S̄' error is amplified by
+/// Inva = β/(1−β) ≈ 63.5 in the correction terms, so a strict-FP16
+/// sequential ladder would dominate the error budget (see DESIGN.md).
+pub fn rowmean_acc32(m: &Matrix, fmt: Format) -> Vec<f32> {
+    let n = m.cols as f64;
+    (0..m.rows)
+        .map(|r| {
+            let mut s = 0.0f64;
+            for &x in m.row(r) {
+                s += x as f64;
+            }
+            fmt.round((s / n) as f32)
+        })
+        .collect()
+}
+
+/// `exp(m[r][c] - v[r])` elementwise, rounded to `fmt`.
+/// This is Eq. (5): P = exp(S - m). The subtraction makes every exponent
+/// non-positive, so exp is an attenuator (never overflows).
+pub fn exp_sub_rowbias(m: &Matrix, v: &[f32], fmt: Format) -> Matrix {
+    assert_eq!(v.len(), m.rows);
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let b = v[r];
+        let src = m.row(r);
+        let dst = out.row_mut(r);
+        for c in 0..m.cols {
+            let d = fmt.round(src[c] - b);
+            dst[c] = fmt.round(d.exp());
+        }
+    }
+    out
+}
+
+/// Elementwise `exp` of a vector, rounded to `fmt`.
+pub fn exp_vec(v: &[f32], fmt: Format) -> Vec<f32> {
+    v.iter().map(|&x| fmt.round(x.exp())).collect()
+}
+
+/// `out[r][c] = fmt(a[r][c] * s[r])` — row-scaled copy.
+pub fn scale_rows(m: &Matrix, s: &[f32], fmt: Format) -> Matrix {
+    assert_eq!(s.len(), m.rows);
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let k = s[r];
+        let src = m.row(r);
+        let dst = out.row_mut(r);
+        for c in 0..m.cols {
+            dst[c] = fmt.round(src[c] * k);
+        }
+    }
+    out
+}
+
+/// In-place fused update `acc = fmt(fmt(acc * s[r]) + add)` — the FA/PASA
+/// online output rescale of Eq. (7) / Algorithm 1 line 20.
+pub fn scale_add_rows(acc: &mut Matrix, s: &[f32], add: &Matrix, fmt: Format) {
+    assert_eq!(acc.shape(), add.shape());
+    assert_eq!(s.len(), acc.rows);
+    for r in 0..acc.rows {
+        let k = s[r];
+        let arow = &mut acc.data[r * acc.cols..(r + 1) * acc.cols];
+        let brow = &add.data[r * add.cols..(r + 1) * add.cols];
+        for c in 0..arow.len() {
+            arow[c] = fmt.round(fmt.round(arow[c] * k) + brow[c]);
+        }
+    }
+}
+
+/// `out[r][c] = fmt(m[r][c] / d[r])` — the final O = O / l of Eq. (8).
+pub fn div_rows(m: &Matrix, d: &[f32], fmt: Format) -> Matrix {
+    assert_eq!(d.len(), m.rows);
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let k = d[r];
+        let src = m.row(r);
+        let dst = out.row_mut(r);
+        for c in 0..m.cols {
+            dst[c] = fmt.round(src[c] / k);
+        }
+    }
+    out
+}
+
+/// Elementwise scalar multiply, rounded to `fmt`.
+pub fn scale(m: &Matrix, k: f32, fmt: Format) -> Matrix {
+    let mut out = m.clone();
+    for x in &mut out.data {
+        *x = fmt.round(*x * k);
+    }
+    out
+}
+
+/// Full-precision softmax over each row (the golden path).
+pub fn softmax_rows_f32(m: &Matrix) -> Matrix {
+    let mx = rowmax(m);
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let b = mx[r];
+        let src = m.row(r);
+        let dst = out.row_mut(r);
+        let mut s = 0.0f64;
+        for c in 0..m.cols {
+            let e = ((src[c] - b) as f64).exp();
+            dst[c] = e as f32;
+            s += e;
+        }
+        for c in 0..m.cols {
+            dst[c] = (dst[c] as f64 / s) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn reductions() {
+        let a = m(2, 3, &[1., 5., 3., -1., -5., -3.]);
+        assert_eq!(rowmax(&a), vec![5.0, -1.0]);
+        assert_eq!(rowsum(&a, Format::F32), vec![9.0, -9.0]);
+        assert_eq!(rowmean(&a, Format::F32), vec![3.0, -3.0]);
+    }
+
+    #[test]
+    fn rowsum_f16_rounds() {
+        // 1.0 followed by half-ulps: FP16 sequential sum absorbs them all.
+        let mut v = vec![2f32.powi(-11); 32];
+        v[0] = 1.0;
+        let a = m(1, 32, &v);
+        assert_eq!(rowsum(&a, Format::F16)[0], 1.0);
+        assert!(rowsum(&a, Format::F32)[0] > 1.01);
+    }
+
+    #[test]
+    fn exp_sub_is_attenuator() {
+        let a = m(1, 3, &[10.0, 8.0, -100.0]);
+        let p = exp_sub_rowbias(&a, &[10.0], Format::F16);
+        assert_eq!(p.at(0, 0), 1.0);
+        assert!(p.at(0, 1) < 1.0 && p.at(0, 1) > 0.0);
+        assert!(p.at(0, 2) >= 0.0); // underflow to 0 allowed, never inf
+        assert!(p.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let a = m(2, 4, &[0.1, 2.0, -3.0, 0.7, 100.0, 100.0, 100.0, 100.0]);
+        let s = softmax_rows_f32(&a);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert!((s.at(1, 0) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_add_update() {
+        let mut acc = m(1, 2, &[2.0, 4.0]);
+        let add = m(1, 2, &[1.0, 1.0]);
+        scale_add_rows(&mut acc, &[0.5], &add, Format::F32);
+        assert_eq!(acc, m(1, 2, &[2.0, 3.0]));
+    }
+
+    #[test]
+    fn div_rows_final_normalize() {
+        let o = m(2, 2, &[2.0, 4.0, 9.0, 3.0]);
+        let d = div_rows(&o, &[2.0, 3.0], Format::F32);
+        assert_eq!(d, m(2, 2, &[1.0, 2.0, 3.0, 1.0]));
+    }
+}

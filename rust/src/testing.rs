@@ -1,0 +1,203 @@
+//! Mini property-testing harness (S15) — no proptest offline.
+//!
+//! `check(n, gen, prop)` runs `prop` on `n` random inputs from `gen`; on
+//! failure it performs greedy shrinking via the input's `Shrink` impl and
+//! panics with the minimal failing case. Used for the coordinator
+//! invariants (paged KV pool, router) and the numeric substrates.
+
+use crate::workloads::Pcg64;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate() {
+                for sx in x.shrink().into_iter().take(1) {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `n` random cases; shrink on failure.
+///
+/// `prop` returns `Err(reason)` on violation.
+pub fn check<T, G, P>(n: usize, seed: u64, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(seed, 0x9097);
+    for case_idx in 0..n {
+        let input = gen(&mut rng);
+        if let Err(first_reason) = prop(&input) {
+            // Greedy shrink to a minimal failing input.
+            let mut cur = input;
+            let mut reason = first_reason;
+            let mut progress = true;
+            let mut rounds = 0;
+            while progress && rounds < 200 {
+                progress = false;
+                rounds += 1;
+                for cand in cur.shrink() {
+                    if let Err(r) = prop(&cand) {
+                        cur = cand;
+                        reason = r;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {seed}) on minimal input {cur:?}: {reason}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert with a formatted reason inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            50,
+            1,
+            |rng| rng.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("impossible".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                100,
+                2,
+                |rng| rng.below(1000) + 10,
+                |&x| {
+                    if x < 50 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 50"))
+                    }
+                },
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Greedy shrinking must land on exactly 50 (the boundary).
+        assert!(msg.contains("minimal input 50"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![5usize, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+}

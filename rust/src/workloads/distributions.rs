@@ -1,0 +1,151 @@
+//! Random benchmark generators (S6) — the paper's Eq. (17) and Eq. (18).
+//!
+//! * Uniform:  Q,K,V ~ U(x0 − Am, x0 + Am)
+//! * Hybrid:   Q,K,V ~ N(x0, 1) + N(0, Am²)·Bernoulli(p),  p = 0.001
+//!
+//! The benchmark shape is the paper's (B, N, S, D) = (1, 16, 1280, 128);
+//! head count is a parameter so the (slow, bit-exact) low-precision sweeps
+//! can run on a subset while keeping the distribution identical.
+
+use super::rng::Pcg64;
+use crate::tensor::Matrix;
+
+/// One attention problem instance (single batch, single head).
+#[derive(Clone, Debug)]
+pub struct AttentionCase {
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+}
+
+impl AttentionCase {
+    pub fn seq_q(&self) -> usize {
+        self.q.rows
+    }
+    pub fn seq_kv(&self) -> usize {
+        self.k.rows
+    }
+    pub fn head_dim(&self) -> usize {
+        self.q.cols
+    }
+}
+
+/// A multi-head benchmark case: `heads[h]` is an independent head.
+#[derive(Clone, Debug)]
+pub struct MultiHeadCase {
+    pub heads: Vec<AttentionCase>,
+    pub label: String,
+}
+
+/// The two random families of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Distribution {
+    /// U(x0 − Am, x0 + Am) — Eq. (17).
+    Uniform { x0: f64, am: f64 },
+    /// N(x0, 1) + N(0, Am²)·Bernoulli(p) — Eq. (18).
+    Hybrid { x0: f64, am: f64, p: f64 },
+}
+
+impl Distribution {
+    pub fn label(&self) -> String {
+        match self {
+            Distribution::Uniform { x0, am } => format!("uniform(x0={x0},Am={am})"),
+            Distribution::Hybrid { x0, am, p } => format!("hybrid(x0={x0},Am={am},p={p})"),
+        }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            Distribution::Uniform { x0, am } => rng.uniform(x0 - am, x0 + am),
+            Distribution::Hybrid { x0, am, p } => {
+                let base = rng.normal(x0, 1.0);
+                if rng.bernoulli(p) {
+                    base + rng.normal(0.0, am)
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Fill a matrix with iid samples.
+    pub fn matrix(&self, rows: usize, cols: usize, rng: &mut Pcg64) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for x in &mut m.data {
+            *x = self.sample(rng) as f32;
+        }
+        m
+    }
+}
+
+/// Generate one head's Q, K, V from a distribution.
+pub fn gen_case(dist: Distribution, s1: usize, s2: usize, d: usize, rng: &mut Pcg64) -> AttentionCase {
+    AttentionCase {
+        q: dist.matrix(s1, d, rng),
+        k: dist.matrix(s2, d, rng),
+        v: dist.matrix(s2, d, rng),
+    }
+}
+
+/// Generate the paper's benchmark tensor: `n_heads` independent heads of
+/// shape (s, d). Paper default: n_heads = 16, s = 1280, d = 128.
+pub fn gen_multihead(
+    dist: Distribution,
+    n_heads: usize,
+    s: usize,
+    d: usize,
+    seed: u64,
+) -> MultiHeadCase {
+    let mut heads = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let mut rng = Pcg64::new(seed, h as u64);
+        heads.push(gen_case(dist, s, s, d, &mut rng));
+    }
+    MultiHeadCase {
+        heads,
+        label: dist.label(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::finite_mean;
+
+    #[test]
+    fn uniform_case_statistics() {
+        let dist = Distribution::Uniform { x0: 20.0, am: 0.5 };
+        let mut rng = Pcg64::new(1, 0);
+        let c = gen_case(dist, 128, 128, 64, &mut rng);
+        let mean = finite_mean(&c.q.data);
+        assert!((mean - 20.0).abs() < 0.05, "mean {mean}");
+        assert!(c.q.data.iter().all(|&x| (19.5..20.5).contains(&(x as f64))));
+    }
+
+    #[test]
+    fn hybrid_outliers_present() {
+        let dist = Distribution::Hybrid {
+            x0: 0.0,
+            am: 100.0,
+            p: 0.01,
+        };
+        let mut rng = Pcg64::new(2, 0);
+        let c = gen_case(dist, 256, 256, 64, &mut rng);
+        let extreme = c.q.data.iter().filter(|&&x| x.abs() > 10.0).count();
+        assert!(extreme > 0, "expected outliers from the Bernoulli branch");
+        // but they must be rare
+        assert!((extreme as f64) < 0.05 * c.q.data.len() as f64);
+    }
+
+    #[test]
+    fn multihead_heads_are_independent() {
+        let dist = Distribution::Uniform { x0: 0.0, am: 1.0 };
+        let mh = gen_multihead(dist, 3, 32, 16, 9);
+        assert_eq!(mh.heads.len(), 3);
+        assert_ne!(mh.heads[0].q.data, mh.heads[1].q.data);
+        // deterministic across calls
+        let mh2 = gen_multihead(dist, 3, 32, 16, 9);
+        assert_eq!(mh.heads[2].q.data, mh2.heads[2].q.data);
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload generators (S3, S6): deterministic RNG, the paper's random
+//! benchmark distributions (Eqs. 17–18), the resonance mechanism (Fig. 6)
+//! and model-shaped overflow traces (Qwen2 / SVD substitutes).
+
+pub mod distributions;
+pub mod resonance;
+pub mod rng;
+pub mod traces;
+
+pub use distributions::{gen_case, gen_multihead, AttentionCase, Distribution, MultiHeadCase};
+pub use resonance::{ResonanceCategory, ResonanceSpec};
+pub use rng::Pcg64;
+pub use traces::{all_traces, qwen2_overflow_trace, svd_img2vid_trace, TraceSpec};

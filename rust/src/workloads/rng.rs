@@ -1,0 +1,135 @@
+//! Deterministic RNG substrate (S3) — no `rand` crate offline.
+//!
+//! PCG64 (PCG-XSL-RR 128/64) with Box–Muller normals and a Bernoulli
+//! sampler; these replace the paper's `torch.rand`, `torch.norm` and
+//! `numpy.random.binomial` generators (Eqs. 17–18). Deterministic seeding
+//! makes every experiment in EXPERIMENTS.md exactly re-runnable.
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with a stream id; distinct `(seed, stream)` pairs give
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Pcg64 {
+        let inc = (((stream as u128) << 64 | 0xda3e_39cb_94b9_5bdb) << 1) | 1;
+        let mut r = Pcg64 {
+            state: 0,
+            inc,
+        };
+        r.state = r.state.wrapping_mul(PCG_MULT).wrapping_add(r.inc);
+        r.state = r.state.wrapping_add(seed as u128);
+        r.state = r.state.wrapping_mul(PCG_MULT).wrapping_add(r.inc);
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi) — the paper's U(x0 − Am, x0 + Am) of Eq. (17).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// second member is discarded for simplicity — throughput is not the
+    /// bottleneck of the numeric studies).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        // Avoid ln(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Bernoulli(p) — the outlier gate of Eq. (18).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_separated() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        let mut c = Pcg64::new(42, 1);
+        let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let cv: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(av, bv);
+        assert_ne!(av, cv);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Pcg64::new(7, 0);
+        let n = 20000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let x = r.uniform(19.5, 20.5); // x0=20, Am=0.5 like Fig 9(a)
+            assert!((19.5..20.5).contains(&x));
+            s += x;
+        }
+        let mean = s / n as f64;
+        assert!((mean - 20.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11, 3);
+        let n = 40000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal(5.0, 2.0);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 5.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::new(3, 9);
+        let n = 200000;
+        let hits = (0..n).filter(|_| r.bernoulli(0.001)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.001).abs() < 0.0005, "rate {rate}");
+    }
+}

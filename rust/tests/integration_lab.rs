@@ -1,0 +1,113 @@
+//! Integration tests over the attention lab + experiment harness
+//! (no artifacts required — pure rust layers).
+
+use pasa::attention::{
+    flash_attention, naive_attention_f32, pasa_attention, to_fp16_inputs, Allocation,
+    AttentionConfig,
+};
+use pasa::experiments::{self, ExpOptions};
+use pasa::numerics::{has_overflow, relative_rmse};
+use pasa::workloads::{all_traces, gen_multihead, Distribution};
+
+fn fast_opts() -> ExpOptions {
+    ExpOptions {
+        heads: 1,
+        seq: 384,
+        dim: 128,
+        trace_scale: 16,
+        seed: 9,
+    }
+}
+
+#[test]
+fn all_experiments_run_and_report() {
+    let opts = fast_opts();
+    for id in experiments::ALL_EXPERIMENTS {
+        let rep = experiments::run(id, &opts).unwrap();
+        assert!(rep.contains('#'), "{id} produced an empty report");
+        assert!(rep.len() > 60, "{id} report suspiciously short:\n{rep}");
+    }
+}
+
+#[test]
+fn unknown_experiment_is_an_error() {
+    assert!(experiments::run("fig99", &fast_opts()).is_err());
+}
+
+#[test]
+fn paper_headline_multihead() {
+    // The paper's (B, N, S, D) benchmark at reduced size: FA16-32 NaNs on
+    // the x0=30 case in *every* head, PASA survives with small RMSE.
+    let mh = gen_multihead(Distribution::Uniform { x0: 30.0, am: 0.5 }, 2, 384, 128, 1);
+    for case in &mh.heads {
+        let c = to_fp16_inputs(case);
+        let golden = naive_attention_f32(&c);
+        let fa = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+        assert!(has_overflow(&fa.data));
+        let p = pasa_attention(&c, &AttentionConfig::new(Allocation::Pasa16));
+        assert!(!has_overflow(&p.data));
+        assert!(relative_rmse(&p.data, &golden.data) < 2e-2);
+    }
+}
+
+#[test]
+fn model_traces_end_to_end_rescue() {
+    // Figs. 11–14 end-to-end. Both traces overflow FP16 at the
+    // instrumentation point (|QK^T| > 65504). Downstream severity differs
+    // by sign — the paper's own mechanism analysis:
+    //  * SVD (whole score rows beyond −65504): rows saturate to −inf,
+    //    exp(−inf − (−inf)) = NaN ⇒ inference failure;
+    //  * Qwen2 (mixed sign): negative saturation silently zeroes weights —
+    //    finite but untrustworthy output.
+    // PASA must keep both finite and accurate.
+    for t in all_traces(16) {
+        // Deterministic seeds where each trace exhibits its failure mode
+        // (7: qwen2 mixed-sign overflow; 11: svd whole-row saturation).
+        let seed = if t.name == "svd-img2vid" { 11 } else { 7 };
+        let c = to_fp16_inputs(&t.generate(seed));
+        let raw = pasa::attention::raw_scores_f32(&c);
+        let peak = raw
+            .data
+            .iter()
+            .fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(peak > 65504.0, "{}: raw scores do not overflow", t.name);
+        let fa = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+        if t.name == "svd-img2vid" {
+            assert!(has_overflow(&fa.data), "{} should NaN FA16-32", t.name);
+        }
+        let p = pasa_attention(&c, &AttentionConfig::new(Allocation::Pasa16));
+        assert!(!has_overflow(&p.data), "{} overflowed PASA", t.name);
+        let golden = naive_attention_f32(&c);
+        let e = relative_rmse(&p.data, &golden.data);
+        // The qwen2-like trace keeps |scores| in the tens of thousands
+        // even after the shift (paper Fig. 13: [−58134, 1124]); at those
+        // magnitudes FP16 rounding can flip near-tied argmax rows, so the
+        // RMSE bound is loose there — the robustness claim is finiteness.
+        let bound = if t.name == "qwen2-7b" { 0.5 } else { 0.1 };
+        assert!(e < bound, "{}: PASA rmse {e}", t.name);
+    }
+}
+
+#[test]
+fn rmse_orderings_hold_across_seeds() {
+    // Fig. 9 qualitative orderings that are robust in bit-exact emulation:
+    //  * FA(FP32) is far more accurate than both FP16 paths;
+    //  * where FA16-32 survives, PASA is comparable (within 2.5x);
+    //  * where FA16-32 overflows (x0 = 30), PASA still delivers small RMSE.
+    // (The paper's "PASA strictly beats FA16-32 at non-zero mean" holds in
+    // the strong-bias/overflow regime; pre-overflow they interleave —
+    // recorded in EXPERIMENTS.md.)
+    for seed in [11, 22, 33] {
+        let opts = ExpOptions { seed, ..fast_opts() };
+        let mild = Distribution::Uniform { x0: 20.0, am: 2.0 };
+        let e32 = experiments::rmse_sweep::rmse_for(mild, Allocation::Fa32, &opts);
+        let ep = experiments::rmse_sweep::rmse_for(mild, Allocation::Pasa16, &opts);
+        let efa = experiments::rmse_sweep::rmse_for(mild, Allocation::Fa16_32, &opts);
+        assert!(e32 < ep, "seed {seed}: FA32 {e32} !< PASA {ep}");
+        assert!(ep < 2.5 * efa, "seed {seed}: PASA {ep} not comparable to {efa}");
+        let hard = Distribution::Uniform { x0: 30.0, am: 0.5 };
+        assert!(experiments::rmse_sweep::rmse_for(hard, Allocation::Fa16_32, &opts).is_nan());
+        let ep = experiments::rmse_sweep::rmse_for(hard, Allocation::Pasa16, &opts);
+        assert!(ep < 2e-2, "seed {seed}: PASA rmse {ep} at the overflow point");
+    }
+}

@@ -1,0 +1,189 @@
+//! Property tests on the coordinator invariants (paged KV pool, router)
+//! via the crate's mini property-testing harness (rust/src/testing.rs).
+
+use pasa::coordinator::{KvPool, Priority, Request, Router, SeqCache};
+use pasa::testing::check;
+use pasa::workloads::Pcg64;
+
+/// Random op sequence for the pool: (seq index, op code, argument).
+fn gen_ops(rng: &mut Pcg64) -> Vec<(usize, usize, usize)> {
+    let n = 2 + rng.below(40);
+    (0..n)
+        .map(|_| (rng.below(6), rng.below(4), rng.below(96) + 1))
+        .collect()
+}
+
+#[test]
+fn kv_pool_never_leaks_or_double_frees() {
+    check(
+        60,
+        0xA11CE,
+        gen_ops,
+        |ops: &Vec<(usize, usize, usize)>| {
+            let mut pool = KvPool::new(256, 8, 16);
+            let mut seqs: Vec<SeqCache> = (0..6).map(|_| SeqCache::new(2)).collect();
+            for &(si, op, arg) in ops {
+                match op {
+                    0 => {
+                        // grow (may fail on capacity — must not corrupt)
+                        let _ = seqs[si].ensure_capacity(&mut pool, arg);
+                    }
+                    1 => {
+                        let tokens = seqs[si].len_tokens;
+                        if tokens > 0 {
+                            let pos = arg % tokens;
+                            let row = vec![si as f32; 16];
+                            seqs[si].write_row(&mut pool, arg % 2, pos, &row, &row);
+                        }
+                    }
+                    2 => {
+                        seqs[si].release(&mut pool);
+                    }
+                    _ => {
+                        // fork then immediately write through the fork
+                        let mut f = seqs[si].fork(&mut pool);
+                        if f.len_tokens > 0 || seqs[si].total_pages_held() > 0 {
+                            let _ = f.ensure_capacity(&mut pool, 4);
+                            if f.total_pages_held() > 0 {
+                                let row = vec![9.0f32; 16];
+                                f.write_row(&mut pool, 0, 0, &row, &row);
+                            }
+                        }
+                        f.release(&mut pool);
+                    }
+                }
+                // Invariant: used pages == sum of pages held by live seqs.
+                let held: usize = seqs.iter().map(|s| s.total_pages_held()).sum();
+                if pool.used_pages() != held {
+                    return Err(format!(
+                        "page accounting broken: pool={} held={held}",
+                        pool.used_pages()
+                    ));
+                }
+            }
+            for s in &mut seqs {
+                s.release(&mut pool);
+            }
+            if pool.used_pages() != 0 {
+                return Err(format!("leak: {} pages after release", pool.used_pages()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kv_pool_dense_readback_matches_writes() {
+    check(
+        40,
+        0xB0B,
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.below(30);
+            (0..n).map(|_| (rng.below(64), rng.below(100))).collect::<Vec<(usize, usize)>>()
+        },
+        |writes: &Vec<(usize, usize)>| {
+            let mut pool = KvPool::new(512, 8, 4);
+            let mut s = SeqCache::new(1);
+            let mut mirror = vec![0.0f32; 64 * 4];
+            for &(pos, val) in writes {
+                s.ensure_capacity(&mut pool, pos + 1).unwrap();
+                let row = vec![val as f32; 4];
+                s.write_row(&mut pool, 0, pos, &row, &row);
+                mirror[pos * 4..(pos + 1) * 4].copy_from_slice(&row);
+            }
+            let mut dense = vec![0.0f32; 64 * 4];
+            s.fill_dense(&pool, 0, false, &mut dense);
+            let len = s.len_tokens;
+            if dense[..len * 4] != mirror[..len * 4] {
+                return Err("dense readback diverged from mirror".into());
+            }
+            if dense[len * 4..].iter().any(|&x| x != 0.0) {
+                return Err("padding region not zeroed".into());
+            }
+            s.release(&mut pool);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn router_conserves_requests_and_orders_lanes() {
+    check(
+        60,
+        0xC0DE,
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.below(30);
+            (0..n).map(|_| rng.below(3)).collect::<Vec<usize>>()
+        },
+        |lanes: &Vec<usize>| {
+            let mut router = Router::new(1024, 4096);
+            let mut submitted = Vec::new();
+            for &lane in lanes {
+                let id = router.fresh_id();
+                let pr = match lane {
+                    0 => Priority::Batch,
+                    1 => Priority::Normal,
+                    _ => Priority::Interactive,
+                };
+                router.submit(Request::new(id, "x").with_priority(pr));
+                submitted.push((pr, id));
+            }
+            // Drain: priorities must be non-increasing, FCFS within a lane.
+            let mut drained = Vec::new();
+            while let Some(r) = router.pop() {
+                drained.push((r.priority, r.id));
+            }
+            if drained.len() != submitted.len() {
+                return Err("requests lost or duplicated".into());
+            }
+            for w in drained.windows(2) {
+                if w[1].0 > w[0].0 {
+                    return Err(format!("priority inversion: {w:?}"));
+                }
+                if w[1].0 == w[0].0 && w[1].1 < w[0].1 {
+                    return Err(format!("FCFS violated within lane: {w:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kv_pool_fork_isolation_property() {
+    check(
+        40,
+        0xF0,
+        |rng: &mut Pcg64| (rng.below(32) + 1, rng.below(1000) as u64),
+        |&(tokens, seed): &(usize, u64)| {
+            let mut rng = Pcg64::new(seed, 1);
+            let mut pool = KvPool::new(512, 8, 4);
+            let mut a = SeqCache::new(1);
+            a.ensure_capacity(&mut pool, tokens).unwrap();
+            for p in 0..tokens {
+                let row = vec![p as f32; 4];
+                a.write_row(&mut pool, 0, p, &row, &row);
+            }
+            let mut b = a.fork(&mut pool);
+            // Random writes through the fork must never show up in `a`.
+            for _ in 0..8 {
+                let p = rng.below(tokens);
+                let row = vec![-1.0f32; 4];
+                b.write_row(&mut pool, 0, p, &row, &row);
+            }
+            let mut dense = vec![0.0f32; ((tokens + 7) / 8) * 8 * 4];
+            a.fill_dense(&pool, 0, false, &mut dense);
+            for p in 0..tokens {
+                if dense[p * 4] != p as f32 {
+                    return Err(format!("fork leaked into original at {p}"));
+                }
+            }
+            a.release(&mut pool);
+            b.release(&mut pool);
+            if pool.used_pages() != 0 {
+                return Err("leak after fork release".into());
+            }
+            Ok(())
+        },
+    );
+}
