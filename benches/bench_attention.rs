@@ -1,14 +1,18 @@
 //! Kernel-level benchmark: all precision allocations of the attention lab
-//! at the paper's benchmark shape family, plus PASA's preprocessing
-//! overhead (the paper's claimed-negligible batched GEMM).
+//! at the paper's benchmark shape family, PASA's preprocessing overhead
+//! (the paper's claimed-negligible batched GEMM), and the multi-head
+//! fan-out with masks (heads ∈ {8, 32}, causal vs none) — the perf
+//! baseline for the unified AttentionKernel API.
 
 use pasa::attention::{
-    naive_attention_f32, run_attention, to_fp16_inputs, Allocation, AttentionConfig,
+    Allocation, AttentionRequest, AttnMask, KernelRegistry,
 };
 use pasa::bench::Bencher;
 use pasa::numerics::Format;
 use pasa::tensor::GemmPrecision;
-use pasa::workloads::{gen_case, Distribution, Pcg64};
+use pasa::workloads::{
+    gen_case, gen_multihead, gen_padded_lens, gen_padded_multihead, Distribution, Pcg64,
+};
 
 fn main() {
     let b = Bencher::default();
@@ -17,17 +21,16 @@ fn main() {
 
     for &(s, d) in &[(512usize, 128usize), (1280, 128)] {
         let mut rng = Pcg64::new(1, 0);
-        let case = to_fp16_inputs(&gen_case(dist, s, s, d, &mut rng));
+        let case = gen_case(dist, s, s, d, &mut rng);
+        let base = AttentionRequest::from_case(&case, Allocation::Fa32).with_fp16_inputs();
         println!("## shape ({s}, {d})");
         let r = b.run(&format!("naive f32 {s}x{d}"), s as f64, || {
-            naive_attention_f32(&case)
+            KernelRegistry::naive().forward(&base)
         });
         println!("{r}");
         for alloc in Allocation::all() {
-            let cfg = AttentionConfig::new(alloc);
-            let r = b.run(&format!("{} {s}x{d}", alloc.name()), s as f64, || {
-                run_attention(&case, &cfg)
-            });
+            let req = base.clone().with_alloc(alloc);
+            let r = b.run(&format!("{} {s}x{d}", alloc.name()), s as f64, || req.run());
             println!("{r}");
         }
         // PASA preprocessing overhead alone: K' = M·K per 128-block.
@@ -43,7 +46,7 @@ fn main() {
             while r0 < s {
                 let r1 = (r0 + 128).min(s);
                 outs.push(pasa::attention::preprocess_k(
-                    &case.k.rows_slice(r0, r1),
+                    &base.k[0].rows_slice(r0, r1),
                     &m,
                     GemmPrecision::ACC32_STORE16,
                 ));
@@ -51,6 +54,39 @@ fn main() {
             }
             outs
         });
+        println!("{r}\n");
+    }
+
+    // Masked multi-head fan-out: the unified API's hot path. Causal halves
+    // the visible score area, so the block-skipping tiling should land
+    // meaningfully under the dense run.
+    let quick = Bencher::quick();
+    let (s, d) = (256usize, 64usize);
+    println!("## masked multi-head fan-out (seq {s}, dim {d})");
+    for &heads in &[8usize, 32] {
+        let mh = gen_multihead(dist, heads, s, d, 2);
+        for (mask, label) in [(AttnMask::None, "none"), (AttnMask::Causal, "causal")] {
+            for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+                let req = AttentionRequest::from_multihead(&mh, alloc)
+                    .with_mask(mask.clone())
+                    .with_fp16_inputs();
+                let name = format!("{} h={heads} mask={label}", alloc.name());
+                let r = quick.run(&name, (heads * s) as f64, || req.run());
+                println!("{r}");
+            }
+        }
+        // Right-padded batch (random valid lengths, garbage-filled
+        // padding): the serving-shaped workload through the same API.
+        let mut rng = Pcg64::new(3, 0);
+        let lens = gen_padded_lens(heads, s, s / 4, &mut rng);
+        let padded = gen_padded_multihead(dist, heads, s, d, &lens, 4);
+        let req = AttentionRequest::from_multihead(&padded, Allocation::Pasa16)
+            .with_fp16_inputs();
+        let r = quick.run(
+            &format!("{} h={heads} mask=padded", Allocation::Pasa16.name()),
+            (heads * s) as f64,
+            || req.run(),
+        );
         println!("{r}\n");
     }
 }

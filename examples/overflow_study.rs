@@ -10,9 +10,9 @@
 //!
 //! Run: cargo run --release --example overflow_study
 
-use pasa::attention::{flash_attention, pasa_attention, to_fp16_inputs, Allocation, AttentionConfig};
+use pasa::attention::{Allocation, AttentionRequest};
 use pasa::experiments::{self, ExpOptions};
-use pasa::numerics::{finite_range, has_overflow};
+use pasa::numerics::finite_range;
 use pasa::runtime::ModelRuntime;
 use pasa::workloads::{all_traces, ResonanceCategory, ResonanceSpec};
 use std::path::Path;
@@ -32,15 +32,19 @@ fn main() -> anyhow::Result<()> {
 
     println!("== lab: end-to-end attention on the traces ==");
     for t in all_traces(opts.trace_scale) {
-        let case = to_fp16_inputs(&t.generate(opts.seed));
-        let fa = flash_attention(&case, &AttentionConfig::new(Allocation::Fa16_32));
-        let pasa_o = pasa_attention(&case, &AttentionConfig::new(Allocation::Pasa16));
+        let req =
+            AttentionRequest::from_case(&t.generate(opts.seed), Allocation::Fa16_32)
+                .with_fp16_inputs();
+        let fa = req.run();
+        let pasa_o = req.clone().with_alloc(Allocation::Pasa16).run();
         println!(
-            "  {:<12} FA(FP16-FP32) overflow={}  PASA overflow={}  PASA out range={:?}",
+            "  {:<12} FA(FP16-FP32) overflow={} (max |S|={:.3e})  \
+             PASA overflow={}  PASA out range={:?}",
             t.name,
-            has_overflow(&fa.data),
-            has_overflow(&pasa_o.data),
-            finite_range(&pasa_o.data)
+            fa.overflowed(),
+            fa.max_abs_score(),
+            pasa_o.overflowed(),
+            finite_range(&pasa_o.heads[0].data)
         );
     }
 

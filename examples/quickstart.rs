@@ -1,40 +1,70 @@
 //! Quickstart: the three layers in one page.
 //!
-//! 1. The rust attention lab (bit-exact FP16 emulation) shows the paper's
-//!    headline behaviour: partially-low-precision FA overflows on biased
-//!    data; PASA does not.
+//! 1. The rust attention lab (bit-exact FP16 emulation) through the
+//!    unified kernel API: build an `AttentionRequest` (masked, GQA,
+//!    multi-head), dispatch it through `KernelRegistry`, and read the
+//!    overflow telemetry the adaptive guard consumes. The paper's
+//!    headline behaviour falls out: partially-low-precision FA overflows
+//!    on biased data; PASA — same request, different allocation — does
+//!    not.
 //! 2. The AOT runtime loads the Pallas-built HLO head kernels and runs the
 //!    same comparison through PJRT (requires `make artifacts`).
 //!
 //! Run: cargo run --release --example quickstart
 
-use pasa::attention::{
-    flash_attention, naive_attention_f32, pasa_attention, to_fp16_inputs, Allocation,
-    AttentionConfig,
-};
-use pasa::numerics::{has_overflow, relative_rmse};
+use pasa::attention::{Allocation, AttentionRequest, AttnMask, KernelRegistry};
+use pasa::coordinator::GuardSignal;
+use pasa::numerics::relative_rmse;
 use pasa::runtime::ModelRuntime;
-use pasa::workloads::{gen_case, Distribution, Pcg64};
+use pasa::workloads::{gen_gqa_multihead, Distribution};
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
-    println!("== 1. attention lab (software FP16) ==");
-    // The paper's Fig 9(a) overflow point: uniform mean 30, amplitude 0.5.
+    println!("== 1. attention lab (software FP16, unified kernel API) ==");
+    // The paper's Fig 9(a) overflow point — uniform mean 30, amplitude
+    // 0.5 — as a GQA workload: 8 causal query heads over 2 KV heads.
     let dist = Distribution::Uniform { x0: 30.0, am: 0.5 };
-    let mut rng = Pcg64::new(7, 0);
-    let case = to_fp16_inputs(&gen_case(dist, 512, 512, 128, &mut rng));
-    let golden = naive_attention_f32(&case);
-
-    let fa = flash_attention(&case, &AttentionConfig::new(Allocation::Fa16_32));
+    let mh = gen_gqa_multihead(dist, 8, 2, 256, 256, 128, 7);
+    let req = AttentionRequest::from_multihead(&mh, Allocation::Fa16_32)
+        .with_mask(AttnMask::Causal)
+        .with_fp16_inputs();
     println!(
-        "FA(FP16-FP32): overflow = {} (paper: overflows at x0=30)",
-        has_overflow(&fa.data)
+        "request: {} heads / {} KV heads, mask={}, seq {}x{}, d={}",
+        req.n_heads(),
+        req.n_kv_heads(),
+        req.mask.label(),
+        req.seq_q(),
+        req.seq_kv(),
+        req.head_dim()
     );
-    let pasa_out = pasa_attention(&case, &AttentionConfig::new(Allocation::Pasa16));
+
+    let golden = KernelRegistry::naive().forward(&req);
+
+    let fa = req.run();
+    let fa_sig = GuardSignal::from_attention(&fa);
     println!(
-        "PASA(FP16):    overflow = {}, RMSE vs golden = {:.3e}",
-        has_overflow(&pasa_out.data),
-        relative_rmse(&pasa_out.data, &golden.data)
+        "FA(FP16-FP32): overflow = {} ({} pre-store events, max |S| = {:.3e}) \
+         — the guard's replay trigger",
+        fa.overflowed(),
+        fa_sig.overflow_events,
+        fa_sig.max_abs_score
+    );
+
+    // Same request, PASA allocation — the drop-in replacement claim.
+    let pasa_out = req.clone().with_alloc(Allocation::Pasa16).run();
+    let mut worst = 0.0f64;
+    for h in 0..req.n_heads() {
+        worst = worst.max(relative_rmse(
+            &pasa_out.heads[h].data,
+            &golden.heads[h].data,
+        ));
+    }
+    println!(
+        "PASA(FP16):    overflow = {}, max |S'| = {:.3e} (shift collapsed the bias), \
+         worst head RMSE vs golden = {:.3e}",
+        pasa_out.overflowed(),
+        pasa_out.max_abs_score(),
+        worst
     );
 
     println!("\n== 2. AOT runtime (PJRT, Pallas-built kernels) ==");
@@ -46,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     let rt = ModelRuntime::load(art)?;
     // Benign inputs through the pasa and fa32 head modules.
     let n = 512 * 128;
-    let mut rng = Pcg64::new(8, 0);
+    let mut rng = pasa::workloads::Pcg64::new(8, 0);
     let q: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
     let k: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
     let v: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();

@@ -34,6 +34,20 @@ pub enum Allocation {
 }
 
 impl Allocation {
+    /// Parse the wire spelling of an allocation — the strings
+    /// `Guard::allocation()` emits and the artifact manifest uses. A
+    /// guard-side test pins every guard spelling to a lab allocation so
+    /// the two vocabularies cannot drift apart.
+    pub fn parse(s: &str) -> Option<Allocation> {
+        match s {
+            "fa32" => Some(Allocation::Fa32),
+            "fa16_32" => Some(Allocation::Fa16_32),
+            "fa16" => Some(Allocation::Fa16),
+            "pasa" | "pasa16" => Some(Allocation::Pasa16),
+            _ => None,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Allocation::Fa32 => "FA(FP32)",
@@ -139,6 +153,15 @@ mod tests {
         assert_eq!(Allocation::Fa16_32.vector_fmt(), Format::F32);
         assert_eq!(Allocation::Fa16.vector_fmt(), Format::F16);
         assert_eq!(Allocation::Pasa16.vector_fmt(), Format::F16);
+    }
+
+    #[test]
+    fn parse_round_trips_guard_spellings() {
+        assert_eq!(Allocation::parse("pasa"), Some(Allocation::Pasa16));
+        assert_eq!(Allocation::parse("fa16_32"), Some(Allocation::Fa16_32));
+        assert_eq!(Allocation::parse("fa32"), Some(Allocation::Fa32));
+        assert_eq!(Allocation::parse("fa16"), Some(Allocation::Fa16));
+        assert_eq!(Allocation::parse("bf16"), None);
     }
 
     #[test]

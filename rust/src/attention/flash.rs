@@ -1,5 +1,6 @@
 //! Flash Attention 2 (§1.1, Eqs. 1–8) under each precision allocation of
-//! Figs. 1–3 (S4).
+//! Figs. 1–3 (S4), with prefix-mask support and pre-store overflow
+//! telemetry.
 //!
 //! The block loop is the paper's: for each Q block i sweep the KV blocks j,
 //! maintaining the online (m, l, O) triplet. Precision emulation:
@@ -10,46 +11,79 @@
 //!
 //! Overflow semantics follow IEEE: S elements beyond ±65504 become ±inf;
 //! +inf makes the row max infinite and `exp(inf − inf) = NaN` poisons the
-//! row — exactly the paper's INF/NaN failure mode.
+//! row — exactly the paper's INF/NaN failure mode. Masking never changes
+//! that: masked score positions are skipped on the matrix engine and
+//! filled with −inf (zero softmax weight); fully-masked query rows produce
+//! zero output rows rather than NaN; and KV blocks past every row's
+//! visible prefix are skipped outright (the flash-causal tiling win).
 
 use super::config::AttentionConfig;
-use crate::tensor::{matmul_nn, matmul_nt, ops, Matrix};
+use super::request::{HeadMask, HeadStats};
+use crate::tensor::{matmul_nn, matmul_nt_prefix, matmul_nt_stats, ops, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
 
-/// FA2 forward pass for one head.
+/// FA2 forward pass for one (unmasked) head — legacy single-head entry.
 pub fn flash_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
-    let (s1_total, d) = case.q.shape();
-    let s2_total = case.k.rows;
+    flash_head(&case.q, &case.k, &case.v, HeadMask::None, cfg).0
+}
+
+/// Masked FA2 forward pass for one head, with telemetry. This is the
+/// inner kernel [`super::kernel::FlashKernel`] fans out per head.
+pub fn flash_head(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    mask: HeadMask,
+    cfg: &AttentionConfig,
+) -> (Matrix, HeadStats) {
+    let (s1_total, d) = q.shape();
+    let s2_total = k.rows;
     let alpha = (d as f64).sqrt() as f32;
     let inv_alpha = 1.0 / alpha;
     let bs = cfg.blocks;
     let vfmt = cfg.alloc.vector_fmt();
     let sfmt = cfg.alloc.score_fmt();
     let gemm = cfg.gemm();
+    let boundary = gemm.store.overflow_boundary() as f32;
+    let mut gstats = GemmStats::default();
 
-    let mut out = Matrix::zeros(s1_total, d);
+    let mut out = Matrix::zeros(s1_total, v.cols);
 
     let mut i0 = 0;
     while i0 < s1_total {
         let i1 = (i0 + bs.s1).min(s1_total);
-        let qi = case.q.rows_slice(i0, i1);
+        let qi = q.rows_slice(i0, i1);
         let rows = i1 - i0;
+        // Visible KV prefix per query row; prefix masks are monotone in i,
+        // so the last row bounds the block sweep.
+        let vis = mask.visible_rows(i0, i1, s1_total, s2_total);
+        let max_vis = *vis.last().unwrap();
 
         // Online state: m starts at −inf (Eq. 4's identity element),
         // l at 0, O at 0.
         let mut m = vec![f32::NEG_INFINITY; rows];
         let mut l = vec![0.0f32; rows];
-        let mut oi = Matrix::zeros(rows, d);
+        let mut oi = Matrix::zeros(rows, v.cols);
 
         let mut j0 = 0;
         while j0 < s2_total {
+            if j0 >= max_vis {
+                break; // every remaining KV block is invisible to this Q block
+            }
             let j1 = (j0 + bs.s2).min(s2_total);
-            let kj = case.k.rows_slice(j0, j1);
-            let vj = case.v.rows_slice(j0, j1);
+            let kj = k.rows_slice(j0, j1);
+            let vj = v.rows_slice(j0, j1);
+            let width = j1 - j0;
+            let bvis: Vec<usize> = vis.iter().map(|&t| t.saturating_sub(j0).min(width)).collect();
 
             // Eq. (1): S = Q_i·K_jᵀ — the matrix-engine GEMM; the store
-            // format decides whether |S| > 65504 overflows.
-            let s = matmul_nt(&qi, &kj, gemm);
+            // format decides whether |S| > 65504 overflows. Masked columns
+            // are skipped and filled with −inf.
+            let s = if bvis.iter().all(|&b| b == width) {
+                matmul_nt_stats(&qi, &kj, gemm, None, boundary, &mut gstats)
+            } else {
+                matmul_nt_prefix(&qi, &kj, gemm, &bvis, f32::NEG_INFINITY, boundary, &mut gstats)
+            };
             // Eq. (2): static scaling S/α in the score format (inf/α = inf).
             let s = ops::scale(&s, inv_alpha, sfmt);
 
@@ -79,21 +113,29 @@ pub fn flash_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
             j0 = j1;
         }
 
-        // Eq. (8): O_i = O_i / l.
+        // Eq. (8): O_i = O_i / l. Fully-masked rows (vis == 0, l == 0)
+        // are zero by definition — the online state never saw a score, so
+        // 0/0 here is a masking artifact, not a data overflow.
         let oi = ops::div_rows(&oi, &l, vfmt);
         for r in 0..rows {
-            out.row_mut(i0 + r).copy_from_slice(oi.row(r));
+            let dst = out.row_mut(i0 + r);
+            if vis[r] == 0 {
+                dst.fill(0.0);
+            } else {
+                dst.copy_from_slice(oi.row(r));
+            }
         }
         i0 = i1;
     }
-    out
+    let stats = HeadStats::finish(gstats, &out);
+    (out, stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::config::Allocation;
-    use crate::attention::naive::naive_attention_f32;
+    use crate::attention::naive::{naive_attention_f32, naive_attention_masked_f32};
     use crate::numerics::{has_overflow, relative_rmse, Format};
     use crate::workloads::{gen_case, Distribution, Pcg64};
 
@@ -140,8 +182,17 @@ mod tests {
         // S ≈ 30·30·128 = 115200 > 65504 — the FP16 store overflows and
         // the output is poisoned with NaN.
         let c = rounded_case(Distribution::Uniform { x0: 30.0, am: 0.5 }, 256, 128, 4);
-        let o = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+        let (o, stats) = flash_head(
+            &c.q,
+            &c.k,
+            &c.v,
+            HeadMask::None,
+            &AttentionConfig::new(Allocation::Fa16_32),
+        );
         assert!(has_overflow(&o.data), "expected NaN/inf in output");
+        assert!(stats.overflow_events > 0);
+        assert!(stats.max_abs_score > 65504.0);
+        assert!(stats.nonfinite_outputs > 0);
         // While FA(FP32) sails through:
         let o32 = flash_attention(&c, &AttentionConfig::new(Allocation::Fa32));
         assert!(!has_overflow(&o32.data));
@@ -156,5 +207,49 @@ mod tests {
         let e = relative_rmse(&o.data, &golden.data);
         assert!(e < 5e-2, "rmse {e}");
         assert!(e > 1e-6, "suspiciously exact for full FP16");
+    }
+
+    #[test]
+    fn causal_mask_matches_masked_naive_across_blockings() {
+        let c = rounded_case(Distribution::Uniform { x0: 1.0, am: 1.0 }, 100, 16, 6);
+        let golden = naive_attention_masked_f32(&c, HeadMask::Causal);
+        for &(s1, s2) in &[(32usize, 32usize), (64, 64), (100, 100), (64, 32)] {
+            let cfg = AttentionConfig::new(Allocation::Fa32).with_blocks(s1, s2);
+            let (o, _) = flash_head(&c.q, &c.k, &c.v, HeadMask::Causal, &cfg);
+            let e = relative_rmse(&o.data, &golden.data);
+            assert!(e < 1e-5, "blocks ({s1},{s2}): rmse {e}");
+        }
+    }
+
+    #[test]
+    fn masking_rescues_a_poisoned_padding_region() {
+        // Keys in the padding region are huge; unmasked FA16-32 dies,
+        // prefix-masked FA16-32 matches the truncated reference.
+        let mut c = rounded_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 128, 64, 7);
+        for r in 96..128 {
+            for j in 0..64 {
+                c.k.set(r, j, 3.0e4);
+            }
+        }
+        let cfg = AttentionConfig::new(Allocation::Fa16_32).with_blocks(64, 64);
+        let (dense, dense_stats) = flash_head(&c.q, &c.k, &c.v, HeadMask::None, &cfg);
+        assert!(has_overflow(&dense.data), "premise: padding poisons");
+        assert!(dense_stats.overflow_events > 0);
+        let (masked, masked_stats) = flash_head(&c.q, &c.k, &c.v, HeadMask::Prefix(96), &cfg);
+        assert!(!has_overflow(&masked.data));
+        assert_eq!(masked_stats.overflow_events, 0);
+        let golden = naive_attention_masked_f32(&c, HeadMask::Prefix(96));
+        let e = relative_rmse(&masked.data, &golden.data);
+        assert!(e < 5e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn fully_masked_rows_are_zero() {
+        let c = rounded_case(Distribution::Uniform { x0: 1.0, am: 0.5 }, 64, 16, 8);
+        let cfg = AttentionConfig::new(Allocation::Fa16_32).with_blocks(32, 32);
+        let (o, stats) = flash_head(&c.q, &c.k, &c.v, HeadMask::Prefix(0), &cfg);
+        assert!(o.data.iter().all(|&x| x == 0.0), "empty softmax must be 0");
+        assert_eq!(stats.nonfinite_outputs, 0);
+        assert_eq!(stats.overflow_events, 0);
     }
 }

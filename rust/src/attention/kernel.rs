@@ -1,0 +1,255 @@
+//! The [`AttentionKernel`] trait and its implementations (S4b).
+//!
+//! Every attention path in the repo — the full-precision golden reference,
+//! Flash Attention under the Figs. 1–3 precision allocations, and PASA —
+//! implements one trait method, `forward(&AttentionRequest)`. Multi-head
+//! execution fans the per-head inner kernels out over OS threads (the
+//! bit-exact emulation is CPU-bound), and PASA shares each KV head's
+//! shifted K' blocks across its GQA query group, so the β-shift GEMM is
+//! paid once per KV head rather than once per query head.
+//!
+//! [`KernelRegistry::get`] is the *only* allocation dispatch in the crate:
+//! callers pick a precision `Allocation`, the registry hands back the
+//! kernel, and every workload shape (masked, GQA, batched) runs through
+//! the exact same code path per kernel.
+
+use super::config::Allocation;
+use super::flash::flash_head;
+use super::naive::naive_head;
+use super::pasa::{pasa_head, pasa_preprocess, PasaPre};
+use super::request::{AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats};
+use crate::tensor::Matrix;
+
+/// A forward-only attention kernel over [`AttentionRequest`]s.
+pub trait AttentionKernel: Sync {
+    fn name(&self) -> &'static str;
+    fn forward(&self, req: &AttentionRequest) -> AttentionOutput;
+}
+
+/// Fan a per-head computation out over OS threads, one per head —
+/// mirroring the experiment harness's historical thread-per-head layout.
+fn fanout_heads<F>(n: usize, f: F) -> (Vec<Matrix>, Vec<HeadStats>)
+where
+    F: Fn(usize) -> (Matrix, HeadStats) + Sync,
+{
+    if n <= 1 {
+        return (0..n).map(&f).unzip();
+    }
+    let results: Vec<(Matrix, HeadStats)> = std::thread::scope(|scope| {
+        let fref = &f;
+        let handles: Vec<_> = (0..n).map(|h| scope.spawn(move || fref(h))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    results.into_iter().unzip()
+}
+
+/// Full-precision golden reference (the `O_Golden` of Eq. 19): f32 GEMMs,
+/// f64-carried masked softmax. Its stats instrument the *raw* scores
+/// against the FP16 boundary — "would a low-precision store have
+/// overflowed here".
+pub struct NaiveKernel;
+
+impl AttentionKernel for NaiveKernel {
+    fn name(&self) -> &'static str {
+        "naive-f32"
+    }
+
+    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
+        req.validate().expect("invalid AttentionRequest");
+        let (heads, stats) = fanout_heads(req.n_heads(), |h| {
+            let kv = req.kv_head_for(h);
+            naive_head(&req.q[h], &req.k[kv], &req.v[kv], req.mask_for_head(h))
+        });
+        AttentionOutput { heads, stats }
+    }
+}
+
+/// Flash Attention 2 under the precision allocation carried by the
+/// request (Fa32 / Fa16_32 / Fa16 — Figs. 1–3).
+pub struct FlashKernel;
+
+impl AttentionKernel for FlashKernel {
+    fn name(&self) -> &'static str {
+        "flash"
+    }
+
+    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
+        req.validate().expect("invalid AttentionRequest");
+        let (heads, stats) = fanout_heads(req.n_heads(), |h| {
+            let kv = req.kv_head_for(h);
+            flash_head(&req.q[h], &req.k[kv], &req.v[kv], req.mask_for_head(h), &req.cfg)
+        });
+        AttentionOutput { heads, stats }
+    }
+}
+
+/// PASA (Algorithm 1): fully-FP16 flash attention with pseudo-average
+/// shifting. The K' = M·K preprocessing is computed once per KV head and
+/// shared by the whole GQA query group; padded requests preprocess only
+/// the valid KV prefix so padding garbage never leaks into the
+/// pseudo-average.
+pub struct PasaKernel;
+
+impl AttentionKernel for PasaKernel {
+    fn name(&self) -> &'static str {
+        "pasa"
+    }
+
+    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
+        req.validate().expect("invalid AttentionRequest");
+        match &req.mask {
+            AttnMask::Padded(_) => {
+                // Per-head valid lengths: shift only the valid KV prefix.
+                // Preprocessing is still shared — once per distinct
+                // (KV head, valid length) pair, so a GQA group with a
+                // broadcast length pays the K' GEMM once, not per head.
+                let padded_len = |h: usize| {
+                    let kv = req.kv_head_for(h);
+                    match req.mask_for_head(h) {
+                        HeadMask::Prefix(l) => l.min(req.k[kv].rows),
+                        _ => unreachable!("Padded mask resolves to Prefix"),
+                    }
+                };
+                let mut pres: Vec<((usize, usize), PasaPre)> = Vec::new();
+                for h in 0..req.n_heads() {
+                    let key = (req.kv_head_for(h), padded_len(h));
+                    if key.1 > 0 && !pres.iter().any(|(k, _)| *k == key) {
+                        let kt = req.k[key.0].rows_slice(0, key.1);
+                        pres.push((key, pasa_preprocess(&kt, &req.cfg)));
+                    }
+                }
+                let (heads, stats) = fanout_heads(req.n_heads(), |h| {
+                    let kv = req.kv_head_for(h);
+                    let len = padded_len(h);
+                    if len == 0 {
+                        // Empty visible set: softmax over nothing is
+                        // defined as zero attention output, not NaN.
+                        let out = Matrix::zeros(req.q[h].rows, req.v[kv].cols);
+                        return (out, HeadStats::default());
+                    }
+                    let pre = &pres.iter().find(|(k, _)| *k == (kv, len)).unwrap().1;
+                    let vt = req.v[kv].rows_slice(0, len);
+                    pasa_head(&req.q[h], &vt, pre, HeadMask::None, &req.cfg)
+                });
+                AttentionOutput { heads, stats }
+            }
+            _ => {
+                // Shared preprocessing per KV head (GQA groups reuse K').
+                let pres: Vec<PasaPre> = req
+                    .k
+                    .iter()
+                    .map(|k| pasa_preprocess(k, &req.cfg))
+                    .collect();
+                let (heads, stats) = fanout_heads(req.n_heads(), |h| {
+                    let kv = req.kv_head_for(h);
+                    pasa_head(&req.q[h], &req.v[kv], &pres[kv], req.mask_for_head(h), &req.cfg)
+                });
+                AttentionOutput { heads, stats }
+            }
+        }
+    }
+}
+
+static NAIVE: NaiveKernel = NaiveKernel;
+static FLASH: FlashKernel = FlashKernel;
+static PASA: PasaKernel = PasaKernel;
+
+/// Allocation → kernel. The single construction-time dispatch point.
+pub struct KernelRegistry;
+
+impl KernelRegistry {
+    /// Kernel implementing the given precision allocation. The three FA
+    /// allocations share [`FlashKernel`] (the allocation itself carries
+    /// the format table); PASA has its own kernel.
+    pub fn get(alloc: Allocation) -> &'static dyn AttentionKernel {
+        match alloc {
+            Allocation::Pasa16 => &PASA,
+            Allocation::Fa32 | Allocation::Fa16_32 | Allocation::Fa16 => &FLASH,
+        }
+    }
+
+    /// The full-precision golden reference (not an `Allocation` — it is
+    /// the metric's denominator, not a candidate).
+    pub fn naive() -> &'static dyn AttentionKernel {
+        &NAIVE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::relative_rmse;
+    use crate::workloads::{gen_case, Distribution, Pcg64};
+
+    fn single(seed: u64) -> AttentionRequest {
+        let mut rng = Pcg64::new(seed, 0);
+        let c = gen_case(Distribution::Uniform { x0: 0.5, am: 1.0 }, 96, 96, 16, &mut rng);
+        AttentionRequest::from_case(&c, Allocation::Fa32).with_fp16_inputs()
+    }
+
+    #[test]
+    fn registry_covers_every_allocation() {
+        assert_eq!(KernelRegistry::get(Allocation::Pasa16).name(), "pasa");
+        for alloc in [Allocation::Fa32, Allocation::Fa16_32, Allocation::Fa16] {
+            assert_eq!(KernelRegistry::get(alloc).name(), "flash");
+        }
+        assert_eq!(KernelRegistry::naive().name(), "naive-f32");
+    }
+
+    #[test]
+    fn run_dispatches_on_request_allocation() {
+        let req = single(1);
+        let golden = KernelRegistry::naive().forward(&req);
+        for alloc in Allocation::all() {
+            let out = req.clone().with_alloc(alloc).run();
+            assert_eq!(out.heads.len(), 1);
+            assert_eq!(out.heads[0].shape(), golden.heads[0].shape());
+            let e = relative_rmse(&out.heads[0].data, &golden.heads[0].data);
+            assert!(e < 5e-2, "{}: rmse {e}", alloc.name());
+        }
+    }
+
+    #[test]
+    fn multihead_fanout_matches_per_head_runs() {
+        // A 4-head MHA request must equal four independent single-head
+        // runs, bit for bit (thread fan-out is pure).
+        let mut rng = Pcg64::new(7, 0);
+        let dist = Distribution::Uniform { x0: 2.0, am: 1.0 };
+        let mut req = AttentionRequest::new(Allocation::Fa16_32);
+        for _ in 0..4 {
+            let c = gen_case(dist, 64, 64, 16, &mut rng);
+            req = req.with_head(c.q, c.k, c.v);
+        }
+        let req = req.with_fp16_inputs().with_blocks(32, 32);
+        let out = req.run();
+        assert_eq!(out.heads.len(), 4);
+        for h in 0..4 {
+            let sub = AttentionRequest::from_case_cfg(&req.head_case(h), req.cfg);
+            let solo = sub.run();
+            assert_eq!(out.heads[h].data, solo.heads[0].data, "head {h}");
+            assert_eq!(
+                out.stats[h].overflow_events,
+                solo.stats[0].overflow_events,
+                "head {h} stats"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_flag_overflow_before_output_poisoning() {
+        // Fig. 9(a) x0=30: FA16-32 overflows; the stats must report both
+        // the pre-store magnitude and the poisoned output.
+        let mut rng = Pcg64::new(4, 0);
+        let c = gen_case(Distribution::Uniform { x0: 30.0, am: 0.5 }, 256, 256, 128, &mut rng);
+        let req = AttentionRequest::from_case(&c, Allocation::Fa16_32).with_fp16_inputs();
+        let out = req.run();
+        assert!(out.overflowed());
+        assert!(out.overflow_events() > 0);
+        assert!(out.max_abs_score() > 65504.0);
+        // PASA on the same request: clean stats end to end.
+        let p = req.with_alloc(Allocation::Pasa16).run();
+        assert!(!p.overflowed());
+        assert_eq!(p.overflow_events(), 0);
+        assert!(p.max_abs_score() < 65504.0);
+    }
+}

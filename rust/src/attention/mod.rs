@@ -1,24 +1,44 @@
 //! Attention lab (S4): the paper's algorithm and every baseline, under
-//! bit-exact precision emulation.
+//! bit-exact precision emulation, behind one kernel API.
 //!
-//! Entry point: [`run_attention`] dispatches an [`AttentionConfig`] over a
-//! single-head [`crate::workloads::AttentionCase`]; inputs are rounded to
-//! the FP16 grid first (models store activations in half precision — the
-//! paper's premise that "input tensors are within the normal range of low
-//! precision formats").
+//! The single entry point is the [`AttentionRequest`] → [`AttentionKernel`]
+//! → [`AttentionOutput`] pipeline:
+//!
+//! * build an [`AttentionRequest`] (builder-style) carrying Q/K/V for
+//!   `n_heads` query heads over `n_kv_heads` KV heads (MQA/GQA via the
+//!   head-group mapping), an [`AttnMask`] (`None | Causal | Padded`),
+//!   block sizes, PASA's β and the precision [`Allocation`];
+//! * fetch the kernel from [`KernelRegistry::get`] — the crate's only
+//!   allocation dispatch — or call [`AttentionRequest::run`];
+//! * read per-head outputs and overflow telemetry (max |S| before store
+//!   rounding, overflow-event counts) off the [`AttentionOutput`], which
+//!   is what the coordinator's adaptive guard consumes.
+//!
+//! Inputs are conventionally rounded to the FP16 grid first
+//! ([`AttentionRequest::with_fp16_inputs`] / [`to_fp16_inputs`]) — models
+//! store activations in half precision, the paper's premise that "input
+//! tensors are within the normal range of low precision formats".
+//!
+//! The per-head inner kernels remain available as free functions
+//! ([`flash_attention`], [`pasa_attention`], [`naive_attention_f32`] and
+//! their masked variants) for single-head studies and goldens.
 
 pub mod beta;
 pub mod config;
 pub mod flash;
+pub mod kernel;
 pub mod naive;
 pub mod pasa;
+pub mod request;
 pub mod shifting;
 
 pub use beta::{solve_optimal_beta, PAPER_BETA, PAPER_BETAS};
 pub use config::{Allocation, AttentionConfig, BlockSizes};
-pub use flash::flash_attention;
-pub use naive::{naive_attention_f32, raw_scores_f32};
-pub use pasa::pasa_attention;
+pub use flash::{flash_attention, flash_head};
+pub use kernel::{AttentionKernel, FlashKernel, KernelRegistry, NaiveKernel, PasaKernel};
+pub use naive::{naive_attention_f32, naive_attention_masked_f32, raw_scores_f32};
+pub use pasa::{pasa_attention, pasa_head, pasa_preprocess, PasaPre};
+pub use request::{AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats};
 pub use shifting::{preprocess_k, shifting_inverse, shifting_matrix};
 
 use crate::numerics::Format;
@@ -34,12 +54,13 @@ pub fn to_fp16_inputs(case: &AttentionCase) -> AttentionCase {
     c
 }
 
-/// Run one attention configuration over a case with FP16-gridded inputs.
+/// Run one attention configuration over a single-head case.
+#[deprecated(
+    since = "0.2.0",
+    note = "build an AttentionRequest and use KernelRegistry::get / AttentionRequest::run"
+)]
 pub fn run_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
-    match cfg.alloc {
-        Allocation::Pasa16 => pasa_attention(case, cfg),
-        _ => flash_attention(case, cfg),
-    }
+    AttentionRequest::from_case_cfg(case, *cfg).run().single()
 }
 
 #[cfg(test)]
@@ -49,22 +70,37 @@ mod tests {
     use crate::workloads::{gen_case, Distribution, Pcg64};
 
     #[test]
-    fn dispatch_covers_all_allocations() {
+    fn registry_dispatch_covers_all_allocations() {
         let mut rng = Pcg64::new(1, 0);
+        let c = gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 96, 96, 16, &mut rng);
+        let req = AttentionRequest::from_case(&c, Allocation::Fa32)
+            .with_blocks(32, 32)
+            .with_fp16_inputs();
+        let golden = KernelRegistry::naive().forward(&req);
+        for alloc in Allocation::all() {
+            let out = req.clone().with_alloc(alloc).run();
+            assert_eq!(out.heads[0].shape(), golden.heads[0].shape());
+            let e = relative_rmse(&out.heads[0].data, &golden.heads[0].data);
+            assert!(e < 5e-2, "{}: rmse {e}", alloc.name());
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shim_agrees_with_registry() {
+        let mut rng = Pcg64::new(2, 0);
         let c = to_fp16_inputs(&gen_case(
-            Distribution::Uniform { x0: 0.0, am: 1.0 },
-            96,
-            96,
+            Distribution::Uniform { x0: 1.0, am: 1.0 },
+            64,
+            64,
             16,
             &mut rng,
         ));
-        let golden = naive_attention_f32(&c);
         for alloc in Allocation::all() {
             let cfg = AttentionConfig::new(alloc).with_blocks(32, 32);
-            let o = run_attention(&c, &cfg);
-            assert_eq!(o.shape(), golden.shape());
-            let e = relative_rmse(&o.data, &golden.data);
-            assert!(e < 5e-2, "{}: rmse {e}", alloc.name());
+            let legacy = run_attention(&c, &cfg);
+            let new = AttentionRequest::from_case_cfg(&c, cfg).run().single();
+            assert_eq!(legacy.data, new.data, "{}", alloc.name());
         }
     }
 }

@@ -1,17 +1,82 @@
 //! Golden-reference standard attention (§1.1's four steps) in full
-//! precision — the `O_Golden` of the paper's RMSE metric (Eq. 19).
+//! precision — the `O_Golden` of the paper's RMSE metric (Eq. 19), with
+//! prefix-mask support (causal / padded) so masked Flash/PASA runs have an
+//! exact reference. A fully-masked query row is defined to produce a zero
+//! output row (softmax over the empty set must not NaN).
 
-use crate::tensor::{matmul_nn, matmul_nt, ops, GemmPrecision, Matrix};
+use super::request::{HeadMask, HeadStats};
+use crate::numerics::Format;
+use crate::tensor::{matmul_nt, matmul_nt_stats, GemmPrecision, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
 
 /// O = softmax(Q·Kᵀ/α)·V with f32 GEMMs and f64-carried softmax.
 pub fn naive_attention_f32(case: &AttentionCase) -> Matrix {
-    let d = case.head_dim();
-    let alpha = (d as f64).sqrt() as f32;
-    let s = matmul_nt(&case.q, &case.k, GemmPrecision::F32);
-    let scaled = ops::scale(&s, 1.0 / alpha, crate::numerics::Format::F32);
-    let p = ops::softmax_rows_f32(&scaled);
-    matmul_nn(&p, &case.v, GemmPrecision::F32)
+    naive_head(&case.q, &case.k, &case.v, HeadMask::None).0
+}
+
+/// Masked golden reference: query row `i` attends to the visible KV
+/// prefix of `mask`; fully-masked rows yield zeros.
+pub fn naive_attention_masked_f32(case: &AttentionCase, mask: HeadMask) -> Matrix {
+    naive_head(&case.q, &case.k, &case.v, mask).0
+}
+
+/// Per-head golden kernel: f32 scores, f64 softmax and f64 P·V
+/// accumulation over the visible prefix. Stats instrument the raw scores
+/// against the FP16 boundary ("would a low-precision store overflow
+/// here"), restricted to the visible region.
+pub(crate) fn naive_head(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    mask: HeadMask,
+) -> (Matrix, HeadStats) {
+    let (s1, d) = q.shape();
+    let s2 = k.rows;
+    let alpha = (d as f64).sqrt();
+    let vis = mask.visible_rows(0, s1, s1, s2);
+    let mut gstats = GemmStats::default();
+    let s = matmul_nt_stats(
+        q,
+        k,
+        GemmPrecision::F32,
+        Some(&vis),
+        Format::F16.overflow_boundary() as f32,
+        &mut gstats,
+    );
+    let mut out = Matrix::zeros(s1, v.cols);
+    let mut p = vec![0.0f64; s2];
+    let mut acc = vec![0.0f64; v.cols];
+    for i in 0..s1 {
+        let n = vis[i];
+        if n == 0 {
+            continue; // fully masked: zero row by definition
+        }
+        let row = s.row(i);
+        let mut mx = f64::NEG_INFINITY;
+        for &x in &row[..n] {
+            mx = mx.max(x as f64 / alpha);
+        }
+        let mut sum = 0.0f64;
+        for j in 0..n {
+            let e = (row[j] as f64 / alpha - mx).exp();
+            p[j] = e;
+            sum += e;
+        }
+        acc.fill(0.0);
+        for j in 0..n {
+            let w = p[j] / sum;
+            let vr = v.row(j);
+            for (a, &vx) in acc.iter_mut().zip(vr) {
+                *a += w * vx as f64;
+            }
+        }
+        let dst = out.row_mut(i);
+        for (o, &a) in dst.iter_mut().zip(&acc) {
+            *o = a as f32;
+        }
+    }
+    let stats = HeadStats::finish(gstats, &out);
+    (out, stats)
 }
 
 /// The raw attention score matrix S = Q·Kᵀ (pre-scaling) in f32 — used by
@@ -85,5 +150,58 @@ mod tests {
         for (a, b) in o1.data.iter().zip(&o2.data) {
             assert!((a - b).abs() < 2e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn causal_mask_first_row_copies_first_value_row() {
+        // Square causal: row 0 sees only KV position 0, so its output is
+        // exactly V's row 0.
+        let mut rng = Pcg64::new(8, 0);
+        let c = gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 8, 8, 4, &mut rng);
+        let o = naive_attention_masked_f32(&c, HeadMask::Causal);
+        for j in 0..4 {
+            assert!((o.at(0, j) - c.v.at(0, j)).abs() < 1e-6, "col {j}");
+        }
+        // And the last row matches the unmasked reference's last row.
+        let dense = naive_attention_f32(&c);
+        for j in 0..4 {
+            assert!((o.at(7, j) - dense.at(7, j)).abs() < 1e-6, "col {j}");
+        }
+    }
+
+    #[test]
+    fn fully_masked_rows_are_zero_not_nan() {
+        let mut rng = Pcg64::new(9, 0);
+        let c = gen_case(Distribution::Uniform { x0: 1.0, am: 1.0 }, 6, 10, 4, &mut rng);
+        let o = naive_attention_masked_f32(&c, HeadMask::Prefix(0));
+        assert!(o.data.iter().all(|&x| x == 0.0));
+        // Prefix mask ignores the padding region entirely.
+        let o3 = naive_attention_masked_f32(&c, HeadMask::Prefix(3));
+        let truncated = AttentionCase {
+            q: c.q.clone(),
+            k: c.k.rows_slice(0, 3),
+            v: c.v.rows_slice(0, 3),
+        };
+        let golden = naive_attention_f32(&truncated);
+        for (a, b) in o3.data.iter().zip(&golden.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn masked_stats_ignore_invisible_scores() {
+        // Huge keys hidden behind a Prefix mask must not report overflow.
+        let mut rng = Pcg64::new(10, 0);
+        let mut c = gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 4, 8, 64, &mut rng);
+        for r in 4..8 {
+            for j in 0..64 {
+                c.k.set(r, j, 3.0e4);
+                c.q.set(r % 4, j, 1.0);
+            }
+        }
+        let (_, masked) = naive_head(&c.q, &c.k, &c.v, HeadMask::Prefix(4));
+        assert_eq!(masked.overflow_events, 0, "masked overflow leaked");
+        let (_, dense) = naive_head(&c.q, &c.k, &c.v, HeadMask::None);
+        assert!(dense.overflow_events > 0, "premise: padding would overflow");
     }
 }

@@ -1,9 +1,12 @@
 //! PASA — Algorithm 1 (S4): fully-FP16 flash attention with online
-//! pseudo-average shifting and global recovering.
+//! pseudo-average shifting and global recovering, factored into a
+//! preprocessing stage ([`pasa_preprocess`]) and a per-head inner kernel
+//! ([`pasa_head`]) so GQA query groups can share each KV head's shifted
+//! K' blocks.
 //!
 //! Pipeline per Q block i, sweeping KV blocks j:
 //!
-//! 1. (once per KV block) K'_j = M·K_j — batched GEMM folding the β-scaled
+//! 1. (once per KV head) K'_j = M·K_j — batched GEMM folding the β-scaled
 //!    pseudo-average subtraction *and* the 1/α static scaling (Eq. 10–12),
 //! 2. S' = Q_i·K'_jᵀ — bias and amplitude collapsed ⇒ no FP16 overflow,
 //! 3. local softmax stats (m'_j, P, l'_j) on S',
@@ -17,6 +20,17 @@
 //! (Appendix A), which is precisely why the optimal accuracy condition
 //! exists.
 //!
+//! Masking (prefix rules: causal / padded): the dense S' block is still
+//! computed in full — the pseudo-average S̄' that anchors the recovery
+//! frame is defined over the whole n-column block — but masked positions
+//! get zero softmax weight and are excluded from the local maximum and
+//! from the overflow telemetry. The recovery identity is per-row exact
+//! for *any* frame sequence, so skipping fully-invisible KV blocks (and
+//! never updating F̄ for them) keeps the math exact. For padded requests
+//! the [`super::kernel::PasaKernel`] truncates K/V to the valid prefix
+//! before preprocessing instead, so padding garbage never contaminates
+//! the shifted average.
+//!
 //! Deviation from the paper's line 4 (documented): we initialize
 //! m₀ = −inf, not 0. With m₀ = 0 and l₀ = 0, the phantom term
 //! m₀ + Δm'₀ = −Inva·F̄¹ can exceed the genuine block-1 maximum whenever
@@ -26,12 +40,69 @@
 //! test pins this down.
 
 use super::config::AttentionConfig;
+use super::request::{HeadMask, HeadStats};
 use super::shifting::{effective_invariant, preprocess_k, shifting_matrix};
 use crate::numerics::Format;
-use crate::tensor::{matmul_nn, matmul_nt, ops, Matrix};
+use crate::tensor::{matmul_nn, matmul_nt_stats, ops, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
 
-/// PASA forward pass for one head (Algorithm 1).
+/// Shifted K' blocks of one KV head plus the recovery constants —
+/// computed once per KV head and shared across its GQA query group.
+pub struct PasaPre {
+    /// K'_j = M·K_j per KV block (tail block gets its own, smaller M).
+    pub kp_blocks: Vec<Matrix>,
+    /// Effective correction factor c_j of each block's rounded M.
+    pub block_inva: Vec<f32>,
+    /// Correction factor of the main (full-width) block's M.
+    pub inva_main: f32,
+    /// Total KV rows covered.
+    pub s2_total: usize,
+    /// KV block width (the tiling's s2).
+    pub bs2: usize,
+}
+
+/// Pre-processing (Algorithm 1 line 6): K'_j = M·K_j for every KV block;
+/// the ragged tail gets its own, smaller M. Each block carries the
+/// effective correction factor c_j of its rounded M (constants
+/// precomputed at high precision, like the paper's FP64-solved β).
+pub fn pasa_preprocess(k: &Matrix, cfg: &AttentionConfig) -> PasaPre {
+    let s2_total = k.rows;
+    let d = k.cols;
+    let alpha = (d as f64).sqrt();
+    let beta = cfg.beta;
+    let bs2 = cfg.blocks.s2;
+    let gemm = cfg.gemm();
+
+    let mut kp_blocks: Vec<Matrix> = Vec::new();
+    let mut block_inva: Vec<f32> = Vec::new();
+    let m_full = shifting_matrix(bs2, alpha, beta, Format::F16);
+    let inva_main = effective_invariant(&m_full);
+    let mut j0 = 0;
+    while j0 < s2_total {
+        let j1 = (j0 + bs2).min(s2_total);
+        let kj = k.rows_slice(j0, j1);
+        let (m, c) = if j1 - j0 == bs2 {
+            (m_full.clone(), inva_main)
+        } else {
+            let m_tail = shifting_matrix(j1 - j0, alpha, beta, Format::F16);
+            let c_tail = effective_invariant(&m_tail);
+            (m_tail, c_tail)
+        };
+        kp_blocks.push(preprocess_k(&kj, &m, gemm));
+        block_inva.push(c);
+        j0 = j1;
+    }
+    PasaPre {
+        kp_blocks,
+        block_inva,
+        inva_main,
+        s2_total,
+        bs2,
+    }
+}
+
+/// PASA forward pass for one head (Algorithm 1) — legacy single-head
+/// entry over an unmasked case.
 ///
 /// Correction-factor note (documented deviation; see DESIGN.md): the
 /// paper's Inva = β/(1−β) is the recovery constant of the *ideal* M, and
@@ -43,65 +114,83 @@ use crate::workloads::AttentionCase;
 /// exponent. For the ideal α-less M the two definitions coincide, and the
 /// β solved from the paper's condition is still the default hyperparameter.
 pub fn pasa_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
-    let (s1_total, d) = case.q.shape();
-    let s2_total = case.k.rows;
-    let alpha = (d as f64).sqrt();
-    let beta = cfg.beta;
+    let pre = pasa_preprocess(&case.k, cfg);
+    pasa_head(&case.q, &case.v, &pre, HeadMask::None, cfg).0
+}
+
+/// Masked PASA inner kernel over preprocessed K' blocks, with telemetry.
+/// This is what [`super::kernel::PasaKernel`] fans out per query head.
+///
+/// Note on padded prefixes: a `Prefix` mask is honored exactly, but the
+/// block straddling the boundary was shifted with padding rows included in
+/// its pseudo-average; prefer truncating K/V before [`pasa_preprocess`]
+/// (what `PasaKernel` does) when the padding may hold garbage.
+pub fn pasa_head(
+    q: &Matrix,
+    v: &Matrix,
+    pre: &PasaPre,
+    mask: HeadMask,
+    cfg: &AttentionConfig,
+) -> (Matrix, HeadStats) {
+    let (s1_total, _d) = q.shape();
+    let s2_total = pre.s2_total;
     let bs = cfg.blocks;
+    assert_eq!(bs.s2, pre.bs2, "preprocessing used a different KV blocking");
     let vfmt = Format::F16; // Algorithm 1: every vector op is FP16
     let gemm = cfg.gemm();
+    let boundary = gemm.store.overflow_boundary() as f32;
+    let inva_main = pre.inva_main;
+    let mut gstats = GemmStats::default();
 
-    // Pre-processing (line 6): K'_j = M·K_j for every KV block; the ragged
-    // tail gets its own, smaller M. Each block carries the effective
-    // correction factor c_j of its rounded M (constants precomputed at
-    // high precision, like the paper's FP64-solved β).
-    let mut kp_blocks: Vec<Matrix> = Vec::new();
-    let mut block_inva: Vec<f32> = Vec::new();
-    let m_full = shifting_matrix(bs.s2, alpha, beta, Format::F16);
-    let inva_main = effective_invariant(&m_full);
-    let mut j0 = 0;
-    while j0 < s2_total {
-        let j1 = (j0 + bs.s2).min(s2_total);
-        let kj = case.k.rows_slice(j0, j1);
-        let (m, c) = if j1 - j0 == bs.s2 {
-            (m_full.clone(), inva_main)
-        } else {
-            let m_tail = shifting_matrix(j1 - j0, alpha, beta, Format::F16);
-            let c_tail = effective_invariant(&m_tail);
-            (m_tail, c_tail)
-        };
-        kp_blocks.push(preprocess_k(&kj, &m, gemm));
-        block_inva.push(c);
-        j0 = j1;
-    }
-
-    let mut out = Matrix::zeros(s1_total, d);
+    let mut out = Matrix::zeros(s1_total, v.cols);
 
     let mut i0 = 0;
     while i0 < s1_total {
         let i1 = (i0 + bs.s1).min(s1_total);
-        let qi = case.q.rows_slice(i0, i1);
+        let qi = q.rows_slice(i0, i1);
         let rows = i1 - i0;
+        let vis = mask.visible_rows(i0, i1, s1_total, s2_total);
+        let max_vis = *vis.last().unwrap();
 
         // Line 4 (amended): m₀ = −inf, l₀ = 0, F̄⁰ = 0, O = 0.
         let mut m = vec![f32::NEG_INFINITY; rows];
         let mut l = vec![0.0f32; rows];
         let mut fbar = vec![0.0f32; rows];
-        let mut oi = Matrix::zeros(rows, d);
+        let mut oi = Matrix::zeros(rows, v.cols);
 
         let mut j0 = 0;
         let mut jidx = 0usize;
         while j0 < s2_total {
+            if j0 >= max_vis {
+                // Every remaining KV block is invisible to this Q block.
+                // F̄ is left untouched: the recovery frame only has to be
+                // consistent across *processed* blocks.
+                break;
+            }
             let j1 = (j0 + bs.s2).min(s2_total);
-            let vj = case.v.rows_slice(j0, j1);
-            let kp = &kp_blocks[jidx];
+            let vj = v.rows_slice(j0, j1);
+            let kp = &pre.kp_blocks[jidx];
+            let width = j1 - j0;
+            let bvis: Vec<usize> = vis.iter().map(|&t| t.saturating_sub(j0).min(width)).collect();
+            let fully_visible = bvis.iter().all(|&b| b == width);
 
             // Line 11: S' = Q_i·K'_jᵀ — shifted+scaled scores, FP16 store.
-            let s = matmul_nt(&qi, kp, gemm);
+            // Dense even under a mask (S̄' is defined over the full block);
+            // telemetry covers the visible region only.
+            let stat_vis = if fully_visible { None } else { Some(&bvis[..]) };
+            let s = matmul_nt_stats(&qi, kp, gemm, stat_vis, boundary, &mut gstats);
 
-            // Line 12: local softmax stats.
-            let m_loc = ops::rowmax(&s);
-            let p = ops::exp_sub_rowbias(&s, &m_loc, vfmt);
+            // Line 12: local softmax stats, over the visible prefix.
+            let m_loc = if fully_visible {
+                ops::rowmax(&s)
+            } else {
+                ops::rowmax_prefix(&s, &bvis)
+            };
+            let p = if fully_visible {
+                ops::exp_sub_rowbias(&s, &m_loc, vfmt)
+            } else {
+                ops::exp_sub_rowbias_prefix(&s, &m_loc, &bvis, vfmt)
+            };
             // Vector reduce with f32 internal precision, one f16 round on
             // store — matches the Pallas kernel (and NPU vector units).
             let l_loc: Vec<f32> = ops::rowmean_acc32(&p, vfmt)
@@ -109,7 +198,7 @@ pub fn pasa_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
                 .map(|&m| vfmt.round(m * p.cols as f32))
                 .collect();
 
-            // Line 13: pseudo-average of the shifted block.
+            // Line 13: pseudo-average of the (dense) shifted block.
             let sbar = ops::rowmean_acc32(&s, vfmt);
 
             // Line 14 (Eq. 15): running global pseudo-average, computed in
@@ -127,7 +216,7 @@ pub fn pasa_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
             // Δm'_{j−1} = Inva·(F̄ʲ⁻¹ − F̄ʲ), Δm'_j = Inva·(S̄'ʲ − F̄ʲ).
             // A ragged tail block shifted with its own β_w gets the extra
             // (c_w − c_main)·S̄' term so its true offset is still recovered.
-            let inva_j = block_inva[jidx];
+            let inva_j = pre.block_inva[jidx];
             let dinva = vfmt.round(inva_j - inva_main);
             let dm_prev: Vec<f32> = (0..rows)
                 .map(|r| vfmt.round(inva_main * vfmt.round(fbar_prev[r] - fbar[r])))
@@ -184,14 +273,21 @@ pub fn pasa_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
             jidx += 1;
         }
 
-        // Line 22: O_i = O_i / l.
+        // Line 22: O_i = O_i / l. Fully-masked rows are zero by definition
+        // (their online state never saw a score).
         let oi = ops::div_rows(&oi, &l, vfmt);
         for r in 0..rows {
-            out.row_mut(i0 + r).copy_from_slice(oi.row(r));
+            let dst = out.row_mut(i0 + r);
+            if vis[r] == 0 {
+                dst.fill(0.0);
+            } else {
+                dst.copy_from_slice(oi.row(r));
+            }
         }
         i0 = i1;
     }
-    out
+    let stats = HeadStats::finish(gstats, &out);
+    (out, stats)
 }
 
 /// β = 0 degrades PASA to plain FA2 (§2.2: "PASA completely degrades into
@@ -204,8 +300,8 @@ pub fn pasa_is_fa2_at_beta_zero() -> bool {
 mod tests {
     use super::*;
     use crate::attention::config::Allocation;
-    use crate::attention::flash::flash_attention;
-    use crate::attention::naive::naive_attention_f32;
+    use crate::attention::flash::{flash_attention, flash_head};
+    use crate::attention::naive::{naive_attention_f32, naive_attention_masked_f32};
     use crate::numerics::{has_overflow, relative_rmse};
     use crate::workloads::{gen_case, Distribution, Pcg64};
 
@@ -310,5 +406,50 @@ mod tests {
             tot_p / 4.0,
             tot_fa / 4.0
         );
+    }
+
+    #[test]
+    fn causal_mask_matches_masked_naive() {
+        // Masked PASA against the masked golden reference, on biased data
+        // where unshifted FP16 would be in trouble at larger means.
+        let c = rounded_case(Distribution::Uniform { x0: 5.0, am: 1.0 }, 160, 32, 11);
+        let golden = naive_attention_masked_f32(&c, HeadMask::Causal);
+        let pre = pasa_preprocess(&c.k, &pasa_cfg());
+        let (o, stats) = pasa_head(&c.q, &c.v, &pre, HeadMask::Causal, &pasa_cfg());
+        assert!(!has_overflow(&o.data));
+        assert_eq!(stats.nonfinite_outputs, 0);
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 3e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn causal_masked_pasa_survives_overflow_regime() {
+        // The causal variant must keep the paper's robustness claim: at
+        // x0=30 the masked FA16-32 run still poisons the visible region,
+        // masked PASA stays finite and accurate.
+        let c = rounded_case(Distribution::Uniform { x0: 30.0, am: 0.5 }, 256, 128, 12);
+        let cfg_fa = AttentionConfig::new(Allocation::Fa16_32);
+        let (fa, fa_stats) = flash_head(&c.q, &c.k, &c.v, HeadMask::Causal, &cfg_fa);
+        assert!(has_overflow(&fa.data), "premise: causal FA16-32 overflows");
+        assert!(fa_stats.overflow_events > 0);
+        let pre = pasa_preprocess(&c.k, &pasa_cfg());
+        let (o, stats) = pasa_head(&c.q, &c.v, &pre, HeadMask::Causal, &pasa_cfg());
+        assert!(!has_overflow(&o.data));
+        assert_eq!(stats.overflow_events, 0);
+        let golden = naive_attention_masked_f32(&c, HeadMask::Causal);
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 5e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn masked_and_unmasked_agree_on_the_last_row() {
+        // Causal's final query row sees everything: it must match the
+        // unmasked kernel's final row bit-for-bit (same blocks, same ops).
+        let c = rounded_case(Distribution::Uniform { x0: 2.0, am: 1.0 }, 128, 16, 13);
+        let pre = pasa_preprocess(&c.k, &pasa_cfg());
+        let (dense, _) = pasa_head(&c.q, &c.v, &pre, HeadMask::None, &pasa_cfg());
+        let (masked, _) = pasa_head(&c.q, &c.v, &pre, HeadMask::Causal, &pasa_cfg());
+        let last = 127;
+        assert_eq!(dense.row(last), masked.row(last));
     }
 }

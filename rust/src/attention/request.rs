@@ -1,0 +1,517 @@
+//! The unified attention request/response types (S4b).
+//!
+//! An [`AttentionRequest`] is the single currency between the engine layers
+//! and the attention lab: it carries Q/K/V for `n_heads` query heads over
+//! `n_kv_heads` KV heads (MQA/GQA via the standard head-group mapping), an
+//! [`AttnMask`], the tiling block sizes, PASA's β and the precision
+//! [`Allocation`]. Kernels return an [`AttentionOutput`]: per-head output
+//! matrices plus per-head [`HeadStats`] — max |S| before store rounding and
+//! the overflow-event count at the paper's instrumentation point — which
+//! feed the coordinator's overflow guard instead of logits-only NaN
+//! sniffing.
+
+use super::config::{Allocation, AttentionConfig, BlockSizes};
+use super::kernel::KernelRegistry;
+use crate::numerics::Format;
+use crate::tensor::{matmul_nt, GemmPrecision, GemmStats, Matrix};
+use crate::workloads::{AttentionCase, MultiHeadCase};
+
+/// Attention masking modes of the request.
+///
+/// All variants resolve per head to a *prefix* visibility rule (each query
+/// row sees KV positions `0..visible`), which covers the serving workloads
+/// of the paper's evaluation: dense bidirectional heads (video diffusion),
+/// causal decoding heads (Qwen2) and right-padded batched sequences.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AttnMask {
+    /// Every query attends to every KV position.
+    None,
+    /// Causal: query `i` (aligned to the *end* of the KV sequence, the
+    /// decoding convention) sees KV positions `0..=i + s2 − s1`.
+    Causal,
+    /// Right-padded sequences: per-head valid KV lengths. One entry
+    /// broadcasts to all heads; otherwise one entry per query head.
+    Padded(Vec<usize>),
+}
+
+impl AttnMask {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttnMask::None => "none",
+            AttnMask::Causal => "causal",
+            AttnMask::Padded(_) => "padded",
+        }
+    }
+
+    /// Resolve the mask for one query head.
+    pub fn for_head(&self, h: usize) -> HeadMask {
+        match self {
+            AttnMask::None => HeadMask::None,
+            AttnMask::Causal => HeadMask::Causal,
+            AttnMask::Padded(lens) => {
+                assert!(!lens.is_empty(), "Padded mask needs at least one length");
+                HeadMask::Prefix(lens[h.min(lens.len() - 1)])
+            }
+        }
+    }
+}
+
+/// One head's resolved visibility rule: each query row sees a prefix of
+/// the KV sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadMask {
+    None,
+    Causal,
+    /// Only KV positions `0..len` are valid (right padding beyond).
+    Prefix(usize),
+}
+
+impl HeadMask {
+    /// Number of visible KV positions for query row `i` of an (s1 × s2)
+    /// head. Causal aligns queries to the end of the KV sequence, so with
+    /// s1 == s2 row `i` sees `i + 1` positions; rows can be fully masked
+    /// (0 visible) only when s1 > s2 or under a zero-length prefix.
+    #[inline]
+    pub fn visible(&self, i: usize, s1: usize, s2: usize) -> usize {
+        match *self {
+            HeadMask::None => s2,
+            HeadMask::Causal => (i + 1 + s2).saturating_sub(s1).min(s2),
+            HeadMask::Prefix(l) => l.min(s2),
+        }
+    }
+
+    /// Per-row visible counts for query rows `[i0, i1)`.
+    pub fn visible_rows(&self, i0: usize, i1: usize, s1: usize, s2: usize) -> Vec<usize> {
+        (i0..i1).map(|i| self.visible(i, s1, s2)).collect()
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, HeadMask::None)
+    }
+}
+
+/// Per-head numerical telemetry from one kernel forward pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HeadStats {
+    /// Max |S| at the paper's instrumentation point: the score GEMM's
+    /// pre-store value (for PASA this is the *shifted* score — the
+    /// magnitude the hardware actually stores).
+    pub max_abs_score: f32,
+    /// Pre-store score values beyond the overflow boundary the kernel
+    /// instruments against (FP16's 65504 for low-precision stores).
+    pub overflow_events: usize,
+    /// Non-finite values in the head's final output (the paper's INF/NaN
+    /// poisoning signature).
+    pub nonfinite_outputs: usize,
+}
+
+impl HeadStats {
+    /// Close out a head: fold the GEMM telemetry with an output scan.
+    pub fn finish(gemm: GemmStats, out: &Matrix) -> HeadStats {
+        HeadStats {
+            max_abs_score: gemm.max_abs,
+            overflow_events: gemm.overflow_events,
+            nonfinite_outputs: out.data.iter().filter(|x| !x.is_finite()).count(),
+        }
+    }
+}
+
+/// Result of one kernel forward pass: per-head outputs and telemetry.
+#[derive(Clone, Debug)]
+pub struct AttentionOutput {
+    pub heads: Vec<Matrix>,
+    pub stats: Vec<HeadStats>,
+}
+
+impl AttentionOutput {
+    /// Consume a single-head output (panics on an empty result).
+    pub fn single(mut self) -> Matrix {
+        assert!(!self.heads.is_empty(), "empty AttentionOutput");
+        self.heads.swap_remove(0)
+    }
+
+    /// Any non-finite value in any head's output.
+    pub fn overflowed(&self) -> bool {
+        self.stats.iter().any(|s| s.nonfinite_outputs > 0)
+    }
+
+    /// Total pre-store overflow events across heads.
+    pub fn overflow_events(&self) -> usize {
+        self.stats.iter().map(|s| s.overflow_events).sum()
+    }
+
+    /// Largest pre-store |S| across heads.
+    pub fn max_abs_score(&self) -> f32 {
+        self.stats
+            .iter()
+            .fold(0.0f32, |m, s| m.max(s.max_abs_score))
+    }
+
+    /// Total non-finite output elements across heads.
+    pub fn nonfinite_outputs(&self) -> usize {
+        self.stats.iter().map(|s| s.nonfinite_outputs).sum()
+    }
+}
+
+/// A batched, masked, multi-head attention problem — the single entry
+/// point into every kernel. Build one with the constructors below, refine
+/// it builder-style, then dispatch with [`AttentionRequest::run`] (or hand
+/// it to a specific [`super::kernel::AttentionKernel`]).
+#[derive(Clone, Debug)]
+pub struct AttentionRequest {
+    /// Query matrices, one per head: (s1 × d).
+    pub q: Vec<Matrix>,
+    /// Key matrices, one per KV head: (s2 × d). `q.len()` must be a
+    /// multiple of `k.len()` (GQA/MQA head grouping).
+    pub k: Vec<Matrix>,
+    /// Value matrices, one per KV head: (s2 × dv).
+    pub v: Vec<Matrix>,
+    pub mask: AttnMask,
+    /// Precision allocation, tiling and β.
+    pub cfg: AttentionConfig,
+}
+
+impl AttentionRequest {
+    /// Empty request; add heads with [`Self::with_head`] /
+    /// [`Self::with_query_head`] + [`Self::with_kv_head`].
+    pub fn new(alloc: Allocation) -> AttentionRequest {
+        AttentionRequest {
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            mask: AttnMask::None,
+            cfg: AttentionConfig::new(alloc),
+        }
+    }
+
+    /// Single-head request from a workload case.
+    pub fn from_case(case: &AttentionCase, alloc: Allocation) -> AttentionRequest {
+        Self::from_case_cfg(case, AttentionConfig::new(alloc))
+    }
+
+    /// Single-head request carrying an explicit legacy config.
+    pub fn from_case_cfg(case: &AttentionCase, cfg: AttentionConfig) -> AttentionRequest {
+        AttentionRequest {
+            q: vec![case.q.clone()],
+            k: vec![case.k.clone()],
+            v: vec![case.v.clone()],
+            mask: AttnMask::None,
+            cfg,
+        }
+    }
+
+    /// Multi-head request from a workload benchmark case. Padded cases
+    /// (non-empty `kv_lens`) get an [`AttnMask::Padded`] automatically.
+    pub fn from_multihead(mh: &MultiHeadCase, alloc: Allocation) -> AttentionRequest {
+        let mask = if mh.kv_lens.is_empty() {
+            AttnMask::None
+        } else {
+            AttnMask::Padded(mh.kv_lens.clone())
+        };
+        AttentionRequest {
+            q: mh.q.clone(),
+            k: mh.k.clone(),
+            v: mh.v.clone(),
+            mask,
+            cfg: AttentionConfig::new(alloc),
+        }
+    }
+
+    /// Append one MHA head (its own K/V).
+    pub fn with_head(mut self, q: Matrix, k: Matrix, v: Matrix) -> Self {
+        self.q.push(q);
+        self.k.push(k);
+        self.v.push(v);
+        self
+    }
+
+    /// Append a query head that shares an existing KV head (GQA/MQA).
+    pub fn with_query_head(mut self, q: Matrix) -> Self {
+        self.q.push(q);
+        self
+    }
+
+    /// Append one KV head.
+    pub fn with_kv_head(mut self, k: Matrix, v: Matrix) -> Self {
+        self.k.push(k);
+        self.v.push(v);
+        self
+    }
+
+    pub fn with_mask(mut self, mask: AttnMask) -> Self {
+        self.mask = mask;
+        self
+    }
+
+    pub fn with_blocks(mut self, s1: usize, s2: usize) -> Self {
+        self.cfg.blocks = BlockSizes { s1, s2 };
+        self
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        self.cfg.beta = beta;
+        self
+    }
+
+    /// Rebind the precision allocation (e.g. to replay a request under
+    /// PASA after a guard trip).
+    pub fn with_alloc(mut self, alloc: Allocation) -> Self {
+        self.cfg.alloc = alloc;
+        self
+    }
+
+    pub fn with_strict_fp16_accum(mut self, strict: bool) -> Self {
+        self.cfg.strict_fp16_accum = strict;
+        self
+    }
+
+    /// Round Q/K/V onto the FP16 grid (the model's storage format — the
+    /// paper's premise that inputs are within low-precision range).
+    pub fn with_fp16_inputs(mut self) -> Self {
+        for m in self
+            .q
+            .iter_mut()
+            .chain(self.k.iter_mut())
+            .chain(self.v.iter_mut())
+        {
+            m.round_to(Format::F16);
+        }
+        self
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn n_kv_heads(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Query heads per KV head.
+    pub fn group_size(&self) -> usize {
+        self.n_heads() / self.n_kv_heads().max(1)
+    }
+
+    /// KV head serving query head `h` — the workloads layer's
+    /// [`crate::workloads::gqa_kv_head`] contiguous grouping.
+    pub fn kv_head_for(&self, h: usize) -> usize {
+        crate::workloads::gqa_kv_head(h, self.n_heads(), self.n_kv_heads())
+    }
+
+    pub fn seq_q(&self) -> usize {
+        self.q.first().map_or(0, |m| m.rows)
+    }
+
+    pub fn seq_kv(&self) -> usize {
+        self.k.first().map_or(0, |m| m.rows)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.q.first().map_or(0, |m| m.cols)
+    }
+
+    /// Materialize query head `h` with its mapped KV head as a standalone
+    /// single-head case (the GQA equivalence tests go through this).
+    pub fn head_case(&self, h: usize) -> AttentionCase {
+        let kv = self.kv_head_for(h);
+        AttentionCase {
+            q: self.q[h].clone(),
+            k: self.k[kv].clone(),
+            v: self.v[kv].clone(),
+        }
+    }
+
+    /// Resolved mask for query head `h`.
+    pub fn mask_for_head(&self, h: usize) -> HeadMask {
+        self.mask.for_head(h)
+    }
+
+    /// Raw (unshifted, unmasked) score matrix S = Q·Kᵀ of head `h` in f32
+    /// — the paper's instrumentation quantity.
+    pub fn raw_scores_f32(&self, h: usize) -> Matrix {
+        matmul_nt(&self.q[h], &self.k[self.kv_head_for(h)], GemmPrecision::F32)
+    }
+
+    /// Structural validation; kernels call this before fan-out.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.q.is_empty() {
+            return Err("request has no query heads".into());
+        }
+        if self.k.is_empty() || self.k.len() != self.v.len() {
+            return Err(format!(
+                "request needs matching K/V heads, got {} K and {} V",
+                self.k.len(),
+                self.v.len()
+            ));
+        }
+        if self.q.len() % self.k.len() != 0 {
+            return Err(format!(
+                "{} query heads not divisible by {} KV heads",
+                self.q.len(),
+                self.k.len()
+            ));
+        }
+        let (s1, d) = self.q[0].shape();
+        let s2 = self.k[0].rows;
+        let dv = self.v[0].cols;
+        if s2 == 0 {
+            return Err("empty KV sequence".into());
+        }
+        for (i, m) in self.q.iter().enumerate() {
+            if m.shape() != (s1, d) {
+                return Err(format!("query head {i} shape {:?} != ({s1}, {d})", m.shape()));
+            }
+        }
+        for (i, (k, v)) in self.k.iter().zip(&self.v).enumerate() {
+            if k.shape() != (s2, d) {
+                return Err(format!("key head {i} shape {:?} != ({s2}, {d})", k.shape()));
+            }
+            if v.shape() != (s2, dv) {
+                return Err(format!("value head {i} shape {:?} != ({s2}, {dv})", v.shape()));
+            }
+        }
+        if let AttnMask::Padded(lens) = &self.mask {
+            if lens.len() != 1 && lens.len() != self.q.len() {
+                return Err(format!(
+                    "Padded mask has {} lengths for {} heads (need 1 or one per head)",
+                    lens.len(),
+                    self.q.len()
+                ));
+            }
+            if let Some(&bad) = lens.iter().find(|&&l| l > s2) {
+                return Err(format!("Padded length {bad} exceeds KV length {s2}"));
+            }
+        }
+        if self.cfg.blocks.s1 == 0 || self.cfg.blocks.s2 == 0 {
+            return Err("zero block size".into());
+        }
+        Ok(())
+    }
+
+    /// Dispatch through the [`KernelRegistry`] on this request's
+    /// allocation — the one-line entry point.
+    pub fn run(&self) -> AttentionOutput {
+        KernelRegistry::get(self.cfg.alloc).forward(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{gen_case, Distribution, Pcg64};
+
+    fn case(s1: usize, s2: usize, d: usize, seed: u64) -> AttentionCase {
+        let mut rng = Pcg64::new(seed, 0);
+        gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, s1, s2, d, &mut rng)
+    }
+
+    #[test]
+    fn mask_visibility_rules() {
+        // Square causal: row i sees i+1 positions.
+        assert_eq!(HeadMask::Causal.visible(0, 8, 8), 1);
+        assert_eq!(HeadMask::Causal.visible(7, 8, 8), 8);
+        // Decoding alignment: 1 query over 8 KV sees everything.
+        assert_eq!(HeadMask::Causal.visible(0, 1, 8), 8);
+        // s1 > s2: early rows are fully masked.
+        assert_eq!(HeadMask::Causal.visible(0, 8, 4), 0);
+        assert_eq!(HeadMask::Causal.visible(7, 8, 4), 4);
+        assert_eq!(HeadMask::None.visible(3, 8, 16), 16);
+        assert_eq!(HeadMask::Prefix(5).visible(3, 8, 16), 5);
+        assert_eq!(HeadMask::Prefix(50).visible(3, 8, 16), 16);
+    }
+
+    #[test]
+    fn padded_mask_broadcasts_and_indexes() {
+        let broadcast = AttnMask::Padded(vec![7]);
+        assert_eq!(broadcast.for_head(0), HeadMask::Prefix(7));
+        assert_eq!(broadcast.for_head(5), HeadMask::Prefix(7));
+        let per_head = AttnMask::Padded(vec![3, 9]);
+        assert_eq!(per_head.for_head(1), HeadMask::Prefix(9));
+    }
+
+    #[test]
+    fn gqa_head_mapping() {
+        let c = case(8, 8, 4, 1);
+        let mut req = AttentionRequest::new(Allocation::Fa32)
+            .with_kv_head(c.k.clone(), c.v.clone())
+            .with_kv_head(c.k.clone(), c.v.clone());
+        for _ in 0..8 {
+            req = req.with_query_head(c.q.clone());
+        }
+        assert_eq!(req.n_heads(), 8);
+        assert_eq!(req.n_kv_heads(), 2);
+        assert_eq!(req.group_size(), 4);
+        assert_eq!(req.kv_head_for(0), 0);
+        assert_eq!(req.kv_head_for(3), 0);
+        assert_eq!(req.kv_head_for(4), 1);
+        assert_eq!(req.kv_head_for(7), 1);
+        assert!(req.validate().is_ok());
+    }
+
+    #[test]
+    fn request_mapping_agrees_with_workload_mapping() {
+        // MultiHeadCase and AttentionRequest each implement the
+        // contiguous GQA head-group mapping; pin them to each other so
+        // the convention cannot silently diverge.
+        use crate::workloads::gen_gqa_multihead;
+        let dist = Distribution::Uniform { x0: 0.0, am: 1.0 };
+        let mh = gen_gqa_multihead(dist, 8, 2, 16, 16, 4, 9);
+        let req = AttentionRequest::from_multihead(&mh, Allocation::Fa32);
+        for h in 0..8 {
+            assert_eq!(req.kv_head_for(h), mh.kv_head_for(h), "head {h}");
+            assert_eq!(
+                req.head_case(h).k.data,
+                mh.head_case(h).k.data,
+                "head {h} case"
+            );
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_requests() {
+        assert!(AttentionRequest::new(Allocation::Fa32).validate().is_err());
+        let c = case(8, 8, 4, 2);
+        // 3 query heads over 2 KV heads: not divisible.
+        let req = AttentionRequest::new(Allocation::Fa32)
+            .with_kv_head(c.k.clone(), c.v.clone())
+            .with_kv_head(c.k.clone(), c.v.clone())
+            .with_query_head(c.q.clone())
+            .with_query_head(c.q.clone())
+            .with_query_head(c.q.clone());
+        assert!(req.validate().is_err());
+        // Padded length beyond the KV sequence.
+        let req = AttentionRequest::from_case(&c, Allocation::Fa32)
+            .with_mask(AttnMask::Padded(vec![99]));
+        assert!(req.validate().is_err());
+        // Wrong number of padded lengths.
+        let req = AttentionRequest::from_case(&c, Allocation::Fa32)
+            .with_mask(AttnMask::Padded(vec![2, 3]));
+        assert!(req.validate().is_err());
+    }
+
+    #[test]
+    fn builder_carries_config() {
+        let c = case(8, 8, 4, 3);
+        let req = AttentionRequest::from_case(&c, Allocation::Pasa16)
+            .with_blocks(32, 16)
+            .with_beta(0.9375)
+            .with_strict_fp16_accum(false)
+            .with_mask(AttnMask::Causal);
+        assert_eq!(req.cfg.alloc, Allocation::Pasa16);
+        assert_eq!(req.cfg.blocks.s1, 32);
+        assert_eq!(req.cfg.blocks.s2, 16);
+        assert_eq!(req.cfg.beta, 0.9375);
+        assert_eq!(req.mask, AttnMask::Causal);
+        let req = req.with_alloc(Allocation::Fa32);
+        assert_eq!(req.cfg.alloc, Allocation::Fa32);
+    }
+
+    #[test]
+    fn fp16_input_rounding_is_on_grid() {
+        let c = case(16, 16, 8, 4);
+        let req = AttentionRequest::from_case(&c, Allocation::Fa16_32).with_fp16_inputs();
+        assert!(req.q[0].is_on_grid(Format::F16));
+        assert!(req.k[0].is_on_grid(Format::F16));
+        assert!(req.v[0].is_on_grid(Format::F16));
+    }
+}

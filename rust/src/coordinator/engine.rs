@@ -15,7 +15,7 @@
 //! are re-assembled from the paged pool each step, so scribbles from
 //! masked lanes never persist).
 
-use super::guard::{Guard, GuardPolicy};
+use super::guard::{Guard, GuardPolicy, GuardSignal};
 use super::kv_cache::{KvPool, SeqCache};
 use super::metrics::Metrics;
 use super::request::{Completion, FinishReason, Phase, Request};
@@ -180,9 +180,13 @@ impl<'rt> Engine<'rt> {
             .prefill(guard.allocation(), &ids, n)
             .context("prefill")?;
         // Guard: inspect the last-prompt-token logits row for overflow.
+        // (The PJRT modules are uninstrumented, so this is the legacy
+        // logits signal; the attention lab feeds kernel telemetry via
+        // GuardSignal::from_attention instead.)
         let v = d.vocab_size;
         let last_row = &out.logits[(n - 1) * v..n * v];
-        if guard.observe(last_row) {
+        let sig = GuardSignal::from_logits(last_row);
+        if guard.observe_signal(&sig) {
             self.metrics.overflow_steps += 1;
             self.metrics.guard_switches += 1;
             out = self
@@ -322,13 +326,13 @@ impl<'rt> Engine<'rt> {
         // replayed under PASA (cache inputs unchanged — replay is exact).
         let mut replay = false;
         for &i in &members {
-            let row = &logits[i * v..(i + 1) * v];
+            let sig = GuardSignal::from_logits(&logits[i * v..(i + 1) * v]);
             let s = self.slots[i].as_mut().unwrap();
-            if s.guard.observe(row) {
+            if s.guard.observe_signal(&sig) {
                 replay = true;
                 self.metrics.guard_switches += 1;
             }
-            if row.iter().any(|x| !x.is_finite()) {
+            if sig.nonfinite > 0 {
                 self.metrics.overflow_steps += 1;
             }
         }

@@ -3,10 +3,58 @@
 //! built here as a first-class coordinator policy.
 //!
 //! Policy: requests start on the fast partially-low-precision FA
-//! allocation; if a step's logits come back non-finite (the INF/NaN
-//! signature of a QKᵀ FP16 overflow), the step is *replayed* under PASA —
-//! safe because prefill/decode are functional (cache in → cache out) — and
-//! the request is pinned to PASA for its remaining lifetime.
+//! allocation; when a step's [`GuardSignal`] shows trouble the step is
+//! *replayed* under PASA — safe because prefill/decode are functional
+//! (cache in → cache out) — and the request is pinned to PASA for its
+//! remaining lifetime.
+//!
+//! Signals come from two sources:
+//! * the attention lab's kernel telemetry
+//!   ([`crate::attention::AttentionOutput`]): pre-store overflow events
+//!   and max |S| straight from the score GEMM — the paper's
+//!   instrumentation point, which can flag *pre-overflow pressure* before
+//!   any NaN reaches the logits;
+//! * the runtime path's logits scan (the legacy NaN sniffing), kept for
+//!   the PJRT modules whose internals we don't instrument.
+
+use crate::attention::AttentionOutput;
+use crate::numerics::Format;
+
+/// Overflow telemetry for one engine step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GuardSignal {
+    /// Pre-store score values beyond the low-precision overflow boundary.
+    pub overflow_events: usize,
+    /// Largest pre-store |S| observed (0 when unknown, e.g. logits-only).
+    pub max_abs_score: f32,
+    /// Non-finite values observed in outputs/logits.
+    pub nonfinite: usize,
+}
+
+impl GuardSignal {
+    /// Legacy signal from a logits row: counts non-finite entries.
+    pub fn from_logits(logits: &[f32]) -> GuardSignal {
+        GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 0.0,
+            nonfinite: logits.iter().filter(|x| !x.is_finite()).count(),
+        }
+    }
+
+    /// Rich signal from the attention lab's per-head kernel telemetry.
+    pub fn from_attention(out: &AttentionOutput) -> GuardSignal {
+        GuardSignal {
+            overflow_events: out.overflow_events(),
+            max_abs_score: out.max_abs_score(),
+            nonfinite: out.nonfinite_outputs(),
+        }
+    }
+
+    /// No overflow, no poisoning, no score above `score_limit`.
+    pub fn is_clean(&self, score_limit: f32) -> bool {
+        self.nonfinite == 0 && self.overflow_events == 0 && self.max_abs_score <= score_limit
+    }
+}
 
 /// Which attention allocation the engine should run next for a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +86,9 @@ impl GuardPolicy {
 pub struct Guard {
     policy: GuardPolicy,
     pinned_pasa: bool,
+    /// Pre-emptive trip point for max |S| (default: the FP16 overflow
+    /// boundary — scores past it *did* overflow a low-precision store).
+    score_limit: f32,
     pub switches: usize,
 }
 
@@ -46,8 +97,16 @@ impl Guard {
         Guard {
             policy,
             pinned_pasa: false,
+            score_limit: Format::F16.overflow_boundary() as f32,
             switches: 0,
         }
+    }
+
+    /// Lower the score trip point below the FP16 boundary (e.g. 0.9×65504)
+    /// to switch on overflow *pressure* before the first poisoned step.
+    pub fn with_score_limit(mut self, limit: f32) -> Guard {
+        self.score_limit = limit;
+        self
     }
 
     /// Allocation to use for the next step.
@@ -66,11 +125,10 @@ impl Guard {
         }
     }
 
-    /// Inspect a step's logits; returns true if the step must be replayed
-    /// under PASA (adaptive mode only).
-    pub fn observe(&mut self, logits: &[f32]) -> bool {
-        let overflowed = logits.iter().any(|x| !x.is_finite());
-        if !overflowed {
+    /// Inspect a step's telemetry; returns true if the step must be
+    /// replayed under PASA (adaptive mode only).
+    pub fn observe_signal(&mut self, sig: &GuardSignal) -> bool {
+        if sig.is_clean(self.score_limit) {
             return false;
         }
         match self.policy {
@@ -81,6 +139,11 @@ impl Guard {
             }
             _ => false, // nothing left to switch to — surface the NaNs
         }
+    }
+
+    /// Legacy logits-only inspection (the runtime path).
+    pub fn observe(&mut self, logits: &[f32]) -> bool {
+        self.observe_signal(&GuardSignal::from_logits(logits))
     }
 
     pub fn is_pinned(&self) -> bool {
@@ -125,5 +188,70 @@ mod tests {
         assert_eq!(GuardPolicy::parse("adaptive"), Some(GuardPolicy::Adaptive));
         assert_eq!(GuardPolicy::parse("pasa"), Some(GuardPolicy::AlwaysPasa));
         assert_eq!(GuardPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn guard_spellings_map_onto_lab_allocations() {
+        // Every allocation string the guard can emit must resolve to a
+        // lab Allocation (the engine's replay path and any lab-backed
+        // runtime rely on this bridge staying total).
+        use crate::attention::Allocation;
+        for policy in [
+            GuardPolicy::AlwaysPasa,
+            GuardPolicy::AlwaysFa16,
+            GuardPolicy::AlwaysFa32,
+            GuardPolicy::Adaptive,
+        ] {
+            let mut g = Guard::new(policy);
+            assert!(
+                Allocation::parse(g.allocation()).is_some(),
+                "{policy:?}: {:?} has no lab allocation",
+                g.allocation()
+            );
+            g.observe(&[f32::NAN]); // flip adaptive to its pinned spelling
+            assert!(
+                Allocation::parse(g.allocation()).is_some(),
+                "{policy:?} (pinned): {:?} has no lab allocation",
+                g.allocation()
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_telemetry_trips_before_poisoning() {
+        // A signal with pre-store overflow events but still-finite outputs
+        // must already trip the adaptive guard.
+        let mut g = Guard::new(GuardPolicy::Adaptive);
+        let sig = GuardSignal {
+            overflow_events: 3,
+            max_abs_score: 9.0e4,
+            nonfinite: 0,
+        };
+        assert!(g.observe_signal(&sig));
+        assert_eq!(g.allocation(), "pasa");
+    }
+
+    #[test]
+    fn score_limit_is_preemptive() {
+        // With a lowered limit, pure score pressure (no overflow yet)
+        // trips the guard.
+        let mut g = Guard::new(GuardPolicy::Adaptive).with_score_limit(0.9 * 65504.0);
+        let pressure = GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 60000.0,
+            nonfinite: 0,
+        };
+        assert!(g.observe_signal(&pressure));
+        // Default limit would not have tripped.
+        let mut g = Guard::new(GuardPolicy::Adaptive);
+        assert!(!g.observe_signal(&pressure));
+    }
+
+    #[test]
+    fn signal_from_logits_counts_nonfinite() {
+        let sig = GuardSignal::from_logits(&[1.0, f32::NAN, f32::INFINITY, 2.0]);
+        assert_eq!(sig.nonfinite, 2);
+        assert!(!sig.is_clean(65504.0));
+        assert!(GuardSignal::from_logits(&[0.5, -0.5]).is_clean(65504.0));
     }
 }

@@ -2,8 +2,8 @@
 //! positive scores) and 180°-shift (large negative scores).
 
 use super::ExpOptions;
+use crate::attention::raw_scores_f32;
 use crate::numerics::finite_range;
-use crate::tensor::{matmul_nt, GemmPrecision};
 use crate::workloads::{ResonanceCategory, ResonanceSpec};
 
 fn spec(cat: ResonanceCategory, opts: &ExpOptions) -> ResonanceSpec {
@@ -37,7 +37,9 @@ pub fn fig6(opts: &ExpOptions) -> String {
     ] {
         let sp = spec(cat, opts);
         let case = sp.generate(opts.seed);
-        let s = matmul_nt(&case.q, &case.k, GemmPrecision::F32);
+        // Raw-score probe only — no kernel dispatch, so the lab's free
+        // instrumentation helper is the right altitude (clone-free).
+        let s = raw_scores_f32(&case);
         let (lo, hi) = finite_range(&s.data);
         let sign = if lo.abs() > hi.abs() {
             "negative (cat 1)"
@@ -55,6 +57,7 @@ pub fn fig6(opts: &ExpOptions) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::{matmul_nt, GemmPrecision};
 
     #[test]
     fn categories_have_opposite_dominant_signs() {

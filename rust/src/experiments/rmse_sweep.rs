@@ -1,12 +1,11 @@
 //! Figures 9 and 10: relative-RMSE comparison of the three precision
 //! allocations (FA-FP32, FA-FP16/FP32, PASA-FP16) over the random
-//! benchmark distributions. Multi-threaded over heads (each head is an
-//! independent case, like the paper's (1, 16, 1280, 128) tensor).
+//! benchmark distributions. Each distribution becomes one multi-head
+//! [`AttentionRequest`] (the paper's (1, 16, 1280, 128) tensor); the
+//! kernels fan heads out over threads internally.
 
 use super::ExpOptions;
-use crate::attention::{
-    naive_attention_f32, run_attention, to_fp16_inputs, Allocation, AttentionConfig,
-};
+use crate::attention::{Allocation, AttentionRequest, KernelRegistry};
 use crate::numerics::relative_rmse;
 use crate::workloads::{gen_multihead, Distribution};
 
@@ -14,24 +13,15 @@ use crate::workloads::{gen_multihead, Distribution};
 /// NaN if any head overflowed (the paper plots a "NAN" marker).
 pub fn rmse_for(dist: Distribution, alloc: Allocation, opts: &ExpOptions) -> f64 {
     let mh = gen_multihead(dist, opts.heads, opts.seq, opts.dim, opts.seed);
-    let cfg = AttentionConfig::new(alloc);
-    // One thread per head: the low-precision emulation is CPU-bound.
-    let errs: Vec<f64> = std::thread::scope(|scope| {
-        let handles: Vec<_> = mh
-            .heads
-            .iter()
-            .map(|case| {
-                let cfg = cfg;
-                scope.spawn(move || {
-                    let c = to_fp16_inputs(case);
-                    let golden = naive_attention_f32(&c);
-                    let o = run_attention(&c, &cfg);
-                    relative_rmse(&o.data, &golden.data)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+    let req = AttentionRequest::from_multihead(&mh, alloc).with_fp16_inputs();
+    let golden = KernelRegistry::naive().forward(&req);
+    let out = req.run();
+    let errs: Vec<f64> = out
+        .heads
+        .iter()
+        .zip(&golden.heads)
+        .map(|(o, g)| relative_rmse(&o.data, &g.data))
+        .collect();
     if errs.iter().any(|e| e.is_nan()) {
         f64::NAN
     } else {

@@ -1,7 +1,7 @@
 //! Tables 1, 3 and 4 of the paper.
 
 use super::ExpOptions;
-use crate::attention::{beta, flash_attention, Allocation, AttentionConfig};
+use crate::attention::{beta, Allocation, AttentionRequest};
 use crate::numerics::{nan_percentage, Format};
 use crate::workloads::{gen_multihead, Distribution};
 
@@ -77,18 +77,17 @@ pub fn table4(opts: &ExpOptions) -> String {
             },
         ),
     ];
-    let cfg = AttentionConfig::new(Allocation::Fa16_32);
     let mut out = String::from(
         "# Table 4 — NaN Percentages of FA(FP16-FP32) Output\n\
          | # | Distribution | x0 | Am | NaN % | overflow? |\n",
     );
     for (i, (kind, dist)) in cases.iter().enumerate() {
         let mh = gen_multihead(*dist, opts.heads, opts.seq, opts.dim, opts.seed + i as u64);
+        let req = AttentionRequest::from_multihead(&mh, Allocation::Fa16_32).with_fp16_inputs();
+        let res = req.run();
         let mut nan_total = 0.0;
         let mut n = 0usize;
-        for case in &mh.heads {
-            let c = crate::attention::to_fp16_inputs(case);
-            let o = flash_attention(&c, &cfg);
+        for o in &res.heads {
             nan_total += nan_percentage(&o.data) * o.data.len() as f64 / 100.0;
             n += o.data.len();
         }

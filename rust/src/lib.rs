@@ -14,6 +14,12 @@
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+// The bit-exact emulation layers index heavily into row slices (matching
+// the papers' loop nests); iterator rewrites obscure the numerics.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::field_reassign_with_default)]
+
 pub mod attention;
 pub mod bench;
 pub mod cli;

@@ -7,6 +7,8 @@
 //!   info       — print the artifact manifest and model dims
 //!   help
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::{bail, Result};
 use pasa::attention::beta;
 use pasa::cli::Args;

@@ -43,18 +43,83 @@ impl GemmPrecision {
     };
 }
 
+/// Running pre-store statistics of one GEMM — the paper's overflow
+/// instrumentation point: |S| is checked against the store format's
+/// overflow boundary *before* the store rounding loses the magnitude.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmStats {
+    /// Largest pre-store |value| observed (can be `inf` when the emulated
+    /// low-precision accumulator itself overflowed).
+    pub max_abs: f32,
+    /// Number of pre-store values whose magnitude exceeded the boundary
+    /// the caller instrumented against (the FP16 65504 in the lab).
+    pub overflow_events: usize,
+}
+
+impl GemmStats {
+    #[inline]
+    fn record(&mut self, pre_store: f32, boundary: f32) {
+        let a = pre_store.abs();
+        if a > self.max_abs {
+            self.max_abs = a;
+        }
+        if a > boundary {
+            self.overflow_events += 1;
+        }
+    }
+
+    pub fn merge(&mut self, o: &GemmStats) {
+        if o.max_abs > self.max_abs {
+            self.max_abs = o.max_abs;
+        }
+        self.overflow_events += o.overflow_events;
+    }
+}
+
+/// One dot product `A[i]·B[j]` under the f32-accumulate fast path — the
+/// exact accumulation order of [`matmul_nt`]'s vectorized loop, factored
+/// out so the instrumented/masked variants stay bit-identical to it.
+#[inline]
+fn dot_f32(ar: &[f32], br: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let mut ac = ar.chunks_exact(8);
+    let mut bc = br.chunks_exact(8);
+    for (aw, bw) in (&mut ac).zip(&mut bc) {
+        for t in 0..8 {
+            acc[t] += aw[t] * bw[t];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// One dot product under emulated low-precision accumulation (sequential
+/// systolic order) — the exact order of [`matmul_nt`]'s slow path.
+#[inline]
+fn dot_emulated(ar: &[f32], br: &[f32], acc: Format) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in ar.iter().zip(br) {
+        let prod = acc.round(x * y);
+        s = acc.round(s + prod);
+    }
+    s
+}
+
 /// C = A · Bᵀ with per-step precision emulation.
 /// A is (m × k), B is (n × k), C is (m × n): `C[i][j] = Σ_l A[i][l]·B[j][l]`.
 ///
 /// This is the natural layout for S = Q·Kᵀ (both Q and K are (seq × d)).
 pub fn matmul_nt(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
     assert_eq!(a.cols, b.cols, "matmul_nt: inner dims differ");
-    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let (m, n) = (a.rows, b.rows);
     let mut c = Matrix::zeros(m, n);
     match p.acc {
         Format::F32 => {
             // Fast path: native f32 accumulate, round only on store.
-            // Four independent accumulators break the strict-FP reduction
+            // Eight independent accumulators break the strict-FP reduction
             // chain so the loop auto-vectorizes (§Perf: ~2.5x on the lab's
             // GEMM-bound experiments). Matrix engines don't specify an
             // accumulation order, so any f32 summation order is a valid
@@ -63,20 +128,7 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
                 let ar = a.row(i);
                 let crow = c.row_mut(i);
                 for j in 0..n {
-                    let br = b.row(j);
-                    let mut acc = [0.0f32; 8];
-                    let mut ac = ar.chunks_exact(8);
-                    let mut bc = br.chunks_exact(8);
-                    for (aw, bw) in (&mut ac).zip(&mut bc) {
-                        for t in 0..8 {
-                            acc[t] += aw[t] * bw[t];
-                        }
-                    }
-                    let mut s = acc.iter().sum::<f32>();
-                    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
-                        s += x * y;
-                    }
-                    crow[j] = p.store.round(s);
+                    crow[j] = p.store.round(dot_f32(ar, b.row(j)));
                 }
             }
         }
@@ -87,15 +139,87 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
                 let ar = a.row(i);
                 let crow = c.row_mut(i);
                 for j in 0..n {
-                    let br = b.row(j);
-                    let mut s = 0.0f32;
-                    for l in 0..k {
-                        let prod = acc.round(ar[l] * br[l]);
-                        s = acc.round(s + prod);
-                    }
-                    crow[j] = p.store.round(s);
+                    crow[j] = p.store.round(dot_emulated(ar, b.row(j), acc));
                 }
             }
+        }
+    }
+    c
+}
+
+/// Dense C = A · Bᵀ with pre-store statistics.
+///
+/// Bit-identical to [`matmul_nt`]; additionally records max |value| and
+/// overflow events against `boundary` over the columns `j < stat_vis[i]`
+/// of each row (`None` ⇒ every column). The masked attention kernels pass
+/// the per-row visible prefix so never-attended score regions don't feed
+/// the overflow guard, and PASA — which needs the *dense* block for its
+/// pseudo-average — still reports visible-region telemetry only.
+pub fn matmul_nt_stats(
+    a: &Matrix,
+    b: &Matrix,
+    p: GemmPrecision,
+    stat_vis: Option<&[usize]>,
+    boundary: f32,
+    stats: &mut GemmStats,
+) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt_stats: inner dims differ");
+    if let Some(vis) = stat_vis {
+        assert_eq!(vis.len(), a.rows, "matmul_nt_stats: vis length mismatch");
+    }
+    let (m, n) = (a.rows, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let ar = a.row(i);
+        let limit = stat_vis.map_or(n, |v| v[i].min(n));
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            let s = match p.acc {
+                Format::F32 => dot_f32(ar, b.row(j)),
+                acc => dot_emulated(ar, b.row(j), acc),
+            };
+            if j < limit {
+                stats.record(s, boundary);
+            }
+            crow[j] = p.store.round(s);
+        }
+    }
+    c
+}
+
+/// Prefix-masked C = A · Bᵀ: row `i` computes only columns `j < vis[i]`
+/// and fills the rest with `fill` (−inf in the attention kernels, so
+/// masked scores vanish under the softmax). Visible entries are
+/// bit-identical to [`matmul_nt`]; the masked region never touches the
+/// matrix engine — the flash-causal block-skipping optimization.
+/// Statistics cover the computed region only.
+pub fn matmul_nt_prefix(
+    a: &Matrix,
+    b: &Matrix,
+    p: GemmPrecision,
+    vis: &[usize],
+    fill: f32,
+    boundary: f32,
+    stats: &mut GemmStats,
+) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt_prefix: inner dims differ");
+    assert_eq!(vis.len(), a.rows, "matmul_nt_prefix: vis length mismatch");
+    let (m, n) = (a.rows, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let ar = a.row(i);
+        let limit = vis[i].min(n);
+        let crow = c.row_mut(i);
+        for j in 0..limit {
+            let s = match p.acc {
+                Format::F32 => dot_f32(ar, b.row(j)),
+                acc => dot_emulated(ar, b.row(j), acc),
+            };
+            stats.record(s, boundary);
+            crow[j] = p.store.round(s);
+        }
+        for x in crow[limit..].iter_mut() {
+            *x = fill;
         }
     }
     c
@@ -203,6 +327,61 @@ mod tests {
         assert_eq!(full.at(0, 0), 1.0);
         let f32acc = matmul_nt(&a, &b, GemmPrecision::F32);
         assert!(f32acc.at(0, 0) > 1.03);
+    }
+
+    #[test]
+    fn stats_variant_is_bit_identical_and_instrumented() {
+        let a = m(2, 128, &[30.0f32; 256]);
+        let b = m(3, 128, &[30.0f32; 384]);
+        let plain = matmul_nt(&a, &b, GemmPrecision::ACC32_STORE16);
+        let mut st = GemmStats::default();
+        let c = matmul_nt_stats(&a, &b, GemmPrecision::ACC32_STORE16, None, 65504.0, &mut st);
+        assert_eq!(plain, c);
+        // 30*30*128 = 115200 pre-store, stored as inf: 6 events, max recorded.
+        assert_eq!(st.overflow_events, 6);
+        assert_eq!(st.max_abs, 115200.0);
+    }
+
+    #[test]
+    fn stats_respect_visible_prefix() {
+        let a = m(2, 128, &[30.0f32; 256]);
+        let b = m(3, 128, &[30.0f32; 384]);
+        let mut st = GemmStats::default();
+        // Row 0 sees 1 column, row 1 sees none: one event only.
+        let vis = [1usize, 0];
+        let c = matmul_nt_stats(&a, &b, GemmPrecision::ACC32_STORE16, Some(&vis), 65504.0, &mut st);
+        assert_eq!(st.overflow_events, 1);
+        // The dense product is still fully computed (PASA needs it).
+        assert!(c.at(1, 2).is_infinite());
+    }
+
+    #[test]
+    fn prefix_variant_fills_masked_region() {
+        let a = m(2, 16, &(0..32).map(|i| i as f32 * 0.1).collect::<Vec<_>>());
+        let b = m(4, 16, &(0..64).map(|i| (i % 7) as f32 * 0.2).collect::<Vec<_>>());
+        let dense = matmul_nt(&a, &b, GemmPrecision::F32);
+        let mut st = GemmStats::default();
+        let vis = [3usize, 1];
+        let c = matmul_nt_prefix(
+            &a,
+            &b,
+            GemmPrecision::F32,
+            &vis,
+            f32::NEG_INFINITY,
+            65504.0,
+            &mut st,
+        );
+        for i in 0..2 {
+            for j in 0..4 {
+                if j < vis[i] {
+                    assert_eq!(c.at(i, j), dense.at(i, j), "visible ({i},{j})");
+                } else {
+                    assert_eq!(c.at(i, j), f32::NEG_INFINITY, "masked ({i},{j})");
+                }
+            }
+        }
+        assert_eq!(st.overflow_events, 0);
+        assert!(st.max_abs > 0.0);
     }
 
     #[test]

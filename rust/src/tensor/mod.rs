@@ -5,5 +5,5 @@ pub mod gemm;
 pub mod matrix;
 pub mod ops;
 
-pub use gemm::{matmul_nn, matmul_nt, GemmPrecision};
+pub use gemm::{matmul_nn, matmul_nt, matmul_nt_prefix, matmul_nt_stats, GemmPrecision, GemmStats};
 pub use matrix::Matrix;

@@ -58,6 +58,41 @@ pub fn rowmean_acc32(m: &Matrix, fmt: Format) -> Vec<f32> {
         .collect()
 }
 
+/// Row maxima over the first `vis[r]` columns (−inf for an empty prefix).
+/// The masked kernels use this so a never-attended score can't inflate the
+/// online maximum (which would underflow every genuine weight in FP16).
+pub fn rowmax_prefix(m: &Matrix, vis: &[usize]) -> Vec<f32> {
+    assert_eq!(vis.len(), m.rows);
+    (0..m.rows)
+        .map(|r| {
+            m.row(r)[..vis[r].min(m.cols)]
+                .iter()
+                .fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+        })
+        .collect()
+}
+
+/// Masked attenuator: `exp(m[r][c] − v[r])` for `c < vis[r]`, exact 0
+/// beyond — masked positions carry zero softmax weight without relying on
+/// the score buffer holding −inf (PASA keeps dense finite shifted scores
+/// for its pseudo-average and masks only here).
+pub fn exp_sub_rowbias_prefix(m: &Matrix, v: &[f32], vis: &[usize], fmt: Format) -> Matrix {
+    assert_eq!(v.len(), m.rows);
+    assert_eq!(vis.len(), m.rows);
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let b = v[r];
+        let limit = vis[r].min(m.cols);
+        let src = m.row(r);
+        let dst = out.row_mut(r);
+        for c in 0..limit {
+            let d = fmt.round(src[c] - b);
+            dst[c] = fmt.round(d.exp());
+        }
+    }
+    out
+}
+
 /// `exp(m[r][c] - v[r])` elementwise, rounded to `fmt`.
 /// This is Eq. (5): P = exp(S - m). The subtraction makes every exponent
 /// non-positive, so exp is an attenuator (never overflows).
@@ -190,6 +225,35 @@ mod tests {
         assert!(p.at(0, 1) < 1.0 && p.at(0, 1) > 0.0);
         assert!(p.at(0, 2) >= 0.0); // underflow to 0 allowed, never inf
         assert!(p.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prefix_ops_match_dense_when_fully_visible() {
+        let a = m(2, 3, &[1., 5., 3., -1., -5., -3.]);
+        let full = [3usize, 3];
+        assert_eq!(rowmax_prefix(&a, &full), rowmax(&a));
+        let bias = rowmax(&a);
+        let dense = exp_sub_rowbias(&a, &bias, Format::F16);
+        let prefixed = exp_sub_rowbias_prefix(&a, &bias, &full, Format::F16);
+        assert_eq!(dense, prefixed);
+    }
+
+    #[test]
+    fn prefix_ops_mask_the_tail() {
+        let a = m(1, 4, &[1.0, 2.0, 90.0, 7.0]);
+        let vis = [2usize];
+        // The masked 90.0 must not become the row max...
+        assert_eq!(rowmax_prefix(&a, &vis), vec![2.0]);
+        // ...and masked entries carry exactly zero weight.
+        let p = exp_sub_rowbias_prefix(&a, &[2.0], &vis, Format::F16);
+        assert_eq!(p.at(0, 0), Format::F16.round((-1.0f32).exp()));
+        assert_eq!(p.at(0, 1), 1.0);
+        assert_eq!(p.at(0, 2), 0.0);
+        assert_eq!(p.at(0, 3), 0.0);
+        // Empty prefix: −inf max, all-zero row.
+        assert_eq!(rowmax_prefix(&a, &[0]), vec![f32::NEG_INFINITY]);
+        let z = exp_sub_rowbias_prefix(&a, &[f32::NEG_INFINITY], &[0], Format::F16);
+        assert!(z.data.iter().all(|&x| x == 0.0));
     }
 
     #[test]

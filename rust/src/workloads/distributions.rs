@@ -6,6 +6,9 @@
 //! The benchmark shape is the paper's (B, N, S, D) = (1, 16, 1280, 128);
 //! head count is a parameter so the (slow, bit-exact) low-precision sweeps
 //! can run on a subset while keeping the distribution identical.
+//! [`MultiHeadCase`] carries separate query and KV head lists (GQA/MQA)
+//! and optional per-head valid KV lengths, so masked and grouped variants
+//! of the paper's workloads are first-class generator outputs.
 
 use super::rng::Pcg64;
 use crate::tensor::Matrix;
@@ -30,11 +33,54 @@ impl AttentionCase {
     }
 }
 
-/// A multi-head benchmark case: `heads[h]` is an independent head.
+/// Fill value for padded KV rows in mask-aware generation: large enough
+/// that an unmasked kernel reading the padding overflows FP16 instantly,
+/// so a passing masked run proves the mask actually excludes it.
+pub const PAD_GARBAGE: f32 = 3.0e4;
+
+/// The contiguous GQA/MQA head-group mapping: query head `h` of
+/// `n_heads` is served by KV head `h / (n_heads / n_kv_heads)`. The
+/// single source of truth — both `MultiHeadCase` and the attention
+/// layer's `AttentionRequest` route through here.
+pub fn gqa_kv_head(h: usize, n_heads: usize, n_kv_heads: usize) -> usize {
+    h / (n_heads / n_kv_heads.max(1)).max(1)
+}
+
+/// A multi-head benchmark case: `q[h]` are the query heads, `k`/`v` the
+/// KV heads (`q.len()` a multiple of `k.len()` — GQA grouping), and
+/// `kv_lens` optional per-query-head valid KV lengths (empty ⇒ dense).
 #[derive(Clone, Debug)]
 pub struct MultiHeadCase {
-    pub heads: Vec<AttentionCase>,
+    pub q: Vec<Matrix>,
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub kv_lens: Vec<usize>,
     pub label: String,
+}
+
+impl MultiHeadCase {
+    pub fn n_heads(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn n_kv_heads(&self) -> usize {
+        self.k.len()
+    }
+
+    /// KV head serving query head `h` (contiguous grouping).
+    pub fn kv_head_for(&self, h: usize) -> usize {
+        gqa_kv_head(h, self.n_heads(), self.n_kv_heads())
+    }
+
+    /// Materialize query head `h` with its mapped KV head.
+    pub fn head_case(&self, h: usize) -> AttentionCase {
+        let kv = self.kv_head_for(h);
+        AttentionCase {
+            q: self.q[h].clone(),
+            k: self.k[kv].clone(),
+            v: self.v[kv].clone(),
+        }
+    }
 }
 
 /// The two random families of Table 2.
@@ -80,7 +126,13 @@ impl Distribution {
 }
 
 /// Generate one head's Q, K, V from a distribution.
-pub fn gen_case(dist: Distribution, s1: usize, s2: usize, d: usize, rng: &mut Pcg64) -> AttentionCase {
+pub fn gen_case(
+    dist: Distribution,
+    s1: usize,
+    s2: usize,
+    d: usize,
+    rng: &mut Pcg64,
+) -> AttentionCase {
     AttentionCase {
         q: dist.matrix(s1, d, rng),
         k: dist.matrix(s2, d, rng),
@@ -88,8 +140,11 @@ pub fn gen_case(dist: Distribution, s1: usize, s2: usize, d: usize, rng: &mut Pc
     }
 }
 
-/// Generate the paper's benchmark tensor: `n_heads` independent heads of
-/// shape (s, d). Paper default: n_heads = 16, s = 1280, d = 128.
+/// Generate the paper's benchmark tensor: `n_heads` independent MHA heads
+/// of shape (s, d). Paper default: n_heads = 16, s = 1280, d = 128.
+/// Head `h` draws Q, K, V sequentially from stream `h` — byte-compatible
+/// with the original single-head generator, so seeded experiment data is
+/// stable across the API generations.
 pub fn gen_multihead(
     dist: Distribution,
     n_heads: usize,
@@ -97,15 +152,96 @@ pub fn gen_multihead(
     d: usize,
     seed: u64,
 ) -> MultiHeadCase {
-    let mut heads = Vec::with_capacity(n_heads);
+    let mut q = Vec::with_capacity(n_heads);
+    let mut k = Vec::with_capacity(n_heads);
+    let mut v = Vec::with_capacity(n_heads);
     for h in 0..n_heads {
         let mut rng = Pcg64::new(seed, h as u64);
-        heads.push(gen_case(dist, s, s, d, &mut rng));
+        let c = gen_case(dist, s, s, d, &mut rng);
+        q.push(c.q);
+        k.push(c.k);
+        v.push(c.v);
     }
     MultiHeadCase {
-        heads,
+        q,
+        k,
+        v,
+        kv_lens: Vec::new(),
         label: dist.label(),
     }
+}
+
+/// GQA/MQA variant of the benchmark tensor: `n_heads` query heads over
+/// `n_kv_heads` KV heads (each KV head drawn on its own deterministic
+/// stream, so a query head and its mapped KV head reproduce bit-exactly
+/// as a standalone single-head case).
+pub fn gen_gqa_multihead(
+    dist: Distribution,
+    n_heads: usize,
+    n_kv_heads: usize,
+    s1: usize,
+    s2: usize,
+    d: usize,
+    seed: u64,
+) -> MultiHeadCase {
+    assert!(n_kv_heads >= 1 && n_heads % n_kv_heads == 0, "bad GQA head counts");
+    let mut q = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let mut rng = Pcg64::new(seed, h as u64);
+        q.push(dist.matrix(s1, d, &mut rng));
+    }
+    let mut k = Vec::with_capacity(n_kv_heads);
+    let mut v = Vec::with_capacity(n_kv_heads);
+    for kvh in 0..n_kv_heads {
+        // Distinct stream family from the query heads.
+        let mut rng = Pcg64::new(seed, 0x4b56 + kvh as u64);
+        k.push(dist.matrix(s2, d, &mut rng));
+        v.push(dist.matrix(s2, d, &mut rng));
+    }
+    let label = format!("{} heads={n_heads}/kv={n_kv_heads}", dist.label());
+    MultiHeadCase {
+        q,
+        k,
+        v,
+        kv_lens: Vec::new(),
+        label,
+    }
+}
+
+/// Mask-aware generation: a right-padded batch of `n_heads` MHA heads.
+/// Head `h` has `lens[h % lens.len()]` valid KV rows; the padding region
+/// is filled with [`PAD_GARBAGE`] so an unmasked run is guaranteed to
+/// overflow — a passing `AttnMask::Padded` run proves mask correctness.
+pub fn gen_padded_multihead(
+    dist: Distribution,
+    n_heads: usize,
+    s: usize,
+    d: usize,
+    lens: &[usize],
+    seed: u64,
+) -> MultiHeadCase {
+    assert!(!lens.is_empty(), "need at least one valid length");
+    let mut mh = gen_multihead(dist, n_heads, s, d, seed);
+    let mut kv_lens = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let len = lens[h % lens.len()].min(s);
+        kv_lens.push(len);
+        for m in [&mut mh.k[h], &mut mh.v[h]] {
+            for r in len..s {
+                m.row_mut(r).fill(PAD_GARBAGE);
+            }
+        }
+    }
+    mh.kv_lens = kv_lens;
+    mh.label = format!("{} padded", mh.label);
+    mh
+}
+
+/// Random valid lengths for a padded batch, in `[min_len, s]`.
+pub fn gen_padded_lens(n_heads: usize, s: usize, min_len: usize, rng: &mut Pcg64) -> Vec<usize> {
+    (0..n_heads)
+        .map(|_| min_len + rng.below(s.saturating_sub(min_len) + 1))
+        .collect()
 }
 
 #[cfg(test)]
@@ -142,10 +278,51 @@ mod tests {
     fn multihead_heads_are_independent() {
         let dist = Distribution::Uniform { x0: 0.0, am: 1.0 };
         let mh = gen_multihead(dist, 3, 32, 16, 9);
-        assert_eq!(mh.heads.len(), 3);
-        assert_ne!(mh.heads[0].q.data, mh.heads[1].q.data);
+        assert_eq!(mh.n_heads(), 3);
+        assert_eq!(mh.n_kv_heads(), 3);
+        assert_ne!(mh.q[0].data, mh.q[1].data);
+        assert_ne!(mh.k[0].data, mh.k[1].data);
         // deterministic across calls
         let mh2 = gen_multihead(dist, 3, 32, 16, 9);
-        assert_eq!(mh.heads[2].q.data, mh2.heads[2].q.data);
+        assert_eq!(mh.q[2].data, mh2.q[2].data);
+        assert_eq!(mh.v[2].data, mh2.v[2].data);
+    }
+
+    #[test]
+    fn gqa_generation_maps_groups() {
+        let dist = Distribution::Uniform { x0: 0.0, am: 1.0 };
+        let mh = gen_gqa_multihead(dist, 8, 2, 32, 48, 16, 5);
+        assert_eq!(mh.n_heads(), 8);
+        assert_eq!(mh.n_kv_heads(), 2);
+        assert_eq!(mh.q[0].shape(), (32, 16));
+        assert_eq!(mh.k[0].shape(), (48, 16));
+        // Heads 0..3 share KV head 0, heads 4..7 share KV head 1.
+        assert_eq!(mh.kv_head_for(3), 0);
+        assert_eq!(mh.kv_head_for(4), 1);
+        let c = mh.head_case(5);
+        assert_eq!(c.q.data, mh.q[5].data);
+        assert_eq!(c.k.data, mh.k[1].data);
+    }
+
+    #[test]
+    fn padded_generation_fills_garbage_and_records_lens() {
+        let dist = Distribution::Uniform { x0: 0.0, am: 1.0 };
+        let mh = gen_padded_multihead(dist, 3, 16, 8, &[4, 16], 7);
+        assert_eq!(mh.kv_lens, vec![4, 16, 4]);
+        // Valid region is benign, padding is garbage.
+        assert!(mh.k[0].at(3, 0).abs() < 2.0);
+        assert_eq!(mh.k[0].at(4, 0), PAD_GARBAGE);
+        assert_eq!(mh.v[0].at(15, 7), PAD_GARBAGE);
+        // Head 1 is fully valid: no padding rows at all.
+        assert!(mh.k[1].data.iter().all(|&x| x.abs() < 2.0));
+    }
+
+    #[test]
+    fn padded_lens_stay_in_range() {
+        let mut rng = Pcg64::new(11, 0);
+        let lens = gen_padded_lens(32, 100, 10, &mut rng);
+        assert_eq!(lens.len(), 32);
+        assert!(lens.iter().all(|&l| (10..=100).contains(&l)));
+        assert!(lens.iter().any(|&l| l < 100), "expected some padding");
     }
 }

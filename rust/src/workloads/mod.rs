@@ -7,7 +7,10 @@ pub mod resonance;
 pub mod rng;
 pub mod traces;
 
-pub use distributions::{gen_case, gen_multihead, AttentionCase, Distribution, MultiHeadCase};
+pub use distributions::{
+    gen_case, gen_gqa_multihead, gen_multihead, gen_padded_lens, gen_padded_multihead,
+    gqa_kv_head, AttentionCase, Distribution, MultiHeadCase, PAD_GARBAGE,
+};
 pub use resonance::{ResonanceCategory, ResonanceSpec};
 pub use rng::Pcg64;
 pub use traces::{all_traces, qwen2_overflow_trace, svd_img2vid_trace, TraceSpec};

@@ -1,12 +1,10 @@
 //! Integration tests over the attention lab + experiment harness
-//! (no artifacts required — pure rust layers).
+//! (no artifacts required — pure rust layers), through the unified
+//! AttentionRequest / KernelRegistry API.
 
-use pasa::attention::{
-    flash_attention, naive_attention_f32, pasa_attention, to_fp16_inputs, Allocation,
-    AttentionConfig,
-};
+use pasa::attention::{Allocation, AttentionRequest, KernelRegistry};
 use pasa::experiments::{self, ExpOptions};
-use pasa::numerics::{has_overflow, relative_rmse};
+use pasa::numerics::relative_rmse;
 use pasa::workloads::{all_traces, gen_multihead, Distribution};
 
 fn fast_opts() -> ExpOptions {
@@ -37,16 +35,23 @@ fn unknown_experiment_is_an_error() {
 #[test]
 fn paper_headline_multihead() {
     // The paper's (B, N, S, D) benchmark at reduced size: FA16-32 NaNs on
-    // the x0=30 case in *every* head, PASA survives with small RMSE.
+    // the x0=30 case in *every* head, PASA survives with small RMSE —
+    // one request, every head through the same kernel.
     let mh = gen_multihead(Distribution::Uniform { x0: 30.0, am: 0.5 }, 2, 384, 128, 1);
-    for case in &mh.heads {
-        let c = to_fp16_inputs(case);
-        let golden = naive_attention_f32(&c);
-        let fa = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
-        assert!(has_overflow(&fa.data));
-        let p = pasa_attention(&c, &AttentionConfig::new(Allocation::Pasa16));
-        assert!(!has_overflow(&p.data));
-        assert!(relative_rmse(&p.data, &golden.data) < 2e-2);
+    let req = AttentionRequest::from_multihead(&mh, Allocation::Fa16_32).with_fp16_inputs();
+    let golden = KernelRegistry::naive().forward(&req);
+    let fa = req.run();
+    for h in 0..2 {
+        assert!(fa.stats[h].nonfinite_outputs > 0, "head {h} did not overflow");
+        assert!(fa.stats[h].overflow_events > 0, "head {h} missing telemetry");
+        assert!(fa.stats[h].max_abs_score > 65504.0, "head {h} score too small");
+    }
+    let p = req.clone().with_alloc(Allocation::Pasa16).run();
+    assert!(!p.overflowed());
+    assert_eq!(p.overflow_events(), 0);
+    for h in 0..2 {
+        let e = relative_rmse(&p.heads[h].data, &golden.heads[h].data);
+        assert!(e < 2e-2, "head {h}: rmse {e}");
     }
 }
 
@@ -64,21 +69,24 @@ fn model_traces_end_to_end_rescue() {
         // Deterministic seeds where each trace exhibits its failure mode
         // (7: qwen2 mixed-sign overflow; 11: svd whole-row saturation).
         let seed = if t.name == "svd-img2vid" { 11 } else { 7 };
-        let c = to_fp16_inputs(&t.generate(seed));
-        let raw = pasa::attention::raw_scores_f32(&c);
-        let peak = raw
-            .data
-            .iter()
-            .fold(0.0f32, |m, &x| m.max(x.abs()));
-        assert!(peak > 65504.0, "{}: raw scores do not overflow", t.name);
-        let fa = flash_attention(&c, &AttentionConfig::new(Allocation::Fa16_32));
+        let req =
+            AttentionRequest::from_case(&t.generate(seed), Allocation::Fa16_32).with_fp16_inputs();
+        let fa = req.run();
+        // Kernel telemetry replaces the old raw-score probe: the pre-store
+        // |S| must exceed the FP16 boundary on both traces.
+        assert!(
+            fa.max_abs_score() > 65504.0,
+            "{}: raw scores do not overflow",
+            t.name
+        );
+        assert!(fa.overflow_events() > 0, "{}: no overflow events", t.name);
         if t.name == "svd-img2vid" {
-            assert!(has_overflow(&fa.data), "{} should NaN FA16-32", t.name);
+            assert!(fa.overflowed(), "{} should NaN FA16-32", t.name);
         }
-        let p = pasa_attention(&c, &AttentionConfig::new(Allocation::Pasa16));
-        assert!(!has_overflow(&p.data), "{} overflowed PASA", t.name);
-        let golden = naive_attention_f32(&c);
-        let e = relative_rmse(&p.data, &golden.data);
+        let p = req.clone().with_alloc(Allocation::Pasa16).run();
+        assert!(!p.overflowed(), "{} overflowed PASA", t.name);
+        let golden = KernelRegistry::naive().forward(&req);
+        let e = relative_rmse(&p.heads[0].data, &golden.heads[0].data);
         // The qwen2-like trace keeps |scores| in the tens of thousands
         // even after the shift (paper Fig. 13: [−58134, 1124]); at those
         // magnitudes FP16 rounding can flip near-tied argmax rows, so the

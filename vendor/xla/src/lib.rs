@@ -1,0 +1,210 @@
+//! Offline stub of the `xla-rs` PJRT surface used by `pasa::runtime`.
+//!
+//! The serving runtime loads AOT HLO-text artifacts through PJRT. In
+//! environments without the native XLA backend this stub keeps the crate
+//! compiling: [`Literal`] is a real in-memory container (so literal
+//! plumbing and shape checks still work), while every operation that would
+//! need the native runtime — client creation, module parsing, compilation,
+//! execution — returns [`XlaError`]. Callers already degrade gracefully:
+//! the integration tests and examples skip when `artifacts/` is absent,
+//! and `ModelRuntime::load` surfaces the error otherwise.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type of the stubbed PJRT layer.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what} unavailable: built with the offline xla stub (no native PJRT backend)"
+    )))
+}
+
+/// Element payload of a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Elems {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Elems {
+    fn len(&self) -> usize {
+        match self {
+            Elems::F32(v) => v.len(),
+            Elems::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Types a [`Literal`] can hold natively.
+pub trait NativeType: Copy {
+    fn wrap(data: &[Self]) -> Elems;
+    fn unwrap(e: &Elems) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Elems {
+        Elems::F32(data.to_vec())
+    }
+    fn unwrap(e: &Elems) -> Option<Vec<Self>> {
+        match e {
+            Elems::F32(v) => Some(v.clone()),
+            Elems::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Elems {
+        Elems::I32(data.to_vec())
+    }
+    fn unwrap(e: &Elems) -> Option<Vec<Self>> {
+        match e {
+            Elems::I32(v) => Some(v.clone()),
+            Elems::F32(_) => None,
+        }
+    }
+}
+
+/// In-memory literal: a flat buffer plus dims, or a tuple of literals.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array { elems: Elems, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array {
+            elems: T::wrap(data),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { elems, .. } => {
+                let n: i64 = dims.iter().product();
+                if n as usize != elems.len() {
+                    return Err(XlaError(format!(
+                        "reshape: {} elements into dims {dims:?}",
+                        elems.len()
+                    )));
+                }
+                Ok(Literal::Array {
+                    elems: elems.clone(),
+                    dims: dims.to_vec(),
+                })
+            }
+            Literal::Tuple(_) => Err(XlaError("reshape on a tuple literal".into())),
+        }
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(v) => Ok(v),
+            lit @ Literal::Array { .. } => Ok(vec![lit]),
+        }
+    }
+
+    /// Copy the buffer out as a native vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { elems, .. } => T::unwrap(elems)
+                .ok_or_else(|| XlaError("literal element type mismatch".into())),
+            Literal::Tuple(_) => Err(XlaError("to_vec on a tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native backend).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: construction always fails offline).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("XLA compilation")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_plumbing_works_offline() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("offline xla stub"));
+    }
+}
