@@ -25,7 +25,7 @@ fn main() {
     let vrow = vec![2.0f32; width];
     let r = b.run("write_row x 4 layers", 4.0, || {
         for l in 0..layers {
-            s.write_row(&mut pool, l, 200, &krow, &vrow);
+            s.write_row(&mut pool, l, 200, &krow, &vrow).unwrap();
         }
     });
     println!("{r}");
@@ -33,7 +33,7 @@ fn main() {
     s.len_tokens = 512;
     let mut dense = vec![0.0f32; 512 * width];
     let r = b.run("fill_dense one layer (512 tok)", 512.0, || {
-        s.fill_dense(&pool, 0, false, &mut dense);
+        s.fill_dense(&pool, 0, false, &mut dense).unwrap();
         dense[0]
     });
     println!("{r}");
@@ -53,8 +53,8 @@ fn main() {
         for (i, c) in seqs.iter().enumerate() {
             for l in 0..layers {
                 let off = (l * 4 + i) * sf;
-                c.fill_dense(&pool, l, false, &mut batch[off..off + sf]);
-                c.fill_dense(&pool, l, true, &mut batch[off..off + sf]);
+                c.fill_dense(&pool, l, false, &mut batch[off..off + sf]).unwrap();
+                c.fill_dense(&pool, l, true, &mut batch[off..off + sf]).unwrap();
             }
         }
         batch[0]

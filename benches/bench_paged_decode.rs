@@ -1,0 +1,103 @@
+//! Paged-decode benchmark (PR 2 tentpole): decode-shaped attention
+//! (`s1 = 1` GQA query against a growing KV) through `KvView::Paged`
+//! versus the legacy dense path — `fill_dense` into a `(max_seq, W)`
+//! staging buffer, per-head column slicing, then the same kernels.
+//!
+//! The claim to demonstrate: paged decode cost scales with `len_tokens`
+//! (tokens actually generated), while the dense path pays `O(max_seq)`
+//! assembly every step regardless of how short the sequence is. Expect
+//! the dense column to stay roughly flat (dominated by the 4096-row
+//! staging buffer) and the paged column to shrink proportionally with
+//! `len`.
+
+use pasa::attention::{Allocation, AttentionRequest, AttnMask, KvPair, KvView};
+use pasa::bench::Bencher;
+use pasa::coordinator::{KvPool, SeqCache};
+use pasa::tensor::Matrix;
+use pasa::workloads::{gen_paged_decode_case, Distribution, MultiHeadCase};
+
+const N_HEADS: usize = 8;
+const N_KV: usize = 2;
+const D: usize = 64;
+const MAX_SEQ: usize = 4096;
+const PAGE_TOKENS: usize = 64;
+
+fn query_request(mh: &MultiHeadCase, alloc: Allocation, mask: AttnMask) -> AttentionRequest {
+    let mut req = AttentionRequest::new(alloc).with_mask(mask).with_blocks(128, 128);
+    for q in &mh.q {
+        req = req.with_query_head(q.clone());
+    }
+    req
+}
+
+fn main() {
+    let b = Bencher::quick();
+    let w = N_KV * D;
+    println!(
+        "# bench_paged_decode — decode step (s1=1, {N_HEADS}q/{N_KV}kv, d={D}) \
+         at max_seq={MAX_SEQ}\n"
+    );
+    let dist = Distribution::Uniform { x0: 0.5, am: 1.0 };
+
+    for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+        println!("## {}", alloc.name());
+        for len in [256usize, 1024, 4096] {
+            let mh = gen_paged_decode_case(dist, N_HEADS, N_KV, len, MAX_SEQ, D, len as u64);
+            // Seed only the valid prefix into the paged pool (the engine
+            // never materializes rows it hasn't generated).
+            let pages = 2 * MAX_SEQ.div_ceil(PAGE_TOKENS) + 4;
+            let mut pool = KvPool::new(pages, PAGE_TOKENS, w);
+            let mut cache = SeqCache::new(1);
+            cache.ensure_capacity(&mut pool, len).unwrap();
+            let (kp, vp) = mh.packed_kv_rows();
+            for r in 0..len {
+                cache.write_row(&mut pool, 0, r, kp.row(r), vp.row(r)).unwrap();
+            }
+
+            // Paged: gather O(len) rows page-by-page, no staging buffer.
+            let req = query_request(&mh, alloc, AttnMask::Padded(vec![len]));
+            let r = b.run(&format!("paged  len={len:>5}"), len as f64, || {
+                let pairs: Vec<KvPair<'_>> = (0..N_KV)
+                    .map(|j| KvPair {
+                        k: KvView::paged(cache.page_ids(0, false), &pool, len)
+                            .col_window(j * D, D),
+                        v: KvView::paged(cache.page_ids(0, true), &pool, len)
+                            .col_window(j * D, D),
+                    })
+                    .collect();
+                req.run_with_kv(&pairs).heads[0].data[0]
+            });
+            println!("{r}");
+
+            // Dense: the legacy per-step path — fill_dense into the full
+            // (max_seq, W) staging buffer (reused across steps, like the
+            // engine's kbatch/vbatch), slice per head, run the same
+            // kernels. No extra copies beyond what that path really pays.
+            let mut kd = Matrix::zeros(MAX_SEQ, w);
+            let mut vd = Matrix::zeros(MAX_SEQ, w);
+            let r = b.run(&format!("dense  len={len:>5}"), len as f64, || {
+                cache.fill_dense(&pool, 0, false, &mut kd.data).unwrap();
+                cache.fill_dense(&pool, 0, true, &mut vd.data).unwrap();
+                let k_heads: Vec<Matrix> =
+                    (0..N_KV).map(|j| kd.cols_slice(j * D, (j + 1) * D)).collect();
+                let v_heads: Vec<Matrix> =
+                    (0..N_KV).map(|j| vd.cols_slice(j * D, (j + 1) * D)).collect();
+                let pairs: Vec<KvPair<'_>> = k_heads
+                    .iter()
+                    .zip(&v_heads)
+                    .map(|(kh, vh)| KvPair {
+                        k: KvView::Dense(kh),
+                        v: KvView::Dense(vh),
+                    })
+                    .collect();
+                req.run_with_kv(&pairs).heads[0].data[0]
+            });
+            println!("{r}");
+        }
+        println!();
+    }
+    println!(
+        "(paged time should track len; dense time is pinned near the \
+         max_seq={MAX_SEQ} assembly cost)"
+    );
+}

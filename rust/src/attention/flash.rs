@@ -18,7 +18,7 @@
 //! visible prefix are skipped outright (the flash-causal tiling win).
 
 use super::config::AttentionConfig;
-use super::request::{HeadMask, HeadStats};
+use super::request::{HeadMask, HeadStats, KvView};
 use crate::tensor::{matmul_nn, matmul_nt_prefix, matmul_nt_stats, ops, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
 
@@ -27,8 +27,8 @@ pub fn flash_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
     flash_head(&case.q, &case.k, &case.v, HeadMask::None, cfg).0
 }
 
-/// Masked FA2 forward pass for one head, with telemetry. This is the
-/// inner kernel [`super::kernel::FlashKernel`] fans out per head.
+/// Masked FA2 forward pass for one head over dense K/V — thin wrapper
+/// around the view-based core [`flash_head_kv`].
 pub fn flash_head(
     q: &Matrix,
     k: &Matrix,
@@ -36,8 +36,23 @@ pub fn flash_head(
     mask: HeadMask,
     cfg: &AttentionConfig,
 ) -> (Matrix, HeadStats) {
+    flash_head_kv(q, KvView::Dense(k), KvView::Dense(v), mask, cfg)
+}
+
+/// Masked FA2 forward pass for one head over [`KvView`] operands, with
+/// telemetry. This is the inner kernel [`super::kernel::FlashKernel`] fans
+/// out per head: the KV sweep gathers one block at a time through the
+/// view, so a paged operand is walked page-by-page — `O(len_tokens)` rows
+/// touched per pass, never a dense `(max_seq, W)` assembly.
+pub fn flash_head_kv(
+    q: &Matrix,
+    k: KvView<'_>,
+    v: KvView<'_>,
+    mask: HeadMask,
+    cfg: &AttentionConfig,
+) -> (Matrix, HeadStats) {
     let (s1_total, d) = q.shape();
-    let s2_total = k.rows;
+    let s2_total = k.rows();
     let alpha = (d as f64).sqrt() as f32;
     let inv_alpha = 1.0 / alpha;
     let bs = cfg.blocks;
@@ -47,7 +62,7 @@ pub fn flash_head(
     let boundary = gemm.store.overflow_boundary() as f32;
     let mut gstats = GemmStats::default();
 
-    let mut out = Matrix::zeros(s1_total, v.cols);
+    let mut out = Matrix::zeros(s1_total, v.cols());
 
     let mut i0 = 0;
     while i0 < s1_total {
@@ -63,7 +78,7 @@ pub fn flash_head(
         // l at 0, O at 0.
         let mut m = vec![f32::NEG_INFINITY; rows];
         let mut l = vec![0.0f32; rows];
-        let mut oi = Matrix::zeros(rows, v.cols);
+        let mut oi = Matrix::zeros(rows, v.cols());
 
         let mut j0 = 0;
         while j0 < s2_total {
@@ -71,8 +86,8 @@ pub fn flash_head(
                 break; // every remaining KV block is invisible to this Q block
             }
             let j1 = (j0 + bs.s2).min(s2_total);
-            let kj = k.rows_slice(j0, j1);
-            let vj = v.rows_slice(j0, j1);
+            let kj = k.block(j0, j1);
+            let vj = v.block(j0, j1);
             let width = j1 - j0;
             let bvis: Vec<usize> = vis.iter().map(|&t| t.saturating_sub(j0).min(width)).collect();
 

@@ -14,25 +14,54 @@
 //! the exact same code path per kernel.
 
 use super::config::Allocation;
-use super::flash::flash_head;
-use super::naive::naive_head;
-use super::pasa::{pasa_head, pasa_preprocess, PasaPre};
-use super::request::{AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats};
+use super::flash::flash_head_kv;
+use super::naive::naive_head_kv;
+use super::pasa::{pasa_head_kv, pasa_preprocess_kv, PasaPre};
+use super::request::{
+    AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats, KvPair, KvView,
+};
 use crate::tensor::Matrix;
 
 /// A forward-only attention kernel over [`AttentionRequest`]s.
+///
+/// The primary entry is [`Self::forward_kv`], which takes the K/V operands
+/// as [`super::request::KvView`]s (dense or paged); [`Self::forward`] is
+/// the owned-request convenience that wraps the request's own K/V heads in
+/// dense views — both run the exact same per-head cores, so the paged path
+/// is bit-identical to the dense path by construction.
 pub trait AttentionKernel: Sync {
     fn name(&self) -> &'static str;
-    fn forward(&self, req: &AttentionRequest) -> AttentionOutput;
+
+    /// Forward over the request's own (dense, owned) K/V heads. The shape
+    /// rules are checked once, inside `forward_kv`; only the owned-list
+    /// pairing (K count == V count) is asserted here, since views can't
+    /// express that mismatch.
+    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
+        assert_eq!(
+            req.k.len(),
+            req.v.len(),
+            "request needs matching K/V heads"
+        );
+        self.forward_kv(req, &req.kv_pairs())
+    }
+
+    /// Forward with external K/V views standing in for the request's K/V
+    /// (which may be empty). `kv` has one entry per KV head; query heads
+    /// map onto it with the contiguous GQA grouping.
+    fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput;
 }
 
 /// Fan a per-head computation out over OS threads, one per head —
 /// mirroring the experiment harness's historical thread-per-head layout.
-fn fanout_heads<F>(n: usize, f: F) -> (Vec<Matrix>, Vec<HeadStats>)
+/// `parallel: false` runs heads sequentially (bit-identical — the per-head
+/// fn is pure): the serving decode path (`s1 = 1`) does microseconds of
+/// work per head, where thread spawn/join would dominate the
+/// `O(len_tokens)` gather.
+fn fanout_heads<F>(n: usize, parallel: bool, f: F) -> (Vec<Matrix>, Vec<HeadStats>)
 where
     F: Fn(usize) -> (Matrix, HeadStats) + Sync,
 {
-    if n <= 1 {
+    if n <= 1 || !parallel {
         return (0..n).map(&f).unzip();
     }
     let results: Vec<(Matrix, HeadStats)> = std::thread::scope(|scope| {
@@ -54,11 +83,12 @@ impl AttentionKernel for NaiveKernel {
         "naive-f32"
     }
 
-    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
-        req.validate().expect("invalid AttentionRequest");
-        let (heads, stats) = fanout_heads(req.n_heads(), |h| {
-            let kv = req.kv_head_for(h);
-            naive_head(&req.q[h], &req.k[kv], &req.v[kv], req.mask_for_head(h))
+    fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
+        req.validate_kv(kv).expect("invalid AttentionRequest");
+        let parallel = req.seq_q() > 1;
+        let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
+            let pair = req.kv_pair_for(kv, h);
+            naive_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h))
         });
         AttentionOutput { heads, stats }
     }
@@ -73,11 +103,12 @@ impl AttentionKernel for FlashKernel {
         "flash"
     }
 
-    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
-        req.validate().expect("invalid AttentionRequest");
-        let (heads, stats) = fanout_heads(req.n_heads(), |h| {
-            let kv = req.kv_head_for(h);
-            flash_head(&req.q[h], &req.k[kv], &req.v[kv], req.mask_for_head(h), &req.cfg)
+    fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
+        req.validate_kv(kv).expect("invalid AttentionRequest");
+        let parallel = req.seq_q() > 1;
+        let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
+            let pair = req.kv_pair_for(kv, h);
+            flash_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h), &req.cfg)
         });
         AttentionOutput { heads, stats }
     }
@@ -95,54 +126,71 @@ impl AttentionKernel for PasaKernel {
         "pasa"
     }
 
-    fn forward(&self, req: &AttentionRequest) -> AttentionOutput {
-        req.validate().expect("invalid AttentionRequest");
+    fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
+        req.validate_kv(kv).expect("invalid AttentionRequest");
+        let parallel = req.seq_q() > 1;
+        let n_kv = kv.len();
+        let kv_head_for = |h: usize| crate::workloads::gqa_kv_head(h, req.n_heads(), n_kv);
         match &req.mask {
             AttnMask::Padded(_) => {
                 // Per-head valid lengths: shift only the valid KV prefix.
                 // Preprocessing is still shared — once per distinct
                 // (KV head, valid length) pair, so a GQA group with a
                 // broadcast length pays the K' GEMM once, not per head.
+                // Paged views truncate for free (shorter page-table walk);
+                // dense views are sliced once, as before.
                 let padded_len = |h: usize| {
-                    let kv = req.kv_head_for(h);
+                    let kvh = kv_head_for(h);
                     match req.mask_for_head(h) {
-                        HeadMask::Prefix(l) => l.min(req.k[kv].rows),
+                        HeadMask::Prefix(l) => l.min(kv[kvh].k.rows()),
                         _ => unreachable!("Padded mask resolves to Prefix"),
                     }
                 };
                 let mut pres: Vec<((usize, usize), PasaPre)> = Vec::new();
                 for h in 0..req.n_heads() {
-                    let key = (req.kv_head_for(h), padded_len(h));
+                    let key = (kv_head_for(h), padded_len(h));
                     if key.1 > 0 && !pres.iter().any(|(k, _)| *k == key) {
-                        let kt = req.k[key.0].rows_slice(0, key.1);
-                        pres.push((key, pasa_preprocess(&kt, &req.cfg)));
+                        let kview = kv[key.0].k;
+                        let pre = match kview.truncated(key.1) {
+                            Some(tv) => pasa_preprocess_kv(tv, &req.cfg),
+                            None => {
+                                let kt = kview.block(0, key.1);
+                                pasa_preprocess_kv(KvView::Dense(&kt), &req.cfg)
+                            }
+                        };
+                        pres.push((key, pre));
                     }
                 }
-                let (heads, stats) = fanout_heads(req.n_heads(), |h| {
-                    let kv = req.kv_head_for(h);
+                let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
+                    let kvh = kv_head_for(h);
                     let len = padded_len(h);
                     if len == 0 {
                         // Empty visible set: softmax over nothing is
                         // defined as zero attention output, not NaN.
-                        let out = Matrix::zeros(req.q[h].rows, req.v[kv].cols);
+                        let out = Matrix::zeros(req.q[h].rows, kv[kvh].v.cols());
                         return (out, HeadStats::default());
                     }
-                    let pre = &pres.iter().find(|(k, _)| *k == (kv, len)).unwrap().1;
-                    let vt = req.v[kv].rows_slice(0, len);
-                    pasa_head(&req.q[h], &vt, pre, HeadMask::None, &req.cfg)
+                    let pre = &pres.iter().find(|(k, _)| *k == (kvh, len)).unwrap().1;
+                    let vview = kv[kvh].v;
+                    match vview.truncated(len) {
+                        Some(tv) => pasa_head_kv(&req.q[h], tv, pre, HeadMask::None, &req.cfg),
+                        None => {
+                            let vt = vview.block(0, len);
+                            pasa_head_kv(&req.q[h], KvView::Dense(&vt), pre, HeadMask::None, &req.cfg)
+                        }
+                    }
                 });
                 AttentionOutput { heads, stats }
             }
             _ => {
                 // Shared preprocessing per KV head (GQA groups reuse K').
-                let pres: Vec<PasaPre> = req
-                    .k
+                let pres: Vec<PasaPre> = kv
                     .iter()
-                    .map(|k| pasa_preprocess(k, &req.cfg))
+                    .map(|pair| pasa_preprocess_kv(pair.k, &req.cfg))
                     .collect();
-                let (heads, stats) = fanout_heads(req.n_heads(), |h| {
-                    let kv = req.kv_head_for(h);
-                    pasa_head(&req.q[h], &req.v[kv], &pres[kv], req.mask_for_head(h), &req.cfg)
+                let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
+                    let kvh = kv_head_for(h);
+                    pasa_head_kv(&req.q[h], kv[kvh].v, &pres[kvh], req.mask_for_head(h), &req.cfg)
                 });
                 AttentionOutput { heads, stats }
             }

@@ -22,6 +22,25 @@
 //! The per-head inner kernels remain available as free functions
 //! ([`flash_attention`], [`pasa_attention`], [`naive_attention_f32`] and
 //! their masked variants) for single-head studies and goldens.
+//!
+//! ## Paged K/V views
+//!
+//! K/V operands reach the kernels through [`KvView`]: either
+//! `Dense(&Matrix)` or `Paged { pages, pool, len_tokens, .. }`, where the
+//! pool is any [`KvPageSource`] (the serving coordinator's `KvPool`
+//! implements it). The flash/PASA cores iterate KV *blocks* through
+//! [`KvView::block`], so a paged operand is gathered page-by-page —
+//! `O(len_tokens)` rows touched per forward, never a dense
+//! `(max_seq, W)` assembly — and PASA's shared `K' = M·K` preprocessing
+//! runs per page-block gather. A paged view's `len_tokens` acts as the
+//! `Prefix` mask: stale page tails beyond it are simply outside the view,
+//! so they can never enter a softmax or the pseudo-average. Build a
+//! request with query heads only and dispatch with
+//! [`AttentionRequest::run_with_kv`] (or a kernel's
+//! [`AttentionKernel::forward_kv`]); the dense
+//! [`AttentionRequest::run`] path wraps the owned K/V in dense views and
+//! runs the *same* cores, which is why paged and dense execution are
+//! bit-identical by construction.
 
 pub mod beta;
 pub mod config;
@@ -34,11 +53,14 @@ pub mod shifting;
 
 pub use beta::{solve_optimal_beta, PAPER_BETA, PAPER_BETAS};
 pub use config::{Allocation, AttentionConfig, BlockSizes};
-pub use flash::{flash_attention, flash_head};
+pub use flash::{flash_attention, flash_head, flash_head_kv};
 pub use kernel::{AttentionKernel, FlashKernel, KernelRegistry, NaiveKernel, PasaKernel};
 pub use naive::{naive_attention_f32, naive_attention_masked_f32, raw_scores_f32};
-pub use pasa::{pasa_attention, pasa_head, pasa_preprocess, PasaPre};
-pub use request::{AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats};
+pub use pasa::{pasa_attention, pasa_head, pasa_head_kv, pasa_preprocess, pasa_preprocess_kv, PasaPre};
+pub use request::{
+    AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats, KvPageSource, KvPair, KvView,
+    PageId,
+};
 pub use shifting::{preprocess_k, shifting_inverse, shifting_matrix};
 
 use crate::numerics::Format;

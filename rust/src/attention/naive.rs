@@ -4,7 +4,7 @@
 //! exact reference. A fully-masked query row is defined to produce a zero
 //! output row (softmax over the empty set must not NaN).
 
-use super::request::{HeadMask, HeadStats};
+use super::request::{HeadMask, HeadStats, KvView};
 use crate::numerics::Format;
 use crate::tensor::{matmul_nt, matmul_nt_stats, GemmPrecision, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
@@ -30,6 +30,35 @@ pub(crate) fn naive_head(
     v: &Matrix,
     mask: HeadMask,
 ) -> (Matrix, HeadStats) {
+    naive_head_kv(q, KvView::Dense(k), KvView::Dense(v), mask)
+}
+
+/// View-based golden core. The reference is deliberately unblocked, so a
+/// paged operand is gathered once into a dense `(len_tokens × d)` matrix —
+/// still `O(len_tokens)`, never `O(max_seq)` — while dense views borrow
+/// straight through with no copy.
+pub(crate) fn naive_head_kv(
+    q: &Matrix,
+    kview: KvView<'_>,
+    vview: KvView<'_>,
+    mask: HeadMask,
+) -> (Matrix, HeadStats) {
+    let k_owned: Matrix;
+    let k: &Matrix = match kview {
+        KvView::Dense(m) => m,
+        _ => {
+            k_owned = kview.to_matrix();
+            &k_owned
+        }
+    };
+    let v_owned: Matrix;
+    let v: &Matrix = match vview {
+        KvView::Dense(m) => m,
+        _ => {
+            v_owned = vview.to_matrix();
+            &v_owned
+        }
+    };
     let (s1, d) = q.shape();
     let s2 = k.rows;
     let alpha = (d as f64).sqrt();

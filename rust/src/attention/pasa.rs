@@ -40,7 +40,7 @@
 //! test pins this down.
 
 use super::config::AttentionConfig;
-use super::request::{HeadMask, HeadStats};
+use super::request::{HeadMask, HeadStats, KvView};
 use super::shifting::{effective_invariant, preprocess_k, shifting_matrix};
 use crate::numerics::Format;
 use crate::tensor::{matmul_nn, matmul_nt_stats, ops, GemmStats, Matrix};
@@ -66,8 +66,16 @@ pub struct PasaPre {
 /// effective correction factor c_j of its rounded M (constants
 /// precomputed at high precision, like the paper's FP64-solved β).
 pub fn pasa_preprocess(k: &Matrix, cfg: &AttentionConfig) -> PasaPre {
-    let s2_total = k.rows;
-    let d = k.cols;
+    pasa_preprocess_kv(KvView::Dense(k), cfg)
+}
+
+/// View-based preprocessing core: K'_j = M·K_j per KV block, gathering
+/// each block through the [`KvView`]. A paged operand is shifted
+/// page-block-by-page-block — the `K' = M·K` GEMM works per page gather,
+/// no dense K assembly.
+pub fn pasa_preprocess_kv(k: KvView<'_>, cfg: &AttentionConfig) -> PasaPre {
+    let s2_total = k.rows();
+    let d = k.cols();
     let alpha = (d as f64).sqrt();
     let beta = cfg.beta;
     let bs2 = cfg.blocks.s2;
@@ -80,7 +88,7 @@ pub fn pasa_preprocess(k: &Matrix, cfg: &AttentionConfig) -> PasaPre {
     let mut j0 = 0;
     while j0 < s2_total {
         let j1 = (j0 + bs2).min(s2_total);
-        let kj = k.rows_slice(j0, j1);
+        let kj = k.block(j0, j1);
         let (m, c) = if j1 - j0 == bs2 {
             (m_full.clone(), inva_main)
         } else {
@@ -132,6 +140,19 @@ pub fn pasa_head(
     mask: HeadMask,
     cfg: &AttentionConfig,
 ) -> (Matrix, HeadStats) {
+    pasa_head_kv(q, KvView::Dense(v), pre, mask, cfg)
+}
+
+/// View-based PASA core: V is gathered block-by-block through the
+/// [`KvView`] alongside the preprocessed K' blocks, so the paged decode
+/// path touches `O(len_tokens)` V rows per pass.
+pub fn pasa_head_kv(
+    q: &Matrix,
+    v: KvView<'_>,
+    pre: &PasaPre,
+    mask: HeadMask,
+    cfg: &AttentionConfig,
+) -> (Matrix, HeadStats) {
     let (s1_total, _d) = q.shape();
     let s2_total = pre.s2_total;
     let bs = cfg.blocks;
@@ -142,7 +163,7 @@ pub fn pasa_head(
     let inva_main = pre.inva_main;
     let mut gstats = GemmStats::default();
 
-    let mut out = Matrix::zeros(s1_total, v.cols);
+    let mut out = Matrix::zeros(s1_total, v.cols());
 
     let mut i0 = 0;
     while i0 < s1_total {
@@ -156,7 +177,7 @@ pub fn pasa_head(
         let mut m = vec![f32::NEG_INFINITY; rows];
         let mut l = vec![0.0f32; rows];
         let mut fbar = vec![0.0f32; rows];
-        let mut oi = Matrix::zeros(rows, v.cols);
+        let mut oi = Matrix::zeros(rows, v.cols());
 
         let mut j0 = 0;
         let mut jidx = 0usize;
@@ -168,7 +189,7 @@ pub fn pasa_head(
                 break;
             }
             let j1 = (j0 + bs.s2).min(s2_total);
-            let vj = v.rows_slice(j0, j1);
+            let vj = v.block(j0, j1);
             let kp = &pre.kp_blocks[jidx];
             let width = j1 - j0;
             let bvis: Vec<usize> = vis.iter().map(|&t| t.saturating_sub(j0).min(width)).collect();

@@ -16,6 +16,188 @@ use crate::numerics::Format;
 use crate::tensor::{matmul_nt, GemmPrecision, GemmStats, Matrix};
 use crate::workloads::{AttentionCase, MultiHeadCase};
 
+/// Identifier of one page in a paged KV arena (mirrors the coordinator's
+/// `kv_cache::PageId` — both are plain `u32` indices into the same pool).
+pub type PageId = u32;
+
+/// Anything that can hand out fixed-size KV pages by id. The coordinator's
+/// `KvPool` implements this; the attention lab depends only on the trait so
+/// the kernel layer stays below the serving layer.
+///
+/// A page holds `page_tokens()` consecutive token rows of `row_width()`
+/// f32 each, row-major.
+pub trait KvPageSource: Sync {
+    /// Token rows per page.
+    fn page_tokens(&self) -> usize;
+    /// Floats per token row.
+    fn row_width(&self) -> usize;
+    /// The raw page data: `page_tokens() * row_width()` floats.
+    fn page_data(&self, id: PageId) -> &[f32];
+}
+
+/// A borrowed view of one KV operand (the K *or* V of one KV head): either
+/// a dense matrix or a page-table walk over a paged pool. This is the
+/// tentpole abstraction of the paged-KV attention path: the inner kernels
+/// iterate KV *blocks* through [`KvView::block`], so a paged decode step
+/// gathers `O(len_tokens)` rows page-by-page and never assembles a dense
+/// `(max_seq, W)` buffer.
+///
+/// `len_tokens` doubles as the implicit `Prefix` mask: rows past it —
+/// including the stale tail of the last page — are simply not part of the
+/// view, so they can never enter a softmax or PASA's pseudo-average.
+#[derive(Clone, Copy)]
+pub enum KvView<'a> {
+    /// A dense `(s2 × d)` matrix (the classic in-memory operand).
+    Dense(&'a Matrix),
+    /// A paged operand: `len_tokens` valid rows scattered across `pages`
+    /// of `pool`, optionally restricted to the column window
+    /// `[col0, col0 + cols)` of each `row_width()`-wide row (per-head
+    /// slicing of a packed multi-head cache row).
+    Paged {
+        pages: &'a [PageId],
+        pool: &'a dyn KvPageSource,
+        len_tokens: usize,
+        /// First column of the per-row window.
+        col0: usize,
+        /// Width of the per-row window.
+        cols: usize,
+    },
+}
+
+impl<'a> KvView<'a> {
+    /// Full-width paged view over `len_tokens` rows.
+    pub fn paged(pages: &'a [PageId], pool: &'a dyn KvPageSource, len_tokens: usize) -> KvView<'a> {
+        let cols = pool.row_width();
+        KvView::Paged {
+            pages,
+            pool,
+            len_tokens,
+            col0: 0,
+            cols,
+        }
+    }
+
+    /// Restrict a paged view to the column window `[c0, c0 + n)` — the
+    /// per-head slice of a packed `(len, n_kv_heads·d)` cache row. Dense
+    /// views are returned unchanged (slice them before wrapping).
+    pub fn col_window(self, c0: usize, n: usize) -> KvView<'a> {
+        match self {
+            KvView::Dense(m) => {
+                assert!(c0 == 0 && n == m.cols, "col_window on a dense view");
+                KvView::Dense(m)
+            }
+            KvView::Paged {
+                pages,
+                pool,
+                len_tokens,
+                col0,
+                cols,
+            } => {
+                assert!(c0 + n <= cols, "column window out of range");
+                KvView::Paged {
+                    pages,
+                    pool,
+                    len_tokens,
+                    col0: col0 + c0,
+                    cols: n,
+                }
+            }
+        }
+    }
+
+    /// Number of valid token rows.
+    pub fn rows(&self) -> usize {
+        match *self {
+            KvView::Dense(m) => m.rows,
+            KvView::Paged { len_tokens, .. } => len_tokens,
+        }
+    }
+
+    /// Width of each row.
+    pub fn cols(&self) -> usize {
+        match *self {
+            KvView::Dense(m) => m.cols,
+            KvView::Paged { cols, .. } => cols,
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvView::Paged { .. })
+    }
+
+    /// Truncate a *paged* view to its first `n` rows without copying (the
+    /// page table is simply read less far). Returns `None` for dense
+    /// views — those are truncated by slicing the matrix (one copy), which
+    /// is what the pre-view kernels did.
+    pub fn truncated(&self, n: usize) -> Option<KvView<'a>> {
+        match *self {
+            KvView::Dense(_) => None,
+            KvView::Paged {
+                pages,
+                pool,
+                len_tokens,
+                col0,
+                cols,
+            } => Some(KvView::Paged {
+                pages,
+                pool,
+                len_tokens: len_tokens.min(n),
+                col0,
+                cols,
+            }),
+        }
+    }
+
+    /// Materialize rows `[r0, r1)` as a dense matrix — the block gather of
+    /// the kernels' KV sweep. Dense views copy the slice (exactly what the
+    /// pre-view kernels did with `rows_slice`); paged views walk the page
+    /// table and copy page-by-page, clamped to `len_tokens`.
+    pub fn block(&self, r0: usize, r1: usize) -> Matrix {
+        match *self {
+            KvView::Dense(m) => m.rows_slice(r0, r1),
+            KvView::Paged {
+                pages,
+                pool,
+                len_tokens,
+                col0,
+                cols,
+            } => {
+                assert!(r0 <= r1 && r1 <= len_tokens, "paged block out of range");
+                let pt = pool.page_tokens();
+                let w = pool.row_width();
+                let mut out = Matrix::zeros(r1 - r0, cols);
+                let mut r = r0;
+                while r < r1 {
+                    let pg = r / pt;
+                    let off = r % pt;
+                    // Rows available in this page before the block (or the
+                    // page) ends.
+                    let take = (pt - off).min(r1 - r);
+                    let src = pool.page_data(pages[pg]);
+                    for t in 0..take {
+                        let srow = &src[(off + t) * w + col0..(off + t) * w + col0 + cols];
+                        out.row_mut(r - r0 + t).copy_from_slice(srow);
+                    }
+                    r += take;
+                }
+                out
+            }
+        }
+    }
+
+    /// Materialize the whole view as a dense `(rows × cols)` matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        self.block(0, self.rows())
+    }
+}
+
+/// One KV head's operand pair for the view-based kernel entry.
+#[derive(Clone, Copy)]
+pub struct KvPair<'a> {
+    pub k: KvView<'a>,
+    pub v: KvView<'a>,
+}
+
 /// Attention masking modes of the request.
 ///
 /// All variants resolve per head to a *prefix* visibility rule (each query
@@ -43,14 +225,27 @@ impl AttnMask {
         }
     }
 
-    /// Resolve the mask for one query head.
+    /// Resolve the mask for one query head. A one-entry `Padded` mask
+    /// broadcasts to every head; otherwise the head indexes its own entry
+    /// — a mismatched mask (e.g. 3 lengths for 8 heads) is a hard error,
+    /// never a silent reuse of the last length.
     pub fn for_head(&self, h: usize) -> HeadMask {
         match self {
             AttnMask::None => HeadMask::None,
             AttnMask::Causal => HeadMask::Causal,
             AttnMask::Padded(lens) => {
                 assert!(!lens.is_empty(), "Padded mask needs at least one length");
-                HeadMask::Prefix(lens[h.min(lens.len() - 1)])
+                if lens.len() == 1 {
+                    HeadMask::Prefix(lens[0])
+                } else {
+                    assert!(
+                        h < lens.len(),
+                        "Padded mask has {} lengths but head {h} was requested \
+                         (need 1 length or one per query head)",
+                        lens.len()
+                    );
+                    HeadMask::Prefix(lens[h])
+                }
             }
         }
     }
@@ -332,42 +527,77 @@ impl AttentionRequest {
         matmul_nt(&self.q[h], &self.k[self.kv_head_for(h)], GemmPrecision::F32)
     }
 
-    /// Structural validation; kernels call this before fan-out.
+    /// Structural validation; kernels call this before fan-out. Checks
+    /// the owned K/V head lists line up, then applies the shared shape
+    /// rules via [`Self::validate_kv`] over dense views — one rule set
+    /// for both the owned and the view-based entry points.
     pub fn validate(&self) -> Result<(), String> {
-        if self.q.is_empty() {
-            return Err("request has no query heads".into());
-        }
-        if self.k.is_empty() || self.k.len() != self.v.len() {
+        if self.k.len() != self.v.len() {
             return Err(format!(
                 "request needs matching K/V heads, got {} K and {} V",
                 self.k.len(),
                 self.v.len()
             ));
         }
-        if self.q.len() % self.k.len() != 0 {
+        self.validate_kv(&self.kv_pairs())
+    }
+
+    /// Dense views over this request's own K/V heads — what the default
+    /// [`super::kernel::AttentionKernel::forward`] feeds the view-based
+    /// kernel cores.
+    pub fn kv_pairs(&self) -> Vec<KvPair<'_>> {
+        self.k
+            .iter()
+            .zip(&self.v)
+            .map(|(k, v)| KvPair {
+                k: KvView::Dense(k),
+                v: KvView::Dense(v),
+            })
+            .collect()
+    }
+
+    /// Structural validation of a request whose K/V come from external
+    /// views (`kv` replaces `self.k`/`self.v`, which may be empty). The
+    /// same rules as [`Self::validate`], expressed over view shapes.
+    pub fn validate_kv(&self, kv: &[KvPair<'_>]) -> Result<(), String> {
+        if self.q.is_empty() {
+            return Err("request has no query heads".into());
+        }
+        if kv.is_empty() {
+            return Err("request has no KV views".into());
+        }
+        if self.q.len() % kv.len() != 0 {
             return Err(format!(
-                "{} query heads not divisible by {} KV heads",
+                "{} query heads not divisible by {} KV views",
                 self.q.len(),
-                self.k.len()
+                kv.len()
             ));
         }
         let (s1, d) = self.q[0].shape();
-        let s2 = self.k[0].rows;
-        let dv = self.v[0].cols;
+        let s2 = kv[0].k.rows();
+        let dv = kv[0].v.cols();
         if s2 == 0 {
-            return Err("empty KV sequence".into());
+            return Err("empty KV view".into());
         }
         for (i, m) in self.q.iter().enumerate() {
             if m.shape() != (s1, d) {
                 return Err(format!("query head {i} shape {:?} != ({s1}, {d})", m.shape()));
             }
         }
-        for (i, (k, v)) in self.k.iter().zip(&self.v).enumerate() {
-            if k.shape() != (s2, d) {
-                return Err(format!("key head {i} shape {:?} != ({s2}, {d})", k.shape()));
+        for (i, pair) in kv.iter().enumerate() {
+            if pair.k.rows() != s2 || pair.k.cols() != d {
+                return Err(format!(
+                    "KV view {i}: K is ({}, {}), expected ({s2}, {d})",
+                    pair.k.rows(),
+                    pair.k.cols()
+                ));
             }
-            if v.shape() != (s2, dv) {
-                return Err(format!("value head {i} shape {:?} != ({s2}, {dv})", v.shape()));
+            if pair.v.rows() != s2 || pair.v.cols() != dv {
+                return Err(format!(
+                    "KV view {i}: V is ({}, {}), expected ({s2}, {dv})",
+                    pair.v.rows(),
+                    pair.v.cols()
+                ));
             }
         }
         if let AttnMask::Padded(lens) = &self.mask {
@@ -388,10 +618,22 @@ impl AttentionRequest {
         Ok(())
     }
 
+    /// KV view serving query head `h` under the same contiguous GQA
+    /// grouping as [`Self::kv_head_for`], against an external view list.
+    pub fn kv_pair_for<'a>(&self, kv: &[KvPair<'a>], h: usize) -> KvPair<'a> {
+        kv[crate::workloads::gqa_kv_head(h, self.q.len(), kv.len())]
+    }
+
     /// Dispatch through the [`KernelRegistry`] on this request's
     /// allocation — the one-line entry point.
     pub fn run(&self) -> AttentionOutput {
         KernelRegistry::get(self.cfg.alloc).forward(self)
+    }
+
+    /// Dispatch with external K/V views (dense or paged) replacing the
+    /// request's own K/V — the serving engine's paged-decode entry point.
+    pub fn run_with_kv(&self, kv: &[KvPair<'_>]) -> AttentionOutput {
+        KernelRegistry::get(self.cfg.alloc).forward_kv(self, kv)
     }
 }
 
@@ -427,6 +669,112 @@ mod tests {
         assert_eq!(broadcast.for_head(5), HeadMask::Prefix(7));
         let per_head = AttnMask::Padded(vec![3, 9]);
         assert_eq!(per_head.for_head(1), HeadMask::Prefix(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "Padded mask has 3 lengths but head 5")]
+    fn mismatched_padded_mask_panics_instead_of_clamping() {
+        // Regression (PR 2): a 3-entry mask on 8 heads used to silently
+        // reuse the last length for heads 3..8.
+        let m = AttnMask::Padded(vec![3, 9, 4]);
+        let _ = m.for_head(5);
+    }
+
+    /// In-memory page source for view tests (3 tokens/page, width 4).
+    struct MockPool {
+        pages: Vec<Vec<f32>>,
+    }
+
+    impl KvPageSource for MockPool {
+        fn page_tokens(&self) -> usize {
+            3
+        }
+        fn row_width(&self) -> usize {
+            4
+        }
+        fn page_data(&self, id: PageId) -> &[f32] {
+            &self.pages[id as usize]
+        }
+    }
+
+    /// Scatter a dense (rows × 4) matrix into pages of 3 rows; the last
+    /// page's unused tail is poisoned to prove views never read past
+    /// `len_tokens`.
+    fn paged_fixture(m: &Matrix) -> (MockPool, Vec<PageId>) {
+        assert_eq!(m.cols, 4);
+        let n_pages = m.rows.div_ceil(3);
+        let mut pages = vec![vec![f32::NAN; 3 * 4]; n_pages];
+        for r in 0..m.rows {
+            pages[r / 3][(r % 3) * 4..(r % 3 + 1) * 4].copy_from_slice(m.row(r));
+        }
+        let ids = (0..n_pages as PageId).collect();
+        (MockPool { pages }, ids)
+    }
+
+    #[test]
+    fn paged_view_matches_dense_blocks() {
+        let m = Matrix::from_vec(7, 4, (0..28).map(|i| i as f32).collect());
+        let (pool, ids) = paged_fixture(&m);
+        let view = KvView::paged(&ids, &pool, 7);
+        assert_eq!(view.rows(), 7);
+        assert_eq!(view.cols(), 4);
+        assert!(view.is_paged());
+        assert_eq!(view.to_matrix().data, m.data);
+        // Blocks straddling page boundaries (pages hold 3 rows).
+        for (r0, r1) in [(0, 3), (2, 6), (1, 7), (6, 7), (4, 4)] {
+            assert_eq!(view.block(r0, r1).data, m.rows_slice(r0, r1).data, "[{r0},{r1})");
+        }
+        // Dense views are the identity wrapper.
+        let dv = KvView::Dense(&m);
+        assert_eq!(dv.block(2, 6).data, m.rows_slice(2, 6).data);
+        assert!(dv.truncated(3).is_none());
+    }
+
+    #[test]
+    fn paged_view_len_tokens_hides_the_page_tail() {
+        // 5 valid rows in 2 pages (page 2 rows 5.. are NaN-poisoned).
+        let m = Matrix::from_vec(5, 4, (0..20).map(|i| i as f32).collect());
+        let (pool, ids) = paged_fixture(&m);
+        let view = KvView::paged(&ids, &pool, 5);
+        assert_eq!(view.rows(), 5);
+        let out = view.to_matrix();
+        assert!(out.data.iter().all(|x| x.is_finite()), "read past len_tokens");
+        // Truncation shortens the walk for free.
+        let t = view.truncated(2).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.to_matrix().data, m.rows_slice(0, 2).data);
+    }
+
+    #[test]
+    fn paged_col_window_selects_one_head() {
+        let m = Matrix::from_vec(6, 4, (0..24).map(|i| i as f32).collect());
+        let (pool, ids) = paged_fixture(&m);
+        let view = KvView::paged(&ids, &pool, 6).col_window(2, 2);
+        assert_eq!(view.cols(), 2);
+        let out = view.to_matrix();
+        for r in 0..6 {
+            assert_eq!(out.row(r), &m.row(r)[2..4], "row {r}");
+        }
+    }
+
+    #[test]
+    fn run_with_kv_dense_views_bit_match_owned_run() {
+        // The two dispatch paths share the same cores: running a request
+        // through run() and through run_with_kv(dense views) must agree
+        // bit for bit, for every allocation.
+        let c = case(24, 24, 8, 9);
+        for alloc in Allocation::all() {
+            let req = AttentionRequest::from_case(&c, alloc)
+                .with_blocks(16, 16)
+                .with_fp16_inputs();
+            let owned = req.run();
+            let viewed = req.run_with_kv(&req.kv_pairs());
+            assert_eq!(owned.heads[0].data, viewed.heads[0].data, "{}", alloc.name());
+            assert_eq!(
+                owned.stats[0].overflow_events,
+                viewed.stats[0].overflow_events
+            );
+        }
     }
 
     #[test]

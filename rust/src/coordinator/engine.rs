@@ -1,27 +1,43 @@
-//! Serving engine (S11): continuous-batching loop over the AOT model.
+//! Serving engine (S11): continuous-batching loop over one of two model
+//! backends.
 //!
 //! One `step()` = one scheduler iteration:
-//!   1. admit queued requests into free decode slots (prefill, B=1 module,
-//!      KV seeded into the paged pool),
-//!   2. run one decode step per allocation group (slots pinned to PASA by
-//!      the overflow guard run separately from fast-path slots),
-//!   3. guard inspection: non-finite logits ⇒ replay the step under PASA
-//!      (functional cache-in/cache-out makes replay exact), pin the slot,
+//!   1. admit queued requests into free decode slots (prefill, KV seeded
+//!      into the paged pool),
+//!   2. one decode step per active slot (grouped per allocation on the
+//!      PJRT backend; per-slot paged requests on the lab backend),
+//!   3. guard inspection ⇒ replay the step under PASA (functional
+//!      cache-in/cache-out makes replay exact), pin the slot,
 //!   4. sample, write the new KV row back into the paged cache, retire
 //!      finished requests.
 //!
-//! The decode HLO has a fixed batch bucket B; inactive slots are masked by
-//! feeding pos=0/token=PAD and ignoring their outputs (their cache slots
-//! are re-assembled from the paged pool each step, so scribbles from
-//! masked lanes never persist).
+//! ## Backends
+//!
+//! * [`Backend::Lab`] — the pure-Rust [`LabModel`]: every decode step
+//!   builds per-slot paged [`crate::attention::AttentionRequest`]s
+//!   (`s1 = 1` query row against a `KvView::Paged` of `len_tokens` rows),
+//!   so per-step cache work is `O(len_tokens)` gathers, and the guard
+//!   consumes `GuardSignal::from_attention` — pre-store max |S| and
+//!   overflow events straight from the score GEMM, the paper's
+//!   instrumentation point.
+//! * [`Backend::Pjrt`] — the AOT HLO runtime. Its decode module consumes a
+//!   dense `(L, B, max_seq, W)` cache, so this path still assembles the
+//!   batch with `fill_dense` and falls back to legacy logits NaN-sniffing
+//!   (the compiled modules are uninstrumented). It is the *fallback*
+//!   signal source; the lab path never uses it.
+//!
+//! KV-pool exhaustion mid-flight (copy-on-write growth) is backpressure:
+//! the slot finishes with [`FinishReason::Evicted`] and its pages return
+//! to the pool — never a panic, never a corrupted cache.
 
 use super::guard::{Guard, GuardPolicy, GuardSignal};
 use super::kv_cache::{KvPool, SeqCache};
 use super::metrics::Metrics;
 use super::request::{Completion, FinishReason, Phase, Request};
 use super::router::{Admission, Router};
-use crate::model::{sample, tokenizer, Specials};
-use crate::runtime::ModelRuntime;
+use crate::attention::Allocation;
+use crate::model::{sample, tokenizer, ModelDims, Specials};
+use crate::runtime::{LabModel, ModelRuntime};
 use crate::workloads::Pcg64;
 use anyhow::{Context, Result};
 use std::time::Instant;
@@ -48,6 +64,20 @@ impl Default for EngineConfig {
     }
 }
 
+/// The model execution backend behind the engine (see module docs).
+pub enum Backend<'rt> {
+    Pjrt(&'rt ModelRuntime),
+    Lab(Box<LabModel>),
+}
+
+/// True when an error is KV-pool exhaustion — the one failure the engine
+/// treats as backpressure (evict the slot) rather than a bug to surface.
+/// Delegates to the pool's own classifier so the marker lives next to the
+/// message that carries it.
+fn is_kv_backpressure(e: &anyhow::Error) -> bool {
+    KvPool::is_exhausted_error(e)
+}
+
 struct ActiveRequest {
     req: Request,
     guard: Guard,
@@ -56,13 +86,16 @@ struct ActiveRequest {
     tokens: Vec<u32>,
     prompt_len: usize,
     phase: Phase,
+    /// When the request left the queue (prefill started).
+    admitted: Instant,
     prefill_done: Option<Instant>,
     first_token: Option<Instant>,
 }
 
 /// The continuous-batching serving engine.
 pub struct Engine<'rt> {
-    rt: &'rt ModelRuntime,
+    backend: Backend<'rt>,
+    dims: ModelDims,
     pub cfg: EngineConfig,
     pub router: Router,
     pool: KvPool,
@@ -71,25 +104,43 @@ pub struct Engine<'rt> {
     completions: Vec<Completion>,
     rng: Pcg64,
     sp: Specials,
-    // Reusable batch assembly buffers (hot-loop allocation hoisting).
+    // Reusable batch assembly buffers (PJRT path only — the lab path
+    // never assembles a dense cache).
     kbatch: Vec<f32>,
     vbatch: Vec<f32>,
 }
 
 impl<'rt> Engine<'rt> {
+    /// Engine over the PJRT runtime (AOT artifacts).
     pub fn new(rt: &'rt ModelRuntime, cfg: EngineConfig) -> Engine<'rt> {
-        let d = rt.dims;
-        let b = d.decode_batch;
-        let cache_len = d.n_layers * b * d.max_seq * d.head_width();
+        Self::with_backend(Backend::Pjrt(rt), rt.dims, cfg)
+    }
+
+    /// Engine over the pure-Rust lab runtime — paged decode through the
+    /// kernel registry, no artifacts required.
+    pub fn from_lab(model: LabModel, cfg: EngineConfig) -> Engine<'static> {
+        let dims = model.dims;
+        Engine::with_backend(Backend::Lab(Box::new(model)), dims, cfg)
+    }
+
+    fn with_backend(backend: Backend<'rt>, dims: ModelDims, cfg: EngineConfig) -> Engine<'rt> {
+        let b = dims.decode_batch;
+        let cache_len = match backend {
+            // The PJRT decode module wants the dense (L, B, max_seq, W)
+            // cache tensors; the lab backend reads pages directly.
+            Backend::Pjrt(_) => dims.n_layers * b * dims.max_seq * dims.head_width(),
+            Backend::Lab(_) => 0,
+        };
         let sp = Specials {
-            pad: d.pad,
-            bos: d.bos,
-            eos: d.eos,
+            pad: dims.pad,
+            bos: dims.bos,
+            eos: dims.eos,
         };
         Engine {
-            rt,
-            router: Router::new(cfg.max_queue, d.prefill_seq * 4),
-            pool: KvPool::new(cfg.kv_pages, cfg.page_tokens, d.head_width()),
+            backend,
+            dims,
+            router: Router::new(cfg.max_queue, dims.prefill_seq * 4),
+            pool: KvPool::new(cfg.kv_pages, cfg.page_tokens, dims.head_width()),
             slots: (0..b).map(|_| None).collect(),
             metrics: Metrics::new(),
             completions: Vec::new(),
@@ -127,6 +178,21 @@ impl<'rt> Engine<'rt> {
         self.pool.utilization()
     }
 
+    /// The paged KV pool (read-only; tests inspect cache contents).
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// The paged cache of an active slot, if occupied.
+    pub fn slot_cache(&self, slot: usize) -> Option<&SeqCache> {
+        self.slots.get(slot)?.as_ref().map(|s| &s.cache)
+    }
+
+    /// The allocation an active slot's guard would run next.
+    pub fn slot_allocation(&self, slot: usize) -> Option<&'static str> {
+        self.slots.get(slot)?.as_ref().map(|s| s.guard.allocation())
+    }
+
     /// One scheduler iteration. Returns the number of active slots after
     /// the step (0 = fully idle).
     pub fn step(&mut self) -> Result<usize> {
@@ -148,7 +214,7 @@ impl<'rt> Engine<'rt> {
     // ---- admission / prefill ------------------------------------------
 
     fn admit_loop(&mut self) -> Result<()> {
-        let d = self.rt.dims;
+        let d = self.dims;
         loop {
             let free_slot = match self.slots.iter().position(|s| s.is_none()) {
                 Some(i) => i,
@@ -163,52 +229,143 @@ impl<'rt> Engine<'rt> {
                 Some(r) => r,
                 None => return Ok(()),
             };
-            let active = self.prefill_request(req)?;
-            self.slots[free_slot] = Some(active);
+            let is_lab = matches!(self.backend, Backend::Lab(_));
+            // Copy-only bookkeeping for the (shouldn't-happen) rejection
+            // path — no per-admission prompt clone.
+            let (rid, arrival) = (req.id, req.arrival);
+            let admitted = Instant::now();
+            let active = if is_lab {
+                self.prefill_lab(req)
+            } else {
+                self.prefill_pjrt(req)
+            };
+            match active {
+                Ok(a) => self.slots[free_slot] = Some(a),
+                // Shouldn't happen — admission pre-reserves max_seq worth
+                // of pages — but if pool accounting ever drifts, reject
+                // this one request instead of killing the engine (and
+                // every other in-flight request) on an expected capacity
+                // condition.
+                Err(e) if is_kv_backpressure(&e) => {
+                    self.reject_evicted(rid, arrival, admitted)
+                }
+                Err(e) => return Err(e),
+            }
         }
     }
 
-    fn prefill_request(&mut self, req: Request) -> Result<ActiveRequest> {
-        let d = self.rt.dims;
+    /// Complete a request that could not be admitted (pool exhaustion at
+    /// prefill): an Evicted completion with correct time attribution —
+    /// queueing up to `admitted`, the failed forward as prefill time — so
+    /// the caller sees the outcome instead of a dead engine. The prompt
+    /// echo is empty (the request was consumed by the failed prefill; this
+    /// path trades the echo for not cloning every admitted prompt).
+    fn reject_evicted(&mut self, id: u64, arrival: Instant, admitted: Instant) {
+        let now = Instant::now();
+        self.metrics.requests_completed += 1;
+        self.completions.push(Completion {
+            id,
+            prompt: String::new(),
+            text: String::new(),
+            tokens: Vec::new(),
+            reason: FinishReason::Evicted,
+            prompt_tokens: 0,
+            queue_time: (admitted - arrival).as_secs_f64(),
+            prefill_time: (now - admitted).as_secs_f64(),
+            first_token_latency: 0.0,
+            total_latency: (now - arrival).as_secs_f64(),
+            allocation: String::new(),
+            guard_switches: 0,
+        });
+    }
+
+    /// Wrap a finished prefill into the slot state (shared tail of both
+    /// backend prefill paths).
+    #[allow(clippy::too_many_arguments)]
+    fn activate(
+        req: Request,
+        guard: Guard,
+        cache: SeqCache,
+        tokens: Vec<u32>,
+        prompt_len: usize,
+        admitted: Instant,
+        prefill_done: Instant,
+    ) -> ActiveRequest {
+        let mut ar = ActiveRequest {
+            req,
+            guard,
+            cache,
+            tokens,
+            prompt_len,
+            phase: Phase::Decoding,
+            admitted,
+            prefill_done: Some(prefill_done),
+            first_token: Some(Instant::now()),
+        };
+        // Immediately-finished cases (max_new_tokens == 0 is nonsensical
+        // but must not wedge the slot).
+        if ar.req.params.max_new_tokens == 0 {
+            ar.phase = Phase::Finished(FinishReason::MaxTokens);
+        }
+        ar
+    }
+
+    fn prefill_pjrt(&mut self, req: Request) -> Result<ActiveRequest> {
+        let d = self.dims;
+        let Backend::Pjrt(rt) = &self.backend else {
+            unreachable!("prefill_pjrt on a lab engine")
+        };
+        let rt = *rt;
         let (mut ids, n) = tokenizer::encode(&req.prompt, d.prefill_seq, self.sp);
         ids.truncate(d.prefill_seq);
         let mut guard = Guard::new(self.cfg.policy);
 
-        let t0 = Instant::now();
-        let mut out = self
-            .rt
+        let admitted = Instant::now();
+        let mut out = rt
             .prefill(guard.allocation(), &ids, n)
             .context("prefill")?;
         // Guard: inspect the last-prompt-token logits row for overflow.
         // (The PJRT modules are uninstrumented, so this is the legacy
-        // logits signal; the attention lab feeds kernel telemetry via
-        // GuardSignal::from_attention instead.)
+        // logits signal — the fallback; the lab backend feeds kernel
+        // telemetry via GuardSignal::from_attention instead.)
         let v = d.vocab_size;
         let last_row = &out.logits[(n - 1) * v..n * v];
         let sig = GuardSignal::from_logits(last_row);
         if guard.observe_signal(&sig) {
             self.metrics.overflow_steps += 1;
             self.metrics.guard_switches += 1;
-            out = self
-                .rt
+            out = rt
                 .prefill(guard.allocation(), &ids, n)
                 .context("prefill replay under PASA")?;
         }
         let prefill_done = Instant::now();
         self.metrics.prefill_tokens += n as u64;
 
-        // Seed the paged cache from the dense prefill output.
+        // Seed the paged cache from the dense prefill output. On any
+        // failure the partially-grown cache must hand its pages back —
+        // leaking them would shrink the pool for every later request.
         let mut cache = SeqCache::new(d.n_layers);
-        cache.ensure_capacity(&mut self.pool, n)?;
         let w = d.head_width();
         let per_layer = d.max_seq * w;
-        for l in 0..d.n_layers {
-            for p in 0..n {
-                let off = l * per_layer + p * w;
-                let krow = out.cache.k[off..off + w].to_vec();
-                let vrow = out.cache.v[off..off + w].to_vec();
-                cache.write_row(&mut self.pool, l, p, &krow, &vrow);
+        let seeded = (|| -> Result<()> {
+            cache.ensure_capacity(&mut self.pool, n)?;
+            for l in 0..d.n_layers {
+                for p in 0..n {
+                    let off = l * per_layer + p * w;
+                    cache.write_row(
+                        &mut self.pool,
+                        l,
+                        p,
+                        &out.cache.k[off..off + w],
+                        &out.cache.v[off..off + w],
+                    )?;
+                }
             }
+            Ok(())
+        })();
+        if let Err(e) = seeded {
+            cache.release(&mut self.pool);
+            return Err(e.context("prefill cache seeding"));
         }
 
         // First generated token comes from the prompt's last logits row.
@@ -216,24 +373,79 @@ impl<'rt> Engine<'rt> {
         let tok = sample(last_row, req.params.sampling, &mut self.rng);
         let mut tokens: Vec<u32> = ids[..n].to_vec();
         tokens.push(tok);
-
-        let mut ar = ActiveRequest {
+        Ok(Self::activate(
             req,
             guard,
             cache,
             tokens,
-            prompt_len: n,
-            phase: Phase::Decoding,
-            prefill_done: Some(prefill_done),
-            first_token: Some(Instant::now()),
+            n,
+            admitted,
+            prefill_done,
+        ))
+    }
+
+    fn prefill_lab(&mut self, req: Request) -> Result<ActiveRequest> {
+        let d = self.dims;
+        let (ids, n) = tokenizer::encode(&req.prompt, d.prefill_seq, self.sp);
+        let mut guard = Guard::new(self.cfg.policy);
+
+        let admitted = Instant::now();
+        let Backend::Lab(model) = &self.backend else {
+            unreachable!("prefill_lab on a PJRT engine")
         };
-        let _ = t0;
-        // Immediately-finished cases (max_new_tokens == 0 is nonsensical
-        // but must not wedge the slot).
-        if ar.req.params.max_new_tokens == 0 {
-            ar.phase = Phase::Finished(FinishReason::MaxTokens);
+        let alloc =
+            Allocation::parse(guard.allocation()).expect("guard allocation maps to the lab");
+        let mut out = model.prefill(alloc, &ids, n).context("lab prefill")?;
+        // Guard on the kernels' pre-store telemetry (max |S| / overflow
+        // events at the score GEMM) — trouble is visible before any NaN
+        // reaches the logits.
+        if guard.observe_signal(&out.signal) {
+            self.metrics.overflow_steps += 1;
+            self.metrics.guard_switches += 1;
+            out = model
+                .prefill(Allocation::Pasa16, &ids, n)
+                .context("lab prefill replay under PASA")?;
         }
-        Ok(ar)
+        let prefill_done = Instant::now();
+        self.metrics.prefill_tokens += n as u64;
+
+        // Seed the paged cache; release the partial grow on failure (see
+        // prefill_pjrt).
+        let mut cache = SeqCache::new(d.n_layers);
+        let seeded = (|| -> Result<()> {
+            cache.ensure_capacity(&mut self.pool, n)?;
+            for l in 0..d.n_layers {
+                for p in 0..n {
+                    cache.write_row(
+                        &mut self.pool,
+                        l,
+                        p,
+                        out.k_rows[l].row(p),
+                        out.v_rows[l].row(p),
+                    )?;
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = seeded {
+            cache.release(&mut self.pool);
+            return Err(e.context("prefill cache seeding"));
+        }
+
+        let v = d.vocab_size;
+        let last_row = &out.logits[(n - 1) * v..n * v];
+        let tok = sample(last_row, req.params.sampling, &mut self.rng);
+        let mut tokens: Vec<u32> = ids[..n].to_vec();
+        tokens.push(tok);
+        Ok(Self::activate(
+            req,
+            guard,
+            cache,
+            tokens,
+            n,
+            admitted,
+            prefill_done,
+        ))
     }
 
     // ---- decode --------------------------------------------------------
@@ -251,8 +463,12 @@ impl<'rt> Engine<'rt> {
     }
 
     fn decode_round(&mut self) -> Result<()> {
-        for alloc in self.allocation_groups() {
-            self.decode_group(alloc)?;
+        if matches!(self.backend, Backend::Lab(_)) {
+            self.decode_round_lab()?;
+        } else {
+            for alloc in self.allocation_groups() {
+                self.decode_group_pjrt(alloc)?;
+            }
         }
         // Retire finished requests.
         let b = self.slots.len();
@@ -270,13 +486,127 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// One batched decode step for every active slot on `alloc`.
-    fn decode_group(&mut self, alloc: &'static str) -> Result<()> {
-        let d = self.rt.dims;
+    /// Advance one slot after a decode step: sample, extend, check stop
+    /// conditions. Free function over the slot so the backends' disjoint
+    /// borrows stay simple.
+    fn advance_slot(
+        s: &mut ActiveRequest,
+        logits_row: &[f32],
+        max_seq: usize,
+        eos: u32,
+        rng: &mut Pcg64,
+        metrics: &mut Metrics,
+    ) {
+        let tok = sample(logits_row, s.req.params.sampling, rng);
+        if s.first_token.is_none() {
+            s.first_token = Some(Instant::now());
+        }
+        s.tokens.push(tok);
+        metrics.tokens_generated += 1;
+
+        let generated = s.tokens.len() - s.prompt_len;
+        if s.req.params.stop_at_eos && tok == eos {
+            s.phase = Phase::Finished(FinishReason::Eos);
+        } else if generated >= s.req.params.max_new_tokens {
+            s.phase = Phase::Finished(FinishReason::MaxTokens);
+        } else if s.tokens.len() >= max_seq {
+            s.phase = Phase::Finished(FinishReason::ContextFull);
+        }
+    }
+
+    /// Lab-backend decode: one paged attention pass per active slot, per
+    /// layer — `O(len_tokens)` page gathers, kernel telemetry into the
+    /// guard, per-slot PASA replay on a trip.
+    fn decode_round_lab(&mut self) -> Result<()> {
+        let d = self.dims;
+        let b = self.slots.len();
+        let members: Vec<usize> = (0..b)
+            .filter(|&i| {
+                matches!(
+                    self.slots[i].as_ref().map(|s| s.phase),
+                    Some(Phase::Decoding)
+                )
+            })
+            .collect();
+        if members.is_empty() {
+            return Ok(());
+        }
+        self.metrics.decode_batch_occupancy.push(members.len());
+        let Backend::Lab(model) = &self.backend else {
+            unreachable!("decode_round_lab on a PJRT engine")
+        };
+        for i in members {
+            let s = self.slots[i].as_mut().unwrap();
+            let alloc =
+                Allocation::parse(s.guard.allocation()).expect("guard allocation maps to the lab");
+            let tok = *s.tokens.last().unwrap();
+            let pos = s.tokens.len() - 1;
+
+            let t0 = Instant::now();
+            let (mut logits, sig) =
+                match model.decode_step(alloc, tok, pos, &mut s.cache, &mut self.pool) {
+                    Ok(r) => r,
+                    // KV pool exhausted mid-flight: backpressure, not a
+                    // crash — evict the slot, its pages free up at
+                    // retirement. Anything else is a real failure.
+                    Err(e) if is_kv_backpressure(&e) => {
+                        s.phase = Phase::Finished(FinishReason::Evicted);
+                        continue;
+                    }
+                    Err(e) => return Err(e.context("lab decode step")),
+                };
+            self.metrics.decode_steps += 1;
+            self.metrics.step_latency.record(t0.elapsed().as_secs_f64());
+            if sig.overflow_events > 0 || sig.nonfinite > 0 {
+                self.metrics.overflow_steps += 1;
+            }
+
+            if s.guard.observe_signal(&sig) {
+                self.metrics.guard_switches += 1;
+                // Replay this slot's step under PASA. The step is
+                // functional in (token, pos, cache prefix), so the replay
+                // rewrites the same KV rows — the cache ends up exactly as
+                // if PASA had run the step first.
+                let t1 = Instant::now();
+                match model.decode_step(Allocation::Pasa16, tok, pos, &mut s.cache, &mut self.pool)
+                {
+                    Ok((l2, _)) => logits = l2,
+                    Err(e) if is_kv_backpressure(&e) => {
+                        s.phase = Phase::Finished(FinishReason::Evicted);
+                        continue;
+                    }
+                    Err(e) => return Err(e.context("lab decode replay under PASA")),
+                }
+                self.metrics.decode_steps += 1;
+                // Replayed steps are real serving latency: record them.
+                self.metrics.step_latency.record(t1.elapsed().as_secs_f64());
+            }
+
+            Self::advance_slot(
+                s,
+                &logits,
+                d.max_seq,
+                self.sp.eos,
+                &mut self.rng,
+                &mut self.metrics,
+            );
+        }
+        Ok(())
+    }
+
+    /// PJRT-backend decode: one batched dense step for every active slot
+    /// on `alloc` (the compiled decode module consumes dense caches, so
+    /// this path pays the `fill_dense` assembly and sniffs logits).
+    fn decode_group_pjrt(&mut self, alloc: &'static str) -> Result<()> {
+        let d = self.dims;
         let b = d.decode_batch;
         let w = d.head_width();
         let v = d.vocab_size;
         let seq_floats = d.max_seq * w;
+        let Backend::Pjrt(rt) = &self.backend else {
+            unreachable!("decode_group_pjrt on a lab engine")
+        };
+        let rt = *rt;
 
         let members: Vec<usize> = (0..b)
             .filter(|&i| {
@@ -289,9 +619,7 @@ impl<'rt> Engine<'rt> {
         if members.is_empty() {
             return Ok(());
         }
-        self.metrics
-            .decode_batch_occupancy
-            .push(members.len());
+        self.metrics.decode_batch_occupancy.push(members.len());
 
         // Assemble the dense batch caches from the paged pool.
         self.kbatch.fill(0.0);
@@ -305,22 +633,27 @@ impl<'rt> Engine<'rt> {
             pos[i] = p as i32;
             for l in 0..d.n_layers {
                 let off = (l * b + i) * seq_floats;
-                s.cache
-                    .fill_dense(&self.pool, l, false, &mut self.kbatch[off..off + seq_floats]);
-                s.cache
-                    .fill_dense(&self.pool, l, true, &mut self.vbatch[off..off + seq_floats]);
+                s.cache.fill_dense(
+                    &self.pool,
+                    l,
+                    false,
+                    &mut self.kbatch[off..off + seq_floats],
+                )?;
+                s.cache.fill_dense(
+                    &self.pool,
+                    l,
+                    true,
+                    &mut self.vbatch[off..off + seq_floats],
+                )?;
             }
         }
 
         let t0 = Instant::now();
-        let (mut logits, mut kout, mut vout) = self
-            .rt
+        let (mut logits, mut kout, mut vout) = rt
             .decode(alloc, &tokens, &pos, &self.kbatch, &self.vbatch)
             .context("decode")?;
         self.metrics.decode_steps += 1;
-        self.metrics
-            .step_latency
-            .record(t0.elapsed().as_secs_f64());
+        self.metrics.step_latency.record(t0.elapsed().as_secs_f64());
 
         // Guard pass: any member overflowing gets the whole group's step
         // replayed under PASA (cache inputs unchanged — replay is exact).
@@ -337,14 +670,16 @@ impl<'rt> Engine<'rt> {
             }
         }
         if replay {
-            let (l2, k2, v2) = self
-                .rt
+            let t1 = Instant::now();
+            let (l2, k2, v2) = rt
                 .decode("pasa", &tokens, &pos, &self.kbatch, &self.vbatch)
                 .context("decode replay under PASA")?;
             logits = l2;
             kout = k2;
             vout = v2;
             self.metrics.decode_steps += 1;
+            // Replayed steps are real serving latency: record them too.
+            self.metrics.step_latency.record(t1.elapsed().as_secs_f64());
         }
 
         // Write back the new KV row, sample, advance. The decode module
@@ -352,29 +687,45 @@ impl<'rt> Engine<'rt> {
         for &i in &members {
             let s = self.slots[i].as_mut().unwrap();
             let p = pos[i] as usize;
-            s.cache.ensure_capacity(&mut self.pool, p + 1)?;
-            for l in 0..d.n_layers {
-                let off = (l * b + i) * w;
-                let krow = kout[off..off + w].to_vec();
-                let vrow = vout[off..off + w].to_vec();
-                s.cache.write_row(&mut self.pool, l, p, &krow, &vrow);
+            let mut wrote = true;
+            if let Err(e) = s.cache.ensure_capacity(&mut self.pool, p + 1) {
+                if !is_kv_backpressure(&e) {
+                    return Err(e.context("decode cache growth"));
+                }
+                wrote = false;
+            }
+            if wrote {
+                for l in 0..d.n_layers {
+                    let off = (l * b + i) * w;
+                    if let Err(e) = s.cache.write_row(
+                        &mut self.pool,
+                        l,
+                        p,
+                        &kout[off..off + w],
+                        &vout[off..off + w],
+                    ) {
+                        if !is_kv_backpressure(&e) {
+                            return Err(e.context("decode KV write-back"));
+                        }
+                        wrote = false;
+                        break;
+                    }
+                }
+            }
+            if !wrote {
+                // Pool exhausted mid-flight: backpressure — evict.
+                s.phase = Phase::Finished(FinishReason::Evicted);
+                continue;
             }
             let row = &logits[i * v..(i + 1) * v];
-            let tok = sample(row, s.req.params.sampling, &mut self.rng);
-            if s.first_token.is_none() {
-                s.first_token = Some(Instant::now());
-            }
-            s.tokens.push(tok);
-            self.metrics.tokens_generated += 1;
-
-            let generated = s.tokens.len() - s.prompt_len;
-            if s.req.params.stop_at_eos && tok == self.sp.eos {
-                s.phase = Phase::Finished(FinishReason::Eos);
-            } else if generated >= s.req.params.max_new_tokens {
-                s.phase = Phase::Finished(FinishReason::MaxTokens);
-            } else if s.tokens.len() >= d.max_seq {
-                s.phase = Phase::Finished(FinishReason::ContextFull);
-            }
+            Self::advance_slot(
+                s,
+                row,
+                d.max_seq,
+                self.sp.eos,
+                &mut self.rng,
+                &mut self.metrics,
+            );
         }
         Ok(())
     }
@@ -385,9 +736,13 @@ impl<'rt> Engine<'rt> {
             Phase::Finished(r) => r,
             _ => FinishReason::MaxTokens,
         };
-        let queue_time = ar
+        // True queue wait: arrival → admission (prefill start). Prefill
+        // execution is reported separately — the two used to be conflated
+        // (both were arrival → prefill_done).
+        let queue_time = (ar.admitted - ar.req.arrival).as_secs_f64();
+        let prefill_time = ar
             .prefill_done
-            .map(|t| (t - ar.req.arrival).as_secs_f64())
+            .map(|t| (t - ar.admitted).as_secs_f64())
             .unwrap_or(0.0);
         let ttft = ar
             .first_token
@@ -406,7 +761,7 @@ impl<'rt> Engine<'rt> {
             reason,
             prompt_tokens: ar.prompt_len,
             queue_time,
-            prefill_time: queue_time,
+            prefill_time,
             first_token_latency: ttft,
             total_latency: total,
             allocation: ar.guard.allocation().to_string(),

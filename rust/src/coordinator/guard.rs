@@ -54,6 +54,16 @@ impl GuardSignal {
     pub fn is_clean(&self, score_limit: f32) -> bool {
         self.nonfinite == 0 && self.overflow_events == 0 && self.max_abs_score <= score_limit
     }
+
+    /// Fold another signal in (e.g. one per transformer layer of a decode
+    /// step): event counts add, the score maximum is the max.
+    pub fn merge(&mut self, o: &GuardSignal) {
+        self.overflow_events += o.overflow_events;
+        self.nonfinite += o.nonfinite;
+        if o.max_abs_score > self.max_abs_score {
+            self.max_abs_score = o.max_abs_score;
+        }
+    }
 }
 
 /// Which attention allocation the engine should run next for a request.
@@ -245,6 +255,24 @@ mod tests {
         // Default limit would not have tripped.
         let mut g = Guard::new(GuardPolicy::Adaptive);
         assert!(!g.observe_signal(&pressure));
+    }
+
+    #[test]
+    fn merge_folds_per_layer_signals() {
+        let mut a = GuardSignal {
+            overflow_events: 1,
+            max_abs_score: 100.0,
+            nonfinite: 0,
+        };
+        a.merge(&GuardSignal {
+            overflow_events: 2,
+            max_abs_score: 7.0e4,
+            nonfinite: 3,
+        });
+        assert_eq!(a.overflow_events, 3);
+        assert_eq!(a.nonfinite, 3);
+        assert_eq!(a.max_abs_score, 7.0e4);
+        assert!(!a.is_clean(65504.0));
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //! shared prompt prefixes can be forked copy-on-write at page granularity.
 //! Dense tensors are assembled only at the batch boundary.
 
+use crate::attention::{KvPageSource, KvView};
 use anyhow::{bail, Result};
 
-/// Identifier of one page in the pool arena.
+/// Identifier of one page in the pool arena (same `u32` as the attention
+/// lab's `attention::PageId` — a paged `KvView` indexes this pool).
 pub type PageId = u32;
 
 /// Fixed-capacity page pool. Each page holds `page_tokens` rows of
@@ -53,6 +55,22 @@ impl KvPool {
         self.used_pages() as f64 / self.total_pages.max(1) as f64
     }
 
+    /// Marker carried by every pool-capacity error (`alloc`,
+    /// `ensure_capacity`, CoW growth). [`KvPool::is_exhausted_error`] keys
+    /// off it; keep the two in sync.
+    const EXHAUSTED: &'static str = "KV pool exhausted";
+
+    /// True when `e` is pool exhaustion — the one cache failure the
+    /// serving engine treats as backpressure (evict/requeue) rather than
+    /// a bug. Classified by the [`Self::EXHAUSTED`] marker, which the
+    /// vendored `anyhow`'s flattened Display preserves through context
+    /// wrapping (a regression test pins this through the CoW path; a
+    /// typed-error downcast would replace it if the real `anyhow` ever
+    /// lands).
+    pub fn is_exhausted_error(e: &anyhow::Error) -> bool {
+        e.to_string().contains(Self::EXHAUSTED)
+    }
+
     fn alloc(&mut self) -> Result<PageId> {
         match self.free.pop() {
             Some(id) => {
@@ -65,7 +83,7 @@ impl KvPool {
                 self.arena[off..off + pf].fill(0.0);
                 Ok(id)
             }
-            None => bail!("KV pool exhausted ({} pages)", self.total_pages),
+            None => bail!("{} ({} pages)", Self::EXHAUSTED, self.total_pages),
         }
     }
 
@@ -91,6 +109,23 @@ impl KvPool {
         let off = id as usize * self.page_floats();
         let pf = self.page_floats();
         &mut self.arena[off..off + pf]
+    }
+}
+
+/// The attention lab reads pages straight out of the pool: a
+/// `KvView::Paged` over this pool is the zero-copy bridge from the
+/// serving cache to the instrumented kernels.
+impl KvPageSource for KvPool {
+    fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    fn row_width(&self) -> usize {
+        self.row_width
+    }
+
+    fn page_data(&self, id: PageId) -> &[f32] {
+        self.page(id)
     }
 }
 
@@ -132,7 +167,8 @@ impl SeqCache {
         }
         if missing > pool.free_pages() {
             bail!(
-                "KV pool exhausted: need {missing} pages, {} free",
+                "{}: need {missing} pages, {} free",
+                KvPool::EXHAUSTED,
                 pool.free_pages()
             );
         }
@@ -158,17 +194,27 @@ impl SeqCache {
         out
     }
 
-    fn ensure_private(pool: &mut KvPool, id: &mut PageId) {
+    /// Make a shared (CoW) page private before a write. Pool exhaustion is
+    /// an *expected* runtime condition — a fork fleet can legitimately
+    /// outgrow the arena — so it surfaces as an `Err` the engine can turn
+    /// into backpressure, never a panic. On failure the page table is
+    /// untouched (the shared page stays valid).
+    fn ensure_private(pool: &mut KvPool, id: &mut PageId) -> Result<()> {
         if pool.refcount[*id as usize] > 1 {
             let copy: Vec<f32> = pool.page(*id).to_vec();
-            let fresh = pool.alloc().expect("CoW alloc");
+            let fresh = pool
+                .alloc()
+                .map_err(|e| e.context("copy-on-write of a shared KV page"))?;
             pool.page_mut(fresh).copy_from_slice(&copy);
             pool.release(*id);
             *id = fresh;
         }
+        Ok(())
     }
 
     /// Write one token's K and V rows for a layer at absolute position.
+    /// Fails (without corrupting the cache) when a copy-on-write
+    /// materialization cannot get a fresh page.
     pub fn write_row(
         &mut self,
         pool: &mut KvPool,
@@ -176,32 +222,49 @@ impl SeqCache {
         pos: usize,
         k_row: &[f32],
         v_row: &[f32],
-    ) {
+    ) -> Result<()> {
         let w = pool.row_width;
         assert_eq!(k_row.len(), w);
         assert_eq!(v_row.len(), w);
         let (pg, off) = (pos / pool.page_tokens, pos % pool.page_tokens);
         let (kp, vp) = &mut self.pages[layer];
         let kid = &mut kp[pg];
-        Self::ensure_private(pool, kid);
+        Self::ensure_private(pool, kid)?;
         let kid = *kid;
         pool.page_mut(kid)[off * w..(off + 1) * w].copy_from_slice(k_row);
         let vid = &mut vp[pg];
-        Self::ensure_private(pool, vid);
+        Self::ensure_private(pool, vid)?;
         let vid = *vid;
         pool.page_mut(vid)[off * w..(off + 1) * w].copy_from_slice(v_row);
         self.len_tokens = self.len_tokens.max(pos + 1);
+        Ok(())
     }
 
     /// Assemble this sequence's K (or V) for `layer` into a dense
-    /// (max_seq, W) slice; positions beyond len are zeroed.
-    pub fn fill_dense(&self, pool: &KvPool, layer: usize, want_v: bool, out: &mut [f32]) {
+    /// (max_seq, W) slice; positions beyond len are zeroed. Fails — before
+    /// touching any page — when the dense buffer cannot hold all
+    /// `len_tokens` valid rows: silently truncating KV would hand the
+    /// kernels a cache that looks complete but is missing its tail.
+    pub fn fill_dense(
+        &self,
+        pool: &KvPool,
+        layer: usize,
+        want_v: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
         let w = pool.row_width;
         let pt = pool.page_tokens;
+        if self.len_tokens * w > out.len() {
+            bail!(
+                "fill_dense: dense buffer holds {} rows but the paged cache has {} valid rows \
+                 (layer {layer}, row width {w})",
+                out.len() / w.max(1),
+                self.len_tokens
+            );
+        }
         out.fill(0.0);
         let (kp, vp) = &self.pages[layer];
         let pages = if want_v { vp } else { kp };
-        let mut written = 0usize;
         for (pi, &id) in pages.iter().enumerate() {
             let rows = (self.len_tokens.saturating_sub(pi * pt)).min(pt);
             if rows == 0 {
@@ -209,13 +272,31 @@ impl SeqCache {
             }
             let src = pool.page(id);
             let dst_off = pi * pt * w;
-            if dst_off + rows * w > out.len() {
-                break; // dense buffer shorter than paged capacity
-            }
             out[dst_off..dst_off + rows * w].copy_from_slice(&src[..rows * w]);
-            written += rows;
         }
-        let _ = written;
+        Ok(())
+    }
+
+    /// Page table of this sequence's K (or V) for one layer — the raw
+    /// material of a paged attention view.
+    pub fn page_ids(&self, layer: usize, want_v: bool) -> &[PageId] {
+        let (kp, vp) = &self.pages[layer];
+        if want_v {
+            vp
+        } else {
+            kp
+        }
+    }
+
+    /// Zero-copy attention views of this sequence's (K, V) for one layer:
+    /// the serving engine hands these straight to
+    /// [`crate::attention::AttentionRequest::run_with_kv`] — `len_tokens`
+    /// worth of rows gathered page-by-page, no dense assembly.
+    pub fn kv_views<'a>(&'a self, pool: &'a KvPool, layer: usize) -> (KvView<'a>, KvView<'a>) {
+        (
+            KvView::paged(self.page_ids(layer, false), pool, self.len_tokens),
+            KvView::paged(self.page_ids(layer, true), pool, self.len_tokens),
+        )
     }
 
     /// Release all pages back to the pool.
@@ -256,12 +337,12 @@ mod tests {
         assert_eq!(s.total_pages_held(), 2 * 2 * 2); // 2 layers * K,V * 2 pages
         let krow: Vec<f32> = (0..8).map(|i| i as f32).collect();
         let vrow: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
-        s.write_row(&mut p, 1, 5, &krow, &vrow);
+        s.write_row(&mut p, 1, 5, &krow, &vrow).unwrap();
         let mut dense = vec![1.0f32; 16 * 8];
-        s.fill_dense(&p, 1, false, &mut dense);
+        s.fill_dense(&p, 1, false, &mut dense).unwrap();
         assert_eq!(&dense[5 * 8..6 * 8], krow.as_slice());
         assert_eq!(&dense[..8], &[0.0; 8]); // untouched rows zeroed
-        s.fill_dense(&p, 1, true, &mut dense);
+        s.fill_dense(&p, 1, true, &mut dense).unwrap();
         assert_eq!(&dense[5 * 8..6 * 8], vrow.as_slice());
         s.release(&mut p);
         assert_eq!(p.used_pages(), 0);
@@ -284,20 +365,20 @@ mod tests {
         let mut a = SeqCache::new(1);
         a.ensure_capacity(&mut p, 4).unwrap();
         let row = [7.0f32; 8];
-        a.write_row(&mut p, 0, 0, &row, &row);
+        a.write_row(&mut p, 0, 0, &row, &row).unwrap();
         let used_before = p.used_pages();
         let mut b = a.fork(&mut p);
         assert_eq!(p.used_pages(), used_before, "fork must not allocate");
         // Writing through the fork triggers CoW — the original is intact.
         let row2 = [9.0f32; 8];
-        b.write_row(&mut p, 0, 1, &row2, &row2);
+        b.write_row(&mut p, 0, 1, &row2, &row2).unwrap();
         assert!(p.used_pages() > used_before);
         let mut da = vec![0.0; 4 * 8];
-        a.fill_dense(&p, 0, false, &mut da);
+        a.fill_dense(&p, 0, false, &mut da).unwrap();
         assert_eq!(&da[8..16], &[0.0; 8], "original must not see fork's write");
         let mut db = vec![0.0; 4 * 8];
         b.len_tokens = 2;
-        b.fill_dense(&p, 0, false, &mut db);
+        b.fill_dense(&p, 0, false, &mut db).unwrap();
         assert_eq!(&db[8..16], row2.as_slice());
         assert_eq!(&db[..8], row.as_slice(), "fork sees shared prefix");
         a.release(&mut p);
@@ -310,15 +391,106 @@ mod tests {
         let mut p = pool();
         let mut s = SeqCache::new(1);
         s.ensure_capacity(&mut p, 4).unwrap();
-        s.write_row(&mut p, 0, 0, &[5.0; 8], &[5.0; 8]);
+        s.write_row(&mut p, 0, 0, &[5.0; 8], &[5.0; 8]).unwrap();
         s.release(&mut p);
         // Reallocate: the recycled page must read as zeros.
         let mut s2 = SeqCache::new(1);
         s2.ensure_capacity(&mut p, 4).unwrap();
         s2.len_tokens = 1;
         let mut dense = vec![1.0; 4 * 8];
-        s2.fill_dense(&p, 0, false, &mut dense);
+        s2.fill_dense(&p, 0, false, &mut dense).unwrap();
         assert_eq!(&dense[..8], &[0.0; 8]);
         s2.release(&mut p);
+    }
+
+    #[test]
+    fn fill_dense_rejects_short_buffer() {
+        // Regression (PR 2): a dense buffer shorter than the valid paged
+        // contents used to be silently truncated mid-copy; it must now be
+        // a hard error that names the shortfall.
+        let mut p = pool();
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut p, 8).unwrap();
+        for pos in 0..8 {
+            let row = [pos as f32; 8];
+            s.write_row(&mut p, 0, pos, &row, &row).unwrap();
+        }
+        // 5 rows of space for 8 valid rows: refused, buffer untouched
+        // semantics aside (the error fires before any copy).
+        let mut short = vec![9.0f32; 5 * 8];
+        let err = s.fill_dense(&p, 0, false, &mut short).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("fill_dense"), "unhelpful error: {msg}");
+        assert!(msg.contains("8 valid rows"), "unhelpful error: {msg}");
+        // An exactly-sized buffer works.
+        let mut exact = vec![0.0f32; 8 * 8];
+        s.fill_dense(&p, 0, false, &mut exact).unwrap();
+        assert_eq!(&exact[7 * 8..8 * 8], &[7.0f32; 8]);
+        s.release(&mut p);
+    }
+
+    #[test]
+    fn cow_write_on_exhausted_pool_errors_cleanly() {
+        // Regression (PR 2): copy-on-write used to `.expect("CoW alloc")`
+        // on pool exhaustion. It must return an error instead, leave the
+        // shared page intact, and keep the page accounting consistent.
+        let mut p = KvPool::new(2, 4, 8); // exactly K+V for one 1-layer seq
+        let mut a = SeqCache::new(1);
+        a.ensure_capacity(&mut p, 4).unwrap();
+        let row = [3.0f32; 8];
+        a.write_row(&mut p, 0, 0, &row, &row).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        let mut b = a.fork(&mut p); // shares both pages, still 0 free
+        let r = b.write_row(&mut p, 0, 1, &[4.0; 8], &[4.0; 8]);
+        assert!(r.is_err(), "CoW on an exhausted pool must fail");
+        let err = r.unwrap_err();
+        // The engine's backpressure classifier must recognize exhaustion
+        // even through the CoW context wrapping (pins the marker string).
+        assert!(
+            KvPool::is_exhausted_error(&err),
+            "exhaustion not classified: {err}"
+        );
+        let msg = format!("{err}");
+        assert!(msg.contains("copy-on-write"), "unhelpful error: {msg}");
+        // The shared page must still be readable and unmodified.
+        let mut dense = vec![0.0f32; 4 * 8];
+        a.fill_dense(&p, 0, false, &mut dense).unwrap();
+        assert_eq!(&dense[..8], &row);
+        // No page leaked or double-freed by the failed write.
+        assert_eq!(p.used_pages(), 2);
+        b.release(&mut p);
+        a.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn paged_views_read_back_written_rows() {
+        // The kv_views bridge: a paged attention view over this cache
+        // gathers exactly the written rows, clamped to len_tokens.
+        let mut p = pool();
+        let mut s = SeqCache::new(2);
+        s.ensure_capacity(&mut p, 7).unwrap();
+        for pos in 0..7 {
+            let krow: Vec<f32> = (0..8).map(|i| (pos * 10 + i) as f32).collect();
+            let vrow: Vec<f32> = (0..8).map(|i| -((pos * 10 + i) as f32)).collect();
+            s.write_row(&mut p, 1, pos, &krow, &vrow).unwrap();
+        }
+        let (kv, vv) = s.kv_views(&p, 1);
+        assert_eq!(kv.rows(), 7);
+        assert_eq!(kv.cols(), 8);
+        let k = kv.to_matrix();
+        let v = vv.to_matrix();
+        assert_eq!(k.at(5, 3), 53.0);
+        assert_eq!(v.at(6, 7), -67.0);
+        // Block gather across a page boundary (4 tokens/page).
+        let blk = kv.block(2, 6);
+        assert_eq!(blk.shape(), (4, 8));
+        assert_eq!(blk.at(0, 0), 20.0);
+        assert_eq!(blk.at(3, 1), 51.0);
+        // Column window = one "head" of the packed row.
+        let kh = kv.col_window(4, 4);
+        assert_eq!(kh.cols(), 4);
+        assert_eq!(kh.to_matrix().at(5, 0), 54.0);
+        s.release(&mut p);
     }
 }

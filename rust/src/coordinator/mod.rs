@@ -8,7 +8,7 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Backend, Engine, EngineConfig};
 pub use guard::{Guard, GuardPolicy, GuardSignal};
 pub use kv_cache::{KvPool, SeqCache};
 pub use metrics::{Histogram, Metrics};

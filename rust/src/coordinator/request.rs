@@ -41,6 +41,10 @@ pub enum FinishReason {
     ContextFull,
     /// Rejected at admission (e.g. prompt too long).
     Rejected,
+    /// Evicted mid-flight: the KV pool could not grow the sequence (e.g.
+    /// copy-on-write exhaustion) — backpressure, not a crash; the client
+    /// may resubmit.
+    Evicted,
 }
 
 /// Lifecycle state.

@@ -1,8 +1,12 @@
-//! Runtime (RT): the xla-crate PJRT layer that loads and executes the AOT
-//! HLO-text artifacts from the L3 hot path.
+//! Runtime (RT): the two model execution backends behind the serving
+//! engine — the xla-crate PJRT layer that loads and executes the AOT
+//! HLO-text artifacts, and the pure-Rust lab runtime whose attention runs
+//! through the instrumented kernel registry over paged KV views.
 
 pub mod client;
+pub mod lab;
 pub mod model_runtime;
 
 pub use client::{literal_f32, literal_i32, to_f32_vec, Executor, Runtime};
+pub use lab::{LabModel, LabPrefill, LayerWeights, NormMode};
 pub use model_runtime::{HostCache, ModelRuntime, PrefillOutput};

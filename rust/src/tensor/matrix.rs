@@ -90,6 +90,18 @@ impl Matrix {
         }
     }
 
+    /// Vertical slice of columns `[c0, c1)` (copy) — e.g. one head's
+    /// `d_head` window of a packed `(seq, n_heads·d_head)` activation.
+    pub fn cols_slice(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        for r in 0..self.rows {
+            out.row_mut(r)
+                .copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
     /// Round every element onto `fmt`'s grid (in place).
     pub fn round_to(&mut self, fmt: Format) {
         if fmt == Format::F32 {

@@ -81,6 +81,27 @@ impl MultiHeadCase {
             v: self.v[kv].clone(),
         }
     }
+
+    /// Pack the per-KV-head K (and V) matrices into token-major rows:
+    /// `(s2 × n_kv_heads·d)` with KV head `j`'s columns at
+    /// `[j·d, (j+1)·d)`. This is exactly the paged pool's row layout
+    /// (`row_width = n_kv_heads·d`), so a paged-attention fixture is
+    /// "write each packed row at its position, then view per head with a
+    /// column window".
+    pub fn packed_kv_rows(&self) -> (Matrix, Matrix) {
+        let n_kv = self.n_kv_heads();
+        let s2 = self.k[0].rows;
+        let d = self.k[0].cols;
+        let mut kp = Matrix::zeros(s2, n_kv * d);
+        let mut vp = Matrix::zeros(s2, n_kv * d);
+        for j in 0..n_kv {
+            for r in 0..s2 {
+                kp.row_mut(r)[j * d..(j + 1) * d].copy_from_slice(self.k[j].row(r));
+                vp.row_mut(r)[j * d..(j + 1) * d].copy_from_slice(self.v[j].row(r));
+            }
+        }
+        (kp, vp)
+    }
 }
 
 /// The two random families of Table 2.
@@ -237,6 +258,36 @@ pub fn gen_padded_multihead(
     mh
 }
 
+/// Paged-decode benchmark case: the serving hot-path shape — `n_heads`
+/// single-row query heads (`s1 = 1`, the token being decoded) over
+/// `n_kv_heads` KV heads of `len` valid rows grown to `max_seq` capacity,
+/// with the region past `len` filled with [`PAD_GARBAGE`]. `kv_lens` is
+/// the broadcast valid length, so the dense reference must prefix-mask —
+/// and a paged view whose `len_tokens = len` must bit-match it while the
+/// garbage tail proves the view never reads past the valid prefix.
+pub fn gen_paged_decode_case(
+    dist: Distribution,
+    n_heads: usize,
+    n_kv_heads: usize,
+    len: usize,
+    max_seq: usize,
+    d: usize,
+    seed: u64,
+) -> MultiHeadCase {
+    assert!(len >= 1 && len <= max_seq, "bad paged-decode lengths");
+    let mut mh = gen_gqa_multihead(dist, n_heads, n_kv_heads, 1, max_seq, d, seed);
+    for j in 0..n_kv_heads {
+        for m in [&mut mh.k[j], &mut mh.v[j]] {
+            for r in len..max_seq {
+                m.row_mut(r).fill(PAD_GARBAGE);
+            }
+        }
+    }
+    mh.kv_lens = vec![len];
+    mh.label = format!("{} paged-decode len={len}/{max_seq}", mh.label);
+    mh
+}
+
 /// Random valid lengths for a padded batch, in `[min_len, s]`.
 pub fn gen_padded_lens(n_heads: usize, s: usize, min_len: usize, rng: &mut Pcg64) -> Vec<usize> {
     (0..n_heads)
@@ -315,6 +366,33 @@ mod tests {
         assert_eq!(mh.v[0].at(15, 7), PAD_GARBAGE);
         // Head 1 is fully valid: no padding rows at all.
         assert!(mh.k[1].data.iter().all(|&x| x.abs() < 2.0));
+    }
+
+    #[test]
+    fn paged_decode_case_shape_and_garbage_tail() {
+        let dist = Distribution::Uniform { x0: 0.5, am: 1.0 };
+        let mh = gen_paged_decode_case(dist, 4, 2, 10, 32, 8, 3);
+        assert_eq!(mh.n_heads(), 4);
+        assert_eq!(mh.n_kv_heads(), 2);
+        assert_eq!(mh.q[0].shape(), (1, 8));
+        assert_eq!(mh.k[0].shape(), (32, 8));
+        assert_eq!(mh.kv_lens, vec![10]);
+        assert!(mh.k[0].at(9, 0).abs() < 2.0, "valid region is benign");
+        assert_eq!(mh.k[0].at(10, 0), PAD_GARBAGE);
+        assert_eq!(mh.v[1].at(31, 7), PAD_GARBAGE);
+    }
+
+    #[test]
+    fn packed_rows_interleave_kv_heads() {
+        let dist = Distribution::Uniform { x0: 0.0, am: 1.0 };
+        let mh = gen_gqa_multihead(dist, 4, 2, 1, 6, 3, 5);
+        let (kp, vp) = mh.packed_kv_rows();
+        assert_eq!(kp.shape(), (6, 6));
+        for r in 0..6 {
+            assert_eq!(&kp.row(r)[0..3], mh.k[0].row(r));
+            assert_eq!(&kp.row(r)[3..6], mh.k[1].row(r));
+            assert_eq!(&vp.row(r)[3..6], mh.v[1].row(r));
+        }
     }
 
     #[test]

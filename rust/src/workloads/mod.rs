@@ -9,7 +9,7 @@ pub mod traces;
 
 pub use distributions::{
     gen_case, gen_gqa_multihead, gen_multihead, gen_padded_lens, gen_padded_multihead,
-    gqa_kv_head, AttentionCase, Distribution, MultiHeadCase, PAD_GARBAGE,
+    gen_paged_decode_case, gqa_kv_head, AttentionCase, Distribution, MultiHeadCase, PAD_GARBAGE,
 };
 pub use resonance::{ResonanceCategory, ResonanceSpec};
 pub use rng::Pcg64;

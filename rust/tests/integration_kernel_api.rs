@@ -2,11 +2,12 @@
 //! batched-padded requests through every precision allocation, verified
 //! against the masked full-precision golden reference.
 
-use pasa::attention::{Allocation, AttentionRequest, AttnMask, KernelRegistry};
-use pasa::coordinator::{Guard, GuardPolicy, GuardSignal};
-use pasa::numerics::relative_rmse;
+use pasa::attention::{Allocation, AttentionRequest, AttnMask, KernelRegistry, KvPair, KvView};
+use pasa::coordinator::{Guard, GuardPolicy, GuardSignal, KvPool, SeqCache};
+use pasa::numerics::{relative_rmse, Format};
 use pasa::workloads::{
-    gen_gqa_multihead, gen_multihead, gen_padded_multihead, Distribution, Pcg64,
+    gen_gqa_multihead, gen_multihead, gen_padded_multihead, gen_paged_decode_case, Distribution,
+    MultiHeadCase, Pcg64,
 };
 
 /// RMSE envelopes per allocation against the FP32 golden reference, at the
@@ -176,6 +177,201 @@ fn causal_gqa_decode_shape() {
         assert_eq!(a.heads[h].data, b.heads[h].data, "head {h}");
         assert_eq!(a.heads[h].shape(), (1, 32));
     }
+}
+
+// ---- paged KV views (PR 2 tentpole) ---------------------------------
+
+/// Round every matrix of a case onto the FP16 grid, so the paged cache
+/// and the dense reference hold *identical* bits.
+fn fp16_case(mut mh: MultiHeadCase) -> MultiHeadCase {
+    for m in mh
+        .q
+        .iter_mut()
+        .chain(mh.k.iter_mut())
+        .chain(mh.v.iter_mut())
+    {
+        m.round_to(Format::F16);
+    }
+    mh
+}
+
+/// Write the first `rows` packed KV rows of a (single-layer) case into a
+/// fresh paged cache.
+fn seed_paged(mh: &MultiHeadCase, pool: &mut KvPool, rows: usize) -> SeqCache {
+    let (kp, vp) = mh.packed_kv_rows();
+    let mut cache = SeqCache::new(1);
+    cache.ensure_capacity(pool, rows).unwrap();
+    for r in 0..rows {
+        cache.write_row(pool, 0, r, kp.row(r), vp.row(r)).unwrap();
+    }
+    cache
+}
+
+/// Per-KV-head paged views over a cache whose rows pack `n_kv` heads of
+/// width `d`, truncated to `len` valid tokens.
+fn paged_pairs<'a>(
+    cache: &'a SeqCache,
+    pool: &'a KvPool,
+    n_kv: usize,
+    d: usize,
+    len: usize,
+) -> Vec<KvPair<'a>> {
+    (0..n_kv)
+        .map(|j| KvPair {
+            k: KvView::paged(cache.page_ids(0, false), pool, len).col_window(j * d, d),
+            v: KvView::paged(cache.page_ids(0, true), pool, len).col_window(j * d, d),
+        })
+        .collect()
+}
+
+/// A query-heads-only clone of a case (K/V come from views).
+fn query_request(mh: &MultiHeadCase, alloc: Allocation, mask: AttnMask) -> AttentionRequest {
+    let mut req = AttentionRequest::new(alloc).with_mask(mask).with_blocks(16, 16);
+    for q in &mh.q {
+        req = req.with_query_head(q.clone());
+    }
+    req
+}
+
+#[test]
+fn paged_decode_bit_matches_dense_reference_for_all_allocations() {
+    // Acceptance: a decode-shaped request (s1 = 1, GQA 4q/2kv) through
+    // KvView::Paged must bit-match the dense reference for every
+    // allocation. The pool deliberately holds PAD_GARBAGE rows past the
+    // valid length — written into real pages — so a pass also proves the
+    // view's len_tokens truly fences the stale page tail.
+    let (n_heads, n_kv, d, len, max_seq) = (4usize, 2usize, 16usize, 45usize, 64usize);
+    let dist = Distribution::Uniform { x0: 1.0, am: 1.0 };
+    let mh = fp16_case(gen_paged_decode_case(dist, n_heads, n_kv, len, max_seq, d, 31));
+    let mut pool = KvPool::new(64, 8, n_kv * d);
+    let cache = seed_paged(&mh, &mut pool, max_seq); // garbage tail included
+    for alloc in Allocation::all() {
+        let dense = AttentionRequest::from_multihead(&mh, alloc)
+            .with_blocks(16, 16)
+            .run();
+        let paged_req = query_request(&mh, alloc, AttnMask::Padded(vec![len]));
+        let pairs = paged_pairs(&cache, &pool, n_kv, d, len);
+        let paged = paged_req.run_with_kv(&pairs);
+        assert!(!paged.overflowed(), "{}: garbage tail leaked", alloc.name());
+        for h in 0..n_heads {
+            assert_eq!(
+                dense.heads[h].data,
+                paged.heads[h].data,
+                "{} head {h}: paged != dense",
+                alloc.name()
+            );
+            assert_eq!(
+                dense.stats[h].overflow_events,
+                paged.stats[h].overflow_events,
+                "{} head {h}: telemetry diverged",
+                alloc.name()
+            );
+        }
+        // The golden reference agrees through views too.
+        let ng = KernelRegistry::naive().forward(&AttentionRequest::from_multihead(&mh, alloc));
+        let np = KernelRegistry::naive().forward_kv(&paged_req, &pairs);
+        for h in 0..n_heads {
+            assert_eq!(ng.heads[h].data, np.heads[h].data, "naive head {h}");
+        }
+    }
+}
+
+#[test]
+fn paged_causal_bit_matches_dense_for_all_allocations() {
+    // Multi-row causal queries (prefill-shaped) over a paged KV: the
+    // causal block-skipping sweep must gather the same pages and produce
+    // the same bits as the dense run.
+    let (n_heads, n_kv, d, len) = (4usize, 2usize, 16usize, 45usize);
+    let dist = Distribution::Uniform { x0: 2.0, am: 1.0 };
+    let mh = fp16_case(gen_gqa_multihead(dist, n_heads, n_kv, 8, len, d, 32));
+    let mut pool = KvPool::new(64, 8, n_kv * d);
+    let cache = seed_paged(&mh, &mut pool, len);
+    for alloc in Allocation::all() {
+        let dense = AttentionRequest::from_multihead(&mh, alloc)
+            .with_mask(AttnMask::Causal)
+            .with_blocks(16, 16)
+            .run();
+        let paged = query_request(&mh, alloc, AttnMask::Causal)
+            .run_with_kv(&paged_pairs(&cache, &pool, n_kv, d, len));
+        for h in 0..n_heads {
+            assert_eq!(
+                dense.heads[h].data,
+                paged.heads[h].data,
+                "{} head {h}: causal paged != dense",
+                alloc.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn paged_views_after_cow_fork_bit_match_and_stay_isolated() {
+    // Acceptance: paged attention remains bit-exact across a
+    // copy-on-write fork — the fork sees its own writes, the original's
+    // attention output is bit-identical before and after, for all four
+    // allocations.
+    let (d, len) = (16usize, 20usize);
+    let dist = Distribution::Uniform { x0: 1.0, am: 1.0 };
+    let mh = fp16_case(gen_paged_decode_case(dist, 2, 1, len, 32, d, 33));
+    let mut pool = KvPool::new(64, 4, d);
+    let mut cache = seed_paged(&mh, &mut pool, len);
+
+    let base_outputs: Vec<_> = Allocation::all()
+        .into_iter()
+        .map(|alloc| {
+            query_request(&mh, alloc, AttnMask::None)
+                .run_with_kv(&paged_pairs(&cache, &pool, 1, d, len))
+        })
+        .collect();
+
+    // Fork, then write through the fork: overwrite row 5 (CoW on a shared
+    // page) and append row `len` (fresh page growth).
+    let mut fork = cache.fork(&mut pool);
+    let new_row: Vec<f32> = (0..d).map(|i| 0.25 * i as f32).collect();
+    fork.write_row(&mut pool, 0, 5, &new_row, &new_row).unwrap();
+    fork.ensure_capacity(&mut pool, len + 1).unwrap();
+    fork.write_row(&mut pool, 0, len, &new_row, &new_row).unwrap();
+
+    // Dense reference for the fork, assembled with fill_dense.
+    let w = d;
+    let mut kd = vec![0.0f32; 32 * w];
+    let mut vd = vec![0.0f32; 32 * w];
+    fork.fill_dense(&pool, 0, false, &mut kd).unwrap();
+    fork.fill_dense(&pool, 0, true, &mut vd).unwrap();
+    let k_dense = pasa::tensor::Matrix::from_vec(32, w, kd).rows_slice(0, len + 1);
+    let v_dense = pasa::tensor::Matrix::from_vec(32, w, vd).rows_slice(0, len + 1);
+
+    for (idx, alloc) in Allocation::all().into_iter().enumerate() {
+        // Fork: paged vs dense reference.
+        let req = query_request(&mh, alloc, AttnMask::None);
+        let paged = req.run_with_kv(&paged_pairs(&fork, &pool, 1, d, len + 1));
+        let dense = req.run_with_kv(&[KvPair {
+            k: KvView::Dense(&k_dense),
+            v: KvView::Dense(&v_dense),
+        }]);
+        for h in 0..2 {
+            assert_eq!(
+                dense.heads[h].data,
+                paged.heads[h].data,
+                "{} head {h}: fork paged != dense",
+                alloc.name()
+            );
+        }
+        // Original: bit-identical to the pre-fork run.
+        let again = query_request(&mh, alloc, AttnMask::None)
+            .run_with_kv(&paged_pairs(&cache, &pool, 1, d, len));
+        for h in 0..2 {
+            assert_eq!(
+                base_outputs[idx].heads[h].data,
+                again.heads[h].data,
+                "{} head {h}: fork write leaked into the original",
+                alloc.name()
+            );
+        }
+    }
+    fork.release(&mut pool);
+    cache.release(&mut pool);
+    assert_eq!(pool.used_pages(), 0);
 }
 
 #[test]

@@ -119,3 +119,54 @@ fn rmse_orderings_hold_across_seeds() {
         assert!(ep < 2e-2, "seed {seed}: PASA rmse {ep} at the overflow point");
     }
 }
+
+#[test]
+fn paged_views_reproduce_the_overflow_rescue() {
+    // PR 2: the paper's headline overflow/rescue behaviour must survive
+    // the paged-KV path — FA16-32 over a paged view of biased data
+    // overflows exactly like the dense run, and the PASA replay over the
+    // *same pages* comes back clean and accurate.
+    use pasa::attention::{AttnMask, KvPair, KvView};
+    use pasa::coordinator::{KvPool, SeqCache};
+
+    let mh = pasa::workloads::gen_paged_decode_case(
+        Distribution::Uniform { x0: 30.0, am: 0.5 },
+        2,
+        1,
+        192,
+        256,
+        128,
+        77,
+    );
+    let mut pool = KvPool::new(128, 16, 128);
+    let mut cache = SeqCache::new(1);
+    cache.ensure_capacity(&mut pool, 192).unwrap();
+    let (kp, vp) = mh.packed_kv_rows();
+    for r in 0..192 {
+        cache.write_row(&mut pool, 0, r, kp.row(r), vp.row(r)).unwrap();
+    }
+    let pairs = [KvPair {
+        k: KvView::paged(cache.page_ids(0, false), &pool, 192),
+        v: KvView::paged(cache.page_ids(0, true), &pool, 192),
+    }];
+    let mut req = AttentionRequest::new(Allocation::Fa16_32).with_mask(AttnMask::Padded(vec![192]));
+    for q in &mh.q {
+        req = req.with_query_head(q.clone());
+    }
+    let fa = req.run_with_kv(&pairs);
+    assert!(fa.overflowed(), "premise: biased paged KV must overflow FA16-32");
+    assert!(fa.overflow_events() > 0);
+    // Same pages, PASA allocation: the rescue.
+    let rescue = req.with_alloc(Allocation::Pasa16).run_with_kv(&pairs);
+    assert!(!rescue.overflowed());
+    assert_eq!(rescue.overflow_events(), 0);
+    // Accuracy against the truncated dense golden reference.
+    let golden = KernelRegistry::naive().forward(&AttentionRequest::from_multihead(
+        &mh,
+        Allocation::Fa32,
+    ));
+    for h in 0..2 {
+        let e = relative_rmse(&rescue.heads[h].data, &golden.heads[h].data);
+        assert!(e < 5e-2, "head {h}: rmse {e}");
+    }
+}
