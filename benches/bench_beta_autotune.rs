@@ -1,0 +1,70 @@
+//! β-autotune benchmark (PR 3 tentpole): the cost of the precision-policy
+//! layer, measured at its three sites.
+//!
+//! 1. **autotune pass** — probe forward (FA16-32, the serving fast path)
+//!    plus the per-head Table 3 solve: what a serving engine would pay to
+//!    re-tune a request's β table from live telemetry.
+//! 2. **solver alone** — `solve_optimal_beta` per head count, isolating
+//!    the fixed-point iteration from the probe forward.
+//! 3. **PASA forward, uniform vs per-head β** — per-head tables with one
+//!    distinct β per GQA group vs one global β. The (KV head, β)-keyed
+//!    preprocessing means a uniform-valued table costs exactly the shared
+//!    path; distinct βs pay one extra K' = M·K GEMM per extra β.
+//!
+//! Run: cargo bench --bench bench_beta_autotune
+
+use pasa::attention::{Allocation, AttentionRequest, BetaPolicy, KernelRegistry};
+use pasa::bench::Bencher;
+use pasa::numerics::Format;
+use pasa::workloads::{gen_gqa_multihead, Distribution};
+
+const SEQ: usize = 256;
+const DIM: usize = 64;
+
+fn main() {
+    let b = Bencher::quick();
+    println!("# bench_beta_autotune — precision-policy layer (seq={SEQ}, d={DIM})\n");
+    let dist = Distribution::Uniform { x0: 10.0, am: 1.0 };
+
+    for heads in [8usize, 32] {
+        let n_kv = heads / 4;
+        let mh = gen_gqa_multihead(dist, heads, n_kv, SEQ, SEQ, DIM, heads as u64);
+        let req = AttentionRequest::from_multihead(&mh, Allocation::Fa16_32).with_fp16_inputs();
+        println!("## {heads} query heads / {n_kv} KV heads");
+
+        // 1. Full autotune pass: probe + per-head solve.
+        let r = b.run(&format!("autotune probe+solve h={heads:>2}"), heads as f64, || {
+            let probe = req.run();
+            BetaPolicy::autotune(&probe.stats, req.cfg.blocks.s2, Format::F16)
+        });
+        println!("{r}");
+
+        // 2. Solver alone (per-head fixed-point iterations).
+        let probe = req.run();
+        let peaks: Vec<f32> = probe.stats.iter().map(|s| s.max_abs_score).collect();
+        let r = b.run(&format!("solver only        h={heads:>2}"), heads as f64, || {
+            pasa::attention::autotune_betas(&peaks, req.cfg.blocks.s2, Format::F16)
+        });
+        println!("{r}");
+
+        // 3. PASA forward: uniform β vs a per-head table (one β per GQA
+        // group — the worst case for K' sharing at this head count).
+        let pasa_req = req.clone().with_alloc(Allocation::Pasa16);
+        let r = b.run(&format!("pasa uniform beta  h={heads:>2}"), heads as f64, || {
+            KernelRegistry::get(Allocation::Pasa16).forward(&pasa_req).heads[0].data[0]
+        });
+        println!("{r}");
+        let grid = [0.9375, 0.968994, 0.984497];
+        let betas: Vec<f64> = (0..heads).map(|h| grid[(h * n_kv / heads) % 3]).collect();
+        let per_req = pasa_req.clone().with_policy(BetaPolicy::PerHead(betas));
+        let r = b.run(&format!("pasa per-head beta h={heads:>2}"), heads as f64, || {
+            KernelRegistry::get(Allocation::Pasa16).forward(&per_req).heads[0].data[0]
+        });
+        println!("{r}");
+        println!();
+    }
+    println!(
+        "(uniform-valued tables collapse to the shared-K' path; distinct βs \
+         add one M·K GEMM per extra β per KV head)"
+    );
+}

@@ -40,22 +40,64 @@ pub fn ideal_invariant(beta: f64) -> f64 {
     beta / (1.0 - beta)
 }
 
+/// Outcome of one fixed-point solve of the optimal accuracy condition:
+/// the iterate plus its convergence evidence, so callers can tell a
+/// converged β from "the loop ran out of iterations" instead of silently
+/// trusting the last iterate.
+#[derive(Clone, Copy, Debug)]
+pub struct BetaSolve {
+    /// The final iterate β (the optimized β when `converged`).
+    pub beta: f64,
+    /// Fixed-point iterations actually performed.
+    pub iterations: usize,
+    /// Final relative step |β_{k+1} − β_k| / |β_k| (∞ when `max_iter` is 0
+    /// and no step was taken).
+    pub residual: f64,
+    /// True iff `residual ≤ tol` was reached within `max_iter`.
+    pub converged: bool,
+}
+
 /// Solve the optimal accuracy condition by fixed-point iteration
 /// (Eq. 22): β_{k+1} = f(β_k) / (1 + f(β_k)). Mirrors the paper's
 /// `optimal_para.py` (Appendix C) including its FP64 carrier precision.
-pub fn solve_optimal_beta(beta0: f64, n: usize, tp: Format, tol: f64, max_iter: usize) -> f64 {
-    let mut beta0 = beta0;
+/// Returns the iterate together with its convergence status; hitting
+/// `max_iter` is reported (`converged == false`), never silent.
+pub fn solve_optimal_beta(beta0: f64, n: usize, tp: Format, tol: f64, max_iter: usize) -> BetaSolve {
     let mut beta = beta0;
-    for _ in 0..max_iter {
-        let f = practical_invariant(beta0, n, tp);
-        beta = f / (1.0 + f);
-        let err = (beta - beta0).abs() / beta0.abs();
-        beta0 = beta;
-        if err <= tol {
-            break;
+    let mut residual = f64::INFINITY;
+    for it in 1..=max_iter {
+        let f = practical_invariant(beta, n, tp);
+        let next = f / (1.0 + f);
+        // β₀ so close to 1 that the rounded (a, b) make a − b·n vanish
+        // sends f through a pole; keep the last finite iterate and report
+        // the failure instead of iterating on NaN.
+        if !next.is_finite() {
+            return BetaSolve {
+                beta,
+                iterations: it - 1,
+                residual,
+                converged: false,
+            };
+        }
+        // Guarded denominator: β₀ = 0 is a legal input (PASA degrades to
+        // FA2) and must converge to 0, not divide 0/0 into NaN.
+        residual = (next - beta).abs() / beta.abs().max(f64::MIN_POSITIVE);
+        beta = next;
+        if residual <= tol {
+            return BetaSolve {
+                beta,
+                iterations: it,
+                residual,
+                converged: true,
+            };
         }
     }
-    beta
+    BetaSolve {
+        beta,
+        iterations: max_iter,
+        residual,
+        converged: false,
+    }
 }
 
 /// One row of the paper's Table 3.
@@ -87,7 +129,7 @@ pub fn table3(n: usize, tp: Format) -> Vec<InvarianceRow> {
         .map(|&b0| {
             let inva = ideal_invariant(b0);
             let inva1 = practical_invariant(b0, n, tp);
-            let opt = solve_optimal_beta(b0, n, tp, 1e-8, 200);
+            let opt = solve_optimal_beta(b0, n, tp, 1e-8, 200).beta;
             // After optimization the *ideal* invariant of the optimized β
             // is compared against the rounded one (the paper's Table 3
             // reports them equal).
@@ -118,12 +160,16 @@ mod tests {
         let expect = [0.937500, 0.968994, 0.984497];
         for (i, &p) in [4, 5, 6].iter().enumerate() {
             let b0 = 1.0 - 2f64.powi(-p);
-            let b = solve_optimal_beta(b0, 128, Format::F16, 1e-8, 200);
+            let s = solve_optimal_beta(b0, 128, Format::F16, 1e-8, 200);
             assert!(
-                (b - expect[i]).abs() < 5e-6,
-                "initial {b0}: got {b}, want {}",
+                (s.beta - expect[i]).abs() < 5e-6,
+                "initial {b0}: got {}, want {}",
+                s.beta,
                 expect[i]
             );
+            assert!(s.converged, "initial {b0}: did not converge");
+            assert!(s.residual <= 1e-8);
+            assert!(s.iterations >= 1 && s.iterations <= 200);
         }
     }
 
@@ -132,7 +178,7 @@ mod tests {
         // Table 3's punchline: after optimization Inva == Inva1 exactly
         // (to FP64 resolution).
         for &b0 in &[0.9, 0.99, 0.999, 1.0 - 2f64.powi(-5)] {
-            let opt = solve_optimal_beta(b0, 128, Format::F16, 1e-10, 500);
+            let opt = solve_optimal_beta(b0, 128, Format::F16, 1e-10, 500).beta;
             let i = ideal_invariant(opt);
             let i1 = practical_invariant(opt, 128, Format::F16);
             assert!(
@@ -173,10 +219,64 @@ mod tests {
 
     #[test]
     fn bf16_branch_also_solves() {
-        let b = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::Bf16, 1e-8, 200);
+        let b = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::Bf16, 1e-8, 200).beta;
         assert!(b > 0.9 && b < 1.0);
         let i = ideal_invariant(b);
         let i1 = practical_invariant(b, 128, Format::Bf16);
         assert!(((i - i1) / i).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_iterations_reports_unconverged_initial() {
+        // max_iter = 0: the solver must hand back β₀ and say so, not
+        // pretend the last iterate converged.
+        let s = solve_optimal_beta(0.99, 128, Format::F16, 1e-10, 0);
+        assert_eq!(s.beta, 0.99);
+        assert_eq!(s.iterations, 0);
+        assert!(!s.converged);
+        assert!(s.residual.is_infinite());
+    }
+
+    #[test]
+    fn impossible_tolerance_reports_unconverged() {
+        // tol = 0 with one iteration cannot converge unless the iterate is
+        // an exact fixed point; the status must record the shortfall.
+        let s = solve_optimal_beta(0.99, 128, Format::F16, 0.0, 1);
+        assert_eq!(s.iterations, 1);
+        assert!(!s.converged);
+        assert!(s.residual.is_finite() && s.residual > 0.0);
+    }
+
+    #[test]
+    fn beta0_near_zero_converges_to_zero() {
+        // β = 0 degrades PASA to FA2; the solve must stay at 0 without
+        // a 0/0 residual poisoning the status.
+        let s = solve_optimal_beta(0.0, 128, Format::F16, 1e-12, 50);
+        assert_eq!(s.beta, 0.0);
+        assert!(s.converged, "residual {} did not settle", s.residual);
+        // ... and a tiny positive β₀ collapses toward a tiny fixed point
+        // without NaN.
+        let s = solve_optimal_beta(1e-9, 128, Format::F16, 1e-6, 200);
+        assert!(s.beta.is_finite() && s.beta >= 0.0 && s.beta < 1e-3);
+    }
+
+    #[test]
+    fn beta0_near_one_reports_the_pole_instead_of_nan() {
+        // β₀ ≈ 1 drives the rounded a − b·n of Eq. 21 to exactly zero in
+        // FP16 — the fixed-point map has a pole there. The hardened solver
+        // must keep the last finite iterate and flag non-convergence, not
+        // return NaN.
+        for &b0 in &[0.9999, 1.0 - 1e-9] {
+            let s = solve_optimal_beta(b0, 128, Format::F16, 1e-10, 500);
+            assert!(s.beta.is_finite(), "b0={b0}: non-finite iterate");
+            assert!(!s.converged, "b0={b0}: pole reported as converged");
+            assert_eq!(s.beta, b0, "b0={b0}: pole must keep the initial iterate");
+            assert_eq!(s.iterations, 0);
+        }
+        // ... while the paper's own 0.999 row is on the good side of the
+        // pole and still converges.
+        let s = solve_optimal_beta(0.999, 128, Format::F16, 1e-8, 200);
+        assert!(s.converged);
+        assert!(s.beta > 0.9 && s.beta < 1.0);
     }
 }

@@ -31,6 +31,15 @@ pub enum Allocation {
     /// PASA (Algorithm 1): fully FP16 with pseudo-average shifting and
     /// global recovering.
     Pasa16,
+    /// FP8 (E4M3) score storage: FP16 inputs on the matrix engine, FP32
+    /// accumulate, S stored in E4M3 — the overflow site moves from 65504
+    /// down to 448 (Table 1's FP8 row). Softmax/update stay FP16, the
+    /// H-FA-style split (low-precision scores, half-precision reductions).
+    /// Not one of the paper's evaluated allocations (`all()` keeps the
+    /// Figs. 1–3 + PASA set); dispatched through the same
+    /// [`super::kernel::FlashKernel`] — a pure config-table row, no new
+    /// code path.
+    Fp8,
 }
 
 impl Allocation {
@@ -44,6 +53,7 @@ impl Allocation {
             "fa16_32" => Some(Allocation::Fa16_32),
             "fa16" => Some(Allocation::Fa16),
             "pasa" | "pasa16" => Some(Allocation::Pasa16),
+            "fp8" => Some(Allocation::Fp8),
             _ => None,
         }
     }
@@ -54,6 +64,7 @@ impl Allocation {
             Allocation::Fa16_32 => "FA(FP16-FP32)",
             Allocation::Fa16 => "FA(FP16)",
             Allocation::Pasa16 => "PASA(FP16)",
+            Allocation::Fp8 => "FA(FP8-E4M3)",
         }
     }
 
@@ -70,6 +81,11 @@ impl Allocation {
             Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Pasa16 => {
                 GemmPrecision::ACC32_STORE16
             }
+            // FP8 row: the E4M3 *store* of S is the overflow site (448).
+            Allocation::Fp8 => GemmPrecision {
+                acc: Format::F32,
+                store: Format::F8E4M3,
+            },
         }
     }
 
@@ -77,7 +93,7 @@ impl Allocation {
     pub fn vector_fmt(self) -> Format {
         match self {
             Allocation::Fa32 | Allocation::Fa16_32 => Format::F32,
-            Allocation::Fa16 | Allocation::Pasa16 => Format::F16,
+            Allocation::Fa16 | Allocation::Pasa16 | Allocation::Fp8 => Format::F16,
         }
     }
 
@@ -85,16 +101,32 @@ impl Allocation {
     pub fn score_fmt(self) -> Format {
         match self {
             Allocation::Fa32 => Format::F32,
+            Allocation::Fp8 => Format::F8E4M3,
             _ => Format::F16,
         }
     }
 
+    /// The paper's evaluated allocations (Figs. 1–3 + PASA) — the set the
+    /// evaluation sweeps and goldens iterate; FP16-scale RMSE envelopes
+    /// apply to each member.
     pub fn all() -> [Allocation; 4] {
         [
             Allocation::Fa32,
             Allocation::Fa16_32,
             Allocation::Fa16,
             Allocation::Pasa16,
+        ]
+    }
+
+    /// Every registry row, including the FP8 (E4M3) extension whose error
+    /// envelope is an order coarser than the paper set's.
+    pub fn all_extended() -> [Allocation; 5] {
+        [
+            Allocation::Fa32,
+            Allocation::Fa16_32,
+            Allocation::Fa16,
+            Allocation::Pasa16,
+            Allocation::Fp8,
         ]
     }
 }
@@ -153,6 +185,13 @@ mod tests {
         assert_eq!(Allocation::Fa16_32.vector_fmt(), Format::F32);
         assert_eq!(Allocation::Fa16.vector_fmt(), Format::F16);
         assert_eq!(Allocation::Pasa16.vector_fmt(), Format::F16);
+        // FP8 row: E4M3 score store (overflow at 448), FP32 accumulate,
+        // FP16 vector ops.
+        assert_eq!(Allocation::Fp8.score_fmt(), Format::F8E4M3);
+        assert_eq!(Allocation::Fp8.gemm().store, Format::F8E4M3);
+        assert_eq!(Allocation::Fp8.gemm().acc, Format::F32);
+        assert_eq!(Allocation::Fp8.vector_fmt(), Format::F16);
+        assert_eq!(Allocation::Fp8.gemm().store.overflow_boundary(), 448.0);
     }
 
     #[test]
@@ -161,7 +200,16 @@ mod tests {
         assert_eq!(Allocation::parse("fa16_32"), Some(Allocation::Fa16_32));
         assert_eq!(Allocation::parse("fa32"), Some(Allocation::Fa32));
         assert_eq!(Allocation::parse("fa16"), Some(Allocation::Fa16));
+        assert_eq!(Allocation::parse("fp8"), Some(Allocation::Fp8));
         assert_eq!(Allocation::parse("bf16"), None);
+    }
+
+    #[test]
+    fn extended_set_is_paper_set_plus_fp8() {
+        let all = Allocation::all();
+        let ext = Allocation::all_extended();
+        assert_eq!(&ext[..4], &all[..]);
+        assert_eq!(ext[4], Allocation::Fp8);
     }
 
     #[test]

@@ -13,13 +13,14 @@
 //! kernel, and every workload shape (masked, GQA, batched) runs through
 //! the exact same code path per kernel.
 
-use super::config::Allocation;
+use super::config::{Allocation, AttentionConfig};
 use super::flash::flash_head_kv;
 use super::naive::naive_head_kv;
 use super::pasa::{pasa_head_kv, pasa_preprocess_kv, PasaPre};
 use super::request::{
     AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats, KvPair, KvView,
 };
+use crate::numerics::Format;
 use crate::tensor::Matrix;
 
 /// A forward-only attention kernel over [`AttentionRequest`]s.
@@ -90,12 +91,22 @@ impl AttentionKernel for NaiveKernel {
             let pair = req.kv_pair_for(kv, h);
             naive_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h))
         });
-        AttentionOutput { heads, stats }
+        AttentionOutput {
+            heads,
+            stats,
+            // The golden instruments raw scores against the FP16 boundary
+            // ("would a low-precision store have overflowed here").
+            score_boundary: Format::F16.overflow_boundary() as f32,
+        }
     }
 }
 
 /// Flash Attention 2 under the precision allocation carried by the
-/// request (Fa32 / Fa16_32 / Fa16 — Figs. 1–3).
+/// request (Fa32 / Fa16_32 / Fa16 — Figs. 1–3 — plus the Fp8 row, which
+/// is the same code path with E4M3 kernel constants from the config
+/// table). Each head consumes its resolved per-head config (β is unused
+/// by FA, but the resolution keeps the head-config contract uniform
+/// across kernels).
 pub struct FlashKernel;
 
 impl AttentionKernel for FlashKernel {
@@ -106,19 +117,25 @@ impl AttentionKernel for FlashKernel {
     fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
         req.validate_kv(kv).expect("invalid AttentionRequest");
         let parallel = req.seq_q() > 1;
+        let cfgs = req.head_cfgs();
         let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
             let pair = req.kv_pair_for(kv, h);
-            flash_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h), &req.cfg)
+            flash_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h), &cfgs[h])
         });
-        AttentionOutput { heads, stats }
+        AttentionOutput {
+            heads,
+            stats,
+            score_boundary: req.cfg.gemm().store.overflow_boundary() as f32,
+        }
     }
 }
 
 /// PASA (Algorithm 1): fully-FP16 flash attention with pseudo-average
-/// shifting. The K' = M·K preprocessing is computed once per KV head and
-/// shared by the whole GQA query group; padded requests preprocess only
-/// the valid KV prefix so padding garbage never leaks into the
-/// pseudo-average.
+/// shifting. The request's β policy is resolved per head before fan-out;
+/// the K' = M·K preprocessing is computed once per distinct (KV head, β)
+/// pair — a uniform policy shares K' across the whole GQA query group
+/// exactly as before — and padded requests preprocess only the valid KV
+/// prefix so padding garbage never leaks into the pseudo-average.
 pub struct PasaKernel;
 
 impl AttentionKernel for PasaKernel {
@@ -131,11 +148,19 @@ impl AttentionKernel for PasaKernel {
         let parallel = req.seq_q() > 1;
         let n_kv = kv.len();
         let kv_head_for = |h: usize| crate::workloads::gqa_kv_head(h, req.n_heads(), n_kv);
+        // Resolve the β policy up front (head-invariant policies solve
+        // once); the inner cores keep seeing one scalar β each. K'
+        // preprocessing depends on β, so sharing keys on (KV head, β): a
+        // `Uniform` policy collapses back to one K' GEMM per KV head —
+        // bit-identical to the pre-policy kernel — while per-head βs
+        // within a GQA group each get their own M·K.
+        let cfgs: Vec<AttentionConfig> = req.head_cfgs();
+        let score_boundary = req.cfg.gemm().store.overflow_boundary() as f32;
         match &req.mask {
             AttnMask::Padded(_) => {
                 // Per-head valid lengths: shift only the valid KV prefix.
                 // Preprocessing is still shared — once per distinct
-                // (KV head, valid length) pair, so a GQA group with a
+                // (KV head, valid length, β) triple, so a GQA group with a
                 // broadcast length pays the K' GEMM once, not per head.
                 // Paged views truncate for free (shorter page-table walk);
                 // dense views are sliced once, as before.
@@ -146,16 +171,16 @@ impl AttentionKernel for PasaKernel {
                         _ => unreachable!("Padded mask resolves to Prefix"),
                     }
                 };
-                let mut pres: Vec<((usize, usize), PasaPre)> = Vec::new();
+                let mut pres: Vec<((usize, usize, u64), PasaPre)> = Vec::new();
                 for h in 0..req.n_heads() {
-                    let key = (kv_head_for(h), padded_len(h));
+                    let key = (kv_head_for(h), padded_len(h), cfgs[h].beta.to_bits());
                     if key.1 > 0 && !pres.iter().any(|(k, _)| *k == key) {
                         let kview = kv[key.0].k;
                         let pre = match kview.truncated(key.1) {
-                            Some(tv) => pasa_preprocess_kv(tv, &req.cfg),
+                            Some(tv) => pasa_preprocess_kv(tv, &cfgs[h]),
                             None => {
                                 let kt = kview.block(0, key.1);
-                                pasa_preprocess_kv(KvView::Dense(&kt), &req.cfg)
+                                pasa_preprocess_kv(KvView::Dense(&kt), &cfgs[h])
                             }
                         };
                         pres.push((key, pre));
@@ -170,29 +195,45 @@ impl AttentionKernel for PasaKernel {
                         let out = Matrix::zeros(req.q[h].rows, kv[kvh].v.cols());
                         return (out, HeadStats::default());
                     }
-                    let pre = &pres.iter().find(|(k, _)| *k == (kvh, len)).unwrap().1;
+                    let key = (kvh, len, cfgs[h].beta.to_bits());
+                    let pre = &pres.iter().find(|(k, _)| *k == key).unwrap().1;
                     let vview = kv[kvh].v;
                     match vview.truncated(len) {
-                        Some(tv) => pasa_head_kv(&req.q[h], tv, pre, HeadMask::None, &req.cfg),
+                        Some(tv) => pasa_head_kv(&req.q[h], tv, pre, HeadMask::None, &cfgs[h]),
                         None => {
                             let vt = vview.block(0, len);
-                            pasa_head_kv(&req.q[h], KvView::Dense(&vt), pre, HeadMask::None, &req.cfg)
+                            pasa_head_kv(&req.q[h], KvView::Dense(&vt), pre, HeadMask::None, &cfgs[h])
                         }
                     }
                 });
-                AttentionOutput { heads, stats }
+                AttentionOutput {
+                    heads,
+                    stats,
+                    score_boundary,
+                }
             }
             _ => {
-                // Shared preprocessing per KV head (GQA groups reuse K').
-                let pres: Vec<PasaPre> = kv
-                    .iter()
-                    .map(|pair| pasa_preprocess_kv(pair.k, &req.cfg))
-                    .collect();
+                // Shared preprocessing per (KV head, β) pair (GQA groups
+                // with one β reuse K' exactly as before).
+                let mut pres: Vec<((usize, u64), PasaPre)> = Vec::new();
+                for h in 0..req.n_heads() {
+                    let key = (kv_head_for(h), cfgs[h].beta.to_bits());
+                    if !pres.iter().any(|(k, _)| *k == key) {
+                        let pre = pasa_preprocess_kv(kv[key.0].k, &cfgs[h]);
+                        pres.push((key, pre));
+                    }
+                }
                 let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
                     let kvh = kv_head_for(h);
-                    pasa_head_kv(&req.q[h], kv[kvh].v, &pres[kvh], req.mask_for_head(h), &req.cfg)
+                    let key = (kvh, cfgs[h].beta.to_bits());
+                    let pre = &pres.iter().find(|(k, _)| *k == key).unwrap().1;
+                    pasa_head_kv(&req.q[h], kv[kvh].v, pre, req.mask_for_head(h), &cfgs[h])
                 });
-                AttentionOutput { heads, stats }
+                AttentionOutput {
+                    heads,
+                    stats,
+                    score_boundary,
+                }
             }
         }
     }
@@ -212,7 +253,9 @@ impl KernelRegistry {
     pub fn get(alloc: Allocation) -> &'static dyn AttentionKernel {
         match alloc {
             Allocation::Pasa16 => &PASA,
-            Allocation::Fa32 | Allocation::Fa16_32 | Allocation::Fa16 => &FLASH,
+            // Fp8 is the same flash code path with E4M3 constants from the
+            // allocation table — a config row, not a new kernel.
+            Allocation::Fa32 | Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Fp8 => &FLASH,
         }
     }
 
@@ -238,10 +281,93 @@ mod tests {
     #[test]
     fn registry_covers_every_allocation() {
         assert_eq!(KernelRegistry::get(Allocation::Pasa16).name(), "pasa");
-        for alloc in [Allocation::Fa32, Allocation::Fa16_32, Allocation::Fa16] {
+        for alloc in [
+            Allocation::Fa32,
+            Allocation::Fa16_32,
+            Allocation::Fa16,
+            Allocation::Fp8,
+        ] {
             assert_eq!(KernelRegistry::get(alloc).name(), "flash");
         }
         assert_eq!(KernelRegistry::naive().name(), "naive-f32");
+    }
+
+    #[test]
+    fn output_carries_the_active_score_boundary() {
+        // The guard's pressure check reads the boundary off the output:
+        // it must match the allocation's score-store format, not a
+        // hardcoded 65504.
+        let req = single(3);
+        for (alloc, boundary) in [
+            (Allocation::Fa16_32, 65504.0f32),
+            (Allocation::Fa16, 65504.0),
+            (Allocation::Pasa16, 65504.0),
+            (Allocation::Fp8, 448.0),
+            (Allocation::Fa32, f32::MAX),
+        ] {
+            let out = req.clone().with_alloc(alloc).run();
+            assert_eq!(out.score_boundary, boundary, "{}", alloc.name());
+        }
+        // The golden instruments against FP16 by convention.
+        let golden = KernelRegistry::naive().forward(&req);
+        assert_eq!(golden.score_boundary, 65504.0);
+    }
+
+    #[test]
+    fn uniform_policy_bit_matches_per_head_policy() {
+        // Acceptance: a PerHead table that repeats one β must be
+        // bit-identical to the Uniform policy — the (KV head, β)-keyed
+        // preprocessing collapses to the shared-K' path.
+        use crate::attention::policy::BetaPolicy;
+        let mut rng = Pcg64::new(9, 0);
+        let dist = Distribution::Uniform { x0: 5.0, am: 1.0 };
+        let mut req = AttentionRequest::new(Allocation::Pasa16);
+        for _ in 0..4 {
+            let c = gen_case(dist, 96, 96, 16, &mut rng);
+            req = req.with_head(c.q, c.k, c.v);
+        }
+        let req = req.with_fp16_inputs().with_blocks(32, 32);
+        let b = 0.968994;
+        let uni = req.clone().with_beta(b).run();
+        let per = req.clone().with_policy(BetaPolicy::PerHead(vec![b; 4])).run();
+        let broadcast = req.with_policy(BetaPolicy::PerHead(vec![b])).run();
+        for h in 0..4 {
+            assert_eq!(uni.heads[h].data, per.heads[h].data, "head {h}");
+            assert_eq!(uni.heads[h].data, broadcast.heads[h].data, "head {h} (broadcast)");
+            assert_eq!(
+                uni.stats[h].overflow_events,
+                per.stats[h].overflow_events,
+                "head {h} stats"
+            );
+        }
+    }
+
+    #[test]
+    fn per_head_betas_match_independent_single_head_runs() {
+        // Distinct βs inside one GQA group: each query head must equal a
+        // standalone single-head run at its own β — the preprocessing
+        // split by (KV head, β) cannot leak one head's K' into another's.
+        use crate::attention::policy::BetaPolicy;
+        let mut rng = Pcg64::new(11, 0);
+        let c = gen_case(Distribution::Uniform { x0: 8.0, am: 1.0 }, 64, 64, 16, &mut rng);
+        let betas = [0.9375, 0.968994, 0.984497, 0.9375];
+        let mut req = AttentionRequest::new(Allocation::Pasa16)
+            .with_kv_head(c.k.clone(), c.v.clone())
+            .with_kv_head(c.k.clone(), c.v.clone());
+        for _ in 0..4 {
+            req = req.with_query_head(c.q.clone());
+        }
+        let req = req
+            .with_fp16_inputs()
+            .with_blocks(32, 32)
+            .with_policy(BetaPolicy::PerHead(betas.to_vec()));
+        let out = req.run();
+        for h in 0..4 {
+            let solo = AttentionRequest::from_case_cfg(&req.head_case(h), req.cfg)
+                .with_beta(betas[h])
+                .run();
+            assert_eq!(out.heads[h].data, solo.heads[0].data, "head {h}");
+        }
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! * build an [`AttentionRequest`] (builder-style) carrying Q/K/V for
 //!   `n_heads` query heads over `n_kv_heads` KV heads (MQA/GQA via the
 //!   head-group mapping), an [`AttnMask`] (`None | Causal | Padded`),
-//!   block sizes, PASA's β and the precision [`Allocation`];
+//!   block sizes, PASA's β — as a [`BetaPolicy`] (uniform, per-head
+//!   table, or solved at dispatch from the Table 3 condition) — and the
+//!   precision [`Allocation`];
 //! * fetch the kernel from [`KernelRegistry::get`] — the crate's only
 //!   allocation dispatch — or call [`AttentionRequest::run`];
 //! * read per-head outputs and overflow telemetry (max |S| before store
@@ -48,11 +50,13 @@ pub mod flash;
 pub mod kernel;
 pub mod naive;
 pub mod pasa;
+pub mod policy;
 pub mod request;
 pub mod shifting;
 
-pub use beta::{solve_optimal_beta, PAPER_BETA, PAPER_BETAS};
+pub use beta::{solve_optimal_beta, BetaSolve, PAPER_BETA, PAPER_BETAS};
 pub use config::{Allocation, AttentionConfig, BlockSizes};
+pub use policy::{autotune_betas, beta0_for_pressure, BetaPolicy};
 pub use flash::{flash_attention, flash_head, flash_head_kv};
 pub use kernel::{AttentionKernel, FlashKernel, KernelRegistry, NaiveKernel, PasaKernel};
 pub use naive::{naive_attention_f32, naive_attention_masked_f32, raw_scores_f32};

@@ -1,0 +1,319 @@
+//! The precision-policy layer (S17): per-head β as a first-class,
+//! observable policy instead of one hardcoded scalar.
+//!
+//! The paper solves a *single* optimal β from the accuracy condition
+//! (Eq. 16/20/22) and shares it across every head. But the condition's
+//! inputs — the block width n, the storage format's rounding, and the
+//! score amplitude the shift must absorb — are all per-head quantities,
+//! and the kernel telemetry ([`HeadStats::max_abs_score`]) already
+//! measures the last one at the paper's own instrumentation point. A
+//! [`BetaPolicy`] closes that loop:
+//!
+//! * [`BetaPolicy::Uniform`] — the paper's regime: one β for every head
+//!   (the default, bit-identical to the pre-policy kernels);
+//! * [`BetaPolicy::PerHead`] — an explicit per-head β table, e.g. the
+//!   output of the autotune pass;
+//! * [`BetaPolicy::Solved`] — solve the optimal accuracy condition at
+//!   dispatch time from a β₀ seed, against either the canonical FP16
+//!   rounding or the active allocation's score format.
+//!
+//! The autotune pass ([`BetaPolicy::autotune`]) maps each head's observed
+//! pre-store |S| peak onto the paper's β₀ grid (1 − 2⁻ᵖ, p ∈ 4..=6 — the
+//! initials of Table 3) via [`beta0_for_pressure`], then runs every pick
+//! through [`solve_optimal_beta`] so the rounded invariant is exact.
+//! Hotter heads get a stronger shift; benign heads keep the mildest grid
+//! β (0.9375, which is *exactly* representable in FP16 — Appendix A).
+//!
+//! Requests carry the policy ([`crate::attention::AttentionRequest`]'s
+//! `policy` field); the kernels resolve it per head before fan-out, so
+//! the inner cores still see one scalar β each and the GQA `K' = M·K`
+//! sharing keys on (KV head, β) pairs.
+
+use super::beta::{solve_optimal_beta, PAPER_BETA};
+use super::request::{AttentionOutput, HeadStats};
+use crate::numerics::Format;
+
+/// How PASA's β is assigned across the query heads of one request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BetaPolicy {
+    /// One β shared by every head (the paper's regime).
+    Uniform(f64),
+    /// Explicit per-head β table: one entry per query head, or a single
+    /// entry broadcast to all heads (mirroring `AttnMask::Padded`).
+    PerHead(Vec<f64>),
+    /// Solve the optimal accuracy condition at resolution time from the
+    /// seed `beta0`. With `per_format` the solve rounds against the
+    /// active allocation's score format; otherwise against the canonical
+    /// FP16 grid the shifting matrix is stored in.
+    Solved { beta0: f64, per_format: bool },
+}
+
+impl Default for BetaPolicy {
+    fn default() -> Self {
+        BetaPolicy::Uniform(PAPER_BETA)
+    }
+}
+
+/// Pick the paper-grid β₀ for an observed pre-shift score peak: the
+/// smallest 1 − 2⁻ᵖ (p ∈ 4..=6 — the initials the paper feeds Table 3)
+/// whose post-shift residual (1 − β)·|S|ₘₐₓ fits within 1/64 of the
+/// format's overflow boundary. Unpressured heads keep the mildest grid β
+/// (0.9375, exact in FP16); peaks beyond the grid's reach saturate at
+/// 1 − 2⁻⁶ (the paper's own strongest candidate).
+pub fn beta0_for_pressure(max_abs_score: f64, fmt: Format) -> f64 {
+    let margin = fmt.overflow_boundary() / 64.0;
+    let mut p: i32 = 4;
+    while p < 6 && max_abs_score * 2f64.powi(-p) > margin {
+        p += 1;
+    }
+    1.0 - 2f64.powi(-p)
+}
+
+/// One solved β per observed per-head score peak: grid pick via
+/// [`beta0_for_pressure`], then the optimal accuracy condition at block
+/// width `n` under the rounding of `tp`.
+pub fn autotune_betas(max_scores: &[f32], n: usize, tp: Format) -> Vec<f64> {
+    max_scores
+        .iter()
+        .map(|&s| {
+            let b0 = beta0_for_pressure(s as f64, tp);
+            solve_optimal_beta(b0, n, tp, 1e-10, 500).beta
+        })
+        .collect()
+}
+
+impl BetaPolicy {
+    /// β for query head `head`, under KV block width `n` and score
+    /// format `fmt` (both only consulted by [`BetaPolicy::Solved`]).
+    pub fn resolve(&self, head: usize, n: usize, fmt: Format) -> f64 {
+        match self {
+            BetaPolicy::Uniform(b) => *b,
+            BetaPolicy::PerHead(v) => {
+                if v.len() == 1 {
+                    v[0]
+                } else {
+                    assert!(
+                        head < v.len(),
+                        "PerHead policy has {} betas but head {head} was requested",
+                        v.len()
+                    );
+                    v[head]
+                }
+            }
+            BetaPolicy::Solved { beta0, per_format } => {
+                let tp = if *per_format { fmt } else { Format::F16 };
+                let s = solve_optimal_beta(*beta0, n, tp, 1e-10, 500);
+                // The solver reports non-convergence (e.g. a β₀ at the
+                // fixed-point pole near 1) instead of silently returning
+                // the seed; dispatching that seed would run the kernels
+                // with a near-singular shifting matrix, so fail loudly.
+                assert!(
+                    s.converged,
+                    "Solved beta policy did not converge from beta0 {beta0} at n {n} \
+                     (residual {:.3e} after {} iterations)",
+                    s.residual, s.iterations
+                );
+                s.beta
+            }
+        }
+    }
+
+    /// The autotune pass: per-head β table from observed kernel telemetry
+    /// (one [`HeadStats`] per query head), fed through the Table 3 solver.
+    pub fn autotune(stats: &[HeadStats], n: usize, tp: Format) -> BetaPolicy {
+        let peaks: Vec<f32> = stats.iter().map(|s| s.max_abs_score).collect();
+        BetaPolicy::PerHead(autotune_betas(&peaks, n, tp))
+    }
+
+    /// Autotune straight off a probe run's [`AttentionOutput`].
+    pub fn autotune_from(out: &AttentionOutput, n: usize, tp: Format) -> BetaPolicy {
+        Self::autotune(&out.stats, n, tp)
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, BetaPolicy::Uniform(_))
+    }
+
+    /// Resolve a `Solved` policy into the concrete `Uniform` β it solves
+    /// to (other variants pass through unchanged) — the install-time
+    /// path: solve once when the policy is configured (e.g. on
+    /// `LabModel::beta_policy`) instead of on every kernel forward, and
+    /// get a pole seed back as an error instead of a dispatch panic.
+    pub fn resolved(&self, n: usize, fmt: Format) -> Result<BetaPolicy, String> {
+        match self {
+            BetaPolicy::Solved { beta0, per_format } => {
+                let tp = if *per_format { fmt } else { Format::F16 };
+                let s = solve_optimal_beta(*beta0, n, tp, 1e-10, 500);
+                if !s.converged {
+                    return Err(format!(
+                        "Solved beta policy did not converge from beta0 {beta0} at n {n} \
+                         (residual {:.3e} after {} iterations)",
+                        s.residual, s.iterations
+                    ));
+                }
+                Ok(BetaPolicy::Uniform(s.beta))
+            }
+            other => Ok(other.clone()),
+        }
+    }
+
+    /// Structural validation against a request's head count, KV block
+    /// width `n` and score format `fmt`: every β must lie in [0, 1)
+    /// (β = 0 legally degrades PASA to FA2, β = 1 makes the shifting
+    /// matrix singular — Theorem 2.1's λ·n = 1 condition), and a `Solved`
+    /// seed must actually converge — a seed at the fixed-point pole is a
+    /// normal validation error here, never a mid-forward panic.
+    pub fn validate(&self, n_heads: usize, n: usize, fmt: Format) -> Result<(), String> {
+        let check = |b: f64, what: &str| -> Result<(), String> {
+            if !(0.0..1.0).contains(&b) || !b.is_finite() {
+                return Err(format!("{what} beta {b} outside [0, 1)"));
+            }
+            Ok(())
+        };
+        match self {
+            BetaPolicy::Uniform(b) => check(*b, "Uniform"),
+            BetaPolicy::PerHead(v) => {
+                if v.is_empty() {
+                    return Err("PerHead policy has no betas".into());
+                }
+                if v.len() != 1 && v.len() != n_heads {
+                    return Err(format!(
+                        "PerHead policy has {} betas for {n_heads} heads (need 1 or one per head)",
+                        v.len()
+                    ));
+                }
+                for &b in v {
+                    check(b, "PerHead")?;
+                }
+                Ok(())
+            }
+            BetaPolicy::Solved { beta0, .. } => {
+                check(*beta0, "Solved seed")?;
+                self.resolved(n, fmt).map(|_| ())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::beta::PAPER_BETAS;
+
+    #[test]
+    fn pressure_grid_matches_paper_initials() {
+        // Benign, warm and hot peaks land on the paper's three initials.
+        assert_eq!(beta0_for_pressure(10.0, Format::F16), 0.9375);
+        assert_eq!(beta0_for_pressure(25_600.0, Format::F16), 1.0 - 2f64.powi(-5));
+        assert_eq!(beta0_for_pressure(230_000.0, Format::F16), 1.0 - 2f64.powi(-6));
+        // Monotone in the peak.
+        let mut last = 0.0;
+        for s in [1.0, 1e3, 3e4, 1e5, 1e6] {
+            let b = beta0_for_pressure(s, Format::F16);
+            assert!(b >= last, "beta0 not monotone at peak {s}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn autotuned_betas_are_the_solved_paper_values() {
+        // The three grid picks solve to Table 3's optimized βs.
+        let betas = autotune_betas(&[10.0, 25_600.0, 230_000.0], 128, Format::F16);
+        for (b, expect) in betas.iter().zip(&PAPER_BETAS) {
+            assert!((b - expect).abs() < 5e-6, "{b} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn resolve_covers_all_variants() {
+        assert_eq!(BetaPolicy::Uniform(0.5).resolve(3, 128, Format::F16), 0.5);
+        let per = BetaPolicy::PerHead(vec![0.1, 0.2, 0.3]);
+        assert_eq!(per.resolve(1, 128, Format::F16), 0.2);
+        // One entry broadcasts.
+        let bc = BetaPolicy::PerHead(vec![0.7]);
+        assert_eq!(bc.resolve(5, 128, Format::F16), 0.7);
+        // Solved matches the direct solver call.
+        let sol = BetaPolicy::Solved {
+            beta0: 1.0 - 2f64.powi(-6),
+            per_format: false,
+        };
+        let direct = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::F16, 1e-10, 500).beta;
+        assert_eq!(sol.resolve(0, 128, Format::F16), direct);
+        // per_format consults the passed score format instead of FP16.
+        let solf = BetaPolicy::Solved {
+            beta0: 1.0 - 2f64.powi(-6),
+            per_format: true,
+        };
+        let bf = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::Bf16, 1e-10, 500).beta;
+        assert_eq!(solf.resolve(0, 128, Format::Bf16), bf);
+    }
+
+    #[test]
+    #[should_panic(expected = "PerHead policy has 2 betas but head 4")]
+    fn per_head_out_of_range_panics() {
+        BetaPolicy::PerHead(vec![0.9, 0.95]).resolve(4, 128, Format::F16);
+    }
+
+    #[test]
+    #[should_panic(expected = "did not converge")]
+    fn solved_policy_refuses_an_unconverged_seed() {
+        // β₀ = 0.9999 sits at the FP16 fixed-point pole (the solver keeps
+        // the seed and reports converged = false); resolving it must fail
+        // loudly instead of shipping the near-singular β to the kernels.
+        BetaPolicy::Solved {
+            beta0: 0.9999,
+            per_format: false,
+        }
+        .resolve(0, 128, Format::F16);
+    }
+
+    #[test]
+    fn validation_rules() {
+        let v = |p: &BetaPolicy, heads: usize| p.validate(heads, 128, Format::F16);
+        assert!(v(&BetaPolicy::Uniform(0.984497), 8).is_ok());
+        assert!(v(&BetaPolicy::Uniform(0.0), 8).is_ok()); // FA2 degradation
+        assert!(v(&BetaPolicy::Uniform(1.0), 8).is_err()); // singular M
+        assert!(v(&BetaPolicy::Uniform(-0.1), 8).is_err());
+        assert!(v(&BetaPolicy::Uniform(f64::NAN), 8).is_err());
+        assert!(v(&BetaPolicy::PerHead(vec![]), 2).is_err());
+        assert!(v(&BetaPolicy::PerHead(vec![0.9]), 8).is_ok()); // broadcast
+        assert!(v(&BetaPolicy::PerHead(vec![0.9; 8]), 8).is_ok());
+        assert!(v(&BetaPolicy::PerHead(vec![0.9; 3]), 8).is_err());
+        let solved = |beta0: f64| BetaPolicy::Solved {
+            beta0,
+            per_format: false,
+        };
+        assert!(v(&solved(0.99), 4).is_ok());
+        assert!(v(&solved(1.5), 4).is_err());
+        // A seed at the FP16 fixed-point pole is a *validation* error —
+        // callers learn before dispatch, not via a mid-forward panic.
+        assert!(v(&solved(0.9999), 4).is_err());
+    }
+
+    #[test]
+    fn resolved_maps_solved_to_the_concrete_uniform() {
+        // Install-time resolution: Solved collapses to Uniform(solved β),
+        // other variants pass through; the pole seed surfaces as Err.
+        let solved = BetaPolicy::Solved {
+            beta0: 1.0 - 2f64.powi(-6),
+            per_format: false,
+        };
+        let expect = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::F16, 1e-10, 500).beta;
+        assert_eq!(
+            solved.resolved(128, Format::F16).unwrap(),
+            BetaPolicy::Uniform(expect)
+        );
+        let uni = BetaPolicy::Uniform(0.9375);
+        assert_eq!(uni.resolved(128, Format::F16).unwrap(), uni);
+        let pole = BetaPolicy::Solved {
+            beta0: 0.9999,
+            per_format: false,
+        };
+        assert!(pole.resolved(128, Format::F16).is_err());
+    }
+
+    #[test]
+    fn default_is_the_paper_beta() {
+        assert_eq!(BetaPolicy::default(), BetaPolicy::Uniform(PAPER_BETA));
+    }
+}

@@ -12,6 +12,7 @@
 
 use super::config::{Allocation, AttentionConfig, BlockSizes};
 use super::kernel::KernelRegistry;
+use super::policy::BetaPolicy;
 use crate::numerics::Format;
 use crate::tensor::{matmul_nt, GemmPrecision, GemmStats, Matrix};
 use crate::workloads::{AttentionCase, MultiHeadCase};
@@ -316,6 +317,13 @@ impl HeadStats {
 pub struct AttentionOutput {
     pub heads: Vec<Matrix>,
     pub stats: Vec<HeadStats>,
+    /// The overflow boundary of the format S was stored in — what the
+    /// per-head `overflow_events` were instrumented against (65504 for
+    /// the FP16 allocations, 448 for FP8-E4M3, f32::MAX for Fa32; the
+    /// golden reference instruments against FP16). Carried so the guard
+    /// compares score *pressure* against the active allocation's limit
+    /// instead of a hardcoded constant.
+    pub score_boundary: f32,
 }
 
 impl AttentionOutput {
@@ -362,20 +370,28 @@ pub struct AttentionRequest {
     /// Value matrices, one per KV head: (s2 × dv).
     pub v: Vec<Matrix>,
     pub mask: AttnMask,
-    /// Precision allocation, tiling and β.
+    /// Precision allocation, tiling and the uniform-β fallback.
     pub cfg: AttentionConfig,
+    /// How PASA's β is assigned across query heads. Kept in lockstep with
+    /// `cfg.beta` by the builders: [`Self::with_beta`] sets both, and a
+    /// `Uniform` policy always mirrors the scalar — so the free-function
+    /// kernels (which read `cfg.beta`) and the policy-resolving kernel
+    /// layer can never disagree.
+    pub policy: BetaPolicy,
 }
 
 impl AttentionRequest {
     /// Empty request; add heads with [`Self::with_head`] /
     /// [`Self::with_query_head`] + [`Self::with_kv_head`].
     pub fn new(alloc: Allocation) -> AttentionRequest {
+        let cfg = AttentionConfig::new(alloc);
         AttentionRequest {
             q: Vec::new(),
             k: Vec::new(),
             v: Vec::new(),
             mask: AttnMask::None,
-            cfg: AttentionConfig::new(alloc),
+            policy: BetaPolicy::Uniform(cfg.beta),
+            cfg,
         }
     }
 
@@ -391,6 +407,7 @@ impl AttentionRequest {
             k: vec![case.k.clone()],
             v: vec![case.v.clone()],
             mask: AttnMask::None,
+            policy: BetaPolicy::Uniform(cfg.beta),
             cfg,
         }
     }
@@ -403,12 +420,14 @@ impl AttentionRequest {
         } else {
             AttnMask::Padded(mh.kv_lens.clone())
         };
+        let cfg = AttentionConfig::new(alloc);
         AttentionRequest {
             q: mh.q.clone(),
             k: mh.k.clone(),
             v: mh.v.clone(),
             mask,
-            cfg: AttentionConfig::new(alloc),
+            policy: BetaPolicy::Uniform(cfg.beta),
+            cfg,
         }
     }
 
@@ -443,8 +462,20 @@ impl AttentionRequest {
         self
     }
 
+    /// Set a uniform β (scalar and policy stay in lockstep).
     pub fn with_beta(mut self, beta: f64) -> Self {
         self.cfg.beta = beta;
+        self.policy = BetaPolicy::Uniform(beta);
+        self
+    }
+
+    /// Install a β policy; a `Uniform` policy also updates the legacy
+    /// scalar `cfg.beta` so both views of the request agree.
+    pub fn with_policy(mut self, policy: BetaPolicy) -> Self {
+        if let BetaPolicy::Uniform(b) = policy {
+            self.cfg.beta = b;
+        }
+        self.policy = policy;
         self
     }
 
@@ -519,6 +550,34 @@ impl AttentionRequest {
     /// Resolved mask for query head `h`.
     pub fn mask_for_head(&self, h: usize) -> HeadMask {
         self.mask.for_head(h)
+    }
+
+    /// β for query head `h`, resolved from the request's [`BetaPolicy`]
+    /// against the KV block width and the allocation's score format.
+    pub fn beta_for(&self, h: usize) -> f64 {
+        self.policy
+            .resolve(h, self.cfg.blocks.s2, self.cfg.alloc.score_fmt())
+    }
+
+    /// The per-head kernel config: the request's config with β resolved
+    /// for head `h` — what the kernel layer hands the inner cores, so
+    /// they keep consuming one scalar β each. Under a `Uniform` policy
+    /// this is bit-identical to `cfg`.
+    pub fn head_cfg(&self, h: usize) -> AttentionConfig {
+        let mut c = self.cfg;
+        c.beta = self.beta_for(h);
+        c
+    }
+
+    /// Per-head configs for every query head, with head-invariant
+    /// policies (`Uniform`, `Solved`) resolved **once** and reused — a
+    /// `Solved` policy costs one fixed-point solve per request, not one
+    /// per head. This is what the kernels call before fan-out.
+    pub fn head_cfgs(&self) -> Vec<AttentionConfig> {
+        match &self.policy {
+            BetaPolicy::PerHead(_) => (0..self.n_heads()).map(|h| self.head_cfg(h)).collect(),
+            _ => vec![self.head_cfg(0); self.n_heads()],
+        }
     }
 
     /// Raw (unshifted, unmasked) score matrix S = Q·Kᵀ of head `h` in f32
@@ -615,6 +674,8 @@ impl AttentionRequest {
         if self.cfg.blocks.s1 == 0 || self.cfg.blocks.s2 == 0 {
             return Err("zero block size".into());
         }
+        self.policy
+            .validate(self.q.len(), self.cfg.blocks.s2, self.cfg.alloc.score_fmt())?;
         Ok(())
     }
 
@@ -849,9 +910,34 @@ mod tests {
         assert_eq!(req.cfg.blocks.s1, 32);
         assert_eq!(req.cfg.blocks.s2, 16);
         assert_eq!(req.cfg.beta, 0.9375);
+        assert_eq!(req.policy, BetaPolicy::Uniform(0.9375));
         assert_eq!(req.mask, AttnMask::Causal);
         let req = req.with_alloc(Allocation::Fa32);
         assert_eq!(req.cfg.alloc, Allocation::Fa32);
+    }
+
+    #[test]
+    fn beta_policy_resolves_per_head_and_validates() {
+        let c = case(8, 8, 4, 5);
+        let mut req = AttentionRequest::new(Allocation::Pasa16)
+            .with_kv_head(c.k.clone(), c.v.clone())
+            .with_query_head(c.q.clone())
+            .with_query_head(c.q.clone());
+        // Default: uniform paper β, head_cfg bit-identical to cfg.
+        assert_eq!(req.beta_for(0), req.cfg.beta);
+        assert_eq!(req.head_cfg(1).beta, req.cfg.beta);
+        // Per-head table resolves per head; head_cfg carries it through.
+        req = req.with_policy(BetaPolicy::PerHead(vec![0.9375, 0.96875]));
+        assert!(req.validate().is_ok());
+        assert_eq!(req.beta_for(0), 0.9375);
+        assert_eq!(req.head_cfg(1).beta, 0.96875);
+        // Wrong-length table is a validation error, not a clamp.
+        let bad = req.clone().with_policy(BetaPolicy::PerHead(vec![0.9; 5]));
+        assert!(bad.validate().is_err());
+        // A Uniform policy keeps cfg.beta in lockstep.
+        let uni = req.with_policy(BetaPolicy::Uniform(0.5));
+        assert_eq!(uni.cfg.beta, 0.5);
+        assert_eq!(uni.beta_for(1), 0.5);
     }
 
     #[test]

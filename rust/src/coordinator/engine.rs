@@ -7,7 +7,11 @@
 //!   2. one decode step per active slot (grouped per allocation on the
 //!      PJRT backend; per-slot paged requests on the lab backend),
 //!   3. guard inspection ⇒ replay the step under PASA (functional
-//!      cache-in/cache-out makes replay exact), pin the slot,
+//!      cache-in/cache-out makes replay exact), pin the slot. Under the
+//!      [`GuardPolicy::Preemptive`] knob the pin fires on score
+//!      *pressure* (max |S| approaching the active format's overflow
+//!      boundary) with **no replay** — the pressured step's outputs are
+//!      still exact, so only subsequent steps change allocation,
 //!   4. sample, write the new KV row back into the paged cache, retire
 //!      finished requests.
 //!
@@ -76,6 +80,18 @@ pub enum Backend<'rt> {
 /// message that carries it.
 fn is_kv_backpressure(e: &anyhow::Error) -> bool {
     KvPool::is_exhausted_error(e)
+}
+
+/// Observe a step signal on a guard, folding any pin into the engine
+/// metrics; returns whether the step must be replayed under PASA. The
+/// guard's own `switches` counter is the source of truth for pin events
+/// (a `Preemptive` pressure pin increments it without requesting a
+/// replay), so the metric can never drift from the guard state.
+fn observe_guard(guard: &mut Guard, sig: &GuardSignal, metrics: &mut Metrics) -> bool {
+    let before = guard.switches;
+    let replay = guard.observe_signal(sig);
+    metrics.guard_switches += (guard.switches - before) as u64;
+    replay
 }
 
 struct ActiveRequest {
@@ -331,9 +347,8 @@ impl<'rt> Engine<'rt> {
         let v = d.vocab_size;
         let last_row = &out.logits[(n - 1) * v..n * v];
         let sig = GuardSignal::from_logits(last_row);
-        if guard.observe_signal(&sig) {
+        if observe_guard(&mut guard, &sig, &mut self.metrics) {
             self.metrics.overflow_steps += 1;
-            self.metrics.guard_switches += 1;
             out = rt
                 .prefill(guard.allocation(), &ids, n)
                 .context("prefill replay under PASA")?;
@@ -399,9 +414,8 @@ impl<'rt> Engine<'rt> {
         // Guard on the kernels' pre-store telemetry (max |S| / overflow
         // events at the score GEMM) — trouble is visible before any NaN
         // reaches the logits.
-        if guard.observe_signal(&out.signal) {
+        if observe_guard(&mut guard, &out.signal, &mut self.metrics) {
             self.metrics.overflow_steps += 1;
-            self.metrics.guard_switches += 1;
             out = model
                 .prefill(Allocation::Pasa16, &ids, n)
                 .context("lab prefill replay under PASA")?;
@@ -561,8 +575,7 @@ impl<'rt> Engine<'rt> {
                 self.metrics.overflow_steps += 1;
             }
 
-            if s.guard.observe_signal(&sig) {
-                self.metrics.guard_switches += 1;
+            if observe_guard(&mut s.guard, &sig, &mut self.metrics) {
                 // Replay this slot's step under PASA. The step is
                 // functional in (token, pos, cache prefix), so the replay
                 // rewrites the same KV rows — the cache ends up exactly as
@@ -661,9 +674,8 @@ impl<'rt> Engine<'rt> {
         for &i in &members {
             let sig = GuardSignal::from_logits(&logits[i * v..(i + 1) * v]);
             let s = self.slots[i].as_mut().unwrap();
-            if s.guard.observe_signal(&sig) {
+            if observe_guard(&mut s.guard, &sig, &mut self.metrics) {
                 replay = true;
-                self.metrics.guard_switches += 1;
             }
             if sig.nonfinite > 0 {
                 self.metrics.overflow_steps += 1;

@@ -21,7 +21,7 @@ use crate::attention::AttentionOutput;
 use crate::numerics::Format;
 
 /// Overflow telemetry for one engine step.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct GuardSignal {
     /// Pre-store score values beyond the low-precision overflow boundary.
     pub overflow_events: usize,
@@ -29,45 +29,91 @@ pub struct GuardSignal {
     pub max_abs_score: f32,
     /// Non-finite values observed in outputs/logits.
     pub nonfinite: usize,
+    /// Overflow boundary of the format the scores were stored in — read
+    /// off `AttentionOutput::score_boundary` (65504 for the FP16
+    /// allocations, 448 for FP8-E4M3). Pressure checks compare
+    /// `max_abs_score` against a *fraction of this boundary*, so the
+    /// guard follows the active allocation's limit instead of a
+    /// hardcoded constant.
+    pub boundary: f32,
+}
+
+impl Default for GuardSignal {
+    /// The empty signal: clean, with a neutral boundary (f32::MAX — the
+    /// identity of the min-fold in [`GuardSignal::merge`], so a default
+    /// accumulator adopts the first real layer signal's boundary).
+    fn default() -> Self {
+        GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 0.0,
+            nonfinite: 0,
+            boundary: f32::MAX,
+        }
+    }
 }
 
 impl GuardSignal {
-    /// Legacy signal from a logits row: counts non-finite entries.
+    /// Legacy signal from a logits row: counts non-finite entries. The
+    /// boundary defaults to FP16's — the format the legacy low-precision
+    /// pipelines stored scores in.
     pub fn from_logits(logits: &[f32]) -> GuardSignal {
         GuardSignal {
             overflow_events: 0,
             max_abs_score: 0.0,
             nonfinite: logits.iter().filter(|x| !x.is_finite()).count(),
+            boundary: Format::F16.overflow_boundary() as f32,
         }
     }
 
-    /// Rich signal from the attention lab's per-head kernel telemetry.
+    /// Rich signal from the attention lab's per-head kernel telemetry,
+    /// carrying the allocation's own overflow boundary.
     pub fn from_attention(out: &AttentionOutput) -> GuardSignal {
         GuardSignal {
             overflow_events: out.overflow_events(),
             max_abs_score: out.max_abs_score(),
             nonfinite: out.nonfinite_outputs(),
+            boundary: out.score_boundary,
         }
     }
 
-    /// No overflow, no poisoning, no score above `score_limit`.
-    pub fn is_clean(&self, score_limit: f32) -> bool {
-        self.nonfinite == 0 && self.overflow_events == 0 && self.max_abs_score <= score_limit
+    /// Score pressure as a fraction of the active format's overflow
+    /// boundary (1.0 = at the boundary).
+    pub fn pressure(&self) -> f32 {
+        self.max_abs_score / self.boundary
+    }
+
+    /// No overflow, no poisoning, and pressure at or below `limit_frac`
+    /// of the active format's overflow boundary (1.0 = trip only past
+    /// the boundary itself).
+    pub fn is_clean(&self, limit_frac: f32) -> bool {
+        self.nonfinite == 0
+            && self.overflow_events == 0
+            && self.max_abs_score <= limit_frac * self.boundary
     }
 
     /// Fold another signal in (e.g. one per transformer layer of a decode
-    /// step): event counts add, the score maximum is the max.
+    /// step): event counts add, the score maximum is the max, the
+    /// boundary is the tightest seen (layers of one step share one
+    /// allocation, so in practice the boundaries agree; min is the
+    /// conservative fold if they ever differ).
     pub fn merge(&mut self, o: &GuardSignal) {
         self.overflow_events += o.overflow_events;
         self.nonfinite += o.nonfinite;
         if o.max_abs_score > self.max_abs_score {
             self.max_abs_score = o.max_abs_score;
         }
+        if o.boundary < self.boundary {
+            self.boundary = o.boundary;
+        }
     }
 }
 
+/// Default pressure trip point of the pre-emptive guard: pin PASA once
+/// max |S| crosses this fraction of the active format's overflow boundary.
+pub const DEFAULT_PREEMPTIVE_FRAC: f32 = 0.85;
+
 /// Which attention allocation the engine should run next for a request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum GuardPolicy {
     /// Always run PASA (the paper's robust default).
     AlwaysPasa,
@@ -76,7 +122,17 @@ pub enum GuardPolicy {
     /// Full-precision FA reference.
     AlwaysFa32,
     /// Start on FA16-32, switch to PASA on overflow (sticky per request).
+    /// The tripped step already stored a poisoned score, so it is
+    /// *replayed* under PASA.
     Adaptive,
+    /// Start on FA16-32 and pin PASA on score *pressure*: once max |S|
+    /// crosses `score_limit_frac` of the active format's overflow
+    /// boundary, before the first poisoned step. A pressure-only trip
+    /// needs **no replay** — the tripping step's outputs are still exact;
+    /// only subsequent steps change allocation. (If damage somehow lands
+    /// first — e.g. a single-step jump straight past the boundary — the
+    /// step is replayed like Adaptive.)
+    Preemptive { score_limit_frac: f32 },
 }
 
 impl GuardPolicy {
@@ -86,6 +142,9 @@ impl GuardPolicy {
             "fa16_32" | "fa16" => Some(GuardPolicy::AlwaysFa16),
             "fa32" => Some(GuardPolicy::AlwaysFa32),
             "adaptive" => Some(GuardPolicy::Adaptive),
+            "preemptive" => Some(GuardPolicy::Preemptive {
+                score_limit_frac: DEFAULT_PREEMPTIVE_FRAC,
+            }),
             _ => None,
         }
     }
@@ -96,27 +155,40 @@ impl GuardPolicy {
 pub struct Guard {
     policy: GuardPolicy,
     pinned_pasa: bool,
-    /// Pre-emptive trip point for max |S| (default: the FP16 overflow
-    /// boundary — scores past it *did* overflow a low-precision store).
-    score_limit: f32,
+    /// Trip point for max |S| as a fraction of the signal's format
+    /// boundary (1.0 = trip only past the boundary itself; the
+    /// `Preemptive` policy installs its `score_limit_frac` here).
+    score_limit_frac: f32,
     pub switches: usize,
 }
 
 impl Guard {
     pub fn new(policy: GuardPolicy) -> Guard {
+        let score_limit_frac = match policy {
+            GuardPolicy::Preemptive { score_limit_frac } => score_limit_frac,
+            _ => 1.0,
+        };
         Guard {
             policy,
             pinned_pasa: false,
-            score_limit: Format::F16.overflow_boundary() as f32,
+            score_limit_frac,
             switches: 0,
         }
     }
 
-    /// Lower the score trip point below the FP16 boundary (e.g. 0.9×65504)
-    /// to switch on overflow *pressure* before the first poisoned step.
-    pub fn with_score_limit(mut self, limit: f32) -> Guard {
-        self.score_limit = limit;
+    /// Lower the score trip point to a fraction of the active format's
+    /// overflow boundary (e.g. 0.9) to switch on overflow *pressure*
+    /// before the first poisoned step.
+    pub fn with_score_limit_frac(mut self, frac: f32) -> Guard {
+        self.score_limit_frac = frac;
         self
+    }
+
+    /// Legacy absolute trip point on the FP16 scale (e.g. 0.9×65504);
+    /// converted to a boundary fraction so signals from other formats
+    /// (FP8's 448) scale correctly.
+    pub fn with_score_limit(self, limit: f32) -> Guard {
+        self.with_score_limit_frac(limit / Format::F16.overflow_boundary() as f32)
     }
 
     /// Allocation to use for the next step.
@@ -125,7 +197,7 @@ impl Guard {
             GuardPolicy::AlwaysPasa => "pasa",
             GuardPolicy::AlwaysFa16 => "fa16_32",
             GuardPolicy::AlwaysFa32 => "fa32",
-            GuardPolicy::Adaptive => {
+            GuardPolicy::Adaptive | GuardPolicy::Preemptive { .. } => {
                 if self.pinned_pasa {
                     "pasa"
                 } else {
@@ -136,9 +208,12 @@ impl Guard {
     }
 
     /// Inspect a step's telemetry; returns true if the step must be
-    /// replayed under PASA (adaptive mode only).
+    /// replayed under PASA. Adaptive replays any unclean step; Preemptive
+    /// pins PASA on pure score pressure *without* a replay (the step's
+    /// outputs are still exact) and replays only when damage — a pre-store
+    /// overflow or a non-finite output — already landed.
     pub fn observe_signal(&mut self, sig: &GuardSignal) -> bool {
-        if sig.is_clean(self.score_limit) {
+        if sig.is_clean(self.score_limit_frac) {
             return false;
         }
         match self.policy {
@@ -146,6 +221,11 @@ impl Guard {
                 self.pinned_pasa = true;
                 self.switches += 1;
                 true
+            }
+            GuardPolicy::Preemptive { .. } if !self.pinned_pasa => {
+                self.pinned_pasa = true;
+                self.switches += 1;
+                sig.overflow_events > 0 || sig.nonfinite > 0
             }
             _ => false, // nothing left to switch to — surface the NaNs
         }
@@ -197,6 +277,12 @@ mod tests {
     fn parse_policies() {
         assert_eq!(GuardPolicy::parse("adaptive"), Some(GuardPolicy::Adaptive));
         assert_eq!(GuardPolicy::parse("pasa"), Some(GuardPolicy::AlwaysPasa));
+        assert_eq!(
+            GuardPolicy::parse("preemptive"),
+            Some(GuardPolicy::Preemptive {
+                score_limit_frac: DEFAULT_PREEMPTIVE_FRAC
+            })
+        );
         assert_eq!(GuardPolicy::parse("nope"), None);
     }
 
@@ -211,6 +297,9 @@ mod tests {
             GuardPolicy::AlwaysFa16,
             GuardPolicy::AlwaysFa32,
             GuardPolicy::Adaptive,
+            GuardPolicy::Preemptive {
+                score_limit_frac: 0.8,
+            },
         ] {
             let mut g = Guard::new(policy);
             assert!(
@@ -236,6 +325,7 @@ mod tests {
             overflow_events: 3,
             max_abs_score: 9.0e4,
             nonfinite: 0,
+            boundary: 65504.0,
         };
         assert!(g.observe_signal(&sig));
         assert_eq!(g.allocation(), "pasa");
@@ -244,17 +334,80 @@ mod tests {
     #[test]
     fn score_limit_is_preemptive() {
         // With a lowered limit, pure score pressure (no overflow yet)
-        // trips the guard.
-        let mut g = Guard::new(GuardPolicy::Adaptive).with_score_limit(0.9 * 65504.0);
+        // trips the guard. The legacy absolute spelling converts onto the
+        // fractional scale.
         let pressure = GuardSignal {
             overflow_events: 0,
             max_abs_score: 60000.0,
             nonfinite: 0,
+            boundary: 65504.0,
         };
+        let mut g = Guard::new(GuardPolicy::Adaptive).with_score_limit(0.9 * 65504.0);
+        assert!(g.observe_signal(&pressure));
+        let mut g = Guard::new(GuardPolicy::Adaptive).with_score_limit_frac(0.9);
         assert!(g.observe_signal(&pressure));
         // Default limit would not have tripped.
         let mut g = Guard::new(GuardPolicy::Adaptive);
         assert!(!g.observe_signal(&pressure));
+    }
+
+    #[test]
+    fn preemptive_pins_on_pressure_without_replay() {
+        // Pure pressure (no overflow, no NaN): the pre-emptive guard pins
+        // PASA for subsequent steps but does NOT ask for a replay — the
+        // pressured step's outputs are still exact.
+        let mut g = Guard::new(GuardPolicy::Preemptive {
+            score_limit_frac: 0.8,
+        });
+        assert_eq!(g.allocation(), "fa16_32");
+        let pressure = GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 60000.0, // 0.916 of 65504
+            nonfinite: 0,
+            boundary: 65504.0,
+        };
+        assert!(!g.observe_signal(&pressure), "pressure must not replay");
+        assert!(g.is_pinned());
+        assert_eq!(g.allocation(), "pasa");
+        assert_eq!(g.switches, 1);
+        // ... but if damage lands in one jump, Preemptive replays like
+        // Adaptive.
+        let mut g = Guard::new(GuardPolicy::Preemptive {
+            score_limit_frac: 0.8,
+        });
+        let damage = GuardSignal {
+            overflow_events: 4,
+            max_abs_score: 1.2e5,
+            nonfinite: 0,
+            boundary: 65504.0,
+        };
+        assert!(g.observe_signal(&damage), "damage must replay");
+        assert_eq!(g.allocation(), "pasa");
+    }
+
+    #[test]
+    fn pressure_scales_to_the_active_format_boundary() {
+        // The same |S| peak is clean under an FP16 boundary and pressured
+        // under FP8's 448 — the signal's own boundary, not a hardcoded
+        // 65504, decides.
+        let f16 = GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 300.0,
+            nonfinite: 0,
+            boundary: 65504.0,
+        };
+        assert!(f16.is_clean(0.8));
+        let fp8 = GuardSignal {
+            boundary: 448.0,
+            ..f16
+        };
+        assert!(!fp8.is_clean(0.8)); // 300 > 0.8 · 448
+        assert!((fp8.pressure() - 300.0 / 448.0).abs() < 1e-6);
+        let mut g = Guard::new(GuardPolicy::Preemptive {
+            score_limit_frac: 0.8,
+        });
+        assert!(!g.observe_signal(&fp8), "pressure pin, no replay");
+        assert!(g.is_pinned());
     }
 
     #[test]
@@ -263,23 +416,32 @@ mod tests {
             overflow_events: 1,
             max_abs_score: 100.0,
             nonfinite: 0,
+            boundary: 65504.0,
         };
         a.merge(&GuardSignal {
             overflow_events: 2,
             max_abs_score: 7.0e4,
             nonfinite: 3,
+            boundary: 65504.0,
         });
         assert_eq!(a.overflow_events, 3);
         assert_eq!(a.nonfinite, 3);
         assert_eq!(a.max_abs_score, 7.0e4);
-        assert!(!a.is_clean(65504.0));
+        assert_eq!(a.boundary, 65504.0);
+        assert!(!a.is_clean(1.0));
+        // A default accumulator adopts the first real boundary (min-fold
+        // identity), the lab runtime's per-layer merge pattern.
+        let mut acc = GuardSignal::default();
+        assert!(acc.is_clean(1.0));
+        acc.merge(&a);
+        assert_eq!(acc.boundary, 65504.0);
     }
 
     #[test]
     fn signal_from_logits_counts_nonfinite() {
         let sig = GuardSignal::from_logits(&[1.0, f32::NAN, f32::INFINITY, 2.0]);
         assert_eq!(sig.nonfinite, 2);
-        assert!(!sig.is_clean(65504.0));
-        assert!(GuardSignal::from_logits(&[0.5, -0.5]).is_clean(65504.0));
+        assert!(!sig.is_clean(1.0));
+        assert!(GuardSignal::from_logits(&[0.5, -0.5]).is_clean(1.0));
     }
 }

@@ -9,7 +9,7 @@ pub mod request;
 pub mod router;
 
 pub use engine::{Backend, Engine, EngineConfig};
-pub use guard::{Guard, GuardPolicy, GuardSignal};
+pub use guard::{Guard, GuardPolicy, GuardSignal, DEFAULT_PREEMPTIVE_FRAC};
 pub use kv_cache::{KvPool, SeqCache};
 pub use metrics::{Histogram, Metrics};
 pub use request::{Completion, FinishReason, GenParams, Phase, Priority, Request};

@@ -1,0 +1,209 @@
+//! Guard-policy experiment: rescue rate vs replay cost across the
+//! resonance trace generators (the paper's Qwen2 / SVD overflow stand-ins).
+//!
+//! Setup: each trace's Q side is ramped linearly over `STEPS` steps, so
+//! the raw score peak sweeps from benign, through the pre-overflow
+//! *pressure* window, past the FP16 boundary — the serving trajectory the
+//! pre-emptive guard is built for. Every policy walks the same ramp with
+//! its own [`Guard`], consuming kernel telemetry exactly like the engine:
+//!
+//! * **replays** — steps run twice (FA tripped, PASA replayed): the
+//!   latency cost of reacting *after* damage;
+//! * **damaged** — steps whose served output still carried overflow
+//!   events or non-finite values: the accuracy cost of no guard;
+//! * **rescued** — steps where the FA16-32 counterfactual overflows but
+//!   the served output is clean: the benefit;
+//! * **pinned@** — the ramp step at which the policy pinned PASA.
+//!
+//! The pre-emptive rows pin inside the pressure window, so they reach the
+//! overflow region already on PASA: same rescue rate as Adaptive, zero
+//! replays.
+
+use super::ExpOptions;
+use crate::attention::{Allocation, AttentionRequest};
+use crate::coordinator::{Guard, GuardPolicy, GuardSignal};
+use crate::workloads::{all_traces, AttentionCase};
+
+/// Ramp steps per trace.
+const STEPS: usize = 8;
+
+/// The policies compared (name, policy).
+fn policies() -> Vec<(&'static str, GuardPolicy)> {
+    vec![
+        ("always-fa16_32", GuardPolicy::AlwaysFa16),
+        ("adaptive", GuardPolicy::Adaptive),
+        (
+            "preemptive(0.5)",
+            GuardPolicy::Preemptive {
+                score_limit_frac: 0.5,
+            },
+        ),
+        (
+            "preemptive(0.75)",
+            GuardPolicy::Preemptive {
+                score_limit_frac: 0.75,
+            },
+        ),
+        ("always-pasa", GuardPolicy::AlwaysPasa),
+    ]
+}
+
+/// One policy's tallies over a ramp.
+#[derive(Clone, Debug, Default)]
+pub struct RescueRow {
+    pub replays: usize,
+    pub damaged: usize,
+    pub rescued: usize,
+    pub pinned_at: Option<usize>,
+}
+
+/// Scale a case's Q side by `r` (scores scale linearly in Q).
+fn scaled(case: &AttentionCase, r: f32) -> AttentionCase {
+    let mut c = case.clone();
+    for v in &mut c.q.data {
+        *v *= r;
+    }
+    c
+}
+
+/// Walk one ramp under one policy, consuming kernel telemetry like the
+/// serving engine. `cf_overflow[t]` is the FA16-32 counterfactual: would
+/// step `t` have overflowed the fast path?
+pub fn walk_ramp(
+    policy: GuardPolicy,
+    steps: &[AttentionCase],
+    cf_overflow: &[bool],
+) -> RescueRow {
+    let mut guard = Guard::new(policy);
+    let mut row = RescueRow::default();
+    for (t, c) in steps.iter().enumerate() {
+        let alloc = Allocation::parse(guard.allocation()).expect("guard maps to the lab");
+        let req = AttentionRequest::from_case(c, alloc).with_fp16_inputs();
+        let mut out = req.run();
+        let mut sig = GuardSignal::from_attention(&out);
+        let was_pinned = guard.is_pinned();
+        if guard.observe_signal(&sig) {
+            row.replays += 1;
+            out = req.with_alloc(Allocation::Pasa16).run();
+            sig = GuardSignal::from_attention(&out);
+        }
+        if guard.is_pinned() && !was_pinned {
+            row.pinned_at = Some(t);
+        }
+        if !sig.is_clean(1.0) {
+            row.damaged += 1;
+        } else if cf_overflow[t] {
+            row.rescued += 1;
+        }
+    }
+    row
+}
+
+/// Build the ramp (shared across policies) and its FA16-32 counterfactual.
+pub fn build_ramp(case: &AttentionCase) -> (Vec<AttentionCase>, Vec<bool>) {
+    let steps: Vec<AttentionCase> = (0..STEPS)
+        .map(|t| scaled(case, (t + 1) as f32 / STEPS as f32))
+        .collect();
+    let cf: Vec<bool> = steps
+        .iter()
+        .map(|c| {
+            let out = AttentionRequest::from_case(c, Allocation::Fa16_32)
+                .with_fp16_inputs()
+                .run();
+            !GuardSignal::from_attention(&out).is_clean(1.0)
+        })
+        .collect();
+    (steps, cf)
+}
+
+/// The experiment report: one table per trace.
+pub fn guard_rescue(opts: &ExpOptions) -> String {
+    let mut out = String::from(
+        "# guard_rescue — rescue rate vs replay cost, ramped resonance traces\n",
+    );
+    let s = (opts.seq / 10).clamp(48, 256);
+    for trace in all_traces(opts.trace_scale) {
+        let mut spec = trace.spec.clone();
+        spec.s1 = s;
+        spec.s2 = s;
+        let (steps, cf) = build_ramp(&spec.generate(opts.seed));
+        let overflow_steps = cf.iter().filter(|&&b| b).count();
+        out.push_str(&format!(
+            "\n## {} (s={s}, d={}, {} of {STEPS} ramp steps overflow FA16-32)\n",
+            trace.name, spec.d, overflow_steps
+        ));
+        out.push_str("| policy | pinned@ | replays | damaged | rescued |\n");
+        for (name, policy) in policies() {
+            let r = walk_ramp(policy, &steps, &cf);
+            out.push_str(&format!(
+                "| {name} | {} | {} | {} | {}/{overflow_steps} |\n",
+                r.pinned_at.map_or("-".into(), |t| t.to_string()),
+                r.replays,
+                r.damaged,
+                r.rescued
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::qwen2_overflow_trace;
+
+    #[test]
+    fn preemptive_rescues_without_replays_where_adaptive_replays() {
+        // The acceptance shape: on a ramp that crosses the FP16 boundary,
+        // Adaptive pays >= 1 replay for a clean stream; Preemptive(0.5)
+        // pins inside the pressure window — zero replays, zero damage,
+        // same rescues. AlwaysFa16 takes the damage.
+        let mut spec = qwen2_overflow_trace(16).spec;
+        spec.s1 = 48;
+        spec.s2 = 48;
+        let (steps, cf) = build_ramp(&spec.generate(3));
+        let overflow_steps = cf.iter().filter(|&&b| b).count();
+        assert!(overflow_steps >= 1, "ramp premise: the tail must overflow");
+        assert!(!cf[0], "ramp premise: the first step must be benign");
+
+        let adaptive = walk_ramp(GuardPolicy::Adaptive, &steps, &cf);
+        assert!(adaptive.replays >= 1, "adaptive must replay the trip step");
+        assert_eq!(adaptive.damaged, 0, "replay must clean the stream");
+
+        let pre = walk_ramp(
+            GuardPolicy::Preemptive {
+                score_limit_frac: 0.5,
+            },
+            &steps,
+            &cf,
+        );
+        assert_eq!(pre.replays, 0, "pressure pin must avoid every replay");
+        assert_eq!(pre.damaged, 0);
+        assert_eq!(pre.rescued, overflow_steps, "same rescues as adaptive");
+        assert!(
+            pre.pinned_at.unwrap() <= adaptive.pinned_at.unwrap(),
+            "preemptive must pin no later than adaptive"
+        );
+
+        let fa = walk_ramp(GuardPolicy::AlwaysFa16, &steps, &cf);
+        assert_eq!(fa.damaged, overflow_steps, "unguarded FA takes the damage");
+        assert_eq!(fa.replays, 0);
+    }
+
+    #[test]
+    fn report_renders_all_policies() {
+        let opts = ExpOptions {
+            heads: 1,
+            seq: 480,
+            dim: 64,
+            trace_scale: 32,
+            seed: 5,
+        };
+        let rep = guard_rescue(&opts);
+        for name in ["always-fa16_32", "adaptive", "preemptive(0.5)", "always-pasa"] {
+            assert!(rep.contains(name), "missing row {name}");
+        }
+        assert!(rep.contains("qwen2-7b"));
+        assert!(rep.contains("svd-img2vid"));
+    }
+}

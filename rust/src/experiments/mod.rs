@@ -12,8 +12,11 @@
 //!   fig9a/b — RMSE sweeps, uniform          (paper Fig. 9)
 //!   fig10a/b— RMSE sweeps, hybrid           (paper Fig. 10)
 //!   fig11..14 — cloud-map ranges, Qwen2/SVD (paper Figs. 11–14)
+//!   guard_rescue — pre-emptive vs adaptive guard: rescue rate / replay
+//!                  cost over ramped resonance traces (extension)
 
 pub mod cloudmap;
+pub mod guard_rescue;
 pub mod resonance_demo;
 pub mod rmse_sweep;
 pub mod shifting_stats;
@@ -65,6 +68,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<String> {
         "fig12" => cloudmap::fig_cloud("svd-img2vid", false, opts),
         "fig13" => cloudmap::fig_cloud("qwen2-7b", true, opts),
         "fig14" => cloudmap::fig_cloud("svd-img2vid", true, opts),
+        "guard_rescue" => guard_rescue::guard_rescue(opts),
         "all" => {
             let mut out = String::new();
             for id in ALL_EXPERIMENTS {
@@ -77,7 +81,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<String> {
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "table1", "table3", "table4", "fig5", "fig6", "fig7", "fig9a", "fig9b", "fig10a", "fig10b",
-    "fig11", "fig12", "fig13", "fig14",
+    "fig11", "fig12", "fig13", "fig14", "guard_rescue",
 ];

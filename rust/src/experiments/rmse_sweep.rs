@@ -171,4 +171,37 @@ mod tests {
         assert!(rmse_for(big, Allocation::Fa16_32, &opts).is_nan());
         assert!(!rmse_for(big, Allocation::Pasa16, &opts).is_nan());
     }
+
+    #[test]
+    fn fp8_allocation_rmse_sweep_vs_f32_golden() {
+        // The Allocation::Fp8 validation sweep: in the small-score regime
+        // the E4M3 score store tracks the f32 golden within its (coarse,
+        // eps = 6.25e-2) envelope — an order looser than the FP16 paths,
+        // but finite and bounded.
+        let opts = fast_opts();
+        for x0 in [0.0, 0.25] {
+            let dist = Distribution::Uniform { x0, am: 0.5 };
+            let e = rmse_for(dist, Allocation::Fp8, &opts);
+            assert!(!e.is_nan(), "x0={x0}: FP8 overflowed in the benign regime");
+            assert!(e < 0.3, "x0={x0}: FP8 rmse {e} beyond the E4M3 envelope");
+            // Sanity: the same data is far tighter under FP16 scores.
+            let e16 = rmse_for(dist, Allocation::Fa16_32, &opts);
+            assert!(e16 < 0.05, "x0={x0}: FA16-32 rmse {e16}");
+        }
+    }
+
+    #[test]
+    fn fp8_overflow_site_is_448_not_65504() {
+        // Scores near 512 sit comfortably inside FP16 but past E4M3's 448:
+        // the FP8 row must poison exactly where its own boundary says,
+        // while FA16-32 sails through.
+        let opts = fast_opts();
+        let dist = Distribution::Uniform { x0: 2.0, am: 0.25 };
+        assert!(
+            rmse_for(dist, Allocation::Fp8, &opts).is_nan(),
+            "S ≈ 2²·128 = 512 > 448 must overflow the E4M3 store"
+        );
+        assert!(!rmse_for(dist, Allocation::Fa16_32, &opts).is_nan());
+        assert!(!rmse_for(dist, Allocation::Pasa16, &opts).is_nan());
+    }
 }

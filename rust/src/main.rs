@@ -26,8 +26,10 @@ USAGE: pasa <subcommand> [flags]
 
   repro --exp <id|all> [--heads N] [--seq N] [--dim N] [--scale N] [--seed N]
         regenerate a paper table/figure (table1 table3 table4 fig5 fig6
-        fig7 fig9a fig9b fig10a fig10b fig11 fig12 fig13 fig14)
-  serve [--artifacts DIR] [--requests N] [--policy pasa|fa16_32|fa32|adaptive]
+        fig7 fig9a fig9b fig10a fig10b fig11 fig12 fig13 fig14
+        guard_rescue)
+  serve [--artifacts DIR] [--requests N]
+        [--policy pasa|fa16_32|fa32|adaptive|preemptive]
         [--max-new N] [--temperature T]
         run the serving engine over a synthetic prompt workload
   solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
@@ -126,15 +128,21 @@ fn cmd_solve_beta(args: &Args) -> Result<()> {
         "bf16" => Format::Bf16,
         other => bail!("unknown --fmt {other}"),
     };
-    let b = beta::solve_optimal_beta(init, n, fmt, 1e-10, 500);
-    println!("optimal beta for n={n}, {}: {b:.6}", fmt.name());
+    let s = beta::solve_optimal_beta(init, n, fmt, 1e-10, 500);
+    println!("optimal beta for n={n}, {}: {:.6}", fmt.name(), s.beta);
+    println!(
+        "  convergence: {} after {} iterations (residual {:.3e})",
+        if s.converged { "yes" } else { "NO" },
+        s.iterations,
+        s.residual
+    );
     println!(
         "  ideal invariant     beta/(1-beta) = {:.6}",
-        beta::ideal_invariant(b)
+        beta::ideal_invariant(s.beta)
     );
     println!(
         "  practical invariant (Eq. 20)      = {:.6}",
-        beta::practical_invariant(b, n, fmt)
+        beta::practical_invariant(s.beta, n, fmt)
     );
     Ok(())
 }

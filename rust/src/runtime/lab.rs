@@ -27,7 +27,7 @@
 //! [`NormMode::LayerNorm`].
 
 use crate::attention::{
-    Allocation, AttentionConfig, AttentionRequest, AttnMask, BlockSizes, KvPair, KvView,
+    Allocation, AttentionConfig, AttentionRequest, AttnMask, BetaPolicy, BlockSizes, KvPair, KvView,
 };
 use crate::coordinator::{GuardSignal, KvPool, SeqCache};
 use crate::model::{Manifest, ModelDims, Weights};
@@ -91,6 +91,14 @@ pub struct LabModel {
     pub norm: NormMode,
     /// Attention tiling handed to the lab kernels.
     pub blocks: BlockSizes,
+    /// β policy installed on every attention request this model builds —
+    /// the runtime-layer knob of the precision-policy subsystem (per-head
+    /// tables from the autotune pass, or the default uniform paper β).
+    /// Install a *concrete* policy (`Uniform`/`PerHead`): a `Solved`
+    /// policy is legal but re-runs its fixed-point solve on every layer
+    /// forward — pre-resolve it once with
+    /// [`BetaPolicy::resolved`]`(blocks.s2, fmt)` instead.
+    pub beta_policy: BetaPolicy,
 }
 
 fn randn(rng: &mut Pcg64, rows: usize, cols: usize, scale: f64) -> Matrix {
@@ -194,6 +202,7 @@ impl LabModel {
             lnf_b: get_vec(w, "lnf_b", d)?,
             norm: NormMode::LayerNorm,
             blocks: BlockSizes::default(),
+            beta_policy: BetaPolicy::default(),
         })
     }
 
@@ -240,6 +249,7 @@ impl LabModel {
             lnf_b: vec![0.0; d],
             norm: NormMode::LayerNorm,
             blocks: BlockSizes::default(),
+            beta_policy: BetaPolicy::default(),
         }
     }
 
@@ -285,6 +295,7 @@ impl LabModel {
         let dh = self.dims.d_head;
         let mut req = AttentionRequest::new(alloc).with_mask(mask);
         req.cfg = self.attn_config(alloc);
+        req = req.with_policy(self.beta_policy.clone());
         for h in 0..self.dims.n_heads {
             req = req.with_query_head(q_full.cols_slice(h * dh, (h + 1) * dh));
         }
@@ -463,6 +474,33 @@ mod tests {
             .decode_step(Allocation::Pasa16, 42, 0, &mut cache, &mut pool)
             .unwrap();
         assert_eq!(l1, l2);
+        cache.release(&mut pool);
+    }
+
+    #[test]
+    fn beta_policy_plumbs_through_the_decode_path() {
+        // A PerHead table repeating the paper β must be bit-identical to
+        // the default Uniform policy (the per-head resolution collapses to
+        // the shared-K' path); a genuinely per-head table still decodes to
+        // finite logits.
+        use crate::attention::PAPER_BETA;
+        let mut m = LabModel::synthetic(tiny_dims(), 10);
+        let mut pool = KvPool::new(64, 4, 16);
+        let mut cache = SeqCache::new(2);
+        let (base, _) = m
+            .decode_step(Allocation::Pasa16, 7, 0, &mut cache, &mut pool)
+            .unwrap();
+        m.beta_policy = BetaPolicy::PerHead(vec![PAPER_BETA; 2]);
+        let (same, _) = m
+            .decode_step(Allocation::Pasa16, 7, 0, &mut cache, &mut pool)
+            .unwrap();
+        assert_eq!(base, same, "uniform-valued PerHead diverged from Uniform");
+        m.beta_policy = BetaPolicy::PerHead(vec![0.9375, 0.984497]);
+        let (mixed, sig) = m
+            .decode_step(Allocation::Pasa16, 7, 0, &mut cache, &mut pool)
+            .unwrap();
+        assert!(mixed.iter().all(|x| x.is_finite()));
+        assert_eq!(sig.nonfinite, 0);
         cache.release(&mut pool);
     }
 

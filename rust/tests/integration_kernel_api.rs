@@ -2,12 +2,14 @@
 //! batched-padded requests through every precision allocation, verified
 //! against the masked full-precision golden reference.
 
-use pasa::attention::{Allocation, AttentionRequest, AttnMask, KernelRegistry, KvPair, KvView};
+use pasa::attention::{
+    Allocation, AttentionRequest, AttnMask, BetaPolicy, KernelRegistry, KvPair, KvView,
+};
 use pasa::coordinator::{Guard, GuardPolicy, GuardSignal, KvPool, SeqCache};
 use pasa::numerics::{relative_rmse, Format};
 use pasa::workloads::{
-    gen_gqa_multihead, gen_multihead, gen_padded_multihead, gen_paged_decode_case, Distribution,
-    MultiHeadCase, Pcg64,
+    gen_case, gen_gqa_multihead, gen_multihead, gen_padded_multihead, gen_paged_decode_case,
+    svd_img2vid_trace, Distribution, MultiHeadCase, Pcg64,
 };
 
 /// RMSE envelopes per allocation against the FP32 golden reference, at the
@@ -388,10 +390,129 @@ fn kernel_telemetry_feeds_the_guard() {
     let out = req.run();
     let sig = GuardSignal::from_attention(&out);
     assert!(sig.overflow_events > 0);
+    assert_eq!(sig.boundary, 65504.0, "FP16 allocation carries its boundary");
     assert!(guard.observe_signal(&sig), "guard must request a replay");
     assert_eq!(guard.allocation(), "pasa");
     let replay = req.with_alloc(Allocation::Pasa16).run();
     let clean = GuardSignal::from_attention(&replay);
-    assert!(clean.is_clean(65504.0));
+    assert!(clean.is_clean(1.0));
     assert!(!guard.observe_signal(&clean));
+}
+
+// ---- precision policy (PR 3 tentpole) --------------------------------
+
+#[test]
+fn beta_autotune_workflow_end_to_end() {
+    // The β-autotune workflow: probe once, feed the observed per-head
+    // max |S| through the Table 3 solver, rerun PASA under the per-head
+    // table. A benign head and a hot head must come out with different
+    // solved βs (hotter head shifts harder), and the tuned run must stay
+    // clean and near the golden.
+    let mut rng = Pcg64::new(61, 0);
+    let benign = gen_case(Distribution::Uniform { x0: 0.0, am: 1.0 }, 128, 128, 64, &mut rng);
+    let hot = gen_case(Distribution::Uniform { x0: 20.0, am: 0.5 }, 128, 128, 64, &mut rng);
+    let req = AttentionRequest::new(Allocation::Pasa16)
+        .with_head(benign.q, benign.k, benign.v)
+        .with_head(hot.q, hot.k, hot.v)
+        .with_fp16_inputs();
+
+    // 1. Probe: the golden's stats carry the raw per-head score peaks.
+    let probe = KernelRegistry::naive().forward(&req);
+    assert!(probe.stats[1].max_abs_score > 10.0 * probe.stats[0].max_abs_score);
+
+    // 2. Autotune: per-head β table off the probe telemetry.
+    let policy = BetaPolicy::autotune(&probe.stats, req.cfg.blocks.s2, Format::F16);
+    let BetaPolicy::PerHead(betas) = &policy else {
+        panic!("autotune must produce a PerHead table");
+    };
+    assert_eq!(betas.len(), 2);
+    assert!(
+        betas[1] > betas[0],
+        "hot head must solve a stronger β: {betas:?}"
+    );
+    for &b in betas {
+        assert!((0.9..1.0).contains(&b), "solved β {b} off the paper grid");
+    }
+
+    // 3. Rerun under the tuned policy: clean, and near the golden.
+    let out = req.clone().with_policy(policy).run();
+    assert!(!out.overflowed());
+    assert_eq!(out.overflow_events(), 0);
+    for h in 0..2 {
+        let e = relative_rmse(&out.heads[h].data, &probe.heads[h].data);
+        assert!(e < 5e-2, "head {h}: tuned rmse {e}");
+    }
+}
+
+#[test]
+fn video_shaped_tall_kv_gqa_pasa_survives_where_fa16_overflows() {
+    // SVD-style video head through the masked path: tall-KV GQA (8 query
+    // heads over 2 KV heads, s1 = 16 ≪ s2 = 4096) built from the
+    // resonance trace generator. FA16-32 overflows its FP16 score store;
+    // PASA on the very same request stays finite with zero pre-store
+    // events, its shifted scores inside the FP16 range.
+    let mut spec = svd_img2vid_trace(1).spec;
+    spec.s1 = 16;
+    spec.s2 = 4096;
+    let c0 = spec.generate(41);
+    let c1 = spec.generate(42);
+    let mut req = AttentionRequest::new(Allocation::Fa16_32)
+        .with_kv_head(c0.k.clone(), c0.v.clone())
+        .with_kv_head(c1.k.clone(), c1.v.clone());
+    for _ in 0..4 {
+        req = req.with_query_head(c0.q.clone());
+    }
+    for _ in 0..4 {
+        req = req.with_query_head(c1.q.clone());
+    }
+    let req = req
+        .with_mask(AttnMask::Causal)
+        .with_blocks(16, 128)
+        .with_fp16_inputs();
+    assert!(req.validate().is_ok());
+
+    let fa = req.run();
+    assert!(
+        fa.overflow_events() > 0,
+        "premise: the video trace must overflow FA16-32's store"
+    );
+    assert!(fa.max_abs_score() > 65504.0);
+
+    let pasa = req.clone().with_alloc(Allocation::Pasa16).run();
+    assert!(!pasa.overflowed(), "PASA must stay finite on video heads");
+    assert_eq!(pasa.overflow_events(), 0, "PASA pre-store events leaked");
+    assert_eq!(pasa.nonfinite_outputs(), 0);
+    assert!(
+        pasa.max_abs_score() < 65504.0,
+        "shifted scores must fit FP16: {}",
+        pasa.max_abs_score()
+    );
+}
+
+#[test]
+fn long_context_pasa_drift_stays_bounded() {
+    // Long-context drift of PASA's F̄ running average (the incremental
+    // Eq. 15 form): a masked request at s2 = 2560 ≫ the paper's 1280 —
+    // 20 KV blocks at the default 128 tiling — charted against shorter
+    // prefixes of the same data. The RMSE against the masked f32 golden
+    // is pinned at every length: the running average must not drift the
+    // error out of the FP16 envelope as blocks accumulate.
+    let mut rng = Pcg64::new(51, 0);
+    let c = gen_case(Distribution::Uniform { x0: 10.0, am: 1.0 }, 128, 2560, 64, &mut rng);
+    let base = AttentionRequest::from_case(&c, Allocation::Pasa16).with_fp16_inputs();
+    let mut chart = Vec::new();
+    for len in [640usize, 1280, 2560] {
+        let req = base.clone().with_mask(AttnMask::Padded(vec![len]));
+        let golden = KernelRegistry::naive().forward(&req);
+        let out = req.run();
+        assert!(!out.overflowed(), "len {len}: PASA overflowed");
+        assert_eq!(out.overflow_events(), 0, "len {len}: events leaked");
+        let e = relative_rmse(&out.heads[0].data, &golden.heads[0].data);
+        assert!(e < 3e-2, "len {len}: drift pushed rmse to {e}");
+        chart.push((len, e));
+    }
+    // The chart exists and covers the long end; the bound above is the
+    // pinned acceptance. (Drift grows with block count but must stay
+    // inside the envelope — that is the regression this test guards.)
+    assert_eq!(chart.last().unwrap().0, 2560);
 }

@@ -268,6 +268,74 @@ fn guard_replay_pins_one_slot_and_matches_an_always_pasa_cache() {
     assert_eq!(slot_b.guard_switches, 0);
 }
 
+/// Two-spike variant of the probe model for the pre-emptive guard: a
+/// *pressure* spike at `P_PRESS` (score ≈ 4·12000 = 48000 — inside FP16
+/// but past 0.6·65504 ≈ 39302) followed by the overflow spike at `P_STAR`
+/// (score ≈ 120000). A Preemptive(0.6) guard pins at `P_PRESS` with the
+/// step still exact — zero replays — so `P_STAR` already runs PASA;
+/// Adaptive sees nothing at `P_PRESS` and must replay `P_STAR`.
+const P_PRESS: usize = 10;
+const AMP_PRESS: f32 = 12_000.0;
+
+fn pressure_probe_model() -> LabModel {
+    let mut m = probe_model();
+    for j in 8..16 {
+        m.pos_emb.set(P_PRESS, j, AMP_PRESS);
+    }
+    m
+}
+
+#[test]
+fn preemptive_guard_pins_on_pressure_with_zero_replays() {
+    // Three engines, identical staged workload crossing P_PRESS then
+    // P_STAR: the pre-emptive engine must finish with zero overflow steps
+    // and zero replays (decode_steps equal to an always-PASA run), while
+    // the adaptive engine overflows at P_STAR and pays one replay.
+    let preemptive_policy = GuardPolicy::Preemptive {
+        score_limit_frac: 0.6,
+    };
+    let mut preemptive = Engine::from_lab(pressure_probe_model(), lab_cfg(preemptive_policy));
+    let mut adaptive = Engine::from_lab(pressure_probe_model(), lab_cfg(GuardPolicy::Adaptive));
+    let mut reference =
+        Engine::from_lab(pressure_probe_model(), lab_cfg(GuardPolicy::AlwaysPasa));
+    for eng in [&mut preemptive, &mut adaptive, &mut reference] {
+        let id = eng.fresh_id();
+        // 7 bytes + BOS: decode positions 8, 9, ... cross P_PRESS = 10
+        // and then P_STAR = 12.
+        eng.submit(Request::new(id, "aaaaaaa").with_params(gen(20)));
+    }
+    let cp = preemptive.run_to_completion().unwrap();
+    let ca = adaptive.run_to_completion().unwrap();
+    let cr = reference.run_to_completion().unwrap();
+
+    // Pre-emptive: pinned once, on pressure — no overflow ever reached a
+    // store, and no step was replayed.
+    assert_eq!(preemptive.metrics.guard_switches, 1, "one pressure pin");
+    assert_eq!(
+        preemptive.metrics.overflow_steps, 0,
+        "pre-emptive must pin before the first poisoned step"
+    );
+    assert_eq!(
+        preemptive.metrics.decode_steps, reference.metrics.decode_steps,
+        "zero replayed steps: same step count as always-PASA"
+    );
+
+    // Adaptive on the same staging: the overflow lands first, one replay.
+    assert_eq!(adaptive.metrics.guard_switches, 1);
+    assert!(adaptive.metrics.overflow_steps >= 1, "adaptive takes the hit");
+    assert_eq!(
+        adaptive.metrics.decode_steps,
+        reference.metrics.decode_steps + 1,
+        "adaptive pays exactly one replayed step"
+    );
+
+    // All three engines serve the same tokens (greedy + logit margin).
+    assert_eq!(cp[0].tokens, cr[0].tokens, "preemptive tokens diverged");
+    assert_eq!(ca[0].tokens, cr[0].tokens, "adaptive tokens diverged");
+    assert_eq!(cp[0].allocation, "pasa");
+    assert_eq!(cp[0].guard_switches, 1);
+}
+
 #[test]
 fn probe_premise_fa16_32_overflows_only_at_p_star() {
     // Sanity for the probe construction itself: an AlwaysFa16 engine on
