@@ -1,13 +1,14 @@
 //! Kernel-level benchmark: all precision allocations of the attention lab
 //! at the paper's benchmark shape family, PASA's preprocessing overhead
-//! (the paper's claimed-negligible batched GEMM), and the multi-head
-//! fan-out with masks (heads ∈ {8, 32}, causal vs none) — the perf
-//! baseline for the unified AttentionKernel API.
+//! (the paper's claimed-negligible batched GEMM), the masked multi-head
+//! fan-out, and the **multi-head prefill** group (heads ∈ {8, 32},
+//! s ∈ {1280, 2560}) that tracks the zero-allocation + worker-pool hot
+//! path against the thread-per-head/alloc-per-block baseline. Emits
+//! `BENCH_bench_attention.json` alongside the stdout table;
+//! `PASA_BENCH_SMOKE=1` shrinks everything to one tiny shape for CI.
 
-use pasa::attention::{
-    Allocation, AttentionRequest, AttnMask, KernelRegistry,
-};
-use pasa::bench::Bencher;
+use pasa::attention::{Allocation, AttentionRequest, AttnMask, KernelRegistry};
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::numerics::Format;
 use pasa::tensor::GemmPrecision;
 use pasa::workloads::{
@@ -15,55 +16,100 @@ use pasa::workloads::{
 };
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::for_env(Bencher::default());
     let dist = Distribution::Uniform { x0: 5.0, am: 1.0 };
     println!("# bench_attention — lab kernels (items = attention tokens/iter)\n");
 
-    for &(s, d) in &[(512usize, 128usize), (1280, 128)] {
+    let single_shapes: &[(usize, usize)] = if smoke() { &[(64, 16)] } else { &[(512, 128), (1280, 128)] };
+    for &(s, d) in single_shapes {
         let mut rng = Pcg64::new(1, 0);
         let case = gen_case(dist, s, s, d, &mut rng);
         let base = AttentionRequest::from_case(&case, Allocation::Fa32).with_fp16_inputs();
+        let shape = format!("{s}x{d}");
         println!("## shape ({s}, {d})");
-        let r = b.run(&format!("naive f32 {s}x{d}"), s as f64, || {
+        let r = b.run_tagged(&format!("naive f32 {s}x{d}"), &shape, "naive-f32", s as f64, || {
             KernelRegistry::naive().forward(&base)
         });
         println!("{r}");
         for alloc in Allocation::all() {
             let req = base.clone().with_alloc(alloc);
-            let r = b.run(&format!("{} {s}x{d}", alloc.name()), s as f64, || req.run());
+            let r = b.run_tagged(
+                &format!("{} {s}x{d}", alloc.name()),
+                &shape,
+                alloc.name(),
+                s as f64,
+                || req.run(),
+            );
             println!("{r}");
         }
         // PASA preprocessing overhead alone: K' = M·K per 128-block.
+        let blk = 128.min(s);
         let m = pasa::attention::shifting_matrix(
-            128,
+            blk,
             (d as f64).sqrt(),
             pasa::attention::PAPER_BETA,
             Format::F16,
         );
-        let r = b.run(&format!("pasa preprocess K' {s}x{d}"), s as f64, || {
-            let mut outs = Vec::new();
-            let mut r0 = 0;
-            while r0 < s {
-                let r1 = (r0 + 128).min(s);
-                outs.push(pasa::attention::preprocess_k(
-                    &base.k[0].rows_slice(r0, r1),
-                    &m,
-                    GemmPrecision::ACC32_STORE16,
-                ));
-                r0 = r1;
-            }
-            outs
-        });
+        let r = b.run_tagged(
+            &format!("pasa preprocess K' {s}x{d}"),
+            &shape,
+            "PASA(FP16)",
+            s as f64,
+            || {
+                let mut outs = Vec::new();
+                let mut r0 = 0;
+                while r0 < s {
+                    let r1 = (r0 + blk).min(s);
+                    outs.push(pasa::attention::preprocess_k(
+                        &base.k[0].rows_slice(r0, r1),
+                        &m,
+                        GemmPrecision::ACC32_STORE16,
+                    ));
+                    r0 = r1;
+                }
+                outs
+            },
+        );
         println!("{r}\n");
     }
+
+    // Multi-head prefill — the perf-acceptance group for the
+    // zero-allocation workspace + (head × Q-block) worker-pool fan-out.
+    // Compare BENCH_bench_attention.json rows across PRs at exactly these
+    // shapes.
+    let quick = Bencher::for_env(Bencher::quick());
+    let prefill_heads: &[usize] = if smoke() { &[2] } else { &[8, 32] };
+    let prefill_seqs: &[usize] = if smoke() { &[64] } else { &[1280, 2560] };
+    let d = 64usize;
+    println!("## multi-head prefill (d={d}, causal) — hot-path acceptance shapes");
+    for &heads in prefill_heads {
+        for &s in prefill_seqs {
+            let mh = gen_multihead(dist, heads, s, d, 7);
+            for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+                let req = AttentionRequest::from_multihead(&mh, alloc)
+                    .with_mask(AttnMask::Causal)
+                    .with_fp16_inputs();
+                let name = format!("prefill {} h={heads} s={s}", alloc.name());
+                let r = quick.run_tagged(
+                    &name,
+                    &format!("h{heads}x{s}x{d}"),
+                    alloc.name(),
+                    (heads * s) as f64,
+                    || req.run(),
+                );
+                println!("{r}");
+            }
+        }
+    }
+    println!();
 
     // Masked multi-head fan-out: the unified API's hot path. Causal halves
     // the visible score area, so the block-skipping tiling should land
     // meaningfully under the dense run.
-    let quick = Bencher::quick();
-    let (s, d) = (256usize, 64usize);
+    let (s, d) = if smoke() { (64usize, 16usize) } else { (256usize, 64usize) };
     println!("## masked multi-head fan-out (seq {s}, dim {d})");
-    for &heads in &[8usize, 32] {
+    let fan_heads: &[usize] = if smoke() { &[2] } else { &[8, 32] };
+    for &heads in fan_heads {
         let mh = gen_multihead(dist, heads, s, d, 2);
         for (mask, label) in [(AttnMask::None, "none"), (AttnMask::Causal, "causal")] {
             for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
@@ -71,7 +117,13 @@ fn main() {
                     .with_mask(mask.clone())
                     .with_fp16_inputs();
                 let name = format!("{} h={heads} mask={label}", alloc.name());
-                let r = quick.run(&name, (heads * s) as f64, || req.run());
+                let r = quick.run_tagged(
+                    &name,
+                    &format!("h{heads}x{s}x{d} {label}"),
+                    alloc.name(),
+                    (heads * s) as f64,
+                    || req.run(),
+                );
                 println!("{r}");
             }
         }
@@ -82,11 +134,15 @@ fn main() {
         let padded = gen_padded_multihead(dist, heads, s, d, &lens, 4);
         let req = AttentionRequest::from_multihead(&padded, Allocation::Pasa16)
             .with_fp16_inputs();
-        let r = quick.run(
+        let r = quick.run_tagged(
             &format!("{} h={heads} mask=padded", Allocation::Pasa16.name()),
+            &format!("h{heads}x{s}x{d} padded"),
+            Allocation::Pasa16.name(),
             (heads * s) as f64,
             || req.run(),
         );
         println!("{r}\n");
     }
+
+    emit_json("bench_attention");
 }

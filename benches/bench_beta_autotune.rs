@@ -14,7 +14,7 @@
 //! Run: cargo bench --bench bench_beta_autotune
 
 use pasa::attention::{Allocation, AttentionRequest, BetaPolicy, KernelRegistry};
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::numerics::Format;
 use pasa::workloads::{gen_gqa_multihead, Distribution};
 
@@ -22,11 +22,12 @@ const SEQ: usize = 256;
 const DIM: usize = 64;
 
 fn main() {
-    let b = Bencher::quick();
+    let b = Bencher::for_env(Bencher::quick());
     println!("# bench_beta_autotune — precision-policy layer (seq={SEQ}, d={DIM})\n");
     let dist = Distribution::Uniform { x0: 10.0, am: 1.0 };
 
-    for heads in [8usize, 32] {
+    let head_counts: &[usize] = if smoke() { &[8] } else { &[8, 32] };
+    for &heads in head_counts {
         let n_kv = heads / 4;
         let mh = gen_gqa_multihead(dist, heads, n_kv, SEQ, SEQ, DIM, heads as u64);
         let req = AttentionRequest::from_multihead(&mh, Allocation::Fa16_32).with_fp16_inputs();
@@ -67,4 +68,5 @@ fn main() {
         "(uniform-valued tables collapse to the shared-K' path; distinct βs \
          add one M·K GEMM per extra β per KV head)"
     );
+    emit_json("bench_beta_autotune");
 }

@@ -1,16 +1,17 @@
 //! Regenerates the paper's Fig. 10 (hybrid-distribution RMSE sweeps).
 
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::experiments::{self, ExpOptions};
 
 fn main() {
     let opts = ExpOptions {
         heads: 2,
-        seq: 640,
+        seq: if smoke() { 128 } else { 640 },
         ..Default::default()
     };
-    let b = Bencher::quick();
-    for id in ["fig10a", "fig10b"] {
+    let b = Bencher::for_env(Bencher::quick());
+    let ids: &[&str] = if smoke() { &["fig10a"] } else { &["fig10a", "fig10b"] };
+    for id in ids {
         let mut out = String::new();
         let r = b.run(id, 1.0, || {
             out = experiments::run(id, &opts).unwrap();
@@ -18,4 +19,5 @@ fn main() {
         println!("{out}");
         println!("{r}\n");
     }
+    emit_json("bench_fig10");
 }

@@ -1,17 +1,18 @@
 //! Regenerates the paper's Fig. 9 (uniform-distribution RMSE sweeps) and
 //! times the harness. The printed rows are the figure's series.
 
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::experiments::{self, ExpOptions};
 
 fn main() {
     let opts = ExpOptions {
         heads: 2,
-        seq: 640,
+        seq: if smoke() { 128 } else { 640 },
         ..Default::default()
     };
-    let b = Bencher::quick();
-    for id in ["fig9a", "fig9b"] {
+    let b = Bencher::for_env(Bencher::quick());
+    let ids: &[&str] = if smoke() { &["fig9a"] } else { &["fig9a", "fig9b"] };
+    for id in ids {
         let mut out = String::new();
         let r = b.run(id, 1.0, || {
             out = experiments::run(id, &opts).unwrap();
@@ -19,4 +20,5 @@ fn main() {
         println!("{out}");
         println!("{r}\n");
     }
+    emit_json("bench_fig9");
 }

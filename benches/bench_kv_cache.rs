@@ -1,18 +1,19 @@
 //! Coordinator-substrate benchmark: paged KV pool allocate/write/assemble
 //! throughput (the L3 hot path around each decode step).
 
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::coordinator::{KvPool, SeqCache};
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::for_env(Bencher::default());
     let (layers, width, page_tokens) = (4usize, 256usize, 32usize);
+    let seq: usize = if smoke() { 64 } else { 512 };
     println!("# bench_kv_cache — paged pool ops\n");
 
-    let r = b.run("alloc+release 512-token seq", 512.0, || {
+    let r = b.run(&format!("alloc+release {seq}-token seq"), seq as f64, || {
         let mut pool = KvPool::new(1024, page_tokens, width);
         let mut s = SeqCache::new(layers);
-        s.ensure_capacity(&mut pool, 512).unwrap();
+        s.ensure_capacity(&mut pool, seq).unwrap();
         s.release(&mut pool);
         pool.used_pages()
     });
@@ -20,19 +21,30 @@ fn main() {
 
     let mut pool = KvPool::new(4096, page_tokens, width);
     let mut s = SeqCache::new(layers);
-    s.ensure_capacity(&mut pool, 512).unwrap();
+    s.ensure_capacity(&mut pool, seq).unwrap();
     let krow = vec![1.0f32; width];
     let vrow = vec![2.0f32; width];
+    let wpos = seq / 2;
     let r = b.run("write_row x 4 layers", 4.0, || {
         for l in 0..layers {
-            s.write_row(&mut pool, l, 200, &krow, &vrow).unwrap();
+            s.write_row(&mut pool, l, wpos, &krow, &vrow).unwrap();
         }
     });
     println!("{r}");
 
-    s.len_tokens = 512;
-    let mut dense = vec![0.0f32; 512 * width];
-    let r = b.run("fill_dense one layer (512 tok)", 512.0, || {
+    // The parallel-decode write path (prepared, shared-pool): must be at
+    // least as cheap as the exclusive path it mirrors.
+    s.prepare_step(&mut pool, wpos).unwrap();
+    let r = b.run("write_row_prepared x 4 layers", 4.0, || {
+        for l in 0..layers {
+            s.write_row_prepared(&pool, l, wpos, &krow, &vrow);
+        }
+    });
+    println!("{r}");
+
+    s.len_tokens = seq;
+    let mut dense = vec![0.0f32; seq * width];
+    let r = b.run(&format!("fill_dense one layer ({seq} tok)"), seq as f64, || {
         s.fill_dense(&pool, 0, false, &mut dense).unwrap();
         dense[0]
     });
@@ -42,14 +54,14 @@ fn main() {
     let seqs: Vec<SeqCache> = (0..4)
         .map(|_| {
             let mut c = SeqCache::new(layers);
-            c.ensure_capacity(&mut pool, 512).unwrap();
-            c.len_tokens = 400;
+            c.ensure_capacity(&mut pool, seq).unwrap();
+            c.len_tokens = seq * 4 / 5;
             c
         })
         .collect();
-    let mut batch = vec![0.0f32; layers * 4 * 512 * width];
+    let mut batch = vec![0.0f32; layers * 4 * seq * width];
     let r = b.run("assemble decode batch (4x4 layers, K+V)", 4.0, || {
-        let sf = 512 * width;
+        let sf = seq * width;
         for (i, c) in seqs.iter().enumerate() {
             for l in 0..layers {
                 let off = (l * 4 + i) * sf;
@@ -60,4 +72,6 @@ fn main() {
         batch[0]
     });
     println!("{r}");
+
+    emit_json("bench_kv_cache");
 }

@@ -11,7 +11,7 @@
 //! `len`.
 
 use pasa::attention::{Allocation, AttentionRequest, AttnMask, KvPair, KvView};
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::coordinator::{KvPool, SeqCache};
 use pasa::tensor::Matrix;
 use pasa::workloads::{gen_paged_decode_case, Distribution, MultiHeadCase};
@@ -19,7 +19,6 @@ use pasa::workloads::{gen_paged_decode_case, Distribution, MultiHeadCase};
 const N_HEADS: usize = 8;
 const N_KV: usize = 2;
 const D: usize = 64;
-const MAX_SEQ: usize = 4096;
 const PAGE_TOKENS: usize = 64;
 
 fn query_request(mh: &MultiHeadCase, alloc: Allocation, mask: AttnMask) -> AttentionRequest {
@@ -31,21 +30,23 @@ fn query_request(mh: &MultiHeadCase, alloc: Allocation, mask: AttnMask) -> Atten
 }
 
 fn main() {
-    let b = Bencher::quick();
+    let b = Bencher::for_env(Bencher::quick());
+    let max_seq: usize = if smoke() { 256 } else { 4096 };
+    let lens: &[usize] = if smoke() { &[128] } else { &[256, 1024, 4096] };
     let w = N_KV * D;
     println!(
         "# bench_paged_decode — decode step (s1=1, {N_HEADS}q/{N_KV}kv, d={D}) \
-         at max_seq={MAX_SEQ}\n"
+         at max_seq={max_seq}\n"
     );
     let dist = Distribution::Uniform { x0: 0.5, am: 1.0 };
 
     for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
         println!("## {}", alloc.name());
-        for len in [256usize, 1024, 4096] {
-            let mh = gen_paged_decode_case(dist, N_HEADS, N_KV, len, MAX_SEQ, D, len as u64);
+        for &len in lens {
+            let mh = gen_paged_decode_case(dist, N_HEADS, N_KV, len, max_seq, D, len as u64);
             // Seed only the valid prefix into the paged pool (the engine
             // never materializes rows it hasn't generated).
-            let pages = 2 * MAX_SEQ.div_ceil(PAGE_TOKENS) + 4;
+            let pages = 2 * max_seq.div_ceil(PAGE_TOKENS) + 4;
             let mut pool = KvPool::new(pages, PAGE_TOKENS, w);
             let mut cache = SeqCache::new(1);
             cache.ensure_capacity(&mut pool, len).unwrap();
@@ -56,7 +57,8 @@ fn main() {
 
             // Paged: gather O(len) rows page-by-page, no staging buffer.
             let req = query_request(&mh, alloc, AttnMask::Padded(vec![len]));
-            let r = b.run(&format!("paged  len={len:>5}"), len as f64, || {
+            let shape = format!("len{len}/max{max_seq}");
+            let r = b.run_tagged(&format!("paged  len={len:>5}"), &shape, alloc.name(), len as f64, || {
                 let pairs: Vec<KvPair<'_>> = (0..N_KV)
                     .map(|j| KvPair {
                         k: KvView::paged(cache.page_ids(0, false), &pool, len)
@@ -73,9 +75,9 @@ fn main() {
             // (max_seq, W) staging buffer (reused across steps, like the
             // engine's kbatch/vbatch), slice per head, run the same
             // kernels. No extra copies beyond what that path really pays.
-            let mut kd = Matrix::zeros(MAX_SEQ, w);
-            let mut vd = Matrix::zeros(MAX_SEQ, w);
-            let r = b.run(&format!("dense  len={len:>5}"), len as f64, || {
+            let mut kd = Matrix::zeros(max_seq, w);
+            let mut vd = Matrix::zeros(max_seq, w);
+            let r = b.run_tagged(&format!("dense  len={len:>5}"), &shape, alloc.name(), len as f64, || {
                 cache.fill_dense(&pool, 0, false, &mut kd.data).unwrap();
                 cache.fill_dense(&pool, 0, true, &mut vd.data).unwrap();
                 let k_heads: Vec<Matrix> =
@@ -98,6 +100,7 @@ fn main() {
     }
     println!(
         "(paged time should track len; dense time is pinned near the \
-         max_seq={MAX_SEQ} assembly cost)"
+         max_seq={max_seq} assembly cost)"
     );
+    emit_json("bench_paged_decode");
 }

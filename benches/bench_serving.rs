@@ -2,7 +2,7 @@
 //! latency and tokens/s per guard policy — the paper's serving-side
 //! framing (FA low-precision throughput vs robustness).
 
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, Bencher};
 use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request};
 use pasa::model::Sampling;
 use pasa::runtime::ModelRuntime;
@@ -13,6 +13,7 @@ fn main() -> anyhow::Result<()> {
     let art = Path::new("artifacts");
     if !art.join("manifest.txt").exists() {
         println!("artifacts/ missing — run `make artifacts`; skipping bench_serving");
+        emit_json("bench_serving");
         return Ok(());
     }
     let rt = ModelRuntime::load(art)?;
@@ -50,16 +51,17 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Raw decode-step latency through the head kernels.
-    let b = Bencher::quick();
+    let b = Bencher::for_env(Bencher::quick());
     let n = 512 * 128;
     let q = vec![0.1f32; n];
     let k = vec![0.2f32; n];
     let v = vec![0.3f32; n];
     for alloc in ["pasa", "fa16_32", "fa32"] {
-        let r = b.run(&format!("head kernel {alloc} (512x128)"), 512.0, || {
+        let r = b.run_tagged(&format!("head kernel {alloc} (512x128)"), "512x128", alloc, 512.0, || {
             rt.head(alloc, &q, &k, &v).unwrap()
         });
         println!("{r}");
     }
+    emit_json("bench_serving");
     Ok(())
 }

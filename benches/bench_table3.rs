@@ -2,17 +2,21 @@
 //! fixed-point solver across block widths.
 
 use pasa::attention::beta;
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::experiments::{self, ExpOptions};
 use pasa::numerics::Format;
 
 fn main() {
-    println!("{}", experiments::run("table3", &ExpOptions::default()).unwrap());
-    let b = Bencher::default();
-    for n in [32usize, 64, 128, 256, 512] {
+    if !smoke() {
+        println!("{}", experiments::run("table3", &ExpOptions::default()).unwrap());
+    }
+    let b = Bencher::for_env(Bencher::default());
+    let widths: &[usize] = if smoke() { &[128] } else { &[32, 64, 128, 256, 512] };
+    for &n in widths {
         let r = b.run(&format!("solve_optimal_beta n={n}"), 1.0, || {
             beta::solve_optimal_beta(1.0 - 2f64.powi(-6), n, Format::F16, 1e-10, 500)
         });
         println!("{r}");
     }
+    emit_json("bench_table3");
 }

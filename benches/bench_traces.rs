@@ -1,16 +1,21 @@
 //! Regenerates the model-trace cloud maps (Figs. 11–14) and times the
 //! trace generation + scoring pipeline.
 
-use pasa::bench::Bencher;
+use pasa::bench::{emit_json, smoke, Bencher};
 use pasa::experiments::{self, ExpOptions};
 
 fn main() {
     let opts = ExpOptions {
-        trace_scale: 8,
+        trace_scale: if smoke() { 32 } else { 8 },
         ..Default::default()
     };
-    let b = Bencher::quick();
-    for id in ["fig11", "fig12", "fig13", "fig14", "fig5", "fig6", "fig7"] {
+    let b = Bencher::for_env(Bencher::quick());
+    let ids: &[&str] = if smoke() {
+        &["fig11"]
+    } else {
+        &["fig11", "fig12", "fig13", "fig14", "fig5", "fig6", "fig7"]
+    };
+    for id in ids {
         let mut out = String::new();
         let r = b.run(id, 1.0, || {
             out = experiments::run(id, &opts).unwrap();
@@ -18,4 +23,5 @@ fn main() {
         println!("{out}");
         println!("{r}\n");
     }
+    emit_json("bench_traces");
 }

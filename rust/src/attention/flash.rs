@@ -16,10 +16,24 @@
 //! filled with −inf (zero softmax weight); fully-masked query rows produce
 //! zero output rows rather than NaN; and KV blocks past every row's
 //! visible prefix are skipped outright (the flash-causal tiling win).
+//!
+//! ## Hot-path layout
+//!
+//! The per-Q-block core is [`flash_q_block`]: it runs entirely out of a
+//! thread-local [`AttnWorkspace`] (gathers, S/P/PV blocks, online state)
+//! through the fused `tensor::ops` kernels and the GEMM `_into` entries,
+//! so the KV sweep performs zero heap allocations once the workspace is
+//! warm. Q blocks are independent (each owns its online state and output
+//! rows), which is what lets the kernel layer fan (head × Q-block) tiles
+//! onto the persistent worker pool — sequential and pooled execution are
+//! bit-identical because they run this exact function per tile.
 
 use super::config::AttentionConfig;
 use super::request::{HeadMask, HeadStats, KvView};
-use crate::tensor::{matmul_nn, matmul_nt_prefix, matmul_nt_stats, ops, GemmStats, Matrix};
+use super::workspace::{reset_vec, with_workspace, AttnWorkspace};
+use crate::tensor::{
+    matmul_nn_into, matmul_nt_prefix_into, matmul_nt_stats_into, ops, GemmStats, Matrix,
+};
 use crate::workloads::AttentionCase;
 
 /// FA2 forward pass for one (unmasked) head — legacy single-head entry.
@@ -40,10 +54,12 @@ pub fn flash_head(
 }
 
 /// Masked FA2 forward pass for one head over [`KvView`] operands, with
-/// telemetry. This is the inner kernel [`super::kernel::FlashKernel`] fans
-/// out per head: the KV sweep gathers one block at a time through the
-/// view, so a paged operand is walked page-by-page — `O(len_tokens)` rows
-/// touched per pass, never a dense `(max_seq, W)` assembly.
+/// telemetry. This drives [`flash_q_block`] over the head's Q blocks
+/// sequentially; [`super::kernel::FlashKernel`] fans the same per-block
+/// core out as (head × Q-block) tiles. The KV sweep gathers one block at
+/// a time through the view, so a paged operand is walked page-by-page —
+/// `O(len_tokens)` rows touched per pass, never a dense `(max_seq, W)`
+/// assembly.
 pub fn flash_head_kv(
     q: &Matrix,
     k: KvView<'_>,
@@ -51,6 +67,41 @@ pub fn flash_head_kv(
     mask: HeadMask,
     cfg: &AttentionConfig,
 ) -> (Matrix, HeadStats) {
+    let s1_total = q.rows;
+    let mut out = Matrix::zeros(s1_total, v.cols());
+    let oc = out.cols;
+    let mut gstats = GemmStats::default();
+    with_workspace(|ws| {
+        let mut i0 = 0;
+        while i0 < s1_total {
+            let i1 = (i0 + cfg.blocks.s1).min(s1_total);
+            let out_rows = &mut out.data[i0 * oc..i1 * oc];
+            let gs = flash_q_block(q, k, v, mask, cfg, i0, i1, out_rows, ws);
+            gstats.merge(&gs);
+            i0 = i1;
+        }
+    });
+    let stats = HeadStats::finish(gstats, &out);
+    (out, stats)
+}
+
+/// One Q block of the FA2 forward: rows `[i0, i1)` of `q` against the
+/// full KV sweep, writing the finished output rows into `out_rows`
+/// (`(i1 − i0) × dv`, row-major) and returning the block's pre-store
+/// score telemetry. Pure in its inputs and allocation-free given a warm
+/// [`AttnWorkspace`] — the tile unit of the worker-pool fan-out.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn flash_q_block(
+    q: &Matrix,
+    k: KvView<'_>,
+    v: KvView<'_>,
+    mask: HeadMask,
+    cfg: &AttentionConfig,
+    i0: usize,
+    i1: usize,
+    out_rows: &mut [f32],
+    ws: &mut AttnWorkspace,
+) -> GemmStats {
     let (s1_total, d) = q.shape();
     let s2_total = k.rows();
     let alpha = (d as f64).sqrt() as f32;
@@ -62,88 +113,90 @@ pub fn flash_head_kv(
     let boundary = gemm.store.overflow_boundary() as f32;
     let mut gstats = GemmStats::default();
 
-    let mut out = Matrix::zeros(s1_total, v.cols());
+    let rows = i1 - i0;
+    let dv = v.cols();
+    debug_assert_eq!(out_rows.len(), rows * dv);
+    let qi = q.rows_ref(i0, i1);
 
-    let mut i0 = 0;
-    while i0 < s1_total {
-        let i1 = (i0 + bs.s1).min(s1_total);
-        let qi = q.rows_slice(i0, i1);
-        let rows = i1 - i0;
-        // Visible KV prefix per query row; prefix masks are monotone in i,
-        // so the last row bounds the block sweep.
-        let vis = mask.visible_rows(i0, i1, s1_total, s2_total);
-        let max_vis = *vis.last().unwrap();
+    // Visible KV prefix per query row; prefix masks are monotone in i,
+    // so the last row bounds the block sweep.
+    mask.visible_rows_into(i0, i1, s1_total, s2_total, &mut ws.vis);
+    let max_vis = *ws.vis.last().unwrap();
 
-        // Online state: m starts at −inf (Eq. 4's identity element),
-        // l at 0, O at 0.
-        let mut m = vec![f32::NEG_INFINITY; rows];
-        let mut l = vec![0.0f32; rows];
-        let mut oi = Matrix::zeros(rows, v.cols());
+    // Online state: m starts at −inf (Eq. 4's identity element),
+    // l at 0, O at 0.
+    reset_vec(&mut ws.m, rows, f32::NEG_INFINITY);
+    reset_vec(&mut ws.l, rows, 0.0);
+    ws.oi.reset(rows, dv);
 
-        let mut j0 = 0;
-        while j0 < s2_total {
-            if j0 >= max_vis {
-                break; // every remaining KV block is invisible to this Q block
-            }
-            let j1 = (j0 + bs.s2).min(s2_total);
-            let kj = k.block(j0, j1);
-            let vj = v.block(j0, j1);
-            let width = j1 - j0;
-            let bvis: Vec<usize> = vis.iter().map(|&t| t.saturating_sub(j0).min(width)).collect();
+    let mut j0 = 0;
+    while j0 < s2_total {
+        if j0 >= max_vis {
+            break; // every remaining KV block is invisible to this Q block
+        }
+        let j1 = (j0 + bs.s2).min(s2_total);
+        k.block_into(j0, j1, &mut ws.kj);
+        v.block_into(j0, j1, &mut ws.vj);
+        let width = j1 - j0;
+        ws.bvis.clear();
+        ws.bvis
+            .extend(ws.vis.iter().map(|&t| t.saturating_sub(j0).min(width)));
 
-            // Eq. (1): S = Q_i·K_jᵀ — the matrix-engine GEMM; the store
-            // format decides whether |S| > 65504 overflows. Masked columns
-            // are skipped and filled with −inf.
-            let s = if bvis.iter().all(|&b| b == width) {
-                matmul_nt_stats(&qi, &kj, gemm, None, boundary, &mut gstats)
-            } else {
-                matmul_nt_prefix(&qi, &kj, gemm, &bvis, f32::NEG_INFINITY, boundary, &mut gstats)
-            };
-            // Eq. (2): static scaling S/α in the score format (inf/α = inf).
-            let s = ops::scale(&s, inv_alpha, sfmt);
+        // Eq. (1): S = Q_i·K_jᵀ — the matrix-engine GEMM; the store
+        // format decides whether |S| > 65504 overflows. Masked columns
+        // are skipped and filled with −inf.
+        if ws.bvis.iter().all(|&b| b == width) {
+            matmul_nt_stats_into(qi, &ws.kj, gemm, None, boundary, &mut gstats, &mut ws.s);
+        } else {
+            matmul_nt_prefix_into(
+                qi,
+                &ws.kj,
+                gemm,
+                &ws.bvis,
+                f32::NEG_INFINITY,
+                boundary,
+                &mut gstats,
+                &mut ws.s,
+            );
+        }
 
-            // Eq. (4): m_j = max(m_{j−1}, rowmax(S)).
-            let row_m = ops::rowmax(&s);
-            let m_new: Vec<f32> = m.iter().zip(&row_m).map(|(&a, &b)| a.max(b)).collect();
+        // Eq. (2) + Eq. (4): static scaling S/α in the score format
+        // (inf/α = inf), fused with m_j's row max — one pass over S.
+        ops::scale_rowmax(&mut ws.s, inv_alpha, sfmt, &mut ws.row_m);
+        ws.m_new.clear();
+        ws.m_new
+            .extend(ws.m.iter().zip(&ws.row_m).map(|(&a, &b)| a.max(b)));
 
-            // Eq. (5): P = exp(S − m) — attenuator, never overflows.
-            let p = ops::exp_sub_rowbias(&s, &m_new, vfmt);
+        // Eq. (5) + Eq. (6) rowsum: P = exp(S − m) — attenuator, never
+        // overflows — with its row sums accumulated in the same pass.
+        ops::exp_sub_rowbias_rowsum_into(&ws.s, &ws.m_new, vfmt, &mut ws.p, &mut ws.row_l);
 
-            // Eq. (6): l = exp(m_{j−1} − m_j)·l + rowsum(P).
-            let decay: Vec<f32> = m
+        // Eq. (6): l = exp(m_{j−1} − m_j)·l + rowsum(P).
+        ws.decay.clear();
+        ws.decay.extend(
+            ws.m
                 .iter()
-                .zip(&m_new)
-                .map(|(&a, &b)| vfmt.round((a - b).exp()))
-                .collect();
-            let row_l = ops::rowsum(&p, vfmt);
-            for r in 0..rows {
-                l[r] = vfmt.round(vfmt.round(decay[r] * l[r]) + row_l[r]);
-            }
-
-            // Eq. (7): O = exp(m_{j−1} − m_j)·O + P·V_j.
-            let pv = matmul_nn(&p, &vj, gemm);
-            ops::scale_add_rows(&mut oi, &decay, &pv, vfmt);
-
-            m = m_new;
-            j0 = j1;
-        }
-
-        // Eq. (8): O_i = O_i / l. Fully-masked rows (vis == 0, l == 0)
-        // are zero by definition — the online state never saw a score, so
-        // 0/0 here is a masking artifact, not a data overflow.
-        let oi = ops::div_rows(&oi, &l, vfmt);
+                .zip(&ws.m_new)
+                .map(|(&a, &b)| vfmt.round((a - b).exp())),
+        );
         for r in 0..rows {
-            let dst = out.row_mut(i0 + r);
-            if vis[r] == 0 {
-                dst.fill(0.0);
-            } else {
-                dst.copy_from_slice(oi.row(r));
-            }
+            ws.l[r] = vfmt.round(vfmt.round(ws.decay[r] * ws.l[r]) + ws.row_l[r]);
         }
-        i0 = i1;
+
+        // Eq. (7): O = exp(m_{j−1} − m_j)·O + P·V_j.
+        matmul_nn_into(ws.p.as_rows_ref(), &ws.vj, gemm, &mut ws.pv);
+        ops::scale_add_rows(&mut ws.oi, &ws.decay, &ws.pv, vfmt);
+
+        std::mem::swap(&mut ws.m, &mut ws.m_new);
+        j0 = j1;
     }
-    let stats = HeadStats::finish(gstats, &out);
-    (out, stats)
+
+    // Eq. (8): O_i = O_i / l, written straight into the head's output
+    // rows. Fully-masked rows (vis == 0, l == 0) are zero by definition —
+    // the online state never saw a score, so 0/0 here is a masking
+    // artifact, not a data overflow.
+    ops::div_rows_masked_into(&ws.oi, &ws.l, &ws.vis, vfmt, out_rows);
+    gstats
 }
 
 #[cfg(test)]
@@ -189,6 +242,29 @@ mod tests {
         let golden = naive_attention_f32(&c);
         let o = flash_attention(&c, &AttentionConfig::new(Allocation::Fa32).with_blocks(64, 64));
         assert!(relative_rmse(&o.data, &golden.data) < 1e-5);
+    }
+
+    #[test]
+    fn repeated_calls_reuse_the_workspace_bit_identically() {
+        // Workspace reuse must be invisible: the second call runs on warm
+        // (dirty) buffers and must reproduce the first call bit for bit,
+        // across shapes that exercise ragged tails and masks. Compare bit
+        // patterns, not f32 values: masked FP8 rows are NaN by design
+        // (E4M3FN has no −inf sentinel) and NaN != NaN would blind a
+        // value-level comparison.
+        let bits = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for &(s, d, blocks) in &[(100usize, 16usize, 64usize), (96, 8, 32)] {
+            let c = rounded_case(Distribution::Uniform { x0: 3.0, am: 1.0 }, s, d, 17);
+            for alloc in [Allocation::Fa16_32, Allocation::Fa16, Allocation::Fp8] {
+                let cfg = AttentionConfig::new(alloc).with_blocks(blocks, blocks);
+                let (first, st1) = flash_head(&c.q, &c.k, &c.v, HeadMask::Causal, &cfg);
+                let (second, st2) = flash_head(&c.q, &c.k, &c.v, HeadMask::Causal, &cfg);
+                assert_eq!(bits(&first), bits(&second), "{} s={s}", alloc.name());
+                assert_eq!(st1.overflow_events, st2.overflow_events);
+                assert_eq!(st1.max_abs_score, st2.max_abs_score);
+                assert_eq!(st1.nonfinite_outputs, st2.nonfinite_outputs);
+            }
+        }
     }
 
     #[test]

@@ -2,11 +2,24 @@
 //!
 //! Every attention path in the repo — the full-precision golden reference,
 //! Flash Attention under the Figs. 1–3 precision allocations, and PASA —
-//! implements one trait method, `forward(&AttentionRequest)`. Multi-head
-//! execution fans the per-head inner kernels out over OS threads (the
-//! bit-exact emulation is CPU-bound), and PASA shares each KV head's
-//! shifted K' blocks across its GQA query group, so the β-shift GEMM is
-//! paid once per KV head rather than once per query head.
+//! implements one trait method, `forward(&AttentionRequest)`.
+//!
+//! Multi-head execution fans out over the persistent
+//! [`crate::pool::WorkerPool`] instead of spawning one OS thread per head
+//! per call: the flash and PASA kernels tile the work as **(head ×
+//! Q-block)** units — Q blocks own their complete online state, so tiles
+//! are independent and any idle worker can steal the next one — while the
+//! golden reference fans whole heads. Decode-shaped requests (`s1 = 1`,
+//! one tile per head) batch all heads of a step into a single pool
+//! submission rather than running them sequentially, which is what the
+//! serving engine's per-step latency rides on. Sequential and pooled
+//! execution are bit-identical (tiles are pure, write disjoint rows and
+//! merge commutative stats); `pool::set_parallel(false)` is the test hook
+//! that pins it.
+//!
+//! PASA shares each KV head's shifted K' blocks across its GQA query
+//! group, so the β-shift GEMM is paid once per KV head rather than once
+//! per query head.
 //!
 //! [`KernelRegistry::get`] is the *only* allocation dispatch in the crate:
 //! callers pick a precision `Allocation`, the registry hands back the
@@ -14,14 +27,17 @@
 //! the exact same code path per kernel.
 
 use super::config::{Allocation, AttentionConfig};
-use super::flash::flash_head_kv;
+use super::flash::flash_q_block;
 use super::naive::naive_head_kv;
-use super::pasa::{pasa_head_kv, pasa_preprocess_kv, PasaPre};
+use super::pasa::{pasa_head_kv, pasa_preprocess_kv, pasa_q_block, PasaPre};
 use super::request::{
     AttentionOutput, AttentionRequest, AttnMask, HeadMask, HeadStats, KvPair, KvView,
 };
+use super::workspace::with_workspace;
 use crate::numerics::Format;
-use crate::tensor::Matrix;
+use crate::pool;
+use crate::tensor::{GemmStats, Matrix};
+use std::sync::Mutex;
 
 /// A forward-only attention kernel over [`AttentionRequest`]s.
 ///
@@ -52,25 +68,91 @@ pub trait AttentionKernel: Sync {
     fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput;
 }
 
-/// Fan a per-head computation out over OS threads, one per head —
-/// mirroring the experiment harness's historical thread-per-head layout.
-/// `parallel: false` runs heads sequentially (bit-identical — the per-head
-/// fn is pure): the serving decode path (`s1 = 1`) does microseconds of
-/// work per head, where thread spawn/join would dominate the
-/// `O(len_tokens)` gather.
-fn fanout_heads<F>(n: usize, parallel: bool, f: F) -> (Vec<Matrix>, Vec<HeadStats>)
+/// Fan a whole-head computation out as worker-pool tiles, one per head.
+/// The per-head fn is pure, so pooled execution is bit-identical to the
+/// single-tile inline path.
+fn fanout_heads<F>(n: usize, f: F) -> (Vec<Matrix>, Vec<HeadStats>)
 where
     F: Fn(usize) -> (Matrix, HeadStats) + Sync,
 {
-    if n <= 1 || !parallel {
+    if n <= 1 {
         return (0..n).map(&f).unzip();
     }
-    let results: Vec<(Matrix, HeadStats)> = std::thread::scope(|scope| {
-        let fref = &f;
-        let handles: Vec<_> = (0..n).map(|h| scope.spawn(move || fref(h))).collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    let slots: Vec<Mutex<Option<(Matrix, HeadStats)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    pool::global().run_tiles(n, |h| {
+        *slots[h].lock().unwrap() = Some(f(h));
     });
-    results.into_iter().unzip()
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("head tile ran"))
+        .unzip()
+}
+
+/// Row-range writer shared across tiles of one head's output matrix.
+/// Tiles of a head partition its Q rows, so writes never overlap.
+struct SharedRows {
+    ptr: *mut f32,
+    cols: usize,
+}
+// SAFETY: only ever dereferenced for disjoint row ranges (one tile per
+// (head, Q-block)), and the owning matrices outlive the fan-out, which
+// blocks until every tile completed.
+unsafe impl Send for SharedRows {}
+unsafe impl Sync for SharedRows {}
+
+/// Fan a per-Q-block computation out as (head × Q-block) worker-pool
+/// tiles. `f(h, i0, i1, out_rows)` fills the head's output rows `[i0,
+/// i1)` and returns the tile's GEMM telemetry; per-head stats merge
+/// commutatively (max of maxima, sum of events), so the merged result is
+/// bit-identical to a sequential sweep regardless of tile order.
+fn fanout_q_tiles<F>(n_heads: usize, s1: usize, bs1: usize, dv: usize, f: F) -> (Vec<Matrix>, Vec<HeadStats>)
+where
+    F: Fn(usize, usize, usize, &mut [f32]) -> GemmStats + Sync,
+{
+    let mut outs: Vec<Matrix> = (0..n_heads).map(|_| Matrix::zeros(s1, dv)).collect();
+    let mut tiles: Vec<(usize, usize, usize)> = Vec::new();
+    for h in 0..n_heads {
+        let mut i0 = 0;
+        while i0 < s1 {
+            let i1 = (i0 + bs1).min(s1);
+            tiles.push((h, i0, i1));
+            i0 = i1;
+        }
+    }
+    let stats: Vec<Mutex<GemmStats>> =
+        (0..n_heads).map(|_| Mutex::new(GemmStats::default())).collect();
+    if tiles.len() <= 1 {
+        for &(h, i0, i1) in &tiles {
+            let gs = f(h, i0, i1, &mut outs[h].data[i0 * dv..i1 * dv]);
+            stats[h].lock().unwrap().merge(&gs);
+        }
+    } else {
+        let shared: Vec<SharedRows> = outs
+            .iter_mut()
+            .map(|m| SharedRows {
+                ptr: m.data.as_mut_ptr(),
+                cols: m.cols,
+            })
+            .collect();
+        let tiles_ref = &tiles;
+        let shared_ref = &shared;
+        pool::global().run_tiles(tiles_ref.len(), |t| {
+            let (h, i0, i1) = tiles_ref[t];
+            let sh = &shared_ref[h];
+            // SAFETY: see `SharedRows` — tiles partition each head's rows.
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(sh.ptr.add(i0 * sh.cols), (i1 - i0) * sh.cols)
+            };
+            let gs = f(h, i0, i1, rows);
+            stats[h].lock().unwrap().merge(&gs);
+        });
+    }
+    let head_stats: Vec<HeadStats> = outs
+        .iter()
+        .zip(stats)
+        .map(|(o, st)| HeadStats::finish(st.into_inner().unwrap(), o))
+        .collect();
+    (outs, head_stats)
 }
 
 /// Full-precision golden reference (the `O_Golden` of Eq. 19): f32 GEMMs,
@@ -86,8 +168,7 @@ impl AttentionKernel for NaiveKernel {
 
     fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
         req.validate_kv(kv).expect("invalid AttentionRequest");
-        let parallel = req.seq_q() > 1;
-        let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
+        let (heads, stats) = fanout_heads(req.n_heads(), |h| {
             let pair = req.kv_pair_for(kv, h);
             naive_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h))
         });
@@ -116,12 +197,31 @@ impl AttentionKernel for FlashKernel {
 
     fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
         req.validate_kv(kv).expect("invalid AttentionRequest");
-        let parallel = req.seq_q() > 1;
         let cfgs = req.head_cfgs();
-        let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
-            let pair = req.kv_pair_for(kv, h);
-            flash_head_kv(&req.q[h], pair.k, pair.v, req.mask_for_head(h), &cfgs[h])
-        });
+        let s1 = req.q[0].rows;
+        let dv = kv[0].v.cols();
+        let (heads, stats) = fanout_q_tiles(
+            req.n_heads(),
+            s1,
+            req.cfg.blocks.s1,
+            dv,
+            |h: usize, i0: usize, i1: usize, out_rows: &mut [f32]| {
+                let pair = req.kv_pair_for(kv, h);
+                with_workspace(|ws| {
+                    flash_q_block(
+                        &req.q[h],
+                        pair.k,
+                        pair.v,
+                        req.mask_for_head(h),
+                        &cfgs[h],
+                        i0,
+                        i1,
+                        out_rows,
+                        ws,
+                    )
+                })
+            },
+        );
         AttentionOutput {
             heads,
             stats,
@@ -145,7 +245,6 @@ impl AttentionKernel for PasaKernel {
 
     fn forward_kv(&self, req: &AttentionRequest, kv: &[KvPair<'_>]) -> AttentionOutput {
         req.validate_kv(kv).expect("invalid AttentionRequest");
-        let parallel = req.seq_q() > 1;
         let n_kv = kv.len();
         let kv_head_for = |h: usize| crate::workloads::gqa_kv_head(h, req.n_heads(), n_kv);
         // Resolve the β policy up front (head-invariant policies solve
@@ -163,7 +262,9 @@ impl AttentionKernel for PasaKernel {
                 // (KV head, valid length, β) triple, so a GQA group with a
                 // broadcast length pays the K' GEMM once, not per head.
                 // Paged views truncate for free (shorter page-table walk);
-                // dense views are sliced once, as before.
+                // dense views are sliced once, as before. Fan-out stays at
+                // head granularity here: each head runs against its own
+                // truncated view.
                 let padded_len = |h: usize| {
                     let kvh = kv_head_for(h);
                     match req.mask_for_head(h) {
@@ -186,7 +287,7 @@ impl AttentionKernel for PasaKernel {
                         pres.push((key, pre));
                     }
                 }
-                let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
+                let (heads, stats) = fanout_heads(req.n_heads(), |h| {
                     let kvh = kv_head_for(h);
                     let len = padded_len(h);
                     if len == 0 {
@@ -214,7 +315,8 @@ impl AttentionKernel for PasaKernel {
             }
             _ => {
                 // Shared preprocessing per (KV head, β) pair (GQA groups
-                // with one β reuse K' exactly as before).
+                // with one β reuse K' exactly as before), then (head ×
+                // Q-block) tiles over the pool.
                 let mut pres: Vec<((usize, u64), PasaPre)> = Vec::new();
                 for h in 0..req.n_heads() {
                     let key = (kv_head_for(h), cfgs[h].beta.to_bits());
@@ -223,12 +325,32 @@ impl AttentionKernel for PasaKernel {
                         pres.push((key, pre));
                     }
                 }
-                let (heads, stats) = fanout_heads(req.n_heads(), parallel, |h| {
-                    let kvh = kv_head_for(h);
-                    let key = (kvh, cfgs[h].beta.to_bits());
-                    let pre = &pres.iter().find(|(k, _)| *k == key).unwrap().1;
-                    pasa_head_kv(&req.q[h], kv[kvh].v, pre, req.mask_for_head(h), &cfgs[h])
-                });
+                let s1 = req.q[0].rows;
+                let dv = kv[0].v.cols();
+                let (heads, stats) = fanout_q_tiles(
+                    req.n_heads(),
+                    s1,
+                    req.cfg.blocks.s1,
+                    dv,
+                    |h: usize, i0: usize, i1: usize, out_rows: &mut [f32]| {
+                        let kvh = kv_head_for(h);
+                        let key = (kvh, cfgs[h].beta.to_bits());
+                        let pre = &pres.iter().find(|(k, _)| *k == key).unwrap().1;
+                        with_workspace(|ws| {
+                            pasa_q_block(
+                                &req.q[h],
+                                kv[kvh].v,
+                                pre,
+                                req.mask_for_head(h),
+                                &cfgs[h],
+                                i0,
+                                i1,
+                                out_rows,
+                                ws,
+                            )
+                        })
+                    },
+                );
                 AttentionOutput {
                     heads,
                     stats,
@@ -386,7 +508,7 @@ mod tests {
     #[test]
     fn multihead_fanout_matches_per_head_runs() {
         // A 4-head MHA request must equal four independent single-head
-        // runs, bit for bit (thread fan-out is pure).
+        // runs, bit for bit (the pooled tile fan-out is pure).
         let mut rng = Pcg64::new(7, 0);
         let dist = Distribution::Uniform { x0: 2.0, am: 1.0 };
         let mut req = AttentionRequest::new(Allocation::Fa16_32);
@@ -406,6 +528,50 @@ mod tests {
                 solo.stats[0].overflow_events,
                 "head {h} stats"
             );
+        }
+    }
+
+    #[test]
+    fn pooled_fanout_bit_matches_sequential_fanout() {
+        // The tentpole's determinism contract at the kernel layer: pooled
+        // (work-stealing) execution and the in-order sequential fallback
+        // must agree bit for bit, outputs and telemetry, for a multi-head
+        // masked request on every kernel.
+        let mut rng = Pcg64::new(21, 0);
+        let dist = Distribution::Uniform { x0: 6.0, am: 1.0 };
+        let mut req = AttentionRequest::new(Allocation::Pasa16);
+        for _ in 0..8 {
+            let c = gen_case(dist, 96, 96, 16, &mut rng);
+            req = req.with_head(c.q, c.k, c.v);
+        }
+        let req = req
+            .with_fp16_inputs()
+            .with_blocks(32, 32)
+            .with_mask(AttnMask::Causal);
+        let _mode = crate::pool::test_mode_guard();
+        for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+            let r = req.clone().with_alloc(alloc);
+            let pooled = r.run();
+            crate::pool::set_parallel(false);
+            let sequential = r.run();
+            crate::pool::set_parallel(true);
+            for h in 0..8 {
+                assert_eq!(
+                    pooled.heads[h].data, sequential.heads[h].data,
+                    "{} head {h}",
+                    alloc.name()
+                );
+                assert_eq!(
+                    pooled.stats[h].overflow_events, sequential.stats[h].overflow_events,
+                    "{} head {h} events",
+                    alloc.name()
+                );
+                assert_eq!(
+                    pooled.stats[h].max_abs_score, sequential.stats[h].max_abs_score,
+                    "{} head {h} max",
+                    alloc.name()
+                );
+            }
         }
     }
 

@@ -25,6 +25,17 @@
 //! ([`flash_attention`], [`pasa_attention`], [`naive_attention_f32`] and
 //! their masked variants) for single-head studies and goldens.
 //!
+//! ## Hot path
+//!
+//! The inner loops run out of per-thread scratch arenas
+//! ([`workspace::AttnWorkspace`]) through fused in-place `tensor::ops`
+//! kernels — zero heap allocations per KV block after warm-up — and
+//! multi-head forwards fan out as (head × Q-block) tiles over the
+//! persistent [`crate::pool::WorkerPool`]. Both are bit-transparent:
+//! pooled, sequential, warm-rerun and paged execution produce identical
+//! bits (pinned by the `integration_hotpath` checksum goldens and the
+//! `alloc_discipline` counting-allocator test).
+//!
 //! ## Paged K/V views
 //!
 //! K/V operands reach the kernels through [`KvView`]: either
@@ -53,6 +64,7 @@ pub mod pasa;
 pub mod policy;
 pub mod request;
 pub mod shifting;
+pub mod workspace;
 
 pub use beta::{solve_optimal_beta, BetaSolve, PAPER_BETA, PAPER_BETAS};
 pub use config::{Allocation, AttentionConfig, BlockSizes};
@@ -66,6 +78,7 @@ pub use request::{
     PageId,
 };
 pub use shifting::{preprocess_k, shifting_inverse, shifting_matrix};
+pub use workspace::{with_workspace, AttnWorkspace};
 
 use crate::numerics::Format;
 use crate::tensor::Matrix;

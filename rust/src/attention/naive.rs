@@ -5,6 +5,7 @@
 //! output row (softmax over the empty set must not NaN).
 
 use super::request::{HeadMask, HeadStats, KvView};
+use super::workspace::{reset_vec, with_workspace};
 use crate::numerics::Format;
 use crate::tensor::{matmul_nt, matmul_nt_stats, GemmPrecision, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
@@ -36,7 +37,10 @@ pub(crate) fn naive_head(
 /// View-based golden core. The reference is deliberately unblocked, so a
 /// paged operand is gathered once into a dense `(len_tokens × d)` matrix —
 /// still `O(len_tokens)`, never `O(max_seq)` — while dense views borrow
-/// straight through with no copy.
+/// straight through with no copy. The bounded per-row scratch (the
+/// visibility counts and f64 softmax buffers) comes from the thread
+/// workspace; the unbounded (s1 × s2) score matrix deliberately does not
+/// (see the comment below).
 pub(crate) fn naive_head_kv(
     q: &Matrix,
     kview: KvView<'_>,
@@ -62,48 +66,55 @@ pub(crate) fn naive_head_kv(
     let (s1, d) = q.shape();
     let s2 = k.rows;
     let alpha = (d as f64).sqrt();
-    let vis = mask.visible_rows(0, s1, s1, s2);
     let mut gstats = GemmStats::default();
-    let s = matmul_nt_stats(
-        q,
-        k,
-        GemmPrecision::F32,
-        Some(&vis),
-        Format::F16.overflow_boundary() as f32,
-        &mut gstats,
-    );
     let mut out = Matrix::zeros(s1, v.cols);
-    let mut p = vec![0.0f64; s2];
-    let mut acc = vec![0.0f64; v.cols];
-    for i in 0..s1 {
-        let n = vis[i];
-        if n == 0 {
-            continue; // fully masked: zero row by definition
-        }
-        let row = s.row(i);
-        let mut mx = f64::NEG_INFINITY;
-        for &x in &row[..n] {
-            mx = mx.max(x as f64 / alpha);
-        }
-        let mut sum = 0.0f64;
-        for j in 0..n {
-            let e = (row[j] as f64 / alpha - mx).exp();
-            p[j] = e;
-            sum += e;
-        }
-        acc.fill(0.0);
-        for j in 0..n {
-            let w = p[j] / sum;
-            let vr = v.row(j);
-            for (a, &vx) in acc.iter_mut().zip(vr) {
-                *a += w * vx as f64;
+    with_workspace(|ws| {
+        mask.visible_rows_into(0, s1, s1, s2, &mut ws.vis);
+        // The full (s1 × s2) score matrix stays a *local* allocation: the
+        // golden reference is unblocked, and parking an arbitrarily large
+        // buffer in the immortal thread workspace would pin the
+        // largest-ever golden run's memory for process lifetime. Only the
+        // bounded scratch (vis, per-row f64 buffers) uses the arena.
+        let s = matmul_nt_stats(
+            q,
+            k,
+            GemmPrecision::F32,
+            Some(&ws.vis),
+            Format::F16.overflow_boundary() as f32,
+            &mut gstats,
+        );
+        reset_vec(&mut ws.p64, s2, 0.0);
+        reset_vec(&mut ws.acc64, v.cols, 0.0);
+        for i in 0..s1 {
+            let n = ws.vis[i];
+            if n == 0 {
+                continue; // fully masked: zero row by definition
+            }
+            let row = s.row(i);
+            let mut mx = f64::NEG_INFINITY;
+            for &x in &row[..n] {
+                mx = mx.max(x as f64 / alpha);
+            }
+            let mut sum = 0.0f64;
+            for j in 0..n {
+                let e = (row[j] as f64 / alpha - mx).exp();
+                ws.p64[j] = e;
+                sum += e;
+            }
+            ws.acc64.fill(0.0);
+            for j in 0..n {
+                let w = ws.p64[j] / sum;
+                let vr = v.row(j);
+                for (a, &vx) in ws.acc64.iter_mut().zip(vr) {
+                    *a += w * vx as f64;
+                }
+            }
+            let dst = out.row_mut(i);
+            for (o, &a) in dst.iter_mut().zip(&ws.acc64) {
+                *o = a as f32;
             }
         }
-        let dst = out.row_mut(i);
-        for (o, &a) in dst.iter_mut().zip(&acc) {
-            *o = a as f32;
-        }
-    }
+    });
     let stats = HeadStats::finish(gstats, &out);
     (out, stats)
 }

@@ -38,12 +38,22 @@
 //! every exp to zero and the output to 0/0 = NaN. m₀ = −inf is the correct
 //! identity for the max and reproduces the paper's intent; a regression
 //! test pins this down.
+//!
+//! ## Hot-path layout
+//!
+//! The per-Q-block core is [`pasa_q_block`], running out of the
+//! thread-local [`AttnWorkspace`] through the fused `tensor::ops` kernels
+//! — zero heap allocations in the KV sweep once warm. Q blocks own their
+//! full (m, l, F̄, O) recovery state independently, so the kernel layer
+//! fans (head × Q-block) tiles onto the persistent worker pool with
+//! bit-identical results to the sequential sweep.
 
 use super::config::AttentionConfig;
 use super::request::{HeadMask, HeadStats, KvView};
 use super::shifting::{effective_invariant, preprocess_k, shifting_matrix};
+use super::workspace::{copy_vec, reset_vec, with_workspace, AttnWorkspace};
 use crate::numerics::Format;
-use crate::tensor::{matmul_nn, matmul_nt_stats, ops, GemmStats, Matrix};
+use crate::tensor::{matmul_nn_into, matmul_nt_stats_into, ops, GemmStats, Matrix};
 use crate::workloads::AttentionCase;
 
 /// Shifted K' blocks of one KV head plus the recovery constants —
@@ -72,7 +82,9 @@ pub fn pasa_preprocess(k: &Matrix, cfg: &AttentionConfig) -> PasaPre {
 /// View-based preprocessing core: K'_j = M·K_j per KV block, gathering
 /// each block through the [`KvView`]. A paged operand is shifted
 /// page-block-by-page-block — the `K' = M·K` GEMM works per page gather,
-/// no dense K assembly.
+/// no dense K assembly. The gather itself reuses the thread workspace, so
+/// preprocessing allocates only what it must keep: one K' matrix per
+/// block.
 pub fn pasa_preprocess_kv(k: KvView<'_>, cfg: &AttentionConfig) -> PasaPre {
     let s2_total = k.rows();
     let d = k.cols();
@@ -85,21 +97,23 @@ pub fn pasa_preprocess_kv(k: KvView<'_>, cfg: &AttentionConfig) -> PasaPre {
     let mut block_inva: Vec<f32> = Vec::new();
     let m_full = shifting_matrix(bs2, alpha, beta, Format::F16);
     let inva_main = effective_invariant(&m_full);
-    let mut j0 = 0;
-    while j0 < s2_total {
-        let j1 = (j0 + bs2).min(s2_total);
-        let kj = k.block(j0, j1);
-        let (m, c) = if j1 - j0 == bs2 {
-            (m_full.clone(), inva_main)
-        } else {
-            let m_tail = shifting_matrix(j1 - j0, alpha, beta, Format::F16);
-            let c_tail = effective_invariant(&m_tail);
-            (m_tail, c_tail)
-        };
-        kp_blocks.push(preprocess_k(&kj, &m, gemm));
-        block_inva.push(c);
-        j0 = j1;
-    }
+    with_workspace(|ws| {
+        let mut j0 = 0;
+        while j0 < s2_total {
+            let j1 = (j0 + bs2).min(s2_total);
+            k.block_into(j0, j1, &mut ws.kj);
+            if j1 - j0 == bs2 {
+                kp_blocks.push(preprocess_k(&ws.kj, &m_full, gemm));
+                block_inva.push(inva_main);
+            } else {
+                let m_tail = shifting_matrix(j1 - j0, alpha, beta, Format::F16);
+                let c_tail = effective_invariant(&m_tail);
+                kp_blocks.push(preprocess_k(&ws.kj, &m_tail, gemm));
+                block_inva.push(c_tail);
+            }
+            j0 = j1;
+        }
+    });
     PasaPre {
         kp_blocks,
         block_inva,
@@ -145,7 +159,8 @@ pub fn pasa_head(
 
 /// View-based PASA core: V is gathered block-by-block through the
 /// [`KvView`] alongside the preprocessed K' blocks, so the paged decode
-/// path touches `O(len_tokens)` V rows per pass.
+/// path touches `O(len_tokens)` V rows per pass. Drives [`pasa_q_block`]
+/// over the head's Q blocks sequentially.
 pub fn pasa_head_kv(
     q: &Matrix,
     v: KvView<'_>,
@@ -153,162 +168,184 @@ pub fn pasa_head_kv(
     mask: HeadMask,
     cfg: &AttentionConfig,
 ) -> (Matrix, HeadStats) {
-    let (s1_total, _d) = q.shape();
+    let s1_total = q.rows;
+    assert_eq!(cfg.blocks.s2, pre.bs2, "preprocessing used a different KV blocking");
+    let mut out = Matrix::zeros(s1_total, v.cols());
+    let oc = out.cols;
+    let mut gstats = GemmStats::default();
+    with_workspace(|ws| {
+        let mut i0 = 0;
+        while i0 < s1_total {
+            let i1 = (i0 + cfg.blocks.s1).min(s1_total);
+            let out_rows = &mut out.data[i0 * oc..i1 * oc];
+            let gs = pasa_q_block(q, v, pre, mask, cfg, i0, i1, out_rows, ws);
+            gstats.merge(&gs);
+            i0 = i1;
+        }
+    });
+    let stats = HeadStats::finish(gstats, &out);
+    (out, stats)
+}
+
+/// One Q block of PASA's Algorithm 1: rows `[i0, i1)` of `q` against the
+/// preprocessed K' sweep, writing the finished output rows into
+/// `out_rows` and returning the block's pre-store telemetry. Owns its
+/// complete online recovery state (m, l, F̄, O), so tiles are independent
+/// — the worker-pool unit. Allocation-free given a warm workspace.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pasa_q_block(
+    q: &Matrix,
+    v: KvView<'_>,
+    pre: &PasaPre,
+    mask: HeadMask,
+    cfg: &AttentionConfig,
+    i0: usize,
+    i1: usize,
+    out_rows: &mut [f32],
+    ws: &mut AttnWorkspace,
+) -> GemmStats {
+    let s1_total = q.rows;
     let s2_total = pre.s2_total;
     let bs = cfg.blocks;
-    assert_eq!(bs.s2, pre.bs2, "preprocessing used a different KV blocking");
+    debug_assert_eq!(bs.s2, pre.bs2, "preprocessing used a different KV blocking");
     let vfmt = Format::F16; // Algorithm 1: every vector op is FP16
     let gemm = cfg.gemm();
     let boundary = gemm.store.overflow_boundary() as f32;
     let inva_main = pre.inva_main;
     let mut gstats = GemmStats::default();
 
-    let mut out = Matrix::zeros(s1_total, v.cols());
+    let rows = i1 - i0;
+    let dv = v.cols();
+    debug_assert_eq!(out_rows.len(), rows * dv);
+    let qi = q.rows_ref(i0, i1);
 
-    let mut i0 = 0;
-    while i0 < s1_total {
-        let i1 = (i0 + bs.s1).min(s1_total);
-        let qi = q.rows_slice(i0, i1);
-        let rows = i1 - i0;
-        let vis = mask.visible_rows(i0, i1, s1_total, s2_total);
-        let max_vis = *vis.last().unwrap();
+    mask.visible_rows_into(i0, i1, s1_total, s2_total, &mut ws.vis);
+    let max_vis = *ws.vis.last().unwrap();
 
-        // Line 4 (amended): m₀ = −inf, l₀ = 0, F̄⁰ = 0, O = 0.
-        let mut m = vec![f32::NEG_INFINITY; rows];
-        let mut l = vec![0.0f32; rows];
-        let mut fbar = vec![0.0f32; rows];
-        let mut oi = Matrix::zeros(rows, v.cols());
+    // Line 4 (amended): m₀ = −inf, l₀ = 0, F̄⁰ = 0, O = 0.
+    reset_vec(&mut ws.m, rows, f32::NEG_INFINITY);
+    reset_vec(&mut ws.l, rows, 0.0);
+    reset_vec(&mut ws.fbar, rows, 0.0);
+    ws.oi.reset(rows, dv);
 
-        let mut j0 = 0;
-        let mut jidx = 0usize;
-        while j0 < s2_total {
-            if j0 >= max_vis {
-                // Every remaining KV block is invisible to this Q block.
-                // F̄ is left untouched: the recovery frame only has to be
-                // consistent across *processed* blocks.
-                break;
-            }
-            let j1 = (j0 + bs.s2).min(s2_total);
-            let vj = v.block(j0, j1);
-            let kp = &pre.kp_blocks[jidx];
-            let width = j1 - j0;
-            let bvis: Vec<usize> = vis.iter().map(|&t| t.saturating_sub(j0).min(width)).collect();
-            let fully_visible = bvis.iter().all(|&b| b == width);
-
-            // Line 11: S' = Q_i·K'_jᵀ — shifted+scaled scores, FP16 store.
-            // Dense even under a mask (S̄' is defined over the full block);
-            // telemetry covers the visible region only.
-            let stat_vis = if fully_visible { None } else { Some(&bvis[..]) };
-            let s = matmul_nt_stats(&qi, kp, gemm, stat_vis, boundary, &mut gstats);
-
-            // Line 12: local softmax stats, over the visible prefix.
-            let m_loc = if fully_visible {
-                ops::rowmax(&s)
-            } else {
-                ops::rowmax_prefix(&s, &bvis)
-            };
-            let p = if fully_visible {
-                ops::exp_sub_rowbias(&s, &m_loc, vfmt)
-            } else {
-                ops::exp_sub_rowbias_prefix(&s, &m_loc, &bvis, vfmt)
-            };
-            // Vector reduce with f32 internal precision, one f16 round on
-            // store — matches the Pallas kernel (and NPU vector units).
-            let l_loc: Vec<f32> = ops::rowmean_acc32(&p, vfmt)
-                .iter()
-                .map(|&m| vfmt.round(m * p.cols as f32))
-                .collect();
-
-            // Line 13: pseudo-average of the (dense) shifted block.
-            let sbar = ops::rowmean_acc32(&s, vfmt);
-
-            // Line 14 (Eq. 15): running global pseudo-average, computed in
-            // the incremental form F̄ += (S̄' − F̄)/j — algebraically the
-            // paper's ((j−1)F̄ + S̄')/j but immune to FP16 overflow of the
-            // (j−1)·F̄ product at long sequence lengths.
-            let jf = (jidx + 1) as f32;
-            let fbar_prev: Vec<f32> = fbar.clone();
-            for r in 0..rows {
-                let delta = vfmt.round(sbar[r] - fbar[r]);
-                fbar[r] = vfmt.round(fbar[r] + vfmt.round(delta / jf));
-            }
-
-            // Line 15: correction terms of the maximum,
-            // Δm'_{j−1} = Inva·(F̄ʲ⁻¹ − F̄ʲ), Δm'_j = Inva·(S̄'ʲ − F̄ʲ).
-            // A ragged tail block shifted with its own β_w gets the extra
-            // (c_w − c_main)·S̄' term so its true offset is still recovered.
-            let inva_j = pre.block_inva[jidx];
-            let dinva = vfmt.round(inva_j - inva_main);
-            let dm_prev: Vec<f32> = (0..rows)
-                .map(|r| vfmt.round(inva_main * vfmt.round(fbar_prev[r] - fbar[r])))
-                .collect();
-            let dm_cur: Vec<f32> = (0..rows)
-                .map(|r| {
-                    let base = vfmt.round(inva_main * vfmt.round(sbar[r] - fbar[r]));
-                    if dinva == 0.0 {
-                        base
-                    } else {
-                        vfmt.round(base + vfmt.round(dinva * sbar[r]))
-                    }
-                })
-                .collect();
-
-            // Line 16: m_j = max(m_{j−1} + Δm'_{j−1}, m'_j + Δm'_j).
-            let m_new: Vec<f32> = (0..rows)
-                .map(|r| {
-                    let a = vfmt.round(m[r] + dm_prev[r]); // −inf + finite = −inf
-                    let b = vfmt.round(m_loc[r] + dm_cur[r]);
-                    a.max(b)
-                })
-                .collect();
-
-            // Line 17: Δm_{j−1} = m_{j−1} − m_j + Δm'_{j−1},
-            //          Δm_j     = m'_j   − m_j + Δm'_j   (both ≤ 0).
-            let scale_prev: Vec<f32> = (0..rows)
-                .map(|r| {
-                    let dm = vfmt.round(vfmt.round(m[r] - m_new[r]) + dm_prev[r]);
-                    vfmt.round(dm.exp())
-                })
-                .collect();
-            let scale_cur: Vec<f32> = (0..rows)
-                .map(|r| {
-                    let dm = vfmt.round(vfmt.round(m_loc[r] - m_new[r]) + dm_cur[r]);
-                    vfmt.round(dm.exp())
-                })
-                .collect();
-
-            // Line 18: l_j = exp(Δm_{j−1})·l_{j−1} + exp(Δm_j)·l'_j.
-            for r in 0..rows {
-                l[r] = vfmt.round(
-                    vfmt.round(scale_prev[r] * l[r]) + vfmt.round(scale_cur[r] * l_loc[r]),
-                );
-            }
-
-            // Lines 19–20: O = exp(Δm_j)·(P·V_j) + exp(Δm_{j−1})·O.
-            let pv = matmul_nn(&p, &vj, gemm);
-            let pv_scaled = ops::scale_rows(&pv, &scale_cur, vfmt);
-            ops::scale_add_rows(&mut oi, &scale_prev, &pv_scaled, vfmt);
-
-            m = m_new;
-            j0 = j1;
-            jidx += 1;
+    let mut j0 = 0;
+    let mut jidx = 0usize;
+    while j0 < s2_total {
+        if j0 >= max_vis {
+            // Every remaining KV block is invisible to this Q block.
+            // F̄ is left untouched: the recovery frame only has to be
+            // consistent across *processed* blocks.
+            break;
         }
+        let j1 = (j0 + bs.s2).min(s2_total);
+        v.block_into(j0, j1, &mut ws.vj);
+        let kp = &pre.kp_blocks[jidx];
+        let width = j1 - j0;
+        ws.bvis.clear();
+        ws.bvis
+            .extend(ws.vis.iter().map(|&t| t.saturating_sub(j0).min(width)));
+        let fully_visible = ws.bvis.iter().all(|&b| b == width);
 
-        // Line 22: O_i = O_i / l. Fully-masked rows are zero by definition
-        // (their online state never saw a score).
-        let oi = ops::div_rows(&oi, &l, vfmt);
+        // Line 11: S' = Q_i·K'_jᵀ — shifted+scaled scores, FP16 store.
+        // Dense even under a mask (S̄' is defined over the full block);
+        // telemetry covers the visible region only.
+        let stat_vis = if fully_visible { None } else { Some(&ws.bvis[..]) };
+        matmul_nt_stats_into(qi, kp, gemm, stat_vis, boundary, &mut gstats, &mut ws.s);
+
+        // Line 12: local softmax stats over the visible prefix — the row
+        // max, then P = exp(S' − m') fused with its FP32-reduce row mean
+        // (one f16 rounding on store, matching the Pallas kernel and NPU
+        // vector units); l'_j = mean · width.
+        if fully_visible {
+            ops::rowmax_into(&ws.s, &mut ws.row_m);
+            ops::exp_sub_rowbias_rowmean32_into(&ws.s, &ws.row_m, vfmt, &mut ws.p, &mut ws.l_loc);
+        } else {
+            ops::rowmax_prefix_into(&ws.s, &ws.bvis, &mut ws.row_m);
+            ops::exp_sub_rowbias_prefix_rowmean32_into(
+                &ws.s, &ws.row_m, &ws.bvis, vfmt, &mut ws.p, &mut ws.l_loc,
+            );
+        }
         for r in 0..rows {
-            let dst = out.row_mut(i0 + r);
-            if vis[r] == 0 {
-                dst.fill(0.0);
-            } else {
-                dst.copy_from_slice(oi.row(r));
-            }
+            ws.l_loc[r] = vfmt.round(ws.l_loc[r] * ws.p.cols as f32);
         }
-        i0 = i1;
+
+        // Line 13: pseudo-average of the (dense) shifted block.
+        ops::rowmean_acc32_into(&ws.s, vfmt, &mut ws.sbar);
+
+        // Line 14 (Eq. 15): running global pseudo-average, computed in
+        // the incremental form F̄ += (S̄' − F̄)/j — algebraically the
+        // paper's ((j−1)F̄ + S̄')/j but immune to FP16 overflow of the
+        // (j−1)·F̄ product at long sequence lengths.
+        let jf = (jidx + 1) as f32;
+        copy_vec(&mut ws.fbar_prev, &ws.fbar);
+        for r in 0..rows {
+            let delta = vfmt.round(ws.sbar[r] - ws.fbar[r]);
+            ws.fbar[r] = vfmt.round(ws.fbar[r] + vfmt.round(delta / jf));
+        }
+
+        // Line 15: correction terms of the maximum,
+        // Δm'_{j−1} = Inva·(F̄ʲ⁻¹ − F̄ʲ), Δm'_j = Inva·(S̄'ʲ − F̄ʲ).
+        // A ragged tail block shifted with its own β_w gets the extra
+        // (c_w − c_main)·S̄' term so its true offset is still recovered.
+        let inva_j = pre.block_inva[jidx];
+        let dinva = vfmt.round(inva_j - inva_main);
+        ws.dm_prev.clear();
+        ws.dm_prev.extend((0..rows).map(|r| {
+            vfmt.round(inva_main * vfmt.round(ws.fbar_prev[r] - ws.fbar[r]))
+        }));
+        ws.dm_cur.clear();
+        ws.dm_cur.extend((0..rows).map(|r| {
+            let base = vfmt.round(inva_main * vfmt.round(ws.sbar[r] - ws.fbar[r]));
+            if dinva == 0.0 {
+                base
+            } else {
+                vfmt.round(base + vfmt.round(dinva * ws.sbar[r]))
+            }
+        }));
+
+        // Line 16: m_j = max(m_{j−1} + Δm'_{j−1}, m'_j + Δm'_j).
+        ws.m_new.clear();
+        ws.m_new.extend((0..rows).map(|r| {
+            let a = vfmt.round(ws.m[r] + ws.dm_prev[r]); // −inf + finite = −inf
+            let b = vfmt.round(ws.row_m[r] + ws.dm_cur[r]);
+            a.max(b)
+        }));
+
+        // Line 17: Δm_{j−1} = m_{j−1} − m_j + Δm'_{j−1},
+        //          Δm_j     = m'_j   − m_j + Δm'_j   (both ≤ 0).
+        ws.decay.clear();
+        ws.decay.extend((0..rows).map(|r| {
+            let dm = vfmt.round(vfmt.round(ws.m[r] - ws.m_new[r]) + ws.dm_prev[r]);
+            vfmt.round(dm.exp())
+        }));
+        ws.scale_cur.clear();
+        ws.scale_cur.extend((0..rows).map(|r| {
+            let dm = vfmt.round(vfmt.round(ws.row_m[r] - ws.m_new[r]) + ws.dm_cur[r]);
+            vfmt.round(dm.exp())
+        }));
+
+        // Line 18: l_j = exp(Δm_{j−1})·l_{j−1} + exp(Δm_j)·l'_j.
+        for r in 0..rows {
+            ws.l[r] = vfmt.round(
+                vfmt.round(ws.decay[r] * ws.l[r]) + vfmt.round(ws.scale_cur[r] * ws.l_loc[r]),
+            );
+        }
+
+        // Lines 19–20: O = exp(Δm_j)·(P·V_j) + exp(Δm_{j−1})·O.
+        matmul_nn_into(ws.p.as_rows_ref(), &ws.vj, gemm, &mut ws.pv);
+        ops::scale_rows_inplace(&mut ws.pv, &ws.scale_cur, vfmt);
+        ops::scale_add_rows(&mut ws.oi, &ws.decay, &ws.pv, vfmt);
+
+        std::mem::swap(&mut ws.m, &mut ws.m_new);
+        j0 = j1;
+        jidx += 1;
     }
-    let stats = HeadStats::finish(gstats, &out);
-    (out, stats)
+
+    // Line 22: O_i = O_i / l, written straight into the head's output
+    // rows. Fully-masked rows are zero by definition (their online state
+    // never saw a score).
+    ops::div_rows_masked_into(&ws.oi, &ws.l, &ws.vis, vfmt, out_rows);
+    gstats
 }
 
 /// β = 0 degrades PASA to plain FA2 (§2.2: "PASA completely degrades into
@@ -404,6 +441,22 @@ mod tests {
         let o = pasa_attention(&c, &pasa_cfg().with_blocks(64, 64));
         let e = relative_rmse(&o.data, &golden.data);
         assert!(e < 3e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn repeated_calls_reuse_the_workspace_bit_identically() {
+        // Same contract as the flash twin: warm (dirty) workspace buffers
+        // must reproduce the cold-call outputs bit for bit, masked and
+        // unmasked, including the ragged tail path.
+        let c = rounded_case(Distribution::Uniform { x0: 4.0, am: 1.0 }, 100, 16, 19);
+        let pre = pasa_preprocess(&c.k, &pasa_cfg());
+        for mask in [HeadMask::None, HeadMask::Causal, HeadMask::Prefix(70)] {
+            let (first, st1) = pasa_head(&c.q, &c.v, &pre, mask, &pasa_cfg());
+            let (second, st2) = pasa_head(&c.q, &c.v, &pre, mask, &pasa_cfg());
+            assert_eq!(first.data, second.data, "{mask:?}");
+            assert_eq!(st1.overflow_events, st2.overflow_events);
+            assert_eq!(st1.max_abs_score, st2.max_abs_score);
+        }
     }
 
     #[test]

@@ -155,7 +155,22 @@ impl<'a> KvView<'a> {
     /// table and copy page-by-page, clamped to `len_tokens`.
     pub fn block(&self, r0: usize, r1: usize) -> Matrix {
         match *self {
+            // Dense: one copy straight off the source rows.
             KvView::Dense(m) => m.rows_slice(r0, r1),
+            KvView::Paged { .. } => {
+                let mut out = Matrix::zeros(r1.saturating_sub(r0), self.cols());
+                self.block_into(r0, r1, &mut out);
+                out
+            }
+        }
+    }
+
+    /// Buffer-reusing [`Self::block`]: the gather of the zero-allocation
+    /// hot path — `out` is reshaped in place, so a warm workspace buffer
+    /// absorbs every KV block of the sweep without touching the heap.
+    pub fn block_into(&self, r0: usize, r1: usize, out: &mut Matrix) {
+        match *self {
+            KvView::Dense(m) => out.copy_rows_from(m, r0, r1),
             KvView::Paged {
                 pages,
                 pool,
@@ -166,7 +181,7 @@ impl<'a> KvView<'a> {
                 assert!(r0 <= r1 && r1 <= len_tokens, "paged block out of range");
                 let pt = pool.page_tokens();
                 let w = pool.row_width();
-                let mut out = Matrix::zeros(r1 - r0, cols);
+                out.reshape(r1 - r0, cols); // every row fully copied below
                 let mut r = r0;
                 while r < r1 {
                     let pg = r / pt;
@@ -181,7 +196,6 @@ impl<'a> KvView<'a> {
                     }
                     r += take;
                 }
-                out
             }
         }
     }
@@ -278,7 +292,22 @@ impl HeadMask {
 
     /// Per-row visible counts for query rows `[i0, i1)`.
     pub fn visible_rows(&self, i0: usize, i1: usize, s1: usize, s2: usize) -> Vec<usize> {
-        (i0..i1).map(|i| self.visible(i, s1, s2)).collect()
+        let mut out = Vec::new();
+        self.visible_rows_into(i0, i1, s1, s2, &mut out);
+        out
+    }
+
+    /// Buffer-reusing [`Self::visible_rows`] (hot-path form).
+    pub fn visible_rows_into(
+        &self,
+        i0: usize,
+        i1: usize,
+        s1: usize,
+        s2: usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.extend((i0..i1).map(|i| self.visible(i, s1, s2)));
     }
 
     pub fn is_none(&self) -> bool {

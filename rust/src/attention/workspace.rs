@@ -1,0 +1,159 @@
+//! Per-thread scratch arenas for the attention hot path.
+//!
+//! Every buffer the flash/PASA/naive inner loops used to allocate per KV
+//! block — the gathered K/V blocks, the S and P score blocks, the P·V
+//! partial product, the online (m, l, O) state and the per-row visibility
+//! scratch — lives in one [`AttnWorkspace`], acquired per kernel
+//! invocation from a thread-local pool via [`with_workspace`]. Buffers
+//! are reshaped in place ([`crate::tensor::Matrix::reset`] /
+//! [`reset_vec`]), so after the first call at a given shape ("warm-up")
+//! the inner KV sweep performs **zero heap allocations** — pinned by the
+//! `alloc_discipline` integration test with a counting global allocator.
+//!
+//! The workspace never changes numerics: every fused op writes the exact
+//! value sequence of the allocation-heavy composition it replaced (see
+//! `tensor::ops`), and buffers are fully overwritten (or explicitly
+//! zero-filled) before use, so reuse cannot leak state between calls.
+//! Thread-locality means the worker pool's threads each warm their own
+//! arena once and reuse it for every (head × Q-block) tile they steal.
+
+use crate::tensor::Matrix;
+use std::cell::RefCell;
+
+/// Reusable scratch buffers for one attention tile computation. Acquire
+/// through [`with_workspace`]; all buffers are sized lazily and sticky,
+/// so steady-state forwards allocate nothing from the KV loop.
+#[derive(Default)]
+pub struct AttnWorkspace {
+    /// Gathered K block (dense copy or paged gather).
+    pub(crate) kj: Matrix,
+    /// Gathered V block.
+    pub(crate) vj: Matrix,
+    /// Score block S (flash) / S' (PASA).
+    pub(crate) s: Matrix,
+    /// Softmax weight block P.
+    pub(crate) p: Matrix,
+    /// P·V partial product.
+    pub(crate) pv: Matrix,
+    /// Online output accumulator O_i for the current Q block.
+    pub(crate) oi: Matrix,
+    /// Online row maxima m.
+    pub(crate) m: Vec<f32>,
+    /// Candidate row maxima m_j (swapped with `m` each block).
+    pub(crate) m_new: Vec<f32>,
+    /// Online row normalizers l.
+    pub(crate) l: Vec<f32>,
+    /// Block-local row maxima.
+    pub(crate) row_m: Vec<f32>,
+    /// Block-local row sums / means.
+    pub(crate) row_l: Vec<f32>,
+    /// exp(m_{j−1} − m_j) decay factors (flash) / exp(Δm_{j−1}) (PASA).
+    pub(crate) decay: Vec<f32>,
+    /// PASA running global pseudo-average F̄ʲ.
+    pub(crate) fbar: Vec<f32>,
+    /// PASA F̄ʲ⁻¹ (previous block's frame).
+    pub(crate) fbar_prev: Vec<f32>,
+    /// PASA block pseudo-average S̄'.
+    pub(crate) sbar: Vec<f32>,
+    /// PASA block-local l'_j.
+    pub(crate) l_loc: Vec<f32>,
+    /// PASA correction term Δm'_{j−1}.
+    pub(crate) dm_prev: Vec<f32>,
+    /// PASA correction term Δm'_j.
+    pub(crate) dm_cur: Vec<f32>,
+    /// PASA exp(Δm_j) scale of the current block.
+    pub(crate) scale_cur: Vec<f32>,
+    /// Per-row visible KV counts of the current Q block.
+    pub(crate) vis: Vec<usize>,
+    /// `vis` clipped to the current KV block window.
+    pub(crate) bvis: Vec<usize>,
+    /// Golden-path f64 softmax weights.
+    pub(crate) p64: Vec<f64>,
+    /// Golden-path f64 output accumulator.
+    pub(crate) acc64: Vec<f64>,
+}
+
+/// Clear-and-refill a scratch vector, reusing its allocation (the `Vec`
+/// twin of [`Matrix::reset`]).
+#[inline]
+pub(crate) fn reset_vec<T: Copy>(v: &mut Vec<T>, n: usize, fill: T) {
+    v.clear();
+    v.resize(n, fill);
+}
+
+/// Copy `src` into a scratch vector, reusing its allocation.
+#[inline]
+pub(crate) fn copy_vec<T: Copy>(v: &mut Vec<T>, src: &[T]) {
+    v.clear();
+    v.extend_from_slice(src);
+}
+
+thread_local! {
+    /// A stack (not a single slot) so re-entrant kernel calls — e.g. a
+    /// golden reference invoked from inside an instrumented run — each
+    /// get their own arena.
+    static WORKSPACES: RefCell<Vec<Box<AttnWorkspace>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's pooled [`AttnWorkspace`] (creating one on
+/// first use). The workspace returns to the thread-local pool afterwards,
+/// buffers intact — the "warm-up once, allocate never again" contract of
+/// the hot path.
+pub fn with_workspace<R>(f: impl FnOnce(&mut AttnWorkspace) -> R) -> R {
+    let mut ws = WORKSPACES
+        .with(|stack| stack.borrow_mut().pop())
+        .unwrap_or_default();
+    let out = f(&mut ws);
+    WORKSPACES.with(|stack| stack.borrow_mut().push(ws));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_is_reused_across_calls() {
+        // Grow a buffer in one call; the next call on this thread must see
+        // the same capacity (the arena is pooled, not dropped).
+        let cap0 = with_workspace(|ws| {
+            ws.s.reset(64, 64);
+            ws.s.data.capacity()
+        });
+        let cap1 = with_workspace(|ws| ws.s.data.capacity());
+        assert!(cap1 >= cap0);
+        let cap2 = with_workspace(|ws| {
+            ws.s.reset(32, 16);
+            ws.s.data.capacity()
+        });
+        assert_eq!(cap1, cap2, "shrinking reshape must keep the allocation");
+    }
+
+    #[test]
+    fn nested_acquisition_gets_distinct_arenas() {
+        with_workspace(|outer| {
+            outer.s.reset(4, 4);
+            outer.s.data[0] = 7.0;
+            with_workspace(|inner| {
+                inner.s.reset(4, 4);
+                assert_eq!(inner.s.data[0], 0.0, "inner arena must be distinct");
+            });
+            assert_eq!(outer.s.data[0], 7.0);
+        });
+    }
+
+    #[test]
+    fn reset_vec_reuses_and_fills() {
+        let mut v: Vec<f32> = Vec::new();
+        reset_vec(&mut v, 8, f32::NEG_INFINITY);
+        assert_eq!(v.len(), 8);
+        assert!(v.iter().all(|&x| x == f32::NEG_INFINITY));
+        let cap = v.capacity();
+        reset_vec(&mut v, 4, 0.0);
+        assert_eq!(v, vec![0.0; 4]);
+        assert_eq!(v.capacity(), cap);
+        copy_vec(&mut v, &[1.0, 2.0]);
+        assert_eq!(v, vec![1.0, 2.0]);
+        assert_eq!(v.capacity(), cap);
+    }
+}

@@ -1,7 +1,22 @@
 //! Bench harness (S14) — no criterion offline, so a small timed-run
 //! framework with warmup, repetitions and robust statistics. Used by all
 //! `benches/*.rs` targets (each with `harness = false`).
+//!
+//! Every [`Bencher::run`] result is also recorded in a process-global
+//! registry; a bench `main` ends with [`emit_json`]`("bench_name")`,
+//! which writes the machine-readable `BENCH_<name>.json` next to the
+//! stdout table — shape, allocation, ns/iter and items/sec per row — so
+//! the perf trajectory of the repo can finally be tracked across PRs
+//! (point `PASA_BENCH_JSON_DIR` somewhere to collect them). Use
+//! [`Bencher::run_tagged`] when a row has structured shape/allocation
+//! metadata; untagged rows carry their name only.
+//!
+//! CI smoke mode: `PASA_BENCH_SMOKE=1` makes [`smoke`] return true —
+//! benches shrink to one tiny shape and [`Bencher::smoke`]-sized
+//! iteration counts, so the bench binaries *run* (and emit JSON) on every
+//! CI pass instead of merely compiling.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Result of one benchmark.
@@ -73,9 +88,44 @@ impl Bencher {
         }
     }
 
+    /// Minimal configuration for the CI smoke pass: prove the bench runs
+    /// end to end and emits JSON, without spending CI minutes on it.
+    pub fn smoke() -> Bencher {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 1,
+            max_iters: 2,
+            budget_s: 0.25,
+        }
+    }
+
+    /// The bench configuration for the current environment: [`smoke`]
+    /// under `PASA_BENCH_SMOKE=1`, otherwise the given default.
+    pub fn for_env(default: Bencher) -> Bencher {
+        if smoke() {
+            Bencher::smoke()
+        } else {
+            default
+        }
+    }
+
     /// Time `f`, preventing dead-code elimination through the returned
-    /// value's drop.
-    pub fn run<T>(&self, name: &str, items_per_iter: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    /// value's drop. The result is also recorded (untagged) in the
+    /// process-global registry drained by [`emit_json`].
+    pub fn run<T>(&self, name: &str, items_per_iter: f64, f: impl FnMut() -> T) -> BenchResult {
+        self.run_tagged(name, "", "", items_per_iter, f)
+    }
+
+    /// [`Self::run`] with structured shape/allocation tags carried into
+    /// the JSON record (the stdout table is unchanged).
+    pub fn run_tagged<T>(
+        &self,
+        name: &str,
+        shape: &str,
+        alloc: &str,
+        items_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) -> BenchResult {
         for _ in 0..self.warmup_iters {
             std::hint::black_box(f());
         }
@@ -90,7 +140,7 @@ impl Bencher {
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = samples.len();
-        BenchResult {
+        let result = BenchResult {
             name: name.to_string(),
             iters: n,
             mean_s: samples.iter().sum::<f64>() / n as f64,
@@ -98,7 +148,115 @@ impl Bencher {
             min_s: samples[0],
             p95_s: samples[((n as f64 * 0.95) as usize).min(n - 1)],
             items_per_iter,
+        };
+        record(&result, shape, alloc);
+        result
+    }
+}
+
+/// True when the CI smoke pass is running (`PASA_BENCH_SMOKE=1`): benches
+/// shrink to one tiny shape each.
+pub fn smoke() -> bool {
+    std::env::var("PASA_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// One registry row of the JSON report.
+struct JsonRow {
+    name: String,
+    shape: String,
+    alloc: String,
+    iters: usize,
+    mean_ns: f64,
+    median_ns: f64,
+    min_ns: f64,
+    p95_ns: f64,
+    items_per_iter: f64,
+    items_per_sec: f64,
+}
+
+static REGISTRY: Mutex<Vec<JsonRow>> = Mutex::new(Vec::new());
+
+fn record(r: &BenchResult, shape: &str, alloc: &str) {
+    REGISTRY.lock().unwrap().push(JsonRow {
+        name: r.name.clone(),
+        shape: shape.to_string(),
+        alloc: alloc.to_string(),
+        iters: r.iters,
+        mean_ns: r.mean_s * 1e9,
+        median_ns: r.median_s * 1e9,
+        min_ns: r.min_s * 1e9,
+        p95_ns: r.p95_s * 1e9,
+        items_per_iter: r.items_per_iter,
+        items_per_sec: r.items_per_sec(),
+    });
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
         }
+    }
+    out
+}
+
+/// Finite numbers only (NaN/inf are not JSON); benches never produce
+/// them, but a malformed report must not poison the perf history.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Drain the result registry into `BENCH_<bench>.json` (in
+/// `PASA_BENCH_JSON_DIR`, default `.`). Call once at the end of each
+/// bench `main`. Failure to write is a warning, never a bench failure.
+pub fn emit_json(bench: &str) {
+    let dir = std::env::var("PASA_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    emit_json_to(&dir, bench);
+}
+
+/// [`emit_json`] with an explicit output directory — no environment read
+/// or mutation, so it is safe to exercise from the (multithreaded) test
+/// harness.
+pub fn emit_json_to(dir: &str, bench: &str) {
+    let rows = std::mem::take(&mut *REGISTRY.lock().unwrap());
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+    body.push_str(&format!("  \"smoke\": {},\n", smoke()));
+    body.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"name\": \"{}\", \"shape\": \"{}\", \"alloc\": \"{}\", \"iters\": {}, \
+             \"mean_ns\": {}, \"median_ns\": {}, \"min_ns\": {}, \"p95_ns\": {}, \
+             \"items_per_iter\": {}, \"items_per_sec\": {}}}{}\n",
+            json_escape(&r.name),
+            json_escape(&r.shape),
+            json_escape(&r.alloc),
+            r.iters,
+            json_num(r.mean_ns),
+            json_num(r.median_ns),
+            json_num(r.min_ns),
+            json_num(r.p95_ns),
+            json_num(r.items_per_iter),
+            json_num(r.items_per_sec),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    let path = format!("{dir}/BENCH_{bench}.json");
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("\n[bench] wrote {path} ({} results)", rows.len()),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
     }
 }
 
@@ -126,5 +284,27 @@ mod tests {
         assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
         assert!(r.items_per_sec() > 0.0);
         assert!(format!("{r}").contains("spin"));
+    }
+
+    #[test]
+    fn json_report_is_written_and_well_formed() {
+        let b = Bencher::smoke();
+        let dir = std::env::temp_dir().join("pasa_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = b.run_tagged("tiny \"quoted\"", "8x8", "FA(FP32)", 8.0, || 1 + 1);
+        // The env-free entry: tests must not setenv in a threaded harness.
+        emit_json_to(dir.to_str().unwrap(), "unit_test");
+        let path = dir.join("BENCH_unit_test.json");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"bench\": \"unit_test\""));
+        assert!(body.contains("\\\"quoted\\\""));
+        assert!(body.contains("\"shape\": \"8x8\""));
+        assert!(body.contains("\"alloc\": \"FA(FP32)\""));
+        assert!(body.contains("\"mean_ns\""));
+        // Balanced braces/brackets — cheap structural sanity without a
+        // JSON parser in the dep-free build.
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+        assert_eq!(body.matches('[').count(), body.matches(']').count());
+        std::fs::remove_file(path).ok();
     }
 }

@@ -44,6 +44,7 @@ use crate::model::{sample, tokenizer, ModelDims, Specials};
 use crate::runtime::{LabModel, ModelRuntime};
 use crate::workloads::Pcg64;
 use anyhow::{Context, Result};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Engine configuration.
@@ -528,9 +529,23 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    /// Lab-backend decode: one paged attention pass per active slot, per
-    /// layer — `O(len_tokens)` page gathers, kernel telemetry into the
-    /// guard, per-slot PASA replay on a trip.
+    /// Lab-backend decode: the active slots' paged decode steps fan out
+    /// over the persistent worker pool (`O(len_tokens)` page gathers each,
+    /// kernel telemetry into the guard, per-slot PASA replay on a trip).
+    ///
+    /// Three phases keep the shared-pool writes sound and the results
+    /// bit-identical to the old sequential loop:
+    /// 1. **prepare** (sequential, exclusive pool): grow each slot's
+    ///    capacity and privatize the pages its step will write
+    ///    ([`SeqCache::prepare_step`]); pool exhaustion here is per-slot
+    ///    backpressure (evict), never a crash.
+    /// 2. **compute** (parallel, shared pool): each runnable slot's step
+    ///    — including any guard-triggered PASA replay — runs as a worker
+    ///    pool tile via [`LabModel::decode_step_prepared`]; slots own
+    ///    their caches, writes land only in their privatized pages.
+    /// 3. **fold** (sequential, in slot order): metrics, then sampling —
+    ///    so the RNG stream matches the sequential implementation
+    ///    token for token.
     fn decode_round_lab(&mut self) -> Result<()> {
         let d = self.dims;
         let b = self.slots.len();
@@ -546,63 +561,147 @@ impl<'rt> Engine<'rt> {
             return Ok(());
         }
         self.metrics.decode_batch_occupancy.push(members.len());
-        let Backend::Lab(model) = &self.backend else {
-            unreachable!("decode_round_lab on a PJRT engine")
-        };
-        for i in members {
+
+        // Phase 1: allocate/privatize under exclusive pool access.
+        let mut runnable: Vec<usize> = Vec::with_capacity(members.len());
+        for &i in &members {
             let s = self.slots[i].as_mut().unwrap();
-            let alloc =
-                Allocation::parse(s.guard.allocation()).expect("guard allocation maps to the lab");
-            let tok = *s.tokens.last().unwrap();
             let pos = s.tokens.len() - 1;
-
-            let t0 = Instant::now();
-            let (mut logits, sig) =
-                match model.decode_step(alloc, tok, pos, &mut s.cache, &mut self.pool) {
-                    Ok(r) => r,
-                    // KV pool exhausted mid-flight: backpressure, not a
-                    // crash — evict the slot, its pages free up at
-                    // retirement. Anything else is a real failure.
-                    Err(e) if is_kv_backpressure(&e) => {
-                        s.phase = Phase::Finished(FinishReason::Evicted);
-                        continue;
-                    }
-                    Err(e) => return Err(e.context("lab decode step")),
-                };
-            self.metrics.decode_steps += 1;
-            self.metrics.step_latency.record(t0.elapsed().as_secs_f64());
-            if sig.overflow_events > 0 || sig.nonfinite > 0 {
-                self.metrics.overflow_steps += 1;
-            }
-
-            if observe_guard(&mut s.guard, &sig, &mut self.metrics) {
-                // Replay this slot's step under PASA. The step is
-                // functional in (token, pos, cache prefix), so the replay
-                // rewrites the same KV rows — the cache ends up exactly as
-                // if PASA had run the step first.
-                let t1 = Instant::now();
-                match model.decode_step(Allocation::Pasa16, tok, pos, &mut s.cache, &mut self.pool)
-                {
-                    Ok((l2, _)) => logits = l2,
-                    Err(e) if is_kv_backpressure(&e) => {
-                        s.phase = Phase::Finished(FinishReason::Evicted);
-                        continue;
-                    }
-                    Err(e) => return Err(e.context("lab decode replay under PASA")),
+            match s.cache.prepare_step(&mut self.pool, pos) {
+                Ok(()) => runnable.push(i),
+                // KV pool exhausted: backpressure, not a crash — evict the
+                // slot, its pages free up at retirement.
+                Err(e) if is_kv_backpressure(&e) => {
+                    s.phase = Phase::Finished(FinishReason::Evicted);
                 }
+                Err(e) => return Err(e.context("lab decode prepare")),
+            }
+        }
+        if runnable.is_empty() {
+            return Ok(());
+        }
+
+        // Phase 2: the compute steps as pool tiles. Each task takes its
+        // slot's state out of the table (so it owns the cache and guard)
+        // and shares the model and the page pool read-mostly.
+        struct StepOut {
+            logits: Vec<f32>,
+            steps: u32,
+            latencies: [f64; 2],
+            overflowed: bool,
+            switch_delta: u64,
+            err: Option<anyhow::Error>,
+        }
+        let tasks: Vec<Mutex<(usize, ActiveRequest, StepOut)>> = runnable
+            .iter()
+            .map(|&i| {
+                let ar = self.slots[i].take().unwrap();
+                Mutex::new((
+                    i,
+                    ar,
+                    StepOut {
+                        logits: Vec::new(),
+                        steps: 0,
+                        latencies: [0.0; 2],
+                        overflowed: false,
+                        switch_delta: 0,
+                        err: None,
+                    },
+                ))
+            })
+            .collect();
+        {
+            let Backend::Lab(model) = &self.backend else {
+                unreachable!("decode_round_lab on a PJRT engine")
+            };
+            let model: &LabModel = model;
+            let pool_ref = &self.pool;
+            let tasks_ref = &tasks;
+            crate::pool::global().run_tiles(tasks_ref.len(), |t| {
+                let mut slot = tasks_ref[t].lock().unwrap();
+                let (_, ar, out) = &mut *slot;
+                let alloc = Allocation::parse(ar.guard.allocation())
+                    .expect("guard allocation maps to the lab");
+                let tok = *ar.tokens.last().unwrap();
+                let pos = ar.tokens.len() - 1;
+                let t0 = Instant::now();
+                match model.decode_step_prepared(alloc, tok, pos, &mut ar.cache, pool_ref) {
+                    Ok((logits, sig)) => {
+                        out.steps = 1;
+                        out.latencies[0] = t0.elapsed().as_secs_f64();
+                        if sig.overflow_events > 0 || sig.nonfinite > 0 {
+                            out.overflowed = true;
+                        }
+                        let before = ar.guard.switches;
+                        let replay = ar.guard.observe_signal(&sig);
+                        out.switch_delta = (ar.guard.switches - before) as u64;
+                        if replay {
+                            // Replay this slot's step under PASA. The step
+                            // is functional in (token, pos, cache prefix),
+                            // so the replay rewrites the same KV rows —
+                            // the cache ends up exactly as if PASA had run
+                            // the step first.
+                            let t1 = Instant::now();
+                            match model.decode_step_prepared(
+                                Allocation::Pasa16,
+                                tok,
+                                pos,
+                                &mut ar.cache,
+                                pool_ref,
+                            ) {
+                                Ok((l2, _)) => {
+                                    out.logits = l2;
+                                    out.steps = 2;
+                                    out.latencies[1] = t1.elapsed().as_secs_f64();
+                                }
+                                Err(e) => {
+                                    out.err =
+                                        Some(e.context("lab decode replay under PASA"))
+                                }
+                            }
+                        } else {
+                            out.logits = logits;
+                        }
+                    }
+                    Err(e) => out.err = Some(e.context("lab decode step")),
+                }
+            });
+        }
+
+        // Phase 3: restore slots, fold metrics, sample in slot order.
+        let mut failure: Option<anyhow::Error> = None;
+        for task in tasks {
+            let (i, ar, out) = task.into_inner().unwrap();
+            self.slots[i] = Some(ar);
+            for step in 0..out.steps as usize {
                 self.metrics.decode_steps += 1;
                 // Replayed steps are real serving latency: record them.
-                self.metrics.step_latency.record(t1.elapsed().as_secs_f64());
+                self.metrics.step_latency.record(out.latencies[step]);
             }
-
+            if out.overflowed {
+                self.metrics.overflow_steps += 1;
+            }
+            self.metrics.guard_switches += out.switch_delta;
+            let s = self.slots[i].as_mut().unwrap();
+            if let Some(e) = out.err {
+                if is_kv_backpressure(&e) {
+                    s.phase = Phase::Finished(FinishReason::Evicted);
+                } else if failure.is_none() {
+                    failure = Some(e);
+                }
+                continue;
+            }
             Self::advance_slot(
                 s,
-                &logits,
+                &out.logits,
                 d.max_seq,
                 self.sp.eos,
                 &mut self.rng,
                 &mut self.metrics,
             );
+        }
+        if let Some(e) = failure {
+            return Err(e);
         }
         Ok(())
     }

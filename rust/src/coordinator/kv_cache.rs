@@ -10,6 +10,7 @@
 
 use crate::attention::{KvPageSource, KvView};
 use anyhow::{bail, Result};
+use std::cell::UnsafeCell;
 
 /// Identifier of one page in the pool arena (same `u32` as the attention
 /// lab's `attention::PageId` — a paged `KvView` indexes this pool).
@@ -17,21 +18,39 @@ pub type PageId = u32;
 
 /// Fixed-capacity page pool. Each page holds `page_tokens` rows of
 /// `row_width` f32 (one layer's K *or* V slice of those tokens).
+///
+/// Page *data* is interior-mutable (`UnsafeCell`) so the engine's
+/// parallel decode can write each slot's freshly-privatized pages through
+/// a shared `&KvPool` while other slots read their own (disjoint) pages —
+/// see [`SeqCache::write_row_prepared`] for the checked invariant. Page
+/// *metadata* (refcounts, the free list) is only ever touched through
+/// `&mut self`.
 pub struct KvPool {
     pub page_tokens: usize,
     pub row_width: usize,
-    arena: Vec<f32>,
+    arena: Vec<UnsafeCell<f32>>,
     refcount: Vec<u32>,
     free: Vec<PageId>,
     total_pages: usize,
 }
 
+// SAFETY: the arena is written either through `&mut self` (exclusive) or
+// through `page_write`, whose contract restricts writes to pages with
+// refcount 1 reachable from exactly one sequence's page table — so no two
+// threads ever access the same page concurrently with at least one
+// writing. Metadata is `&mut self`-only and the arena is never resized
+// after construction.
+unsafe impl Sync for KvPool {}
+
 impl KvPool {
     pub fn new(total_pages: usize, page_tokens: usize, row_width: usize) -> KvPool {
+        let floats = total_pages * page_tokens * row_width;
+        let mut arena = Vec::with_capacity(floats);
+        arena.resize_with(floats, || UnsafeCell::new(0.0));
         KvPool {
             page_tokens,
             row_width,
-            arena: vec![0.0; total_pages * page_tokens * row_width],
+            arena,
             refcount: vec![0; total_pages],
             free: (0..total_pages as PageId).rev().collect(),
             total_pages,
@@ -78,9 +97,9 @@ impl KvPool {
                 self.refcount[id as usize] = 1;
                 // Fresh pages are zeroed: the PASA kernels' pseudo-average
                 // must not see stale garbage in masked positions.
-                let off = id as usize * self.page_floats();
-                let pf = self.page_floats();
-                self.arena[off..off + pf].fill(0.0);
+                for c in self.page_mut(id).iter_mut() {
+                    *c = 0.0;
+                }
                 Ok(id)
             }
             None => bail!("{} ({} pages)", Self::EXHAUSTED, self.total_pages),
@@ -102,13 +121,37 @@ impl KvPool {
 
     fn page(&self, id: PageId) -> &[f32] {
         let off = id as usize * self.page_floats();
-        &self.arena[off..off + self.page_floats()]
+        let pf = self.page_floats();
+        let cells = &self.arena[off..off + pf];
+        // SAFETY: UnsafeCell<f32> is layout-compatible with f32, and the
+        // pool's Sync invariant guarantees no thread writes this page
+        // while a read borrow can exist (writes require either &mut self
+        // or exclusive page ownership).
+        unsafe { &*(cells as *const [UnsafeCell<f32>] as *const [f32]) }
     }
 
     fn page_mut(&mut self, id: PageId) -> &mut [f32] {
         let off = id as usize * self.page_floats();
         let pf = self.page_floats();
-        &mut self.arena[off..off + pf]
+        let cells = &mut self.arena[off..off + pf];
+        // SAFETY: `&mut self` is exclusive pool access.
+        unsafe { &mut *(cells as *mut [UnsafeCell<f32>] as *mut [f32]) }
+    }
+
+    /// Write `src` into page `id` starting at float offset `off`, through
+    /// a **shared** pool reference — the parallel-decode write path.
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access to page `id` for the
+    /// duration of the call: no other thread may read or write it.
+    /// [`SeqCache::write_row_prepared`] upholds this by only writing
+    /// refcount-1 pages reachable solely from the calling slot's table.
+    unsafe fn page_write(&self, id: PageId, off: usize, src: &[f32]) {
+        let base = id as usize * self.page_floats() + off;
+        debug_assert!(off + src.len() <= self.page_floats());
+        for (i, &x) in src.iter().enumerate() {
+            *self.arena[base + i].get() = x;
+        }
     }
 }
 
@@ -238,6 +281,63 @@ impl SeqCache {
         pool.page_mut(vid)[off * w..(off + 1) * w].copy_from_slice(v_row);
         self.len_tokens = self.len_tokens.max(pos + 1);
         Ok(())
+    }
+
+    /// Do everything a decode step at `pos` needs *exclusive* pool access
+    /// for — grow capacity and privatize (CoW) the K/V pages holding
+    /// `pos` across all layers — so the step's compute can then run
+    /// against a shared `&KvPool` ([`Self::write_row_prepared`]). The
+    /// serving engine calls this per slot, sequentially, before fanning
+    /// the slots' decode steps onto the worker pool. Pool exhaustion is
+    /// the usual backpressure `Err`; on failure the tables are untouched
+    /// or grown-but-unwritten — never corrupted.
+    pub fn prepare_step(&mut self, pool: &mut KvPool, pos: usize) -> Result<()> {
+        self.ensure_capacity(pool, pos + 1)?;
+        let pg = pos / pool.page_tokens;
+        for (kp, vp) in &mut self.pages {
+            Self::ensure_private(pool, &mut kp[pg])?;
+            Self::ensure_private(pool, &mut vp[pg])?;
+        }
+        Ok(())
+    }
+
+    /// Write one token's K and V rows through a **shared** pool reference
+    /// — the parallel-decode twin of [`Self::write_row`]. Requires a
+    /// prior [`Self::prepare_step`] covering `pos`: the target pages must
+    /// exist and be privately owned (refcount 1), which this method
+    /// asserts so a violated invariant is a loud panic, not silent data
+    /// corruption. Bit-identical to `write_row` (same bytes to the same
+    /// pages); it merely cannot allocate or copy-on-write.
+    pub fn write_row_prepared(
+        &mut self,
+        pool: &KvPool,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let w = pool.row_width;
+        assert_eq!(k_row.len(), w);
+        assert_eq!(v_row.len(), w);
+        let (pg, off) = (pos / pool.page_tokens, pos % pool.page_tokens);
+        let (kp, vp) = &self.pages[layer];
+        let (kid, vid) = (kp[pg], vp[pg]);
+        assert_eq!(
+            pool.refcount[kid as usize], 1,
+            "write_row_prepared on a shared K page (missing prepare_step?)"
+        );
+        assert_eq!(
+            pool.refcount[vid as usize], 1,
+            "write_row_prepared on a shared V page (missing prepare_step?)"
+        );
+        // SAFETY: both pages are refcount-1, so this slot's table is the
+        // only reference to them, and we hold `&mut self` — no other
+        // thread can touch these pages.
+        unsafe {
+            pool.page_write(kid, off * w, k_row);
+            pool.page_write(vid, off * w, v_row);
+        }
+        self.len_tokens = self.len_tokens.max(pos + 1);
     }
 
     /// Assemble this sequence's K (or V) for `layer` into a dense
@@ -461,6 +561,54 @@ mod tests {
         b.release(&mut p);
         a.release(&mut p);
         assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn prepared_writes_match_the_exclusive_path() {
+        // write_row_prepared must land the same bytes as write_row, and
+        // prepare_step must privatize a forked page so the prepared write
+        // is legal (and CoW-correct: the original stays intact).
+        let mut p = pool();
+        let mut a = SeqCache::new(2);
+        a.ensure_capacity(&mut p, 4).unwrap();
+        let row = [2.0f32; 8];
+        a.write_row(&mut p, 0, 0, &row, &row).unwrap();
+        let mut b = a.fork(&mut p);
+        b.prepare_step(&mut p, 1).unwrap();
+        let row2 = [9.5f32; 8];
+        b.write_row_prepared(&p, 0, 1, &row2, &row2);
+        assert_eq!(b.len_tokens, 2);
+        let mut db = vec![0.0f32; 4 * 8];
+        b.fill_dense(&p, 0, false, &mut db).unwrap();
+        assert_eq!(&db[..8], &row, "shared prefix preserved");
+        assert_eq!(&db[8..16], &row2, "prepared write landed");
+        let mut da = vec![0.0f32; 4 * 8];
+        a.fill_dense(&p, 0, false, &mut da).unwrap();
+        assert_eq!(&da[8..16], &[0.0; 8], "original must not see the write");
+        // Equivalence: the same write through the exclusive path gives
+        // bit-identical page contents.
+        let mut c = SeqCache::new(2);
+        c.ensure_capacity(&mut p, 4).unwrap();
+        c.write_row(&mut p, 0, 1, &row2, &row2).unwrap();
+        let mut dc = vec![0.0f32; 4 * 8];
+        c.fill_dense(&p, 0, false, &mut dc).unwrap();
+        assert_eq!(&dc[8..16], &db[8..16]);
+        a.release(&mut p);
+        b.release(&mut p);
+        c.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "write_row_prepared on a shared K page")]
+    fn prepared_write_on_a_shared_page_panics() {
+        // The refcount-1 assertion is the safety net under the parallel
+        // decode path: skipping prepare_step must fail loudly.
+        let mut p = pool();
+        let mut a = SeqCache::new(1);
+        a.ensure_capacity(&mut p, 4).unwrap();
+        let mut b = a.fork(&mut p); // pages now shared (refcount 2)
+        b.write_row_prepared(&p, 0, 0, &[1.0; 8], &[1.0; 8]);
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod model;
 pub mod numerics;
+pub mod pool;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;

@@ -3,6 +3,16 @@
 //! The attention lab emulates each precision allocation of Figs. 1–3 by
 //! re-rounding intermediate values to the storage format after every
 //! operation. `Format` enumerates the paper's Table 1 rows.
+//!
+//! ## Monomorphized rounding
+//!
+//! [`Format::round`] is a 4-way `match` per element — fine for scalar call
+//! sites, but inside the GEMM/vector-op inner loops the dispatch used to
+//! be re-decided per element. The hot kernels now pick a [`RoundSpec`]
+//! **once per call** via [`crate::mono_format!`] and run a monomorphized
+//! loop whose rounding call inlines to the underlying bitwise conversion
+//! (`round_f16` / `round_bf16` / `round_f8e4m3` are all pure bit
+//! manipulation; `F32` rounding compiles to the identity).
 
 use super::bf16::{fl_bf16_f64, round_bf16};
 use super::f16::{fl_f16_f64, round_f16};
@@ -62,6 +72,18 @@ impl Format {
         }
     }
 
+    /// Round a whole slice in place with the format branch taken once —
+    /// the bulk-storage path ([`crate::tensor::Matrix::round_to`]).
+    pub fn round_slice(self, xs: &mut [f32]) {
+        crate::mono_format!(self, R => {
+            if !R::IS_IDENTITY {
+                for x in xs.iter_mut() {
+                    *x = R::round(*x);
+                }
+            }
+        });
+    }
+
     /// Single-rounding `fl_tp` from f64 (Appendix A, Eq. 21).
     #[inline]
     pub fn fl(self, x: f64) -> f64 {
@@ -74,34 +96,179 @@ impl Format {
     }
 }
 
-/// Round to FP8 E4M3 (OCP spec: bias 7, max 448, no inf — saturating NaN;
-/// we map overflow to NaN like E4M3FN).
-pub fn round_f8e4m3(x: f32) -> f32 {
-    if x.is_nan() {
-        return f32::NAN;
+/// A compile-time rounding strategy: one implementor per [`Format`], so
+/// inner loops can be monomorphized over the format instead of matching
+/// per element. Instantiate via [`crate::mono_format!`].
+pub trait RoundSpec {
+    /// The format this spec rounds to.
+    const FMT: Format;
+    /// True only for [`RoundF32`] — lets loops skip a no-op rounding pass.
+    const IS_IDENTITY: bool = false;
+    fn round(x: f32) -> f32;
+}
+
+/// Monomorphized [`Format::F16`] rounding.
+pub struct RoundF16;
+impl RoundSpec for RoundF16 {
+    const FMT: Format = Format::F16;
+    #[inline(always)]
+    fn round(x: f32) -> f32 {
+        round_f16(x)
     }
-    if x == 0.0 {
-        return x;
+}
+
+/// Monomorphized [`Format::Bf16`] rounding.
+pub struct RoundBf16;
+impl RoundSpec for RoundBf16 {
+    const FMT: Format = Format::Bf16;
+    #[inline(always)]
+    fn round(x: f32) -> f32 {
+        round_bf16(x)
     }
-    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
-    let a = x.abs();
-    if a > 464.0 {
-        // beyond the rounding boundary (448 + half ulp 16) -> NaN (E4M3FN)
-        return f32::NAN;
+}
+
+/// Monomorphized [`Format::F32`] rounding (the identity).
+pub struct RoundF32;
+impl RoundSpec for RoundF32 {
+    const FMT: Format = Format::F32;
+    const IS_IDENTITY: bool = true;
+    #[inline(always)]
+    fn round(x: f32) -> f32 {
+        x
     }
-    // subnormal quantum 2^-9; normal quantum 2^(exp-3)
-    let exp = a.log2().floor() as i32;
-    let q = if exp < -6 {
-        2f32.powi(-9)
-    } else {
-        2f32.powi(exp - 3)
+}
+
+/// Monomorphized [`Format::F8E4M3`] rounding.
+pub struct RoundF8;
+impl RoundSpec for RoundF8 {
+    const FMT: Format = Format::F8E4M3;
+    #[inline(always)]
+    fn round(x: f32) -> f32 {
+        round_f8e4m3(x)
+    }
+}
+
+/// Expand `$body` once per [`Format`] with `$R` bound to the matching
+/// [`RoundSpec`] type — the "choose the rounding branch once per call"
+/// primitive of the hot kernels:
+///
+/// ```ignore
+/// crate::mono_format!(fmt, R => rowsum_mono::<R>(m, out));
+/// ```
+#[macro_export]
+macro_rules! mono_format {
+    ($fmt:expr, $R:ident => $body:expr) => {
+        match $fmt {
+            $crate::numerics::Format::F16 => {
+                type $R = $crate::numerics::round::RoundF16;
+                $body
+            }
+            $crate::numerics::Format::Bf16 => {
+                type $R = $crate::numerics::round::RoundBf16;
+                $body
+            }
+            $crate::numerics::Format::F32 => {
+                type $R = $crate::numerics::round::RoundF32;
+                $body
+            }
+            $crate::numerics::Format::F8E4M3 => {
+                type $R = $crate::numerics::round::RoundF8;
+                $body
+            }
+        }
     };
-    let m = (a as f64 / q as f64).round_ties_even() as f32;
-    let v = (m * q).min(448.0);
-    // m*q can round up to the next binade boundary; that is still on-grid
-    // except at 464 -> 448 saturation handled by min (448+16 ties to 448's
-    // even neighbour 480 which doesn't exist in E4M3FN -> saturate).
-    sign * v
+}
+
+/// RTNE right-shift (guard/round/sticky collapsed) — the same helper shape
+/// as the binary16 converter's, for the 24-bit f32 significand.
+#[inline]
+fn round_shift_rtne_u32(v: u32, s: u32) -> u32 {
+    if s == 0 {
+        return v;
+    }
+    if s > 31 {
+        return 0;
+    }
+    let keep = v >> s;
+    let rem = v & ((1u32 << s) - 1);
+    let half = 1u32 << (s - 1);
+    if rem > half || (rem == half && keep & 1 == 1) {
+        keep + 1
+    } else {
+        keep
+    }
+}
+
+/// Convert an `f32` to FP8 E4M3FN bits (sign 1, exp 4 @ bias 7, mant 3)
+/// with IEEE round-to-nearest-even — pure bit manipulation, no
+/// transcendental calls (the old implementation paid a `log2().floor()`
+/// plus `powi` per element).
+///
+/// E4M3FN encoding notes: there is no infinity; the all-ones pattern
+/// `S.1111.111` is the single NaN. Values that round beyond the largest
+/// finite magnitude 448 therefore become NaN — but 464 (the exact RTNE
+/// midpoint between 448 = `1110₂·2⁵` and the non-existent 480) ties *down*
+/// to the even mantissa 448.
+pub fn f32_to_f8e4m3_bits(f: f32) -> u8 {
+    let x = f.to_bits();
+    let sign = ((x >> 24) & 0x80) as u8;
+    let abs = x & 0x7fff_ffff;
+
+    if abs >= 0x7f80_0000 {
+        // f32 inf/NaN: E4M3FN has no inf — both map to the NaN pattern.
+        return sign | 0x7f;
+    }
+    if abs == 0 {
+        return sign; // ±0 preserved
+    }
+    let e32 = ((abs >> 23) as i32) - 127;
+    let mant24 = (abs & 0x7f_ffff) | 0x80_0000;
+    if e32 < -6 {
+        // Subnormal range: grid quantum 2^-9, target integer
+        // m = round(value · 2^9) = RTNE-shift of the 24-bit significand.
+        // value = mant24 · 2^(e32 − 23)  ⇒  shift = 23 − 9 − e32.
+        let s = (14 - e32) as u32;
+        let m = round_shift_rtne_u32(mant24, s);
+        // m can round up to 8 = smallest normal (exp field 1, mant 0) —
+        // the bit pattern is then exactly right, as in the f16 converter.
+        return sign | m as u8;
+    }
+    // Normal range: keep 4 significand bits (1 hidden + 3 stored).
+    let mut e8 = e32 + 7;
+    let mut m = round_shift_rtne_u32(mant24, 20); // in [0x8, 0x10]
+    if m >= 0x10 {
+        m >>= 1;
+        e8 += 1;
+    }
+    if e8 > 15 || (e8 == 15 && (m & 7) == 7) {
+        // Past the largest finite 448 (= exp 15, mant 6): the would-be
+        // exp-15/mant-7 code is NaN in E4M3FN ⇒ overflow saturates to NaN.
+        return sign | 0x7f;
+    }
+    sign | ((e8 as u8) << 3) | (m as u8 & 7)
+}
+
+/// Convert E4M3FN bits to `f32` (exact — every E4M3 value is an f32).
+pub fn f8e4m3_bits_to_f32(b: u8) -> f32 {
+    if (b & 0x7f) == 0x7f {
+        return f32::NAN;
+    }
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = (b >> 3) & 0x0f;
+    let mant = (b & 7) as f32;
+    if exp == 0 {
+        // Subnormal: value = mant · 2^-9 (exact in f32).
+        sign * mant * 2f32.powi(-9)
+    } else {
+        sign * (8.0 + mant) * 2f32.powi(exp as i32 - 10) // (1 + m/8)·2^(e−7)
+    }
+}
+
+/// Round to FP8 E4M3FN (OCP spec: bias 7, max 448, no inf; overflow maps
+/// to the NaN pattern). Bitwise RTNE — see [`f32_to_f8e4m3_bits`].
+#[inline]
+pub fn round_f8e4m3(x: f32) -> f32 {
+    f8e4m3_bits_to_f32(f32_to_f8e4m3_bits(x))
 }
 
 #[cfg(test)]
@@ -131,10 +298,118 @@ mod tests {
         assert_eq!(round_f8e4m3(-448.0), -448.0);
     }
 
+    /// Every signed E4M3FN grid point (all 256 bit patterns) must be a
+    /// fixed point of the rounding, and the round-trip through f32 must be
+    /// bit-exact — the exhaustive pin for the bitwise converter.
+    #[test]
+    fn f8_exhaustive_grid_round_trip() {
+        for bits in 0u16..=0xff {
+            let b = bits as u8;
+            let v = f8e4m3_bits_to_f32(b);
+            if (b & 0x7f) == 0x7f {
+                assert!(v.is_nan(), "bits {b:#04x} must decode to NaN");
+                assert_eq!(f32_to_f8e4m3_bits(v) & 0x7f, 0x7f);
+                continue;
+            }
+            assert!(v.is_finite(), "bits {b:#04x}");
+            let back = f32_to_f8e4m3_bits(v);
+            // −0.0 and +0.0 keep their sign bit; everything else is exact.
+            assert_eq!(back, b, "bits {b:#04x} (value {v})");
+            assert_eq!(round_f8e4m3(v).to_bits(), v.to_bits(), "fixed point at {v}");
+        }
+    }
+
+    /// Midpoints between adjacent grid values must tie to the even
+    /// mantissa, and off-midpoints to the nearer neighbour — checked for
+    /// every adjacent positive pair (normals and subnormals).
+    #[test]
+    fn f8_ties_to_even_between_all_neighbours() {
+        // Positive finite grid, ascending: bits 0x00..=0x7e decode in
+        // monotonically increasing order (sign-magnitude encoding).
+        let grid: Vec<f32> = (0u8..=0x7e).map(f8e4m3_bits_to_f32).collect();
+        for w in grid.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let mid = (lo as f64 + hi as f64) / 2.0;
+            let lo_bits = f32_to_f8e4m3_bits(lo);
+            let hi_bits = f32_to_f8e4m3_bits(hi);
+            let even = if lo_bits & 1 == 0 { lo } else { hi };
+            assert_eq!(
+                round_f8e4m3(mid as f32),
+                even,
+                "midpoint {mid} between {lo} ({lo_bits:#04x}) and {hi} ({hi_bits:#04x})"
+            );
+            // Slightly off the midpoint rounds to the nearer value.
+            let q = (hi - lo) as f64;
+            assert_eq!(round_f8e4m3((mid - q / 16.0) as f32), lo, "below mid of [{lo},{hi}]");
+            assert_eq!(round_f8e4m3((mid + q / 16.0) as f32), hi, "above mid of [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn f8_overflow_and_saturation_boundary() {
+        // 464 is the midpoint between 448 (even mantissa 6) and the
+        // non-existent 480: RTNE ties down to 448.
+        assert_eq!(round_f8e4m3(464.0), 448.0);
+        assert_eq!(round_f8e4m3(-464.0), -448.0);
+        assert_eq!(round_f8e4m3(460.0), 448.0);
+        // Anything beyond the midpoint overflows to NaN (E4M3FN).
+        assert!(round_f8e4m3(464.0001).is_nan());
+        assert!(round_f8e4m3(480.0).is_nan());
+        assert!(round_f8e4m3(-1e30).is_nan());
+        assert!(round_f8e4m3(f32::INFINITY).is_nan());
+        assert!(round_f8e4m3(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f8_subnormals_and_underflow() {
+        let min_sub = 2f32.powi(-9);
+        assert_eq!(round_f8e4m3(min_sub), min_sub);
+        assert_eq!(round_f8e4m3(min_sub * 0.49), 0.0);
+        assert_eq!(round_f8e4m3(min_sub * 0.5), 0.0); // tie to even (0)
+        assert_eq!(round_f8e4m3(min_sub * 0.51), min_sub);
+        assert_eq!(round_f8e4m3(min_sub * 1.5), 2.0 * min_sub); // tie to even
+        // Largest subnormal and the subnormal→normal rounding carry.
+        let max_sub = 7.0 * 2f32.powi(-9);
+        assert_eq!(round_f8e4m3(max_sub), max_sub);
+        assert_eq!(f32_to_f8e4m3_bits(max_sub), 0x07);
+        assert_eq!(f32_to_f8e4m3_bits(7.5 * 2f32.powi(-9)), 0x08); // ties up to 2^-6
+        // Signed zero is preserved.
+        assert_eq!(round_f8e4m3(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(round_f8e4m3(0.0).to_bits(), 0.0f32.to_bits());
+    }
+
     #[test]
     fn f32_identity() {
         for &v in &[1.0f32, 1e-30, 3.0e38, -7.25] {
             assert_eq!(Format::F32.round(v), v);
+        }
+    }
+
+    #[test]
+    fn round_slice_matches_scalar_round() {
+        let src: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 17.3).collect();
+        for fmt in [Format::F16, Format::Bf16, Format::F32, Format::F8E4M3] {
+            let mut s = src.clone();
+            fmt.round_slice(&mut s);
+            for (a, &x) in s.iter().zip(&src) {
+                let b = fmt.round(x);
+                assert!(
+                    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                    "{} at {x}: {a} vs {b}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mono_format_binds_the_matching_spec() {
+        for fmt in [Format::F16, Format::Bf16, Format::F32, Format::F8E4M3] {
+            let bound = crate::mono_format!(fmt, R => R::FMT);
+            assert_eq!(bound, fmt);
+            let x = 1.0471f32;
+            let r = crate::mono_format!(fmt, R => R::round(x));
+            assert_eq!(r.to_bits(), fmt.round(x).to_bits(), "{}", fmt.name());
         }
     }
 }

@@ -1,0 +1,303 @@
+//! Persistent worker pool (S15): the fan-out substrate of the attention
+//! hot path.
+//!
+//! The kernels' multi-head execution used to spawn-and-join one OS thread
+//! per head per forward (`thread::scope`), which made thread churn — not
+//! the math — the dominant cost of decode-shaped requests and a real tax
+//! on prefill. This module replaces that with one **lazily-initialized,
+//! process-wide pool** of `available_parallelism() − 1` workers (the
+//! submitting thread always participates, so total concurrency equals the
+//! core count). Work arrives as a *batch* of indexed tiles; workers and
+//! the submitter claim tile indices from a shared atomic cursor — simple
+//! work stealing: whoever is free takes the next (head × Q-block) tile,
+//! so a straggler head no longer serializes the whole forward.
+//!
+//! Determinism contract: [`WorkerPool::run_tiles`] executes `f(t)` exactly
+//! once for every `t < total`, with tiles writing disjoint outputs. The
+//! lab's tiles are pure functions of their inputs, so pooled execution is
+//! bit-identical to the sequential fallback ([`set_parallel`]`(false)`,
+//! the goldens' test hook) by construction.
+//!
+//! Sizing knob: `PASA_POOL_THREADS=<n>` caps the pool (0 ⇒ fully
+//! sequential). Read once at first use.
+//!
+//! Nesting is allowed and deadlock-free: a worker that submits a nested
+//! batch (e.g. an engine slot tile whose attention fans out per head)
+//! drives its own batch to completion before waiting, so progress never
+//! depends on another thread being idle.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One submitted fan-out: a lifetime-erased tile closure plus claim and
+/// completion state. See `run_tiles` for the safety argument that keeps
+/// the erased borrow sound.
+struct Batch {
+    /// The tile body. Erased to `'static`; only ever invoked while the
+    /// submitting `run_tiles` frame is alive.
+    job: &'static (dyn Fn(usize) + Sync),
+    /// Next unclaimed tile index (may overshoot `total`; claims at or
+    /// past `total` are no-ops).
+    next: AtomicUsize,
+    total: usize,
+    /// Count of *finished* tiles; guarded so completion can be awaited.
+    finished: Mutex<usize>,
+    done_cv: Condvar,
+    /// First tile panic's payload, re-raised on the submitter so the
+    /// original message survives (the `join().unwrap()` semantics the
+    /// per-head `thread::scope` used to provide).
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+impl Batch {
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.total
+    }
+
+    /// Claim-and-run tiles until none remain unclaimed. Panics inside a
+    /// tile are caught and recorded so the submitter can re-raise them
+    /// instead of wedging the completion count.
+    fn work(&self) {
+        loop {
+            let t = self.next.fetch_add(1, Ordering::Relaxed);
+            if t >= self.total {
+                return;
+            }
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (self.job)(t))) {
+                let mut p = self.panic.lock().unwrap();
+                if p.is_none() {
+                    *p = Some(payload);
+                }
+            }
+            let mut done = self.finished.lock().unwrap();
+            *done += 1;
+            if *done == self.total {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Shared {
+    /// Batches with unclaimed tiles. Submitters push, everyone claims,
+    /// exhausted entries are pruned by waiting workers and by the
+    /// submitter on completion.
+    queue: Mutex<Vec<Arc<Batch>>>,
+    work_cv: Condvar,
+}
+
+/// The shared tile-execution pool. Obtain via [`global`].
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+        });
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("pasa-worker-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        WorkerPool { shared, workers }
+    }
+
+    /// Number of background workers (the submitter is the `+1`).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `f(0..total)`, each index exactly once, across the pool
+    /// and the calling thread; returns when every tile has finished.
+    /// Panics (on the caller) if any tile panicked. Falls back to an
+    /// in-order sequential loop when the pool has no workers, there is
+    /// only one tile, or [`set_parallel`]`(false)` is in effect.
+    pub fn run_tiles<F: Fn(usize) + Sync>(&self, total: usize, f: F) {
+        if total == 0 {
+            return;
+        }
+        if self.workers == 0 || total == 1 || !parallel_enabled() {
+            for t in 0..total {
+                f(t);
+            }
+            return;
+        }
+        let job: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased borrow outlives every use. `work()` below
+        // runs tiles on this thread until the claim cursor passes
+        // `total`, and we then *block* until `finished == total` — i.e.
+        // until every claimed tile has returned — before leaving this
+        // frame. A worker that still holds the Arc afterwards can only
+        // observe an exhausted cursor and never touches `job` again.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+        let batch = Arc::new(Batch {
+            job,
+            next: AtomicUsize::new(0),
+            total,
+            finished: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Arc::clone(&batch));
+        }
+        self.shared.work_cv.notify_all();
+        // The submitter works its own batch: guarantees progress even if
+        // every worker is busy elsewhere (and makes nesting safe).
+        batch.work();
+        {
+            let mut done = batch.finished.lock().unwrap();
+            while *done < batch.total {
+                done = batch.done_cv.wait(done).unwrap();
+            }
+        }
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.retain(|b| !Arc::ptr_eq(b, &batch));
+        }
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(b) = q.iter().find(|b| !b.exhausted()) {
+                    break Arc::clone(b);
+                }
+                q.retain(|b| !b.exhausted());
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        batch.work();
+    }
+}
+
+/// Pool width: `PASA_POOL_THREADS` if set (0 ⇒ sequential), otherwise
+/// `available_parallelism`.
+fn configured_parallelism() -> usize {
+    if let Ok(s) = std::env::var("PASA_POOL_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n;
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The process-wide pool, spawned on first use.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(configured_parallelism().saturating_sub(1)))
+}
+
+static PARALLEL: AtomicBool = AtomicBool::new(true);
+
+/// Test hook: force [`WorkerPool::run_tiles`] into its in-order
+/// sequential fallback (`false`) or restore pooled execution (`true`).
+/// The bit-identity goldens run both modes and assert equal checksums.
+///
+/// The mode is **process-global**: tests that toggle it must hold
+/// [`test_mode_guard`] across the toggle-and-compare sequence, or a
+/// concurrently running test's toggle can silently change which mode a
+/// "sequential baseline" actually executed in (the outputs stay
+/// bit-identical either way — that's the invariant — but the comparison
+/// would stop discriminating).
+pub fn set_parallel(enabled: bool) {
+    PARALLEL.store(enabled, Ordering::SeqCst);
+}
+
+/// Serializes tests that toggle [`set_parallel`] within one process.
+/// Poisoning is ignored: a panicked holder's assertion failure is its
+/// own test's problem, not a reason to abort the others.
+pub fn test_mode_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Whether pooled execution is currently enabled (see [`set_parallel`]).
+pub fn parallel_enabled() -> bool {
+    PARALLEL.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_tile_runs_exactly_once() {
+        let pool = global();
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tiles(hits.len(), |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "tile {t}");
+        }
+    }
+
+    #[test]
+    fn sequential_fallback_matches_pooled_sum() {
+        let _mode = test_mode_guard();
+        let pool = global();
+        let run = |tiles: usize| {
+            let acc = AtomicU64::new(0);
+            pool.run_tiles(tiles, |t| {
+                acc.fetch_add((t as u64 + 1) * (t as u64 + 1), Ordering::Relaxed);
+            });
+            acc.load(Ordering::Relaxed)
+        };
+        let pooled = run(100);
+        set_parallel(false);
+        let sequential = run(100);
+        set_parallel(true);
+        assert_eq!(pooled, sequential);
+        assert_eq!(pooled, (1..=100u64).map(|x| x * x).sum::<u64>());
+    }
+
+    #[test]
+    fn nested_submission_completes() {
+        let pool = global();
+        let acc = AtomicU64::new(0);
+        pool.run_tiles(8, |_| {
+            pool.run_tiles(8, |t| {
+                acc.fetch_add(t as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 8 * 28);
+    }
+
+    #[test]
+    fn tile_panic_propagates_to_the_submitter() {
+        let pool = global();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tiles(4, |t| {
+                if t == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "tile panic must reach the submitter");
+        // The pool must remain usable afterwards.
+        let acc = AtomicU64::new(0);
+        pool.run_tiles(4, |t| {
+            acc.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 6);
+    }
+}

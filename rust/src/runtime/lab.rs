@@ -392,7 +392,26 @@ impl LabModel {
         pool: &mut KvPool,
     ) -> Result<(Vec<f32>, GuardSignal)> {
         ensure!(pos < self.dims.max_seq, "decode position past max_seq");
-        cache.ensure_capacity(pool, pos + 1)?;
+        cache.prepare_step(pool, pos)?;
+        self.decode_step_prepared(alloc, token, pos, cache, pool)
+    }
+
+    /// The compute half of [`Self::decode_step`], against a **shared**
+    /// pool reference — what lets the engine fan independent slots' decode
+    /// steps onto the worker pool concurrently. Requires a prior
+    /// [`SeqCache::prepare_step`] for `pos` (capacity grown, written
+    /// pages privatized); given that, it is bit-identical to the
+    /// exclusive-path step: same KV rows written to the same pages, same
+    /// kernels over the same views.
+    pub fn decode_step_prepared(
+        &self,
+        alloc: Allocation,
+        token: u32,
+        pos: usize,
+        cache: &mut SeqCache,
+        pool: &KvPool,
+    ) -> Result<(Vec<f32>, GuardSignal)> {
+        ensure!(pos < self.dims.max_seq, "decode position past max_seq");
         let dh = self.dims.d_head;
         let mut x = Matrix::from_vec(1, self.dims.d_model, self.embed(token, pos));
         let mut sig = GuardSignal::default();
@@ -401,9 +420,7 @@ impl LabModel {
             let q = matmul_nn(&h, &lw.wq, GemmPrecision::F32);
             let k = matmul_nn(&h, &lw.wk, GemmPrecision::F32);
             let v = matmul_nn(&h, &lw.wv, GemmPrecision::F32);
-            cache
-                .write_row(pool, li, pos, k.row(0), v.row(0))
-                .context("decode KV write-back")?;
+            cache.write_row_prepared(pool, li, pos, k.row(0), v.row(0));
             let attn = {
                 let (kview, vview) = cache.kv_views(pool, li);
                 let pairs: Vec<KvPair<'_>> = (0..self.dims.n_heads)

@@ -12,8 +12,21 @@
 //! `matmul_nt`/`matmul_nn` emulate all of these bit-exactly: inputs are
 //! assumed on the input format's grid already; `acc` controls per-step
 //! rounding of products and partial sums; `store` rounds the final element.
+//!
+//! ## Hot-path layout
+//!
+//! Every kernel here comes in two shapes: the classic allocating entry
+//! (`matmul_nt`, `matmul_nt_stats`, …) and an `_into` variant that writes
+//! into a caller-owned buffer (reused via [`Matrix::reset`]) and takes its
+//! A operand as a borrowed [`RowsRef`] — the attention Q-block loop runs
+//! entirely through the `_into` forms, so the inner KV sweep performs no
+//! heap allocation. The per-element `match` on the accumulate/store
+//! formats is hoisted out of the loops: each entry dispatches **once per
+//! call** through [`crate::mono_format!`] into a monomorphized core whose
+//! rounding inlines to the bitwise converters.
 
-use super::matrix::Matrix;
+use super::matrix::{Matrix, RowsRef};
+use crate::numerics::round::RoundSpec;
 use crate::numerics::Format;
 
 /// Accumulation and storage precision of one GEMM.
@@ -97,54 +110,68 @@ fn dot_f32(ar: &[f32], br: &[f32]) -> f32 {
 }
 
 /// One dot product under emulated low-precision accumulation (sequential
-/// systolic order) — the exact order of [`matmul_nt`]'s slow path.
+/// systolic order), monomorphized over the accumulate format — the exact
+/// order of the pre-refactor `dot_emulated`, with the per-element format
+/// `match` hoisted to the caller's one-time dispatch.
 #[inline]
-fn dot_emulated(ar: &[f32], br: &[f32], acc: Format) -> f32 {
+fn dot_emulated<A: RoundSpec>(ar: &[f32], br: &[f32]) -> f32 {
     let mut s = 0.0f32;
     for (x, y) in ar.iter().zip(br) {
-        let prod = acc.round(x * y);
-        s = acc.round(s + prod);
+        let prod = A::round(x * y);
+        s = A::round(s + prod);
     }
     s
 }
+
+// ---- C = A · Bᵀ ---------------------------------------------------------
 
 /// C = A · Bᵀ with per-step precision emulation.
 /// A is (m × k), B is (n × k), C is (m × n): `C[i][j] = Σ_l A[i][l]·B[j][l]`.
 ///
 /// This is the natural layout for S = Q·Kᵀ (both Q and K are (seq × d)).
 pub fn matmul_nt(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_into(a.as_rows_ref(), b, p, &mut c);
+    c
+}
+
+/// Buffer-reusing [`matmul_nt`]: `c` is reshaped in place (no allocation
+/// once warm) and the format dispatch happens once per call.
+pub fn matmul_nt_into(a: RowsRef<'_>, b: &Matrix, p: GemmPrecision, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols, "matmul_nt: inner dims differ");
-    let (m, n) = (a.rows, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    match p.acc {
-        Format::F32 => {
-            // Fast path: native f32 accumulate, round only on store.
-            // Eight independent accumulators break the strict-FP reduction
-            // chain so the loop auto-vectorizes (§Perf: ~2.5x on the lab's
-            // GEMM-bound experiments). Matrix engines don't specify an
-            // accumulation order, so any f32 summation order is a valid
-            // emulation of the FP32-accumulate allocations.
-            for i in 0..m {
-                let ar = a.row(i);
-                let crow = c.row_mut(i);
-                for j in 0..n {
-                    crow[j] = p.store.round(dot_f32(ar, b.row(j)));
-                }
-            }
-        }
-        acc => {
-            // Emulated low-precision accumulate: round every product and
-            // every partial sum (sequential order, like a systolic chain).
-            for i in 0..m {
-                let ar = a.row(i);
-                let crow = c.row_mut(i);
-                for j in 0..n {
-                    crow[j] = p.store.round(dot_emulated(ar, b.row(j), acc));
-                }
-            }
+    c.reshape(a.rows, b.rows); // every element written below
+    crate::mono_format!(p.store, S => match p.acc {
+        // Fast path: native f32 accumulate, round only on store.
+        // Eight independent accumulators break the strict-FP reduction
+        // chain so the loop auto-vectorizes (§Perf: ~2.5x on the lab's
+        // GEMM-bound experiments). Matrix engines don't specify an
+        // accumulation order, so any f32 summation order is a valid
+        // emulation of the FP32-accumulate allocations.
+        Format::F32 => nt_core_f32::<S>(a, b, c),
+        // Emulated low-precision accumulate: round every product and
+        // every partial sum (sequential order, like a systolic chain).
+        acc => crate::mono_format!(acc, A => nt_core_emu::<A, S>(a, b, c)),
+    });
+}
+
+fn nt_core_f32<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = S::round(dot_f32(ar, b.row(j)));
         }
     }
-    c
+}
+
+fn nt_core_emu<A: RoundSpec, S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = S::round(dot_emulated::<A>(ar, b.row(j)));
+        }
+    }
 }
 
 /// Dense C = A · Bᵀ with pre-store statistics.
@@ -163,28 +190,80 @@ pub fn matmul_nt_stats(
     boundary: f32,
     stats: &mut GemmStats,
 ) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_stats_into(a.as_rows_ref(), b, p, stat_vis, boundary, stats, &mut c);
+    c
+}
+
+/// Buffer-reusing [`matmul_nt_stats`] — the attention score GEMM of the
+/// zero-allocation hot path.
+pub fn matmul_nt_stats_into(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    p: GemmPrecision,
+    stat_vis: Option<&[usize]>,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
     assert_eq!(a.cols, b.cols, "matmul_nt_stats: inner dims differ");
     if let Some(vis) = stat_vis {
         assert_eq!(vis.len(), a.rows, "matmul_nt_stats: vis length mismatch");
     }
-    let (m, n) = (a.rows, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
+    c.reshape(a.rows, b.rows); // every element written below
+    crate::mono_format!(p.store, S => match p.acc {
+        Format::F32 => nt_stats_core_f32::<S>(a, b, stat_vis, boundary, stats, c),
+        acc => crate::mono_format!(
+            acc,
+            A => nt_stats_core_emu::<A, S>(a, b, stat_vis, boundary, stats, c)
+        ),
+    });
+}
+
+fn nt_stats_core_f32<S: RoundSpec>(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    stat_vis: Option<&[usize]>,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
+    let n = b.rows;
+    for i in 0..a.rows {
         let ar = a.row(i);
         let limit = stat_vis.map_or(n, |v| v[i].min(n));
         let crow = c.row_mut(i);
         for j in 0..n {
-            let s = match p.acc {
-                Format::F32 => dot_f32(ar, b.row(j)),
-                acc => dot_emulated(ar, b.row(j), acc),
-            };
+            let s = dot_f32(ar, b.row(j));
             if j < limit {
                 stats.record(s, boundary);
             }
-            crow[j] = p.store.round(s);
+            crow[j] = S::round(s);
         }
     }
-    c
+}
+
+fn nt_stats_core_emu<A: RoundSpec, S: RoundSpec>(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    stat_vis: Option<&[usize]>,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
+    let n = b.rows;
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let limit = stat_vis.map_or(n, |v| v[i].min(n));
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            let s = dot_emulated::<A>(ar, b.row(j));
+            if j < limit {
+                stats.record(s, boundary);
+            }
+            crow[j] = S::round(s);
+        }
+    }
 }
 
 /// Prefix-masked C = A · Bᵀ: row `i` computes only columns `j < vis[i]`
@@ -202,77 +281,150 @@ pub fn matmul_nt_prefix(
     boundary: f32,
     stats: &mut GemmStats,
 ) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_prefix_into(a.as_rows_ref(), b, p, vis, fill, boundary, stats, &mut c);
+    c
+}
+
+/// Buffer-reusing [`matmul_nt_prefix`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_prefix_into(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    p: GemmPrecision,
+    vis: &[usize],
+    fill: f32,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
     assert_eq!(a.cols, b.cols, "matmul_nt_prefix: inner dims differ");
     assert_eq!(vis.len(), a.rows, "matmul_nt_prefix: vis length mismatch");
-    let (m, n) = (a.rows, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
+    c.reshape(a.rows, b.rows); // computed prefix + fill cover every element
+    crate::mono_format!(p.store, S => match p.acc {
+        Format::F32 => nt_prefix_core_f32::<S>(a, b, vis, fill, boundary, stats, c),
+        acc => crate::mono_format!(
+            acc,
+            A => nt_prefix_core_emu::<A, S>(a, b, vis, fill, boundary, stats, c)
+        ),
+    });
+}
+
+fn nt_prefix_core_f32<S: RoundSpec>(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    vis: &[usize],
+    fill: f32,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
+    let n = b.rows;
+    for i in 0..a.rows {
         let ar = a.row(i);
         let limit = vis[i].min(n);
         let crow = c.row_mut(i);
         for j in 0..limit {
-            let s = match p.acc {
-                Format::F32 => dot_f32(ar, b.row(j)),
-                acc => dot_emulated(ar, b.row(j), acc),
-            };
+            let s = dot_f32(ar, b.row(j));
             stats.record(s, boundary);
-            crow[j] = p.store.round(s);
+            crow[j] = S::round(s);
         }
         for x in crow[limit..].iter_mut() {
             *x = fill;
         }
     }
-    c
 }
+
+fn nt_prefix_core_emu<A: RoundSpec, S: RoundSpec>(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    vis: &[usize],
+    fill: f32,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
+    let n = b.rows;
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let limit = vis[i].min(n);
+        let crow = c.row_mut(i);
+        for j in 0..limit {
+            let s = dot_emulated::<A>(ar, b.row(j));
+            stats.record(s, boundary);
+            crow[j] = S::round(s);
+        }
+        for x in crow[limit..].iter_mut() {
+            *x = fill;
+        }
+    }
+}
+
+// ---- C = A · B ----------------------------------------------------------
 
 /// C = A · B with per-step precision emulation.
 /// A is (m × k), B is (k × n), C is (m × n).
 pub fn matmul_nn(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_nn_into(a.as_rows_ref(), b, p, &mut c);
+    c
+}
+
+/// Buffer-reusing [`matmul_nn`] — the P·V GEMM of the zero-allocation hot
+/// path. The f32-accumulate path accumulates directly into the (zeroed)
+/// output rows instead of a per-row scratch vector, so it allocates
+/// nothing; the emulated path walks B column-wise rather than paying a
+/// transpose copy (same sequential rounding order as before).
+pub fn matmul_nn_into(a: RowsRef<'_>, b: &Matrix, p: GemmPrecision, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows, "matmul_nn: inner dims differ");
-    let (m, n, k) = (a.rows, b.cols, a.cols);
-    let mut c = Matrix::zeros(m, n);
-    match p.acc {
-        Format::F32 => {
-            // i-k-j loop order: stream B rows, accumulate into C rows.
-            for i in 0..m {
-                let ar = a.row(i);
-                // accumulate in a scratch f32 row, round once at the end
-                let mut acc_row = vec![0.0f32; n];
-                for (l, &al) in ar.iter().enumerate() {
-                    if al == 0.0 {
-                        continue;
-                    }
-                    let br = b.row(l);
-                    for j in 0..n {
-                        acc_row[j] += al * br[j];
-                    }
-                }
-                let crow = c.row_mut(i);
-                for j in 0..n {
-                    crow[j] = p.store.round(acc_row[j]);
-                }
+    c.reset(a.rows, b.cols);
+    crate::mono_format!(p.store, S => match p.acc {
+        Format::F32 => nn_core_f32::<S>(a, b, c),
+        acc => crate::mono_format!(acc, A => nn_core_emu::<A, S>(a, b, c)),
+    });
+}
+
+fn nn_core_f32<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    // i-k-j loop order: stream B rows, accumulate into C rows (zeroed by
+    // the caller's reset), round once at the end.
+    let n = b.cols;
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let crow = c.row_mut(i);
+        for (l, &al) in ar.iter().enumerate() {
+            if al == 0.0 {
+                continue;
+            }
+            let br = b.row(l);
+            for j in 0..n {
+                crow[j] += al * br[j];
             }
         }
-        acc => {
-            // Low-precision accumulate needs the dot-product order (i,j,l)
-            // so each element's partial sums round sequentially.
-            let bt = b.transpose();
-            for i in 0..m {
-                let ar = a.row(i);
-                let crow = c.row_mut(i);
-                for j in 0..n {
-                    let br = bt.row(j);
-                    let mut s = 0.0f32;
-                    for l in 0..k {
-                        let prod = acc.round(ar[l] * br[l]);
-                        s = acc.round(s + prod);
-                    }
-                    crow[j] = p.store.round(s);
-                }
+        if !S::IS_IDENTITY {
+            for x in crow.iter_mut() {
+                *x = S::round(*x);
             }
         }
     }
-    c
+}
+
+fn nn_core_emu<A: RoundSpec, S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    // Low-precision accumulate needs the dot-product order (i,j,l) so each
+    // element's partial sums round sequentially; B is walked column-wise
+    // (b[l][j]) — the same value sequence the old transpose-copy produced.
+    let (n, k) = (b.cols, a.cols);
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for l in 0..k {
+                let prod = A::round(ar[l] * b.data[l * n + j]);
+                s = A::round(s + prod);
+            }
+            crow[j] = S::round(s);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +444,11 @@ mod tests {
         assert_eq!(c1, c2);
         assert_eq!(c1.at(0, 0), 4.0);
         assert_eq!(c1.at(1, 3), 30.0);
+        // The emulated accumulator shares the sequential order between the
+        // two layouts, so the agreement is bit-exact there too.
+        let e1 = matmul_nt(&a, &b, GemmPrecision::FULL16);
+        let e2 = matmul_nn(&a, &b.transpose(), GemmPrecision::FULL16);
+        assert_eq!(e1, e2);
     }
 
     #[test]
@@ -343,6 +500,45 @@ mod tests {
     }
 
     #[test]
+    fn prefix_variant_is_bit_identical_and_instrumented() {
+        // The prefix-path twin of the test above (pins the hoisted-match
+        // refactor on the *emulated* accumulator): visible entries must be
+        // bit-identical to the dense GEMM, the masked region filled, and
+        // the stats restricted to the computed region.
+        let a = m(2, 128, &[30.0f32; 256]);
+        let b = m(3, 128, &[30.0f32; 384]);
+        let dense = matmul_nt(&a, &b, GemmPrecision::FULL16);
+        let mut st = GemmStats::default();
+        let vis = [2usize, 1];
+        let c = matmul_nt_prefix(
+            &a,
+            &b,
+            GemmPrecision::FULL16,
+            &vis,
+            f32::NEG_INFINITY,
+            65504.0,
+            &mut st,
+        );
+        for i in 0..2 {
+            for j in 0..3 {
+                if j < vis[i] {
+                    assert_eq!(
+                        c.at(i, j).to_bits(),
+                        dense.at(i, j).to_bits(),
+                        "visible ({i},{j})"
+                    );
+                } else {
+                    assert_eq!(c.at(i, j), f32::NEG_INFINITY, "masked ({i},{j})");
+                }
+            }
+        }
+        // The FP16 accumulator itself overflows (900·128 ≫ 65504): every
+        // computed element is an overflow event; masked ones must not be.
+        assert_eq!(st.overflow_events, 3);
+        assert!(st.max_abs.is_infinite());
+    }
+
+    #[test]
     fn stats_respect_visible_prefix() {
         let a = m(2, 128, &[30.0f32; 256]);
         let b = m(3, 128, &[30.0f32; 384]);
@@ -382,6 +578,46 @@ mod tests {
         }
         assert_eq!(st.overflow_events, 0);
         assert!(st.max_abs > 0.0);
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers_bit_identically() {
+        // The `_into` entries must be insensitive to the reused buffer's
+        // previous shape and contents — the workspace-reuse contract.
+        let a = m(3, 16, &(0..48).map(|i| (i as f32).sin() * 4.0).collect::<Vec<_>>());
+        let b = m(5, 16, &(0..80).map(|i| (i as f32).cos() * 3.0).collect::<Vec<_>>());
+        for p in [
+            GemmPrecision::F32,
+            GemmPrecision::ACC32_STORE16,
+            GemmPrecision::FULL16,
+        ] {
+            let fresh = matmul_nt(&a, &b, p);
+            let mut dirty = Matrix::full(9, 2, f32::NAN);
+            matmul_nt_into(a.as_rows_ref(), &b, p, &mut dirty);
+            assert_eq!(fresh, dirty);
+
+            let mut st1 = GemmStats::default();
+            let fresh = matmul_nt_stats(&a, &b, p, None, 65504.0, &mut st1);
+            let mut st2 = GemmStats::default();
+            let mut dirty = Matrix::full(1, 1, f32::NAN);
+            matmul_nt_stats_into(a.as_rows_ref(), &b, p, None, 65504.0, &mut st2, &mut dirty);
+            assert_eq!(fresh, dirty);
+            assert_eq!(st1.overflow_events, st2.overflow_events);
+            assert_eq!(st1.max_abs, st2.max_abs);
+
+            let bt = b.transpose();
+            let fresh = matmul_nn(&a, &bt, p);
+            let mut dirty = Matrix::full(2, 7, 3.5);
+            matmul_nn_into(a.as_rows_ref(), &bt, p, &mut dirty);
+            assert_eq!(fresh, dirty);
+        }
+        // RowsRef lets the caller run a row window without slicing: the
+        // result must equal the sliced matmul exactly.
+        let mut st = GemmStats::default();
+        let mut win = Matrix::zeros(0, 0);
+        matmul_nt_stats_into(a.rows_ref(1, 3), &b, GemmPrecision::F32, None, 65504.0, &mut st, &mut win);
+        let sliced = matmul_nt(&a.rows_slice(1, 3), &b, GemmPrecision::F32);
+        assert_eq!(win, sliced);
     }
 
     #[test]

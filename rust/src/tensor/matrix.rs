@@ -102,14 +102,63 @@ impl Matrix {
         out
     }
 
-    /// Round every element onto `fmt`'s grid (in place).
+    /// Reshape in place to `(rows, cols)`, zero-filled, **reusing the
+    /// backing allocation** — the workspace-buffer primitive of the
+    /// zero-allocation attention hot path. Equivalent to `*self =
+    /// Matrix::zeros(rows, cols)` except the heap block is kept once the
+    /// buffer has grown to its steady-state size.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape in place **without** zero-filling the retained storage —
+    /// for consumers that overwrite every element (the dense GEMM and
+    /// softmax kernels), sparing the hot loop one memset per block.
+    /// Storage grown beyond the previous length is zeroed; the retained
+    /// prefix keeps stale values, so callers must write all elements.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `src`'s rows `[r0, r1)`, reusing the backing
+    /// allocation — the reusable-buffer twin of [`Self::rows_slice`].
+    pub fn copy_rows_from(&mut self, src: &Matrix, r0: usize, r1: usize) {
+        assert!(r0 <= r1 && r1 <= src.rows);
+        self.rows = r1 - r0;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data
+            .extend_from_slice(&src.data[r0 * src.cols..r1 * src.cols]);
+    }
+
+    /// Borrowed view of rows `[r0, r1)` — no copy, no allocation. The
+    /// GEMM `_into` kernels take their A operand this way so the
+    /// attention Q-block loop never materializes a row slice.
+    #[inline]
+    pub fn rows_ref(&self, r0: usize, r1: usize) -> RowsRef<'_> {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        RowsRef {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: &self.data[r0 * self.cols..r1 * self.cols],
+        }
+    }
+
+    /// Borrowed view of the whole matrix.
+    #[inline]
+    pub fn as_rows_ref(&self) -> RowsRef<'_> {
+        self.rows_ref(0, self.rows)
+    }
+
+    /// Round every element onto `fmt`'s grid (in place; the format branch
+    /// is taken once for the whole buffer).
     pub fn round_to(&mut self, fmt: Format) {
-        if fmt == Format::F32 {
-            return;
-        }
-        for x in &mut self.data {
-            *x = fmt.round(*x);
-        }
+        fmt.round_slice(&mut self.data);
     }
 
     /// Rounded copy.
@@ -123,6 +172,27 @@ impl Matrix {
         self.data
             .iter()
             .all(|&x| x.is_nan() || fmt.round(x) == x || x.to_bits() == fmt.round(x).to_bits())
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+/// Borrowed, row-major view over a contiguous row range of a [`Matrix`]
+/// (or any row-major `f32` buffer). `Copy`, allocation-free — the A
+/// operand of the GEMM `_into` kernels.
+#[derive(Clone, Copy, Debug)]
+pub struct RowsRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> RowsRef<'a> {
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -159,6 +229,40 @@ mod tests {
         let s = i.rows_slice(1, 3);
         assert_eq!(s.shape(), (2, 3));
         assert_eq!(s.at(0, 1), 1.0);
+    }
+
+    #[test]
+    fn reset_and_copy_reuse_the_allocation() {
+        let mut m = Matrix::zeros(8, 8);
+        let cap = m.data.capacity();
+        m.reset(4, 6);
+        assert_eq!(m.shape(), (4, 6));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.capacity(), cap, "reset must not reallocate");
+        let src = Matrix::from_vec(3, 4, (0..12).map(|i| i as f32).collect());
+        m.copy_rows_from(&src, 1, 3);
+        assert_eq!(m.shape(), (2, 4));
+        assert_eq!(m.data, src.rows_slice(1, 3).data);
+        assert_eq!(m.data.capacity(), cap, "copy_rows_from must not reallocate");
+        // reshape keeps stale storage (overwrite-all consumers) but zeroes
+        // genuinely new tail elements, and never reallocates once warm.
+        m.reshape(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(&m.data[..8], &src.rows_slice(1, 3).data[..], "retained prefix");
+        assert!(m.data[8..].iter().all(|&x| x == 0.0), "grown tail zeroed");
+        assert_eq!(m.data.capacity(), cap, "reshape must not reallocate");
+    }
+
+    #[test]
+    fn rows_ref_views_match_slices() {
+        let m = Matrix::from_vec(3, 4, (0..12).map(|i| i as f32).collect());
+        let v = m.rows_ref(1, 3);
+        assert_eq!(v.shape(), (2, 4));
+        assert_eq!(v.row(0), m.row(1));
+        assert_eq!(v.row(1), m.row(2));
+        let all = m.as_rows_ref();
+        assert_eq!(all.rows, 3);
+        assert_eq!(all.data, &m.data[..]);
     }
 
     #[test]

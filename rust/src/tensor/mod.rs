@@ -5,5 +5,8 @@ pub mod gemm;
 pub mod matrix;
 pub mod ops;
 
-pub use gemm::{matmul_nn, matmul_nt, matmul_nt_prefix, matmul_nt_stats, GemmPrecision, GemmStats};
-pub use matrix::Matrix;
+pub use gemm::{
+    matmul_nn, matmul_nn_into, matmul_nt, matmul_nt_into, matmul_nt_prefix,
+    matmul_nt_prefix_into, matmul_nt_stats, matmul_nt_stats_into, GemmPrecision, GemmStats,
+};
+pub use matrix::{Matrix, RowsRef};

@@ -6,24 +6,48 @@
 //! low-precision vector core (the paper notes NPUs have a *normal*
 //! vectorization capability — these ops are exactly where its rounding
 //! error accumulates).
+//!
+//! ## Hot-path layout
+//!
+//! The attention inner loop runs through the **fused, in-place** entries
+//! ([`scale_rowmax`], [`exp_sub_rowbias_rowsum_into`],
+//! [`exp_sub_rowbias_rowmean32_into`], …): one pass over the score block
+//! instead of two or three, output written into caller-owned buffers so
+//! the KV sweep allocates nothing. Every fused op performs the *exact*
+//! rounding sequence of the unfused composition it replaces (pinned by
+//! tests), and the format dispatch is hoisted to one
+//! [`crate::mono_format!`] branch per call.
 
 use super::matrix::Matrix;
+use crate::numerics::round::RoundSpec;
 use crate::numerics::Format;
 
 /// Row maxima (exact in any format — max introduces no rounding).
 pub fn rowmax(m: &Matrix) -> Vec<f32> {
-    (0..m.rows)
-        .map(|r| m.row(r).iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)))
-        .collect()
+    let mut out = Vec::new();
+    rowmax_into(m, &mut out);
+    out
+}
+
+/// Buffer-reusing [`rowmax`].
+pub fn rowmax_into(m: &Matrix, out: &mut Vec<f32>) {
+    out.clear();
+    for r in 0..m.rows {
+        out.push(m.row(r).iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)));
+    }
 }
 
 /// Row sums with sequential accumulation rounded to `fmt` at each step.
 pub fn rowsum(m: &Matrix, fmt: Format) -> Vec<f32> {
+    crate::mono_format!(fmt, R => rowsum_mono::<R>(m))
+}
+
+fn rowsum_mono<R: RoundSpec>(m: &Matrix) -> Vec<f32> {
     (0..m.rows)
         .map(|r| {
             let mut s = 0.0f32;
             for &x in m.row(r) {
-                s = fmt.round(s + x);
+                s = R::round(s + x);
             }
             s
         })
@@ -46,30 +70,66 @@ pub fn rowmean(m: &Matrix, fmt: Format) -> Vec<f32> {
 /// Inva = β/(1−β) ≈ 63.5 in the correction terms, so a strict-FP16
 /// sequential ladder would dominate the error budget (see DESIGN.md).
 pub fn rowmean_acc32(m: &Matrix, fmt: Format) -> Vec<f32> {
+    let mut out = Vec::new();
+    rowmean_acc32_into(m, fmt, &mut out);
+    out
+}
+
+/// Buffer-reusing [`rowmean_acc32`].
+pub fn rowmean_acc32_into(m: &Matrix, fmt: Format, out: &mut Vec<f32>) {
+    out.clear();
     let n = m.cols as f64;
-    (0..m.rows)
-        .map(|r| {
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
             let mut s = 0.0f64;
             for &x in m.row(r) {
                 s += x as f64;
             }
-            fmt.round((s / n) as f32)
-        })
-        .collect()
+            out.push(R::round((s / n) as f32));
+        }
+    });
 }
 
 /// Row maxima over the first `vis[r]` columns (−inf for an empty prefix).
 /// The masked kernels use this so a never-attended score can't inflate the
 /// online maximum (which would underflow every genuine weight in FP16).
 pub fn rowmax_prefix(m: &Matrix, vis: &[usize]) -> Vec<f32> {
+    let mut out = Vec::new();
+    rowmax_prefix_into(m, vis, &mut out);
+    out
+}
+
+/// Buffer-reusing [`rowmax_prefix`].
+pub fn rowmax_prefix_into(m: &Matrix, vis: &[usize], out: &mut Vec<f32>) {
     assert_eq!(vis.len(), m.rows);
-    (0..m.rows)
-        .map(|r| {
+    out.clear();
+    for r in 0..m.rows {
+        out.push(
             m.row(r)[..vis[r].min(m.cols)]
                 .iter()
-                .fold(f32::NEG_INFINITY, |a, &b| a.max(b))
-        })
-        .collect()
+                .fold(f32::NEG_INFINITY, |a, &b| a.max(b)),
+        );
+    }
+}
+
+/// Fused static scaling + row max, in place: `m ← fmt(m · k)` and
+/// `maxes[r] = max_c m[r][c]` in one pass — exactly
+/// [`scale`] followed by [`rowmax`] (same rounding, same max fold), minus
+/// one full traversal and the output allocation. This is Eq. (2)'s S/α
+/// feeding Eq. (4)'s row max in the FA inner loop.
+pub fn scale_rowmax(m: &mut Matrix, k: f32, fmt: Format, maxes: &mut Vec<f32>) {
+    maxes.clear();
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
+            let row = m.row_mut(r);
+            let mut mx = f32::NEG_INFINITY;
+            for x in row.iter_mut() {
+                *x = R::round(*x * k);
+                mx = mx.max(*x);
+            }
+            maxes.push(mx);
+        }
+    });
 }
 
 /// Masked attenuator: `exp(m[r][c] − v[r])` for `c < vis[r]`, exact 0
@@ -80,16 +140,18 @@ pub fn exp_sub_rowbias_prefix(m: &Matrix, v: &[f32], vis: &[usize], fmt: Format)
     assert_eq!(v.len(), m.rows);
     assert_eq!(vis.len(), m.rows);
     let mut out = Matrix::zeros(m.rows, m.cols);
-    for r in 0..m.rows {
-        let b = v[r];
-        let limit = vis[r].min(m.cols);
-        let src = m.row(r);
-        let dst = out.row_mut(r);
-        for c in 0..limit {
-            let d = fmt.round(src[c] - b);
-            dst[c] = fmt.round(d.exp());
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
+            let b = v[r];
+            let limit = vis[r].min(m.cols);
+            let src = m.row(r);
+            let dst = out.row_mut(r);
+            for c in 0..limit {
+                let d = R::round(src[c] - b);
+                dst[c] = R::round(d.exp());
+            }
         }
-    }
+    });
     out
 }
 
@@ -99,16 +161,118 @@ pub fn exp_sub_rowbias_prefix(m: &Matrix, v: &[f32], vis: &[usize], fmt: Format)
 pub fn exp_sub_rowbias(m: &Matrix, v: &[f32], fmt: Format) -> Matrix {
     assert_eq!(v.len(), m.rows);
     let mut out = Matrix::zeros(m.rows, m.cols);
-    for r in 0..m.rows {
-        let b = v[r];
-        let src = m.row(r);
-        let dst = out.row_mut(r);
-        for c in 0..m.cols {
-            let d = fmt.round(src[c] - b);
-            dst[c] = fmt.round(d.exp());
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
+            let b = v[r];
+            let src = m.row(r);
+            let dst = out.row_mut(r);
+            for c in 0..m.cols {
+                let d = R::round(src[c] - b);
+                dst[c] = R::round(d.exp());
+            }
         }
-    }
+    });
     out
+}
+
+/// Fused Eq. (5) + Eq. (6) right half: `p = fmt(exp(fmt(s − bias)))` and
+/// `sums[r] = ` sequential `fmt`-rounded row sum of `p` — exactly
+/// [`exp_sub_rowbias`] followed by [`rowsum`], one pass, caller-owned
+/// buffers. The FA inner loop's softmax step.
+pub fn exp_sub_rowbias_rowsum_into(
+    s: &Matrix,
+    bias: &[f32],
+    fmt: Format,
+    p: &mut Matrix,
+    sums: &mut Vec<f32>,
+) {
+    assert_eq!(bias.len(), s.rows);
+    p.reshape(s.rows, s.cols); // dense: every element written
+    sums.clear();
+    crate::mono_format!(fmt, R => {
+        for r in 0..s.rows {
+            let b = bias[r];
+            let src = s.row(r);
+            let dst = p.row_mut(r);
+            let mut acc = 0.0f32;
+            for c in 0..src.len() {
+                let d = R::round(src[c] - b);
+                let e = R::round(d.exp());
+                dst[c] = e;
+                acc = R::round(acc + e);
+            }
+            sums.push(acc);
+        }
+    });
+}
+
+/// Fused Eq. (5) + FP32-reduce row mean: `p` as in [`exp_sub_rowbias`],
+/// `means[r]` as in [`rowmean_acc32`] of `p` — the PASA inner loop's
+/// local softmax stats, one pass.
+pub fn exp_sub_rowbias_rowmean32_into(
+    s: &Matrix,
+    bias: &[f32],
+    fmt: Format,
+    p: &mut Matrix,
+    means: &mut Vec<f32>,
+) {
+    assert_eq!(bias.len(), s.rows);
+    p.reshape(s.rows, s.cols); // dense: every element written
+    means.clear();
+    let n = s.cols as f64;
+    crate::mono_format!(fmt, R => {
+        for r in 0..s.rows {
+            let b = bias[r];
+            let src = s.row(r);
+            let dst = p.row_mut(r);
+            let mut acc = 0.0f64;
+            for c in 0..src.len() {
+                let d = R::round(src[c] - b);
+                let e = R::round(d.exp());
+                dst[c] = e;
+                acc += e as f64;
+            }
+            means.push(R::round((acc / n) as f32));
+        }
+    });
+}
+
+/// Prefix-masked [`exp_sub_rowbias_rowmean32_into`]: weights beyond
+/// `vis[r]` are exact 0 (contributing exactly 0.0 to the f64 mean
+/// accumulator, as in the unfused composition), and the mean still
+/// divides by the full block width — PASA's S̄' is defined over the whole
+/// block.
+pub fn exp_sub_rowbias_prefix_rowmean32_into(
+    s: &Matrix,
+    bias: &[f32],
+    vis: &[usize],
+    fmt: Format,
+    p: &mut Matrix,
+    means: &mut Vec<f32>,
+) {
+    assert_eq!(bias.len(), s.rows);
+    assert_eq!(vis.len(), s.rows);
+    p.reset(s.rows, s.cols);
+    means.clear();
+    let n = s.cols as f64;
+    crate::mono_format!(fmt, R => {
+        for r in 0..s.rows {
+            let b = bias[r];
+            let limit = vis[r].min(s.cols);
+            let src = s.row(r);
+            let dst = p.row_mut(r);
+            let mut acc = 0.0f64;
+            for c in 0..limit {
+                let d = R::round(src[c] - b);
+                let e = R::round(d.exp());
+                dst[c] = e;
+                acc += e as f64;
+            }
+            // dst[limit..] is exact 0 from the reset — zero softmax weight
+            // and zero mean contribution, like the unfused path.
+            means.push(R::round((acc / n) as f32));
+        }
+    });
 }
 
 /// Elementwise `exp` of a vector, rounded to `fmt`.
@@ -118,17 +282,23 @@ pub fn exp_vec(v: &[f32], fmt: Format) -> Vec<f32> {
 
 /// `out[r][c] = fmt(a[r][c] * s[r])` — row-scaled copy.
 pub fn scale_rows(m: &Matrix, s: &[f32], fmt: Format) -> Matrix {
-    assert_eq!(s.len(), m.rows);
-    let mut out = Matrix::zeros(m.rows, m.cols);
-    for r in 0..m.rows {
-        let k = s[r];
-        let src = m.row(r);
-        let dst = out.row_mut(r);
-        for c in 0..m.cols {
-            dst[c] = fmt.round(src[c] * k);
-        }
-    }
+    let mut out = m.clone();
+    scale_rows_inplace(&mut out, s, fmt);
     out
+}
+
+/// In-place [`scale_rows`] — the PASA `exp(Δm_j)·(P·V_j)` rescale without
+/// the copy.
+pub fn scale_rows_inplace(m: &mut Matrix, s: &[f32], fmt: Format) {
+    assert_eq!(s.len(), m.rows);
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
+            let k = s[r];
+            for x in m.row_mut(r).iter_mut() {
+                *x = R::round(*x * k);
+            }
+        }
+    });
 }
 
 /// In-place fused update `acc = fmt(fmt(acc * s[r]) + add)` — the FA/PASA
@@ -136,37 +306,73 @@ pub fn scale_rows(m: &Matrix, s: &[f32], fmt: Format) -> Matrix {
 pub fn scale_add_rows(acc: &mut Matrix, s: &[f32], add: &Matrix, fmt: Format) {
     assert_eq!(acc.shape(), add.shape());
     assert_eq!(s.len(), acc.rows);
-    for r in 0..acc.rows {
-        let k = s[r];
-        let arow = &mut acc.data[r * acc.cols..(r + 1) * acc.cols];
-        let brow = &add.data[r * add.cols..(r + 1) * add.cols];
-        for c in 0..arow.len() {
-            arow[c] = fmt.round(fmt.round(arow[c] * k) + brow[c]);
+    crate::mono_format!(fmt, R => {
+        for r in 0..acc.rows {
+            let k = s[r];
+            let arow = &mut acc.data[r * acc.cols..(r + 1) * acc.cols];
+            let brow = &add.data[r * add.cols..(r + 1) * add.cols];
+            for c in 0..arow.len() {
+                arow[c] = R::round(R::round(arow[c] * k) + brow[c]);
+            }
         }
-    }
+    });
 }
 
 /// `out[r][c] = fmt(m[r][c] / d[r])` — the final O = O / l of Eq. (8).
 pub fn div_rows(m: &Matrix, d: &[f32], fmt: Format) -> Matrix {
     assert_eq!(d.len(), m.rows);
     let mut out = Matrix::zeros(m.rows, m.cols);
-    for r in 0..m.rows {
-        let k = d[r];
-        let src = m.row(r);
-        let dst = out.row_mut(r);
-        for c in 0..m.cols {
-            dst[c] = fmt.round(src[c] / k);
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
+            let k = d[r];
+            let src = m.row(r);
+            let dst = out.row_mut(r);
+            for c in 0..m.cols {
+                dst[c] = R::round(src[c] / k);
+            }
         }
-    }
+    });
     out
+}
+
+/// Fused Eq. (8) + output store: `dst_row = fmt(oi[r] / l[r])` for each
+/// visible row, zeros for fully-masked rows (`vis[r] == 0`) — exactly
+/// [`div_rows`] followed by the kernel's per-row copy/zero, writing
+/// straight into the head's output rows.
+pub fn div_rows_masked_into(
+    oi: &Matrix,
+    l: &[f32],
+    vis: &[usize],
+    fmt: Format,
+    out_rows: &mut [f32],
+) {
+    assert_eq!(l.len(), oi.rows);
+    assert_eq!(vis.len(), oi.rows);
+    assert_eq!(out_rows.len(), oi.rows * oi.cols);
+    crate::mono_format!(fmt, R => {
+        for r in 0..oi.rows {
+            let dst = &mut out_rows[r * oi.cols..(r + 1) * oi.cols];
+            if vis[r] == 0 {
+                dst.fill(0.0);
+            } else {
+                let k = l[r];
+                let src = oi.row(r);
+                for c in 0..src.len() {
+                    dst[c] = R::round(src[c] / k);
+                }
+            }
+        }
+    });
 }
 
 /// Elementwise scalar multiply, rounded to `fmt`.
 pub fn scale(m: &Matrix, k: f32, fmt: Format) -> Matrix {
     let mut out = m.clone();
-    for x in &mut out.data {
-        *x = fmt.round(*x * k);
-    }
+    crate::mono_format!(fmt, R => {
+        for x in &mut out.data {
+            *x = R::round(*x * k);
+        }
+    });
     out
 }
 
@@ -280,5 +486,70 @@ mod tests {
         let o = m(2, 2, &[2.0, 4.0, 9.0, 3.0]);
         let d = div_rows(&o, &[2.0, 3.0], Format::F32);
         assert_eq!(d, m(2, 2, &[1.0, 2.0, 3.0, 1.0]));
+    }
+
+    /// Each fused kernel must be bit-identical to the unfused composition
+    /// it replaces — the workspace refactor's rounding-order contract.
+    #[test]
+    fn fused_ops_bit_match_their_compositions() {
+        let vals: Vec<f32> = (0..48)
+            .map(|i| ((i as f32 * 0.37).sin() * 9.0) - 2.0)
+            .collect();
+        let a = m(4, 12, &vals);
+        for fmt in [Format::F16, Format::F32, Format::Bf16] {
+            // scale + rowmax == scale_rowmax.
+            let k = 0.1728f32;
+            let scaled = scale(&a, k, fmt);
+            let want_max = rowmax(&scaled);
+            let mut fused = a.clone();
+            let mut maxes = vec![99.0f32; 1];
+            scale_rowmax(&mut fused, k, fmt, &mut maxes);
+            assert_eq!(fused, scaled, "{}", fmt.name());
+            assert_eq!(maxes, want_max, "{}", fmt.name());
+
+            // exp_sub_rowbias + rowsum == exp_sub_rowbias_rowsum_into.
+            let bias = rowmax(&a);
+            let p_ref = exp_sub_rowbias(&a, &bias, fmt);
+            let sums_ref = rowsum(&p_ref, fmt);
+            let mut p = Matrix::full(1, 1, f32::NAN);
+            let mut sums = Vec::new();
+            exp_sub_rowbias_rowsum_into(&a, &bias, fmt, &mut p, &mut sums);
+            assert_eq!(p, p_ref, "{}", fmt.name());
+            assert_eq!(sums, sums_ref, "{}", fmt.name());
+
+            // exp_sub_rowbias + rowmean_acc32 == the fused mean variant.
+            let means_ref = rowmean_acc32(&p_ref, fmt);
+            let mut means = Vec::new();
+            exp_sub_rowbias_rowmean32_into(&a, &bias, fmt, &mut p, &mut means);
+            assert_eq!(p, p_ref, "{}", fmt.name());
+            assert_eq!(means, means_ref, "{}", fmt.name());
+
+            // Prefix variant vs prefix composition (ragged vis incl. 0).
+            let vis = [12usize, 5, 0, 9];
+            let bias_pref = rowmax_prefix(&a, &vis);
+            let pp_ref = exp_sub_rowbias_prefix(&a, &bias_pref, &vis, fmt);
+            let pmeans_ref = rowmean_acc32(&pp_ref, fmt);
+            let mut pp = Matrix::full(2, 2, f32::NAN);
+            let mut pmeans = Vec::new();
+            exp_sub_rowbias_prefix_rowmean32_into(&a, &bias_pref, &vis, fmt, &mut pp, &mut pmeans);
+            assert_eq!(pp, pp_ref, "{}", fmt.name());
+            assert_eq!(pmeans, pmeans_ref, "{}", fmt.name());
+
+            // scale_rows == scale_rows_inplace (already shared), and
+            // div_rows + masked copy == div_rows_masked_into.
+            let l = [1.5f32, 2.0, 3.0, 0.5];
+            let div_ref = div_rows(&a, &l, fmt);
+            let mut out_rows = vec![f32::NAN; 4 * 12];
+            let vis_rows = [3usize, 0, 1, 12];
+            div_rows_masked_into(&a, &l, &vis_rows, fmt, &mut out_rows);
+            for r in 0..4 {
+                let dst = &out_rows[r * 12..(r + 1) * 12];
+                if vis_rows[r] == 0 {
+                    assert!(dst.iter().all(|&x| x == 0.0), "{} row {r}", fmt.name());
+                } else {
+                    assert_eq!(dst, div_ref.row(r), "{} row {r}", fmt.name());
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,190 @@
+//! Hot-path bit-identity goldens for the zero-allocation / worker-pool
+//! refactor (PR 4 tentpole).
+//!
+//! One FNV-1a checksum is computed over every head's output bits plus the
+//! per-head telemetry, for each (allocation × mask) combination of a GQA
+//! request, across four execution variants that must all be
+//! **bit-identical**:
+//!
+//! 1. pooled (work-stealing (head × Q-block) tiles — the default),
+//! 2. sequential (the in-order fallback via `pool::set_parallel(false)`),
+//! 3. a repeated pooled run (warm, dirty workspace buffers),
+//! 4. paged K/V views (NaN-poisoned page tails) through `run_with_kv`.
+//!
+//! Any divergence — a fused op rounding differently, a workspace buffer
+//! leaking state, a tile writing a wrong row, a paged gather touching a
+//! stale tail — changes the checksum of exactly one variant and fails the
+//! cross-pin.
+
+use pasa::attention::{
+    Allocation, AttentionOutput, AttentionRequest, AttnMask, KvPageSource, KvPair, KvView, PageId,
+};
+use pasa::pool;
+use pasa::tensor::Matrix;
+use pasa::workloads::{gen_gqa_multihead, Distribution};
+
+/// Page size chosen to not divide the KV length, so every block gather
+/// straddles page boundaries.
+const PAGE_TOKENS: usize = 24;
+
+struct MockPool {
+    width: usize,
+    pages: Vec<Vec<f32>>,
+}
+
+impl KvPageSource for MockPool {
+    fn page_tokens(&self) -> usize {
+        PAGE_TOKENS
+    }
+    fn row_width(&self) -> usize {
+        self.width
+    }
+    fn page_data(&self, id: PageId) -> &[f32] {
+        &self.pages[id as usize]
+    }
+}
+
+/// Scatter a dense matrix into pages; the unused tail of the last page is
+/// NaN-poisoned so any read past `len_tokens` poisons the checksum.
+fn paged_fixture(m: &Matrix) -> (MockPool, Vec<PageId>) {
+    let n_pages = m.rows.div_ceil(PAGE_TOKENS);
+    let mut pages = vec![vec![f32::NAN; PAGE_TOKENS * m.cols]; n_pages];
+    for r in 0..m.rows {
+        let pg = r / PAGE_TOKENS;
+        let off = (r % PAGE_TOKENS) * m.cols;
+        pages[pg][off..off + m.cols].copy_from_slice(m.row(r));
+    }
+    let ids = (0..n_pages as PageId).collect();
+    (
+        MockPool {
+            width: m.cols,
+            pages,
+        },
+        ids,
+    )
+}
+
+fn fnv_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+/// FNV-1a over output bits + telemetry of a forward pass.
+fn checksum(out: &AttentionOutput) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for m in &out.heads {
+        for x in &m.data {
+            fnv_bytes(&mut h, &x.to_bits().to_le_bytes());
+        }
+    }
+    for s in &out.stats {
+        fnv_bytes(&mut h, &s.max_abs_score.to_bits().to_le_bytes());
+        fnv_bytes(&mut h, &(s.overflow_events as u64).to_le_bytes());
+        fnv_bytes(&mut h, &(s.nonfinite_outputs as u64).to_le_bytes());
+    }
+    fnv_bytes(&mut h, &out.score_boundary.to_bits().to_le_bytes());
+    h
+}
+
+/// Bit-pattern view of one head's output — NaN-safe equality (masked or
+/// overflow-poisoned FP8 rows are NaN by design, and `f32` equality would
+/// treat identical NaNs as different).
+fn head_bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn all_execution_paths_share_one_checksum_per_combination() {
+    const HEADS: usize = 8;
+    const KV_HEADS: usize = 2;
+    const S: usize = 96; // 3 Q-blocks of 32; 24-token pages straddle KV blocks
+    const D: usize = 16;
+    let dist = Distribution::Uniform { x0: 5.0, am: 1.0 };
+    let mh = gen_gqa_multihead(dist, HEADS, KV_HEADS, S, S, D, 42);
+    let base = AttentionRequest::from_multihead(&mh, Allocation::Fa32)
+        .with_blocks(32, 32)
+        .with_fp16_inputs();
+
+    // Paged fixtures over the request's own (rounded) K/V heads.
+    let fixtures: Vec<((MockPool, Vec<PageId>), (MockPool, Vec<PageId>))> = (0..KV_HEADS)
+        .map(|kvh| (paged_fixture(&base.k[kvh]), paged_fixture(&base.v[kvh])))
+        .collect();
+
+    let masks = [
+        AttnMask::None,
+        AttnMask::Causal,
+        AttnMask::Padded(vec![72]), // broadcast, not page- or block-aligned
+    ];
+    // The parallel/sequential toggle is process-global: serialize with
+    // every other test that flips it so the baselines mean what they say.
+    let _mode = pool::test_mode_guard();
+    for alloc in Allocation::all_extended() {
+        for mask in &masks {
+            let req = base.clone().with_alloc(alloc).with_mask(mask.clone());
+            let label = format!("{} mask={}", alloc.name(), mask.label());
+
+            let pooled = req.run();
+            let c_pooled = checksum(&pooled);
+
+            pool::set_parallel(false);
+            let sequential = req.run();
+            pool::set_parallel(true);
+            assert_eq!(
+                c_pooled,
+                checksum(&sequential),
+                "pooled vs sequential fan-out diverged: {label}"
+            );
+
+            let rerun = req.run();
+            assert_eq!(
+                c_pooled,
+                checksum(&rerun),
+                "workspace reuse (warm rerun) diverged: {label}"
+            );
+
+            let pairs: Vec<KvPair<'_>> = fixtures
+                .iter()
+                .map(|((kp, kids), (vp, vids))| KvPair {
+                    k: KvView::paged(kids, kp, S),
+                    v: KvView::paged(vids, vp, S),
+                })
+                .collect();
+            let paged = req.run_with_kv(&pairs);
+            assert_eq!(
+                c_pooled,
+                checksum(&paged),
+                "paged KV views diverged from dense: {label}"
+            );
+
+            // Head-level bit equality too, so a failure localizes.
+            for h in 0..HEADS {
+                assert_eq!(
+                    head_bits(&pooled.heads[h]),
+                    head_bits(&sequential.heads[h]),
+                    "{label}: head {h} pooled vs sequential"
+                );
+                assert_eq!(
+                    head_bits(&pooled.heads[h]),
+                    head_bits(&paged.heads[h]),
+                    "{label}: head {h} dense vs paged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_reference_checksum_is_stable_across_fanout_modes() {
+    // The naive kernel fans whole heads; it must obey the same contract.
+    let dist = Distribution::Uniform { x0: 2.0, am: 1.0 };
+    let mh = gen_gqa_multihead(dist, 4, 2, 64, 64, 16, 7);
+    let req = AttentionRequest::from_multihead(&mh, Allocation::Fa32).with_fp16_inputs();
+    let _mode = pool::test_mode_guard();
+    let pooled = pasa::attention::KernelRegistry::naive().forward(&req);
+    pool::set_parallel(false);
+    let sequential = pasa::attention::KernelRegistry::naive().forward(&req);
+    pool::set_parallel(true);
+    assert_eq!(checksum(&pooled), checksum(&sequential));
+}
