@@ -85,7 +85,7 @@ fn main() {
     for &heads in prefill_heads {
         for &s in prefill_seqs {
             let mh = gen_multihead(dist, heads, s, d, 7);
-            for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+            for alloc in [Allocation::Fa16_32, Allocation::Pasa16, Allocation::Pasa8] {
                 let req = AttentionRequest::from_multihead(&mh, alloc)
                     .with_mask(AttnMask::Causal)
                     .with_fp16_inputs();
@@ -112,7 +112,7 @@ fn main() {
     for &heads in fan_heads {
         let mh = gen_multihead(dist, heads, s, d, 2);
         for (mask, label) in [(AttnMask::None, "none"), (AttnMask::Causal, "causal")] {
-            for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+            for alloc in [Allocation::Fa16_32, Allocation::Pasa16, Allocation::Pasa8] {
                 let req = AttentionRequest::from_multihead(&mh, alloc)
                     .with_mask(mask.clone())
                     .with_fp16_inputs();

@@ -40,7 +40,7 @@ fn main() {
     );
     let dist = Distribution::Uniform { x0: 0.5, am: 1.0 };
 
-    for alloc in [Allocation::Fa16_32, Allocation::Pasa16] {
+    for alloc in [Allocation::Fa16_32, Allocation::Pasa16, Allocation::Pasa8] {
         println!("## {}", alloc.name());
         for &len in lens {
             let mh = gen_paged_decode_case(dist, N_HEADS, N_KV, len, max_seq, D, len as u64);

@@ -40,6 +40,16 @@ pub enum Allocation {
     /// [`super::kernel::FlashKernel`] — a pure config-table row, no new
     /// code path.
     Fp8,
+    /// PASA shifted into the E4M3 envelope: the pseudo-average shift
+    /// collapses the score bias and amplitude *before* the store, so the
+    /// S' that reaches the E4M3 grid fits inside the 448 boundary that
+    /// poisons plain [`Allocation::Fp8`]. FP32 accumulate, E4M3 S-store
+    /// (overflow site 448), FP16 vector ops — dispatched through
+    /// [`super::kernel::PasaKernel`] with the shifting matrix and the
+    /// `K' = M·K` preprocessing kept in FP16 (see
+    /// [`AttentionConfig::kprep_gemm`]): only the shifted score store
+    /// drops to 8 bits.
+    Pasa8,
 }
 
 impl Allocation {
@@ -54,8 +64,15 @@ impl Allocation {
             "fa16" => Some(Allocation::Fa16),
             "pasa" | "pasa16" => Some(Allocation::Pasa16),
             "fp8" => Some(Allocation::Fp8),
+            "pasa8" => Some(Allocation::Pasa8),
             _ => None,
         }
+    }
+
+    /// Every spelling [`Allocation::parse`] accepts — what a CLI error
+    /// message should list instead of silently falling back.
+    pub fn valid_names() -> &'static [&'static str] {
+        &["fa32", "fa16_32", "fa16", "pasa", "pasa16", "fp8", "pasa8"]
     }
 
     pub fn name(self) -> &'static str {
@@ -65,6 +82,7 @@ impl Allocation {
             Allocation::Fa16 => "FA(FP16)",
             Allocation::Pasa16 => "PASA(FP16)",
             Allocation::Fp8 => "FA(FP8-E4M3)",
+            Allocation::Pasa8 => "PASA(FP8-E4M3)",
         }
     }
 
@@ -81,8 +99,8 @@ impl Allocation {
             Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Pasa16 => {
                 GemmPrecision::ACC32_STORE16
             }
-            // FP8 row: the E4M3 *store* of S is the overflow site (448).
-            Allocation::Fp8 => GemmPrecision {
+            // 8-bit rows: the E4M3 *store* of S is the overflow site (448).
+            Allocation::Fp8 | Allocation::Pasa8 => GemmPrecision {
                 acc: Format::F32,
                 store: Format::F8E4M3,
             },
@@ -93,16 +111,29 @@ impl Allocation {
     pub fn vector_fmt(self) -> Format {
         match self {
             Allocation::Fa32 | Allocation::Fa16_32 => Format::F32,
-            Allocation::Fa16 | Allocation::Pasa16 | Allocation::Fp8 => Format::F16,
+            Allocation::Fa16 | Allocation::Pasa16 | Allocation::Fp8 | Allocation::Pasa8 => {
+                Format::F16
+            }
         }
     }
 
-    /// Format S is stored in between GEMM and softmax.
+    /// Format S is stored in between GEMM and softmax. Exhaustive on
+    /// purpose (no `_` arm): a new allocation must declare its overflow
+    /// site here, not inherit FP16 silently.
     pub fn score_fmt(self) -> Format {
         match self {
             Allocation::Fa32 => Format::F32,
-            Allocation::Fp8 => Format::F8E4M3,
-            _ => Format::F16,
+            Allocation::Fp8 | Allocation::Pasa8 => Format::F8E4M3,
+            Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Pasa16 => Format::F16,
+        }
+    }
+
+    /// True for the PASA rows (pseudo-average shift applied before the
+    /// score store) — the kernel-registry dispatch predicate.
+    pub fn is_shifted(self) -> bool {
+        match self {
+            Allocation::Pasa16 | Allocation::Pasa8 => true,
+            Allocation::Fa32 | Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Fp8 => false,
         }
     }
 
@@ -118,15 +149,20 @@ impl Allocation {
         ]
     }
 
-    /// Every registry row, including the FP8 (E4M3) extension whose error
-    /// envelope is an order coarser than the paper set's.
-    pub fn all_extended() -> [Allocation; 5] {
+    /// Every registry row, including the two E4M3 extensions (plain FP8
+    /// scores and the Pasa8 shifted-into-E4M3 row) whose error envelopes
+    /// are an order coarser than the paper set's. Widened from five to
+    /// six entries when `Pasa8` landed — iterating this array is how the
+    /// goldens, checksum pins and fuzz harness stay exhaustive over the
+    /// registry.
+    pub fn all_extended() -> [Allocation; 6] {
         [
             Allocation::Fa32,
             Allocation::Fa16_32,
             Allocation::Fa16,
             Allocation::Pasa16,
             Allocation::Fp8,
+            Allocation::Pasa8,
         ]
     }
 }
@@ -172,6 +208,21 @@ impl AttentionConfig {
         }
         g
     }
+
+    /// GEMM precision of PASA's `K' = M·K` preprocessing. The score-store
+    /// format never applies to this GEMM: K' is a K-side *operand* of the
+    /// score GEMM, stored like the FP16 inputs — an E4M3 K' would destroy
+    /// the very shift the Pasa8 row exists for, so an E4M3 score store
+    /// clamps back to FP16 here. For every FP16-score allocation this is
+    /// exactly [`Self::gemm`], which keeps `Pasa16` bit-identical to the
+    /// pre-Pasa8 kernels.
+    pub fn kprep_gemm(&self) -> GemmPrecision {
+        let mut g = self.gemm();
+        if g.store == Format::F8E4M3 {
+            g.store = Format::F16;
+        }
+        g
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +243,16 @@ mod tests {
         assert_eq!(Allocation::Fp8.gemm().acc, Format::F32);
         assert_eq!(Allocation::Fp8.vector_fmt(), Format::F16);
         assert_eq!(Allocation::Fp8.gemm().store.overflow_boundary(), 448.0);
+        // Pasa8 row: same E4M3 S-store / FP32 acc / FP16 vector table as
+        // the Fp8 row — the difference is the kernel (shift before store).
+        assert_eq!(Allocation::Pasa8.score_fmt(), Format::F8E4M3);
+        assert_eq!(Allocation::Pasa8.gemm().store, Format::F8E4M3);
+        assert_eq!(Allocation::Pasa8.gemm().acc, Format::F32);
+        assert_eq!(Allocation::Pasa8.vector_fmt(), Format::F16);
+        assert_eq!(Allocation::Pasa8.gemm().store.overflow_boundary(), 448.0);
+        assert!(Allocation::Pasa8.is_shifted());
+        assert!(Allocation::Pasa16.is_shifted());
+        assert!(!Allocation::Fp8.is_shifted());
     }
 
     #[test]
@@ -201,15 +262,49 @@ mod tests {
         assert_eq!(Allocation::parse("fa32"), Some(Allocation::Fa32));
         assert_eq!(Allocation::parse("fa16"), Some(Allocation::Fa16));
         assert_eq!(Allocation::parse("fp8"), Some(Allocation::Fp8));
+        assert_eq!(Allocation::parse("pasa8"), Some(Allocation::Pasa8));
         assert_eq!(Allocation::parse("bf16"), None);
+        // Every advertised spelling parses, and every registry row has a
+        // spelling that round-trips back to it.
+        for name in Allocation::valid_names() {
+            assert!(Allocation::parse(name).is_some(), "{name} must parse");
+        }
+        for alloc in Allocation::all_extended() {
+            assert!(
+                Allocation::valid_names()
+                    .iter()
+                    .any(|n| Allocation::parse(n) == Some(alloc)),
+                "{} has no wire spelling",
+                alloc.name()
+            );
+        }
     }
 
     #[test]
-    fn extended_set_is_paper_set_plus_fp8() {
+    fn extended_set_is_paper_set_plus_the_8bit_rows() {
         let all = Allocation::all();
         let ext = Allocation::all_extended();
+        assert_eq!(ext.len(), 6);
         assert_eq!(&ext[..4], &all[..]);
         assert_eq!(ext[4], Allocation::Fp8);
+        assert_eq!(ext[5], Allocation::Pasa8);
+    }
+
+    #[test]
+    fn kprep_keeps_the_shift_in_fp16() {
+        // Pasa8's K' = M·K preprocessing stores FP16 even though the score
+        // store is E4M3; Pasa16's preprocessing precision is untouched.
+        let c8 = AttentionConfig::new(Allocation::Pasa8);
+        assert_eq!(c8.gemm().store, Format::F8E4M3);
+        assert_eq!(c8.kprep_gemm().store, Format::F16);
+        assert_eq!(c8.kprep_gemm().acc, Format::F32);
+        let c16 = AttentionConfig::new(Allocation::Pasa16);
+        assert_eq!(c16.kprep_gemm(), c16.gemm());
+        // The strict-accumulate flag carries through.
+        let mut strict = AttentionConfig::new(Allocation::Pasa8);
+        strict.strict_fp16_accum = true;
+        assert_eq!(strict.kprep_gemm().acc, Format::F16);
+        assert_eq!(strict.kprep_gemm().store, Format::F16);
     }
 
     #[test]

@@ -9,13 +9,18 @@
 //! * the static scaling, softmax and online update run at
 //!   `cfg.alloc.vector_fmt()` (FP32 for Fa32/Fa16_32, FP16 for Fa16).
 //!
-//! Overflow semantics follow IEEE: S elements beyond ±65504 become ±inf;
-//! +inf makes the row max infinite and `exp(inf − inf) = NaN` poisons the
-//! row — exactly the paper's INF/NaN failure mode. Masking never changes
-//! that: masked score positions are skipped on the matrix engine and
-//! filled with −inf (zero softmax weight); fully-masked query rows produce
-//! zero output rows rather than NaN; and KV blocks past every row's
-//! visible prefix are skipped outright (the flash-causal tiling win).
+//! Overflow semantics follow the store format: FP16 S elements beyond
+//! ±65504 become ±inf and `exp(inf − inf) = NaN` poisons the row; E4M3
+//! (which has no infinity) stores past-448 elements as NaN directly —
+//! both are exactly the paper's INF/NaN failure mode, and both are
+//! *reported* by the pre-store telemetry. Masking never changes that:
+//! masked score positions are skipped on the matrix engine and get
+//! exactly zero softmax weight through the prefix-aware fused ops
+//! (`scale_rowmax_prefix` / `exp_sub_rowbias_prefix_rowsum_into` — never
+//! a −inf sentinel pushed through a store format that may not represent
+//! it); fully-masked query rows produce zero output rows rather than
+//! NaN; and KV blocks past every row's visible prefix are skipped
+//! outright (the flash-causal tiling win).
 //!
 //! ## Hot-path layout
 //!
@@ -143,10 +148,18 @@ pub(crate) fn flash_q_block(
             .extend(ws.vis.iter().map(|&t| t.saturating_sub(j0).min(width)));
 
         // Eq. (1): S = Q_i·K_jᵀ — the matrix-engine GEMM; the store
-        // format decides whether |S| > 65504 overflows. Masked columns
-        // are skipped and filled with −inf.
-        if ws.bvis.iter().all(|&b| b == width) {
+        // format decides whether |S| > the boundary overflows. Masked
+        // columns are skipped (never touch the matrix engine); the
+        // prefix-aware softmax ops below give them exactly zero weight,
+        // so the fill value is never consumed — crucially, it is never
+        // pushed through a store format that can't represent −inf (E4M3
+        // would round it to NaN and poison the whole row).
+        let fully_visible = ws.bvis.iter().all(|&b| b == width);
+        if fully_visible {
             matmul_nt_stats_into(qi, &ws.kj, gemm, None, boundary, &mut gstats, &mut ws.s);
+            // Eq. (2) + Eq. (4): static scaling S/α in the score format
+            // (inf/α = inf), fused with m_j's row max — one pass over S.
+            ops::scale_rowmax(&mut ws.s, inv_alpha, sfmt, &mut ws.row_m);
         } else {
             matmul_nt_prefix_into(
                 qi,
@@ -158,18 +171,22 @@ pub(crate) fn flash_q_block(
                 &mut gstats,
                 &mut ws.s,
             );
+            ops::scale_rowmax_prefix(&mut ws.s, inv_alpha, sfmt, &ws.bvis, &mut ws.row_m);
         }
-
-        // Eq. (2) + Eq. (4): static scaling S/α in the score format
-        // (inf/α = inf), fused with m_j's row max — one pass over S.
-        ops::scale_rowmax(&mut ws.s, inv_alpha, sfmt, &mut ws.row_m);
         ws.m_new.clear();
         ws.m_new
             .extend(ws.m.iter().zip(&ws.row_m).map(|(&a, &b)| a.max(b)));
 
         // Eq. (5) + Eq. (6) rowsum: P = exp(S − m) — attenuator, never
-        // overflows — with its row sums accumulated in the same pass.
-        ops::exp_sub_rowbias_rowsum_into(&ws.s, &ws.m_new, vfmt, &mut ws.p, &mut ws.row_l);
+        // overflows — with its row sums accumulated in the same pass;
+        // masked positions hold exactly zero weight.
+        if fully_visible {
+            ops::exp_sub_rowbias_rowsum_into(&ws.s, &ws.m_new, vfmt, &mut ws.p, &mut ws.row_l);
+        } else {
+            ops::exp_sub_rowbias_prefix_rowsum_into(
+                &ws.s, &ws.m_new, &ws.bvis, vfmt, &mut ws.p, &mut ws.row_l,
+            );
+        }
 
         // Eq. (6): l = exp(m_{j−1} − m_j)·l + rowsum(P).
         ws.decay.clear();
@@ -332,6 +349,36 @@ mod tests {
         let golden = naive_attention_masked_f32(&c, HeadMask::Prefix(96));
         let e = relative_rmse(&masked.data, &golden.data);
         assert!(e < 5e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn masked_fp8_rows_stay_finite_and_match_naive() {
+        // Regression for the E4M3 mask fix: the old path filled masked
+        // score positions with −inf, which E4M3 (no infinity) rounded to
+        // NaN — every causally masked row came out poisoned with *clean*
+        // telemetry. The prefix-aware fused ops must keep masked FP8
+        // finite on benign data, with zero overflow events, inside the
+        // E4M3 envelope of the masked golden.
+        let c = rounded_case(Distribution::Uniform { x0: 0.0, am: 0.5 }, 64, 8, 9);
+        let cfg = AttentionConfig::new(Allocation::Fp8).with_blocks(32, 32);
+        for mask in [HeadMask::Causal, HeadMask::Prefix(40)] {
+            let (o, stats) = flash_head(&c.q, &c.k, &c.v, mask, &cfg);
+            assert!(
+                !has_overflow(&o.data),
+                "{mask:?}: masked FP8 must stay finite on benign data"
+            );
+            assert_eq!(stats.overflow_events, 0, "{mask:?}");
+            assert_eq!(stats.nonfinite_outputs, 0, "{mask:?}");
+            let golden = naive_attention_masked_f32(&c, mask);
+            let e = relative_rmse(&o.data, &golden.data);
+            assert!(e < 0.3, "{mask:?}: rmse {e} beyond the E4M3 envelope");
+        }
+        // The FP16 masked path is bit-unchanged by the prefix ops: pin it
+        // against the masked golden at the FP16 envelope.
+        let cfg16 = AttentionConfig::new(Allocation::Fa16_32).with_blocks(32, 32);
+        let (o, _) = flash_head(&c.q, &c.k, &c.v, HeadMask::Causal, &cfg16);
+        let golden = naive_attention_masked_f32(&c, HeadMask::Causal);
+        assert!(relative_rmse(&o.data, &golden.data) < 5e-2);
     }
 
     #[test]

@@ -369,12 +369,14 @@ static PASA: PasaKernel = PasaKernel;
 pub struct KernelRegistry;
 
 impl KernelRegistry {
-    /// Kernel implementing the given precision allocation. The three FA
+    /// Kernel implementing the given precision allocation. The FA
     /// allocations share [`FlashKernel`] (the allocation itself carries
-    /// the format table); PASA has its own kernel.
+    /// the format table); the shifted rows — `Pasa16` and `Pasa8`, the
+    /// same pseudo-average-shift cores with E4M3 kernel constants for the
+    /// latter — share [`PasaKernel`].
     pub fn get(alloc: Allocation) -> &'static dyn AttentionKernel {
         match alloc {
-            Allocation::Pasa16 => &PASA,
+            Allocation::Pasa16 | Allocation::Pasa8 => &PASA,
             // Fp8 is the same flash code path with E4M3 constants from the
             // allocation table — a config row, not a new kernel.
             Allocation::Fa32 | Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Fp8 => &FLASH,
@@ -403,6 +405,7 @@ mod tests {
     #[test]
     fn registry_covers_every_allocation() {
         assert_eq!(KernelRegistry::get(Allocation::Pasa16).name(), "pasa");
+        assert_eq!(KernelRegistry::get(Allocation::Pasa8).name(), "pasa");
         for alloc in [
             Allocation::Fa32,
             Allocation::Fa16_32,
@@ -410,6 +413,11 @@ mod tests {
             Allocation::Fp8,
         ] {
             assert_eq!(KernelRegistry::get(alloc).name(), "flash");
+        }
+        // The dispatch predicate and the registry agree for every row.
+        for alloc in Allocation::all_extended() {
+            let expect = if alloc.is_shifted() { "pasa" } else { "flash" };
+            assert_eq!(KernelRegistry::get(alloc).name(), expect, "{}", alloc.name());
         }
         assert_eq!(KernelRegistry::naive().name(), "naive-f32");
     }
@@ -425,6 +433,7 @@ mod tests {
             (Allocation::Fa16, 65504.0),
             (Allocation::Pasa16, 65504.0),
             (Allocation::Fp8, 448.0),
+            (Allocation::Pasa8, 448.0),
             (Allocation::Fa32, f32::MAX),
         ] {
             let out = req.clone().with_alloc(alloc).run();

@@ -68,7 +68,9 @@ pub mod workspace;
 
 pub use beta::{solve_optimal_beta, BetaSolve, PAPER_BETA, PAPER_BETAS};
 pub use config::{Allocation, AttentionConfig, BlockSizes};
-pub use policy::{autotune_betas, beta0_for_pressure, BetaPolicy};
+pub use policy::{
+    autotune_betas, autotune_betas_bounded, beta0_for_pressure, beta0_grid_max_p, BetaPolicy,
+};
 pub use flash::{flash_attention, flash_head, flash_head_kv};
 pub use kernel::{AttentionKernel, FlashKernel, KernelRegistry, NaiveKernel, PasaKernel};
 pub use naive::{naive_attention_f32, naive_attention_masked_f32, raw_scores_f32};

@@ -91,7 +91,11 @@ pub fn pasa_preprocess_kv(k: KvView<'_>, cfg: &AttentionConfig) -> PasaPre {
     let alpha = (d as f64).sqrt();
     let beta = cfg.beta;
     let bs2 = cfg.blocks.s2;
-    let gemm = cfg.gemm();
+    // K' is a K-side operand, stored like the FP16 inputs: under the
+    // Pasa8 row only the *score* store drops to E4M3 — an E4M3 K' would
+    // re-poison the shift (see `AttentionConfig::kprep_gemm`). For the
+    // FP16 allocations this is exactly `cfg.gemm()`.
+    let gemm = cfg.kprep_gemm();
 
     let mut kp_blocks: Vec<Matrix> = Vec::new();
     let mut block_inva: Vec<f32> = Vec::new();
@@ -409,6 +413,53 @@ mod tests {
         let golden = naive_attention_f32(&c);
         let e = relative_rmse(&o.data, &golden.data);
         assert!(e < 5e-2, "rmse {e}");
+    }
+
+    #[test]
+    fn pasa8_survives_the_e4m3_envelope_where_fp8_dies() {
+        // The Pasa8 row's reason to exist: raw scores of a few hundred sit
+        // comfortably inside FP16 but past E4M3's 448 boundary — the plain
+        // FP8 store poisons, while the pseudo-average shift collapses the
+        // bias *before* the E4M3 store and the same data survives with
+        // zero pre-store overflow events.
+        let c = rounded_case(Distribution::Uniform { x0: 2.0, am: 0.25 }, 128, 128, 21);
+        let cfg8 = AttentionConfig::new(Allocation::Fp8).with_blocks(64, 64);
+        let (fp8, fp8_stats) = flash_head(&c.q, &c.k, &c.v, HeadMask::None, &cfg8);
+        assert!(
+            has_overflow(&fp8.data),
+            "premise: S ≈ 2²·128 = 512 > 448 must poison the E4M3 store"
+        );
+        assert!(fp8_stats.overflow_events > 0, "premise: E4M3 store trips");
+        let cfgp = AttentionConfig::new(Allocation::Pasa8).with_blocks(64, 64);
+        let pre = pasa_preprocess(&c.k, &cfgp);
+        let (o, stats) = pasa_head(&c.q, &c.v, &pre, HeadMask::None, &cfgp);
+        assert!(!has_overflow(&o.data), "Pasa8 must stay finite");
+        assert_eq!(stats.overflow_events, 0, "Pasa8 pre-store events leaked");
+        assert!(stats.max_abs_score < 448.0, "shifted S' must fit E4M3");
+        let golden = naive_attention_f32(&c);
+        let e = relative_rmse(&o.data, &golden.data);
+        assert!(e < 0.3, "Pasa8 rmse {e} beyond the E4M3 envelope");
+    }
+
+    #[test]
+    fn pasa8_preprocessing_keeps_k_prime_on_the_fp16_grid() {
+        // The E4M3 score store must not leak into K': the shifted blocks
+        // are FP16 (anything coarser would destroy the shift).
+        use crate::numerics::Format;
+        let c = rounded_case(Distribution::Uniform { x0: 2.0, am: 0.25 }, 96, 32, 22);
+        let cfgp = AttentionConfig::new(Allocation::Pasa8).with_blocks(64, 64);
+        let pre = pasa_preprocess(&c.k, &cfgp);
+        for (j, kp) in pre.kp_blocks.iter().enumerate() {
+            assert!(kp.is_on_grid(Format::F16), "block {j} not FP16");
+            // ... and genuinely finer than the E4M3 grid somewhere (the
+            // clamp is doing real work, not vacuously passing).
+        }
+        let off_e4m3 = pre.kp_blocks.iter().any(|kp| {
+            kp.data
+                .iter()
+                .any(|&x| x.is_finite() && crate::numerics::round::round_f8e4m3(x) != x)
+        });
+        assert!(off_e4m3, "K' landed entirely on the E4M3 grid — clamp inert?");
     }
 
     #[test]

@@ -54,16 +54,35 @@ impl Default for BetaPolicy {
     }
 }
 
-/// Pick the paper-grid β₀ for an observed pre-shift score peak: the
-/// smallest 1 − 2⁻ᵖ (p ∈ 4..=6 — the initials the paper feeds Table 3)
-/// whose post-shift residual (1 − β)·|S|ₘₐₓ fits within 1/64 of the
-/// format's overflow boundary. Unpressured heads keep the mildest grid β
-/// (0.9375, exact in FP16); peaks beyond the grid's reach saturate at
-/// 1 − 2⁻⁶ (the paper's own strongest candidate).
+/// Largest grid exponent p of the β₀ candidates 1 − 2⁻ᵖ for a score
+/// format. The paper's grid stops at p = 6 (its strongest Table 3
+/// initial) — enough when the overflow boundary is FP16's 65504, where
+/// the residual budget boundary/64 = 1023.5 absorbs any in-range peak at
+/// (1 − β) = 2⁻⁶. Boundaries *tighter* than FP16 (E4M3's 448, budget
+/// 448/64 = 7) re-derive the grid: the candidates extend to p = 9 so a
+/// peak of a few thousand still finds a β whose residual (1 − β)·|S|
+/// fits the envelope. Every extended initial stays on the good side of
+/// the solver's fixed-point pole (≈ 0.9999 in FP16 — pinned by a test).
+pub fn beta0_grid_max_p(fmt: Format) -> i32 {
+    if fmt.overflow_boundary() < Format::F16.overflow_boundary() {
+        9
+    } else {
+        6
+    }
+}
+
+/// Pick the grid β₀ for an observed pre-shift score peak: the smallest
+/// 1 − 2⁻ᵖ (p starting at the paper's mildest initial, p = 4) whose
+/// post-shift residual (1 − β)·|S|ₘₐₓ fits within 1/64 of the format's
+/// overflow boundary. Unpressured heads keep the mildest grid β (0.9375,
+/// exact in FP16); peaks beyond the grid's reach saturate at the
+/// format's strongest candidate ([`beta0_grid_max_p`] — the paper's
+/// 1 − 2⁻⁶ for FP16-scale boundaries, 1 − 2⁻⁹ for the E4M3 envelope).
 pub fn beta0_for_pressure(max_abs_score: f64, fmt: Format) -> f64 {
     let margin = fmt.overflow_boundary() / 64.0;
+    let p_max = beta0_grid_max_p(fmt);
     let mut p: i32 = 4;
-    while p < 6 && max_abs_score * 2f64.powi(-p) > margin {
+    while p < p_max && max_abs_score * 2f64.powi(-p) > margin {
         p += 1;
     }
     1.0 - 2f64.powi(-p)
@@ -71,20 +90,54 @@ pub fn beta0_for_pressure(max_abs_score: f64, fmt: Format) -> f64 {
 
 /// One solved β per observed per-head score peak: grid pick via
 /// [`beta0_for_pressure`], then the optimal accuracy condition at block
-/// width `n` under the rounding of `tp`.
+/// width `n` under the rounding of `tp` (which is both the residual
+/// budget's boundary and the solver's carrier — the FP16 workflow).
 pub fn autotune_betas(max_scores: &[f32], n: usize, tp: Format) -> Vec<f64> {
+    autotune_betas_bounded(max_scores, n, tp, tp)
+}
+
+/// Boundary-aware autotune: the β₀ grid pick scales its residual budget
+/// to `boundary_fmt`'s overflow boundary (448 for the E4M3 rows), while
+/// the Table 3 fixed-point solve still rounds against `tp` — the format
+/// the shifting matrix M is *stored* in, FP16 in Algorithm 1 regardless
+/// of where S lands. Pasa8's autotune is therefore
+/// `autotune_betas_bounded(peaks, n, Format::F16, Format::F8E4M3)`:
+/// FP16 invariant exactness, 448-scaled shift strength.
+pub fn autotune_betas_bounded(
+    max_scores: &[f32],
+    n: usize,
+    tp: Format,
+    boundary_fmt: Format,
+) -> Vec<f64> {
     max_scores
         .iter()
         .map(|&s| {
-            let b0 = beta0_for_pressure(s as f64, tp);
+            let b0 = beta0_for_pressure(s as f64, boundary_fmt);
             solve_optimal_beta(b0, n, tp, 1e-10, 500).beta
         })
         .collect()
 }
 
+/// The fixed-point solver's rounding carrier for a score format: the
+/// shifting matrix M is stored FP16 regardless of where S lands
+/// (Algorithm 1's annotation — exactly why `AttentionConfig::kprep_gemm`
+/// clamps the K' store too), so sub-FP16 score formats clamp to FP16
+/// here. The E4M3 grid (eps 2⁻⁴) cannot even represent β/n and would
+/// wreck — or fail to converge — the Table 3 solve a
+/// `Solved { per_format: true }` policy runs under the Pasa8/Fp8 rows.
+fn solver_carrier(fmt: Format) -> Format {
+    if fmt == Format::F8E4M3 {
+        Format::F16
+    } else {
+        fmt
+    }
+}
+
 impl BetaPolicy {
     /// β for query head `head`, under KV block width `n` and score
-    /// format `fmt` (both only consulted by [`BetaPolicy::Solved`]).
+    /// format `fmt` (both only consulted by [`BetaPolicy::Solved`];
+    /// sub-FP16 formats clamp to the FP16 solver carrier — see
+    /// `solver_carrier`).
     pub fn resolve(&self, head: usize, n: usize, fmt: Format) -> f64 {
         match self {
             BetaPolicy::Uniform(b) => *b,
@@ -101,7 +154,11 @@ impl BetaPolicy {
                 }
             }
             BetaPolicy::Solved { beta0, per_format } => {
-                let tp = if *per_format { fmt } else { Format::F16 };
+                let tp = if *per_format {
+                    solver_carrier(fmt)
+                } else {
+                    Format::F16
+                };
                 let s = solve_optimal_beta(*beta0, n, tp, 1e-10, 500);
                 // The solver reports non-convergence (e.g. a β₀ at the
                 // fixed-point pole near 1) instead of silently returning
@@ -121,8 +178,22 @@ impl BetaPolicy {
     /// The autotune pass: per-head β table from observed kernel telemetry
     /// (one [`HeadStats`] per query head), fed through the Table 3 solver.
     pub fn autotune(stats: &[HeadStats], n: usize, tp: Format) -> BetaPolicy {
+        Self::autotune_bounded(stats, n, tp, tp)
+    }
+
+    /// Boundary-aware [`Self::autotune`]: the residual budget scales to
+    /// `boundary_fmt`'s overflow boundary while the solver keeps rounding
+    /// against `tp` (the shifting matrix's FP16 storage). This is the
+    /// Pasa8 workflow — `autotune_bounded(stats, n, Format::F16,
+    /// Format::F8E4M3)` solves shifts strong enough for the 448 envelope.
+    pub fn autotune_bounded(
+        stats: &[HeadStats],
+        n: usize,
+        tp: Format,
+        boundary_fmt: Format,
+    ) -> BetaPolicy {
         let peaks: Vec<f32> = stats.iter().map(|s| s.max_abs_score).collect();
-        BetaPolicy::PerHead(autotune_betas(&peaks, n, tp))
+        BetaPolicy::PerHead(autotune_betas_bounded(&peaks, n, tp, boundary_fmt))
     }
 
     /// Autotune straight off a probe run's [`AttentionOutput`].
@@ -142,7 +213,11 @@ impl BetaPolicy {
     pub fn resolved(&self, n: usize, fmt: Format) -> Result<BetaPolicy, String> {
         match self {
             BetaPolicy::Solved { beta0, per_format } => {
-                let tp = if *per_format { fmt } else { Format::F16 };
+                let tp = if *per_format {
+                    solver_carrier(fmt)
+                } else {
+                    Format::F16
+                };
                 let s = solve_optimal_beta(*beta0, n, tp, 1e-10, 500);
                 if !s.converged {
                     return Err(format!(
@@ -213,6 +288,66 @@ mod tests {
             assert!(b >= last, "beta0 not monotone at peak {s}");
             last = b;
         }
+    }
+
+    #[test]
+    fn e4m3_boundary_rederives_the_grid() {
+        // The 448 boundary scales the residual budget to 448/64 = 7 and
+        // extends the grid to p = 9. A 512-scale peak — benign under the
+        // FP16 budget — now needs 1 − 2⁻⁷; kilo-scale peaks saturate at
+        // the extended strongest candidate 1 − 2⁻⁹.
+        let f8 = Format::F8E4M3;
+        assert_eq!(beta0_grid_max_p(Format::F16), 6);
+        assert_eq!(beta0_grid_max_p(Format::Bf16), 6);
+        assert_eq!(beta0_grid_max_p(f8), 9);
+        assert_eq!(beta0_for_pressure(10.0, f8), 0.9375);
+        assert_eq!(beta0_for_pressure(512.0, f8), 1.0 - 2f64.powi(-7));
+        assert_eq!(beta0_for_pressure(3000.0, f8), 1.0 - 2f64.powi(-9));
+        assert_eq!(beta0_for_pressure(1e6, f8), 1.0 - 2f64.powi(-9));
+        // The very same 512 peak keeps the mildest β under FP16's budget.
+        assert_eq!(beta0_for_pressure(512.0, Format::F16), 0.9375);
+        // Monotone in the peak under the tight boundary too.
+        let mut last = 0.0;
+        for s in [1.0, 50.0, 500.0, 5e3, 5e4, 5e5] {
+            let b = beta0_for_pressure(s, f8);
+            assert!(b >= last, "beta0 not monotone at peak {s}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn extended_grid_initials_solve_and_converge() {
+        // Every extended candidate (p = 7..=9) must pass the Table 3
+        // fixed-point solve under the FP16 carrier — they all sit on the
+        // good side of the ≈ 0.9999 pole.
+        use crate::attention::beta::{ideal_invariant, practical_invariant};
+        for p in 4..=9 {
+            let b0 = 1.0 - 2f64.powi(-p);
+            let s = solve_optimal_beta(b0, 128, Format::F16, 1e-10, 500);
+            assert!(s.converged, "p={p}: initial {b0} did not converge");
+            assert!(s.beta > 0.9 && s.beta < 1.0, "p={p}: solved {}", s.beta);
+            let i = ideal_invariant(s.beta);
+            let i1 = practical_invariant(s.beta, 128, Format::F16);
+            assert!(((i - i1) / i).abs() < 1e-9, "p={p}: invariance error");
+        }
+    }
+
+    #[test]
+    fn bounded_autotune_solves_stronger_shifts_for_the_448_envelope() {
+        // One peak, two budgets: under FP16 the 512 peak keeps the mild
+        // 0.9375; under the E4M3 boundary the same peak solves a strictly
+        // stronger β — and the solve itself still rounds against FP16 (the
+        // shifting matrix's storage), so the invariant stays exact.
+        let peaks = [512.0f32];
+        let f16 = autotune_betas_bounded(&peaks, 128, Format::F16, Format::F16);
+        let f8 = autotune_betas_bounded(&peaks, 128, Format::F16, Format::F8E4M3);
+        assert!((f16[0] - 0.9375).abs() < 5e-6);
+        assert!(f8[0] > f16[0], "448 budget must shift harder: {f8:?}");
+        assert_eq!(
+            autotune_betas(&peaks, 128, Format::F16),
+            f16,
+            "unbounded autotune is the tp-bounded special case"
+        );
     }
 
     #[test]
@@ -288,6 +423,29 @@ mod tests {
         // A seed at the FP16 fixed-point pole is a *validation* error —
         // callers learn before dispatch, not via a mid-forward panic.
         assert!(v(&solved(0.9999), 4).is_err());
+    }
+
+    #[test]
+    fn solved_policy_clamps_e4m3_to_the_fp16_solver_carrier() {
+        // A per-format Solved policy under an E4M3 score format (the
+        // Pasa8/Fp8 rows) must solve on the FP16 grid — M is stored FP16
+        // regardless of where S lands, and the E4M3 grid cannot represent
+        // β/n. The resolved β is therefore identical to the FP16 solve,
+        // and never a mid-forward panic.
+        let sol = BetaPolicy::Solved {
+            beta0: 1.0 - 2f64.powi(-6),
+            per_format: true,
+        };
+        let f16 = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::F16, 1e-10, 500).beta;
+        assert_eq!(sol.resolve(0, 128, Format::F8E4M3), f16);
+        assert_eq!(
+            sol.resolved(128, Format::F8E4M3).unwrap(),
+            BetaPolicy::Uniform(f16)
+        );
+        assert!(sol.validate(4, 128, Format::F8E4M3).is_ok());
+        // Bf16 (which has its own sane grid) still solves per-format.
+        let bf = solve_optimal_beta(1.0 - 2f64.powi(-6), 128, Format::Bf16, 1e-10, 500).beta;
+        assert_eq!(sol.resolve(0, 128, Format::Bf16), bf);
     }
 
     #[test]

@@ -970,6 +970,26 @@ mod tests {
     }
 
     #[test]
+    fn pasa8_request_carries_the_448_boundary_telemetry() {
+        // The request layer's half of the Pasa8 plumbing: the allocation's
+        // E4M3 score format drives both the output's score_boundary and
+        // the block width/format the β policy resolves against — no layer
+        // hardcodes 65504.
+        let c = case(32, 32, 8, 6);
+        let req = AttentionRequest::from_case(&c, Allocation::Pasa8)
+            .with_blocks(16, 16)
+            .with_fp16_inputs();
+        assert_eq!(req.cfg.alloc.score_fmt(), Format::F8E4M3);
+        assert!(req.validate().is_ok());
+        let out = req.run();
+        assert_eq!(out.score_boundary, 448.0);
+        assert!(!out.overflowed(), "benign case must stay finite under Pasa8");
+        assert_eq!(out.overflow_events(), 0);
+        // The same request rebound to the FP16 PASA row reports 65504.
+        assert_eq!(req.with_alloc(Allocation::Pasa16).run().score_boundary, 65504.0);
+    }
+
+    #[test]
     fn fp16_input_rounding_is_on_grid() {
         let c = case(16, 16, 8, 4);
         let req = AttentionRequest::from_case(&c, Allocation::Fa16_32).with_fp16_inputs();

@@ -51,6 +51,16 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub policy: GuardPolicy,
+    /// Starting attention allocation of the *switching* guard policies —
+    /// the root of the guard's fallback chain (`--alloc` on the CLI).
+    /// `Fa16_32` keeps the classic `fa16_32 → pasa` behaviour; `Fp8`
+    /// walks `fp8 → pasa8 → pasa`, rescuing within the 8-bit envelope
+    /// before abandoning it. Fixed policies (`AlwaysPasa` & co.) ignore
+    /// it. **Lab backend only** for non-default values: the PJRT
+    /// manifest ships no fp8/pasa8 modules, and its batched group-replay
+    /// path replays under "pasa" — the CLI rejects a non-default
+    /// `--alloc` on the PJRT serve path for exactly this reason.
+    pub start_alloc: Allocation,
     /// Total pages in the KV pool.
     pub kv_pages: usize,
     /// Tokens per page.
@@ -62,6 +72,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             policy: GuardPolicy::Adaptive,
+            start_alloc: Allocation::Fa16_32,
             kv_pages: 4096,
             page_tokens: 32,
             max_queue: 256,
@@ -335,7 +346,7 @@ impl<'rt> Engine<'rt> {
         let rt = *rt;
         let (mut ids, n) = tokenizer::encode(&req.prompt, d.prefill_seq, self.sp);
         ids.truncate(d.prefill_seq);
-        let mut guard = Guard::new(self.cfg.policy);
+        let mut guard = Guard::new(self.cfg.policy).with_start(self.cfg.start_alloc);
 
         let admitted = Instant::now();
         let mut out = rt
@@ -403,7 +414,7 @@ impl<'rt> Engine<'rt> {
     fn prefill_lab(&mut self, req: Request) -> Result<ActiveRequest> {
         let d = self.dims;
         let (ids, n) = tokenizer::encode(&req.prompt, d.prefill_seq, self.sp);
-        let mut guard = Guard::new(self.cfg.policy);
+        let mut guard = Guard::new(self.cfg.policy).with_start(self.cfg.start_alloc);
 
         let admitted = Instant::now();
         let Backend::Lab(model) = &self.backend else {
@@ -414,12 +425,24 @@ impl<'rt> Engine<'rt> {
         let mut out = model.prefill(alloc, &ids, n).context("lab prefill")?;
         // Guard on the kernels' pre-store telemetry (max |S| / overflow
         // events at the score GEMM) — trouble is visible before any NaN
-        // reaches the logits.
-        if observe_guard(&mut guard, &out.signal, &mut self.metrics) {
-            self.metrics.overflow_steps += 1;
+        // reaches the logits. Replays walk the guard's fallback chain:
+        // an FP8 start rescues to Pasa8 first and only escalates to full
+        // FP16 PASA if the shifted store still trips (the loop is bounded
+        // by the chain length — observe_signal returns false once the
+        // chain is exhausted). Like the decode path, the prefill counts
+        // at most one overflow step no matter how many chain stages the
+        // rescue walked.
+        let mut overflowed_step = false;
+        while observe_guard(&mut guard, &out.signal, &mut self.metrics) {
+            overflowed_step = true;
+            let rescue = Allocation::parse(guard.allocation())
+                .expect("guard allocation maps to the lab");
             out = model
-                .prefill(Allocation::Pasa16, &ids, n)
-                .context("lab prefill replay under PASA")?;
+                .prefill(rescue, &ids, n)
+                .context("lab prefill replay")?;
+        }
+        if overflowed_step {
+            self.metrics.overflow_steps += 1;
         }
         let prefill_done = Instant::now();
         self.metrics.prefill_tokens += n as u64;
@@ -586,8 +609,9 @@ impl<'rt> Engine<'rt> {
         // and shares the model and the page pool read-mostly.
         struct StepOut {
             logits: Vec<f32>,
-            steps: u32,
-            latencies: [f64; 2],
+            /// One wall-clock sample per executed step (first run + every
+            /// chain replay).
+            latencies: Vec<f64>,
             overflowed: bool,
             switch_delta: u64,
             err: Option<anyhow::Error>,
@@ -601,8 +625,7 @@ impl<'rt> Engine<'rt> {
                     ar,
                     StepOut {
                         logits: Vec::new(),
-                        steps: 0,
-                        latencies: [0.0; 2],
+                        latencies: Vec::new(),
                         overflowed: false,
                         switch_delta: 0,
                         err: None,
@@ -626,42 +649,46 @@ impl<'rt> Engine<'rt> {
                 let pos = ar.tokens.len() - 1;
                 let t0 = Instant::now();
                 match model.decode_step_prepared(alloc, tok, pos, &mut ar.cache, pool_ref) {
-                    Ok((logits, sig)) => {
-                        out.steps = 1;
-                        out.latencies[0] = t0.elapsed().as_secs_f64();
+                    Ok((mut logits, mut sig)) => {
+                        out.latencies.push(t0.elapsed().as_secs_f64());
                         if sig.overflow_events > 0 || sig.nonfinite > 0 {
                             out.overflowed = true;
                         }
                         let before = ar.guard.switches;
-                        let replay = ar.guard.observe_signal(&sig);
-                        out.switch_delta = (ar.guard.switches - before) as u64;
-                        if replay {
-                            // Replay this slot's step under PASA. The step
-                            // is functional in (token, pos, cache prefix),
-                            // so the replay rewrites the same KV rows —
-                            // the cache ends up exactly as if PASA had run
-                            // the step first.
+                        // Replay this slot's step down the guard's
+                        // fallback chain (fp8 → pasa8 → pasa on an FP8
+                        // start). The step is functional in (token, pos,
+                        // cache prefix), so each replay rewrites the same
+                        // KV rows — the cache ends up exactly as if the
+                        // final allocation had run the step first. The
+                        // loop is bounded by the chain length.
+                        while ar.guard.observe_signal(&sig) {
+                            let rescue = Allocation::parse(ar.guard.allocation())
+                                .expect("guard allocation maps to the lab");
                             let t1 = Instant::now();
                             match model.decode_step_prepared(
-                                Allocation::Pasa16,
+                                rescue,
                                 tok,
                                 pos,
                                 &mut ar.cache,
                                 pool_ref,
                             ) {
-                                Ok((l2, _)) => {
-                                    out.logits = l2;
-                                    out.steps = 2;
-                                    out.latencies[1] = t1.elapsed().as_secs_f64();
+                                Ok((l2, s2)) => {
+                                    logits = l2;
+                                    sig = s2;
+                                    out.latencies.push(t1.elapsed().as_secs_f64());
+                                    if sig.overflow_events > 0 || sig.nonfinite > 0 {
+                                        out.overflowed = true;
+                                    }
                                 }
                                 Err(e) => {
-                                    out.err =
-                                        Some(e.context("lab decode replay under PASA"))
+                                    out.err = Some(e.context("lab decode replay"));
+                                    break;
                                 }
                             }
-                        } else {
-                            out.logits = logits;
                         }
+                        out.switch_delta = (ar.guard.switches - before) as u64;
+                        out.logits = logits;
                     }
                     Err(e) => out.err = Some(e.context("lab decode step")),
                 }
@@ -673,10 +700,10 @@ impl<'rt> Engine<'rt> {
         for task in tasks {
             let (i, ar, out) = task.into_inner().unwrap();
             self.slots[i] = Some(ar);
-            for step in 0..out.steps as usize {
+            for &lat in &out.latencies {
                 self.metrics.decode_steps += 1;
                 // Replayed steps are real serving latency: record them.
-                self.metrics.step_latency.record(out.latencies[step]);
+                self.metrics.step_latency.record(lat);
             }
             if out.overflowed {
                 self.metrics.overflow_steps += 1;
@@ -781,6 +808,11 @@ impl<'rt> Engine<'rt> {
             }
         }
         if replay {
+            // The PJRT group replay is pinned to "pasa": this backend is
+            // restricted to the default fa16_32 → pasa chain (see
+            // `EngineConfig::start_alloc`), whose rescue stage is exactly
+            // "pasa" — a longer chain here would desynchronize guard
+            // state from the executed allocation.
             let t1 = Instant::now();
             let (l2, k2, v2) = rt
                 .decode("pasa", &tokens, &pos, &self.kbatch, &self.vbatch)

@@ -17,7 +17,7 @@
 //! * the runtime path's logits scan (the legacy NaN sniffing), kept for
 //!   the PJRT modules whose internals we don't instrument.
 
-use crate::attention::AttentionOutput;
+use crate::attention::{Allocation, AttentionOutput};
 use crate::numerics::Format;
 
 /// Overflow telemetry for one engine step.
@@ -150,11 +150,27 @@ impl GuardPolicy {
     }
 }
 
+/// The default allocation fallback chain of the switching policies:
+/// start on the fast partially-low-precision FA path, rescue to PASA.
+const CHAIN_FA16: &[&str] = &["fa16_32", "pasa"];
+
 /// Per-request guard state.
+///
+/// Switching policies (`Adaptive` / `Preemptive`) walk an **allocation
+/// fallback chain** instead of a single FA→PASA flip: each unclean step
+/// advances one stage and sticks. The default chain is the classic
+/// `fa16_32 → pasa`; an engine started on the FP8 row walks
+/// `fp8 → pasa8 → pasa` ([`Guard::fallback_chain`]) — the rescue path
+/// first steps *within* the 8-bit envelope (Pasa8's shift moves the
+/// overflow site away from 448 without abandoning E4M3 scores) and only
+/// escalates to full FP16 PASA if the shifted store still trips.
 #[derive(Clone, Debug)]
 pub struct Guard {
     policy: GuardPolicy,
-    pinned_pasa: bool,
+    /// Allocation spellings the switching policies walk, mildest first.
+    chain: &'static [&'static str],
+    /// Current chain stage (0 = the starting allocation).
+    stage: usize,
     /// Trip point for max |S| as a fraction of the signal's format
     /// boundary (1.0 = trip only past the boundary itself; the
     /// `Preemptive` policy installs its `score_limit_frac` here).
@@ -170,10 +186,38 @@ impl Guard {
         };
         Guard {
             policy,
-            pinned_pasa: false,
+            chain: CHAIN_FA16,
+            stage: 0,
             score_limit_frac,
             switches: 0,
         }
+    }
+
+    /// The allocation fallback chain rooted at a starting allocation —
+    /// every spelling parses back through [`Allocation::parse`] and the
+    /// first stage parses back to `start` itself (both pinned by tests —
+    /// the chain must never silently substitute a different starting
+    /// kernel). FP8 starts step within 8-bit first: `fp8 → pasa8 →
+    /// pasa`; the PASA rows have nowhere milder to go than their own
+    /// stronger sibling; FA32 cannot overflow, so its chain is itself.
+    pub fn fallback_chain(start: Allocation) -> &'static [&'static str] {
+        match start {
+            Allocation::Fa16_32 => CHAIN_FA16,
+            Allocation::Fa16 => &["fa16", "pasa"],
+            Allocation::Fp8 => &["fp8", "pasa8", "pasa"],
+            Allocation::Pasa8 => &["pasa8", "pasa"],
+            Allocation::Pasa16 => &["pasa"],
+            Allocation::Fa32 => &["fa32"],
+        }
+    }
+
+    /// Root the switching policies' fallback chain at `start` (the
+    /// engine's `start_alloc` knob). Fixed policies keep their fixed
+    /// allocation — the chain only drives `Adaptive` / `Preemptive`.
+    pub fn with_start(mut self, start: Allocation) -> Guard {
+        self.chain = Self::fallback_chain(start);
+        self.stage = 0;
+        self
     }
 
     /// Lower the score trip point to a fraction of the active format's
@@ -197,37 +241,35 @@ impl Guard {
             GuardPolicy::AlwaysPasa => "pasa",
             GuardPolicy::AlwaysFa16 => "fa16_32",
             GuardPolicy::AlwaysFa32 => "fa32",
-            GuardPolicy::Adaptive | GuardPolicy::Preemptive { .. } => {
-                if self.pinned_pasa {
-                    "pasa"
-                } else {
-                    "fa16_32"
-                }
-            }
+            GuardPolicy::Adaptive | GuardPolicy::Preemptive { .. } => self.chain[self.stage],
         }
     }
 
     /// Inspect a step's telemetry; returns true if the step must be
-    /// replayed under PASA. Adaptive replays any unclean step; Preemptive
-    /// pins PASA on pure score pressure *without* a replay (the step's
-    /// outputs are still exact) and replays only when damage — a pre-store
-    /// overflow or a non-finite output — already landed.
+    /// replayed under the next chain allocation ([`Self::allocation`]
+    /// after this call). Adaptive replays any unclean step; Preemptive
+    /// advances on pure score pressure *without* a replay (the step's
+    /// outputs are still exact) and replays only when damage — a
+    /// pre-store overflow or a non-finite output — already landed. At the
+    /// end of the chain there is nothing left to switch to and the
+    /// telemetry surfaces as-is.
     pub fn observe_signal(&mut self, sig: &GuardSignal) -> bool {
         if sig.is_clean(self.score_limit_frac) {
             return false;
         }
+        let can_step = self.stage + 1 < self.chain.len();
         match self.policy {
-            GuardPolicy::Adaptive if !self.pinned_pasa => {
-                self.pinned_pasa = true;
+            GuardPolicy::Adaptive if can_step => {
+                self.stage += 1;
                 self.switches += 1;
                 true
             }
-            GuardPolicy::Preemptive { .. } if !self.pinned_pasa => {
-                self.pinned_pasa = true;
+            GuardPolicy::Preemptive { .. } if can_step => {
+                self.stage += 1;
                 self.switches += 1;
                 sig.overflow_events > 0 || sig.nonfinite > 0
             }
-            _ => false, // nothing left to switch to — surface the NaNs
+            _ => false, // fixed policy, or the chain is exhausted
         }
     }
 
@@ -236,8 +278,12 @@ impl Guard {
         self.observe_signal(&GuardSignal::from_logits(logits))
     }
 
+    /// True once the guard has left its starting allocation (for the
+    /// default chain this is exactly the old "pinned to PASA" state; an
+    /// FP8 chain is pinned from its first step onto Pasa8, even though a
+    /// later trip may still escalate it to Pasa16).
     pub fn is_pinned(&self) -> bool {
-        self.pinned_pasa
+        self.stage > 0
     }
 }
 
@@ -290,8 +336,8 @@ mod tests {
     fn guard_spellings_map_onto_lab_allocations() {
         // Every allocation string the guard can emit must resolve to a
         // lab Allocation (the engine's replay path and any lab-backed
-        // runtime rely on this bridge staying total).
-        use crate::attention::Allocation;
+        // runtime rely on this bridge staying total) — including every
+        // stage of every fallback chain.
         for policy in [
             GuardPolicy::AlwaysPasa,
             GuardPolicy::AlwaysFa16,
@@ -314,6 +360,93 @@ mod tests {
                 g.allocation()
             );
         }
+        for start in Allocation::all_extended() {
+            let chain = Guard::fallback_chain(start);
+            for s in chain {
+                assert!(
+                    Allocation::parse(s).is_some(),
+                    "chain of {}: {s:?} has no lab allocation",
+                    start.name()
+                );
+            }
+            // The first stage must be the requested start itself — a
+            // chain that substitutes a different kernel at stage 0 would
+            // silently ignore the user's --alloc.
+            assert_eq!(
+                Allocation::parse(chain[0]),
+                Some(start),
+                "chain of {} does not start at itself",
+                start.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_chain_steps_within_8bit_before_abandoning_it() {
+        // An adaptive guard rooted at the FP8 row: the first trip rescues
+        // to Pasa8 (still E4M3 scores — the shift moves the overflow site
+        // away, the envelope stays 8-bit); a second trip escalates to
+        // full FP16 PASA; a third has nowhere to go.
+        let mut g = Guard::new(GuardPolicy::Adaptive).with_start(Allocation::Fp8);
+        assert_eq!(g.allocation(), "fp8");
+        assert!(!g.is_pinned());
+        let trip = GuardSignal {
+            overflow_events: 2,
+            max_abs_score: 500.0,
+            nonfinite: 0,
+            boundary: 448.0,
+        };
+        assert!(g.observe_signal(&trip), "first trip must replay");
+        assert_eq!(g.allocation(), "pasa8");
+        assert!(g.is_pinned());
+        assert_eq!(g.switches, 1);
+        assert!(g.observe_signal(&trip), "second trip must replay");
+        assert_eq!(g.allocation(), "pasa");
+        assert_eq!(g.switches, 2);
+        assert!(!g.observe_signal(&trip), "chain exhausted — surface it");
+        assert_eq!(g.allocation(), "pasa");
+        assert_eq!(g.switches, 2);
+        // A clean signal never advances the chain.
+        let mut g = Guard::new(GuardPolicy::Adaptive).with_start(Allocation::Fp8);
+        assert!(!g.observe_signal(&GuardSignal::default()));
+        assert_eq!(g.allocation(), "fp8");
+    }
+
+    #[test]
+    fn preemptive_fp8_chain_pins_on_pressure_per_stage() {
+        // Pressure at 300/448 = 0.67 > 0.6 advances the pre-emptive chain
+        // without a replay; once on Pasa8 the same |S| peak re-evaluates
+        // against the *same* 448 boundary but post-shift telemetry — a
+        // clean shifted signal keeps the stage.
+        let mut g = Guard::new(GuardPolicy::Preemptive {
+            score_limit_frac: 0.6,
+        })
+        .with_start(Allocation::Fp8);
+        let pressure = GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 300.0,
+            nonfinite: 0,
+            boundary: 448.0,
+        };
+        assert!(!g.observe_signal(&pressure), "pressure pin, no replay");
+        assert_eq!(g.allocation(), "pasa8");
+        assert_eq!(g.switches, 1);
+        let shifted_clean = GuardSignal {
+            overflow_events: 0,
+            max_abs_score: 12.0,
+            nonfinite: 0,
+            boundary: 448.0,
+        };
+        assert!(!g.observe_signal(&shifted_clean));
+        assert_eq!(g.allocation(), "pasa8", "clean shifted step must stick");
+    }
+
+    #[test]
+    fn fixed_policies_ignore_the_start_knob() {
+        let mut g = Guard::new(GuardPolicy::AlwaysPasa).with_start(Allocation::Fp8);
+        assert_eq!(g.allocation(), "pasa");
+        assert!(!g.observe(&[f32::NAN]));
+        assert_eq!(g.allocation(), "pasa");
     }
 
     #[test]

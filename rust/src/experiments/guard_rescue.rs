@@ -55,6 +55,11 @@ pub struct RescueRow {
     pub damaged: usize,
     pub rescued: usize,
     pub pinned_at: Option<usize>,
+    /// Allocation the guard ended the ramp on — shows how far down the
+    /// fallback chain the walk stepped (e.g. an FP8 start that the Pasa8
+    /// shift rescued ends on "pasa8", never abandoning the 8-bit
+    /// envelope). Empty only before a walk.
+    pub final_alloc: &'static str,
 }
 
 /// Scale a case's Q side by `r` (scores scale linearly in Q).
@@ -67,14 +72,27 @@ fn scaled(case: &AttentionCase, r: f32) -> AttentionCase {
 }
 
 /// Walk one ramp under one policy, consuming kernel telemetry like the
-/// serving engine. `cf_overflow[t]` is the FA16-32 counterfactual: would
-/// step `t` have overflowed the fast path?
+/// serving engine. `cf_overflow[t]` is the counterfactual of the ramp's
+/// *starting* allocation: would step `t` have overflowed the fast path?
 pub fn walk_ramp(
     policy: GuardPolicy,
     steps: &[AttentionCase],
     cf_overflow: &[bool],
 ) -> RescueRow {
-    let mut guard = Guard::new(policy);
+    walk_ramp_from(policy, Allocation::Fa16_32, steps, cf_overflow)
+}
+
+/// [`walk_ramp`] rooted at an explicit starting allocation: the guard
+/// walks that allocation's fallback chain (`fp8 → pasa8 → pasa` for an
+/// FP8 start), replaying a tripped step under each next stage exactly
+/// like the engine's rescue loop.
+pub fn walk_ramp_from(
+    policy: GuardPolicy,
+    start: Allocation,
+    steps: &[AttentionCase],
+    cf_overflow: &[bool],
+) -> RescueRow {
+    let mut guard = Guard::new(policy).with_start(start);
     let mut row = RescueRow::default();
     for (t, c) in steps.iter().enumerate() {
         let alloc = Allocation::parse(guard.allocation()).expect("guard maps to the lab");
@@ -82,9 +100,12 @@ pub fn walk_ramp(
         let mut out = req.run();
         let mut sig = GuardSignal::from_attention(&out);
         let was_pinned = guard.is_pinned();
-        if guard.observe_signal(&sig) {
+        // Replays walk the chain until the signal is clean or the chain
+        // is exhausted (bounded: observe_signal sticks at the last stage).
+        while guard.observe_signal(&sig) {
             row.replays += 1;
-            out = req.with_alloc(Allocation::Pasa16).run();
+            let rescue = Allocation::parse(guard.allocation()).expect("guard maps to the lab");
+            out = req.clone().with_alloc(rescue).run();
             sig = GuardSignal::from_attention(&out);
         }
         if guard.is_pinned() && !was_pinned {
@@ -96,24 +117,38 @@ pub fn walk_ramp(
             row.rescued += 1;
         }
     }
+    row.final_alloc = guard.allocation();
     row
 }
 
 /// Build the ramp (shared across policies) and its FA16-32 counterfactual.
 pub fn build_ramp(case: &AttentionCase) -> (Vec<AttentionCase>, Vec<bool>) {
+    build_ramp_for(case, Allocation::Fa16_32)
+}
+
+/// [`build_ramp`] with the counterfactual taken against an explicit fast
+/// path (the FP8 row for the 8-bit chain study).
+pub fn build_ramp_for(
+    case: &AttentionCase,
+    cf_alloc: Allocation,
+) -> (Vec<AttentionCase>, Vec<bool>) {
     let steps: Vec<AttentionCase> = (0..STEPS)
         .map(|t| scaled(case, (t + 1) as f32 / STEPS as f32))
         .collect();
-    let cf: Vec<bool> = steps
+    let cf = counterfactual_overflow(&steps, cf_alloc);
+    (steps, cf)
+}
+
+/// Would each ramp step overflow under `alloc`? (One unguarded run per
+/// step — the "no guard" baseline a rescue is measured against.)
+pub fn counterfactual_overflow(steps: &[AttentionCase], alloc: Allocation) -> Vec<bool> {
+    steps
         .iter()
         .map(|c| {
-            let out = AttentionRequest::from_case(c, Allocation::Fa16_32)
-                .with_fp16_inputs()
-                .run();
+            let out = AttentionRequest::from_case(c, alloc).with_fp16_inputs().run();
             !GuardSignal::from_attention(&out).is_clean(1.0)
         })
-        .collect();
-    (steps, cf)
+        .collect()
 }
 
 /// The experiment report: one table per trace.
@@ -132,15 +167,46 @@ pub fn guard_rescue(opts: &ExpOptions) -> String {
             "\n## {} (s={s}, d={}, {} of {STEPS} ramp steps overflow FA16-32)\n",
             trace.name, spec.d, overflow_steps
         ));
-        out.push_str("| policy | pinned@ | replays | damaged | rescued |\n");
+        out.push_str("| policy | pinned@ | replays | damaged | rescued | final |\n");
         for (name, policy) in policies() {
             let r = walk_ramp(policy, &steps, &cf);
             out.push_str(&format!(
-                "| {name} | {} | {} | {} | {}/{overflow_steps} |\n",
+                "| {name} | {} | {} | {} | {}/{overflow_steps} | {} |\n",
                 r.pinned_at.map_or("-".into(), |t| t.to_string()),
                 r.replays,
                 r.damaged,
-                r.rescued
+                r.rescued,
+                r.final_alloc
+            ));
+        }
+        // The 8-bit chain study: the same ramp started on the FP8 row,
+        // counterfactual taken against FP8's own 448 boundary. The guard
+        // walks fp8 → pasa8 → pasa; the `final` column shows whether the
+        // Pasa8 shift held the 8-bit envelope or the walk had to abandon
+        // it for FP16 PASA.
+        let cf8 = counterfactual_overflow(&steps, Allocation::Fp8);
+        let overflow8 = cf8.iter().filter(|&&b| b).count();
+        out.push_str(&format!(
+            "### fp8 start ({overflow8} of {STEPS} ramp steps overflow the 448 boundary)\n"
+        ));
+        out.push_str("| policy | pinned@ | replays | damaged | rescued | final |\n");
+        for (name, policy) in [
+            ("adaptive", GuardPolicy::Adaptive),
+            (
+                "preemptive(0.75)",
+                GuardPolicy::Preemptive {
+                    score_limit_frac: 0.75,
+                },
+            ),
+        ] {
+            let r = walk_ramp_from(policy, Allocation::Fp8, &steps, &cf8);
+            out.push_str(&format!(
+                "| {name} | {} | {} | {} | {}/{overflow8} | {} |\n",
+                r.pinned_at.map_or("-".into(), |t| t.to_string()),
+                r.replays,
+                r.damaged,
+                r.rescued,
+                r.final_alloc
             ));
         }
     }
@@ -188,6 +254,76 @@ mod tests {
         let fa = walk_ramp(GuardPolicy::AlwaysFa16, &steps, &cf);
         assert_eq!(fa.damaged, overflow_steps, "unguarded FA takes the damage");
         assert_eq!(fa.replays, 0);
+    }
+
+    #[test]
+    fn fp8_start_rescues_within_the_8bit_envelope() {
+        // A bias-dominated ramp whose raw scores cross the 448 boundary
+        // (S ≈ 2.2²·128 ≈ 620 at full scale) but sit far inside FP16: the
+        // plain FP8 row poisons the tail steps, and the adaptive walk
+        // from an FP8 start must rescue them under *Pasa8* — the shift
+        // collapses the bias well below 448, so the chain never has to
+        // abandon the 8-bit envelope for FP16 PASA.
+        use crate::workloads::{gen_case, Distribution, Pcg64};
+        let mut rng = Pcg64::new(17, 0);
+        let case = gen_case(
+            Distribution::Uniform { x0: 2.2, am: 0.25 },
+            48,
+            48,
+            128,
+            &mut rng,
+        );
+        let (steps, cf8) = build_ramp_for(&case, Allocation::Fp8);
+        let overflow8 = cf8.iter().filter(|&&b| b).count();
+        assert!(overflow8 >= 1, "ramp premise: the tail must cross 448");
+        assert!(!cf8[0], "ramp premise: the first step must be benign");
+        // Premise: the same ramp never troubles the FP16 fast path.
+        let cf16 = counterfactual_overflow(&steps, Allocation::Fa16_32);
+        assert!(cf16.iter().all(|&b| !b), "ramp must stay inside FP16");
+
+        let r = walk_ramp_from(GuardPolicy::Adaptive, Allocation::Fp8, &steps, &cf8);
+        assert!(r.replays >= 1, "the 448 trip must replay");
+        assert_eq!(r.damaged, 0, "the chain must clean the stream");
+        assert_eq!(r.rescued, overflow8, "every tripped step rescued");
+        assert_eq!(
+            r.final_alloc, "pasa8",
+            "the shift must hold the 8-bit envelope — escalating to \
+             {:?} means the chain abandoned E4M3 unnecessarily",
+            r.final_alloc
+        );
+        assert!(r.pinned_at.is_some());
+    }
+
+    #[test]
+    fn fp8_start_escalates_to_fp16_pasa_when_the_shift_is_not_enough() {
+        // Amplitude-dominated, zero-mean data: the pseudo-average is ≈ 0,
+        // so the shift removes nothing — S' ≈ S/α. With am = 30 at d = 128
+        // the score fluctuations reach several thousand after the 1/α
+        // folding (σ ≈ am²/3·√d ≈ 3.4k pre-fold, peak ≈ 1.2k post-fold):
+        // past 448 but far inside FP16. The FP8 start must therefore walk
+        // the whole chain — fp8 trips, pasa8's shifted store still trips,
+        // and only full FP16 PASA finishes the ramp clean.
+        use crate::workloads::{gen_case, Distribution, Pcg64};
+        let mut rng = Pcg64::new(23, 0);
+        let case = gen_case(
+            Distribution::Uniform { x0: 0.0, am: 30.0 },
+            48,
+            48,
+            128,
+            &mut rng,
+        );
+        let (steps, cf8) = build_ramp_for(&case, Allocation::Fp8);
+        assert!(cf8.iter().any(|&b| b), "ramp premise: 448 must trip");
+        // Premise: FP16 holds the whole ramp.
+        let cf16 = counterfactual_overflow(&steps, Allocation::Fa16_32);
+        assert!(cf16.iter().all(|&b| !b), "ramp must stay inside FP16");
+        let r = walk_ramp_from(GuardPolicy::Adaptive, Allocation::Fp8, &steps, &cf8);
+        assert_eq!(
+            r.final_alloc, "pasa",
+            "amplitude (not bias) exceeds what the 448 envelope can hold"
+        );
+        assert_eq!(r.damaged, 0, "the full chain must still clean the stream");
+        assert!(r.replays >= 2, "stepping the whole chain costs two replays");
     }
 
     #[test]

@@ -204,4 +204,36 @@ mod tests {
         assert!(!rmse_for(dist, Allocation::Fa16_32, &opts).is_nan());
         assert!(!rmse_for(dist, Allocation::Pasa16, &opts).is_nan());
     }
+
+    #[test]
+    fn pasa8_rescues_the_fp8_overflow_site() {
+        // The Pasa8 overflow-site twin (the tentpole's acceptance case):
+        // the *very same* staged S ≈ 512 distribution that poisons the
+        // plain FP8 row above runs finite under Pasa8 — the
+        // pseudo-average shift collapses the bias before the E4M3 store —
+        // with zero pre-store overflow events and RMSE ≤ 0.3 against the
+        // f32 golden.
+        let opts = fast_opts();
+        let dist = Distribution::Uniform { x0: 2.0, am: 0.25 };
+        // Premise (same staging as the FP8 test): the unshifted E4M3
+        // store poisons.
+        assert!(rmse_for(dist, Allocation::Fp8, &opts).is_nan());
+
+        let mh = gen_multihead(dist, opts.heads, opts.seq, opts.dim, opts.seed);
+        let req = AttentionRequest::from_multihead(&mh, Allocation::Pasa8).with_fp16_inputs();
+        let out = req.run();
+        assert!(!out.overflowed(), "Pasa8 must survive the 448 site");
+        assert_eq!(out.overflow_events(), 0, "zero pre-store events required");
+        assert!(
+            out.max_abs_score() < 448.0,
+            "shifted store peak {} must sit inside E4M3",
+            out.max_abs_score()
+        );
+        assert_eq!(out.score_boundary, 448.0);
+        let golden = KernelRegistry::naive().forward(&req);
+        for h in 0..out.heads.len() {
+            let e = relative_rmse(&out.heads[h].data, &golden.heads[h].data);
+            assert!(e <= 0.3, "head {h}: Pasa8 rmse {e} beyond the acceptance bound");
+        }
+    }
 }

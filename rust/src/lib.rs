@@ -31,4 +31,5 @@ pub mod pool;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;
+pub mod testkit;
 pub mod workloads;

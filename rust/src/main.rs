@@ -10,7 +10,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 use anyhow::{bail, Result};
-use pasa::attention::beta;
+use pasa::attention::{beta, Allocation};
 use pasa::cli::Args;
 use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request};
 use pasa::experiments::{self, ExpOptions};
@@ -30,8 +30,10 @@ USAGE: pasa <subcommand> [flags]
         guard_rescue)
   serve [--artifacts DIR] [--requests N]
         [--policy pasa|fa16_32|fa32|adaptive|preemptive]
-        [--max-new N] [--temperature T]
+        [--alloc fa16_32|fp8|pasa8|...] [--max-new N] [--temperature T]
         run the serving engine over a synthetic prompt workload
+        (--alloc roots the switching policies' fallback chain:
+         fa16_32 -> pasa, or fp8 -> pasa8 -> pasa)
   solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
         solve the optimal accuracy condition
   info  [--artifacts DIR]
@@ -72,12 +74,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 8)?;
     let max_new = args.get_usize("max-new", 24)?;
     let temp = args.get_f64("temperature", 0.0)?;
-    let policy = GuardPolicy::parse(&args.get_or("policy", "adaptive"))
-        .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+    let policy_str = args.get_or("policy", "adaptive");
+    let policy = GuardPolicy::parse(&policy_str).ok_or_else(|| {
+        anyhow::anyhow!(
+            "bad --policy {policy_str:?}; valid policies: \
+             pasa, fa16_32, fa16, fa32, adaptive, preemptive"
+        )
+    })?;
+    // The starting allocation roots the switching policies' fallback
+    // chain (fa16_32 -> pasa by default; fp8 -> pasa8 -> pasa for the
+    // 8-bit envelope). An unknown spelling is a hard error listing every
+    // valid name — never a silent fallback.
+    let alloc_str = args.get_or("alloc", "fa16_32");
+    let start_alloc = Allocation::parse(&alloc_str).ok_or_else(|| {
+        anyhow::anyhow!(
+            "bad --alloc {alloc_str:?}; valid allocations: {}",
+            Allocation::valid_names().join(", ")
+        )
+    })?;
+    // `serve` runs the PJRT backend, whose AOT manifest ships only the
+    // fa16_32 / pasa / fa32 modules — an 8-bit fallback chain (fp8 →
+    // pasa8 → pasa) is a lab-engine feature (`Engine::from_lab`). Fail
+    // up front with the constraint instead of erroring on a module
+    // lookup mid-prefill (or, worse, letting guard state and executed
+    // allocation diverge on the group-replay path).
+    if start_alloc != Allocation::Fa16_32 {
+        bail!(
+            "--alloc {alloc_str} is not servable on the PJRT backend; the AOT \
+             manifest only ships fa16_32/pasa/fa32 modules. Non-default starting \
+             allocations (fp8, pasa8, ...) are a lab-engine feature \
+             (Engine::from_lab / EngineConfig::start_alloc)."
+        );
+    }
 
     let rt = ModelRuntime::load(Path::new(&dir))?;
     let mut cfg = EngineConfig::default();
     cfg.policy = policy;
+    cfg.start_alloc = start_alloc;
     let mut eng = Engine::new(&rt, cfg);
 
     let prompts = synthetic_prompts(n_requests);

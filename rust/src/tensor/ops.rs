@@ -132,6 +132,73 @@ pub fn scale_rowmax(m: &mut Matrix, k: f32, fmt: Format, maxes: &mut Vec<f32>) {
     });
 }
 
+/// Prefix-masked [`scale_rowmax`]: scales (in place, `fmt`-rounded) and
+/// maxes only the columns `c < vis[r]`; the masked tail is left untouched
+/// and must never be read downstream (pair with the prefix-aware softmax
+/// ops). An empty prefix yields the −inf max-fold identity. For formats
+/// with an infinity this is bit-identical to `scale_rowmax` over a
+/// −inf-filled tail (−inf scales to −inf and loses every max); for E4M3
+/// — which has **no infinity**, so a −inf tail would round to NaN and
+/// poison the row — it is the only correct masked path.
+pub fn scale_rowmax_prefix(
+    m: &mut Matrix,
+    k: f32,
+    fmt: Format,
+    vis: &[usize],
+    maxes: &mut Vec<f32>,
+) {
+    assert_eq!(vis.len(), m.rows);
+    maxes.clear();
+    crate::mono_format!(fmt, R => {
+        for r in 0..m.rows {
+            let limit = vis[r].min(m.cols);
+            let row = m.row_mut(r);
+            let mut mx = f32::NEG_INFINITY;
+            for x in row[..limit].iter_mut() {
+                *x = R::round(*x * k);
+                mx = mx.max(*x);
+            }
+            maxes.push(mx);
+        }
+    });
+}
+
+/// Prefix-masked [`exp_sub_rowbias_rowsum_into`]: weights beyond `vis[r]`
+/// are exact 0 and contribute exactly nothing to the `fmt`-rounded
+/// sequential row sum — bit-identical to the dense op over a row whose
+/// masked tail holds −inf (exp(−inf) = 0 and `round(acc + 0) = acc`),
+/// without ever materializing −inf through a store format that may not
+/// represent it (E4M3).
+pub fn exp_sub_rowbias_prefix_rowsum_into(
+    s: &Matrix,
+    bias: &[f32],
+    vis: &[usize],
+    fmt: Format,
+    p: &mut Matrix,
+    sums: &mut Vec<f32>,
+) {
+    assert_eq!(bias.len(), s.rows);
+    assert_eq!(vis.len(), s.rows);
+    p.reset(s.rows, s.cols); // masked weights are exact 0 from the reset
+    sums.clear();
+    crate::mono_format!(fmt, R => {
+        for r in 0..s.rows {
+            let b = bias[r];
+            let limit = vis[r].min(s.cols);
+            let src = s.row(r);
+            let dst = p.row_mut(r);
+            let mut acc = 0.0f32;
+            for c in 0..limit {
+                let d = R::round(src[c] - b);
+                let e = R::round(d.exp());
+                dst[c] = e;
+                acc = R::round(acc + e);
+            }
+            sums.push(acc);
+        }
+    });
+}
+
 /// Masked attenuator: `exp(m[r][c] − v[r])` for `c < vis[r]`, exact 0
 /// beyond — masked positions carry zero softmax weight without relying on
 /// the score buffer holding −inf (PASA keeps dense finite shifted scores
@@ -534,6 +601,74 @@ mod tests {
             exp_sub_rowbias_prefix_rowmean32_into(&a, &bias_pref, &vis, fmt, &mut pp, &mut pmeans);
             assert_eq!(pp, pp_ref, "{}", fmt.name());
             assert_eq!(pmeans, pmeans_ref, "{}", fmt.name());
+
+            // The flash masked path's prefix-fused pair must bit-match
+            // the legacy −inf-tail composition: scale_rowmax over a row
+            // whose masked tail is −inf == scale_rowmax_prefix over the
+            // visible prefix, and the dense exp/rowsum over the −inf tail
+            // == the prefix exp/rowsum (exp(−inf) = 0 contributes
+            // nothing). This is the FP16/F32/BF16-bit-identity half of
+            // the E4M3 mask fix; the E4M3 half (finite masked FP8 rows)
+            // is pinned by `masked_fp8_rows_stay_finite_and_match_naive`
+            // in attention/flash.rs.
+            let mut inf_tail = a.clone();
+            for r in 0..4 {
+                for c in vis[r]..12 {
+                    inf_tail.row_mut(r)[c] = f32::NEG_INFINITY;
+                }
+            }
+            let mut legacy = inf_tail.clone();
+            let mut legacy_max = Vec::new();
+            scale_rowmax(&mut legacy, k, fmt, &mut legacy_max);
+            let mut pref = a.clone();
+            let mut pref_max = Vec::new();
+            scale_rowmax_prefix(&mut pref, k, fmt, &vis, &mut pref_max);
+            assert_eq!(legacy_max, pref_max, "{}", fmt.name());
+            for r in 0..4 {
+                assert_eq!(
+                    &legacy.row(r)[..vis[r]],
+                    &pref.row(r)[..vis[r]],
+                    "{} row {r} visible prefix",
+                    fmt.name()
+                );
+            }
+            let mut p_legacy = Matrix::full(1, 1, f32::NAN);
+            let mut sums_legacy = Vec::new();
+            exp_sub_rowbias_rowsum_into(&legacy, &legacy_max, fmt, &mut p_legacy, &mut sums_legacy);
+            let mut p_pref = Matrix::full(1, 1, f32::NAN);
+            let mut sums_pref = Vec::new();
+            exp_sub_rowbias_prefix_rowsum_into(
+                &pref, &pref_max, &vis, fmt, &mut p_pref, &mut sums_pref,
+            );
+            // Fully-masked rows diverge *by design*: the legacy path
+            // computes exp(−inf − (−inf)) = NaN there (harmless — the
+            // kernel zeroes vis == 0 rows at the final store), while the
+            // prefix path produces the correct exact-zero row. Visible
+            // rows must agree bit for bit.
+            for r in 0..4 {
+                if vis[r] > 0 {
+                    assert_eq!(
+                        sums_legacy[r].to_bits(),
+                        sums_pref[r].to_bits(),
+                        "{} row {r} rowsum",
+                        fmt.name()
+                    );
+                } else {
+                    assert!(sums_legacy[r].is_nan(), "{} legacy empty row", fmt.name());
+                    assert_eq!(sums_pref[r], 0.0, "{} prefix empty row", fmt.name());
+                }
+                assert_eq!(
+                    &p_legacy.row(r)[..vis[r]],
+                    &p_pref.row(r)[..vis[r]],
+                    "{} row {r} weights",
+                    fmt.name()
+                );
+                assert!(
+                    p_pref.row(r)[vis[r]..].iter().all(|&x| x == 0.0),
+                    "{} row {r} masked weights must be exact 0",
+                    fmt.name()
+                );
+            }
 
             // scale_rows == scale_rows_inplace (already shared), and
             // div_rows + masked copy == div_rows_masked_into.

@@ -1,0 +1,426 @@
+//! Fuzz-case toolkit (S18): the seed-deterministic random-case generator
+//! behind `tests/differential_fuzz.rs` — no external crates, offline
+//! builds only.
+//!
+//! Two pieces:
+//!
+//! * [`XorShift64`] — a tiny xorshift64* parameter RNG. Deliberately a
+//!   *different* generator family from the workloads' [`Pcg64`], so the
+//!   fuzz harness's shape/mask/policy draws can never collide with the
+//!   seeded experiment streams, and a failing case replays from one
+//!   `u64` seed.
+//! * [`FuzzCase`] / [`fuzz_case`] — one random attention problem drawn
+//!   from the paper's own generator families (Eqs. 17–18 uniform/hybrid
+//!   regimes): random shapes, GQA splits, block sizes, masks
+//!   (`None | Causal | Padded` incl. zero-length heads), and β policies
+//!   (uniform grid picks, per-head tables, broadcast, β = 0 FA2
+//!   degradation). The Q/K/V data itself is drawn through
+//!   [`Distribution::matrix`] on a [`Pcg64`] stream keyed by the case
+//!   seed, keeping the amplitude/bias regimes byte-compatible with the
+//!   paper's generators.
+//!
+//! The harness side (oracle comparison, paged fixtures, pooled vs
+//! sequential) lives in the integration test; this module only *builds*
+//! cases, so unit tests, benches and future property suites can draw
+//! from the same distribution.
+
+use crate::attention::{
+    Allocation, AttentionRequest, AttnMask, BetaPolicy, KvPageSource, PageId,
+};
+use crate::tensor::Matrix;
+use crate::workloads::{Distribution, Pcg64};
+
+/// xorshift64* — 8 bytes of state, full 2⁶⁴−1 period, good enough to
+/// scatter fuzz parameters. Not for numerics (the data matrices come
+/// from [`Pcg64`]).
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Seed the generator; 0 is remapped (xorshift has a fixed point at
+    /// zero state).
+    pub fn new(seed: u64) -> XorShift64 {
+        XorShift64 {
+            state: if seed == 0 { 0x9e37_79b9_7f4a_7c15 } else { seed },
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). `n` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0, "below(0)");
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick one element of a non-empty slice.
+    #[inline]
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// In-memory [`KvPageSource`] for paged-view test fixtures — the one
+/// shared implementation behind the paged≡dense bit-equality pins (the
+/// fuzz harness and the hot-path checksum goldens both scatter through
+/// here, so the fixture's layout can never drift from the trait's
+/// contract in one copy only).
+pub struct FixturePool {
+    page_tokens: usize,
+    width: usize,
+    pages: Vec<Vec<f32>>,
+}
+
+impl KvPageSource for FixturePool {
+    fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+    fn row_width(&self) -> usize {
+        self.width
+    }
+    fn page_data(&self, id: PageId) -> &[f32] {
+        &self.pages[id as usize]
+    }
+}
+
+/// Scatter a dense matrix into pages of `page_tokens` rows; the unused
+/// tail of the last page is NaN-poisoned, so any kernel read past
+/// `len_tokens` corrupts a bit-equality comparison instead of passing
+/// silently. Pick a `page_tokens` that does not divide the KV length so
+/// block gathers straddle page boundaries.
+pub fn paged_fixture(m: &Matrix, page_tokens: usize) -> (FixturePool, Vec<PageId>) {
+    assert!(page_tokens > 0, "paged_fixture needs non-empty pages");
+    let n_pages = m.rows.div_ceil(page_tokens);
+    let mut pages = vec![vec![f32::NAN; page_tokens * m.cols]; n_pages];
+    for r in 0..m.rows {
+        let pg = r / page_tokens;
+        let off = (r % page_tokens) * m.cols;
+        pages[pg][off..off + m.cols].copy_from_slice(m.row(r));
+    }
+    (
+        FixturePool {
+            page_tokens,
+            width: m.cols,
+            pages,
+        },
+        (0..n_pages as PageId).collect(),
+    )
+}
+
+/// Bit-pattern view of a matrix — NaN-safe equality (identical NaNs
+/// compare equal by bits where `f32` equality would not).
+pub fn matrix_bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The data-regime class a fuzz case was drawn from. `Benign` cases keep
+/// the paper's small-bias/small-amplitude regime where every allocation's
+/// RMSE envelope is meaningful; `Hot` cases push bias and outlier
+/// amplitude into (and past) the 8-bit overflow region, exercising the
+/// finite-or-reported-overflow property instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuzzRegime {
+    Benign,
+    Hot,
+}
+
+/// One drawn attention problem: the request skeleton (Q/K/V, mask, blocks,
+/// β policy — everything except the allocation, which the harness loops
+/// over) plus the knobs the harness's checks condition on.
+pub struct FuzzCase {
+    /// The replay seed this case was drawn from (printed on failure).
+    pub seed: u64,
+    pub regime: FuzzRegime,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub s1: usize,
+    pub s2: usize,
+    pub d: usize,
+    pub dist: Distribution,
+    /// Request with `Allocation::Fa32` installed; rebind per allocation
+    /// with [`AttentionRequest::with_alloc`].
+    pub req: AttentionRequest,
+}
+
+/// β candidates the per-head policy draws from: the paper's Table 3 grid
+/// picks plus the β = 0 FA2 degradation.
+const FUZZ_BETAS: [f64; 4] = [0.0, 0.9375, 0.968994, 0.984497];
+
+/// Draw one case from `seed`. Deterministic: the same seed rebuilds the
+/// identical case forever — the failure messages of the differential
+/// harness print it as the replay handle.
+pub fn fuzz_case(seed: u64) -> FuzzCase {
+    let mut r = XorShift64::new(seed);
+
+    // Shapes: decode-shaped (s1 = 1), small, and medium rows all appear;
+    // s2 deliberately not a multiple of the block sizes most of the time
+    // (ragged tails), and head dims cover the α = √d spread.
+    let n_kv_heads = *r.pick(&[1usize, 2]);
+    let group = *r.pick(&[1usize, 2, 4]);
+    let n_heads = n_kv_heads * group;
+    let s1 = *r.pick(&[1usize, 2, 7, 16, 24, 33]);
+    let s2 = r.range(1, 64);
+    let d = *r.pick(&[4usize, 8, 16]);
+    let bs1 = *r.pick(&[8usize, 16, 32]);
+    let bs2 = *r.pick(&[8usize, 16, 32]);
+
+    // Data regime (the paper's Eq. 17/18 families). Benign keeps every
+    // allocation inside its envelope; hot drives the 8-bit rows past 448
+    // (and occasionally FP16 toward pressure) on purpose.
+    let (regime, dist) = if r.chance(0.7) {
+        let x0 = r.uniform(-1.5, 1.5);
+        if r.chance(0.75) {
+            (FuzzRegime::Benign, Distribution::Uniform { x0, am: r.uniform(0.25, 2.0) })
+        } else {
+            (
+                FuzzRegime::Benign,
+                Distribution::Hybrid { x0, am: r.uniform(1.0, 4.0), p: 0.01 },
+            )
+        }
+    } else {
+        let x0 = r.uniform(-12.0, 12.0);
+        if r.chance(0.5) {
+            (FuzzRegime::Hot, Distribution::Uniform { x0, am: r.uniform(0.25, 4.0) })
+        } else {
+            (
+                FuzzRegime::Hot,
+                Distribution::Hybrid { x0, am: r.uniform(4.0, 20.0), p: 0.01 },
+            )
+        }
+    };
+
+    // Mask: dense, causal, or right-padded (broadcast or per-head lens,
+    // zero-length heads included — the empty-softmax edge).
+    let mask = match r.below(4) {
+        0 | 1 => {
+            if r.chance(0.5) {
+                AttnMask::None
+            } else {
+                AttnMask::Causal
+            }
+        }
+        2 => {
+            // Bias toward the empty-softmax edge: zero-length prefixes
+            // are rare under a uniform draw but load-bearing (fully
+            // masked heads must yield zeros, never NaN).
+            let len = if r.chance(0.15) { 0 } else { r.range(0, s2) };
+            AttnMask::Padded(vec![len])
+        }
+        _ => AttnMask::Padded(
+            (0..n_heads)
+                .map(|_| if r.chance(0.1) { 0 } else { r.range(0, s2) })
+                .collect(),
+        ),
+    };
+
+    // β policy: uniform paper grid, per-head table (full or broadcast),
+    // or the β = 0 degradation. Only the PASA rows consume it, but every
+    // request carries it — the policy must be inert elsewhere.
+    let policy = match r.below(4) {
+        0 => BetaPolicy::Uniform(crate::attention::PAPER_BETA),
+        1 => BetaPolicy::Uniform(*r.pick(&FUZZ_BETAS)),
+        2 => BetaPolicy::PerHead(vec![*r.pick(&FUZZ_BETAS[1..])]),
+        _ => BetaPolicy::PerHead((0..n_heads).map(|_| *r.pick(&FUZZ_BETAS[1..])).collect()),
+    };
+
+    // Data: Pcg64 streams keyed off the xorshift state, through the
+    // paper's generators — one stream per query head, one per KV head.
+    // V is always drawn benign, mirroring the resonance generator (whose
+    // V is N(0, 1)): the overflow mechanism under test lives in the
+    // score GEMM Q·Kᵀ, and a hot V would instead overflow the *PV*
+    // store — a separate, uninstrumented site that the 448 boundary
+    // makes trivially reachable and that would turn every hot case into
+    // an unreportable NaN.
+    let v_dist = Distribution::Uniform {
+        x0: r.uniform(-1.0, 1.0),
+        am: r.uniform(0.5, 2.0),
+    };
+    let data_seed = r.next_u64();
+    let mut req = AttentionRequest::new(Allocation::Fa32);
+    for kvh in 0..n_kv_heads {
+        let mut rng = Pcg64::new(data_seed, 0x8000 + kvh as u64);
+        req = req.with_kv_head(dist.matrix(s2, d, &mut rng), v_dist.matrix(s2, d, &mut rng));
+    }
+    for h in 0..n_heads {
+        let mut rng = Pcg64::new(data_seed, h as u64);
+        req = req.with_query_head(dist.matrix(s1, d, &mut rng));
+    }
+    let req = req
+        .with_mask(mask)
+        .with_policy(policy)
+        .with_blocks(bs1, bs2)
+        .with_fp16_inputs();
+
+    FuzzCase {
+        seed,
+        regime,
+        n_heads,
+        n_kv_heads,
+        s1,
+        s2,
+        d,
+        dist,
+        req,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_is_deterministic_and_nonconstant() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        let av: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(av, bv);
+        assert!(av.windows(2).any(|w| w[0] != w[1]));
+        let mut c = XorShift64::new(43);
+        assert_ne!(av[0], c.next_u64());
+        // Zero seed is remapped, not a fixed point.
+        let mut z = XorShift64::new(0);
+        let first = z.next_u64();
+        assert_ne!(first, 0);
+        assert_ne!(first, z.next_u64());
+    }
+
+    #[test]
+    fn xorshift_ranges_respect_bounds() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..2000 {
+            let x = r.range(3, 9);
+            assert!((3..=9).contains(&x));
+            let u = r.uniform(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&u));
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+        // All range values are reachable.
+        let mut seen = [false; 7];
+        let mut r = XorShift64::new(11);
+        for _ in 0..500 {
+            seen[r.range(3, 9) - 3] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "range(3, 9) missed a value");
+    }
+
+    #[test]
+    fn paged_fixture_round_trips_and_poisons_the_tail() {
+        use crate::attention::KvView;
+        // 10 rows into 4-token pages: 3 pages, last page half NaN.
+        let m = Matrix::from_vec(10, 3, (0..30).map(|i| i as f32).collect());
+        let (pool, ids) = paged_fixture(&m, 4);
+        assert_eq!(ids.len(), 3);
+        let view = KvView::paged(&ids, &pool, 10);
+        assert_eq!(matrix_bits(&view.to_matrix()), matrix_bits(&m));
+        // The tail beyond the valid rows really is poisoned.
+        assert!(pool.page_data(ids[2])[2 * 3..].iter().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn fuzz_cases_are_replayable_and_valid() {
+        for seed in [1u64, 2, 0xdead_beef, u64::MAX] {
+            let a = fuzz_case(seed);
+            let b = fuzz_case(seed);
+            assert_eq!(a.req.q.len(), b.req.q.len(), "seed {seed}");
+            for h in 0..a.req.q.len() {
+                assert_eq!(a.req.q[h].data, b.req.q[h].data, "seed {seed} head {h}");
+            }
+            assert_eq!(a.req.mask, b.req.mask, "seed {seed}");
+            assert_eq!(a.req.policy, b.req.policy, "seed {seed}");
+            assert!(
+                a.req.validate().is_ok(),
+                "seed {seed}: generated an invalid request: {:?}",
+                a.req.validate()
+            );
+            assert_eq!(a.n_heads, a.req.n_heads());
+            assert_eq!(a.n_kv_heads, a.req.n_kv_heads());
+        }
+    }
+
+    #[test]
+    fn fuzz_distribution_covers_the_feature_space() {
+        // Over a few hundred seeds the generator must exercise every
+        // mask kind, both regimes, GQA splits, decode shapes and both
+        // policy families — otherwise the "fuzz per allocation" claim is
+        // silently hollow.
+        let (mut none, mut causal, mut padded) = (0, 0, 0);
+        let (mut benign, mut hot) = (0, 0);
+        let (mut gqa, mut decode, mut per_head, mut zero_len) = (0, 0, 0, 0);
+        for seed in 0..400u64 {
+            let c = fuzz_case(seed);
+            match &c.req.mask {
+                AttnMask::None => none += 1,
+                AttnMask::Causal => causal += 1,
+                AttnMask::Padded(lens) => {
+                    padded += 1;
+                    if lens.iter().any(|&l| l == 0) {
+                        zero_len += 1;
+                    }
+                }
+            }
+            match c.regime {
+                FuzzRegime::Benign => benign += 1,
+                FuzzRegime::Hot => hot += 1,
+            }
+            if c.n_heads > c.n_kv_heads {
+                gqa += 1;
+            }
+            if c.s1 == 1 {
+                decode += 1;
+            }
+            if matches!(c.req.policy, BetaPolicy::PerHead(_)) {
+                per_head += 1;
+            }
+        }
+        for (what, n) in [
+            ("mask=none", none),
+            ("mask=causal", causal),
+            ("mask=padded", padded),
+            ("regime=benign", benign),
+            ("regime=hot", hot),
+            ("gqa split", gqa),
+            ("decode shape", decode),
+            ("per-head policy", per_head),
+        ] {
+            assert!(n >= 10, "{what}: only {n}/400 cases");
+        }
+        assert!(zero_len >= 5, "zero-length heads: only {zero_len}/400 cases");
+    }
+}

@@ -17,52 +17,17 @@
 //! cross-pin.
 
 use pasa::attention::{
-    Allocation, AttentionOutput, AttentionRequest, AttnMask, KvPageSource, KvPair, KvView, PageId,
+    Allocation, AttentionOutput, AttentionRequest, AttnMask, KvPair, KvView, PageId,
 };
 use pasa::pool;
 use pasa::tensor::Matrix;
+use pasa::testkit::{matrix_bits, paged_fixture, FixturePool};
 use pasa::workloads::{gen_gqa_multihead, Distribution};
 
 /// Page size chosen to not divide the KV length, so every block gather
-/// straddles page boundaries.
+/// straddles page boundaries (the NaN-tail-poisoned fixture itself is
+/// the shared `pasa::testkit::paged_fixture`).
 const PAGE_TOKENS: usize = 24;
-
-struct MockPool {
-    width: usize,
-    pages: Vec<Vec<f32>>,
-}
-
-impl KvPageSource for MockPool {
-    fn page_tokens(&self) -> usize {
-        PAGE_TOKENS
-    }
-    fn row_width(&self) -> usize {
-        self.width
-    }
-    fn page_data(&self, id: PageId) -> &[f32] {
-        &self.pages[id as usize]
-    }
-}
-
-/// Scatter a dense matrix into pages; the unused tail of the last page is
-/// NaN-poisoned so any read past `len_tokens` poisons the checksum.
-fn paged_fixture(m: &Matrix) -> (MockPool, Vec<PageId>) {
-    let n_pages = m.rows.div_ceil(PAGE_TOKENS);
-    let mut pages = vec![vec![f32::NAN; PAGE_TOKENS * m.cols]; n_pages];
-    for r in 0..m.rows {
-        let pg = r / PAGE_TOKENS;
-        let off = (r % PAGE_TOKENS) * m.cols;
-        pages[pg][off..off + m.cols].copy_from_slice(m.row(r));
-    }
-    let ids = (0..n_pages as PageId).collect();
-    (
-        MockPool {
-            width: m.cols,
-            pages,
-        },
-        ids,
-    )
-}
 
 fn fnv_bytes(h: &mut u64, bytes: &[u8]) {
     for &b in bytes {
@@ -88,11 +53,11 @@ fn checksum(out: &AttentionOutput) -> u64 {
     h
 }
 
-/// Bit-pattern view of one head's output — NaN-safe equality (masked or
-/// overflow-poisoned FP8 rows are NaN by design, and `f32` equality would
-/// treat identical NaNs as different).
+/// Bit-pattern view of one head's output — NaN-safe equality
+/// (overflow-poisoned FP8/Pasa8 rows are NaN by design, and `f32`
+/// equality would treat identical NaNs as different).
 fn head_bits(m: &Matrix) -> Vec<u32> {
-    m.data.iter().map(|x| x.to_bits()).collect()
+    matrix_bits(m)
 }
 
 #[test]
@@ -108,8 +73,14 @@ fn all_execution_paths_share_one_checksum_per_combination() {
         .with_fp16_inputs();
 
     // Paged fixtures over the request's own (rounded) K/V heads.
-    let fixtures: Vec<((MockPool, Vec<PageId>), (MockPool, Vec<PageId>))> = (0..KV_HEADS)
-        .map(|kvh| (paged_fixture(&base.k[kvh]), paged_fixture(&base.v[kvh])))
+    type Fixture = (FixturePool, Vec<PageId>);
+    let fixtures: Vec<(Fixture, Fixture)> = (0..KV_HEADS)
+        .map(|kvh| {
+            (
+                paged_fixture(&base.k[kvh], PAGE_TOKENS),
+                paged_fixture(&base.v[kvh], PAGE_TOKENS),
+            )
+        })
         .collect();
 
     let masks = [

@@ -8,8 +8,8 @@ use pasa::attention::{
 use pasa::coordinator::{Guard, GuardPolicy, GuardSignal, KvPool, SeqCache};
 use pasa::numerics::{relative_rmse, Format};
 use pasa::workloads::{
-    gen_case, gen_gqa_multihead, gen_multihead, gen_padded_multihead, gen_paged_decode_case,
-    svd_img2vid_trace, Distribution, MultiHeadCase, Pcg64,
+    all_traces, gen_case, gen_gqa_multihead, gen_multihead, gen_padded_multihead,
+    gen_paged_decode_case, svd_img2vid_trace, Distribution, MultiHeadCase, Pcg64,
 };
 
 /// RMSE envelopes per allocation against the FP32 golden reference, at the
@@ -487,6 +487,253 @@ fn video_shaped_tall_kv_gqa_pasa_survives_where_fa16_overflows() {
         "shifted scores must fit FP16: {}",
         pasa.max_abs_score()
     );
+}
+
+// ---- Pasa8: shifting into the E4M3 envelope (PR 5 tentpole) -----------
+
+#[test]
+fn svd_tall_kv_gqa_pasa8_rescues_at_the_448_boundary() {
+    // The SVD-resonance rescue regression re-staged at the E4M3 boundary:
+    // the video-shaped tall-KV GQA case (8 query heads over 2 KV heads,
+    // s1 = 16 ≪ s2 = 4096) with the trace's amplitudes and biases scaled
+    // to 15% — raw score peaks land in the low thousands, comfortably
+    // inside FP16 but past E4M3's 448. The plain FP8 row trips its store;
+    // Pasa8 on the very same request shifts the coherent bias/resonance
+    // away *before* the E4M3 store and survives with zero pre-store
+    // events.
+    let mut spec = svd_img2vid_trace(1).spec;
+    spec.s1 = 16;
+    spec.s2 = 4096;
+    spec.amp_q *= 0.15;
+    spec.amp_k *= 0.15;
+    spec.bias_q *= 0.15;
+    spec.bias_k *= 0.15;
+    let c0 = spec.generate(41);
+    let c1 = spec.generate(42);
+    let mut req = AttentionRequest::new(Allocation::Fp8)
+        .with_kv_head(c0.k.clone(), c0.v.clone())
+        .with_kv_head(c1.k.clone(), c1.v.clone());
+    for _ in 0..4 {
+        req = req.with_query_head(c0.q.clone());
+    }
+    for _ in 0..4 {
+        req = req.with_query_head(c1.q.clone());
+    }
+    let req = req
+        .with_mask(AttnMask::Causal)
+        .with_blocks(16, 128)
+        .with_fp16_inputs();
+    assert!(req.validate().is_ok());
+
+    let fp8 = req.run();
+    assert!(
+        fp8.overflow_events() > 0,
+        "premise: the scaled video trace must overflow the E4M3 store"
+    );
+    assert!(fp8.max_abs_score() > 448.0);
+    assert_eq!(fp8.score_boundary, 448.0);
+    // ... while the same scores sit far inside FP16.
+    let fa16 = req.clone().with_alloc(Allocation::Fa16_32).run();
+    assert_eq!(
+        fa16.overflow_events(),
+        0,
+        "premise: 15%-scaled amplitudes must not trouble FP16 (peak {})",
+        fa16.max_abs_score()
+    );
+
+    let pasa8 = req.clone().with_alloc(Allocation::Pasa8).run();
+    assert!(!pasa8.overflowed(), "Pasa8 must stay finite on video heads");
+    assert_eq!(pasa8.overflow_events(), 0, "Pasa8 pre-store events leaked");
+    assert_eq!(pasa8.nonfinite_outputs(), 0);
+    assert!(
+        pasa8.max_abs_score() < 448.0,
+        "shifted scores must fit E4M3: {}",
+        pasa8.max_abs_score()
+    );
+    assert_eq!(pasa8.score_boundary, 448.0);
+}
+
+// ---- metamorphic invariances (PR 5 test subsystem) --------------------
+
+/// Quantize a matrix onto the 2⁻⁶ grid, so adding 16.0 to an entry stays
+/// exactly representable in FP16 (ulp at 16 is 2⁻⁶) — the shift-invariance
+/// metamorphic relation needs the biased twin to hold *identical* K bits
+/// plus an exact offset, or input re-rounding would contaminate the
+/// comparison.
+fn quantize_64th(m: &mut pasa::tensor::Matrix) {
+    for x in &mut m.data {
+        *x = (*x * 64.0).round() / 64.0;
+    }
+}
+
+#[test]
+fn metamorphic_shift_invariance_of_pasa_eq15() {
+    // Softmax shift invariance (the paper's Eq. 15 exactness claim):
+    // adding one shared offset vector u to every K row adds the
+    // row-constant bias qᵢ·u to S, which softmax ignores exactly — and
+    // which is precisely the sequence-dim bias PASA's pseudo-average
+    // shift absorbs. The PASA outputs of the base and biased twins must
+    // agree within fp tolerance, while the raw biased scores cross the
+    // E4M3 boundary (so the invariance is doing real work for Pasa8).
+    let mut rng = Pcg64::new(71, 0);
+    let mut c = gen_case(Distribution::Uniform { x0: 1.0, am: 1.0 }, 96, 96, 32, &mut rng);
+    quantize_64th(&mut c.q);
+    quantize_64th(&mut c.k);
+    quantize_64th(&mut c.v);
+    let mut biased = c.clone();
+    for r in 0..96 {
+        for t in 0..32 {
+            biased.k.set(r, t, biased.k.at(r, t) + 16.0);
+        }
+    }
+    let base = AttentionRequest::from_case(&c, Allocation::Pasa16)
+        .with_blocks(32, 32)
+        .with_fp16_inputs();
+    let twin = AttentionRequest::from_case(&biased, Allocation::Pasa16)
+        .with_blocks(32, 32)
+        .with_fp16_inputs();
+
+    // The offset is exact in FP16 (2⁻⁶-grid inputs), so the goldens agree
+    // to f32-dot-product noise — the mathematical invariance.
+    let g_base = KernelRegistry::naive().forward(&base);
+    let g_twin = KernelRegistry::naive().forward(&twin);
+    let e = relative_rmse(&g_twin.heads[0].data, &g_base.heads[0].data);
+    assert!(e < 1e-3, "golden shift invariance violated: rmse {e}");
+    // Premise: the bias moved the raw scores past 448 (E4M3-relevant).
+    assert!(
+        g_twin.stats[0].max_abs_score > 448.0,
+        "premise: biased raw scores must cross the E4M3 boundary, got {}",
+        g_twin.stats[0].max_abs_score
+    );
+
+    // PASA(FP16): biased output within fp tolerance of the base output.
+    let p_base = base.run();
+    let p_twin = twin.run();
+    assert!(!p_twin.overflowed());
+    let e = relative_rmse(&p_twin.heads[0].data, &p_base.heads[0].data);
+    assert!(e < 5e-2, "Pasa16 shift invariance: rmse {e}");
+
+    // Pasa8: the biased twin would poison the plain FP8 row, but the
+    // shift collapses the added bias before the E4M3 store — finite, no
+    // events, and still within the (coarser) E4M3 tolerance of the base.
+    let fp8_twin = twin.clone().with_alloc(Allocation::Fp8).run();
+    assert!(
+        fp8_twin.overflow_events() > 0,
+        "premise: unshifted E4M3 must trip on the biased twin"
+    );
+    let p8_base = base.clone().with_alloc(Allocation::Pasa8).run();
+    let p8_twin = twin.with_alloc(Allocation::Pasa8).run();
+    assert!(!p8_twin.overflowed(), "Pasa8 must absorb the bias");
+    assert_eq!(p8_twin.overflow_events(), 0);
+    let e8 = relative_rmse(&p8_twin.heads[0].data, &p8_base.heads[0].data);
+    assert!(e8 < 0.3, "Pasa8 shift invariance: rmse {e8}");
+}
+
+#[test]
+fn metamorphic_head_permutation_equivariance() {
+    // Permuting the heads of a request (and its per-head β table)
+    // permutes the outputs bit for bit: heads are independent, and
+    // PASA's (KV head, β)-keyed K' sharing must not couple them.
+    let perm = [2usize, 0, 3, 1];
+    let betas = [0.9375, 0.968994, 0.984497, 0.9375];
+    let dist = Distribution::Uniform { x0: 1.0, am: 1.0 };
+    let cases: Vec<_> = (0..4)
+        .map(|h| {
+            let mut rng = Pcg64::new(81 + h as u64, 0);
+            gen_case(dist, 64, 64, 16, &mut rng)
+        })
+        .collect();
+    for alloc in [Allocation::Fa16_32, Allocation::Pasa16, Allocation::Pasa8] {
+        let mut req = AttentionRequest::new(alloc);
+        for c in &cases {
+            req = req.with_head(c.q.clone(), c.k.clone(), c.v.clone());
+        }
+        let req = req
+            .with_mask(AttnMask::Causal)
+            .with_blocks(32, 32)
+            .with_policy(BetaPolicy::PerHead(betas.to_vec()))
+            .with_fp16_inputs();
+        let mut permuted = AttentionRequest::new(alloc);
+        for &src in &perm {
+            permuted = permuted.with_head(
+                cases[src].q.clone(),
+                cases[src].k.clone(),
+                cases[src].v.clone(),
+            );
+        }
+        let permuted = permuted
+            .with_mask(AttnMask::Causal)
+            .with_blocks(32, 32)
+            .with_policy(BetaPolicy::PerHead(perm.iter().map(|&s| betas[s]).collect()))
+            .with_fp16_inputs();
+        let out = req.run();
+        let out_p = permuted.run();
+        let bits = |m: &pasa::tensor::Matrix| -> Vec<u32> {
+            m.data.iter().map(|x| x.to_bits()).collect()
+        };
+        for i in 0..4 {
+            assert_eq!(
+                bits(&out_p.heads[i]),
+                bits(&out.heads[perm[i]]),
+                "{}: permuted head {i} != original head {}",
+                alloc.name(),
+                perm[i]
+            );
+            assert_eq!(
+                out_p.stats[i].overflow_events,
+                out.stats[perm[i]].overflow_events,
+                "{}: permuted head {i} telemetry",
+                alloc.name()
+            );
+            assert_eq!(
+                out_p.stats[i].max_abs_score.to_bits(),
+                out.stats[perm[i]].max_abs_score.to_bits(),
+                "{}: permuted head {i} max|S|",
+                alloc.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn metamorphic_beta_monotonicity_on_resonance_traces() {
+    // Larger β never increases the pre-store max |S'| on the resonance
+    // traces: the shift removes more of the coherent bias/resonance as β
+    // grows (a 5% slack absorbs rounding wiggle at the incoherent
+    // floor), and the strongest paper β must cut the β = 0 peak by at
+    // least half. Full-participation variant: rows far *below* the
+    // average amplitude (non-participating bands) are over-shifted as
+    // β → 1 — a known overshoot that is not monotone in β and exactly
+    // why the paper's grid stops at 1 − 2⁻⁶ — so the monotonicity claim
+    // is stated over the coherent resonance itself.
+    for trace in all_traces(16) {
+        let mut spec = trace.spec.clone();
+        spec.s1 = 48;
+        spec.s2 = 48;
+        spec.participation = 1.0;
+        spec.flip_fraction = 0.0;
+        let c = spec.generate(5);
+        let req = AttentionRequest::from_case(&c, Allocation::Pasa16)
+            .with_blocks(48, 48)
+            .with_fp16_inputs();
+        let mut peaks = Vec::new();
+        for &b in &[0.0, 0.9375, 0.968994, 0.984497] {
+            let out = req.clone().with_beta(b).run();
+            peaks.push(out.max_abs_score());
+        }
+        for w in peaks.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.05,
+                "{}: β-monotonicity violated: peaks {peaks:?}",
+                trace.name
+            );
+        }
+        assert!(
+            peaks[3] < 0.5 * peaks[0],
+            "{}: the paper β must cut the unshifted peak: {peaks:?}",
+            trace.name
+        );
+    }
 }
 
 #[test]

@@ -5,6 +5,7 @@
 //! needs no compiled artifacts — so the engine's scheduling, guard-replay
 //! and metrics behaviour is exercised in every `cargo test`.
 
+use pasa::attention::Allocation;
 use pasa::coordinator::{
     Engine, EngineConfig, FinishReason, GenParams, GuardPolicy, Request, SeqCache,
 };
@@ -36,6 +37,7 @@ fn lab_cfg(policy: GuardPolicy) -> EngineConfig {
         kv_pages: 64,
         page_tokens: 8,
         max_queue: 16,
+        ..EngineConfig::default()
     }
 }
 
@@ -334,6 +336,89 @@ fn preemptive_guard_pins_on_pressure_with_zero_replays() {
     assert_eq!(ca[0].tokens, cr[0].tokens, "adaptive tokens diverged");
     assert_eq!(cp[0].allocation, "pasa");
     assert_eq!(cp[0].guard_switches, 1);
+}
+
+/// FP8-chain variant of the probe: the positional query spike is sized so
+/// the raw score at `P_STAR` is ≈ 8·300·0.5 = 1200 — past E4M3's 448 but
+/// far inside FP16 — and is a pure sequence-dim *bias* (every cached K row
+/// is ≈ the same benign vector), exactly what the pseudo-average shift
+/// removes. An engine started on the FP8 row must therefore rescue the
+/// tripped step under **Pasa8** and finish the request without ever
+/// leaving the 8-bit envelope.
+const AMP_8BIT: f32 = 300.0;
+
+fn fp8_probe_model() -> LabModel {
+    let mut m = probe_model();
+    for j in 8..16 {
+        m.pos_emb.set(P_STAR, j, AMP_8BIT);
+    }
+    m
+}
+
+#[test]
+fn fp8_start_engine_rescues_within_8bit_via_pasa8() {
+    let mut cfg = lab_cfg(GuardPolicy::Adaptive);
+    cfg.start_alloc = Allocation::Fp8;
+    let mut eng = Engine::from_lab(fp8_probe_model(), cfg);
+    // Independent baseline for the replay count: a guard pinned to Pasa8
+    // from step one walks the identical workload with zero replays (the
+    // shifted store never trips), so its decode_steps is the replay-free
+    // round count. max_new is fixed and stop_at_eos is off, so both
+    // engines run the same number of rounds regardless of which tokens
+    // greedy sampling picks.
+    let mut ref_cfg = lab_cfg(GuardPolicy::Adaptive);
+    ref_cfg.start_alloc = Allocation::Pasa8;
+    let mut reference = Engine::from_lab(fp8_probe_model(), ref_cfg);
+    for e in [&mut eng, &mut reference] {
+        let id = e.fresh_id();
+        // 7 bytes + BOS: decode positions 8, 9, ... cross P_STAR = 12.
+        e.submit(Request::new(id, "aaaaaaa").with_params(gen(20)));
+    }
+    let comps = eng.run_to_completion().unwrap();
+    reference.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    let c = &comps[0];
+    assert_eq!(c.reason, FinishReason::MaxTokens);
+    assert_eq!(c.tokens.len(), 20);
+    // One trip: fp8 → pasa8, and the chain never had to abandon 8-bit —
+    // the completion's allocation is Pasa8, not full FP16 PASA.
+    assert_eq!(c.allocation, "pasa8", "rescue must stay within 8-bit");
+    assert_eq!(c.guard_switches, 1, "exactly one chain step");
+    assert_eq!(eng.metrics.guard_switches, 1);
+    assert!(
+        eng.metrics.overflow_steps >= 1,
+        "the 448 trip must be recorded"
+    );
+    // The Pasa8 baseline premise: no trips, no replays on the same ramp.
+    assert_eq!(reference.metrics.guard_switches, 0, "baseline must not trip");
+    assert_eq!(reference.metrics.overflow_steps, 0);
+    // Exactly one replayed decode step: the fp8 walk pays the baseline's
+    // round count plus the single tripped-round rerun.
+    assert_eq!(
+        eng.metrics.decode_steps,
+        reference.metrics.decode_steps + 1,
+        "the chain rescue must cost exactly one replayed step"
+    );
+    assert_eq!(
+        eng.metrics.step_latency.count() as u64,
+        eng.metrics.decode_steps
+    );
+    assert!(eng.idle());
+    assert_eq!(eng.kv_utilization(), 0.0, "pages leaked");
+}
+
+#[test]
+fn fp8_probe_premise_trips_448_but_not_fp16() {
+    // Premise pin for the chain test: an engine *fixed* to FA16-32 on the
+    // same staged workload never overflows (1200 ≪ 65504), while a
+    // guard-free FP8 row does trip at P_STAR — the overflow site really
+    // is the E4M3 boundary, not FP16's.
+    let mut eng = Engine::from_lab(fp8_probe_model(), lab_cfg(GuardPolicy::AlwaysFa16));
+    let id = eng.fresh_id();
+    eng.submit(Request::new(id, "aaaaaaa").with_params(gen(20)));
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.metrics.overflow_steps, 0, "FP16 must hold the spike");
+    assert_eq!(eng.metrics.guard_switches, 0);
 }
 
 #[test]
