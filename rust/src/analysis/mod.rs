@@ -1,0 +1,200 @@
+//! `pasa lint` — repo-native static analysis for numerical safety (S14).
+//!
+//! A numerics codebase has invariants `rustc` and clippy cannot see:
+//! which FP constants are *boundaries* (a hardcoded `65504` that drifts
+//! from the format table corrupts every guard decision downstream), which
+//! enums are *precision-critical* (a `_` arm over [`Allocation`] silently
+//! swallows a new precision row instead of failing to compile), which
+//! regions are *hot paths* (an accidental `.clone()` in the KV sweep
+//! un-does the zero-allocation work that `alloc_discipline.rs` certifies),
+//! and which `unsafe` sites have actually been *reviewed*. This module
+//! enforces all four as a tier-1 test and a CLI subcommand:
+//!
+//! ```text
+//! cargo run --release -- lint        # scan the tree, exit 1 on violations
+//! cargo test --test lint_invariants  # the same scan as a tier-1 test
+//! ```
+//!
+//! Layout: [`scanner`] produces comment/string-masked views of each file,
+//! [`rules`] implements the four rules over those views, and
+//! [`unsafe_audit`] holds the checked-in registry every `unsafe` site must
+//! appear in. The scanner is dependency-free by design — the lint runs
+//! wherever `cargo test` runs, with nothing to install and no rustc
+//! version coupling.
+//!
+//! [`Allocation`]: crate::attention::Allocation
+
+pub mod rules;
+pub mod scanner;
+pub mod unsafe_audit;
+
+pub use rules::{UnsafeKind, UnsafeSite};
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The four lint rules.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    /// Rule 1: `SAFETY:` comments + the audit registry.
+    UnsafeAudit,
+    /// Rule 2: no raw FP boundary literals outside `numerics/`.
+    BoundaryLiteral,
+    /// Rule 3: no `_` arms over precision-critical enums.
+    WildcardArm,
+    /// Rule 4: no allocating calls inside hot-path fences.
+    HotPathAlloc,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnsafeAudit => "unsafe-audit",
+            Rule::BoundaryLiteral => "boundary-literal",
+            Rule::WildcardArm => "wildcard-arm",
+            Rule::HotPathAlloc => "hot-path-alloc",
+        }
+    }
+}
+
+/// One finding, formatted `file:line: [rule] message` (line 0 when the
+/// finding is about an absence, e.g. a stale audit entry).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Violation {
+    pub(crate) fn new(rule: Rule, file: &str, line: usize, message: String) -> Violation {
+        Violation {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// The per-file lint result: violations from rules 1–4 plus the `unsafe`
+/// inventory (the caller aggregates inventories across the tree and runs
+/// the registry cross-check once).
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+/// Lint one file's source text. `rel` is the repo-relative `/`-separated
+/// path — the rules use it for scoping (exempt dirs, hot-path dirs).
+pub fn lint_file(rel: &str, text: &str) -> FileReport {
+    let sc = scanner::scan(text);
+    let in_test = rules::test_regions(&sc);
+    let mut violations = Vec::new();
+    let unsafe_sites = rules::collect_unsafe_sites(rel, &sc, &mut violations);
+    rules::check_boundary_literals(rel, &sc, &in_test, &mut violations);
+    rules::check_wildcard_arms(rel, &sc, &in_test, &mut violations);
+    rules::check_hot_path(rel, &sc, &mut violations);
+    FileReport {
+        violations,
+        unsafe_sites,
+    }
+}
+
+/// Lint the whole tree under `root` (the repo root): every `.rs` file in
+/// `rust/src/` and `rust/tests/`, excluding the deliberately-violating
+/// `lint_fixtures/` corpus, then the audit-registry cross-check. Returns
+/// findings sorted by `(file, line)`.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust").join("src"), &mut files)?;
+    collect_rs(&root.join("rust").join("tests"), &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    let mut sites = Vec::new();
+    for path in &files {
+        let rel = rel_name(root, path);
+        let text = fs::read_to_string(path)?;
+        let mut rep = lint_file(&rel, &text);
+        violations.append(&mut rep.violations);
+        sites.extend(rep.unsafe_sites);
+    }
+    violations.extend(unsafe_audit::check(&sites));
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(violations)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.file_name().is_some_and(|n| n == "lint_fixtures") {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_name(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_display_is_grep_friendly() {
+        let v = Violation::new(Rule::BoundaryLiteral, "rust/src/a.rs", 7, "msg".to_string());
+        assert_eq!(v.to_string(), "rust/src/a.rs:7: [boundary-literal] msg");
+    }
+
+    #[test]
+    fn lint_file_aggregates_all_rules() {
+        // One source tripping rules 2 and 3 at once; rule 1 records the
+        // site inventory without a violation (SAFETY present).
+        let src = "\
+// SAFETY: test fixture.
+unsafe impl Sync for T {}
+fn f(a: Allocation) -> f32 {
+    match a {
+        Allocation::Fa32 => 65504.0,
+        _ => 0.0,
+    }
+}
+";
+        let rep = lint_file("rust/src/coordinator/x.rs", src);
+        assert_eq!(rep.unsafe_sites.len(), 1);
+        let rules_hit: Vec<Rule> = rep.violations.iter().map(|v| v.rule).collect();
+        assert!(rules_hit.contains(&Rule::BoundaryLiteral), "{rules_hit:?}");
+        assert!(rules_hit.contains(&Rule::WildcardArm), "{rules_hit:?}");
+        assert_eq!(rep.violations.len(), 2, "{:?}", rep.violations);
+    }
+}

@@ -1,0 +1,776 @@
+//! The four repo-invariant rules of `pasa lint`.
+//!
+//! Every rule works on the [`Scanned`] views (masked code + comment
+//! text), so tokens inside comments and string literals never fire. Rules
+//! 2 and 3 additionally skip `#[cfg(test)]` regions: tests deliberately
+//! pin raw boundary values and use `_` catch-alls in assertion plumbing.
+//!
+//! * **Rule 1 — unsafe-audit** (with `super::unsafe_audit`): every
+//!   `unsafe` block / `unsafe impl` carries a `SAFETY:` comment, and every
+//!   unsafe site of any kind appears in the checked-in audit registry.
+//! * **Rule 2 — boundary-literal**: no raw FP overflow boundaries
+//!   (`65504`, `448`, `240`) outside `numerics/` — use the
+//!   `Format::…::overflow_boundary()` accessors, so a format-table change
+//!   cannot silently diverge from a hardcoded copy.
+//! * **Rule 3 — wildcard-arm**: no `_` arms in `match`es over the
+//!   precision-critical enums (`Allocation`, `AttnMask`, `GuardPolicy`);
+//!   adding a variant must break the build at every dispatch site.
+//! * **Rule 4 — hot-path-alloc**: no allocating calls inside
+//!   `lint: hot-path` fenced regions of `attention/`, `tensor/`,
+//!   `pool.rs` — the zero-allocation contract that
+//!   `rust/tests/alloc_discipline.rs` measures dynamically, enforced
+//!   statically.
+
+use super::scanner::Scanned;
+use super::{Rule, Violation};
+use std::fmt;
+
+/// What follows the `unsafe` keyword.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnsafeKind {
+    /// `unsafe { … }` expression block.
+    Block,
+    /// `unsafe impl Trait for T`.
+    Impl,
+    /// `unsafe fn` (incl. `unsafe extern "C" fn`).
+    Fn,
+    /// `unsafe trait`.
+    Trait,
+}
+
+impl UnsafeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            UnsafeKind::Block => "block",
+            UnsafeKind::Impl => "impl",
+            UnsafeKind::Fn => "fn",
+            UnsafeKind::Trait => "trait",
+        }
+    }
+}
+
+impl fmt::Display for UnsafeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One `unsafe` occurrence, keyed for the audit registry.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    /// Repo-relative path, `/`-separated.
+    pub file: String,
+    pub kind: UnsafeKind,
+    /// 1-based line of the `unsafe` keyword.
+    pub line: usize,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of word-boundary occurrences of `word` in `text`
+/// (`matches!` does not contain the word `match`).
+fn word_positions(text: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = text[from..].find(word) {
+        let at = from + rel;
+        let before_ok = !text[..at].chars().next_back().is_some_and(is_ident);
+        let after_ok = !text[at + word.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// `#[cfg(test)]` regions
+// ---------------------------------------------------------------------------
+
+/// Per-line flag: is this line inside a `#[cfg(test)] mod … { … }` region
+/// (attribute line through the module's closing brace)?
+pub fn test_regions(sc: &Scanned) -> Vec<bool> {
+    let n = sc.masked.len();
+    let mut in_test = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        let line = &sc.masked[i];
+        let Some(attr_at) = line.find("#[cfg(test)]") else {
+            i += 1;
+            continue;
+        };
+        // The attribute must annotate a `mod` item — same line, or the
+        // next non-blank, non-attribute line. `#[cfg(test)] use …` and
+        // similar single-item gates are not regions.
+        let tail = &line[attr_at + "#[cfg(test)]".len()..];
+        let mut mod_line = None;
+        if declares_mod(tail) {
+            mod_line = Some(i);
+        } else {
+            let mut j = i + 1;
+            while j < n {
+                let t = sc.masked[j].trim();
+                if t.is_empty() || t.starts_with("#[") {
+                    j += 1;
+                    continue;
+                }
+                if declares_mod(t) {
+                    mod_line = Some(j);
+                }
+                break;
+            }
+        }
+        let Some(m) = mod_line else {
+            i += 1;
+            continue;
+        };
+        // `mod tests;` (out-of-line) covers just its declaration;
+        // otherwise brace-match from the mod line to the region's end.
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut end = None;
+        'scan: for (k, l) in sc.masked.iter().enumerate().skip(m) {
+            for c in l.chars() {
+                if !opened && c == ';' {
+                    end = Some(k);
+                    break 'scan;
+                }
+                if c == '{' {
+                    depth += 1;
+                    opened = true;
+                } else if c == '}' {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        end = Some(k);
+                        break 'scan;
+                    }
+                }
+            }
+        }
+        let end = end.unwrap_or(n - 1);
+        for flag in in_test.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+fn declares_mod(masked_text: &str) -> bool {
+    !word_positions(masked_text, "mod").is_empty()
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1 — unsafe sites
+// ---------------------------------------------------------------------------
+
+/// Collect every `unsafe` site in the file; push a violation for each
+/// `unsafe` block / `unsafe impl` that lacks a `SAFETY:` comment. (`unsafe
+/// fn` declares an obligation for *callers* — its contract lives in the
+/// doc comment and is discharged with a `SAFETY:` at each call site, which
+/// is where this rule checks it.)
+pub fn collect_unsafe_sites(rel: &str, sc: &Scanned, out: &mut Vec<Violation>) -> Vec<UnsafeSite> {
+    let mut sites = Vec::new();
+    for (li, line) in sc.masked.iter().enumerate() {
+        for col in word_positions(line, "unsafe") {
+            let kind = classify_unsafe(sc, li, col + "unsafe".len());
+            if matches!(kind, UnsafeKind::Block | UnsafeKind::Impl) && !safety_documented(sc, li) {
+                out.push(Violation::new(
+                    Rule::UnsafeAudit,
+                    rel,
+                    li + 1,
+                    format!("`unsafe {kind}` without a `SAFETY:` comment"),
+                ));
+            }
+            sites.push(UnsafeSite {
+                file: rel.to_string(),
+                kind,
+                line: li + 1,
+            });
+        }
+    }
+    sites
+}
+
+/// Classify by the first meaningful token after the `unsafe` keyword
+/// (`extern "C"` qualifiers are skipped; masked strings read as blanks).
+fn classify_unsafe(sc: &Scanned, li: usize, col: usize) -> UnsafeKind {
+    let mut text = String::new();
+    if let Some(line) = sc.masked.get(li) {
+        if col <= line.len() {
+            text.push_str(&line[col..]);
+        }
+    }
+    for l in sc.masked.iter().skip(li + 1).take(3) {
+        text.push(' ');
+        text.push_str(l);
+    }
+    for word in text.split_whitespace() {
+        if word == "extern" {
+            continue;
+        }
+        if word == "impl" {
+            return UnsafeKind::Impl;
+        }
+        if word == "fn" || word.starts_with("fn(") || word.starts_with("fn<") {
+            return UnsafeKind::Fn;
+        }
+        if word == "trait" {
+            return UnsafeKind::Trait;
+        }
+        return UnsafeKind::Block;
+    }
+    UnsafeKind::Block
+}
+
+/// A `SAFETY:` (or rustdoc `# Safety`) comment on the site's line, or in
+/// the contiguous comment/attribute/blank run directly above it.
+fn safety_documented(sc: &Scanned, li: usize) -> bool {
+    if has_safety(&sc.comments[li]) {
+        return true;
+    }
+    let lo = li.saturating_sub(40);
+    for l in (lo..li).rev() {
+        if has_safety(&sc.comments[l]) {
+            return true;
+        }
+        let code = sc.masked[l].trim();
+        if !code.is_empty() && !code.starts_with("#[") && !code.starts_with("#!") {
+            return false;
+        }
+    }
+    false
+}
+
+fn has_safety(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2 — boundary literals
+// ---------------------------------------------------------------------------
+
+/// Files that *define* the boundaries (or test against them) may spell
+/// them raw; everything else must go through the `Format` accessors.
+fn boundary_exempt(rel: &str) -> bool {
+    rel.starts_with("rust/src/numerics/")
+        || rel.starts_with("rust/src/analysis/")
+        || rel.starts_with("rust/tests/")
+}
+
+pub fn check_boundary_literals(
+    rel: &str,
+    sc: &Scanned,
+    in_test: &[bool],
+    out: &mut Vec<Violation>,
+) {
+    if boundary_exempt(rel) {
+        return;
+    }
+    for (li, line) in sc.masked.iter().enumerate() {
+        if in_test[li] {
+            continue;
+        }
+        for tok in numeric_tokens(line) {
+            if let Some(hint) = forbidden_boundary(&tok) {
+                out.push(Violation::new(
+                    Rule::BoundaryLiteral,
+                    rel,
+                    li + 1,
+                    format!("raw FP boundary literal `{tok}` — use {hint}"),
+                ));
+            }
+        }
+    }
+}
+
+fn forbidden_boundary(tok: &str) -> Option<&'static str> {
+    let cleaned: String = tok.chars().filter(|&c| c != '_').collect();
+    let v: f64 = cleaned.parse().ok()?;
+    if v == crate::numerics::Format::F16.overflow_boundary() {
+        Some("`Format::F16.overflow_boundary()`")
+    } else if v == crate::numerics::Format::F8E4M3.overflow_boundary() {
+        Some("`Format::F8E4M3.overflow_boundary()`")
+    } else if v == 240.0 {
+        // The E4M3 boundary under the UZ convention (paper Table 1);
+        // reserved even though no `Format` row carries it yet.
+        Some("a named constant in `numerics`")
+    } else {
+        None
+    }
+}
+
+/// Maximal numeric tokens of a masked line: runs of digits / `_` / `.`
+/// starting at a fresh digit. Tuple indices (`pair.0`) and identifier
+/// tails (`x448`) are not fresh; `..` range punctuation ends a token.
+fn numeric_tokens(line: &str) -> Vec<String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let fresh = match i.checked_sub(1).map(|p| chars[p]) {
+            None => true,
+            Some(p) if is_ident(p) => false,
+            // After a lone `.` this is a tuple index / field; after `..`
+            // it is the upper bound of a range and stands alone.
+            Some('.') => i >= 2 && chars[i - 2] == '.',
+            Some(_) => true,
+        };
+        if c.is_ascii_digit() && fresh {
+            let mut j = i;
+            while j < chars.len() {
+                let cj = chars[j];
+                if cj.is_ascii_digit() || cj == '_' {
+                    j += 1;
+                } else if cj == '.' && chars.get(j + 1) != Some(&'.') {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let mut tok: String = chars[i..j].iter().collect();
+            while tok.ends_with('.') || tok.ends_with('_') {
+                tok.pop();
+            }
+            out.push(tok);
+            i = j.max(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3 — wildcard arms over precision-critical enums
+// ---------------------------------------------------------------------------
+
+/// A `match` is protected when any arm *pattern* names one of these — the
+/// enums whose variants gate precision dispatch. Arm expressions don't
+/// count (constructing an `Allocation` in a body is fine).
+const PROTECTED_ENUMS: [&str; 3] = ["Allocation::", "AttnMask::", "GuardPolicy::"];
+
+pub fn check_wildcard_arms(rel: &str, sc: &Scanned, in_test: &[bool], out: &mut Vec<Violation>) {
+    // Flatten the masked lines so a match body can span lines; keep a
+    // byte → line map for reporting.
+    let mut flat = String::new();
+    let mut line_of = Vec::new();
+    for (li, l) in sc.masked.iter().enumerate() {
+        for _ in 0..l.len() {
+            line_of.push(li);
+        }
+        line_of.push(li); // the '\n'
+        flat.push_str(l);
+        flat.push('\n');
+    }
+    for start in word_positions(&flat, "match") {
+        let li = line_of[start];
+        if in_test[li] {
+            continue;
+        }
+        let Some(arms) = parse_match_arms(&flat, start + "match".len()) else {
+            continue;
+        };
+        let protected = arms
+            .iter()
+            .any(|(pat, _)| PROTECTED_ENUMS.iter().any(|&e| pat.contains(e)));
+        if !protected {
+            continue;
+        }
+        for (pat, off) in &arms {
+            let head = pat.split(" if ").next().unwrap_or("");
+            if head.split('|').any(|alt| alt.trim() == "_") {
+                out.push(Violation::new(
+                    Rule::WildcardArm,
+                    rel,
+                    line_of[*off] + 1,
+                    "`_` arm in a match over a precision-critical enum \
+                     (Allocation / AttnMask / GuardPolicy) — name every variant \
+                     so new rows fail to compile here"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// Parse the arms of the `match` whose keyword ends at byte `from`:
+/// returns `(pattern_text, pattern_start_offset)` per arm, or `None` when
+/// no body follows (e.g. `match` bound by a macro fragment).
+fn parse_match_arms(flat: &str, from: usize) -> Option<Vec<(String, usize)>> {
+    let b = flat.as_bytes();
+    let n = b.len();
+    // Scrutinee: up to the first `{` at bracket depth 0.
+    let mut i = from;
+    let mut depth = 0i64;
+    let body = loop {
+        if i >= n {
+            return None;
+        }
+        match b[i] {
+            b'(' | b'[' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b'{' => {
+                if depth == 0 {
+                    break i + 1;
+                }
+                depth += 1;
+            }
+            b';' => {
+                if depth == 0 {
+                    return None;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    };
+    // Arms: pattern up to `=>` at depth 0, then skip the expression
+    // (brace-matched block, or up to `,` / the body's closing `}`).
+    let mut arms = Vec::new();
+    let mut i = body;
+    let mut depth = 0i64;
+    let mut arm_start = body;
+    while i < n {
+        match b[i] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' => depth -= 1,
+            b'}' => {
+                if depth == 0 {
+                    return Some(arms);
+                }
+                depth -= 1;
+            }
+            b'=' if depth == 0 && b.get(i + 1) == Some(&b'>') => {
+                arms.push((flat[arm_start..i].trim().to_string(), arm_start));
+                i += 2;
+                while i < n && b[i].is_ascii_whitespace() {
+                    i += 1;
+                }
+                if i < n && b[i] == b'{' {
+                    let mut d = 1i64;
+                    i += 1;
+                    while i < n && d > 0 {
+                        match b[i] {
+                            b'{' => d += 1,
+                            b'}' => d -= 1,
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                    while i < n && b[i].is_ascii_whitespace() {
+                        i += 1;
+                    }
+                    if i < n && b[i] == b',' {
+                        i += 1;
+                    }
+                } else {
+                    let mut d = 0i64;
+                    while i < n {
+                        match b[i] {
+                            b'(' | b'[' | b'{' => d += 1,
+                            b')' | b']' => d -= 1,
+                            b'}' => {
+                                if d == 0 {
+                                    break;
+                                }
+                                d -= 1;
+                            }
+                            b',' if d == 0 => {
+                                i += 1;
+                                break;
+                            }
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                }
+                arm_start = i;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Some(arms)
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4 — allocations inside hot-path fences
+// ---------------------------------------------------------------------------
+
+const FENCE_START: &str = "lint: hot-path";
+const FENCE_END: &str = "lint: end-hot-path";
+
+/// Call tokens that allocate. `.push(`/`.extend(`/`.clear(`/`reserve` are
+/// deliberately allowed: workspace vectors grow amortized during warm-up,
+/// which is exactly the discipline `alloc_discipline.rs` certifies.
+const ALLOCATING: [&str; 11] = [
+    "Vec::new(",
+    "vec![",
+    ".to_vec(",
+    ".collect(",
+    ".collect::<",
+    ".clone(",
+    ".to_owned(",
+    "Box::new(",
+    "String::new(",
+    "format!(",
+    "Matrix::zeros(",
+];
+
+/// Does `line` contain `tok` as a call? Tokens starting with an
+/// identifier char must sit on a word boundary (`mono_format!(…)` must
+/// not read as `format!(…)`); method tokens starting with `.` match
+/// anywhere — their preceding char is the receiver by construction.
+fn line_calls(line: &str, tok: &str) -> bool {
+    if !tok.starts_with(is_ident) {
+        return line.contains(tok);
+    }
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(tok) {
+        let at = from + rel;
+        if !line[..at].chars().next_back().is_some_and(is_ident) {
+            return true;
+        }
+        from = at + tok.len();
+    }
+    false
+}
+
+fn hot_path_scoped(rel: &str) -> bool {
+    rel.starts_with("rust/src/attention/")
+        || rel.starts_with("rust/src/tensor/")
+        || rel == "rust/src/pool.rs"
+}
+
+pub fn check_hot_path(rel: &str, sc: &Scanned, out: &mut Vec<Violation>) {
+    if !hot_path_scoped(rel) {
+        return;
+    }
+    let mut open: Option<usize> = None;
+    for (li, com) in sc.comments.iter().enumerate() {
+        // End first: the end marker embeds neither marker in the other.
+        if com.contains(FENCE_END) {
+            if open.take().is_none() {
+                out.push(Violation::new(
+                    Rule::HotPathAlloc,
+                    rel,
+                    li + 1,
+                    "hot-path fence end without a matching start".to_string(),
+                ));
+            }
+            continue;
+        }
+        if com.contains(FENCE_START) {
+            if let Some(o) = open {
+                out.push(Violation::new(
+                    Rule::HotPathAlloc,
+                    rel,
+                    li + 1,
+                    format!("nested hot-path fence (previous opened at line {})", o + 1),
+                ));
+            }
+            open = Some(li);
+            continue;
+        }
+        if open.is_some() {
+            for tok in ALLOCATING {
+                if line_calls(&sc.masked[li], tok) {
+                    out.push(Violation::new(
+                        Rule::HotPathAlloc,
+                        rel,
+                        li + 1,
+                        format!("allocating call `{tok}…)` inside a hot-path fence"),
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(o) = open {
+        out.push(Violation::new(
+            Rule::HotPathAlloc,
+            rel,
+            sc.masked.len(),
+            format!("unclosed hot-path fence (opened at line {})", o + 1),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan;
+    use super::*;
+
+    fn lint_src(rel: &str, src: &str) -> Vec<Violation> {
+        let sc = scan(src);
+        let in_test = test_regions(&sc);
+        let mut out = Vec::new();
+        collect_unsafe_sites(rel, &sc, &mut out);
+        check_boundary_literals(rel, &sc, &in_test, &mut out);
+        check_wildcard_arms(rel, &sc, &in_test, &mut out);
+        check_hot_path(rel, &sc, &mut out);
+        out
+    }
+
+    fn sites(src: &str) -> Vec<UnsafeSite> {
+        let sc = scan(src);
+        let mut out = Vec::new();
+        collect_unsafe_sites("f.rs", &sc, &mut out)
+    }
+
+    #[test]
+    fn unsafe_block_requires_safety_comment() {
+        let bad = "fn f() {\n    let x = unsafe { g() };\n}\n";
+        let v = lint_src("rust/src/x.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, Rule::UnsafeAudit);
+        assert_eq!(v[0].line, 2);
+
+        let good = "fn f() {\n    // SAFETY: g is sound here.\n    let x = unsafe { g() };\n}\n";
+        assert!(lint_src("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_walks_over_attributes_and_blanks() {
+        let src = "// SAFETY: argued above.\n\n#[allow(dead_code)]\nunsafe impl Sync for T {}\n";
+        assert!(lint_src("rust/src/x.rs", src).is_empty());
+        // …but not over intervening code.
+        let src2 = "// SAFETY: stale.\nfn other() {}\nunsafe impl Sync for T {}\n";
+        assert_eq!(lint_src("rust/src/x.rs", src2).len(), 1);
+    }
+
+    #[test]
+    fn unsafe_kinds_classify() {
+        let s = sites(
+            "// SAFETY: a\nunsafe impl Send for T {}\n\
+             unsafe fn f() {}\n\
+             unsafe extern \"C\" fn g() {}\n\
+             unsafe trait Marker {}\n\
+             fn h() { /* SAFETY: b */ unsafe { p() } }\n",
+        );
+        let kinds: Vec<UnsafeKind> = s.iter().map(|x| x.kind).collect();
+        assert_eq!(
+            kinds,
+            [
+                UnsafeKind::Impl,
+                UnsafeKind::Fn,
+                UnsafeKind::Fn,
+                UnsafeKind::Trait,
+                UnsafeKind::Block
+            ]
+        );
+    }
+
+    #[test]
+    fn unsafe_fn_needs_no_inline_safety_comment() {
+        // Its contract is rustdoc-`# Safety`; the discharge happens at
+        // call sites. Only the registry tracks the site.
+        let v = lint_src("rust/src/x.rs", "unsafe fn raw() {}\n");
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(sites("unsafe fn raw() {}\n").len(), 1);
+    }
+
+    #[test]
+    fn boundary_literals_flagged_outside_numerics() {
+        let v = lint_src("rust/src/coordinator/x.rs", "let b = 65504.0;\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, Rule::BoundaryLiteral);
+        let v = lint_src("rust/src/coordinator/x.rs", "let b = 448_f32;\n");
+        assert_eq!(v.len(), 1);
+        let v = lint_src("rust/src/coordinator/x.rs", "let b = 240.0f32;\n");
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn boundary_literals_allowed_where_exempt() {
+        assert!(lint_src("rust/src/numerics/round.rs", "let b = 65504.0;\n").is_empty());
+        assert!(lint_src("rust/tests/t.rs", "assert!(x < 448.0);\n").is_empty());
+        // In comments / strings / cfg(test) of a non-exempt file.
+        let src = "// the FP16 max is 65504\nlet s = \"448\";\n\
+                   #[cfg(test)]\nmod tests {\n    const B: f32 = 65504.0;\n}\n";
+        assert!(lint_src("rust/src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn boundary_literal_token_edges() {
+        // Not the boundary value: no hit.
+        assert!(lint_src("rust/src/x.rs", "let a = 165504.0 + 44.8 + 4480.;\n").is_empty());
+        // Identifier tails and tuple fields: no hit.
+        assert!(lint_src("rust/src/x.rs", "let a = x448 + pair.0;\n").is_empty());
+        // Range upper bound is a standalone literal: hit.
+        assert_eq!(lint_src("rust/src/x.rs", "for i in 0..448 {}\n").len(), 1);
+        // Underscore grouping still parses: hit.
+        assert_eq!(lint_src("rust/src/x.rs", "let a = 65_504.0;\n").len(), 1);
+    }
+
+    #[test]
+    fn wildcard_arm_over_protected_enum_flagged() {
+        let src = "fn f(a: Allocation) -> u32 {\n    match a {\n        Allocation::Fa32 => 1,\n        _ => 0,\n    }\n}\n";
+        let v = lint_src("rust/src/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, Rule::WildcardArm);
+    }
+
+    #[test]
+    fn wildcard_arm_guards_and_alternation_count() {
+        let src = "match m {\n    AttnMask::Causal => 1,\n    _ if hot => 2,\n    AttnMask::None => 3,\n}\n";
+        assert_eq!(lint_src("rust/src/x.rs", src).len(), 1);
+        let src2 = "match m {\n    AttnMask::Causal | _ => 1,\n}\n";
+        assert_eq!(lint_src("rust/src/x.rs", src2).len(), 1);
+    }
+
+    #[test]
+    fn wildcard_arm_unprotected_or_expression_only_is_fine() {
+        // `_` over an unprotected enum: fine.
+        let src = "match k {\n    KvView::Dense(m) => 1,\n    _ => 0,\n}\n";
+        assert!(lint_src("rust/src/x.rs", src).is_empty());
+        // Protected name only in arm *expressions*: fine.
+        let src2 = "match i {\n    0 => AttnMask::None,\n    _ => AttnMask::Causal,\n}\n";
+        assert!(lint_src("rust/src/x.rs", src2).is_empty());
+        // Exhaustive protected match with block arms and nested braces.
+        let src3 = "match a {\n    Allocation::Fa32 => { if x { y() } else { z() } }\n    Allocation::Fp8 => w(),\n}\n";
+        assert!(lint_src("rust/src/x.rs", src3).is_empty());
+    }
+
+    #[test]
+    fn wildcard_arm_in_tests_is_fine() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(a: Allocation) -> u32 {\n        match a {\n            Allocation::Fa32 => 1,\n            _ => 0,\n        }\n    }\n}\n";
+        assert!(lint_src("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_fence_catches_allocations() {
+        let src = format!(
+            "// {FENCE_START}\nfn f(out: &mut [f32]) {{\n    let v = other.to_vec();\n}}\n// {FENCE_END}\n"
+        );
+        let v = lint_src("rust/src/tensor/x.rs", &src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, Rule::HotPathAlloc);
+        assert_eq!(v[0].line, 3);
+        // Same allocation outside any fence, or outside the scoped dirs:
+        // fine.
+        assert!(lint_src("rust/src/tensor/x.rs", "let v = o.to_vec();\n").is_empty());
+        assert!(lint_src("rust/src/model/x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_fences_must_balance() {
+        let unclosed = format!("// {FENCE_START}\nfn f() {{}}\n");
+        assert_eq!(lint_src("rust/src/pool.rs", &unclosed).len(), 1);
+        let orphan_end = format!("fn f() {{}}\n// {FENCE_END}\n");
+        assert_eq!(lint_src("rust/src/pool.rs", &orphan_end).len(), 1);
+        let nested = format!("// {FENCE_START}\n// {FENCE_START}\n// {FENCE_END}\n");
+        assert_eq!(lint_src("rust/src/pool.rs", &nested).len(), 1);
+    }
+
+    #[test]
+    fn fence_markers_in_strings_do_not_fence() {
+        let src = format!("fn f() {{ let s = \"{FENCE_START}\"; let v = x.to_vec(); }}\n");
+        assert!(lint_src("rust/src/tensor/x.rs", &src).is_empty());
+    }
+}

@@ -1,0 +1,295 @@
+//! Character-level Rust source scanner for the lint rules.
+//!
+//! Splits a source file into two parallel per-line views:
+//!
+//! * **masked code** — the source with every comment, string literal and
+//!   char literal replaced by spaces, column positions preserved, so the
+//!   rules can match tokens against *code only* (a `match` inside a doc
+//!   comment or a `65504` inside an error message never fires a rule);
+//! * **comment text** — the concatenated comment content of each line,
+//!   which is what the `SAFETY:` and hot-path fence-marker checks read.
+//!
+//! This is deliberately a state machine, not a parser: the repo's
+//! invariants are all expressible at the token/line level, and ~200 lines
+//! with zero dependencies run inside every `cargo test` without coupling
+//! the build to a rustc-internals crate.
+//!
+//! Handled syntax: line comments, nested block comments, plain and byte
+//! strings (`"…"`, `b"…"`), raw strings of any hash arity (`r"…"`,
+//! `r##"…"##`, `br#"…"#`), char and byte-char literals, and the
+//! lifetime-vs-char-literal ambiguity (`'a` vs `'a'`).
+
+/// A scanned source file: per input line, the comment/string-masked code
+/// and the comment text.
+pub struct Scanned {
+    /// Code with comments/strings/chars masked to spaces; one entry per
+    /// source line, columns preserved.
+    pub masked: Vec<String>,
+    /// Comment text of each line ("" where the line has none).
+    pub comments: Vec<String>,
+}
+
+enum St {
+    Code,
+    LineComment,
+    /// Nested block comment; the payload is the nesting depth.
+    BlockComment(usize),
+    /// Inside `"…"` / `b"…"`; the flag marks a pending `\` escape.
+    Str(bool),
+    /// Inside a raw string; the payload is the `#` arity of its delimiter.
+    RawStr(usize),
+    /// Inside `'…'`; the flag marks a pending `\` escape.
+    CharLit(bool),
+}
+
+/// Scan `src` into masked-code and comment-text lines.
+pub fn scan(src: &str) -> Scanned {
+    let ch: Vec<char> = src.chars().collect();
+    let n = ch.len();
+    let mut masked = Vec::new();
+    let mut comments = Vec::new();
+    let mut code = String::new();
+    let mut com = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            masked.push(std::mem::take(&mut code));
+            comments.push(std::mem::take(&mut com));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => i = step_code(&ch, i, &mut code, &mut st),
+            St::LineComment => {
+                com.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = ch.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    code.push(' ');
+                    code.push(' ');
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    com.push('/');
+                    com.push('*');
+                    code.push(' ');
+                    code.push(' ');
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    com.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str(escaped) => {
+                code.push(' ');
+                st = if escaped {
+                    St::Str(false)
+                } else if c == '\\' {
+                    St::Str(true)
+                } else if c == '"' {
+                    St::Code
+                } else {
+                    St::Str(false)
+                };
+                i += 1;
+            }
+            St::CharLit(escaped) => {
+                code.push(' ');
+                st = if escaped {
+                    St::CharLit(false)
+                } else if c == '\\' {
+                    St::CharLit(true)
+                } else if c == '\'' {
+                    St::Code
+                } else {
+                    St::CharLit(false)
+                };
+                i += 1;
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| ch.get(i + k) == Some(&'#')) {
+                    for _ in 0..=hashes {
+                        code.push(' ');
+                    }
+                    st = St::Code;
+                    i += hashes + 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !com.is_empty() {
+        masked.push(code);
+        comments.push(com);
+    }
+    Scanned { masked, comments }
+}
+
+/// One step of the `Code` state: classify the token starting at `i`,
+/// append its mask to `code`, set the next state, return the next index.
+fn step_code(ch: &[char], i: usize, code: &mut String, st: &mut St) -> usize {
+    let c = ch[i];
+    let next = ch.get(i + 1).copied();
+    if c == '/' && next == Some('/') {
+        code.push(' ');
+        code.push(' ');
+        *st = St::LineComment;
+        return i + 2;
+    }
+    if c == '/' && next == Some('*') {
+        code.push(' ');
+        code.push(' ');
+        *st = St::BlockComment(1);
+        return i + 2;
+    }
+    if c == '"' {
+        code.push(' ');
+        *st = St::Str(false);
+        return i + 1;
+    }
+    // `r` / `b` string prefixes only start a literal when they are not the
+    // tail of an identifier (`attr"` is not a raw string; `r"` is).
+    let prev_is_ident = code
+        .chars()
+        .next_back()
+        .is_some_and(|p| p.is_alphanumeric() || p == '_');
+    if c == 'b' && next == Some('"') && !prev_is_ident {
+        code.push(' ');
+        code.push(' ');
+        *st = St::Str(false);
+        return i + 2;
+    }
+    if (c == 'r' || (c == 'b' && next == Some('r'))) && !prev_is_ident {
+        let start = if c == 'b' { i + 2 } else { i + 1 };
+        let mut h = 0;
+        while ch.get(start + h) == Some(&'#') {
+            h += 1;
+        }
+        if ch.get(start + h) == Some(&'"') {
+            for _ in i..=start + h {
+                code.push(' ');
+            }
+            *st = St::RawStr(h);
+            return start + h + 1;
+        }
+    }
+    if c == '\'' {
+        // `'a` (lifetime) vs `'a'` (char literal): an identifier char
+        // right after the quote that is *not* closed by a second quote is
+        // a lifetime. Everything else (`'\n'`, `' '`, `'a'`) is a literal.
+        let c1 = ch.get(i + 1).copied();
+        let c2 = ch.get(i + 2).copied();
+        let lifetime = c1.is_some_and(|x| x.is_alphanumeric() || x == '_') && c2 != Some('\'');
+        if lifetime {
+            code.push('\'');
+            return i + 1;
+        }
+        code.push(' ');
+        *st = St::CharLit(false);
+        return i + 1;
+    }
+    code.push(c);
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn masked(src: &str) -> Vec<String> {
+        scan(src).masked
+    }
+
+    #[test]
+    fn line_comments_are_masked_and_captured() {
+        let src = "let x = 1; // keep 65504 here\nlet y = 2;\n";
+        let sc = scan(src);
+        assert_eq!(sc.masked[0].trim_end(), "let x = 1;");
+        assert_eq!(sc.masked[0].len(), "let x = 1; // keep 65504 here".len());
+        assert!(sc.comments[0].contains("65504"));
+        assert_eq!(sc.masked[1], "let y = 2;");
+        assert_eq!(sc.comments[1], "");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let sc = scan("a /* one /* two */ still */ b\n/* open\nclose */ c\n");
+        // The nested `*/` must not close the outer comment: `still` is
+        // comment text, and only `a … b` survive as code.
+        assert!(sc.masked[0].starts_with('a'));
+        assert!(sc.masked[0].ends_with('b'));
+        assert!(!sc.masked[0].contains("still"));
+        assert!(sc.comments[0].contains("two"));
+        assert!(sc.comments[0].contains("still"));
+        assert_eq!(sc.masked[1].trim(), "");
+        assert_eq!(sc.masked[2].trim(), "c");
+        assert!(sc.comments[1].contains("open"));
+    }
+
+    #[test]
+    fn strings_are_masked_with_escapes() {
+        // The escaped quote must not terminate the literal early.
+        let m = masked("let s = \"match _ => \\\" 65504\"; done()\n");
+        assert!(m[0].starts_with("let s ="));
+        assert!(m[0].ends_with("; done()"));
+        assert!(!m[0].contains("match"));
+        assert!(!m[0].contains("65504"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_masked() {
+        let m = masked("let a = r#\"says \"hi\" unsafe\"#; let b = b\"448\";\n");
+        assert!(!m[0].contains("unsafe"));
+        assert!(!m[0].contains("448"));
+        assert!(m[0].contains("let a ="));
+        assert!(m[0].contains("let b ="));
+    }
+
+    #[test]
+    fn identifier_tail_r_is_not_a_raw_string() {
+        // `var"` would otherwise open a raw string and eat the file.
+        let m = masked("let tr = xr; foo(\"s\"); bar()\n");
+        assert_eq!(m[0], "let tr = xr; foo(   ); bar()");
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let m = masked("fn f<'a>(s: &'a str) { let c = 'x'; let n = '\\n'; }\n");
+        assert!(m[0].contains("fn f<'a>(s: &'a str)"));
+        assert!(!m[0].contains('x'), "char literal leaked: {}", m[0]);
+        let m2 = masked("let c = 'x'; g::<'b>()\n");
+        assert!(m2[0].contains("g::<'b>()"));
+    }
+
+    #[test]
+    fn columns_are_preserved() {
+        let src = "abc /* xx */ def \"ss\" ghi\n";
+        let m = masked(src);
+        assert_eq!(m[0].len(), src.len() - 1);
+        assert_eq!(m[0].find("def"), src.find("def"));
+        assert_eq!(m[0].find("ghi"), src.find("ghi"));
+    }
+
+    #[test]
+    fn unterminated_final_line_is_kept() {
+        let sc = scan("let x = 1; // tail");
+        assert_eq!(sc.masked.len(), 1);
+        assert!(sc.comments[0].contains("tail"));
+    }
+}

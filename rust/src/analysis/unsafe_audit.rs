@@ -1,0 +1,249 @@
+//! The checked-in `unsafe` audit registry.
+//!
+//! Every `unsafe` site in the crate — blocks, impls, fns, traits — must be
+//! accounted for here, by `(file, kind)` with an **exact count** and a
+//! one-line recap of why the site is sound. The lint cross-checks the
+//! registry against what [`super::rules::collect_unsafe_sites`] actually
+//! finds, in both directions:
+//!
+//! * a site the registry doesn't cover (or a count that grew) fails — new
+//!   unsafe code cannot land without a reviewed registry edit in the same
+//!   diff, which makes `git log -p` on this file the crate's complete
+//!   unsafe-review history;
+//! * a registry entry with no remaining sites (or a count that shrank)
+//!   also fails — stale audit claims are as misleading as missing ones.
+//!
+//! The recap lines here are deliberately short; the load-bearing argument
+//! lives in the `SAFETY:` comment at each site (rule 1 guarantees it
+//! exists for blocks and impls).
+
+use super::rules::{UnsafeKind, UnsafeSite};
+use super::{Rule, Violation};
+
+/// One audited `(file, kind)` group.
+pub struct AuditEntry {
+    /// Repo-relative `/`-separated path.
+    pub file: &'static str,
+    pub kind: UnsafeKind,
+    /// Exact number of sites of this kind in this file.
+    pub count: usize,
+    /// One-line soundness recap (the full argument is at the site).
+    pub why: &'static str,
+}
+
+/// The complete unsafe inventory of the crate, as reviewed.
+pub const AUDIT: &[AuditEntry] = &[
+    AuditEntry {
+        file: "rust/src/attention/kernel.rs",
+        kind: UnsafeKind::Impl,
+        count: 2,
+        why: "Send/Sync for SharedRows: (head × Q-block) tiles write disjoint \
+              row ranges, recorded and asserted by claim_rows in debug builds",
+    },
+    AuditEntry {
+        file: "rust/src/attention/kernel.rs",
+        kind: UnsafeKind::Block,
+        count: 1,
+        why: "from_raw_parts_mut over one tile's claimed row range; the owning \
+              matrix outlives run_tiles, which blocks until every tile is done",
+    },
+    AuditEntry {
+        file: "rust/src/coordinator/kv_cache.rs",
+        kind: UnsafeKind::Impl,
+        count: 1,
+        why: "Sync for KvPool: arena writes go through &mut self or through \
+              page_write's exclusively-owned refcount-1 pages",
+    },
+    AuditEntry {
+        file: "rust/src/coordinator/kv_cache.rs",
+        kind: UnsafeKind::Fn,
+        count: 1,
+        why: "page_write: shared-reference write path; the caller must own \
+              the page exclusively (refcount 1), debug-asserted on entry",
+    },
+    AuditEntry {
+        file: "rust/src/coordinator/kv_cache.rs",
+        kind: UnsafeKind::Block,
+        count: 4,
+        why: "UnsafeCell arena views: reads through layout-compatible slices \
+              of pages the reader owns, writes behind the refcount-1 witness",
+    },
+    AuditEntry {
+        file: "rust/src/pool.rs",
+        kind: UnsafeKind::Block,
+        count: 1,
+        why: "lifetime-erasing transmute of the tile closure; BatchGuard \
+              drains every claimed tile before the submitting frame unwinds",
+    },
+    AuditEntry {
+        file: "rust/tests/alloc_discipline.rs",
+        kind: UnsafeKind::Impl,
+        count: 1,
+        why: "GlobalAlloc for the counting test allocator, forwarding \
+              verbatim to System",
+    },
+    AuditEntry {
+        file: "rust/tests/alloc_discipline.rs",
+        kind: UnsafeKind::Fn,
+        count: 4,
+        why: "the four GlobalAlloc trait methods of the counting allocator",
+    },
+    AuditEntry {
+        file: "rust/tests/alloc_discipline.rs",
+        kind: UnsafeKind::Block,
+        count: 4,
+        why: "System forwarding calls under the caller's own GlobalAlloc \
+              contract",
+    },
+];
+
+/// Cross-check collected sites against [`AUDIT`] (exact counts, both
+/// directions). `sites` must cover the whole tree for the stale-entry
+/// direction to be meaningful.
+pub fn check(sites: &[UnsafeSite]) -> Vec<Violation> {
+    check_against(sites, AUDIT)
+}
+
+/// [`check`] against an explicit registry (tests pass fixture registries).
+pub fn check_against(sites: &[UnsafeSite], audit: &[AuditEntry]) -> Vec<Violation> {
+    let mut found: Vec<(&str, UnsafeKind, usize)> = Vec::new();
+    for s in sites {
+        if let Some(e) = found
+            .iter_mut()
+            .find(|(f, k, _)| *f == s.file && *k == s.kind)
+        {
+            e.2 += 1;
+        } else {
+            found.push((&s.file, s.kind, 1));
+        }
+    }
+    let mut out = Vec::new();
+    for &(file, kind, count) in &found {
+        let audited = audit
+            .iter()
+            .find(|e| e.file == file && e.kind == kind)
+            .map_or(0, |e| e.count);
+        if count != audited {
+            let line = sites
+                .iter()
+                .find(|s| s.file == file && s.kind == kind)
+                .map_or(0, |s| s.line);
+            out.push(Violation::new(
+                Rule::UnsafeAudit,
+                file,
+                line,
+                format!(
+                    "{count} `unsafe {kind}` site(s) found but the audit registry \
+                     records {audited} — review the site and update \
+                     rust/src/analysis/unsafe_audit.rs in the same change"
+                ),
+            ));
+        }
+    }
+    for e in audit {
+        let present = found.iter().any(|&(f, k, _)| f == e.file && k == e.kind);
+        if !present && e.count > 0 {
+            out.push(Violation::new(
+                Rule::UnsafeAudit,
+                e.file,
+                0,
+                format!(
+                    "stale audit entry: no `unsafe {}` sites remain in this file \
+                     — remove the entry from rust/src/analysis/unsafe_audit.rs",
+                    e.kind
+                ),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(file: &str, kind: UnsafeKind, line: usize) -> UnsafeSite {
+        UnsafeSite {
+            file: file.to_string(),
+            kind,
+            line,
+        }
+    }
+
+    #[test]
+    fn exact_match_passes() {
+        let audit = [AuditEntry {
+            file: "a.rs",
+            kind: UnsafeKind::Block,
+            count: 2,
+            why: "test",
+        }];
+        let sites = [
+            site("a.rs", UnsafeKind::Block, 3),
+            site("a.rs", UnsafeKind::Block, 9),
+        ];
+        assert!(check_against(&sites, &audit).is_empty());
+    }
+
+    #[test]
+    fn unaudited_and_overgrown_sites_fail() {
+        let audit = [AuditEntry {
+            file: "a.rs",
+            kind: UnsafeKind::Block,
+            count: 1,
+            why: "test",
+        }];
+        // A brand-new file with unsafe: fails.
+        let v = check_against(&[site("b.rs", UnsafeKind::Block, 1)], &audit);
+        assert_eq!(v.iter().filter(|x| x.file == "b.rs").count(), 1);
+        // Count grew beyond the audited number: fails.
+        let v = check_against(
+            &[
+                site("a.rs", UnsafeKind::Block, 1),
+                site("a.rs", UnsafeKind::Block, 2),
+            ],
+            &audit,
+        );
+        assert_eq!(v.iter().filter(|x| x.file == "a.rs").count(), 1);
+        // A different *kind* in an audited file is still unaudited.
+        let v = check_against(
+            &[
+                site("a.rs", UnsafeKind::Block, 1),
+                site("a.rs", UnsafeKind::Impl, 4),
+            ],
+            &audit,
+        );
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn stale_entries_fail() {
+        let audit = [AuditEntry {
+            file: "gone.rs",
+            kind: UnsafeKind::Impl,
+            count: 1,
+            why: "test",
+        }];
+        let v = check_against(&[], &audit);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn registry_is_internally_consistent() {
+        // No duplicate (file, kind) groups, no zero counts, no empty
+        // rationales.
+        for (i, e) in AUDIT.iter().enumerate() {
+            assert!(e.count > 0, "{}: zero-count entry", e.file);
+            assert!(!e.why.is_empty(), "{}: empty rationale", e.file);
+            for other in &AUDIT[i + 1..] {
+                assert!(
+                    !(e.file == other.file && e.kind == other.kind),
+                    "duplicate audit group {} / {}",
+                    e.file,
+                    e.kind
+                );
+            }
+        }
+    }
+}

@@ -90,6 +90,8 @@ pub fn flash_head_kv(
     (out, stats)
 }
 
+// lint: hot-path — the FA2 tile body; allocation-free given a warm
+// workspace (pinned by rust/tests/alloc_discipline.rs).
 /// One Q block of the FA2 forward: rows `[i0, i1)` of `q` against the
 /// full KV sweep, writing the finished output rows into `out_rows`
 /// (`(i1 − i0) × dv`, row-major) and returning the block's pre-store
@@ -215,6 +217,7 @@ pub(crate) fn flash_q_block(
     ops::div_rows_masked_into(&ws.oi, &ws.l, &ws.vis, vfmt, out_rows);
     gstats
 }
+// lint: end-hot-path
 
 #[cfg(test)]
 mod tests {

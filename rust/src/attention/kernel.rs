@@ -89,15 +89,48 @@ where
 }
 
 /// Row-range writer shared across tiles of one head's output matrix.
-/// Tiles of a head partition its Q rows, so writes never overlap.
+/// Tiles of a head partition its Q rows, so writes never overlap. Debug
+/// builds *check* the partition claim: every tile's `[i0, i1)` row claim
+/// is recorded and asserted disjoint from all earlier claims on the same
+/// head before the raw slice is formed.
 struct SharedRows {
     ptr: *mut f32,
     cols: usize,
+    /// Row intervals handed out so far (debug builds only): the runtime
+    /// witness of the "tiles partition the rows" safety argument.
+    #[cfg(debug_assertions)]
+    claims: Mutex<Vec<(usize, usize)>>,
 }
-// SAFETY: only ever dereferenced for disjoint row ranges (one tile per
-// (head, Q-block)), and the owning matrices outlive the fan-out, which
-// blocks until every tile completed.
+
+impl SharedRows {
+    /// Record a tile's half-open row claim `[i0, i1)` and assert it does
+    /// not overlap any interval already claimed on this head. No-op in
+    /// release builds.
+    #[cfg_attr(not(debug_assertions), allow(unused_variables))]
+    fn claim_rows(&self, i0: usize, i1: usize) {
+        #[cfg(debug_assertions)]
+        {
+            let mut claims = self.claims.lock().unwrap();
+            for &(a, b) in claims.iter() {
+                assert!(
+                    i1 <= a || i0 >= b,
+                    "SharedRows claim [{i0}, {i1}) overlaps an existing tile claim [{a}, {b})"
+                );
+            }
+            claims.push((i0, i1));
+        }
+    }
+}
+
+// SAFETY: `SharedRows` is only ever dereferenced for disjoint row ranges
+// (one tile per (head, Q-block) — debug builds assert the disjointness
+// via `claim_rows`), and the owning matrices outlive the fan-out, which
+// blocks until every tile completed; sending the raw pointer to a worker
+// therefore never outlives or aliases the allocation it points into.
 unsafe impl Send for SharedRows {}
+// SAFETY: shared access is sound for the same reason sending is: every
+// dereference targets a distinct row range, so concurrent tiles never
+// touch the same memory through a `&SharedRows`.
 unsafe impl Sync for SharedRows {}
 
 /// Fan a per-Q-block computation out as (head × Q-block) worker-pool
@@ -132,6 +165,8 @@ where
             .map(|m| SharedRows {
                 ptr: m.data.as_mut_ptr(),
                 cols: m.cols,
+                #[cfg(debug_assertions)]
+                claims: Mutex::new(Vec::new()),
             })
             .collect();
         let tiles_ref = &tiles;
@@ -139,7 +174,11 @@ where
         pool::global().run_tiles(tiles_ref.len(), |t| {
             let (h, i0, i1) = tiles_ref[t];
             let sh = &shared_ref[h];
-            // SAFETY: see `SharedRows` — tiles partition each head's rows.
+            sh.claim_rows(i0, i1);
+            // SAFETY: see `SharedRows` — tiles partition each head's rows
+            // (asserted by `claim_rows` in debug builds), so this slice
+            // aliases no other tile's slice, and the owning matrix lives
+            // until `run_tiles` returns.
             let rows = unsafe {
                 std::slice::from_raw_parts_mut(sh.ptr.add(i0 * sh.cols), (i1 - i0) * sh.cols)
             };
@@ -313,7 +352,7 @@ impl AttentionKernel for PasaKernel {
                     score_boundary,
                 }
             }
-            _ => {
+            AttnMask::None | AttnMask::Causal => {
                 // Shared preprocessing per (KV head, β) pair (GQA groups
                 // with one β reuse K' exactly as before), then (head ×
                 // Q-block) tiles over the pool.
@@ -581,6 +620,31 @@ mod tests {
                     alloc.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn tiny_multi_tile_fanout_is_miri_clean() {
+        // Miri target (see .github/workflows/ci.yml): a deliberately tiny
+        // request — 2 heads, s=8, d=4, Q-blocks of 4 — that still takes
+        // the `SharedRows` raw-pointer path (4 tiles > 1), so the
+        // `from_raw_parts_mut` aliasing argument is checked under the
+        // interpreter in minutes, not hours. With `PASA_POOL_THREADS=0`
+        // the tiles run inline on the caller, which is exactly the
+        // configuration the Miri job pins.
+        let mut rng = Pcg64::new(13, 0);
+        let dist = Distribution::Uniform { x0: 1.0, am: 1.0 };
+        let mut req = AttentionRequest::new(Allocation::Fa16_32);
+        for _ in 0..2 {
+            let c = gen_case(dist, 8, 8, 4, &mut rng);
+            req = req.with_head(c.q, c.k, c.v);
+        }
+        let req = req.with_fp16_inputs().with_blocks(4, 8);
+        let out = req.run();
+        assert_eq!(out.heads.len(), 2);
+        for h in 0..2 {
+            let solo = AttentionRequest::from_case_cfg(&req.head_case(h), req.cfg).run();
+            assert_eq!(out.heads[h].data, solo.heads[0].data, "head {h}");
         }
     }
 

@@ -191,6 +191,8 @@ pub fn pasa_head_kv(
     (out, stats)
 }
 
+// lint: hot-path — the PASA tile body; allocation-free given a warm
+// workspace (pinned by rust/tests/alloc_discipline.rs).
 /// One Q block of PASA's Algorithm 1: rows `[i0, i1)` of `q` against the
 /// preprocessed K' sweep, writing the finished output rows into
 /// `out_rows` and returning the block's pre-store telemetry. Owns its
@@ -351,6 +353,7 @@ pub(crate) fn pasa_q_block(
     ops::div_rows_masked_into(&ws.oi, &ws.l, &ws.vis, vfmt, out_rows);
     gstats
 }
+// lint: end-hot-path
 
 /// β = 0 degrades PASA to plain FA2 (§2.2: "PASA completely degrades into
 /// the FA2.0 algorithm when β is set to zero") — exposed for tests.

@@ -182,7 +182,10 @@ impl Guard {
     pub fn new(policy: GuardPolicy) -> Guard {
         let score_limit_frac = match policy {
             GuardPolicy::Preemptive { score_limit_frac } => score_limit_frac,
-            _ => 1.0,
+            GuardPolicy::AlwaysPasa
+            | GuardPolicy::AlwaysFa16
+            | GuardPolicy::AlwaysFa32
+            | GuardPolicy::Adaptive => 1.0,
         };
         Guard {
             policy,
@@ -259,17 +262,24 @@ impl Guard {
         }
         let can_step = self.stage + 1 < self.chain.len();
         match self.policy {
-            GuardPolicy::Adaptive if can_step => {
+            GuardPolicy::Adaptive => {
+                if !can_step {
+                    return false; // chain exhausted: telemetry surfaces as-is
+                }
                 self.stage += 1;
                 self.switches += 1;
                 true
             }
-            GuardPolicy::Preemptive { .. } if can_step => {
+            GuardPolicy::Preemptive { .. } => {
+                if !can_step {
+                    return false; // chain exhausted: telemetry surfaces as-is
+                }
                 self.stage += 1;
                 self.switches += 1;
                 sig.overflow_events > 0 || sig.nonfinite > 0
             }
-            _ => false, // fixed policy, or the chain is exhausted
+            // Fixed policies never switch, whatever the signal says.
+            GuardPolicy::AlwaysPasa | GuardPolicy::AlwaysFa16 | GuardPolicy::AlwaysFa32 => false,
         }
     }
 

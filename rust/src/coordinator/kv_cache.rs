@@ -149,8 +149,20 @@ impl KvPool {
     unsafe fn page_write(&self, id: PageId, off: usize, src: &[f32]) {
         let base = id as usize * self.page_floats() + off;
         debug_assert!(off + src.len() <= self.page_floats());
-        for (i, &x) in src.iter().enumerate() {
-            *self.arena[base + i].get() = x;
+        debug_assert_eq!(
+            self.refcount[id as usize], 1,
+            "page_write on page {id} with refcount {} — the exclusive-access \
+             contract requires a refcount-1 page owned by the calling slot",
+            self.refcount[id as usize]
+        );
+        // SAFETY: the caller guarantees exclusive access to page `id` for
+        // the duration of the call (debug builds assert the refcount-1
+        // ownership witness above), so no other thread can read or write
+        // these cells while we store through them.
+        unsafe {
+            for (i, &x) in src.iter().enumerate() {
+                *self.arena[base + i].get() = x;
+            }
         }
     }
 }

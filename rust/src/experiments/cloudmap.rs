@@ -71,13 +71,14 @@ pub fn fig_cloud(name: &str, scores: bool, opts: &ExpOptions) -> String {
         );
     }
     // Score matrices: raw S vs preprocessed S' (per-block shift).
+    let b16 = Format::F16.overflow_boundary() as f32;
     let s = matmul_nt(&c.q, &c.k, GemmPrecision::F32);
     let (slo, shi) = finite_range(&s.data);
     let m = shifting_matrix(128, alpha, PAPER_BETA, Format::F16);
     let kp = preprocess_blocks(&c.k, &m, 128);
     let sp = matmul_nt(&c.q, &kp, GemmPrecision::ACC32_STORE16);
     let (plo, phi) = finite_range(&sp.data);
-    let fp16_ok = plo > -65504.0 && phi < 65504.0;
+    let fp16_ok = plo > -b16 && phi < b16;
     format!(
         "# Fig 13/14 — Score Matrix Ranges ({name})\n\
          | matrix | measured range | paper range | fits FP16? |\n\
@@ -85,7 +86,7 @@ pub fn fig_cloud(name: &str, scores: bool, opts: &ExpOptions) -> String {
          | S' (post-PASA) | [{plo:.1}, {phi:.1}] | [{:.0}, {:.0}] | {} |\n",
         t.paper_s_range.0,
         t.paper_s_range.1,
-        if slo > -65504.0 && shi < 65504.0 { "yes" } else { "NO (overflow)" },
+        if slo > -b16 && shi < b16 { "yes" } else { "NO (overflow)" },
         t.paper_s_range_pasa.0,
         t.paper_s_range_pasa.1,
         if fp16_ok { "yes" } else { "NO" },

@@ -20,6 +20,7 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::field_reassign_with_default)]
 
+pub mod analysis;
 pub mod attention;
 pub mod bench;
 pub mod cli;

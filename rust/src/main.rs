@@ -5,6 +5,7 @@
 //!   serve      — run the serving engine on a synthetic request workload
 //!   solve-beta — solve the optimal accuracy condition (Eq. 16/22)
 //!   info       — print the artifact manifest and model dims
+//!   lint       — run the repo-native static-analysis pass (S14)
 //!   help
 
 #![allow(clippy::field_reassign_with_default)]
@@ -38,6 +39,10 @@ USAGE: pasa <subcommand> [flags]
         solve the optimal accuracy condition
   info  [--artifacts DIR]
         print the artifact manifest and model dims
+  lint  [--root DIR]
+        run the repo-native static-analysis pass (unsafe-audit,
+        boundary-literal, wildcard-arm, hot-path-alloc) over rust/src
+        and rust/tests; exits nonzero on any violation
 ";
 
 fn main() -> Result<()> {
@@ -47,6 +52,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "solve-beta" => cmd_solve_beta(&args),
         "info" => cmd_info(&args),
+        "lint" => cmd_lint(&args),
         "" | "help" => {
             print!("{HELP}");
             Ok(())
@@ -178,6 +184,21 @@ fn cmd_solve_beta(args: &Args) -> Result<()> {
         beta::practical_invariant(s.beta, n, fmt)
     );
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    // Default to the manifest directory so `cargo run -- lint` works from
+    // anywhere inside the checkout; `--root` overrides for out-of-tree use.
+    let root = args.get_or("root", env!("CARGO_MANIFEST_DIR"));
+    let violations = pasa::analysis::lint_tree(Path::new(&root))?;
+    if violations.is_empty() {
+        println!("pasa lint: clean (0 violations)");
+        return Ok(());
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    bail!("pasa lint: {} violation(s)", violations.len());
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -51,6 +51,14 @@ struct Batch {
     panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
 }
 
+/// Lock a mutex, ignoring poison: pool state stays consistent under
+/// panics (counters are plain integers, the queue holds `Arc`s), and the
+/// panic payload is re-raised on the submitter anyway — propagating the
+/// poison here would just turn one tile panic into a wedged pool.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl Batch {
     fn exhausted(&self) -> bool {
         self.next.load(Ordering::Relaxed) >= self.total
@@ -59,6 +67,7 @@ impl Batch {
     /// Claim-and-run tiles until none remain unclaimed. Panics inside a
     /// tile are caught and recorded so the submitter can re-raise them
     /// instead of wedging the completion count.
+    // lint: hot-path — tile claim/finish bookkeeping; runs once per tile.
     fn work(&self) {
         loop {
             let t = self.next.fetch_add(1, Ordering::Relaxed);
@@ -66,17 +75,57 @@ impl Batch {
                 return;
             }
             if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (self.job)(t))) {
-                let mut p = self.panic.lock().unwrap();
+                let mut p = lock_ignore_poison(&self.panic);
                 if p.is_none() {
                     *p = Some(payload);
                 }
             }
-            let mut done = self.finished.lock().unwrap();
+            let mut done = lock_ignore_poison(&self.finished);
             *done += 1;
-            if *done == self.total {
-                self.done_cv.notify_all();
+            // Notify on *every* completion, not only the last: a
+            // cancelled batch (see `BatchGuard`) waits for its *claimed*
+            // count, which can be any value below `total`.
+            self.done_cv.notify_all();
+        }
+    }
+    // lint: end-hot-path
+}
+
+/// Scope guard keeping the `'static`-erased job borrow sound: created
+/// before the batch becomes visible to workers and dropped before
+/// `run_tiles` returns — **on unwind too**. Drop (a) cancels the claim
+/// cursor so no worker starts another tile, (b) blocks until every
+/// already-claimed tile has finished, and (c) dequeues the batch. After
+/// that, no thread can ever invoke `job` again, so the borrow never
+/// escapes the submitting stack frame even if the submitter panics.
+struct BatchGuard<'a> {
+    batch: &'a Arc<Batch>,
+    shared: &'a Shared,
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        // Cancel: saturate the claim cursor. `prev` is how many claims
+        // were handed out before the cancel; each claim below `total`
+        // runs exactly one tile and bumps `finished`, so waiting for
+        // `finished >= min(prev, total)` drains every in-flight tile.
+        // On the normal path the cursor is already past `total`
+        // (the submitter's own `work()` ran it dry), so `claimed ==
+        // total` and this is the plain completion wait.
+        let prev = self.batch.next.fetch_max(self.batch.total, Ordering::SeqCst);
+        let claimed = prev.min(self.batch.total);
+        {
+            let mut done = lock_ignore_poison(&self.batch.finished);
+            while *done < claimed {
+                done = self
+                    .batch
+                    .done_cv
+                    .wait(done)
+                    .unwrap_or_else(|e| e.into_inner());
             }
         }
+        let mut q = lock_ignore_poison(&self.shared.queue);
+        q.retain(|b| !Arc::ptr_eq(b, self.batch));
     }
 }
 
@@ -131,12 +180,17 @@ impl WorkerPool {
             return;
         }
         let job: &(dyn Fn(usize) + Sync) = &f;
-        // SAFETY: the erased borrow outlives every use. `work()` below
-        // runs tiles on this thread until the claim cursor passes
-        // `total`, and we then *block* until `finished == total` — i.e.
-        // until every claimed tile has returned — before leaving this
-        // frame. A worker that still holds the Arc afterwards can only
-        // observe an exhausted cursor and never touches `job` again.
+        // SAFETY: the erased borrow outlives every use, on every exit
+        // path. Lifetime argument: (1) `job` is only invoked by `work()`,
+        // which claims indices strictly below `total` from the cursor;
+        // (2) a `BatchGuard` is armed *before* the batch becomes visible
+        // to any worker, and its Drop — which runs before this frame is
+        // torn down even if `work()` or a pool lock panics — saturates
+        // the cursor (no new claims) and blocks until every claimed tile
+        // has finished; (3) therefore when this frame exits, no thread
+        // holds or can re-acquire a path to `job`: a worker still holding
+        // the `Arc<Batch>` observes an exhausted cursor and never
+        // dereferences the closure again.
         let job: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
         let batch = Arc::new(Batch {
             job,
@@ -146,25 +200,24 @@ impl WorkerPool {
             done_cv: Condvar::new(),
             panic: Mutex::new(None),
         });
+        // Armed before publication: unwinding past this point cancels the
+        // batch and drains in-flight tiles instead of leaking `job`.
+        let guard = BatchGuard {
+            batch: &batch,
+            shared: &self.shared,
+        };
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_ignore_poison(&self.shared.queue);
             q.push(Arc::clone(&batch));
         }
         self.shared.work_cv.notify_all();
         // The submitter works its own batch: guarantees progress even if
         // every worker is busy elsewhere (and makes nesting safe).
         batch.work();
-        {
-            let mut done = batch.finished.lock().unwrap();
-            while *done < batch.total {
-                done = batch.done_cv.wait(done).unwrap();
-            }
-        }
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.retain(|b| !Arc::ptr_eq(b, &batch));
-        }
-        if let Some(payload) = batch.panic.lock().unwrap().take() {
+        // Normal path: the cursor is exhausted, so the guard's drop is
+        // exactly the old "wait for finished == total, then dequeue".
+        drop(guard);
+        if let Some(payload) = lock_ignore_poison(&batch.panic).take() {
             resume_unwind(payload);
         }
     }
@@ -173,13 +226,13 @@ impl WorkerPool {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let batch = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_ignore_poison(&shared.queue);
             loop {
                 if let Some(b) = q.iter().find(|b| !b.exhausted()) {
                     break Arc::clone(b);
                 }
                 q.retain(|b| !b.exhausted());
-                q = shared.work_cv.wait(q).unwrap();
+                q = shared.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
         batch.work();

@@ -89,6 +89,7 @@ impl GemmStats {
     }
 }
 
+// lint: hot-path — dot-product cores of every GEMM inner loop.
 /// One dot product `A[i]·B[j]` under the f32-accumulate fast path — the
 /// exact accumulation order of [`matmul_nt`]'s vectorized loop, factored
 /// out so the instrumented/masked variants stay bit-identical to it.
@@ -122,6 +123,7 @@ fn dot_emulated<A: RoundSpec>(ar: &[f32], br: &[f32]) -> f32 {
     }
     s
 }
+// lint: end-hot-path
 
 // ---- C = A · Bᵀ ---------------------------------------------------------
 
@@ -135,6 +137,7 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
     c
 }
 
+// lint: hot-path — buffer-reusing score GEMM; reshape is amortized.
 /// Buffer-reusing [`matmul_nt`]: `c` is reshaped in place (no allocation
 /// once warm) and the format dispatch happens once per call.
 pub fn matmul_nt_into(a: RowsRef<'_>, b: &Matrix, p: GemmPrecision, c: &mut Matrix) {
@@ -173,6 +176,7 @@ fn nt_core_emu<A: RoundSpec, S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut M
         }
     }
 }
+// lint: end-hot-path
 
 /// Dense C = A · Bᵀ with pre-store statistics.
 ///
@@ -195,6 +199,7 @@ pub fn matmul_nt_stats(
     c
 }
 
+// lint: hot-path — instrumented score GEMM of the attention KV sweep.
 /// Buffer-reusing [`matmul_nt_stats`] — the attention score GEMM of the
 /// zero-allocation hot path.
 pub fn matmul_nt_stats_into(
@@ -265,6 +270,7 @@ fn nt_stats_core_emu<A: RoundSpec, S: RoundSpec>(
         }
     }
 }
+// lint: end-hot-path
 
 /// Prefix-masked C = A · Bᵀ: row `i` computes only columns `j < vis[i]`
 /// and fills the rest with `fill` (−inf in the attention kernels, so
@@ -286,6 +292,7 @@ pub fn matmul_nt_prefix(
     c
 }
 
+// lint: hot-path — masked score GEMM of the flash-causal block skip.
 /// Buffer-reusing [`matmul_nt_prefix`].
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_nt_prefix_into(
@@ -359,6 +366,7 @@ fn nt_prefix_core_emu<A: RoundSpec, S: RoundSpec>(
         }
     }
 }
+// lint: end-hot-path
 
 // ---- C = A · B ----------------------------------------------------------
 
@@ -370,6 +378,7 @@ pub fn matmul_nn(a: &Matrix, b: &Matrix, p: GemmPrecision) -> Matrix {
     c
 }
 
+// lint: hot-path — P·V GEMM of the attention output accumulation.
 /// Buffer-reusing [`matmul_nn`] — the P·V GEMM of the zero-allocation hot
 /// path. The f32-accumulate path accumulates directly into the (zeroed)
 /// output rows instead of a per-row scratch vector, so it allocates
@@ -426,6 +435,7 @@ fn nn_core_emu<A: RoundSpec, S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut M
         }
     }
 }
+// lint: end-hot-path
 
 #[cfg(test)]
 mod tests {

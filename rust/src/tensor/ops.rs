@@ -29,6 +29,7 @@ pub fn rowmax(m: &Matrix) -> Vec<f32> {
     out
 }
 
+// lint: hot-path — buffer-reusing reduction; zero allocations after warm-up.
 /// Buffer-reusing [`rowmax`].
 pub fn rowmax_into(m: &Matrix, out: &mut Vec<f32>) {
     out.clear();
@@ -36,6 +37,7 @@ pub fn rowmax_into(m: &Matrix, out: &mut Vec<f32>) {
         out.push(m.row(r).iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)));
     }
 }
+// lint: end-hot-path
 
 /// Row sums with sequential accumulation rounded to `fmt` at each step.
 pub fn rowsum(m: &Matrix, fmt: Format) -> Vec<f32> {
@@ -75,6 +77,7 @@ pub fn rowmean_acc32(m: &Matrix, fmt: Format) -> Vec<f32> {
     out
 }
 
+// lint: hot-path — buffer-reusing reduction; zero allocations after warm-up.
 /// Buffer-reusing [`rowmean_acc32`].
 pub fn rowmean_acc32_into(m: &Matrix, fmt: Format, out: &mut Vec<f32>) {
     out.clear();
@@ -89,6 +92,7 @@ pub fn rowmean_acc32_into(m: &Matrix, fmt: Format, out: &mut Vec<f32>) {
         }
     });
 }
+// lint: end-hot-path
 
 /// Row maxima over the first `vis[r]` columns (−inf for an empty prefix).
 /// The masked kernels use this so a never-attended score can't inflate the
@@ -99,6 +103,7 @@ pub fn rowmax_prefix(m: &Matrix, vis: &[usize]) -> Vec<f32> {
     out
 }
 
+// lint: hot-path — buffer-reusing reduction; zero allocations after warm-up.
 /// Buffer-reusing [`rowmax_prefix`].
 pub fn rowmax_prefix_into(m: &Matrix, vis: &[usize], out: &mut Vec<f32>) {
     assert_eq!(vis.len(), m.rows);
@@ -111,7 +116,10 @@ pub fn rowmax_prefix_into(m: &Matrix, vis: &[usize], out: &mut Vec<f32>) {
         );
     }
 }
+// lint: end-hot-path
 
+// lint: hot-path — fused in-place softmax-stage ops of the FA/PASA KV
+// sweep; all output goes to caller-owned buffers.
 /// Fused static scaling + row max, in place: `m ← fmt(m · k)` and
 /// `maxes[r] = max_c m[r][c]` in one pass — exactly
 /// [`scale`] followed by [`rowmax`] (same rounding, same max fold), minus
@@ -198,6 +206,7 @@ pub fn exp_sub_rowbias_prefix_rowsum_into(
         }
     });
 }
+// lint: end-hot-path
 
 /// Masked attenuator: `exp(m[r][c] − v[r])` for `c < vis[r]`, exact 0
 /// beyond — masked positions carry zero softmax weight without relying on
@@ -242,6 +251,8 @@ pub fn exp_sub_rowbias(m: &Matrix, v: &[f32], fmt: Format) -> Matrix {
     out
 }
 
+// lint: hot-path — fused softmax + stats kernels; outputs land in
+// caller-owned workspace buffers.
 /// Fused Eq. (5) + Eq. (6) right half: `p = fmt(exp(fmt(s − bias)))` and
 /// `sums[r] = ` sequential `fmt`-rounded row sum of `p` — exactly
 /// [`exp_sub_rowbias`] followed by [`rowsum`], one pass, caller-owned
@@ -341,6 +352,7 @@ pub fn exp_sub_rowbias_prefix_rowmean32_into(
         }
     });
 }
+// lint: end-hot-path
 
 /// Elementwise `exp` of a vector, rounded to `fmt`.
 pub fn exp_vec(v: &[f32], fmt: Format) -> Vec<f32> {
@@ -354,6 +366,7 @@ pub fn scale_rows(m: &Matrix, s: &[f32], fmt: Format) -> Matrix {
     out
 }
 
+// lint: hot-path — in-place rescale/update pair of the online softmax.
 /// In-place [`scale_rows`] — the PASA `exp(Δm_j)·(P·V_j)` rescale without
 /// the copy.
 pub fn scale_rows_inplace(m: &mut Matrix, s: &[f32], fmt: Format) {
@@ -384,6 +397,7 @@ pub fn scale_add_rows(acc: &mut Matrix, s: &[f32], add: &Matrix, fmt: Format) {
         }
     });
 }
+// lint: end-hot-path
 
 /// `out[r][c] = fmt(m[r][c] / d[r])` — the final O = O / l of Eq. (8).
 pub fn div_rows(m: &Matrix, d: &[f32], fmt: Format) -> Matrix {
@@ -402,6 +416,7 @@ pub fn div_rows(m: &Matrix, d: &[f32], fmt: Format) -> Matrix {
     out
 }
 
+// lint: hot-path — final normalize writes straight into the head's output.
 /// Fused Eq. (8) + output store: `dst_row = fmt(oi[r] / l[r])` for each
 /// visible row, zeros for fully-masked rows (`vis[r] == 0`) — exactly
 /// [`div_rows`] followed by the kernel's per-row copy/zero, writing
@@ -431,6 +446,7 @@ pub fn div_rows_masked_into(
         }
     });
 }
+// lint: end-hot-path
 
 /// Elementwise scalar multiply, rounded to `fmt`.
 pub fn scale(m: &Matrix, k: f32, fmt: Format) -> Matrix {

@@ -24,21 +24,27 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: every operation defers verbatim to `System`; the counter
+// increment is a side effect with no bearing on allocator correctness.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, l: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(l)
+        // SAFETY: forwarded to System under the caller's own contract.
+        unsafe { System.alloc(l) }
     }
     unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(l)
+        // SAFETY: forwarded to System under the caller's own contract.
+        unsafe { System.alloc_zeroed(l) }
     }
     unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(p, l, new_size)
+        // SAFETY: forwarded to System under the caller's own contract.
+        unsafe { System.realloc(p, l, new_size) }
     }
     unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
-        System.dealloc(p, l)
+        // SAFETY: forwarded to System under the caller's own contract.
+        unsafe { System.dealloc(p, l) }
     }
 }
 

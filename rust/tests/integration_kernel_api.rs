@@ -19,7 +19,11 @@ use pasa::workloads::{
 fn envelope(alloc: Allocation) -> f64 {
     match alloc {
         Allocation::Fa32 => 1e-5,
-        _ => 5e-2,
+        Allocation::Fa16_32
+        | Allocation::Fa16
+        | Allocation::Pasa16
+        | Allocation::Fp8
+        | Allocation::Pasa8 => 5e-2,
     }
 }
 

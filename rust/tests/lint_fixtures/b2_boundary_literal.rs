@@ -1,0 +1,8 @@
+//! Lint fixture: a raw FP16 overflow-boundary literal in non-test code of
+//! a non-exempt file. Must trip rule 2 (boundary-literal) exactly once and
+//! no other rule.
+
+pub fn clamp_to_fp16(x: f32) -> f32 {
+    let boundary = 65504.0_f32;
+    x.clamp(-boundary, boundary)
+}

@@ -1,0 +1,45 @@
+//! Lint fixture: every rule's *near-miss* in one file — each decoy looks
+//! like a violation to a naive grep but is legal under the real rules.
+//! Must produce zero violations when linted under a virtual
+//! `rust/src/attention/` path (non-exempt for rule 2, scoped for rule 4).
+
+/// Decoy 1: boundary values in comments (the FP16 max is 65504, E4M3
+/// saturates at 448) and in strings are documentation, not code.
+pub fn describe() -> &'static str {
+    "overflow at 65504 (fp16) / 448 (e4m3) / 240 (e4m3-uz)"
+}
+
+/// Decoy 2: a `_` arm over an *unprotected* enum, and protected-enum
+/// names appearing only in arm expressions.
+pub fn pick(i: usize) -> AttnMask {
+    match i {
+        0 => AttnMask::None,
+        1 => AttnMask::Causal,
+        _ => AttnMask::Padded(Vec::new()),
+    }
+}
+
+/// Decoy 3: allocation outside any fence is fine, and a fenced region
+/// using only the allowed amortized-growth calls is fine too.
+pub fn warm(buf: &mut Vec<f32>, n: usize) -> Vec<f32> {
+    let staged = vec![0.0; n];
+    // lint: hot-path — fixture fence with only allowed calls.
+    buf.clear();
+    buf.extend(staged.iter().copied());
+    // lint: end-hot-path
+    staged
+}
+
+/// Decoy 4: `unsafe` in a string and a lifetime that must not be eaten as
+/// a char literal.
+pub fn tell<'a>(s: &'a str) -> (&'a str, char) {
+    let kw = "unsafe { not_code() }";
+    let c = 'x';
+    (if s.is_empty() { kw } else { s }, c)
+}
+
+/// Decoy 5: numeric near-misses — identifier tails, tuple fields, and
+/// values close to (but not equal to) the boundaries.
+pub fn near(pair: (f32, f32), x448: f32) -> f32 {
+    pair.0 + x448 + 65503.0 + 44.8 + 2.40
+}

@@ -1,0 +1,12 @@
+//! Lint fixture: an allocating call inside a hot-path fence (linted under
+//! a virtual `rust/src/tensor/` path). Must trip rule 4 (hot-path-alloc)
+//! exactly once and no other rule.
+
+// lint: hot-path — fixture fence.
+pub fn scale_rows(out: &mut [f32], src: &[f32], s: f32) {
+    let staged = src.to_vec();
+    for (o, x) in out.iter_mut().zip(staged) {
+        *o = x * s;
+    }
+}
+// lint: end-hot-path

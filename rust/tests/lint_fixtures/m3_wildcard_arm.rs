@@ -1,0 +1,11 @@
+//! Lint fixture: a `_` catch-all in a `match` over the precision-critical
+//! `Allocation` enum. Must trip rule 3 (wildcard-arm) exactly once and no
+//! other rule.
+
+pub fn is_eight_bit(alloc: Allocation) -> bool {
+    match alloc {
+        Allocation::Fp8 => true,
+        Allocation::Pasa8 => true,
+        _ => false,
+    }
+}

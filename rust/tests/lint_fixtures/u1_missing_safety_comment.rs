@@ -1,0 +1,12 @@
+//! Lint fixture: an `unsafe` block with no `SAFETY:` comment anywhere in
+//! the comment run above it. Must trip rule 1 (unsafe-audit) exactly once
+//! and no other rule.
+//!
+//! This file is test data for `rust/tests/lint_invariants.rs` — it is
+//! excluded from compilation (explicit `[[test]]` targets only) and from
+//! the real tree walk (`lint_fixtures/` is skipped).
+
+pub fn read_first(v: &[f32]) -> f32 {
+    // A comment that is not a safety argument.
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,9 @@
+//! Lint fixture: a properly `SAFETY:`-commented `unsafe impl` that does
+//! **not** appear in the audit registry. `lint_file` alone reports nothing
+//! (the comment is present); the registry cross-check must flag it as the
+//! only violation.
+
+pub struct Token(*mut u8);
+
+// SAFETY: the pointer is never dereferenced; it is an opaque id.
+unsafe impl Send for Token {}

@@ -1,0 +1,108 @@
+//! Tier-1 gate for `pasa lint` (S14): the tree itself must be clean, and
+//! each fixture in `rust/tests/lint_fixtures/` must trip **exactly** its
+//! intended rule — the fixtures are the lint's own regression corpus, so
+//! a scanner or rule change that goes blind (or trigger-happy) fails here
+//! before it ever reaches CI.
+//!
+//! The fixtures are linted under *virtual* repo paths (e.g. a tensor-dir
+//! path for the hot-path fixture) because rule scoping is path-based; the
+//! files themselves are excluded from compilation and from the real tree
+//! walk.
+
+use pasa::analysis::{lint_file, lint_tree, unsafe_audit, Rule, UnsafeKind};
+use std::path::Path;
+
+#[test]
+fn tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = lint_tree(root).expect("tree walk");
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    assert!(
+        violations.is_empty(),
+        "pasa lint found {} violation(s) — see stderr",
+        violations.len()
+    );
+}
+
+/// Lint a fixture under a virtual repo path and return its violations.
+fn fixture(rel: &str, src: &str) -> Vec<pasa::analysis::Violation> {
+    lint_file(rel, src).violations
+}
+
+fn assert_single(rel: &str, src: &str, rule: Rule) {
+    let v = fixture(rel, src);
+    assert_eq!(v.len(), 1, "expected exactly one violation, got {v:?}");
+    assert_eq!(v[0].rule, rule, "{}", v[0]);
+}
+
+#[test]
+fn fixture_u1_missing_safety_comment() {
+    assert_single(
+        "rust/src/coordinator/fixture_u1.rs",
+        include_str!("lint_fixtures/u1_missing_safety_comment.rs"),
+        Rule::UnsafeAudit,
+    );
+}
+
+#[test]
+fn fixture_u1_unaudited_unsafe() {
+    // The site carries its SAFETY comment, so the per-file pass is clean —
+    // only the registry cross-check may flag it.
+    let src = include_str!("lint_fixtures/u1_unaudited_unsafe.rs");
+    let rep = lint_file("rust/src/coordinator/fixture_u1b.rs", src);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert_eq!(rep.unsafe_sites.len(), 1);
+    assert_eq!(rep.unsafe_sites[0].kind, UnsafeKind::Impl);
+    let v = unsafe_audit::check_against(&rep.unsafe_sites, &[]);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, Rule::UnsafeAudit);
+    assert!(v[0].message.contains("audit registry"), "{}", v[0]);
+}
+
+#[test]
+fn fixture_b2_boundary_literal() {
+    assert_single(
+        "rust/src/coordinator/fixture_b2.rs",
+        include_str!("lint_fixtures/b2_boundary_literal.rs"),
+        Rule::BoundaryLiteral,
+    );
+}
+
+#[test]
+fn fixture_m3_wildcard_arm() {
+    assert_single(
+        "rust/src/coordinator/fixture_m3.rs",
+        include_str!("lint_fixtures/m3_wildcard_arm.rs"),
+        Rule::WildcardArm,
+    );
+}
+
+#[test]
+fn fixture_h4_hot_path_alloc() {
+    assert_single(
+        "rust/src/tensor/fixture_h4.rs",
+        include_str!("lint_fixtures/h4_hot_path_alloc.rs"),
+        Rule::HotPathAlloc,
+    );
+}
+
+#[test]
+fn fixture_clean_decoys_produce_nothing() {
+    let src = include_str!("lint_fixtures/clean_decoys.rs");
+    let rep = lint_file("rust/src/attention/fixture_clean.rs", src);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert!(rep.unsafe_sites.is_empty(), "{:?}", rep.unsafe_sites);
+}
+
+#[test]
+fn fixtures_are_rule_scoped_by_path() {
+    // The same hot-path fixture under a non-scoped path is clean, and the
+    // boundary fixture inside `numerics/` is exempt: path scoping is part
+    // of the rules' contract, pinned here so a refactor cannot drop it.
+    let h4 = include_str!("lint_fixtures/h4_hot_path_alloc.rs");
+    assert!(fixture("rust/src/model/fixture_h4.rs", h4).is_empty());
+    let b2 = include_str!("lint_fixtures/b2_boundary_literal.rs");
+    assert!(fixture("rust/src/numerics/fixture_b2.rs", b2).is_empty());
+}
