@@ -1,23 +1,134 @@
-//! End-to-end serving benchmark (requires `make artifacts`): decode-step
-//! latency and tokens/s per guard policy — the paper's serving-side
+//! End-to-end serving benchmark.
+//!
+//! Part 1 (always runs, artifact-free): the continuous-batching
+//! scheduler on the lab backend over seeded arrival-process traces —
+//! Poisson and bursty arrivals × FIFO-compat vs token-budget scheduling
+//! × prefill chunk budgets. Reports tokens/s and TTFT/ITL percentiles
+//! per cell; every cell also lands in `BENCH_bench_serving.json` via the
+//! tagged registry (the CI smoke job runs this with `PASA_BENCH_SMOKE=1`
+//! on a trimmed trace).
+//!
+//! Part 2 (requires `make artifacts`): decode-step latency and tokens/s
+//! per guard policy through the PJRT runtime — the paper's serving-side
 //! framing (FA low-precision throughput vs robustness).
 
 use pasa::bench::{emit_json, Bencher};
-use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request};
-use pasa::model::Sampling;
-use pasa::runtime::ModelRuntime;
+use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request, SchedulerConfig};
+use pasa::model::{ModelDims, Sampling};
+use pasa::runtime::{LabModel, ModelRuntime};
+use pasa::workloads::{bursty_trace, poisson_trace, prompt_of_tokens, Arrival, ArrivalShape};
 use std::path::Path;
 use std::time::Instant;
 
+fn lab_dims() -> ModelDims {
+    ModelDims {
+        vocab_size: 259,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_head: 8,
+        d_ff: 64,
+        max_seq: 128,
+        prefill_seq: 32,
+        decode_batch: 4,
+        pad: 256,
+        bos: 257,
+        eos: 258,
+    }
+}
+
+/// Replay one arrival trace through a fresh lab engine: submit every
+/// request whose step has come due, then run one scheduler iteration —
+/// trace time is engine-step time, so the run is host-speed independent.
+/// Returns (tokens generated, ttft_p50, ttft_p95, itl_p95) in seconds.
+fn run_trace(sched: SchedulerConfig, trace: &[Arrival]) -> (u64, f64, f64, f64) {
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::Adaptive;
+    cfg.kv_pages = 1024;
+    cfg.page_tokens = 16;
+    cfg.max_queue = 1024;
+    cfg.sched = sched;
+    let mut eng = Engine::from_lab(LabModel::synthetic(lab_dims(), 42), cfg);
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < trace.len() || !eng.idle() {
+        while next < trace.len() && trace[next].step <= step {
+            let a = trace[next];
+            let id = eng.fresh_id();
+            eng.submit(
+                Request::new(id, prompt_of_tokens(a.prompt_tokens)).with_params(GenParams {
+                    max_new_tokens: a.max_new,
+                    sampling: Sampling::Greedy,
+                    stop_at_eos: false,
+                }),
+            );
+            next += 1;
+        }
+        eng.step().expect("lab engine step");
+        step += 1;
+    }
+    let ttft = eng.metrics.ttft.summary();
+    let itl = eng.metrics.itl.summary();
+    (eng.metrics.tokens_generated, ttft.p50, ttft.p95, itl.p95)
+}
+
 fn main() -> anyhow::Result<()> {
+    // ---- Part 1: scheduler grid on the lab backend (always runs) ----
+    let smoke = pasa::bench::smoke();
+    let n_requests = if smoke { 12 } else { 48 };
+    let shape = ArrivalShape::default();
+    let arrivals: [(&str, Vec<Arrival>); 2] = [
+        ("poisson-0.8", poisson_trace(n_requests, 0.8, shape, 7)),
+        ("bursty-6x4", bursty_trace(n_requests, 6, 4, shape, 7)),
+    ];
+    let scheds: [(&str, SchedulerConfig); 3] = [
+        ("fifo", SchedulerConfig::fifo_compat()),
+        (
+            "cont-chunk32",
+            SchedulerConfig {
+                max_batch_prefill_tokens: 32,
+                ..SchedulerConfig::default()
+            },
+        ),
+        (
+            "cont-chunk128",
+            SchedulerConfig {
+                max_batch_prefill_tokens: 128,
+                ..SchedulerConfig::default()
+            },
+        ),
+    ];
+
+    println!("# bench_serving — scheduler grid, lab backend ({n_requests} requests/cell)\n");
+    let b = Bencher::for_env(Bencher::quick());
+    for (aname, trace) in &arrivals {
+        let offered: u64 = trace.iter().map(|a| a.max_new as u64).sum();
+        for (sname, sched) in &scheds {
+            let (tokens, p50, p95, itl95) = run_trace(*sched, trace);
+            assert_eq!(tokens, offered, "scheduler dropped tokens");
+            let r = b.run_tagged(
+                &format!("serve {aname} {sname}"),
+                aname,
+                sname,
+                tokens as f64,
+                || run_trace(*sched, trace),
+            );
+            println!(
+                "{aname:<12} {sname:<14} ttft_p50={:>8.4}s ttft_p95={:>8.4}s itl_p95={:>8.4}s  {r}",
+                p50, p95, itl95
+            );
+        }
+    }
+
+    // ---- Part 2: PJRT policy sweep (needs compiled artifacts) ----
     let art = Path::new("artifacts");
     if !art.join("manifest.txt").exists() {
-        println!("artifacts/ missing — run `make artifacts`; skipping bench_serving");
+        println!("\nartifacts/ missing — run `make artifacts`; skipping the PJRT sweep");
         emit_json("bench_serving");
         return Ok(());
     }
     let rt = ModelRuntime::load(art)?;
-    println!("# bench_serving — full stack over {:?}\n", rt.dims);
+    println!("\n# bench_serving — full stack over {:?}\n", rt.dims);
 
     for policy in [
         GuardPolicy::AlwaysFa16,

@@ -13,8 +13,10 @@
 //!   `Format::…::overflow_boundary()` accessors, so a format-table change
 //!   cannot silently diverge from a hardcoded copy.
 //! * **Rule 3 — wildcard-arm**: no `_` arms in `match`es over the
-//!   precision-critical enums (`Allocation`, `AttnMask`, `GuardPolicy`);
-//!   adding a variant must break the build at every dispatch site.
+//!   protected enums (`Allocation`, `AttnMask`, `GuardPolicy`, and the
+//!   scheduler's `SchedDecision` / `StreamEvent` — a new defer reason or
+//!   stream event kind must be handled at every dispatch site); adding a
+//!   variant must break the build everywhere it is matched.
 //! * **Rule 4 — hot-path-alloc**: no allocating calls inside
 //!   `lint: hot-path` fenced regions of `attention/`, `tensor/`,
 //!   `pool.rs` — the zero-allocation contract that
@@ -352,7 +354,13 @@ fn numeric_tokens(line: &str) -> Vec<String> {
 /// A `match` is protected when any arm *pattern* names one of these — the
 /// enums whose variants gate precision dispatch. Arm expressions don't
 /// count (constructing an `Allocation` in a body is fine).
-const PROTECTED_ENUMS: [&str; 3] = ["Allocation::", "AttnMask::", "GuardPolicy::"];
+const PROTECTED_ENUMS: [&str; 5] = [
+    "Allocation::",
+    "AttnMask::",
+    "GuardPolicy::",
+    "SchedDecision::",
+    "StreamEvent::",
+];
 
 pub fn check_wildcard_arms(rel: &str, sc: &Scanned, in_test: &[bool], out: &mut Vec<Violation>) {
     // Flatten the masked lines so a match body can span lines; keep a
@@ -388,9 +396,10 @@ pub fn check_wildcard_arms(rel: &str, sc: &Scanned, in_test: &[bool], out: &mut 
                     Rule::WildcardArm,
                     rel,
                     line_of[*off] + 1,
-                    "`_` arm in a match over a precision-critical enum \
-                     (Allocation / AttnMask / GuardPolicy) — name every variant \
-                     so new rows fail to compile here"
+                    "`_` arm in a match over a protected enum \
+                     (Allocation / AttnMask / GuardPolicy / SchedDecision / \
+                     StreamEvent) — name every variant so new rows fail to \
+                     compile here"
                         .to_string(),
                 ));
             }

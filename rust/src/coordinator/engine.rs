@@ -1,34 +1,52 @@
-//! Serving engine (S11): continuous-batching loop over one of two model
-//! backends.
+//! Serving engine (S11): token-budget continuous batching over one of
+//! two model backends.
 //!
 //! One `step()` = one scheduler iteration:
-//!   1. admit queued requests into free decode slots (prefill, KV seeded
-//!      into the paged pool),
-//!   2. one decode step per active slot (grouped per allocation on the
-//!      PJRT backend; per-slot paged requests on the lab backend),
-//!   3. guard inspection ⇒ replay the step under PASA (functional
-//!      cache-in/cache-out makes replay exact), pin the slot. Under the
-//!      [`GuardPolicy::Preemptive`] knob the pin fires on score
-//!      *pressure* (max |S| approaching the active format's overflow
-//!      boundary) with **no replay** — the pressured step's outputs are
-//!      still exact, so only subsequent steps change allocation,
-//!   4. sample, write the new KV row back into the paged cache, retire
-//!      finished requests.
+//!   1. **admit + prefill** — continue in-flight chunked prefills (FCFS,
+//!      drawing from `max_batch_prefill_tokens`), then admit queued
+//!      requests while the pure scheduler ([`super::scheduler`]) says the
+//!      batch has budget: slot cap, committed-token ceiling, prefill
+//!      budget, KV pages. A long prompt admits with a budget-sized first
+//!      chunk and keeps prefilling one chunk per iteration — interleaved
+//!      with the in-flight decode rounds, so a 4096-token prompt never
+//!      stalls anyone's decode by more than one chunk of compute.
+//!   2. **decode round** — one decode step per `Decoding` slot (grouped
+//!      per allocation on the PJRT backend; per-slot paged requests fanned
+//!      over the worker pool on the lab backend), guard inspection ⇒
+//!      replay down the fallback chain, sample, stream a [`TokenEvent`].
+//!   3. **retire** — finished slots leave the batch (`filter`), their KV
+//!      pages free immediately, and the next iteration's admission sees
+//!      the freed budget (`concatenate`) — waiting work re-admits
+//!      mid-flight, not at batch boundaries.
+//!
+//! ## Determinism and token identity
+//!
+//! Scheduler decisions are pure functions of (queue, slot, budget) state
+//! — token counts and free pages, never wall-clock time or RNG — so an
+//! arrival trace replays to the same admission schedule every run.
+//! Sampling uses a **per-request** RNG stream seeded from the request id
+//! (not one engine-wide stream consumed in slot order), and the lab
+//! chunked-prefill path is bit-invariant to chunk boundaries
+//! ([`LabModel::prefill_chunk`]). Together these make every request's
+//! output stream bit-identical to a sequential one-request-at-a-time run
+//! of the same engine — certified by the scheduler integration tests the
+//! same way paged≡dense and pooled≡sequential already are.
+//!
+//! Timestamps exist only on the observation side (TTFT/ITL histograms,
+//! `TokenEvent::emitted_at`); nothing feeds them back into decisions.
 //!
 //! ## Backends
 //!
-//! * [`Backend::Lab`] — the pure-Rust [`LabModel`]: every decode step
-//!   builds per-slot paged [`crate::attention::AttentionRequest`]s
-//!   (`s1 = 1` query row against a `KvView::Paged` of `len_tokens` rows),
-//!   so per-step cache work is `O(len_tokens)` gathers, and the guard
-//!   consumes `GuardSignal::from_attention` — pre-store max |S| and
-//!   overflow events straight from the score GEMM, the paper's
-//!   instrumentation point.
-//! * [`Backend::Pjrt`] — the AOT HLO runtime. Its decode module consumes a
-//!   dense `(L, B, max_seq, W)` cache, so this path still assembles the
-//!   batch with `fill_dense` and falls back to legacy logits NaN-sniffing
-//!   (the compiled modules are uninstrumented). It is the *fallback*
-//!   signal source; the lab path never uses it.
+//! * [`Backend::Lab`] — the pure-Rust [`LabModel`]: chunked prefill
+//!   through [`LabModel::prefill_chunk`] (per-row attention against the
+//!   paged cache), decode steps as per-slot paged
+//!   [`crate::attention::AttentionRequest`]s with kernel telemetry into
+//!   the guard ([`GuardSignal::from_attention`]).
+//! * [`Backend::Pjrt`] — the AOT HLO runtime. Its prefill module is one
+//!   fixed shape (no chunking — prompts cap at `prefill_seq`) and its
+//!   decode consumes dense `(L, B, max_seq, W)` caches, so this path
+//!   assembles batches with `fill_dense` and falls back to legacy logits
+//!   NaN-sniffing.
 //!
 //! KV-pool exhaustion mid-flight (copy-on-write growth) is backpressure:
 //! the slot finishes with [`FinishReason::Evicted`] and its pages return
@@ -37,8 +55,9 @@
 use super::guard::{Guard, GuardPolicy, GuardSignal};
 use super::kv_cache::{KvPool, SeqCache};
 use super::metrics::Metrics;
-use super::request::{Completion, FinishReason, Phase, Request};
+use super::request::{Completion, FinishReason, Phase, Request, StreamEvent, TokenEvent};
 use super::router::{Admission, Router};
+use super::scheduler::{self, BatchState, SchedDecision, SchedulerConfig};
 use crate::attention::Allocation;
 use crate::model::{sample, tokenizer, ModelDims, Specials};
 use crate::runtime::{LabModel, ModelRuntime};
@@ -66,6 +85,8 @@ pub struct EngineConfig {
     /// Tokens per page.
     pub page_tokens: usize,
     pub max_queue: usize,
+    /// Continuous-batching budgets (see [`SchedulerConfig`]).
+    pub sched: SchedulerConfig,
 }
 
 impl Default for EngineConfig {
@@ -76,6 +97,7 @@ impl Default for EngineConfig {
             kv_pages: 4096,
             page_tokens: 32,
             max_queue: 256,
+            sched: SchedulerConfig::default(),
         }
     }
 }
@@ -106,18 +128,102 @@ fn observe_guard(guard: &mut Guard, sig: &GuardSignal, metrics: &mut Metrics) ->
     replay
 }
 
+/// One slot of the dynamic batch. The slot's position in `Engine::active`
+/// is its batch lane for the round; retirement compacts the vector
+/// (filter), admission appends (concatenate), so lanes shift between
+/// rounds but stay stable within one.
 struct ActiveRequest {
     req: Request,
     guard: Guard,
     cache: SeqCache,
+    /// The prompt's token ids (BOS + bytes, truncated to the backend's
+    /// prompt capacity) — the chunked prefill reads straight from here.
+    prompt_ids: Vec<u32>,
+    /// Prompt tokens prefilled so far; `== prompt_ids.len()` ⇒ done.
+    prefilled: usize,
     /// Prompt + generated token ids.
     tokens: Vec<u32>,
     prompt_len: usize,
     phase: Phase,
+    /// Per-request sampling RNG, seeded from the request id: the stream a
+    /// request consumes is independent of what else is in the batch —
+    /// load-bearing for token identity under non-greedy sampling.
+    rng: Pcg64,
     /// When the request left the queue (prefill started).
     admitted: Instant,
     prefill_done: Option<Instant>,
     first_token: Option<Instant>,
+    /// Previous token emission — feeds the ITL histogram.
+    last_token: Option<Instant>,
+}
+
+impl ActiveRequest {
+    fn committed_tokens(&self, max_seq: usize) -> usize {
+        scheduler::committed_tokens(self.prompt_len, self.req.params.max_new_tokens, max_seq)
+    }
+}
+
+/// Sampling RNG for a request: a fixed salt mixed with the id as both
+/// seed and stream — distinct requests get distinct, reproducible
+/// streams regardless of admission order or co-tenants.
+fn request_rng(id: u64) -> Pcg64 {
+    Pcg64::new(0xe61e ^ id, id)
+}
+
+/// Emit one sampled token: stream event, ITL/TTFT instants, counters.
+fn emit_token(
+    s: &mut ActiveRequest,
+    tok: u32,
+    metrics: &mut Metrics,
+    events: &mut Vec<StreamEvent>,
+) {
+    let now = Instant::now();
+    if s.first_token.is_none() {
+        s.first_token = Some(now);
+    }
+    if let Some(prev) = s.last_token {
+        metrics.itl.record((now - prev).as_secs_f64());
+    }
+    s.last_token = Some(now);
+    events.push(StreamEvent::Token(TokenEvent {
+        request_id: s.req.id,
+        token: tok,
+        index: s.tokens.len() - s.prompt_len,
+        position: s.tokens.len(),
+        emitted_at: now,
+    }));
+    s.tokens.push(tok);
+    metrics.tokens_generated += 1;
+}
+
+/// Stop conditions, applied uniformly to every sampled token (including
+/// the first, straight out of prefill — an EOS first token finishes the
+/// request instead of decoding past it).
+fn apply_stop_rules(s: &mut ActiveRequest, tok: u32, max_seq: usize, eos: u32) {
+    let generated = s.tokens.len() - s.prompt_len;
+    if s.req.params.stop_at_eos && tok == eos {
+        s.phase = Phase::Finished(FinishReason::Eos);
+    } else if generated >= s.req.params.max_new_tokens {
+        s.phase = Phase::Finished(FinishReason::MaxTokens);
+    } else if s.tokens.len() >= max_seq {
+        s.phase = Phase::Finished(FinishReason::ContextFull);
+    }
+}
+
+/// Advance one slot after a decode step: sample (per-request RNG), emit,
+/// check stop conditions. Free function over the slot so the backends'
+/// disjoint borrows stay simple.
+fn advance_slot(
+    s: &mut ActiveRequest,
+    logits_row: &[f32],
+    max_seq: usize,
+    eos: u32,
+    metrics: &mut Metrics,
+    events: &mut Vec<StreamEvent>,
+) {
+    let tok = sample(logits_row, s.req.params.sampling, &mut s.rng);
+    emit_token(s, tok, metrics, events);
+    apply_stop_rules(s, tok, max_seq, eos);
 }
 
 /// The continuous-batching serving engine.
@@ -127,10 +233,11 @@ pub struct Engine<'rt> {
     pub cfg: EngineConfig,
     pub router: Router,
     pool: KvPool,
-    slots: Vec<Option<ActiveRequest>>,
+    /// The dynamic slot set: every active request, in admission order.
+    active: Vec<ActiveRequest>,
     pub metrics: Metrics,
     completions: Vec<Completion>,
-    rng: Pcg64,
+    events: Vec<StreamEvent>,
     sp: Specials,
     // Reusable batch assembly buffers (PJRT path only — the lab path
     // never assembles a dense cache).
@@ -164,15 +271,20 @@ impl<'rt> Engine<'rt> {
             bos: dims.bos,
             eos: dims.eos,
         };
+        // Admission limit in *tokens*: anything that fits the context is
+        // servable under chunked prefill (the PJRT path additionally
+        // truncates to its fixed prefill shape, as it always has).
+        let mut router = Router::new(cfg.max_queue, dims.max_seq);
+        router.max_bypass = cfg.sched.max_bypass();
         Engine {
             backend,
             dims,
-            router: Router::new(cfg.max_queue, dims.prefill_seq * 4),
+            router,
             pool: KvPool::new(cfg.kv_pages, cfg.page_tokens, dims.head_width()),
-            slots: (0..b).map(|_| None).collect(),
+            active: Vec::with_capacity(b),
             metrics: Metrics::new(),
             completions: Vec::new(),
-            rng: Pcg64::new(0xe61e, 0),
+            events: Vec::new(),
             sp,
             kbatch: vec![0.0; cache_len],
             vbatch: vec![0.0; cache_len],
@@ -191,15 +303,24 @@ impl<'rt> Engine<'rt> {
 
     /// True when no queued or active work remains.
     pub fn idle(&self) -> bool {
-        self.router.is_empty() && self.slots.iter().all(|s| s.is_none())
+        self.router.is_empty() && self.active.is_empty()
     }
 
     pub fn active_count(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.active.len()
     }
 
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// Drain the per-token stream accumulated since the last call:
+    /// [`StreamEvent::Token`]s in emission order, interleaved with
+    /// [`StreamEvent::Finished`] markers. Callers that want streaming
+    /// drain this between `step()`s; `run_to_completion` leaves the
+    /// events buffered for a final drain.
+    pub fn take_events(&mut self) -> Vec<StreamEvent> {
+        std::mem::take(&mut self.events)
     }
 
     pub fn kv_utilization(&self) -> f64 {
@@ -211,24 +332,47 @@ impl<'rt> Engine<'rt> {
         &self.pool
     }
 
-    /// The paged cache of an active slot, if occupied.
+    /// The paged cache of an active slot (slot = index in admission
+    /// order; retirement compacts).
     pub fn slot_cache(&self, slot: usize) -> Option<&SeqCache> {
-        self.slots.get(slot)?.as_ref().map(|s| &s.cache)
+        self.active.get(slot).map(|s| &s.cache)
     }
 
     /// The allocation an active slot's guard would run next.
     pub fn slot_allocation(&self, slot: usize) -> Option<&'static str> {
-        self.slots.get(slot)?.as_ref().map(|s| s.guard.allocation())
+        self.active.get(slot).map(|s| s.guard.allocation())
+    }
+
+    /// Effective slot cap: the config knob resolved against the backend
+    /// (0 = backend default; PJRT is structurally capped by its dense
+    /// batch width).
+    fn max_slots(&self) -> usize {
+        let native = self.dims.decode_batch;
+        let knob = self.cfg.sched.max_batch_size;
+        match (&self.backend, knob) {
+            (_, 0) => native,
+            (Backend::Pjrt(_), n) => n.min(native),
+            (Backend::Lab(_), n) => n,
+        }
+    }
+
+    /// Σ committed tokens over the active batch.
+    fn committed_total(&self) -> usize {
+        self.active
+            .iter()
+            .map(|s| s.committed_tokens(self.dims.max_seq))
+            .sum()
     }
 
     /// One scheduler iteration. Returns the number of active slots after
     /// the step (0 = fully idle).
     pub fn step(&mut self) -> Result<usize> {
-        self.admit_loop()?;
-        if self.slots.iter().any(|s| s.is_some()) {
+        self.admit_and_prefill()?;
+        if self.active.iter().any(|s| s.phase == Phase::Decoding) {
             self.decode_round()?;
         }
-        Ok(self.active_count())
+        self.retire_finished();
+        Ok(self.active.len())
     }
 
     /// Run until the queue and all slots drain; returns completions.
@@ -241,56 +385,158 @@ impl<'rt> Engine<'rt> {
 
     // ---- admission / prefill ------------------------------------------
 
-    fn admit_loop(&mut self) -> Result<()> {
-        let d = self.dims;
-        loop {
-            let free_slot = match self.slots.iter().position(|s| s.is_none()) {
-                Some(i) => i,
-                None => return Ok(()),
-            };
-            // Capacity check: a full-context sequence must fit in pages.
-            let need = SeqCache::pages_required(d.n_layers, d.max_seq, self.pool.page_tokens);
-            if self.pool.free_pages() < need {
-                return Ok(()); // backpressure: keep queued
+    /// Phase 1 of a step: spend this iteration's prefill budget — first
+    /// on in-flight chunked prefills (FCFS in admission order), then on
+    /// admissions, while the pure scheduler approves.
+    fn admit_and_prefill(&mut self) -> Result<()> {
+        let is_lab = matches!(self.backend, Backend::Lab(_));
+        let mut budget = self.cfg.sched.max_batch_prefill_tokens.max(1);
+
+        // (a) Continue in-flight chunked prefills.
+        for idx in 0..self.active.len() {
+            if budget == 0 {
+                break;
             }
-            let req = match self.router.pop() {
-                Some(r) => r,
-                None => return Ok(()),
-            };
-            let is_lab = matches!(self.backend, Backend::Lab(_));
-            // Copy-only bookkeeping for the (shouldn't-happen) rejection
-            // path — no per-admission prompt clone.
-            let (rid, arrival) = (req.id, req.arrival);
-            let admitted = Instant::now();
-            let active = if is_lab {
-                self.prefill_lab(req)
-            } else {
-                self.prefill_pjrt(req)
-            };
-            match active {
-                Ok(a) => self.slots[free_slot] = Some(a),
-                // Shouldn't happen — admission pre-reserves max_seq worth
-                // of pages — but if pool accounting ever drifts, reject
-                // this one request instead of killing the engine (and
-                // every other in-flight request) on an expected capacity
-                // condition.
-                Err(e) if is_kv_backpressure(&e) => {
-                    self.reject_evicted(rid, arrival, admitted)
+            if self.active[idx].phase != Phase::Prefilling {
+                continue;
+            }
+            let rem = self.active[idx].prompt_len - self.active[idx].prefilled;
+            let chunk = rem.min(budget);
+            budget -= chunk;
+            if let Err(e) = self.prefill_chunk_lab(idx, chunk) {
+                if is_kv_backpressure(&e) {
+                    self.active[idx].phase = Phase::Finished(FinishReason::Evicted);
+                } else {
+                    return Err(e);
                 }
-                Err(e) => return Err(e),
+            }
+        }
+
+        // (b) Admissions under the remaining budget.
+        loop {
+            let (ptoks, max_new) = match self.router.peek() {
+                // Prompt capacity differs per backend: the PJRT prefill
+                // module is one fixed shape, the lab chunks up to max_seq.
+                Some(h) => (
+                    h.prompt_tokens
+                        .min(if is_lab { self.dims.max_seq } else { self.dims.prefill_seq }),
+                    h.params.max_new_tokens,
+                ),
+                None => break,
+            };
+            let st = BatchState {
+                active_slots: self.active.len(),
+                max_slots: self.max_slots(),
+                committed_tokens: self.committed_total(),
+                prefill_budget_left: budget,
+                free_pages: self.pool.free_pages(),
+                page_tokens: self.pool.page_tokens,
+                n_layers: self.dims.n_layers,
+                max_seq: self.dims.max_seq,
+                chunkable: is_lab,
+            };
+            match scheduler::admission(&self.cfg.sched, &st, ptoks, max_new) {
+                SchedDecision::Admit { chunk } => {
+                    let req = self.router.pop().expect("peeked head vanished");
+                    budget = budget.saturating_sub(chunk);
+                    self.admit(req, chunk)?;
+                }
+                SchedDecision::DeferSlots => {
+                    self.metrics.deferrals.slots += 1;
+                    break;
+                }
+                SchedDecision::DeferTotalTokens => {
+                    self.metrics.deferrals.total_tokens += 1;
+                    break;
+                }
+                SchedDecision::DeferPrefillBudget => {
+                    self.metrics.deferrals.prefill_budget += 1;
+                    break;
+                }
+                SchedDecision::DeferKvPages => {
+                    self.metrics.deferrals.kv_pages += 1;
+                    break;
+                }
+                SchedDecision::RejectNeverFits => {
+                    // This request can never run on this pool; surface an
+                    // Evicted completion instead of spinning forever, and
+                    // keep trying the next head.
+                    let req = self.router.pop().expect("peeked head vanished");
+                    let now = Instant::now();
+                    self.reject_evicted(req.id, req.arrival, now);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit one popped request: seat the slot, run its first prefill
+    /// chunk (lab) or its whole fixed-shape prefill (PJRT). KV
+    /// exhaustion during that first forward rejects the request as
+    /// Evicted instead of killing the engine.
+    fn admit(&mut self, req: Request, first_chunk: usize) -> Result<()> {
+        let admitted = Instant::now();
+        let (rid, arrival) = (req.id, req.arrival);
+        if matches!(self.backend, Backend::Lab(_)) {
+            let d = self.dims;
+            let prompt_ids = tokenizer::encode_prompt(&req.prompt, d.max_seq, self.sp);
+            let prompt_len = prompt_ids.len();
+            let rng = request_rng(req.id);
+            self.active.push(ActiveRequest {
+                guard: Guard::new(self.cfg.policy).with_start(self.cfg.start_alloc),
+                cache: SeqCache::new(d.n_layers),
+                tokens: prompt_ids.clone(),
+                prompt_ids,
+                prefilled: 0,
+                prompt_len,
+                phase: Phase::Prefilling,
+                rng,
+                admitted,
+                prefill_done: None,
+                first_token: None,
+                last_token: None,
+                req,
+            });
+            let idx = self.active.len() - 1;
+            if let Err(e) = self.prefill_chunk_lab(idx, first_chunk) {
+                let mut s = self.active.remove(idx);
+                s.cache.release(&mut self.pool);
+                if is_kv_backpressure(&e) {
+                    self.reject_evicted(rid, arrival, admitted);
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            Ok(())
+        } else {
+            match self.prefill_pjrt(req, admitted) {
+                Ok(slot) => {
+                    self.active.push(slot);
+                    Ok(())
+                }
+                Err(e) if is_kv_backpressure(&e) => {
+                    self.reject_evicted(rid, arrival, admitted);
+                    Ok(())
+                }
+                Err(e) => Err(e),
             }
         }
     }
 
     /// Complete a request that could not be admitted (pool exhaustion at
-    /// prefill): an Evicted completion with correct time attribution —
-    /// queueing up to `admitted`, the failed forward as prefill time — so
-    /// the caller sees the outcome instead of a dead engine. The prompt
-    /// echo is empty (the request was consumed by the failed prefill; this
-    /// path trades the echo for not cloning every admitted prompt).
+    /// prefill, or a commitment larger than the whole pool): an Evicted
+    /// completion with correct time attribution — queueing up to
+    /// `admitted`, anything after as prefill time — so the caller sees
+    /// the outcome instead of a dead engine. The prompt echo is empty
+    /// (the request was consumed by the failed admission; this path
+    /// trades the echo for not cloning every admitted prompt).
     fn reject_evicted(&mut self, id: u64, arrival: Instant, admitted: Instant) {
         let now = Instant::now();
         self.metrics.requests_completed += 1;
+        self.events.push(StreamEvent::Finished {
+            request_id: id,
+            reason: FinishReason::Evicted,
+        });
         self.completions.push(Completion {
             id,
             prompt: String::new(),
@@ -307,38 +553,64 @@ impl<'rt> Engine<'rt> {
         });
     }
 
-    /// Wrap a finished prefill into the slot state (shared tail of both
-    /// backend prefill paths).
-    #[allow(clippy::too_many_arguments)]
-    fn activate(
-        req: Request,
-        guard: Guard,
-        cache: SeqCache,
-        tokens: Vec<u32>,
-        prompt_len: usize,
-        admitted: Instant,
-        prefill_done: Instant,
-    ) -> ActiveRequest {
-        let mut ar = ActiveRequest {
-            req,
-            guard,
-            cache,
-            tokens,
-            prompt_len,
-            phase: Phase::Decoding,
-            admitted,
-            prefill_done: Some(prefill_done),
-            first_token: Some(Instant::now()),
+    /// Run one prefill chunk of slot `idx` through the lab model,
+    /// walking the guard's fallback chain on a trip (the chunk is
+    /// functional in (ids, range, cache-prefix) — each replay rewrites
+    /// the same rows under the rescue allocation). On the final chunk:
+    /// sample the first token from the last prompt row's logits, emit
+    /// it, and move the slot to `Decoding`.
+    fn prefill_chunk_lab(&mut self, idx: usize, chunk: usize) -> Result<()> {
+        let d = self.dims;
+        let eos = self.sp.eos;
+        let Engine {
+            backend,
+            pool,
+            active,
+            metrics,
+            events,
+            ..
+        } = self;
+        let Backend::Lab(model) = backend else {
+            unreachable!("chunked prefill on a PJRT engine")
         };
-        // Immediately-finished cases (max_new_tokens == 0 is nonsensical
-        // but must not wedge the slot).
-        if ar.req.params.max_new_tokens == 0 {
-            ar.phase = Phase::Finished(FinishReason::MaxTokens);
+        let s = &mut active[idx];
+        let start = s.prefilled;
+        let end = (start + chunk).min(s.prompt_len);
+        debug_assert!(end > start, "zero-length prefill chunk");
+        let alloc =
+            Allocation::parse(s.guard.allocation()).expect("guard allocation maps to the lab");
+        let (mut logits, mut sig) = model
+            .prefill_chunk(alloc, &s.prompt_ids, start, end, &mut s.cache, pool)
+            .context("lab prefill chunk")?;
+        let mut overflowed = false;
+        while observe_guard(&mut s.guard, &sig, metrics) {
+            overflowed = true;
+            let rescue = Allocation::parse(s.guard.allocation())
+                .expect("guard allocation maps to the lab");
+            let (l2, s2) = model
+                .prefill_chunk(rescue, &s.prompt_ids, start, end, &mut s.cache, pool)
+                .context("lab prefill chunk replay")?;
+            logits = l2;
+            sig = s2;
         }
-        ar
+        if overflowed {
+            metrics.overflow_steps += 1;
+        }
+        metrics.prefill_tokens += (end - start) as u64;
+        metrics.prefill_chunks += 1;
+        s.prefilled = end;
+        if end == s.prompt_len {
+            s.prefill_done = Some(Instant::now());
+            s.phase = Phase::Decoding;
+            let row = logits.as_ref().expect("final chunk returns logits");
+            let tok = sample(row, s.req.params.sampling, &mut s.rng);
+            emit_token(s, tok, metrics, events);
+            apply_stop_rules(s, tok, d.max_seq, eos);
+        }
+        Ok(())
     }
 
-    fn prefill_pjrt(&mut self, req: Request) -> Result<ActiveRequest> {
+    fn prefill_pjrt(&mut self, req: Request, admitted: Instant) -> Result<ActiveRequest> {
         let d = self.dims;
         let Backend::Pjrt(rt) = &self.backend else {
             unreachable!("prefill_pjrt on a lab engine")
@@ -348,7 +620,6 @@ impl<'rt> Engine<'rt> {
         ids.truncate(d.prefill_seq);
         let mut guard = Guard::new(self.cfg.policy).with_start(self.cfg.start_alloc);
 
-        let admitted = Instant::now();
         let mut out = rt
             .prefill(guard.allocation(), &ids, n)
             .context("prefill")?;
@@ -367,6 +638,7 @@ impl<'rt> Engine<'rt> {
         }
         let prefill_done = Instant::now();
         self.metrics.prefill_tokens += n as u64;
+        self.metrics.prefill_chunks += 1;
 
         // Seed the paged cache from the dense prefill output. On any
         // failure the partially-grown cache must hand its pages back —
@@ -397,101 +669,36 @@ impl<'rt> Engine<'rt> {
 
         // First generated token comes from the prompt's last logits row.
         let last_row = &out.logits[(n - 1) * v..n * v];
-        let tok = sample(last_row, req.params.sampling, &mut self.rng);
-        let mut tokens: Vec<u32> = ids[..n].to_vec();
-        tokens.push(tok);
-        Ok(Self::activate(
-            req,
+        let mut slot = ActiveRequest {
             guard,
             cache,
-            tokens,
-            n,
+            tokens: ids[..n].to_vec(),
+            prompt_ids: ids[..n].to_vec(),
+            prefilled: n,
+            prompt_len: n,
+            phase: Phase::Decoding,
+            rng: request_rng(req.id),
             admitted,
-            prefill_done,
-        ))
-    }
-
-    fn prefill_lab(&mut self, req: Request) -> Result<ActiveRequest> {
-        let d = self.dims;
-        let (ids, n) = tokenizer::encode(&req.prompt, d.prefill_seq, self.sp);
-        let mut guard = Guard::new(self.cfg.policy).with_start(self.cfg.start_alloc);
-
-        let admitted = Instant::now();
-        let Backend::Lab(model) = &self.backend else {
-            unreachable!("prefill_lab on a PJRT engine")
+            prefill_done: Some(prefill_done),
+            first_token: None,
+            last_token: None,
+            req,
         };
-        let alloc =
-            Allocation::parse(guard.allocation()).expect("guard allocation maps to the lab");
-        let mut out = model.prefill(alloc, &ids, n).context("lab prefill")?;
-        // Guard on the kernels' pre-store telemetry (max |S| / overflow
-        // events at the score GEMM) — trouble is visible before any NaN
-        // reaches the logits. Replays walk the guard's fallback chain:
-        // an FP8 start rescues to Pasa8 first and only escalates to full
-        // FP16 PASA if the shifted store still trips (the loop is bounded
-        // by the chain length — observe_signal returns false once the
-        // chain is exhausted). Like the decode path, the prefill counts
-        // at most one overflow step no matter how many chain stages the
-        // rescue walked.
-        let mut overflowed_step = false;
-        while observe_guard(&mut guard, &out.signal, &mut self.metrics) {
-            overflowed_step = true;
-            let rescue = Allocation::parse(guard.allocation())
-                .expect("guard allocation maps to the lab");
-            out = model
-                .prefill(rescue, &ids, n)
-                .context("lab prefill replay")?;
-        }
-        if overflowed_step {
-            self.metrics.overflow_steps += 1;
-        }
-        let prefill_done = Instant::now();
-        self.metrics.prefill_tokens += n as u64;
-
-        // Seed the paged cache; release the partial grow on failure (see
-        // prefill_pjrt).
-        let mut cache = SeqCache::new(d.n_layers);
-        let seeded = (|| -> Result<()> {
-            cache.ensure_capacity(&mut self.pool, n)?;
-            for l in 0..d.n_layers {
-                for p in 0..n {
-                    cache.write_row(
-                        &mut self.pool,
-                        l,
-                        p,
-                        out.k_rows[l].row(p),
-                        out.v_rows[l].row(p),
-                    )?;
-                }
-            }
-            Ok(())
-        })();
-        if let Err(e) = seeded {
-            cache.release(&mut self.pool);
-            return Err(e.context("prefill cache seeding"));
-        }
-
-        let v = d.vocab_size;
-        let last_row = &out.logits[(n - 1) * v..n * v];
-        let tok = sample(last_row, req.params.sampling, &mut self.rng);
-        let mut tokens: Vec<u32> = ids[..n].to_vec();
-        tokens.push(tok);
-        Ok(Self::activate(
-            req,
-            guard,
-            cache,
-            tokens,
-            n,
-            admitted,
-            prefill_done,
-        ))
+        let tok = sample(last_row, slot.req.params.sampling, &mut slot.rng);
+        emit_token(&mut slot, tok, &mut self.metrics, &mut self.events);
+        apply_stop_rules(&mut slot, tok, d.max_seq, self.sp.eos);
+        Ok(slot)
     }
 
     // ---- decode --------------------------------------------------------
 
-    /// Distinct allocations among active slots this round.
+    /// Distinct allocations among decoding slots this round.
     fn allocation_groups(&self) -> Vec<&'static str> {
         let mut out: Vec<&'static str> = Vec::new();
-        for s in self.slots.iter().flatten() {
+        for s in &self.active {
+            if s.phase != Phase::Decoding {
+                continue;
+            }
             let a = s.guard.allocation();
             if !out.contains(&a) {
                 out.push(a);
@@ -502,111 +709,88 @@ impl<'rt> Engine<'rt> {
 
     fn decode_round(&mut self) -> Result<()> {
         if matches!(self.backend, Backend::Lab(_)) {
-            self.decode_round_lab()?;
+            self.decode_round_lab()
         } else {
             for alloc in self.allocation_groups() {
                 self.decode_group_pjrt(alloc)?;
             }
+            Ok(())
         }
-        // Retire finished requests.
-        let b = self.slots.len();
-        for i in 0..b {
-            let done = matches!(
-                self.slots[i].as_ref().map(|s| s.phase),
-                Some(Phase::Finished(_))
-            );
-            if done {
-                let mut ar = self.slots[i].take().unwrap();
+    }
+
+    /// Retire finished slots: release pages, emit the completion, compact
+    /// the batch (`filter`). The freed budget and pages are visible to
+    /// the *next* step's admission (`concatenate`).
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if matches!(self.active[i].phase, Phase::Finished(_)) {
+                let mut ar = self.active.remove(i);
                 ar.cache.release(&mut self.pool);
                 self.finish(ar);
+            } else {
+                i += 1;
             }
         }
-        Ok(())
     }
 
-    /// Advance one slot after a decode step: sample, extend, check stop
-    /// conditions. Free function over the slot so the backends' disjoint
-    /// borrows stay simple.
-    fn advance_slot(
-        s: &mut ActiveRequest,
-        logits_row: &[f32],
-        max_seq: usize,
-        eos: u32,
-        rng: &mut Pcg64,
-        metrics: &mut Metrics,
-    ) {
-        let tok = sample(logits_row, s.req.params.sampling, rng);
-        if s.first_token.is_none() {
-            s.first_token = Some(Instant::now());
-        }
-        s.tokens.push(tok);
-        metrics.tokens_generated += 1;
-
-        let generated = s.tokens.len() - s.prompt_len;
-        if s.req.params.stop_at_eos && tok == eos {
-            s.phase = Phase::Finished(FinishReason::Eos);
-        } else if generated >= s.req.params.max_new_tokens {
-            s.phase = Phase::Finished(FinishReason::MaxTokens);
-        } else if s.tokens.len() >= max_seq {
-            s.phase = Phase::Finished(FinishReason::ContextFull);
-        }
-    }
-
-    /// Lab-backend decode: the active slots' paged decode steps fan out
+    /// Lab-backend decode: the decoding slots' paged decode steps fan out
     /// over the persistent worker pool (`O(len_tokens)` page gathers each,
-    /// kernel telemetry into the guard, per-slot PASA replay on a trip).
+    /// kernel telemetry into the guard, per-slot chain replay on a trip).
     ///
     /// Three phases keep the shared-pool writes sound and the results
-    /// bit-identical to the old sequential loop:
+    /// bit-identical to a sequential loop:
     /// 1. **prepare** (sequential, exclusive pool): grow each slot's
     ///    capacity and privatize the pages its step will write
     ///    ([`SeqCache::prepare_step`]); pool exhaustion here is per-slot
     ///    backpressure (evict), never a crash.
     /// 2. **compute** (parallel, shared pool): each runnable slot's step
-    ///    — including any guard-triggered PASA replay — runs as a worker
+    ///    — including any guard-triggered chain replay — runs as a worker
     ///    pool tile via [`LabModel::decode_step_prepared`]; slots own
     ///    their caches, writes land only in their privatized pages.
-    /// 3. **fold** (sequential, in slot order): metrics, then sampling —
-    ///    so the RNG stream matches the sequential implementation
-    ///    token for token.
+    /// 3. **fold** (sequential, in slot order): metrics, then sampling
+    ///    from each slot's own RNG — deterministic regardless of worker
+    ///    interleaving.
     fn decode_round_lab(&mut self) -> Result<()> {
         let d = self.dims;
-        let b = self.slots.len();
-        let members: Vec<usize> = (0..b)
-            .filter(|&i| {
-                matches!(
-                    self.slots[i].as_ref().map(|s| s.phase),
-                    Some(Phase::Decoding)
-                )
-            })
-            .collect();
-        if members.is_empty() {
-            return Ok(());
-        }
-        self.metrics.decode_batch_occupancy.push(members.len());
-
         // Phase 1: allocate/privatize under exclusive pool access.
-        let mut runnable: Vec<usize> = Vec::with_capacity(members.len());
-        for &i in &members {
-            let s = self.slots[i].as_mut().unwrap();
-            let pos = s.tokens.len() - 1;
-            match s.cache.prepare_step(&mut self.pool, pos) {
-                Ok(()) => runnable.push(i),
-                // KV pool exhausted: backpressure, not a crash — evict the
-                // slot, its pages free up at retirement.
-                Err(e) if is_kv_backpressure(&e) => {
-                    s.phase = Phase::Finished(FinishReason::Evicted);
+        {
+            let Engine { active, pool, .. } = self;
+            for s in active.iter_mut() {
+                if s.phase != Phase::Decoding {
+                    continue;
                 }
-                Err(e) => return Err(e.context("lab decode prepare")),
+                let pos = s.tokens.len() - 1;
+                match s.cache.prepare_step(pool, pos) {
+                    Ok(()) => {}
+                    // KV pool exhausted: backpressure, not a crash — evict
+                    // the slot, its pages free up at retirement.
+                    Err(e) if is_kv_backpressure(&e) => {
+                        s.phase = Phase::Finished(FinishReason::Evicted);
+                    }
+                    Err(e) => return Err(e.context("lab decode prepare")),
+                }
             }
         }
-        if runnable.is_empty() {
+        let runnable: Vec<bool> = self
+            .active
+            .iter()
+            .map(|s| s.phase == Phase::Decoding)
+            .collect();
+        let run_idx: Vec<usize> = runnable
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &r)| r.then_some(i))
+            .collect();
+        if run_idx.is_empty() {
             return Ok(());
         }
+        self.metrics.decode_batch_occupancy.push(run_idx.len());
 
-        // Phase 2: the compute steps as pool tiles. Each task takes its
-        // slot's state out of the table (so it owns the cache and guard)
+        // Phase 2: the compute steps as pool tiles. The whole slot vector
+        // moves into the task table (each task owns its cache and guard)
         // and shares the model and the page pool read-mostly.
+        #[derive(Default)]
         struct StepOut {
             logits: Vec<f32>,
             /// One wall-clock sample per executed step (first run + every
@@ -616,22 +800,10 @@ impl<'rt> Engine<'rt> {
             switch_delta: u64,
             err: Option<anyhow::Error>,
         }
-        let tasks: Vec<Mutex<(usize, ActiveRequest, StepOut)>> = runnable
-            .iter()
-            .map(|&i| {
-                let ar = self.slots[i].take().unwrap();
-                Mutex::new((
-                    i,
-                    ar,
-                    StepOut {
-                        logits: Vec::new(),
-                        latencies: Vec::new(),
-                        overflowed: false,
-                        switch_delta: 0,
-                        err: None,
-                    },
-                ))
-            })
+        let slots = std::mem::take(&mut self.active);
+        let tasks: Vec<Mutex<(ActiveRequest, StepOut)>> = slots
+            .into_iter()
+            .map(|s| Mutex::new((s, StepOut::default())))
             .collect();
         {
             let Backend::Lab(model) = &self.backend else {
@@ -640,9 +812,10 @@ impl<'rt> Engine<'rt> {
             let model: &LabModel = model;
             let pool_ref = &self.pool;
             let tasks_ref = &tasks;
-            crate::pool::global().run_tiles(tasks_ref.len(), |t| {
-                let mut slot = tasks_ref[t].lock().unwrap();
-                let (_, ar, out) = &mut *slot;
+            let run_ref = &run_idx;
+            crate::pool::global().run_tiles(run_ref.len(), |t| {
+                let mut slot = tasks_ref[run_ref[t]].lock().unwrap();
+                let (ar, out) = &mut *slot;
                 let alloc = Allocation::parse(ar.guard.allocation())
                     .expect("guard allocation maps to the lab");
                 let tok = *ar.tokens.last().unwrap();
@@ -695,21 +868,31 @@ impl<'rt> Engine<'rt> {
             });
         }
 
-        // Phase 3: restore slots, fold metrics, sample in slot order.
+        // Phase 3: restore the slot vector in order, fold metrics, sample.
+        let eos = self.sp.eos;
         let mut failure: Option<anyhow::Error> = None;
-        for task in tasks {
-            let (i, ar, out) = task.into_inner().unwrap();
-            self.slots[i] = Some(ar);
+        let Engine {
+            active,
+            metrics,
+            events,
+            ..
+        } = self;
+        for (i, task) in tasks.into_iter().enumerate() {
+            let (ar, out) = task.into_inner().unwrap();
+            active.push(ar);
+            if !runnable[i] {
+                continue;
+            }
+            let s = active.last_mut().unwrap();
             for &lat in &out.latencies {
-                self.metrics.decode_steps += 1;
+                metrics.decode_steps += 1;
                 // Replayed steps are real serving latency: record them.
-                self.metrics.step_latency.record(lat);
+                metrics.step_latency.record(lat);
             }
             if out.overflowed {
-                self.metrics.overflow_steps += 1;
+                metrics.overflow_steps += 1;
             }
-            self.metrics.guard_switches += out.switch_delta;
-            let s = self.slots[i].as_mut().unwrap();
+            metrics.guard_switches += out.switch_delta;
             if let Some(e) = out.err {
                 if is_kv_backpressure(&e) {
                     s.phase = Phase::Finished(FinishReason::Evicted);
@@ -718,14 +901,7 @@ impl<'rt> Engine<'rt> {
                 }
                 continue;
             }
-            Self::advance_slot(
-                s,
-                &out.logits,
-                d.max_seq,
-                self.sp.eos,
-                &mut self.rng,
-                &mut self.metrics,
-            );
+            advance_slot(s, &out.logits, d.max_seq, eos, metrics, events);
         }
         if let Some(e) = failure {
             return Err(e);
@@ -733,9 +909,11 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// PJRT-backend decode: one batched dense step for every active slot
-    /// on `alloc` (the compiled decode module consumes dense caches, so
-    /// this path pays the `fill_dense` assembly and sniffs logits).
+    /// PJRT-backend decode: one batched dense step for every decoding
+    /// slot on `alloc` (the compiled decode module consumes dense caches,
+    /// so this path pays the `fill_dense` assembly and sniffs logits).
+    /// Batch lane = slot index in `active` — the admission path caps the
+    /// batch at the module's dense width.
     fn decode_group_pjrt(&mut self, alloc: &'static str) -> Result<()> {
         let d = self.dims;
         let b = d.decode_batch;
@@ -747,17 +925,16 @@ impl<'rt> Engine<'rt> {
         };
         let rt = *rt;
 
-        let members: Vec<usize> = (0..b)
+        let members: Vec<usize> = (0..self.active.len())
             .filter(|&i| {
-                self.slots[i]
-                    .as_ref()
-                    .map(|s| s.guard.allocation() == alloc && s.phase == Phase::Decoding)
-                    .unwrap_or(false)
+                let s = &self.active[i];
+                s.guard.allocation() == alloc && s.phase == Phase::Decoding
             })
             .collect();
         if members.is_empty() {
             return Ok(());
         }
+        debug_assert!(self.active.len() <= b, "PJRT batch wider than its module");
         self.metrics.decode_batch_occupancy.push(members.len());
 
         // Assemble the dense batch caches from the paged pool.
@@ -766,7 +943,7 @@ impl<'rt> Engine<'rt> {
         let mut tokens = vec![self.sp.pad as i32; b];
         let mut pos = vec![0i32; b];
         for &i in &members {
-            let s = self.slots[i].as_ref().unwrap();
+            let s = &self.active[i];
             let p = s.tokens.len() - 1; // position of the token being fed
             tokens[i] = *s.tokens.last().unwrap() as i32;
             pos[i] = p as i32;
@@ -799,7 +976,7 @@ impl<'rt> Engine<'rt> {
         let mut replay = false;
         for &i in &members {
             let sig = GuardSignal::from_logits(&logits[i * v..(i + 1) * v]);
-            let s = self.slots[i].as_mut().unwrap();
+            let s = &mut self.active[i];
             if observe_guard(&mut s.guard, &sig, &mut self.metrics) {
                 replay = true;
             }
@@ -828,7 +1005,7 @@ impl<'rt> Engine<'rt> {
         // Write back the new KV row, sample, advance. The decode module
         // returns only the new rows, shaped (L, B, W).
         for &i in &members {
-            let s = self.slots[i].as_mut().unwrap();
+            let s = &mut self.active[i];
             let p = pos[i] as usize;
             let mut wrote = true;
             if let Err(e) = s.cache.ensure_capacity(&mut self.pool, p + 1) {
@@ -861,13 +1038,13 @@ impl<'rt> Engine<'rt> {
                 continue;
             }
             let row = &logits[i * v..(i + 1) * v];
-            Self::advance_slot(
+            advance_slot(
                 s,
                 row,
                 d.max_seq,
                 self.sp.eos,
-                &mut self.rng,
                 &mut self.metrics,
+                &mut self.events,
             );
         }
         Ok(())
@@ -895,6 +1072,10 @@ impl<'rt> Engine<'rt> {
         self.metrics.ttft.record(ttft);
         self.metrics.total_latency.record(total);
         self.metrics.requests_completed += 1;
+        self.events.push(StreamEvent::Finished {
+            request_id: ar.req.id,
+            reason,
+        });
         let gen_ids: Vec<u32> = ar.tokens[ar.prompt_len..].to_vec();
         self.completions.push(Completion {
             id: ar.req.id,

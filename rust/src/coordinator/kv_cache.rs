@@ -405,9 +405,28 @@ impl SeqCache {
     /// [`crate::attention::AttentionRequest::run_with_kv`] — `len_tokens`
     /// worth of rows gathered page-by-page, no dense assembly.
     pub fn kv_views<'a>(&'a self, pool: &'a KvPool, layer: usize) -> (KvView<'a>, KvView<'a>) {
+        self.kv_views_at(pool, layer, self.len_tokens)
+    }
+
+    /// [`Self::kv_views`] fenced at an explicit valid length `len ≤
+    /// len_tokens`. Chunked prefill needs this: a chunk writes all its
+    /// K/V rows for layer *l* and then attends each query row against
+    /// only the rows at positions `≤` its own — but `len_tokens` is
+    /// cache-wide (the max over every layer's writes), so by the time
+    /// layer *l+1* runs, `len_tokens` already covers the whole chunk.
+    /// The explicit fence restores the per-row causal prefix, which is
+    /// what makes chunk results independent of where chunk boundaries
+    /// fall.
+    pub fn kv_views_at<'a>(
+        &'a self,
+        pool: &'a KvPool,
+        layer: usize,
+        len: usize,
+    ) -> (KvView<'a>, KvView<'a>) {
+        debug_assert!(len <= self.len_tokens, "view fence {len} past {}", self.len_tokens);
         (
-            KvView::paged(self.page_ids(layer, false), pool, self.len_tokens),
-            KvView::paged(self.page_ids(layer, true), pool, self.len_tokens),
+            KvView::paged(self.page_ids(layer, false), pool, len),
+            KvView::paged(self.page_ids(layer, true), pool, len),
         )
     }
 

@@ -1,14 +1,37 @@
 //! Serving metrics (S11): latency histograms, token counters, overflow
-//! switches — what the E2E example and bench harness report.
+//! switches, scheduler deferral counters — what the E2E example and
+//! bench harness report.
+//!
+//! Histograms are bounded-memory: bucket counts are exact, and exact
+//! percentiles come from a fixed-size **reservoir** (Algorithm R, seeded
+//! — deterministic across runs) instead of an unbounded sample vector.
+//! A serving run that records millions of step latencies retains at most
+//! [`RESERVOIR_CAP`] samples per histogram, and percentile queries sort
+//! a bounded copy — the old implementation cloned and re-sorted an
+//! ever-growing vector on *every* `percentile()` call.
 
+use crate::workloads::Pcg64;
 use std::time::Instant;
 
-/// Streaming histogram with fixed log-spaced latency buckets (seconds).
+/// Max retained samples per histogram. Below this count percentiles are
+/// exact; above it they are reservoir estimates over a uniform sample.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Streaming histogram: fixed log-spaced buckets (seconds) with exact
+/// counts/mean/max, plus a bounded reservoir for percentile queries.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     bounds: Vec<f64>,
     counts: Vec<u64>,
-    samples: Vec<f64>, // kept for exact percentiles at report time
+    /// Uniform reservoir sample of everything recorded (≤ RESERVOIR_CAP).
+    samples: Vec<f64>,
+    seen: u64,
+    sum: f64,
+    max: f64,
+    /// Seeded reservoir RNG — measurement plumbing only. Scheduler
+    /// decisions never read it, and a fixed seed keeps replays
+    /// deterministic.
+    rng: Pcg64,
 }
 
 impl Default for Histogram {
@@ -24,6 +47,10 @@ impl Histogram {
             counts: vec![0; bounds.len() + 1],
             bounds,
             samples: Vec::new(),
+            seen: 0,
+            sum: 0.0,
+            max: 0.0,
+            rng: Pcg64::new(0x4e57, 0x0b5e),
         }
     }
 
@@ -34,33 +61,97 @@ impl Histogram {
             .position(|&b| v <= b)
             .unwrap_or(self.bounds.len());
         self.counts[idx] += 1;
-        self.samples.push(v);
+        self.seen += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        // Algorithm R: the j-th record replaces a reservoir entry with
+        // probability CAP/j, keeping the reservoir a uniform sample.
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen as usize);
+            if j < RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
     }
 
+    /// Total values recorded (not the retained sample count).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
+    /// Exact running mean over everything recorded.
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.seen as f64
     }
 
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
+    /// Exact running max over everything recorded.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// The retained reservoir, sorted — one bounded sort, shared by every
+    /// percentile a report wants.
+    fn sorted_samples(&self) -> Vec<f64> {
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        s
     }
 
-    pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(0.0, f64::max)
+    fn percentile_of(sorted: &[f64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
     }
+
+    /// One percentile (exact below [`RESERVOIR_CAP`] records, reservoir
+    /// estimate above). Cost is bounded by the reservoir size regardless
+    /// of how much was recorded; for several percentiles at once prefer
+    /// [`Histogram::summary`], which sorts once.
+    pub fn percentile(&self, p: f64) -> f64 {
+        Self::percentile_of(&self.sorted_samples(), p)
+    }
+
+    /// Sort-once summary for reports.
+    pub fn summary(&self) -> HistSummary {
+        let sorted = self.sorted_samples();
+        HistSummary {
+            count: self.count(),
+            mean: self.mean(),
+            p50: Self::percentile_of(&sorted, 50.0),
+            p95: Self::percentile_of(&sorted, 95.0),
+            p99: Self::percentile_of(&sorted, 99.0),
+            max: self.max(),
+        }
+    }
+}
+
+/// Percentile snapshot of one histogram (see [`Histogram::summary`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Why admissions were deferred, by scheduler reason — the observability
+/// face of `SchedDecision` (each counter increments when a step's
+/// admission loop stops for that reason).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedDeferrals {
+    pub slots: u64,
+    pub total_tokens: u64,
+    pub prefill_budget: u64,
+    pub kv_pages: u64,
 }
 
 /// Aggregate serving metrics.
@@ -70,11 +161,19 @@ pub struct Metrics {
     pub requests_completed: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
+    /// Prefill chunks executed (≥ 1 per request on the lab backend; a
+    /// chunked long prompt contributes several).
+    pub prefill_chunks: u64,
     pub decode_steps: u64,
     pub decode_batch_occupancy: Vec<usize>,
     pub guard_switches: u64,
     pub overflow_steps: u64,
-    pub ttft: Histogram,       // time to first token
+    pub deferrals: SchedDeferrals,
+    pub ttft: Histogram, // time to first token (arrival → first sample)
+    /// Inter-token latency: gap between consecutive sampled tokens of the
+    /// same request (the streaming smoothness metric; a chunked prefill
+    /// admitted mid-flight shows up here if it stalls decodes).
+    pub itl: Histogram,
     pub total_latency: Histogram,
     pub step_latency: Histogram,
 }
@@ -92,11 +191,14 @@ impl Metrics {
             requests_completed: 0,
             tokens_generated: 0,
             prefill_tokens: 0,
+            prefill_chunks: 0,
             decode_steps: 0,
             decode_batch_occupancy: Vec::new(),
             guard_switches: 0,
             overflow_steps: 0,
+            deferrals: SchedDeferrals::default(),
             ttft: Histogram::new(),
+            itl: Histogram::new(),
             total_latency: Histogram::new(),
             step_latency: Histogram::new(),
         }
@@ -117,23 +219,37 @@ impl Metrics {
 
     /// Human-readable serving report.
     pub fn report(&self) -> String {
+        let ttft = self.ttft.summary();
+        let lat = self.total_latency.summary();
+        let itl = self.itl.summary();
+        let d = &self.deferrals;
         format!(
-            "requests={} tokens={} prefill_tokens={} steps={} occ={:.2} \
-             tok/s={:.1} ttft_mean={:.3}s ttft_p95={:.3}s lat_mean={:.3}s \
-             lat_p95={:.3}s step_mean={:.4}s guard_switches={} overflow_steps={}",
+            "requests={} tokens={} prefill_tokens={} prefill_chunks={} steps={} occ={:.2} \
+             tok/s={:.1} ttft_mean={:.3}s ttft_p50={:.3}s ttft_p95={:.3}s \
+             itl_mean={:.4}s itl_p95={:.4}s lat_mean={:.3}s \
+             lat_p95={:.3}s step_mean={:.4}s guard_switches={} overflow_steps={} \
+             defers[slots={} tokens={} prefill={} kv={}]",
             self.requests_completed,
             self.tokens_generated,
             self.prefill_tokens,
+            self.prefill_chunks,
             self.decode_steps,
             self.mean_batch_occupancy(),
             self.throughput_tok_s(),
-            self.ttft.mean(),
-            self.ttft.percentile(95.0),
-            self.total_latency.mean(),
-            self.total_latency.percentile(95.0),
+            ttft.mean,
+            ttft.p50,
+            ttft.p95,
+            itl.mean,
+            itl.p95,
+            lat.mean,
+            lat.p95,
             self.step_latency.mean(),
             self.guard_switches,
             self.overflow_steps,
+            d.slots,
+            d.total_tokens,
+            d.prefill_budget,
+            d.kv_pages,
         )
     }
 }
@@ -156,14 +272,53 @@ mod tests {
     }
 
     #[test]
+    fn reservoir_bounds_memory_under_sustained_load() {
+        // 100k records: retained samples stay capped, exact stats stay
+        // exact, and the reservoir percentile lands near the true one.
+        let mut h = Histogram::new();
+        let n = 100_000;
+        for i in 1..=n {
+            h.record(i as f64 / n as f64);
+        }
+        assert_eq!(h.count(), n);
+        assert!(h.samples.len() <= RESERVOIR_CAP);
+        assert!((h.mean() - (n + 1) as f64 / (2.0 * n as f64)).abs() < 1e-9);
+        assert_eq!(h.max(), 1.0);
+        let p95 = h.percentile(95.0);
+        assert!((p95 - 0.95).abs() < 0.05, "reservoir p95 drifted: {p95}");
+        // Deterministic: a second identically-fed histogram agrees bit-wise.
+        let mut h2 = Histogram::new();
+        for i in 1..=n {
+            h2.record(i as f64 / n as f64);
+        }
+        assert_eq!(h.percentile(95.0), h2.percentile(95.0));
+    }
+
+    #[test]
+    fn summary_matches_individual_queries() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.p50, h.percentile(50.0));
+        assert_eq!(s.p95, h.percentile(95.0));
+        assert_eq!(s.max, 1000.0);
+    }
+
+    #[test]
     fn metrics_report_nonempty() {
         let mut m = Metrics::new();
         m.requests_completed = 3;
         m.tokens_generated = 42;
         m.decode_batch_occupancy = vec![2, 4, 3];
         m.ttft.record(0.1);
+        m.itl.record(0.01);
         let r = m.report();
         assert!(r.contains("requests=3"));
         assert!(r.contains("occ=3.00"));
+        assert!(r.contains("itl_mean="));
+        assert!(r.contains("defers["));
     }
 }

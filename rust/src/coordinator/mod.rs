@@ -7,10 +7,14 @@ pub mod kv_cache;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 
 pub use engine::{Backend, Engine, EngineConfig};
 pub use guard::{Guard, GuardPolicy, GuardSignal, DEFAULT_PREEMPTIVE_FRAC};
 pub use kv_cache::{KvPool, SeqCache};
-pub use metrics::{Histogram, Metrics};
-pub use request::{Completion, FinishReason, GenParams, Phase, Priority, Request};
+pub use metrics::{HistSummary, Histogram, Metrics, SchedDeferrals};
+pub use request::{
+    Completion, FinishReason, GenParams, Phase, Priority, Request, StreamEvent, TokenEvent,
+};
 pub use router::{Admission, Router};
+pub use scheduler::{BatchState, SchedDecision, SchedulerConfig};

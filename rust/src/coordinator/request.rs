@@ -1,6 +1,6 @@
 //! Request model (S11): what flows through the router → scheduler → engine.
 
-use crate::model::Sampling;
+use crate::model::{tokenizer, Sampling};
 use std::time::Instant;
 
 pub type RequestId = u64;
@@ -61,6 +61,10 @@ pub enum Phase {
 pub struct Request {
     pub id: RequestId,
     pub prompt: String,
+    /// Tokenized prompt length (BOS + bytes), computed once at
+    /// construction — the currency every admission and scheduling
+    /// decision budgets in. Never `prompt.len()` bytes.
+    pub prompt_tokens: usize,
     pub params: GenParams,
     pub priority: Priority,
     pub arrival: Instant,
@@ -68,9 +72,11 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: RequestId, prompt: impl Into<String>) -> Request {
+        let prompt = prompt.into();
         Request {
             id,
-            prompt: prompt.into(),
+            prompt_tokens: tokenizer::token_len(&prompt),
+            prompt,
             params: GenParams::default(),
             priority: Priority::Normal,
             arrival: Instant::now(),
@@ -106,4 +112,33 @@ pub struct Completion {
     pub allocation: String,
     /// How many times the overflow guard switched this request to PASA.
     pub guard_switches: usize,
+}
+
+/// One generated token of an in-flight request, emitted the moment it is
+/// sampled — the per-token streaming unit. Timestamps are observational
+/// (they feed the TTFT/ITL histograms); the scheduler never reads them.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenEvent {
+    pub request_id: RequestId,
+    pub token: u32,
+    /// 0-based index within the request's *generated* stream.
+    pub index: usize,
+    /// Absolute context position (prompt_len + index).
+    pub position: usize,
+    pub emitted_at: Instant,
+}
+
+/// The engine's streaming output: interleaved per-token events and
+/// stream-close markers, drained with `Engine::take_events`. Every token
+/// that later appears in a `Completion` was first emitted here, in order
+/// — the stream is the completion, delivered incrementally.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One sampled token of an in-flight request.
+    Token(TokenEvent),
+    /// The request's stream closed (a `Completion` is available).
+    Finished {
+        request_id: RequestId,
+        reason: FinishReason,
+    },
 }

@@ -1,0 +1,287 @@
+//! Token-budget continuous-batching scheduler (S11): the *pure* decision
+//! core behind `Engine::step`.
+//!
+//! Every admission decision is a function of `(SchedulerConfig,
+//! BatchState, candidate)` — integers derived from token counts, slot
+//! counts and free pages. No wall clock, no RNG, no hidden state: replay
+//! the same arrival trace and the scheduler makes the same decisions in
+//! the same order, which is what makes the engine's token-identity
+//! certification (batched ≡ sequential, bit for bit) meaningful.
+//!
+//! The model is TGI's `batching_task` distilled to its budget arithmetic:
+//!
+//! * `max_batch_prefill_tokens` — prompt tokens the engine may prefill
+//!   per scheduler iteration. In-flight chunked prefills draw from it
+//!   first (FCFS), admissions spend the remainder. A prompt longer than
+//!   the leftover budget still admits (lab backend) — it just prefills
+//!   across several iterations, one budget-sized chunk per round,
+//!   interleaved with the in-flight decode rounds so long prompts never
+//!   stall short ones.
+//! * `max_batch_total_tokens` — ceiling on Σ committed tokens over the
+//!   active batch, where a request commits `min(prompt + max_new,
+//!   max_seq)` tokens up front. This is the KV-residency budget.
+//! * `waiting_served_ratio` — bounds starvation: it maps to the router's
+//!   `max_bypass` (`ceil(ratio)`), the number of higher-priority pops a
+//!   waiting head tolerates before it is force-served.
+//! * `max_batch_size` — slot-count cap (0 = the backend's native width:
+//!   `decode_batch` on PJRT, whose dense tensors are that wide; the lab
+//!   backend has no structural limit so 0 means `decode_batch` there too,
+//!   keeping the two backends comparable by default).
+//!
+//! An empty batch always admits the queue head (no budget can deadlock
+//! an idle engine); the one exception is a request whose KV pages can
+//! never fit, which the engine rejects outright instead of spinning.
+
+/// Scheduler knobs (see module docs). All token-denominated.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Prompt tokens prefillable per engine step (chunk budget).
+    pub max_batch_prefill_tokens: usize,
+    /// Ceiling on committed tokens across the active batch.
+    pub max_batch_total_tokens: usize,
+    /// Starvation bound: a waiting lane head is force-served after
+    /// `ceil(ratio)` higher-priority pops.
+    pub waiting_served_ratio: f64,
+    /// Max concurrent sequences; 0 = backend default (`decode_batch`).
+    pub max_batch_size: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch_prefill_tokens: 512,
+            max_batch_total_tokens: 8192,
+            waiting_served_ratio: 4.0,
+            max_batch_size: 0,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Budgets so large the scheduler degenerates to the pre-scheduler
+    /// behaviour: admit whenever a slot is free, prefill whole prompts in
+    /// one chunk, strict priority order. The FIFO comparator arm of the
+    /// serving benchmarks.
+    pub fn fifo_compat() -> Self {
+        SchedulerConfig {
+            max_batch_prefill_tokens: usize::MAX / 4,
+            max_batch_total_tokens: usize::MAX / 4,
+            waiting_served_ratio: f64::INFINITY,
+            max_batch_size: 0,
+        }
+    }
+
+    /// The router bypass bound this config's `waiting_served_ratio`
+    /// implies (∞ or NaN ⇒ strict priority, never force-serve).
+    pub fn max_bypass(&self) -> usize {
+        if !self.waiting_served_ratio.is_finite() {
+            return usize::MAX;
+        }
+        (self.waiting_served_ratio.ceil().max(1.0)) as usize
+    }
+}
+
+/// Snapshot of the batch the scheduler decides against — all integers,
+/// assembled by the engine from (queue, slot, budget) state only.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchState {
+    /// Occupied slots (active requests, any phase).
+    pub active_slots: usize,
+    /// Effective slot cap (config resolved against the backend width).
+    pub max_slots: usize,
+    /// Σ committed tokens of the active batch.
+    pub committed_tokens: usize,
+    /// Prefill-token budget still unspent this iteration.
+    pub prefill_budget_left: usize,
+    /// Free pages in the KV pool.
+    pub free_pages: usize,
+    /// Pool page size in tokens.
+    pub page_tokens: usize,
+    /// Model layer count (a committed token costs `2 * n_layers` rows).
+    pub n_layers: usize,
+    /// Context length — commitments clamp to it.
+    pub max_seq: usize,
+    /// Whether the backend can split this prompt's prefill into chunks
+    /// (lab: yes; PJRT: its AOT prefill module is one fixed shape).
+    pub chunkable: bool,
+}
+
+/// The scheduler's verdict on one candidate admission. Every variant is
+/// matched exhaustively in the engine (pasa-lint protects this enum from
+/// wildcard arms): adding a defer reason forces every consumer to decide
+/// what it means for them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedDecision {
+    /// Admit now and prefill `chunk` tokens this iteration (`chunk <
+    /// prompt_tokens` ⇒ the prefill continues in later iterations).
+    Admit { chunk: usize },
+    /// Batch is at its slot cap.
+    DeferSlots,
+    /// Committed-token budget (`max_batch_total_tokens`) exhausted.
+    DeferTotalTokens,
+    /// Per-iteration prefill budget exhausted.
+    DeferPrefillBudget,
+    /// The KV pool cannot hold the request's committed pages right now.
+    DeferKvPages,
+    /// The request's committed pages exceed the *total* pool — it can
+    /// never run; the engine must reject it rather than retry forever.
+    RejectNeverFits,
+}
+
+/// Committed-token cost of a request: the KV rows it may occupy.
+pub fn committed_tokens(prompt_tokens: usize, max_new: usize, max_seq: usize) -> usize {
+    prompt_tokens.saturating_add(max_new).min(max_seq)
+}
+
+/// Pages a commitment of `tokens` occupies — the pool's own formula, so
+/// the scheduler and the cache can never disagree about capacity.
+fn pages_for(tokens: usize, n_layers: usize, page_tokens: usize) -> usize {
+    super::kv_cache::SeqCache::pages_required(n_layers, tokens, page_tokens.max(1))
+}
+
+/// Decide whether the queue head admits into the batch — pure in
+/// `(cfg, st, prompt_tokens, max_new)`.
+pub fn admission(
+    cfg: &SchedulerConfig,
+    st: &BatchState,
+    prompt_tokens: usize,
+    max_new: usize,
+) -> SchedDecision {
+    let commit = committed_tokens(prompt_tokens, max_new, st.max_seq);
+    let need_pages = pages_for(commit, st.n_layers, st.page_tokens);
+    if need_pages > st.free_pages {
+        // Page check first: it distinguishes "wait for retirements" from
+        // "can never run". With no active slots there are no retirements
+        // coming — deferring would spin the engine forever.
+        return if st.active_slots == 0 {
+            SchedDecision::RejectNeverFits
+        } else {
+            SchedDecision::DeferKvPages
+        };
+    }
+    // An empty batch always makes progress: budgets defer *relative to*
+    // other work, and there is none.
+    if st.active_slots == 0 {
+        let chunk = if st.chunkable {
+            prompt_tokens.min(st.prefill_budget_left.max(1))
+        } else {
+            prompt_tokens
+        };
+        return SchedDecision::Admit { chunk };
+    }
+    if st.active_slots >= st.max_slots {
+        return SchedDecision::DeferSlots;
+    }
+    if st.committed_tokens.saturating_add(commit) > cfg.max_batch_total_tokens {
+        return SchedDecision::DeferTotalTokens;
+    }
+    if st.prefill_budget_left == 0 || (!st.chunkable && prompt_tokens > st.prefill_budget_left) {
+        return SchedDecision::DeferPrefillBudget;
+    }
+    let chunk = if st.chunkable {
+        prompt_tokens.min(st.prefill_budget_left)
+    } else {
+        prompt_tokens
+    };
+    SchedDecision::Admit { chunk }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st() -> BatchState {
+        BatchState {
+            active_slots: 1,
+            max_slots: 4,
+            committed_tokens: 40,
+            prefill_budget_left: 64,
+            free_pages: 1024,
+            page_tokens: 8,
+            n_layers: 2,
+            max_seq: 128,
+            chunkable: true,
+        }
+    }
+
+    #[test]
+    fn admits_within_all_budgets() {
+        let cfg = SchedulerConfig::default();
+        assert_eq!(admission(&cfg, &st(), 20, 10), SchedDecision::Admit { chunk: 20 });
+    }
+
+    #[test]
+    fn long_prompt_admits_with_a_budget_sized_chunk() {
+        let cfg = SchedulerConfig::default();
+        // 4096-token prompt against a 64-token budget: admit, first chunk 64.
+        let mut s = st();
+        s.max_seq = 8192;
+        s.committed_tokens = 0;
+        assert_eq!(admission(&cfg, &s, 4096, 16), SchedDecision::Admit { chunk: 64 });
+    }
+
+    #[test]
+    fn defer_reasons_fire_in_order() {
+        let cfg = SchedulerConfig {
+            max_batch_total_tokens: 64,
+            ..SchedulerConfig::default()
+        };
+        let mut s = st();
+        s.active_slots = 4;
+        assert_eq!(admission(&cfg, &s, 8, 8), SchedDecision::DeferSlots);
+        let mut s = st();
+        s.committed_tokens = 60;
+        assert_eq!(admission(&cfg, &s, 8, 8), SchedDecision::DeferTotalTokens);
+        let mut s = st();
+        s.prefill_budget_left = 0;
+        assert_eq!(
+            admission(&SchedulerConfig::default(), &s, 8, 8),
+            SchedDecision::DeferPrefillBudget
+        );
+        let mut s = st();
+        s.free_pages = 2;
+        assert_eq!(
+            admission(&SchedulerConfig::default(), &s, 8, 8),
+            SchedDecision::DeferKvPages
+        );
+    }
+
+    #[test]
+    fn unchunkable_prompt_defers_when_bigger_than_budget() {
+        let cfg = SchedulerConfig::default();
+        let mut s = st();
+        s.chunkable = false;
+        assert_eq!(admission(&cfg, &s, 100, 8), SchedDecision::DeferPrefillBudget);
+        assert_eq!(admission(&cfg, &s, 32, 8), SchedDecision::Admit { chunk: 32 });
+    }
+
+    #[test]
+    fn empty_batch_always_progresses_or_rejects() {
+        let cfg = SchedulerConfig {
+            max_batch_total_tokens: 8, // absurdly small
+            ..SchedulerConfig::default()
+        };
+        let mut s = st();
+        s.active_slots = 0;
+        s.committed_tokens = 0;
+        // Budget alone can't wedge an idle engine.
+        assert!(matches!(admission(&cfg, &s, 100, 8), SchedDecision::Admit { .. }));
+        // ...but a pool that can never hold it is a hard reject.
+        s.free_pages = 2;
+        assert_eq!(admission(&cfg, &s, 100, 8), SchedDecision::RejectNeverFits);
+    }
+
+    #[test]
+    fn committed_tokens_clamp_to_context() {
+        assert_eq!(committed_tokens(100, 100, 128), 128);
+        assert_eq!(committed_tokens(10, 5, 128), 15);
+    }
+
+    #[test]
+    fn waiting_served_ratio_maps_to_bypass_bound() {
+        assert_eq!(SchedulerConfig::default().max_bypass(), 4);
+        let c = SchedulerConfig { waiting_served_ratio: 1.2, ..Default::default() };
+        assert_eq!(c.max_bypass(), 2);
+        assert_eq!(SchedulerConfig::fifo_compat().max_bypass(), usize::MAX);
+    }
+}

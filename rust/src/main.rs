@@ -13,11 +13,13 @@
 use anyhow::{bail, Result};
 use pasa::attention::{beta, Allocation};
 use pasa::cli::Args;
-use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request};
+use pasa::coordinator::{
+    Engine, EngineConfig, GenParams, GuardPolicy, Request, SchedulerConfig, StreamEvent,
+};
 use pasa::experiments::{self, ExpOptions};
 use pasa::model::Sampling;
 use pasa::numerics::Format;
-use pasa::runtime::ModelRuntime;
+use pasa::runtime::{LabModel, ModelRuntime};
 use std::path::Path;
 
 const HELP: &str = "\
@@ -29,12 +31,18 @@ USAGE: pasa <subcommand> [flags]
         regenerate a paper table/figure (table1 table3 table4 fig5 fig6
         fig7 fig9a fig9b fig10a fig10b fig11 fig12 fig13 fig14
         guard_rescue)
-  serve [--artifacts DIR] [--requests N]
+  serve [--artifacts DIR] [--requests N] [--lab] [--stream]
         [--policy pasa|fa16_32|fa32|adaptive|preemptive]
         [--alloc fa16_32|fp8|pasa8|...] [--max-new N] [--temperature T]
-        run the serving engine over a synthetic prompt workload
-        (--alloc roots the switching policies' fallback chain:
-         fa16_32 -> pasa, or fp8 -> pasa8 -> pasa)
+        [--max-batch-prefill-tokens N] [--max-batch-total-tokens N]
+        [--waiting-served-ratio R] [--max-batch-size N] [--fifo]
+        run the continuous-batching serving engine over a synthetic
+        prompt workload. --lab uses the artifact-free pure-Rust backend
+        (chunked prefill); --stream prints per-token events as they are
+        sampled; --fifo disables the token budgets (pre-scheduler
+        behaviour, the benchmark comparator). --alloc roots the
+        switching policies' fallback chain: fa16_32 -> pasa, or
+        fp8 -> pasa8 -> pasa (lab only)
   solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
         solve the optimal accuracy condition
   info  [--artifacts DIR]
@@ -98,26 +106,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Allocation::valid_names().join(", ")
         )
     })?;
-    // `serve` runs the PJRT backend, whose AOT manifest ships only the
-    // fa16_32 / pasa / fa32 modules — an 8-bit fallback chain (fp8 →
-    // pasa8 → pasa) is a lab-engine feature (`Engine::from_lab`). Fail
-    // up front with the constraint instead of erroring on a module
-    // lookup mid-prefill (or, worse, letting guard state and executed
+    let lab = args.has("lab");
+    // `serve` without --lab runs the PJRT backend, whose AOT manifest
+    // ships only the fa16_32 / pasa / fa32 modules — an 8-bit fallback
+    // chain (fp8 → pasa8 → pasa) is a lab-engine feature. Fail up front
+    // with the constraint instead of erroring on a module lookup
+    // mid-prefill (or, worse, letting guard state and executed
     // allocation diverge on the group-replay path).
-    if start_alloc != Allocation::Fa16_32 {
+    if !lab && start_alloc != Allocation::Fa16_32 {
         bail!(
             "--alloc {alloc_str} is not servable on the PJRT backend; the AOT \
              manifest only ships fa16_32/pasa/fa32 modules. Non-default starting \
-             allocations (fp8, pasa8, ...) are a lab-engine feature \
-             (Engine::from_lab / EngineConfig::start_alloc)."
+             allocations (fp8, pasa8, ...) need the lab backend (--lab)."
         );
     }
 
-    let rt = ModelRuntime::load(Path::new(&dir))?;
+    // Continuous-batching knobs (see SchedulerConfig): token budgets,
+    // the starvation ratio, and the slot cap. --fifo restores the
+    // pre-scheduler admit-when-a-slot-is-free behaviour for comparison.
+    let mut sched = if args.has("fifo") {
+        SchedulerConfig::fifo_compat()
+    } else {
+        SchedulerConfig::default()
+    };
+    sched.max_batch_prefill_tokens =
+        args.get_usize("max-batch-prefill-tokens", sched.max_batch_prefill_tokens)?;
+    sched.max_batch_total_tokens =
+        args.get_usize("max-batch-total-tokens", sched.max_batch_total_tokens)?;
+    sched.waiting_served_ratio =
+        args.get_f64("waiting-served-ratio", sched.waiting_served_ratio)?;
+    sched.max_batch_size = args.get_usize("max-batch-size", sched.max_batch_size)?;
+
     let mut cfg = EngineConfig::default();
     cfg.policy = policy;
     cfg.start_alloc = start_alloc;
-    let mut eng = Engine::new(&rt, cfg);
+    cfg.sched = sched;
+
+    // The engine borrows a PJRT runtime; keep it alive across both arms.
+    let rt;
+    let mut eng = if lab {
+        Engine::from_lab(LabModel::synthetic(lab_serve_dims(), 42), cfg)
+    } else {
+        rt = ModelRuntime::load(Path::new(&dir))?;
+        Engine::new(&rt, cfg)
+    };
 
     let prompts = synthetic_prompts(n_requests);
     let sampling = if temp > 0.0 {
@@ -134,7 +166,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         });
         eng.submit(req);
     }
-    let comps = eng.run_to_completion()?;
+
+    let stream = args.has("stream");
+    let mut comps = Vec::new();
+    while !eng.idle() {
+        eng.step()?;
+        if stream {
+            // Drain and print the per-token stream as it is produced —
+            // exhaustive over StreamEvent so a new event kind is a
+            // compile error here, not a silently unprinted message.
+            for ev in eng.take_events() {
+                match ev {
+                    StreamEvent::Token(t) => println!(
+                        "stream[{:>3}] #{:<3} pos={:<4} token={}",
+                        t.request_id, t.index, t.position, t.token
+                    ),
+                    StreamEvent::Finished { request_id, reason } => {
+                        println!("stream[{request_id:>3}] finished: {reason:?}")
+                    }
+                }
+            }
+        }
+        comps.extend(eng.take_completions());
+    }
     for c in &comps {
         println!(
             "[{:>3}] {:?} -> {:?} ({:?}, alloc={}, ttft={:.3}s)",
@@ -144,6 +198,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("\n{}", eng.metrics.report());
     println!("kv pool utilization at end: {:.3}", eng.kv_utilization());
     Ok(())
+}
+
+/// Dims of the synthetic lab model behind `serve --lab`: byte-level
+/// vocab, big enough context that chunked prefill is observable, small
+/// enough to run instantly on a laptop.
+fn lab_serve_dims() -> pasa::model::ModelDims {
+    pasa::model::ModelDims {
+        vocab_size: 259,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_head: 8,
+        d_ff: 64,
+        max_seq: 128,
+        prefill_seq: 32,
+        decode_batch: 4,
+        pad: 256,
+        bos: 257,
+        eos: 258,
+    }
 }
 
 /// Prompts drawn from the training corpus templates (so a trained model

@@ -32,6 +32,28 @@ pub fn encode(text: &str, max_len: usize, sp: Specials) -> (Vec<u32>, usize) {
     (ids, n)
 }
 
+/// Tokenized length of a prompt with no truncation or padding:
+/// BOS + one token per utf-8 byte. This is the admission currency — the
+/// router and scheduler budget in these units, never in `str::len` bytes
+/// (a multi-byte character is several tokens, an admission check on bytes
+/// against a token budget is simply wrong).
+pub fn token_len(text: &str) -> usize {
+    1 + text.len()
+}
+
+/// Encode a prompt without padding: BOS + utf-8 bytes, truncated to
+/// `max_len` tokens. The chunked-prefill engine path consumes this (it
+/// prefills exactly the valid tokens, chunk by chunk, so PAD rows never
+/// enter the paged cache).
+pub fn encode_prompt(text: &str, max_len: usize, sp: Specials) -> Vec<u32> {
+    let mut ids = Vec::with_capacity(token_len(text).min(max_len));
+    ids.push(sp.bos);
+    for &b in text.as_bytes().iter().take(max_len.saturating_sub(1)) {
+        ids.push(b as u32);
+    }
+    ids
+}
+
 /// Decode ids back to text, skipping specials and invalid bytes.
 pub fn decode(ids: &[u32], sp: Specials) -> String {
     let bytes: Vec<u8> = ids
@@ -63,6 +85,26 @@ mod tests {
         let (ids, n) = encode("abcdefgh", 4, sp);
         assert_eq!(n, 4);
         assert_eq!(ids, vec![sp.bos, 97, 98, 99]);
+    }
+
+    #[test]
+    fn token_len_counts_bytes_plus_bos() {
+        assert_eq!(token_len(""), 1);
+        assert_eq!(token_len("hello"), 6);
+        // Multi-byte characters cost one token per byte.
+        assert_eq!(token_len("é"), 3);
+        assert_eq!(token_len(&"é".repeat(10)), 21);
+    }
+
+    #[test]
+    fn encode_prompt_unpadded_matches_encode_prefix() {
+        let sp = Specials::default();
+        let ids = encode_prompt("hello", 16, sp);
+        assert_eq!(ids.len(), 6);
+        let (padded, n) = encode("hello", 16, sp);
+        assert_eq!(&padded[..n], &ids[..]);
+        // Truncation at the token limit.
+        assert_eq!(encode_prompt("abcdefgh", 4, sp), vec![sp.bos, 97, 98, 99]);
     }
 
     #[test]

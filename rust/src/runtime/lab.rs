@@ -373,6 +373,98 @@ impl LabModel {
         })
     }
 
+    /// Prefill one **chunk** of a prompt — positions `[start, end)` of
+    /// `ids` — directly into the paged cache, and return the last prompt
+    /// row's logits once the final chunk lands (`end == ids.len()`).
+    ///
+    /// This is the chunked-prefill engine path: a long prompt is split
+    /// into budget-sized chunks, each interleaved with the in-flight
+    /// decode rounds, so a 4096-token prompt never stalls other streams.
+    ///
+    /// ## Chunk-boundary invariance (the token-identity contract)
+    ///
+    /// Where chunk boundaries fall depends on how much prefill budget the
+    /// scheduler had left — which depends on what else was in the batch.
+    /// For batched streams to stay bit-identical to their solo runs, the
+    /// *result* must not depend on the split. This holds by construction:
+    ///
+    /// * Embedding, layer norm, the Q/K/V/MLP GEMMs and the residual adds
+    ///   are all row-independent — computing rows `[start, end)` in one
+    ///   call is bit-identical to computing them one at a time.
+    /// * Attention runs **per query row** against the paged cache fenced
+    ///   at that row's own causal prefix ([`SeqCache::kv_views_at`] with
+    ///   `len = pos + 1`, `s1 = 1`, [`AttnMask::None`]) — exactly the
+    ///   decode-step shape, over exactly the same rows, no matter how
+    ///   many chunks wrote them.
+    ///
+    /// So `prefill_chunk(0..n)` ≡ `prefill_chunk(0..k); prefill_chunk(k..n)`
+    /// bit for bit, for every split `k` — and the engine routes *all* lab
+    /// prefills through this path (a short prompt is simply one chunk),
+    /// making the sequential baseline identical by construction.
+    ///
+    /// Like the decode step, the chunk is functional in (ids, range,
+    /// cache-prefix): a guard replay under a rescue allocation rewrites
+    /// the same rows and leaves the cache as if the rescue had run first.
+    pub fn prefill_chunk(
+        &self,
+        alloc: Allocation,
+        ids: &[u32],
+        start: usize,
+        end: usize,
+        cache: &mut SeqCache,
+        pool: &mut KvPool,
+    ) -> Result<(Option<Vec<f32>>, GuardSignal)> {
+        ensure!(start < end, "empty prefill chunk [{start}, {end})");
+        ensure!(end <= ids.len(), "chunk end {end} past {} prompt ids", ids.len());
+        ensure!(end <= self.dims.max_seq, "prompt longer than max_seq");
+        let d = self.dims.d_model;
+        let dh = self.dims.d_head;
+        let hw = self.dims.head_width();
+        let c = end - start;
+        let mut x = Matrix::zeros(c, d);
+        for (r, p) in (start..end).enumerate() {
+            x.row_mut(r).copy_from_slice(&self.embed(ids[p], p));
+        }
+        cache.ensure_capacity(pool, end)?;
+        let mut sig = GuardSignal::default();
+        for (li, lw) in self.layers.iter().enumerate() {
+            let h = self.norm_rows(&x, &lw.ln1_g, &lw.ln1_b);
+            let q = matmul_nn(&h, &lw.wq, GemmPrecision::F32);
+            let k = matmul_nn(&h, &lw.wk, GemmPrecision::F32);
+            let v = matmul_nn(&h, &lw.wv, GemmPrecision::F32);
+            let mut attn = Matrix::zeros(c, hw);
+            for r in 0..c {
+                let pos = start + r;
+                cache.write_row(pool, li, pos, k.row(r), v.row(r))?;
+                let qrow = Matrix::from_vec(1, hw, q.row(r).to_vec());
+                let out = {
+                    let (kview, vview) = cache.kv_views_at(pool, li, pos + 1);
+                    let pairs: Vec<KvPair<'_>> = (0..self.dims.n_heads)
+                        .map(|hh| KvPair {
+                            k: kview.col_window(hh * dh, dh),
+                            v: vview.col_window(hh * dh, dh),
+                        })
+                        .collect();
+                    self.mha(&qrow, &pairs, AttnMask::None, alloc, &mut sig)
+                };
+                attn.row_mut(r).copy_from_slice(out.row(0));
+            }
+            self.finish_block(lw, &mut x, &attn);
+        }
+        let logits = if end == ids.len() {
+            // Only the last prompt row feeds sampling; skip the other
+            // rows' vocab GEMM (norm + tied-logits GEMM are row-
+            // independent, so this is bit-identical to slicing a full
+            // logits matrix).
+            let last = Matrix::from_vec(1, d, x.row(c - 1).to_vec());
+            let xf = self.norm_rows(&last, &self.lnf_g, &self.lnf_b);
+            Some(matmul_nt(&xf, &self.tok_emb, GemmPrecision::F32).data)
+        } else {
+            None
+        };
+        Ok((logits, sig))
+    }
+
     /// One paged decode step for one sequence: computes the step's K/V
     /// rows, writes them into the paged cache at `pos`, then runs every
     /// layer's attention over `KvView::Paged` of the `pos + 1` valid rows
@@ -519,6 +611,50 @@ mod tests {
         assert!(mixed.iter().all(|x| x.is_finite()));
         assert_eq!(sig.nonfinite, 0);
         cache.release(&mut pool);
+    }
+
+    #[test]
+    fn prefill_chunk_is_invariant_to_chunk_boundaries() {
+        // The token-identity contract: any split of [0, n) into chunks
+        // yields a bit-identical cache and final logits.
+        let m = LabModel::synthetic(tiny_dims(), 11);
+        let sp: crate::model::Specials = Default::default();
+        let ids = crate::model::tokenizer::encode_prompt("chunk invariance!", 32, sp);
+        let n = ids.len();
+        let splits: [&[usize]; 3] = [&[n], &[1, n], &[5, 9, n]];
+        let mut outs = Vec::new();
+        for split in splits {
+            let mut pool = KvPool::new(128, 4, 16);
+            let mut cache = SeqCache::new(2);
+            let mut start = 0;
+            let mut logits = None;
+            let mut sig = GuardSignal::default();
+            for &end in split {
+                let (lg, s) = m
+                    .prefill_chunk(Allocation::Pasa16, &ids, start, end, &mut cache, &mut pool)
+                    .unwrap();
+                logits = lg;
+                sig.merge(&s);
+                start = end;
+            }
+            let logits = logits.expect("final chunk returns logits");
+            assert_eq!(sig.nonfinite, 0);
+            // Snapshot the cache contents before releasing.
+            let mut dense = vec![0.0f32; tiny_dims().max_seq * 16];
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            for l in 0..2 {
+                for want_v in [false, true] {
+                    cache.fill_dense(&pool, l, want_v, &mut dense).unwrap();
+                    rows.push(dense[..n * 16].to_vec());
+                }
+            }
+            cache.release(&mut pool);
+            outs.push((logits, rows));
+        }
+        for o in &outs[1..] {
+            assert_eq!(outs[0].0, o.0, "logits depend on chunk split");
+            assert_eq!(outs[0].1, o.1, "cache rows depend on chunk split");
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Arrival-process traces for the serving benchmarks (S11): seeded,
+//! deterministic request streams with Poisson or bursty inter-arrival
+//! structure, in *engine-step* time.
+//!
+//! The serving engine's scheduler is a pure function of (queue, slot,
+//! budget) state, so a trace — (arrival step, prompt tokens, max_new)
+//! triples — fully determines every admission decision of a run. The
+//! benches replay the same trace against different scheduler configs
+//! (FIFO-compat vs continuous batching, chunk budgets) and compare
+//! TTFT/ITL/throughput on identical offered load; the scheduler
+//! integration tests replay a trace twice (batched vs one-request-solo)
+//! and demand bit-identical token streams.
+//!
+//! Time is measured in scheduler iterations ("steps"), not wall-clock:
+//! the driver submits every request whose `step` has come due before
+//! calling `Engine::step`. This keeps the workload independent of host
+//! speed — a trace means the same thing on every machine.
+
+use super::rng::Pcg64;
+
+/// One request of an arrival trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Engine step at which the request arrives (non-decreasing).
+    pub step: usize,
+    /// Prompt length in tokens (BOS included).
+    pub prompt_tokens: usize,
+    /// Generation budget.
+    pub max_new: usize,
+}
+
+/// Bounds for the per-request shape draws.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivalShape {
+    pub min_prompt_tokens: usize,
+    pub max_prompt_tokens: usize,
+    pub min_new: usize,
+    pub max_new: usize,
+}
+
+impl Default for ArrivalShape {
+    fn default() -> Self {
+        ArrivalShape {
+            min_prompt_tokens: 4,
+            max_prompt_tokens: 64,
+            min_new: 4,
+            max_new: 24,
+        }
+    }
+}
+
+fn draw_shape(rng: &mut Pcg64, shape: &ArrivalShape) -> (usize, usize) {
+    let p = shape.min_prompt_tokens
+        + rng.below(shape.max_prompt_tokens - shape.min_prompt_tokens + 1);
+    let n = shape.min_new + rng.below(shape.max_new - shape.min_new + 1);
+    (p, n)
+}
+
+/// Poisson arrivals: exponential inter-arrival gaps with mean
+/// `1 / rate_per_step`, quantized to whole steps. `rate_per_step` is the
+/// offered load in requests per engine step.
+pub fn poisson_trace(n: usize, rate_per_step: f64, shape: ArrivalShape, seed: u64) -> Vec<Arrival> {
+    assert!(rate_per_step > 0.0, "rate must be positive");
+    let mut rng = Pcg64::new(seed, 0xA112);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // Inverse-CDF exponential draw; (1 - u) keeps ln() finite.
+            let u = rng.next_f64();
+            t += -(1.0 - u).ln() / rate_per_step;
+            let (prompt_tokens, max_new) = draw_shape(&mut rng, &shape);
+            Arrival {
+                step: t as usize,
+                prompt_tokens,
+                max_new,
+            }
+        })
+        .collect()
+}
+
+/// Bursty arrivals: requests come in bursts of `burst` back-to-back
+/// (same step), with `gap` quiet steps between bursts — the adversarial
+/// shape for admission control (deep instantaneous queue, idle valleys).
+pub fn bursty_trace(
+    n: usize,
+    burst: usize,
+    gap: usize,
+    shape: ArrivalShape,
+    seed: u64,
+) -> Vec<Arrival> {
+    assert!(burst > 0, "burst size must be positive");
+    let mut rng = Pcg64::new(seed, 0xB567);
+    (0..n)
+        .map(|i| {
+            let (prompt_tokens, max_new) = draw_shape(&mut rng, &shape);
+            Arrival {
+                step: (i / burst) * (gap + 1),
+                prompt_tokens,
+                max_new,
+            }
+        })
+        .collect()
+}
+
+/// A prompt whose byte-level tokenization is exactly `tokens` long
+/// (BOS + bytes): the bridge from a trace's token count to a concrete
+/// `Request` prompt string.
+pub fn prompt_of_tokens(tokens: usize) -> String {
+    assert!(tokens >= 1, "a prompt is at least the BOS token");
+    "x".repeat(tokens - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer;
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_ordered() {
+        let a = poisson_trace(64, 0.5, ArrivalShape::default(), 7);
+        let b = poisson_trace(64, 0.5, ArrivalShape::default(), 7);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        assert!(a.windows(2).all(|w| w[0].step <= w[1].step));
+        let c = poisson_trace(64, 0.5, ArrivalShape::default(), 8);
+        assert_ne!(a, c, "different seed must differ");
+        for r in &a {
+            assert!(r.prompt_tokens >= 4 && r.prompt_tokens <= 64);
+            assert!(r.max_new >= 4 && r.max_new <= 24);
+        }
+    }
+
+    #[test]
+    fn bursty_trace_has_bursts_and_gaps() {
+        let t = bursty_trace(12, 4, 3, ArrivalShape::default(), 1);
+        // Bursts of 4 at steps 0, 4, 8.
+        assert!(t[..4].iter().all(|r| r.step == 0));
+        assert!(t[4..8].iter().all(|r| r.step == 4));
+        assert!(t[8..].iter().all(|r| r.step == 8));
+    }
+
+    #[test]
+    fn prompt_of_tokens_round_trips_through_the_tokenizer() {
+        for n in [1usize, 2, 17, 81] {
+            assert_eq!(tokenizer::token_len(&prompt_of_tokens(n)), n);
+        }
+    }
+
+    #[test]
+    fn mean_poisson_rate_is_roughly_honored() {
+        let t = poisson_trace(400, 0.25, ArrivalShape::default(), 42);
+        let last = t.last().unwrap().step as f64;
+        // 400 requests at 0.25 req/step ≈ 1600 steps; allow wide slack.
+        assert!((800.0..3200.0).contains(&last), "span {last}");
+    }
+}

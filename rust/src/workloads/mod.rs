@@ -2,11 +2,13 @@
 //! benchmark distributions (Eqs. 17–18), the resonance mechanism (Fig. 6)
 //! and model-shaped overflow traces (Qwen2 / SVD substitutes).
 
+pub mod arrivals;
 pub mod distributions;
 pub mod resonance;
 pub mod rng;
 pub mod traces;
 
+pub use arrivals::{bursty_trace, poisson_trace, prompt_of_tokens, Arrival, ArrivalShape};
 pub use distributions::{
     gen_case, gen_gqa_multihead, gen_multihead, gen_padded_lens, gen_padded_multihead,
     gen_paged_decode_case, gqa_kv_head, AttentionCase, Distribution, MultiHeadCase, PAD_GARBAGE,

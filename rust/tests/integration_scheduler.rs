@@ -1,0 +1,445 @@
+//! Integration tests for the token-budget continuous-batching scheduler
+//! (engine + scheduler + router + streaming), all on the artifact-free
+//! lab backend.
+//!
+//! The heart of the suite is the **token-identity certification**: on a
+//! seeded mixed arrival trace — greedy, temperature and top-k sampling,
+//! prompts long enough to chunk, budgets tight enough to defer — every
+//! request's token stream must be **bit-identical** to a sequential
+//! one-request-at-a-time run of the same engine. This extends the repo's
+//! paged≡dense and pooled≡sequential certifications to the scheduler
+//! layer: batching, chunking and deferral decisions must be invisible in
+//! the tokens. It holds by construction (chunk-boundary-invariant
+//! prefill, per-slot paged decode, per-request sampling RNG, pure
+//! scheduler decisions) and this suite is where the construction is
+//! held to account.
+
+use pasa::coordinator::{
+    Admission, Completion, Engine, EngineConfig, FinishReason, GenParams, GuardPolicy, Request,
+    SchedulerConfig, StreamEvent,
+};
+use pasa::model::{ModelDims, Sampling};
+use pasa::runtime::{LabModel, NormMode};
+use pasa::tensor::Matrix;
+use pasa::workloads::{prompt_of_tokens, Pcg64};
+
+fn dims(n_layers: usize, max_seq: usize, decode_batch: usize) -> ModelDims {
+    ModelDims {
+        vocab_size: 259,
+        d_model: 16,
+        n_layers,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        max_seq,
+        prefill_seq: 16,
+        decode_batch,
+        pad: 256,
+        bos: 257,
+        eos: 258,
+    }
+}
+
+fn params(max_new_tokens: usize, sampling: Sampling) -> GenParams {
+    GenParams {
+        max_new_tokens,
+        sampling,
+        stop_at_eos: false,
+    }
+}
+
+/// Drive an engine over an arrival trace measured in engine steps:
+/// submit everything due, step, drain completions and events, repeat
+/// until idle. Returns (completions, events) in emission order.
+fn drive(
+    eng: &mut Engine<'_>,
+    arrivals: &[(usize, Request)],
+) -> (Vec<Completion>, Vec<StreamEvent>) {
+    let mut comps = Vec::new();
+    let mut events = Vec::new();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < arrivals.len() || !eng.idle() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            assert_eq!(
+                eng.submit(arrivals[next].1.clone()),
+                Admission::Queued,
+                "trace request must admit"
+            );
+            next += 1;
+        }
+        eng.step().unwrap();
+        comps.extend(eng.take_completions());
+        events.extend(eng.take_events());
+        step += 1;
+        assert!(step < 10_000, "engine failed to drain the trace");
+    }
+    (comps, events)
+}
+
+fn tokens_of(events: &[StreamEvent], id: u64) -> Vec<u32> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            StreamEvent::Token(t) if t.request_id == id => Some(t.token),
+            StreamEvent::Token(_) | StreamEvent::Finished { .. } => None,
+        })
+        .collect()
+}
+
+#[test]
+fn batched_token_streams_are_bit_identical_to_sequential_runs() {
+    // Mixed seeded trace: three sampling modes, prompts from 3 to 40
+    // tokens (the long ones must chunk under the 8-token budget),
+    // staggered arrivals, a committed-token ceiling low enough to defer.
+    let spec: [(usize, usize, usize, Sampling); 8] = [
+        (0, 3, 8, Sampling::Greedy),
+        (0, 40, 12, Sampling::Temperature(0.8)),
+        (1, 17, 6, Sampling::TopK { k: 8, temperature: 0.9 }),
+        (2, 9, 10, Sampling::Greedy),
+        (2, 33, 8, Sampling::Temperature(1.1)),
+        (5, 5, 16, Sampling::TopK { k: 4, temperature: 0.7 }),
+        (6, 21, 6, Sampling::Greedy),
+        (9, 12, 9, Sampling::Temperature(0.9)),
+    ];
+    let cfg = || {
+        let mut c = EngineConfig::default();
+        c.policy = GuardPolicy::Adaptive;
+        c.kv_pages = 256;
+        c.page_tokens = 8;
+        c.max_queue = 64;
+        c.sched = SchedulerConfig {
+            max_batch_prefill_tokens: 8,
+            max_batch_total_tokens: 120,
+            waiting_served_ratio: 4.0,
+            max_batch_size: 0,
+        };
+        c
+    };
+    let request = |id: u64, ptoks: usize, max_new: usize, s: Sampling| {
+        Request::new(id, prompt_of_tokens(ptoks)).with_params(params(max_new, s))
+    };
+
+    // Batched run: everything through one engine under contention.
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(2, 64, 3), 42), cfg());
+    let arrivals: Vec<(usize, Request)> = spec
+        .iter()
+        .enumerate()
+        .map(|(i, &(step, p, n, s))| (step, request(i as u64 + 1, p, n, s)))
+        .collect();
+    let (comps, events) = drive(&mut eng, &arrivals);
+    assert_eq!(comps.len(), 8);
+    assert!(eng.idle());
+    assert_eq!(eng.kv_utilization(), 0.0, "pages leaked");
+
+    // The trace actually exercised the scheduler: prompts chunked, and
+    // at least one admission was deferred on a budget.
+    assert!(
+        eng.metrics.prefill_chunks > 8,
+        "long prompts must have chunked (chunks = {})",
+        eng.metrics.prefill_chunks
+    );
+    let d = &eng.metrics.deferrals;
+    assert!(
+        d.slots + d.total_tokens + d.prefill_budget + d.kv_pages > 0,
+        "budgets were never contended — the trace is too easy to certify anything"
+    );
+
+    // Streaming integrity: per request, the event stream IS the
+    // completion — same tokens, dense 0-based indices, positions offset
+    // by the prompt, exactly one Finished marker with the same reason.
+    for c in &comps {
+        let streamed = tokens_of(&events, c.id);
+        assert_eq!(streamed, c.tokens, "request {} stream != completion", c.id);
+        let mut idx = 0usize;
+        for e in &events {
+            match e {
+                StreamEvent::Token(t) if t.request_id == c.id => {
+                    assert_eq!(t.index, idx, "request {} indices not dense", c.id);
+                    assert_eq!(t.position, c.prompt_tokens + idx);
+                    idx += 1;
+                }
+                StreamEvent::Token(_) | StreamEvent::Finished { .. } => {}
+            }
+        }
+        let finished: Vec<FinishReason> = events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Finished { request_id, reason } if *request_id == c.id => {
+                    Some(*reason)
+                }
+                StreamEvent::Token(_) | StreamEvent::Finished { .. } => None,
+            })
+            .collect();
+        assert_eq!(finished, vec![c.reason], "request {} finish markers", c.id);
+    }
+
+    // TTFT/ITL accounting: one TTFT sample per request; one ITL gap per
+    // generated token except each request's first.
+    let total: u64 = comps.iter().map(|c| c.tokens.len() as u64).sum();
+    assert_eq!(eng.metrics.ttft.count(), 8);
+    assert_eq!(eng.metrics.itl.count() as u64, total - 8);
+
+    // The certification: each request solo — same id (the sampling RNG
+    // seed), same prompt, same params, fresh identical model — must
+    // produce the very same tokens the contended batch produced.
+    for (i, &(_, p, n, s)) in spec.iter().enumerate() {
+        let id = i as u64 + 1;
+        let mut solo = Engine::from_lab(LabModel::synthetic(dims(2, 64, 3), 42), cfg());
+        let (sc, se) = drive(&mut solo, &[(0, request(id, p, n, s))]);
+        assert_eq!(sc.len(), 1);
+        let batched = comps.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(
+            sc[0].tokens, batched.tokens,
+            "request {id}: batched stream diverged from its solo run"
+        );
+        assert_eq!(tokens_of(&se, id), batched.tokens);
+    }
+}
+
+#[test]
+fn chunked_prefill_never_stalls_inflight_decodes() {
+    // A short request is decoding; a 33-token prompt is admitted
+    // mid-flight under an 8-token chunk budget. The pin: during every
+    // one of the long prompt's chunk rounds, the in-flight request
+    // gains exactly one token — a mid-flight prefill never costs an
+    // in-flight stream more than one chunk of latency, and never a
+    // skipped round.
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::AlwaysPasa;
+    cfg.kv_pages = 64;
+    cfg.page_tokens = 8;
+    cfg.sched.max_batch_prefill_tokens = 8;
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 2), 7), cfg);
+
+    let a = eng.fresh_id();
+    eng.submit(Request::new(a, prompt_of_tokens(4)).with_params(params(20, Sampling::Greedy)));
+    eng.step().unwrap();
+    let ev = eng.take_events();
+    // Admission step: the prefill-sampled first token plus the same
+    // step's decode round.
+    assert_eq!(tokens_of(&ev, a).len(), 2, "A's first tokens out of prefill");
+
+    let b = eng.fresh_id();
+    eng.submit(Request::new(b, prompt_of_tokens(33)).with_params(params(6, Sampling::Greedy)));
+    // 33 tokens / 8-token chunks = 4 full rounds + the final round of 1.
+    for round in 0..4 {
+        eng.step().unwrap();
+        let ev = eng.take_events();
+        assert_eq!(
+            tokens_of(&ev, a).len(),
+            1,
+            "A stalled during B's chunk round {round}"
+        );
+        assert_eq!(
+            tokens_of(&ev, b).len(),
+            0,
+            "B emitted before its prefill finished (round {round})"
+        );
+    }
+    eng.step().unwrap();
+    let ev = eng.take_events();
+    assert_eq!(tokens_of(&ev, a).len(), 1, "A stalled on B's final chunk");
+    // B's prefill-sampled first token plus its first decode-round token.
+    assert_eq!(tokens_of(&ev, b).len(), 2, "B streams as soon as its last chunk lands");
+
+    // Chunk accounting: A's single-chunk prefill + B's five.
+    assert_eq!(eng.metrics.prefill_chunks, 6);
+    assert_eq!(eng.metrics.prefill_tokens, 4 + 33);
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.kv_utilization(), 0.0);
+}
+
+/// The deterministic overflow-probe model from the serving suite: a
+/// positional query spike at `P_STAR` drives the FA16-32 score row past
+/// the FP16 boundary (PASA's shift absorbs it); K/V stay benign, and
+/// token 100 carries a logit margin so greedy decoding is stable.
+const P_STAR: usize = 12;
+const AMP: f32 = 30_000.0;
+
+fn probe_model() -> LabModel {
+    let d = dims(1, 32, 2);
+    let mut m = LabModel::synthetic(d, 0xBEEF);
+    m.norm = NormMode::Identity;
+    let mut rng = Pcg64::new(1234, 0);
+    for v in &mut m.tok_emb.data {
+        *v = rng.normal(0.0, 0.01) as f32;
+    }
+    for j in 0..8 {
+        let old = m.tok_emb.at(100, j);
+        m.tok_emb.set(100, j, old + 0.3);
+    }
+    for v in &mut m.pos_emb.data {
+        *v = 0.5;
+    }
+    for j in 8..16 {
+        m.pos_emb.set(P_STAR, j, AMP);
+    }
+    let lw = &mut m.layers[0];
+    lw.wq = Matrix::zeros(16, 16);
+    lw.wk = Matrix::zeros(16, 16);
+    for j in 0..8 {
+        lw.wq.set(8 + j, j, 1.0);
+        lw.wq.set(8 + j, 8 + j, 1.0);
+        lw.wk.set(j, j, 1.0);
+        lw.wk.set(j, 8 + j, 1.0);
+    }
+    lw.wv = lw.wk.clone();
+    let mut wo = Matrix::zeros(16, 16);
+    for i in 0..16 {
+        wo.set(i, i, 0.1);
+    }
+    lw.wo = wo;
+    lw.w1 = Matrix::zeros(16, 32);
+    lw.b1 = vec![0.0; 32];
+    lw.w2 = Matrix::zeros(32, 16);
+    lw.b2 = vec![0.0; 16];
+    m
+}
+
+#[test]
+fn guard_replay_in_a_dynamic_batch_leaves_cobatched_streams_untouched() {
+    // Request 1 crosses P_STAR and gets its round replayed under PASA;
+    // request 2 shares every one of those decode rounds. Under dynamic
+    // batching the co-batched stream must be bit-identical to its solo
+    // run — a neighbour's guard trip is that neighbour's problem only.
+    let cfg = || {
+        let mut c = EngineConfig::default();
+        c.policy = GuardPolicy::Adaptive;
+        c.kv_pages = 64;
+        c.page_tokens = 8;
+        c.max_queue = 16;
+        c
+    };
+    let mut both = Engine::from_lab(probe_model(), cfg());
+    let arrivals = vec![
+        (0, Request::new(1, "aaaaaaa").with_params(params(20, Sampling::Greedy))),
+        (0, Request::new(2, "zz").with_params(params(8, Sampling::Greedy))),
+    ];
+    let (comps, events) = drive(&mut both, &arrivals);
+    assert_eq!(both.metrics.guard_switches, 1, "the trip must have fired");
+    let tripped = comps.iter().find(|c| c.id == 1).unwrap();
+    assert_eq!(tripped.allocation, "pasa");
+    let clean = comps.iter().find(|c| c.id == 2).unwrap();
+    assert_eq!(clean.allocation, "fa16_32", "clean stream must not be pinned");
+
+    let mut solo = Engine::from_lab(probe_model(), cfg());
+    let (sc, _) =
+        drive(&mut solo, &[(0, Request::new(2, "zz").with_params(params(8, Sampling::Greedy)))]);
+    assert_eq!(solo.metrics.guard_switches, 0, "solo clean run must not trip");
+    assert_eq!(
+        sc[0].tokens, clean.tokens,
+        "co-batched stream perturbed by its neighbour's guard replay"
+    );
+    assert_eq!(tokens_of(&events, 2), clean.tokens);
+}
+
+#[test]
+fn starvation_bound_serves_batch_work_through_an_interactive_flood() {
+    // One slot, six interactive requests and one batch request, all
+    // queued up front. Strict priority (FIFO-compat) finishes the batch
+    // request dead last; waiting_served_ratio = 2 must force it through
+    // after exactly two interactive services.
+    use pasa::coordinator::Priority;
+    let run = |sched: SchedulerConfig| {
+        let mut cfg = EngineConfig::default();
+        cfg.policy = GuardPolicy::AlwaysPasa;
+        cfg.kv_pages = 64;
+        cfg.page_tokens = 8;
+        cfg.max_queue = 16;
+        cfg.sched = sched;
+        let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 32, 2), 3), cfg);
+        let mut arrivals = Vec::new();
+        for i in 0..6u64 {
+            arrivals.push((
+                0usize,
+                Request::new(i + 1, "a")
+                    .with_params(params(2, Sampling::Greedy))
+                    .with_priority(Priority::Interactive),
+            ));
+        }
+        arrivals.push((
+            0usize,
+            Request::new(7, "b")
+                .with_params(params(2, Sampling::Greedy))
+                .with_priority(Priority::Batch),
+        ));
+        let (comps, _) = drive(&mut eng, &arrivals);
+        assert_eq!(comps.len(), 7);
+        let deferrals = eng.metrics.deferrals.slots;
+        (
+            comps.iter().position(|c| c.id == 7).unwrap(),
+            deferrals,
+        )
+    };
+
+    let strict = SchedulerConfig {
+        max_batch_size: 1,
+        ..SchedulerConfig::fifo_compat()
+    };
+    let (pos, _) = run(strict);
+    assert_eq!(pos, 6, "strict priority starves batch to the very end");
+
+    let bounded = SchedulerConfig {
+        max_batch_size: 1,
+        waiting_served_ratio: 2.0,
+        ..SchedulerConfig::default()
+    };
+    let (pos, defer_slots) = run(bounded);
+    assert_eq!(
+        pos, 2,
+        "ratio 2.0 must force the batch request through after 2 bypasses"
+    );
+    assert!(defer_slots > 0, "the single slot must have caused deferrals");
+}
+
+#[test]
+fn multibyte_prompt_serves_end_to_end_on_token_admission() {
+    // Engine-level regression for byte-vs-token admission: 40 'é' chars
+    // are 80 bytes — past the old byte-derived limit (prefill_seq * 4 =
+    // 64) — but 81 tokens, comfortably inside a 96-token context. The
+    // request must admit AND actually serve (chunked prefill handles a
+    // prompt longer than prefill_seq).
+    let prompt = "é".repeat(40);
+    assert_eq!(prompt.len(), 80);
+    assert!(prompt.len() > 16 * 4, "premise: the old byte rule rejected this");
+
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::AlwaysPasa;
+    cfg.kv_pages = 64;
+    cfg.page_tokens = 8;
+    cfg.sched.max_batch_prefill_tokens = 16;
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 96, 2), 11), cfg);
+    let id = eng.fresh_id();
+    assert_eq!(
+        eng.submit(Request::new(id, prompt).with_params(params(4, Sampling::Greedy))),
+        Admission::Queued
+    );
+    let comps = eng.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    let c = &comps[0];
+    assert_eq!(c.prompt_tokens, 81, "BOS + 80 bytes");
+    assert_eq!(c.reason, FinishReason::MaxTokens);
+    assert_eq!(c.tokens.len(), 4);
+    // 81 tokens / 16-token chunks = 6 prefill rounds.
+    assert_eq!(eng.metrics.prefill_chunks, 6);
+    assert_eq!(eng.kv_utilization(), 0.0);
+}
+
+#[test]
+fn oversized_commitment_is_rejected_not_spun_on() {
+    // A request whose KV commitment can never fit the pool must come
+    // back as an Evicted completion — the engine may not spin forever
+    // retrying it, and later work must still be served.
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::AlwaysPasa;
+    cfg.kv_pages = 4; // pathologically small pool
+    cfg.page_tokens = 8;
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(2, 64, 2), 5), cfg);
+    let a = eng.fresh_id();
+    eng.submit(Request::new(a, prompt_of_tokens(40)).with_params(params(8, Sampling::Greedy)));
+    let comps = eng.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].reason, FinishReason::Evicted);
+    assert!(eng.idle());
+}
