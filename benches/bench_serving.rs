@@ -13,7 +13,9 @@
 //! framing (FA low-precision throughput vs robustness).
 
 use pasa::bench::{emit_json, Bencher};
-use pasa::coordinator::{Engine, EngineConfig, GenParams, GuardPolicy, Request, SchedulerConfig};
+use pasa::coordinator::{
+    Engine, EngineConfig, GenParams, GuardPolicy, KvStore, Request, SchedulerConfig,
+};
 use pasa::model::{ModelDims, Sampling};
 use pasa::runtime::{LabModel, ModelRuntime};
 use pasa::workloads::{bursty_trace, poisson_trace, prompt_of_tokens, Arrival, ArrivalShape};
@@ -42,11 +44,27 @@ fn lab_dims() -> ModelDims {
 /// trace time is engine-step time, so the run is host-speed independent.
 /// Returns (tokens generated, ttft_p50, ttft_p95, itl_p95) in seconds.
 fn run_trace(sched: SchedulerConfig, trace: &[Arrival]) -> (u64, f64, f64, f64) {
+    let (tokens, p50, p95, itl95, _) = run_trace_store(sched, trace, KvStore::F32, 1024);
+    (tokens, p50, p95, itl95)
+}
+
+/// [`run_trace`] with an explicit KV storage format and page budget
+/// (`kv_pages` is denominated in *f32* pages, so both formats get the
+/// same arena bytes — E4M3 just fits 4× the pages in them). The extra
+/// return is the KV-page deferral count, the admission-side fingerprint
+/// of the doubled-residency effect.
+fn run_trace_store(
+    sched: SchedulerConfig,
+    trace: &[Arrival],
+    store: KvStore,
+    kv_pages: usize,
+) -> (u64, f64, f64, f64, u64) {
     let mut cfg = EngineConfig::default();
     cfg.policy = GuardPolicy::Adaptive;
-    cfg.kv_pages = 1024;
+    cfg.kv_pages = kv_pages;
     cfg.page_tokens = 16;
     cfg.max_queue = 1024;
+    cfg.kv_store = store;
     cfg.sched = sched;
     let mut eng = Engine::from_lab(LabModel::synthetic(lab_dims(), 42), cfg);
     let mut next = 0usize;
@@ -69,7 +87,13 @@ fn run_trace(sched: SchedulerConfig, trace: &[Arrival]) -> (u64, f64, f64, f64) 
     }
     let ttft = eng.metrics.ttft.summary();
     let itl = eng.metrics.itl.summary();
-    (eng.metrics.tokens_generated, ttft.p50, ttft.p95, itl.p95)
+    (
+        eng.metrics.tokens_generated,
+        ttft.p50,
+        ttft.p95,
+        itl.p95,
+        eng.metrics.deferrals.kv_pages,
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -118,6 +142,46 @@ fn main() -> anyhow::Result<()> {
                 p50, p95, itl95
             );
         }
+    }
+
+    // ---- Part 1b: KV storage format at a fixed byte budget ----
+    // Bursty replay with a fixed 12+4-token request shape: each request
+    // commits exactly one page per K/V chain (16 tokens at 16
+    // tokens/page), all of it allocated by the first prefill chunk — so
+    // the admission page check is exact and no slot can ever be evicted
+    // by lazy growth. At 16 f32-denominated pages both cells hold the
+    // *same arena bytes*: the f32 pool seats 4 sequences, the E4M3 pool
+    // (4× the pages in the same bytes) seats every burst whole — visible
+    // as fewer KV-page deferrals and a lower tail TTFT at identical
+    // offered load. The slot cap is lifted to 16 so page capacity, not
+    // batch width, binds.
+    println!("\n# bench_serving — KV storage format, fixed byte budget (bursty-6x4)\n");
+    let kv_shape = ArrivalShape {
+        min_prompt_tokens: 12,
+        max_prompt_tokens: 12,
+        min_new: 4,
+        max_new: 4,
+    };
+    let kv_trace = bursty_trace(n_requests, 6, 4, kv_shape, 7);
+    let kv_sched = SchedulerConfig {
+        max_batch_size: 16,
+        ..SchedulerConfig::default()
+    };
+    for (kname, store) in [("kv-f32", KvStore::F32), ("kv-e4m3", KvStore::E4m3)] {
+        let offered: u64 = kv_trace.iter().map(|a| a.max_new as u64).sum();
+        let (tokens, p50, p95, itl95, defers) = run_trace_store(kv_sched, &kv_trace, store, 16);
+        assert_eq!(tokens, offered, "kv-store cell dropped tokens");
+        let r = b.run_tagged(
+            &format!("serve bursty-6x4 {kname}"),
+            "bursty-6x4",
+            kname,
+            tokens as f64,
+            || run_trace_store(kv_sched, &kv_trace, store, 16),
+        );
+        println!(
+            "{kname:<12} ttft_p50={p50:>8.4}s ttft_p95={p95:>8.4}s itl_p95={itl95:>8.4}s \
+             kv_deferrals={defers:<5} {r}"
+        );
     }
 
     // ---- Part 2: PJRT policy sweep (needs compiled artifacts) ----

@@ -64,9 +64,24 @@ pub const AUDIT: &[AuditEntry] = &[
     AuditEntry {
         file: "rust/src/coordinator/kv_cache.rs",
         kind: UnsafeKind::Block,
-        count: 4,
-        why: "UnsafeCell arena views: reads through layout-compatible slices \
-              of pages the reader owns, writes behind the refcount-1 witness",
+        count: 7,
+        why: "UnsafeCell arena views (f32 and E4M3 byte arenas): reads through \
+              layout-compatible slices of pages the reader owns, writes behind \
+              the refcount-1 witness",
+    },
+    AuditEntry {
+        file: "rust/src/tensor/simd.rs",
+        kind: UnsafeKind::Fn,
+        count: 3,
+        why: "AVX2 target_feature microkernels (dot/dot4/axpy); callers must \
+              hold the detected() witness, enforced by the safe wrappers",
+    },
+    AuditEntry {
+        file: "rust/src/tensor/simd.rs",
+        kind: UnsafeKind::Block,
+        count: 6,
+        why: "in-bounds unaligned loadu/storeu over slice-derived pointers \
+              inside the kernels, plus detected()-gated wrapper dispatch",
     },
     AuditEntry {
         file: "rust/src/pool.rs",

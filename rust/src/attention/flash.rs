@@ -144,6 +144,8 @@ pub(crate) fn flash_q_block(
         let j1 = (j0 + bs.s2).min(s2_total);
         k.block_into(j0, j1, &mut ws.kj);
         v.block_into(j0, j1, &mut ws.vj);
+        debug_assert_eq!(ws.kj.cols, d, "gathered K panel width != head_dim");
+        debug_assert_eq!(ws.vj.cols, dv, "gathered V panel width != head_dim");
         let width = j1 - j0;
         ws.bvis.clear();
         ws.bvis

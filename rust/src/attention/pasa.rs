@@ -106,6 +106,7 @@ pub fn pasa_preprocess_kv(k: KvView<'_>, cfg: &AttentionConfig) -> PasaPre {
         while j0 < s2_total {
             let j1 = (j0 + bs2).min(s2_total);
             k.block_into(j0, j1, &mut ws.kj);
+            debug_assert_eq!(ws.kj.cols, d, "gathered K panel width != head_dim");
             if j1 - j0 == bs2 {
                 kp_blocks.push(preprocess_k(&ws.kj, &m_full, gemm));
                 block_inva.push(inva_main);
@@ -245,6 +246,7 @@ pub(crate) fn pasa_q_block(
         }
         let j1 = (j0 + bs.s2).min(s2_total);
         v.block_into(j0, j1, &mut ws.vj);
+        debug_assert_eq!(ws.vj.cols, dv, "gathered V panel width != head_dim");
         let kp = &pre.kp_blocks[jidx];
         let width = j1 - j0;
         ws.bvis.clear();

@@ -34,6 +34,35 @@ pub trait KvPageSource: Sync {
     fn row_width(&self) -> usize;
     /// The raw page data: `page_tokens() * row_width()` floats.
     fn page_data(&self, id: PageId) -> &[f32];
+
+    // lint: hot-path — per-page row gather of the KV block sweep.
+    /// Gather `take` token rows of page `id`, starting at in-page row
+    /// `off` and windowed to columns `[col0, col0 + cols)`, into `out`
+    /// rows `out_row0..out_row0 + take`.
+    ///
+    /// The default reads the f32 view from [`Self::page_data`], hoisting
+    /// the page's row range into one slice up front so the per-row copies
+    /// index into an already-bounds-checked panel. Byte-backed pools
+    /// (E4M3 KV storage) override this to fuse dequantization into the
+    /// gather instead of materializing an f32 page.
+    fn gather_rows(
+        &self,
+        id: PageId,
+        off: usize,
+        take: usize,
+        col0: usize,
+        cols: usize,
+        out: &mut Matrix,
+        out_row0: usize,
+    ) {
+        let w = self.row_width();
+        let src = &self.page_data(id)[off * w..(off + take) * w];
+        for t in 0..take {
+            let srow = &src[t * w + col0..t * w + col0 + cols];
+            out.row_mut(out_row0 + t).copy_from_slice(srow);
+        }
+    }
+    // lint: end-hot-path
 }
 
 /// A borrowed view of one KV operand (the K *or* V of one KV head): either
@@ -170,6 +199,9 @@ impl<'a> KvView<'a> {
     /// absorbs every KV block of the sweep without touching the heap.
     pub fn block_into(&self, r0: usize, r1: usize, out: &mut Matrix) {
         match *self {
+            // Dense: one hoisted slice copy straight off the source rows —
+            // no per-row bounds re-check (`copy_rows_from` is a single
+            // `extend_from_slice` of the whole row range).
             KvView::Dense(m) => out.copy_rows_from(m, r0, r1),
             KvView::Paged {
                 pages,
@@ -180,7 +212,6 @@ impl<'a> KvView<'a> {
             } => {
                 assert!(r0 <= r1 && r1 <= len_tokens, "paged block out of range");
                 let pt = pool.page_tokens();
-                let w = pool.row_width();
                 out.reshape(r1 - r0, cols); // every row fully copied below
                 let mut r = r0;
                 while r < r1 {
@@ -189,11 +220,7 @@ impl<'a> KvView<'a> {
                     // Rows available in this page before the block (or the
                     // page) ends.
                     let take = (pt - off).min(r1 - r);
-                    let src = pool.page_data(pages[pg]);
-                    for t in 0..take {
-                        let srow = &src[(off + t) * w + col0..(off + t) * w + col0 + cols];
-                        out.row_mut(r - r0 + t).copy_from_slice(srow);
-                    }
+                    pool.gather_rows(pages[pg], off, take, col0, cols, out, r - r0);
                     r += take;
                 }
             }

@@ -16,6 +16,12 @@
 //! zero-filled) before use, so reuse cannot leak state between calls.
 //! Thread-locality means the worker pool's threads each warm their own
 //! arena once and reuse it for every (head × Q-block) tile they steal.
+//!
+//! The gathered `kj`/`vj` blocks double as the **packed K-panels** of the
+//! SIMD GEMM path: `KvView::block_into` writes each KV block row-major and
+//! contiguous into them (dequantizing byte-backed E4M3 pages on the way),
+//! and the AVX2 cores in [`crate::tensor::simd`] then slice four
+//! consecutive rows at a time straight out of the panel — no second pack.
 
 use crate::tensor::Matrix;
 use std::cell::RefCell;

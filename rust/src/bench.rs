@@ -160,6 +160,13 @@ pub fn smoke() -> bool {
     std::env::var("PASA_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
 }
 
+/// Schema version stamped into every `BENCH_*.json` report. Bump when a
+/// field is added, renamed or re-scaled, so perf-history tooling can
+/// refuse (or migrate) reports it does not understand instead of silently
+/// misreading them. Version 1 = the PR 8 shape: top-level `bench` /
+/// `smoke` / `schema_version` / `results[]` with the ten per-row fields.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
 /// One registry row of the JSON report.
 struct JsonRow {
     name: String,
@@ -232,6 +239,7 @@ pub fn emit_json_to(dir: &str, bench: &str) {
     let mut body = String::new();
     body.push_str("{\n");
     body.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+    body.push_str(&format!("  \"schema_version\": {BENCH_SCHEMA_VERSION},\n"));
     body.push_str(&format!("  \"smoke\": {},\n", smoke()));
     body.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -297,6 +305,10 @@ mod tests {
         let path = dir.join("BENCH_unit_test.json");
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.contains("\"bench\": \"unit_test\""));
+        assert!(
+            body.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")),
+            "report must carry the schema version"
+        );
         assert!(body.contains("\\\"quoted\\\""));
         assert!(body.contains("\"shape\": \"8x8\""));
         assert!(body.contains("\"alloc\": \"FA(FP32)\""));

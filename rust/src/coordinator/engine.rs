@@ -53,7 +53,7 @@
 //! to the pool — never a panic, never a corrupted cache.
 
 use super::guard::{Guard, GuardPolicy, GuardSignal};
-use super::kv_cache::{KvPool, SeqCache};
+use super::kv_cache::{KvPool, KvStore, SeqCache};
 use super::metrics::Metrics;
 use super::request::{Completion, FinishReason, Phase, Request, StreamEvent, TokenEvent};
 use super::router::{Admission, Router};
@@ -80,10 +80,18 @@ pub struct EngineConfig {
     /// path replays under "pasa" — the CLI rejects a non-default
     /// `--alloc` on the PJRT serve path for exactly this reason.
     pub start_alloc: Allocation,
-    /// Total pages in the KV pool.
+    /// Total pages in the KV pool **at f32 storage** — `kv_pages ×
+    /// page_tokens × head_width × 4` bytes. The pool is sized by that
+    /// byte budget, so choosing a 1-byte [`KvStore`] multiplies the
+    /// page count (4× for `E4m3`) instead of shrinking the arena: the
+    /// knob compares storage formats at fixed memory, not fixed pages.
     pub kv_pages: usize,
     /// Tokens per page.
     pub page_tokens: usize,
+    /// KV page element format (`pasa serve --kv-store {f32|e4m3}`).
+    /// **Lab backend only** for `E4m3`: the PJRT dense-cache path is
+    /// gated off byte-backed pools by the CLI.
+    pub kv_store: KvStore,
     pub max_queue: usize,
     /// Continuous-batching budgets (see [`SchedulerConfig`]).
     pub sched: SchedulerConfig,
@@ -96,6 +104,7 @@ impl Default for EngineConfig {
             start_alloc: Allocation::Fa16_32,
             kv_pages: 4096,
             page_tokens: 32,
+            kv_store: KvStore::F32,
             max_queue: 256,
             sched: SchedulerConfig::default(),
         }
@@ -280,7 +289,12 @@ impl<'rt> Engine<'rt> {
             backend,
             dims,
             router,
-            pool: KvPool::new(cfg.kv_pages, cfg.page_tokens, dims.head_width()),
+            pool: KvPool::with_byte_budget(
+                cfg.kv_pages * cfg.page_tokens * dims.head_width() * 4,
+                cfg.page_tokens,
+                dims.head_width(),
+                cfg.kv_store,
+            ),
             active: Vec::with_capacity(b),
             metrics: Metrics::new(),
             completions: Vec::new(),

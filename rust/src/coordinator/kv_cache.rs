@@ -9,6 +9,8 @@
 //! Dense tensors are assembled only at the batch boundary.
 
 use crate::attention::{KvPageSource, KvView};
+use crate::numerics::{f32_to_f8e4m3_bits, f8e4m3_decode_table};
+use crate::tensor::Matrix;
 use anyhow::{bail, Result};
 use std::cell::UnsafeCell;
 
@@ -16,8 +18,51 @@ use std::cell::UnsafeCell;
 /// lab's `attention::PageId` — a paged `KvView` indexes this pool).
 pub type PageId = u32;
 
+/// Element storage format of the KV arena.
+///
+/// The pool's *logical* contents are always `row_width` f32 per token row;
+/// `E4m3` stores each element as one FP8-E4M3 byte (4× the resident
+/// sequences at a fixed byte budget), quantizing on write and dequantizing
+/// on the gather into the attention workspace panel. Quantization error is
+/// priced by the differential-fuzz per-allocation RMSE gates
+/// (`rust/tests/differential_fuzz.rs`), not bit-equality — E4M3 KV is a
+/// lossy residency/accuracy trade the paper's PASA shifting makes safe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvStore {
+    /// Full-precision f32 pages (4 bytes/element) — the fuzz oracle.
+    F32,
+    /// FP8-E4M3 pages (1 byte/element), RTNE-quantized on write.
+    E4m3,
+}
+
+impl KvStore {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            KvStore::F32 => 4,
+            KvStore::E4m3 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvStore::F32 => "f32",
+            KvStore::E4m3 => "e4m3",
+        }
+    }
+
+    /// Parse a CLI knob value (`pasa serve --kv-store {f32|e4m3}`).
+    pub fn parse(s: &str) -> Result<KvStore> {
+        match s {
+            "f32" => Ok(KvStore::F32),
+            "e4m3" => Ok(KvStore::E4m3),
+            other => bail!("unknown KV store format {other:?} (expected f32 or e4m3)"),
+        }
+    }
+}
+
 /// Fixed-capacity page pool. Each page holds `page_tokens` rows of
-/// `row_width` f32 (one layer's K *or* V slice of those tokens).
+/// `row_width` elements (one layer's K *or* V slice of those tokens),
+/// stored per [`KvStore`]: native f32 or one E4M3 byte per element.
 ///
 /// Page *data* is interior-mutable (`UnsafeCell`) so the engine's
 /// parallel decode can write each slot's freshly-privatized pages through
@@ -28,33 +73,82 @@ pub type PageId = u32;
 pub struct KvPool {
     pub page_tokens: usize,
     pub row_width: usize,
+    store: KvStore,
+    /// f32 arena — populated iff `store == KvStore::F32`.
     arena: Vec<UnsafeCell<f32>>,
+    /// E4M3 byte arena — populated iff `store == KvStore::E4m3`.
+    arena8: Vec<UnsafeCell<u8>>,
     refcount: Vec<u32>,
     free: Vec<PageId>,
     total_pages: usize,
 }
 
-// SAFETY: the arena is written either through `&mut self` (exclusive) or
-// through `page_write`, whose contract restricts writes to pages with
+// SAFETY: both arenas are written either through `&mut self` (exclusive)
+// or through `page_write`, whose contract restricts writes to pages with
 // refcount 1 reachable from exactly one sequence's page table — so no two
 // threads ever access the same page concurrently with at least one
-// writing. Metadata is `&mut self`-only and the arena is never resized
+// writing. Metadata is `&mut self`-only and neither arena is ever resized
 // after construction.
 unsafe impl Sync for KvPool {}
 
 impl KvPool {
     pub fn new(total_pages: usize, page_tokens: usize, row_width: usize) -> KvPool {
-        let floats = total_pages * page_tokens * row_width;
-        let mut arena = Vec::with_capacity(floats);
-        arena.resize_with(floats, || UnsafeCell::new(0.0));
+        Self::new_with_store(total_pages, page_tokens, row_width, KvStore::F32)
+    }
+
+    pub fn new_with_store(
+        total_pages: usize,
+        page_tokens: usize,
+        row_width: usize,
+        store: KvStore,
+    ) -> KvPool {
+        let elems = total_pages * page_tokens * row_width;
+        let mut arena = Vec::new();
+        let mut arena8 = Vec::new();
+        match store {
+            KvStore::F32 => {
+                arena.reserve_exact(elems);
+                arena.resize_with(elems, || UnsafeCell::new(0.0));
+            }
+            KvStore::E4m3 => {
+                arena8.reserve_exact(elems);
+                // 0x00 is +0.0 in E4M3, so fresh pages decode to zeros.
+                arena8.resize_with(elems, || UnsafeCell::new(0));
+            }
+        }
         KvPool {
             page_tokens,
             row_width,
+            store,
             arena,
+            arena8,
             refcount: vec![0; total_pages],
             free: (0..total_pages as PageId).rev().collect(),
             total_pages,
         }
+    }
+
+    /// Size the pool by *bytes* instead of pages — the apples-to-apples
+    /// comparison surface for KV storage formats: at a fixed byte budget,
+    /// `E4m3` holds 4× the pages of `F32` (2× an FP16 baseline), which is
+    /// exactly the doubled-residency effect `bench_serving` measures.
+    pub fn with_byte_budget(
+        bytes: usize,
+        page_tokens: usize,
+        row_width: usize,
+        store: KvStore,
+    ) -> KvPool {
+        let page_bytes = page_tokens * row_width * store.bytes_per_elem();
+        let pages = bytes / page_bytes.max(1);
+        Self::new_with_store(pages, page_tokens, row_width, store)
+    }
+
+    pub fn store(&self) -> KvStore {
+        self.store
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
     }
 
     pub fn page_floats(&self) -> usize {
@@ -96,9 +190,19 @@ impl KvPool {
                 debug_assert_eq!(self.refcount[id as usize], 0);
                 self.refcount[id as usize] = 1;
                 // Fresh pages are zeroed: the PASA kernels' pseudo-average
-                // must not see stale garbage in masked positions.
-                for c in self.page_mut(id).iter_mut() {
-                    *c = 0.0;
+                // must not see stale garbage in masked positions. (E4M3:
+                // byte 0x00 decodes to +0.0.)
+                match self.store {
+                    KvStore::F32 => {
+                        for c in self.page_mut(id).iter_mut() {
+                            *c = 0.0;
+                        }
+                    }
+                    KvStore::E4m3 => {
+                        for c in self.page8_mut(id).iter_mut() {
+                            *c = 0;
+                        }
+                    }
                 }
                 Ok(id)
             }
@@ -120,6 +224,7 @@ impl KvPool {
     }
 
     fn page(&self, id: PageId) -> &[f32] {
+        debug_assert_eq!(self.store, KvStore::F32, "f32 page view of a byte-backed pool");
         let off = id as usize * self.page_floats();
         let pf = self.page_floats();
         let cells = &self.arena[off..off + pf];
@@ -131,6 +236,7 @@ impl KvPool {
     }
 
     fn page_mut(&mut self, id: PageId) -> &mut [f32] {
+        debug_assert_eq!(self.store, KvStore::F32, "f32 page view of a byte-backed pool");
         let off = id as usize * self.page_floats();
         let pf = self.page_floats();
         let cells = &mut self.arena[off..off + pf];
@@ -138,8 +244,48 @@ impl KvPool {
         unsafe { &mut *(cells as *mut [UnsafeCell<f32>] as *mut [f32]) }
     }
 
-    /// Write `src` into page `id` starting at float offset `off`, through
-    /// a **shared** pool reference — the parallel-decode write path.
+    fn page8(&self, id: PageId) -> &[u8] {
+        debug_assert_eq!(self.store, KvStore::E4m3, "byte page view of an f32 pool");
+        let off = id as usize * self.page_floats();
+        let pf = self.page_floats();
+        let cells = &self.arena8[off..off + pf];
+        // SAFETY: UnsafeCell<u8> is layout-compatible with u8, and the
+        // pool's Sync invariant guarantees no thread writes this page
+        // while a read borrow can exist (same argument as `page`).
+        unsafe { &*(cells as *const [UnsafeCell<u8>] as *const [u8]) }
+    }
+
+    fn page8_mut(&mut self, id: PageId) -> &mut [u8] {
+        debug_assert_eq!(self.store, KvStore::E4m3, "byte page view of an f32 pool");
+        let off = id as usize * self.page_floats();
+        let pf = self.page_floats();
+        let cells = &mut self.arena8[off..off + pf];
+        // SAFETY: `&mut self` is exclusive pool access.
+        unsafe { &mut *(cells as *mut [UnsafeCell<u8>] as *mut [u8]) }
+    }
+
+    /// Store `src` into page `id` at element offset `off` through the
+    /// store format — f32 verbatim, E4M3 RTNE-quantized — with exclusive
+    /// (`&mut self`) pool access. The single write seam of the exclusive
+    /// paths (`write_row`, CoW is byte-level and bypasses it).
+    fn store_at(&mut self, id: PageId, off: usize, src: &[f32]) {
+        match self.store {
+            KvStore::F32 => {
+                self.page_mut(id)[off..off + src.len()].copy_from_slice(src);
+            }
+            KvStore::E4m3 => {
+                let dst = &mut self.page8_mut(id)[off..off + src.len()];
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = f32_to_f8e4m3_bits(x);
+                }
+            }
+        }
+    }
+
+    /// Write `src` into page `id` starting at element offset `off`,
+    /// through a **shared** pool reference — the parallel-decode write
+    /// path. Quantizes through the store format exactly like
+    /// [`Self::store_at`].
     ///
     /// # Safety
     /// The caller must guarantee exclusive access to page `id` for the
@@ -155,13 +301,28 @@ impl KvPool {
              contract requires a refcount-1 page owned by the calling slot",
             self.refcount[id as usize]
         );
-        // SAFETY: the caller guarantees exclusive access to page `id` for
-        // the duration of the call (debug builds assert the refcount-1
-        // ownership witness above), so no other thread can read or write
-        // these cells while we store through them.
-        unsafe {
-            for (i, &x) in src.iter().enumerate() {
-                *self.arena[base + i].get() = x;
+        match self.store {
+            KvStore::F32 => {
+                // SAFETY: the caller guarantees exclusive access to page
+                // `id` for the duration of the call (debug builds assert
+                // the refcount-1 ownership witness above), so no other
+                // thread can read or write these cells while we store
+                // through them.
+                unsafe {
+                    for (i, &x) in src.iter().enumerate() {
+                        *self.arena[base + i].get() = x;
+                    }
+                }
+            }
+            KvStore::E4m3 => {
+                // SAFETY: same exclusive-access argument as the F32 arm;
+                // the store merely quantizes each element to its E4M3
+                // byte first.
+                unsafe {
+                    for (i, &x) in src.iter().enumerate() {
+                        *self.arena8[base + i].get() = f32_to_f8e4m3_bits(x);
+                    }
+                }
             }
         }
     }
@@ -169,7 +330,9 @@ impl KvPool {
 
 /// The attention lab reads pages straight out of the pool: a
 /// `KvView::Paged` over this pool is the zero-copy bridge from the
-/// serving cache to the instrumented kernels.
+/// serving cache to the instrumented kernels. Byte-backed (E4M3) pools
+/// have no raw f32 page view — every read goes through the dequantizing
+/// [`KvPageSource::gather_rows`] override below.
 impl KvPageSource for KvPool {
     fn page_tokens(&self) -> usize {
         self.page_tokens
@@ -180,8 +343,52 @@ impl KvPageSource for KvPool {
     }
 
     fn page_data(&self, id: PageId) -> &[f32] {
-        self.page(id)
+        match self.store {
+            KvStore::F32 => self.page(id),
+            KvStore::E4m3 => panic!(
+                "byte-backed E4m3 KV pages have no raw f32 view — gather through \
+                 KvPageSource::gather_rows (KvView::block_into does)"
+            ),
+        }
     }
+
+    // lint: hot-path — per-page gather of the serving decode sweep.
+    fn gather_rows(
+        &self,
+        id: PageId,
+        off: usize,
+        take: usize,
+        col0: usize,
+        cols: usize,
+        out: &mut Matrix,
+        out_row0: usize,
+    ) {
+        let w = self.row_width;
+        match self.store {
+            KvStore::F32 => {
+                let src = &self.page(id)[off * w..(off + take) * w];
+                for t in 0..take {
+                    let srow = &src[t * w + col0..t * w + col0 + cols];
+                    out.row_mut(out_row0 + t).copy_from_slice(srow);
+                }
+            }
+            KvStore::E4m3 => {
+                // Dequantize on the gather: one 256-entry LUT lookup per
+                // element, fused into the panel copy so no intermediate
+                // f32 page is ever materialized.
+                let lut = f8e4m3_decode_table();
+                let src = &self.page8(id)[off * w..(off + take) * w];
+                for t in 0..take {
+                    let srow = &src[t * w + col0..t * w + col0 + cols];
+                    let drow = out.row_mut(out_row0 + t);
+                    for (d, &b) in drow.iter_mut().zip(srow) {
+                        *d = lut[b as usize];
+                    }
+                }
+            }
+        }
+    }
+    // lint: end-hot-path
 }
 
 /// One sequence's paged cache: per layer, a page table for K and for V.
@@ -256,11 +463,26 @@ impl SeqCache {
     /// untouched (the shared page stays valid).
     fn ensure_private(pool: &mut KvPool, id: &mut PageId) -> Result<()> {
         if pool.refcount[*id as usize] > 1 {
-            let copy: Vec<f32> = pool.page(*id).to_vec();
-            let fresh = pool
-                .alloc()
-                .map_err(|e| e.context("copy-on-write of a shared KV page"))?;
-            pool.page_mut(fresh).copy_from_slice(&copy);
+            let fresh = match pool.store {
+                KvStore::F32 => {
+                    let copy: Vec<f32> = pool.page(*id).to_vec();
+                    let fresh = pool
+                        .alloc()
+                        .map_err(|e| e.context("copy-on-write of a shared KV page"))?;
+                    pool.page_mut(fresh).copy_from_slice(&copy);
+                    fresh
+                }
+                KvStore::E4m3 => {
+                    // CoW copies raw bytes — no decode/re-encode round
+                    // trip, so a forked page stays bit-identical.
+                    let copy: Vec<u8> = pool.page8(*id).to_vec();
+                    let fresh = pool
+                        .alloc()
+                        .map_err(|e| e.context("copy-on-write of a shared KV page"))?;
+                    pool.page8_mut(fresh).copy_from_slice(&copy);
+                    fresh
+                }
+            };
             pool.release(*id);
             *id = fresh;
         }
@@ -286,11 +508,11 @@ impl SeqCache {
         let kid = &mut kp[pg];
         Self::ensure_private(pool, kid)?;
         let kid = *kid;
-        pool.page_mut(kid)[off * w..(off + 1) * w].copy_from_slice(k_row);
+        pool.store_at(kid, off * w, k_row);
         let vid = &mut vp[pg];
         Self::ensure_private(pool, vid)?;
         let vid = *vid;
-        pool.page_mut(vid)[off * w..(off + 1) * w].copy_from_slice(v_row);
+        pool.store_at(vid, off * w, v_row);
         self.len_tokens = self.len_tokens.max(pos + 1);
         Ok(())
     }
@@ -382,9 +604,19 @@ impl SeqCache {
             if rows == 0 {
                 break;
             }
-            let src = pool.page(id);
             let dst_off = pi * pt * w;
-            out[dst_off..dst_off + rows * w].copy_from_slice(&src[..rows * w]);
+            let dst = &mut out[dst_off..dst_off + rows * w];
+            // Store-agnostic assembly: the dense-batch (PJRT) backend
+            // consumes f32 regardless of how the pages are resident.
+            match pool.store {
+                KvStore::F32 => dst.copy_from_slice(&pool.page(id)[..rows * w]),
+                KvStore::E4m3 => {
+                    let lut = f8e4m3_decode_table();
+                    for (d, &b) in dst.iter_mut().zip(&pool.page8(id)[..rows * w]) {
+                        *d = lut[b as usize];
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -671,5 +903,95 @@ mod tests {
         assert_eq!(kh.cols(), 4);
         assert_eq!(kh.to_matrix().at(5, 0), 54.0);
         s.release(&mut p);
+    }
+
+    fn pool_e4m3() -> KvPool {
+        KvPool::new_with_store(64, 4, 8, KvStore::E4m3)
+    }
+
+    #[test]
+    fn byte_budget_sizes_pages_by_store_format() {
+        // Same byte budget, 4× the pages under E4M3 (1 B vs 4 B per elem)
+        // — the fixed-pool-size residency comparison surface.
+        let budget = 64 * 4 * 8 * 4; // 64 f32 pages of 4 tokens × width 8
+        let pf = KvPool::with_byte_budget(budget, 4, 8, KvStore::F32);
+        let pq = KvPool::with_byte_budget(budget, 4, 8, KvStore::E4m3);
+        assert_eq!(pf.total_pages(), 64);
+        assert_eq!(pq.total_pages(), 256);
+        assert_eq!(pq.store(), KvStore::E4m3);
+    }
+
+    #[test]
+    fn e4m3_pool_round_trips_grid_values_and_quantizes_the_rest() {
+        use crate::numerics::round_f8e4m3;
+        let mut p = pool_e4m3();
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut p, 6).unwrap();
+        // On-grid values survive exactly; off-grid values land on the
+        // RTNE-rounded E4M3 neighbor; 448 is the format max.
+        let krow = [0.0f32, 0.5, -2.0, 448.0, 1.1, -0.07, 300.0, 2e-9];
+        let vrow = [1.0f32; 8];
+        s.write_row(&mut p, 0, 5, &krow, &vrow).unwrap();
+        let mut dense = vec![9.0f32; 16 * 8];
+        s.fill_dense(&p, 0, false, &mut dense).unwrap();
+        for (i, (&got, &x)) in dense[5 * 8..6 * 8].iter().zip(&krow).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                round_f8e4m3(x).to_bits(),
+                "elem {i}: wrote {x}, read {got}"
+            );
+        }
+        assert_eq!(&dense[..8], &[0.0; 8], "fresh E4M3 rows decode to zeros");
+        // The paged view gathers the same dequantized values.
+        s.len_tokens = 6;
+        let (kv, _vv) = s.kv_views(&p, 0);
+        let k = kv.to_matrix();
+        assert_eq!(k.at(5, 3), 448.0);
+        assert_eq!(k.at(5, 4).to_bits(), round_f8e4m3(1.1).to_bits());
+        // Column-window gather dequantizes the same bytes.
+        let kh = kv.col_window(4, 4);
+        assert_eq!(kh.to_matrix().at(5, 0).to_bits(), round_f8e4m3(1.1).to_bits());
+        s.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn e4m3_cow_and_prepared_writes_match_the_exclusive_path() {
+        // The fork/CoW and shared-reference write machinery must behave
+        // identically under byte-backed storage: raw-byte CoW copies,
+        // quantizing prepared writes, intact originals.
+        let mut p = pool_e4m3();
+        let mut a = SeqCache::new(1);
+        a.ensure_capacity(&mut p, 4).unwrap();
+        let row = [2.5f32; 8];
+        a.write_row(&mut p, 0, 0, &row, &row).unwrap();
+        let used_before = p.used_pages();
+        let mut b = a.fork(&mut p);
+        assert_eq!(p.used_pages(), used_before, "fork must not allocate");
+        b.prepare_step(&mut p, 1).unwrap();
+        assert!(p.used_pages() > used_before, "prepare_step privatized CoW pages");
+        let row2 = [1.1f32; 8];
+        b.write_row_prepared(&p, 0, 1, &row2, &row2);
+        let mut db = vec![0.0f32; 4 * 8];
+        b.fill_dense(&p, 0, false, &mut db).unwrap();
+        assert_eq!(&db[..8], &[2.5f32; 8], "shared prefix preserved bit-exactly");
+        let q = crate::numerics::round_f8e4m3(1.1);
+        assert_eq!(&db[8..16], &[q; 8], "prepared write quantized like write_row");
+        let mut da = vec![0.0f32; 4 * 8];
+        a.fill_dense(&p, 0, false, &mut da).unwrap();
+        assert_eq!(&da[8..16], &[0.0; 8], "original must not see the fork's write");
+        a.release(&mut p);
+        b.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no raw f32 view")]
+    fn e4m3_pages_refuse_the_raw_f32_view() {
+        let mut p = pool_e4m3();
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut p, 1).unwrap();
+        let id = s.page_ids(0, false)[0];
+        let _ = p.page_data(id);
     }
 }

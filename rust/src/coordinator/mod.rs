@@ -11,7 +11,7 @@ pub mod scheduler;
 
 pub use engine::{Backend, Engine, EngineConfig};
 pub use guard::{Guard, GuardPolicy, GuardSignal, DEFAULT_PREEMPTIVE_FRAC};
-pub use kv_cache::{KvPool, SeqCache};
+pub use kv_cache::{KvPool, KvStore, SeqCache};
 pub use metrics::{HistSummary, Histogram, Metrics, SchedDeferrals};
 pub use request::{
     Completion, FinishReason, GenParams, Phase, Priority, Request, StreamEvent, TokenEvent,

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 use pasa::attention::{beta, Allocation};
 use pasa::cli::Args;
 use pasa::coordinator::{
-    Engine, EngineConfig, GenParams, GuardPolicy, Request, SchedulerConfig, StreamEvent,
+    Engine, EngineConfig, GenParams, GuardPolicy, KvStore, Request, SchedulerConfig, StreamEvent,
 };
 use pasa::experiments::{self, ExpOptions};
 use pasa::model::Sampling;
@@ -33,7 +33,8 @@ USAGE: pasa <subcommand> [flags]
         guard_rescue)
   serve [--artifacts DIR] [--requests N] [--lab] [--stream]
         [--policy pasa|fa16_32|fa32|adaptive|preemptive]
-        [--alloc fa16_32|fp8|pasa8|...] [--max-new N] [--temperature T]
+        [--alloc fa16_32|fp8|pasa8|...] [--kv-store f32|e4m3]
+        [--max-new N] [--temperature T]
         [--max-batch-prefill-tokens N] [--max-batch-total-tokens N]
         [--waiting-served-ratio R] [--max-batch-size N] [--fifo]
         run the continuous-batching serving engine over a synthetic
@@ -42,7 +43,8 @@ USAGE: pasa <subcommand> [flags]
         sampled; --fifo disables the token budgets (pre-scheduler
         behaviour, the benchmark comparator). --alloc roots the
         switching policies' fallback chain: fa16_32 -> pasa, or
-        fp8 -> pasa8 -> pasa (lab only)
+        fp8 -> pasa8 -> pasa (lab only). --kv-store e4m3 stores KV
+        pages as 1-byte FP8 (4x pages at the same byte budget; lab only)
   solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
         solve the optimal accuracy condition
   info  [--artifacts DIR]
@@ -120,6 +122,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
              allocations (fp8, pasa8, ...) need the lab backend (--lab)."
         );
     }
+    // KV page storage format. E4M3 pages are gathered (dequantized) by
+    // the lab backend's paged attention; the PJRT dense-cache path is
+    // kept on f32 pools for the same keep-it-servable reason as --alloc.
+    let kv_store = KvStore::parse(&args.get_or("kv-store", "f32"))?;
+    if !lab && kv_store != KvStore::F32 {
+        bail!(
+            "--kv-store {} needs the lab backend (--lab); the PJRT dense-cache \
+             path serves from f32 pools only.",
+            kv_store.name()
+        );
+    }
 
     // Continuous-batching knobs (see SchedulerConfig): token budgets,
     // the starvation ratio, and the slot cap. --fifo restores the
@@ -140,6 +153,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::default();
     cfg.policy = policy;
     cfg.start_alloc = start_alloc;
+    cfg.kv_store = kv_store;
     cfg.sched = sched;
 
     // The engine borrows a PJRT runtime; keep it alive across both arms.

@@ -15,4 +15,6 @@ pub use error::{
     relative_rmse,
 };
 pub use f16::{f16_bits_to_f32, f32_to_f16_bits, round_f16, F16, F16_EPS, F16_MAX};
-pub use round::Format;
+pub use round::{
+    f32_to_f8e4m3_bits, f8e4m3_bits_to_f32, f8e4m3_decode_table, round_f8e4m3, Format,
+};

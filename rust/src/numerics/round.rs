@@ -105,6 +105,22 @@ pub trait RoundSpec {
     /// True only for [`RoundF32`] — lets loops skip a no-op rounding pass.
     const IS_IDENTITY: bool = false;
     fn round(x: f32) -> f32;
+
+    /// Round a 4-lane panel — the vector-lane extension of the
+    /// monomorphization, consumed by the SIMD GEMM microkernels
+    /// ([`crate::tensor::simd`]). The default is per-lane scalar rounding,
+    /// which makes lane-wise bit-identity to the scalar cores definitional:
+    /// a vectorized core that stores through this hook cannot diverge from
+    /// the scalar store rounding, whatever the format.
+    #[inline(always)]
+    fn round4(x: [f32; 4]) -> [f32; 4] {
+        [
+            Self::round(x[0]),
+            Self::round(x[1]),
+            Self::round(x[2]),
+            Self::round(x[3]),
+        ]
+    }
 }
 
 /// Monomorphized [`Format::F16`] rounding.
@@ -271,6 +287,21 @@ pub fn round_f8e4m3(x: f32) -> f32 {
     f8e4m3_bits_to_f32(f32_to_f8e4m3_bits(x))
 }
 
+/// The 256-entry E4M3FN decode table — the bulk-dequantization path of the
+/// byte-backed KV cache (`KvStore::E4m3`): one table load per gathered
+/// element instead of the bit-decode arithmetic. Entry `b` is exactly
+/// [`f8e4m3_bits_to_f32`]`(b)`, so table and scalar decode cannot diverge.
+pub fn f8e4m3_decode_table() -> &'static [f32; 256] {
+    static TABLE: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = f8e4m3_bits_to_f32(b as u8);
+        }
+        t
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -399,6 +430,37 @@ mod tests {
                     fmt.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn round4_is_per_lane_round_for_every_format() {
+        // The vector-lane extension must be exactly per-lane scalar
+        // rounding — including NaN-producing lanes (E4M3 overflow).
+        let panel = [1.0471f32, -465.0, 70000.0, 2f32.powi(-9) * 1.5];
+        for fmt in [Format::F16, Format::Bf16, Format::F32, Format::F8E4M3] {
+            let lanes = crate::mono_format!(fmt, R => R::round4(panel));
+            for (t, (&got, &x)) in lanes.iter().zip(&panel).enumerate() {
+                let want = fmt.round(x);
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "{} lane {t}: {got} vs {want}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f8_decode_table_matches_scalar_decode() {
+        let t = f8e4m3_decode_table();
+        for b in 0u16..=0xff {
+            let want = f8e4m3_bits_to_f32(b as u8);
+            let got = t[b as usize];
+            assert!(
+                got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                "byte {b:#04x}: {got} vs {want}"
+            );
         }
     }
 

@@ -26,6 +26,7 @@
 //! rounding inlines to the bitwise converters.
 
 use super::matrix::{Matrix, RowsRef};
+use super::simd;
 use crate::numerics::round::RoundSpec;
 use crate::numerics::Format;
 
@@ -92,9 +93,11 @@ impl GemmStats {
 // lint: hot-path — dot-product cores of every GEMM inner loop.
 /// One dot product `A[i]·B[j]` under the f32-accumulate fast path — the
 /// exact accumulation order of [`matmul_nt`]'s vectorized loop, factored
-/// out so the instrumented/masked variants stay bit-identical to it.
+/// out so the instrumented/masked variants stay bit-identical to it. Also
+/// the bit-identity reference (and non-x86-64 fallback) of the AVX2
+/// microkernels in [`super::simd`].
 #[inline]
-fn dot_f32(ar: &[f32], br: &[f32]) -> f32 {
+pub(crate) fn dot_f32(ar: &[f32], br: &[f32]) -> f32 {
     let mut acc = [0.0f32; 8];
     let mut ac = ar.chunks_exact(8);
     let mut bc = br.chunks_exact(8);
@@ -158,11 +161,40 @@ pub fn matmul_nt_into(a: RowsRef<'_>, b: &Matrix, p: GemmPrecision, c: &mut Matr
 }
 
 fn nt_core_f32<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    if simd::enabled() {
+        return nt_core_f32_simd::<S>(a, b, c);
+    }
     for i in 0..a.rows {
         let ar = a.row(i);
         let crow = c.row_mut(i);
         for j in 0..b.rows {
             crow[j] = S::round(dot_f32(ar, b.row(j)));
+        }
+    }
+}
+
+/// AVX2-blocked twin of [`nt_core_f32`]: B is row-major, so four
+/// consecutive B rows form one contiguous packed K-panel sliced straight
+/// out of `b.data` — the workspace K-block the attention loop stages is
+/// consumed 4 rows at a time by [`simd::dot4`], and the results round
+/// through the vector-lane [`RoundSpec::round4`]. Bit-identical to the
+/// scalar core: each `dot4` lane reproduces `dot_f32` exactly and `round4`
+/// is per-lane scalar rounding by definition.
+fn nt_core_f32_simd<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    let (n, k) = (b.rows, b.cols);
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let crow = c.row_mut(i);
+        let mut j = 0;
+        while j + 4 <= n {
+            let panel = &b.data[j * k..(j + 4) * k];
+            let d = simd::dot4(ar, &panel[..k], &panel[k..2 * k], &panel[2 * k..3 * k], &panel[3 * k..]);
+            crow[j..j + 4].copy_from_slice(&S::round4(d));
+            j += 4;
+        }
+        while j < n {
+            crow[j] = S::round(simd::dot(ar, b.row(j)));
+            j += 1;
         }
     }
 }
@@ -233,6 +265,9 @@ fn nt_stats_core_f32<S: RoundSpec>(
     stats: &mut GemmStats,
     c: &mut Matrix,
 ) {
+    if simd::enabled() {
+        return nt_stats_core_f32_simd::<S>(a, b, stat_vis, boundary, stats, c);
+    }
     let n = b.rows;
     for i in 0..a.rows {
         let ar = a.row(i);
@@ -244,6 +279,45 @@ fn nt_stats_core_f32<S: RoundSpec>(
                 stats.record(s, boundary);
             }
             crow[j] = S::round(s);
+        }
+    }
+}
+
+/// AVX2-blocked twin of [`nt_stats_core_f32`]. Statistics are recorded on
+/// the pre-store f32 panel values in ascending-`j` order — the scalar
+/// core's exact record sequence — before the lane rounding.
+fn nt_stats_core_f32_simd<S: RoundSpec>(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    stat_vis: Option<&[usize]>,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
+    let (n, k) = (b.rows, b.cols);
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let limit = stat_vis.map_or(n, |v| v[i].min(n));
+        let crow = c.row_mut(i);
+        let mut j = 0;
+        while j + 4 <= n {
+            let panel = &b.data[j * k..(j + 4) * k];
+            let d = simd::dot4(ar, &panel[..k], &panel[k..2 * k], &panel[2 * k..3 * k], &panel[3 * k..]);
+            for (t, &s) in d.iter().enumerate() {
+                if j + t < limit {
+                    stats.record(s, boundary);
+                }
+            }
+            crow[j..j + 4].copy_from_slice(&S::round4(d));
+            j += 4;
+        }
+        while j < n {
+            let s = simd::dot(ar, b.row(j));
+            if j < limit {
+                stats.record(s, boundary);
+            }
+            crow[j] = S::round(s);
+            j += 1;
         }
     }
 }
@@ -326,6 +400,9 @@ fn nt_prefix_core_f32<S: RoundSpec>(
     stats: &mut GemmStats,
     c: &mut Matrix,
 ) {
+    if simd::enabled() {
+        return nt_prefix_core_f32_simd::<S>(a, b, vis, fill, boundary, stats, c);
+    }
     let n = b.rows;
     for i in 0..a.rows {
         let ar = a.row(i);
@@ -335,6 +412,46 @@ fn nt_prefix_core_f32<S: RoundSpec>(
             let s = dot_f32(ar, b.row(j));
             stats.record(s, boundary);
             crow[j] = S::round(s);
+        }
+        for x in crow[limit..].iter_mut() {
+            *x = fill;
+        }
+    }
+}
+
+/// AVX2-blocked twin of [`nt_prefix_core_f32`]: packed 4-row panels up to
+/// the visible prefix, scalar dots to the ragged prefix end, then the fill
+/// sweep. The masked region never touches a microkernel — the block-skip
+/// property the scalar core guarantees.
+fn nt_prefix_core_f32_simd<S: RoundSpec>(
+    a: RowsRef<'_>,
+    b: &Matrix,
+    vis: &[usize],
+    fill: f32,
+    boundary: f32,
+    stats: &mut GemmStats,
+    c: &mut Matrix,
+) {
+    let (n, k) = (b.rows, b.cols);
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let limit = vis[i].min(n);
+        let crow = c.row_mut(i);
+        let mut j = 0;
+        while j + 4 <= limit {
+            let panel = &b.data[j * k..(j + 4) * k];
+            let d = simd::dot4(ar, &panel[..k], &panel[k..2 * k], &panel[2 * k..3 * k], &panel[3 * k..]);
+            for &s in d.iter() {
+                stats.record(s, boundary);
+            }
+            crow[j..j + 4].copy_from_slice(&S::round4(d));
+            j += 4;
+        }
+        while j < limit {
+            let s = simd::dot(ar, b.row(j));
+            stats.record(s, boundary);
+            crow[j] = S::round(s);
+            j += 1;
         }
         for x in crow[limit..].iter_mut() {
             *x = fill;
@@ -394,6 +511,9 @@ pub fn matmul_nn_into(a: RowsRef<'_>, b: &Matrix, p: GemmPrecision, c: &mut Matr
 }
 
 fn nn_core_f32<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    if simd::enabled() {
+        return nn_core_f32_simd::<S>(a, b, c);
+    }
     // i-k-j loop order: stream B rows, accumulate into C rows (zeroed by
     // the caller's reset), round once at the end.
     let n = b.cols;
@@ -408,6 +528,28 @@ fn nn_core_f32<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
             for j in 0..n {
                 crow[j] += al * br[j];
             }
+        }
+        if !S::IS_IDENTITY {
+            for x in crow.iter_mut() {
+                *x = S::round(*x);
+            }
+        }
+    }
+}
+
+/// AVX2 twin of [`nn_core_f32`]: the same i-k-j sweep with the row update
+/// vectorized by [`simd::axpy`]. Every `c[j]` sees the identical sequence
+/// of `+= al·b[l][j]` operations (the axpy lanes are element-wise
+/// independent), so bit-identity is structural.
+fn nn_core_f32_simd<S: RoundSpec>(a: RowsRef<'_>, b: &Matrix, c: &mut Matrix) {
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let crow = c.row_mut(i);
+        for (l, &al) in ar.iter().enumerate() {
+            if al == 0.0 {
+                continue;
+            }
+            simd::axpy(crow, al, b.row(l));
         }
         if !S::IS_IDENTITY {
             for x in crow.iter_mut() {
@@ -643,5 +785,127 @@ mod tests {
         assert!(c32.at(0, 0).is_infinite()); // still inf on store
         let cf = matmul_nt(&a, &b, GemmPrecision::F32);
         assert_eq!(cf.at(0, 0), 320000.0);
+    }
+
+    /// FNV-1a over the bit patterns of a matrix — one checksum pins one
+    /// (format × entry) twin exactly.
+    fn fnv_matrix(mut h: u64, m: &Matrix) -> u64 {
+        for &x in &m.data {
+            for byte in x.to_bits().to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Run all four `_into` entries across every store format at f32
+    /// accumulate (the SIMD-covered cores) and checksum each result plus
+    /// its stats — 16 (format × entry) twins per run.
+    fn checksum_all_entries() -> Vec<(String, u64)> {
+        const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+        // k=19 exercises the 8-lane remainder (19 = 2·8+3), n=7 the 4-row
+        // panel remainder (7 = 4+3); magnitudes straddle each format's
+        // rounding grid so store rounding is non-trivial everywhere.
+        let (mm, k, n) = (5usize, 19usize, 7usize);
+        let a = m(
+            mm,
+            k,
+            &(0..mm * k)
+                .map(|i| (i as f32 * 0.37).sin() * 300.0)
+                .collect::<Vec<_>>(),
+        );
+        let b = m(
+            n,
+            k,
+            &(0..n * k)
+                .map(|i| (i as f32 * 0.23).cos() * 250.0)
+                .collect::<Vec<_>>(),
+        );
+        let bt = b.transpose();
+        let vis = [7usize, 5, 0, 3, 6];
+        let mut out = Vec::new();
+        for store in [Format::F32, Format::F16, Format::Bf16, Format::F8E4M3] {
+            let p = GemmPrecision {
+                acc: Format::F32,
+                store,
+            };
+            let boundary = store.overflow_boundary();
+
+            let mut c = Matrix::zeros(0, 0);
+            matmul_nt_into(a.as_rows_ref(), &b, p, &mut c);
+            out.push((format!("{}/nt", store.name()), fnv_matrix(FNV_SEED, &c)));
+
+            let mut st = GemmStats::default();
+            matmul_nt_stats_into(a.as_rows_ref(), &b, p, Some(&vis), boundary, &mut st, &mut c);
+            let mut h = fnv_matrix(FNV_SEED, &c);
+            h = h.wrapping_mul(31).wrapping_add(st.overflow_events as u64);
+            h ^= st.max_abs.to_bits() as u64;
+            out.push((format!("{}/nt_stats", store.name()), h));
+
+            let mut st = GemmStats::default();
+            matmul_nt_prefix_into(
+                a.as_rows_ref(),
+                &b,
+                p,
+                &vis,
+                f32::NEG_INFINITY,
+                boundary,
+                &mut st,
+                &mut c,
+            );
+            let mut h = fnv_matrix(FNV_SEED, &c);
+            h = h.wrapping_mul(31).wrapping_add(st.overflow_events as u64);
+            h ^= st.max_abs.to_bits() as u64;
+            out.push((format!("{}/nt_prefix", store.name()), h));
+
+            matmul_nn_into(a.as_rows_ref(), &bt, p, &mut c);
+            out.push((format!("{}/nn", store.name()), fnv_matrix(FNV_SEED, &c)));
+        }
+        out
+    }
+
+    #[test]
+    fn simd_and_scalar_cores_are_bit_identical_per_format_and_entry() {
+        let _g = simd::test_mode_guard();
+        simd::set_force(Some(false));
+        let scalar = checksum_all_entries();
+        simd::set_force(Some(true));
+        let vector = checksum_all_entries();
+        simd::set_force(None);
+        assert_eq!(scalar.len(), 16, "4 formats × 4 entries");
+        for (s, v) in scalar.iter().zip(&vector) {
+            assert_eq!(s, v, "SIMD/scalar checksum diverged for {}", s.0);
+        }
+        if !simd::detected() {
+            eprintln!(
+                "simd twins: AVX2 not detected on this host; force-on ran the scalar fallback"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_runtime_detection_smoke() {
+        let _g = simd::test_mode_guard();
+        // Both dispatch states must be reachable from the control surface.
+        simd::set_force(Some(false));
+        assert!(!simd::enabled(), "force-off must disable the vector path");
+        simd::set_force(Some(true));
+        assert_eq!(
+            simd::enabled(),
+            simd::detected(),
+            "force-on follows hardware detection"
+        );
+        simd::set_force(None);
+        if simd::detected() {
+            let av: Vec<f32> = (0..37).map(|i| (i as f32).sin() * 5.0).collect();
+            let bv: Vec<f32> = (0..37).map(|i| (i as f32).cos() * 5.0).collect();
+            assert_eq!(
+                simd::dot(&av, &bv).to_bits(),
+                dot_f32(&av, &bv).to_bits(),
+                "detected vector dot must match the scalar reference bitwise"
+            );
+        } else {
+            eprintln!("simd smoke: AVX2 not detected; vector path unreachable on this host");
+        }
     }
 }

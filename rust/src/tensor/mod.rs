@@ -4,6 +4,7 @@
 pub mod gemm;
 pub mod matrix;
 pub mod ops;
+pub mod simd;
 
 pub use gemm::{
     matmul_nn, matmul_nn_into, matmul_nt, matmul_nt_into, matmul_nt_prefix,

@@ -1,0 +1,361 @@
+//! Explicitly vectorized GEMM microkernels (S2b): x86-64 AVX2 with
+//! runtime detection and a portable scalar fallback.
+//!
+//! The f32-accumulate GEMM cores in [`super::gemm`] dispatch here once per
+//! call ([`enabled`]) and then run the whole panel through these
+//! microkernels. Bit-identity to the scalar cores is a hard contract, not
+//! a tolerance: every kernel reproduces the *exact* f32 operation sequence
+//! of its scalar twin —
+//!
+//! * [`dot`] mirrors `gemm::dot_f32`'s eight independent lane accumulators
+//!   (`_mm256_mul_ps` + `_mm256_add_ps`, never FMA — a fused
+//!   multiply-add would skip the intermediate product rounding and break
+//!   bitwise equality), then reduces the eight lanes **sequentially** in
+//!   the same order as the scalar `acc.iter().sum::<f32>()`, then walks
+//!   the `len % 8` remainder scalarly;
+//! * [`dot4`] runs four of those accumulations concurrently over one
+//!   packed 4-row K-panel (the register-blocking win: the A row is loaded
+//!   once per 8-column step instead of four times), each output element
+//!   bit-identical to a standalone [`dot`];
+//! * [`axpy`] vectorizes the `c[j] += a·b[j]` update of the P·V GEMM —
+//!   element-wise independent, so lane-parallel evaluation is trivially
+//!   bit-identical.
+//!
+//! Store rounding never happens here: the GEMM cores round results through
+//! [`crate::numerics::round::RoundSpec::round4`] / `round`, whose lanes
+//! are the scalar bitwise converters by definition.
+//!
+//! ## Dispatch and the force switch
+//!
+//! [`enabled`] = AVX2 detected (cached `is_x86_feature_detected!`) AND not
+//! disabled by `PASA_SIMD=0` AND not forced off programmatically.
+//! [`set_force`] is the test hook (mirroring `pool::set_parallel`) that
+//! lets the SIMD-vs-scalar twin tests pin both paths in one process;
+//! [`test_mode_guard`] serializes tests that toggle the process-global
+//! switch. Under Miri, and on non-x86-64 targets, detection reports
+//! `false` and every public kernel runs its scalar fallback — the wrappers
+//! are safe to call unconditionally.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Force-switch states (see [`set_force`]).
+const AUTO: u8 = 0;
+const FORCE_OFF: u8 = 1;
+const FORCE_ON: u8 = 2;
+
+static FORCE: AtomicU8 = AtomicU8::new(AUTO);
+
+/// Programmatically override SIMD dispatch: `Some(true)` forces the
+/// vector path on (still subject to hardware detection — forcing AVX2
+/// onto a CPU without it is not a thing), `Some(false)` forces the scalar
+/// fallback, `None` restores auto (detection + `PASA_SIMD` env).
+/// Process-global; tests that toggle it hold [`test_mode_guard`].
+pub fn set_force(mode: Option<bool>) {
+    let v = match mode {
+        None => AUTO,
+        Some(false) => FORCE_OFF,
+        Some(true) => FORCE_ON,
+    };
+    FORCE.store(v, Ordering::SeqCst);
+}
+
+/// Cached hardware capability: true iff this is an x86-64 CPU with AVX2
+/// (always false under Miri, which interprets the scalar fallback).
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+pub fn detected() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+/// Cached hardware capability (non-x86-64 / Miri: never available).
+#[cfg(any(not(target_arch = "x86_64"), miri))]
+pub fn detected() -> bool {
+    false
+}
+
+/// `PASA_SIMD=0` (or `off`/`false`) disables the vector path — the CI
+/// scalar-fallback leg. Read once per process.
+fn env_disabled() -> bool {
+    static DISABLED: OnceLock<bool> = OnceLock::new();
+    *DISABLED.get_or_init(|| {
+        matches!(
+            std::env::var("PASA_SIMD").as_deref(),
+            Ok("0") | Ok("off") | Ok("false")
+        )
+    })
+}
+
+/// Should the GEMM cores take the vector path for this call? One relaxed
+/// atomic load — the cores sample it once per GEMM, not per element.
+#[inline]
+pub fn enabled() -> bool {
+    match FORCE.load(Ordering::Relaxed) {
+        FORCE_OFF => false,
+        FORCE_ON => detected(),
+        _ => detected() && !env_disabled(),
+    }
+}
+
+/// Serialize tests that toggle the process-global [`set_force`] switch
+/// (the `pool::test_mode_guard` pattern). Lock poisoning from a failed
+/// sibling test is ignored — the guard only provides mutual exclusion.
+pub fn test_mode_guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    match GUARD.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// AVX2 twin of `gemm::dot_f32`: eight lane accumulators over
+    /// 8-element chunks, sequential lane reduction, scalar remainder.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`target_feature` contract); callers
+    /// gate on [`super::detected`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(ar: &[f32], br: &[f32]) -> f32 {
+        let n = ar.len().min(br.len());
+        let chunks = n / 8;
+        let mut lanes = [0.0f32; 8];
+        // SAFETY: every `loadu`/`storeu` reads or writes exactly 8 f32s at
+        // `base + w*8` with `w < chunks = n/8`, so the accesses stay inside
+        // `ar`/`br` (length ≥ n) and the 8-slot `lanes` array; unaligned
+        // forms are used so no alignment requirement exists. AVX2 is
+        // guaranteed by this fn's `target_feature` contract.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let ap = ar.as_ptr();
+            let bp = br.as_ptr();
+            for w in 0..chunks {
+                let va = _mm256_loadu_ps(ap.add(w * 8));
+                let vb = _mm256_loadu_ps(bp.add(w * 8));
+                // mul then add — never FMA — to match the scalar core's
+                // `acc[t] += a*b` (two IEEE roundings per step).
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            }
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        // Sequential lane fold + scalar remainder: the scalar core's exact
+        // reduction order.
+        let mut s = lanes.iter().sum::<f32>();
+        for t in chunks * 8..n {
+            s += ar[t] * br[t];
+        }
+        s
+    }
+
+    /// Four concurrent [`dot`] accumulations of one A row against a packed
+    /// 4-row K-panel. Each lane register accumulates exactly one row's
+    /// product stream, so `out[r]` is bit-identical to `dot(ar, b_r)`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; callers gate on [`super::detected`].
+    /// Each `b` row must be at least `ar.len()` long (asserted).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4(
+        ar: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> [f32; 4] {
+        let n = ar.len();
+        assert!(b0.len() >= n && b1.len() >= n && b2.len() >= n && b3.len() >= n);
+        let chunks = n / 8;
+        let mut lanes = [[0.0f32; 8]; 4];
+        // SAFETY: all loads/stores touch exactly 8 f32s at `base + w*8`
+        // with `w < chunks = n/8`, in bounds of `ar` (length n), each `b`
+        // row (length ≥ n, asserted above) and the 8-slot lane arrays;
+        // unaligned forms carry no alignment requirement. AVX2 is
+        // guaranteed by this fn's `target_feature` contract.
+        unsafe {
+            let mut c0: __m256 = _mm256_setzero_ps();
+            let mut c1 = _mm256_setzero_ps();
+            let mut c2 = _mm256_setzero_ps();
+            let mut c3 = _mm256_setzero_ps();
+            let ap = ar.as_ptr();
+            for w in 0..chunks {
+                let va = _mm256_loadu_ps(ap.add(w * 8));
+                c0 = _mm256_add_ps(c0, _mm256_mul_ps(va, _mm256_loadu_ps(b0.as_ptr().add(w * 8))));
+                c1 = _mm256_add_ps(c1, _mm256_mul_ps(va, _mm256_loadu_ps(b1.as_ptr().add(w * 8))));
+                c2 = _mm256_add_ps(c2, _mm256_mul_ps(va, _mm256_loadu_ps(b2.as_ptr().add(w * 8))));
+                c3 = _mm256_add_ps(c3, _mm256_mul_ps(va, _mm256_loadu_ps(b3.as_ptr().add(w * 8))));
+            }
+            _mm256_storeu_ps(lanes[0].as_mut_ptr(), c0);
+            _mm256_storeu_ps(lanes[1].as_mut_ptr(), c1);
+            _mm256_storeu_ps(lanes[2].as_mut_ptr(), c2);
+            _mm256_storeu_ps(lanes[3].as_mut_ptr(), c3);
+        }
+        let rows = [b0, b1, b2, b3];
+        let mut out = [0.0f32; 4];
+        for r in 0..4 {
+            let mut s = lanes[r].iter().sum::<f32>();
+            for t in chunks * 8..n {
+                s += ar[t] * rows[r][t];
+            }
+            out[r] = s;
+        }
+        out
+    }
+
+    /// Vectorized `c[j] += al * b[j]` — element-wise independent, so the
+    /// lane split cannot change any element's value sequence.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; callers gate on [`super::detected`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(c: &mut [f32], al: f32, b: &[f32]) {
+        let n = c.len().min(b.len());
+        let chunks = n / 8;
+        // SAFETY: loads/stores touch exactly 8 f32s at `base + w*8` with
+        // `w < chunks = n/8`, in bounds of both slices (length ≥ n); `c`
+        // is borrowed mutably so no aliasing read can observe the store.
+        // AVX2 is guaranteed by this fn's `target_feature` contract.
+        unsafe {
+            let va = _mm256_set1_ps(al);
+            let bp = b.as_ptr();
+            let cp = c.as_mut_ptr();
+            for w in 0..chunks {
+                let vc = _mm256_loadu_ps(cp.add(w * 8) as *const f32);
+                let vb = _mm256_loadu_ps(bp.add(w * 8));
+                _mm256_storeu_ps(cp.add(w * 8), _mm256_add_ps(vc, _mm256_mul_ps(va, vb)));
+            }
+        }
+        for t in chunks * 8..n {
+            c[t] += al * b[t];
+        }
+    }
+}
+
+// lint: hot-path — SIMD microkernel wrappers of the GEMM inner loops.
+/// Vector dot product, bit-identical to `gemm::dot_f32` by construction.
+/// Safe to call anywhere: falls back to the scalar core when AVX2 is
+/// absent (so dispatch mistakes degrade to slow, never to unsound).
+#[inline]
+pub fn dot(ar: &[f32], br: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if detected() {
+        // SAFETY: `detected()` verified AVX2 on this CPU — the
+        // `target_feature(enable = "avx2")` contract of `avx2::dot`.
+        return unsafe { avx2::dot(ar, br) };
+    }
+    super::gemm::dot_f32(ar, br)
+}
+
+/// One A row against a packed 4-row K-panel; `out[r]` is bit-identical to
+/// [`dot`]`(ar, b_r)`. Scalar fallback when AVX2 is absent.
+#[inline]
+pub fn dot4(ar: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if detected() {
+        // SAFETY: `detected()` verified AVX2 on this CPU — the
+        // `target_feature(enable = "avx2")` contract of `avx2::dot4`.
+        return unsafe { avx2::dot4(ar, b0, b1, b2, b3) };
+    }
+    [
+        super::gemm::dot_f32(ar, b0),
+        super::gemm::dot_f32(ar, b1),
+        super::gemm::dot_f32(ar, b2),
+        super::gemm::dot_f32(ar, b3),
+    ]
+}
+
+/// Vectorized `c[j] += al * b[j]` row update (the P·V accumulation).
+/// Scalar fallback when AVX2 is absent.
+#[inline]
+pub fn axpy(c: &mut [f32], al: f32, b: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if detected() {
+        // SAFETY: `detected()` verified AVX2 on this CPU — the
+        // `target_feature(enable = "avx2")` contract of `avx2::axpy`.
+        unsafe { avx2::axpy(c, al, b) };
+        return;
+    }
+    for (x, y) in c.iter_mut().zip(b) {
+        *x += al * y;
+    }
+}
+// lint: end-hot-path
+
+#[cfg(test)]
+mod tests {
+    use super::super::gemm::dot_f32;
+    use super::*;
+
+    fn seq(n: usize, salt: u64) -> Vec<f32> {
+        // Deterministic, sign-mixed, non-representable-sum data so any
+        // reordering of the accumulation shows up in the bits.
+        (0..n)
+            .map(|i| {
+                let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ salt;
+                ((h % 2000) as f32 - 1000.0) * 1.7e-3 + (h % 7) as f32 * 0.311
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dot_matches_scalar_bitwise_across_lengths() {
+        // Lengths cover: empty, sub-chunk, exact chunks, ragged remainders.
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 24, 31, 64, 67] {
+            let a = seq(n, 1);
+            let b = seq(n, 2);
+            let want = dot_f32(&a, &b);
+            let got = dot(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot4_lanes_match_independent_dots_bitwise() {
+        for n in [0usize, 5, 8, 19, 32, 45] {
+            let a = seq(n, 3);
+            let rows: Vec<Vec<f32>> = (0..4).map(|r| seq(n, 10 + r)).collect();
+            let got = dot4(&a, &rows[0], &rows[1], &rows[2], &rows[3]);
+            for r in 0..4 {
+                let want = dot_f32(&a, &rows[r]);
+                assert_eq!(got[r].to_bits(), want.to_bits(), "n={n} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        for n in [0usize, 6, 8, 21, 40] {
+            let base = seq(n, 20);
+            let b = seq(n, 21);
+            let al = 0.73f32;
+            let mut want = base.clone();
+            for (x, y) in want.iter_mut().zip(&b) {
+                *x += al * y;
+            }
+            let mut got = base.clone();
+            axpy(&mut got, al, &b);
+            let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "n={n}");
+        }
+    }
+
+    #[test]
+    fn force_switch_controls_dispatch() {
+        let _g = test_mode_guard();
+        set_force(Some(false));
+        assert!(!enabled(), "force-off must win over detection");
+        set_force(Some(true));
+        assert_eq!(
+            enabled(),
+            detected(),
+            "force-on is still bounded by hardware detection"
+        );
+        set_force(None);
+    }
+}

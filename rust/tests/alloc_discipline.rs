@@ -9,13 +9,19 @@
 //! [`pasa::attention::AttnWorkspace`]. PASA's preprocessing legitimately
 //! keeps one K' matrix per KV block, so its count may grow by O(#blocks)
 //! — but nothing per (Q-block × KV-block), which is where the old
-//! implementation allocated ~15 buffers per iteration.
+//! implementation allocated ~15 buffers per iteration. PR 8 extends the
+//! same pin to the quantized-KV decode path: a paged flash forward over a
+//! byte-backed E4M3 pool (whose gather dequantizes through a LUT into the
+//! workspace panel) must be equally flat in the number of KV blocks.
 //!
 //! This file holds a single test: the counter is process-global, so
 //! concurrent tests would add noise (the min-of-repeats measurement
 //! filters transient harness activity, not sustained parallel load).
 
-use pasa::attention::{flash_head, pasa_head, pasa_preprocess, Allocation, AttentionConfig, HeadMask};
+use pasa::attention::{
+    flash_head, flash_head_kv, pasa_head, pasa_preprocess, Allocation, AttentionConfig, HeadMask,
+};
+use pasa::coordinator::{KvPool, KvStore, SeqCache};
 use pasa::workloads::{gen_case, AttentionCase, Distribution, Pcg64};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -136,6 +142,42 @@ fn inner_kv_loops_allocate_nothing_after_warmup() {
         pasa_long <= 3 * 20 + 16,
         "PASA forward allocated {pasa_long} times at 20 KV blocks; \
          expected ≈ one K' matrix per block plus constants"
+    );
+
+    // Quantized-KV decode path (PR 8): the paged gather out of a
+    // byte-backed E4M3 pool dequantizes through a 256-entry LUT straight
+    // into the workspace panel — no intermediate f32 page, no heap. Same
+    // shape-relative pin as dense flash: the forward over 20 E4M3 KV
+    // blocks must cost exactly as many allocations as over 10.
+    let mut pool = KvPool::new_with_store(96, 64, d, KvStore::E4m3);
+    let mut fill_cache = |c: &AttentionCase, pool: &mut KvPool| {
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(pool, c.k.rows).unwrap();
+        for pos in 0..c.k.rows {
+            s.write_row(pool, 0, pos, c.k.row(pos), c.v.row(pos)).unwrap();
+        }
+        s
+    };
+    let cache_short = fill_cache(&short, &mut pool);
+    let cache_long = fill_cache(&long, &mut pool);
+    let run_paged = |c: &AttentionCase, s: &SeqCache| {
+        let (kv, vv) = s.kv_views(&pool, 0);
+        std::hint::black_box(flash_head_kv(&c.q, kv, vv, HeadMask::Causal, &cfg));
+    };
+    // Warm-up to the 20-block steady-state panel shape, then measure.
+    run_paged(&long, &cache_long);
+    run_paged(&short, &cache_short);
+    let paged_short = count_allocs(|| run_paged(&short, &cache_short));
+    let paged_long = count_allocs(|| run_paged(&long, &cache_long));
+    assert_eq!(
+        paged_short, paged_long,
+        "E4M3 paged-KV allocation count scales with KV blocks: {paged_short} at \
+         10 blocks vs {paged_long} at 20 — the dequantizing gather is allocating"
+    );
+    assert!(
+        paged_long <= 4,
+        "E4M3 paged flash forward allocated {paged_long} times; expected ~1 \
+         (the output matrix)"
     );
 
     pasa::pool::set_parallel(true);

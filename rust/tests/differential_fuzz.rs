@@ -31,7 +31,10 @@
 //! a huge V would instead overflow the PV store — a different, unguarded
 //! site the 8-bit rows make trivially reachable.
 
-use pasa::attention::{Allocation, AttentionOutput, KernelRegistry, KvPair, KvView, PageId};
+use pasa::attention::{
+    Allocation, AttentionOutput, AttentionRequest, KernelRegistry, KvPair, KvView, PageId,
+};
+use pasa::coordinator::{KvPool, KvStore, SeqCache};
 use pasa::numerics::relative_rmse;
 use pasa::pool;
 use pasa::testkit::{fuzz_case, matrix_bits, paged_fixture, FixturePool, FuzzRegime};
@@ -228,4 +231,132 @@ fn fuzz_covers_every_registry_row() {
     // The six fuzz streams above must stay in lockstep with the registry:
     // adding a seventh allocation without a fuzz stream fails here.
     assert_eq!(Allocation::all_extended().len(), 6);
+}
+
+// ---------------------------------------------------------------------------
+// E4M3-quantized KV storage (PR 8): the same request served out of a
+// byte-backed serving pool — quantize-on-write, LUT-dequantize-on-gather —
+// priced against the f32-pool oracle by per-allocation RMSE gates.
+// ---------------------------------------------------------------------------
+
+/// Cases per allocation for the quantized-KV sweep.
+const KV_CASES: u64 = 200;
+
+/// Run a fuzz request with its K/V served from a real [`KvPool`] in the
+/// given storage format: every row goes through `SeqCache::write_row`
+/// (the engine's quantizing write seam) and comes back through the
+/// paged-view gather, exactly the serving decode path.
+fn run_from_pool(req: &AttentionRequest, store: KvStore) -> AttentionOutput {
+    let d = req.k[0].cols;
+    let s2 = req.k[0].rows;
+    let pages = 2 * req.k.len() * s2.div_ceil(PAGE_TOKENS);
+    let mut pool = KvPool::new_with_store(pages, PAGE_TOKENS, d, store);
+    let mut caches: Vec<SeqCache> = Vec::new();
+    for kvh in 0..req.k.len() {
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut pool, s2).unwrap();
+        for pos in 0..s2 {
+            s.write_row(&mut pool, 0, pos, req.k[kvh].row(pos), req.v[kvh].row(pos))
+                .unwrap();
+        }
+        caches.push(s);
+    }
+    let pairs: Vec<KvPair<'_>> = caches
+        .iter()
+        .map(|s| {
+            let (k, v) = s.kv_views(&pool, 0);
+            KvPair { k, v }
+        })
+        .collect();
+    req.run_with_kv(&pairs)
+}
+
+/// Gate and envelope for the quantized-KV comparison. E4M3 KV is *lossy*
+/// (eps 2⁻⁴ on every cached element), so the gate mirrors the 8-bit
+/// stored-score gate above: benign regime, both runs clean, and an oracle
+/// score peak ≤ 16 so the K-side quantization perturbs the softmax
+/// exponent by at most ~1 (weight factor ≤ e). Within that regime the
+/// envelopes are sanity floors — they catch wrong-row gathers, mask
+/// leaks, sign flips and byte/LUT mismatches, while the *accuracy* story
+/// of E4M3 storage is the paper's shifting analysis, not bit-equality.
+fn kv_quant_gate(
+    alloc: Allocation,
+    regime: FuzzRegime,
+    oracle: &AttentionOutput,
+    quant: &AttentionOutput,
+) -> Option<f64> {
+    let clean =
+        |o: &AttentionOutput| o.overflow_events() == 0 && o.nonfinite_outputs() == 0;
+    if regime != FuzzRegime::Benign
+        || !clean(oracle)
+        || !clean(quant)
+        || oracle.max_abs_score() > 16.0
+    {
+        return None;
+    }
+    Some(match alloc {
+        // ≥16-bit compute: the only error source is the KV quantization
+        // itself (~6% per element on V, ≤ e-factor weight distortion).
+        Allocation::Fa32 | Allocation::Fa16_32 | Allocation::Fa16 | Allocation::Pasa16 => 0.75,
+        // 8-bit compute stacks its own stored-score quantization on top.
+        Allocation::Fp8 | Allocation::Pasa8 => 1.0,
+    })
+}
+
+#[test]
+fn fuzz_e4m3_kv_pages_hold_the_rmse_gates_vs_f32_pool_oracle() {
+    let _mode = pool::test_mode_guard();
+    for (alloc, stream) in [
+        (Allocation::Fa32, 0xb1u64),
+        (Allocation::Fa16_32, 0xb2),
+        (Allocation::Fa16, 0xb3),
+        (Allocation::Pasa16, 0xb4),
+        (Allocation::Fp8, 0xb5),
+        (Allocation::Pasa8, 0xb6),
+    ] {
+        let mut gated = 0usize;
+        for i in 0..KV_CASES {
+            let seed = (stream << 32) | i;
+            let fc = fuzz_case(seed);
+            let req = fc.req.clone().with_alloc(alloc);
+            let oracle = run_from_pool(&req, KvStore::F32);
+            let quant = run_from_pool(&req, KvStore::E4m3);
+
+            // The finite-or-reported-overflow property holds on the
+            // quantized path too: lossy storage must not create NaN the
+            // telemetry never saw.
+            if quant.nonfinite_outputs() > 0 {
+                assert!(
+                    quant.overflow_events() > 0 || quant.max_abs_score() > quant.score_boundary,
+                    "{}: silent NaN on E4M3 KV — {} non-finite outputs with clean \
+                     telemetry (max|S| {} vs boundary {}) — replay seed {seed:#018x}",
+                    alloc.name(),
+                    quant.nonfinite_outputs(),
+                    quant.max_abs_score(),
+                    quant.score_boundary,
+                );
+            }
+
+            if let Some(bound) = kv_quant_gate(alloc, fc.regime, &oracle, &quant) {
+                gated += 1;
+                for h in 0..quant.heads.len() {
+                    let e = relative_rmse(&quant.heads[h].data, &oracle.heads[h].data);
+                    assert!(
+                        e < bound,
+                        "{}: head {h} E4M3-KV rmse {e} past the {bound} envelope \
+                         (regime {:?}, oracle max|S| {}) — replay seed {seed:#018x}",
+                        alloc.name(),
+                        fc.regime,
+                        oracle.max_abs_score(),
+                    );
+                }
+            }
+        }
+        assert!(
+            gated >= 3,
+            "{}: E4M3-KV RMSE gate opened on only {gated}/{KV_CASES} cases — \
+             the quantization pricing went vacuous (stream {stream:#x})",
+            alloc.name()
+        );
+    }
 }

@@ -7,7 +7,7 @@
 
 use pasa::attention::Allocation;
 use pasa::coordinator::{
-    Engine, EngineConfig, FinishReason, GenParams, GuardPolicy, Request, SeqCache,
+    Engine, EngineConfig, FinishReason, GenParams, GuardPolicy, KvStore, Request, SeqCache,
 };
 use pasa::model::{ModelDims, Sampling};
 use pasa::runtime::{LabModel, NormMode};
@@ -442,4 +442,90 @@ fn probe_premise_fa16_32_overflows_only_at_p_star() {
     // poisoned row is visible exactly once (K/V stay benign afterwards).
     assert_eq!(eng.metrics.guard_switches, 0);
     assert_eq!(eng.metrics.overflow_steps, 1, "overflow must fire once, at P_STAR");
+}
+
+/// Dims for the KV-residency test: tiny_dims with an 8-wide decode batch
+/// so the slot cap is never the binding constraint — page capacity is.
+fn residency_dims() -> ModelDims {
+    ModelDims {
+        decode_batch: 8,
+        ..tiny_dims(2)
+    }
+}
+
+/// Engine over `residency_dims` with a deliberately tight KV byte budget:
+/// `kv_pages` is denominated in **f32 pages** (EngineConfig docs), so both
+/// stores get `8 pages × 16 tokens × width 16 × 4 B = 8 KiB` of arena and
+/// only the page *count* differs (8 at f32, 32 at 1-byte E4M3).
+fn residency_engine(store: KvStore) -> Engine<'static> {
+    let cfg = EngineConfig {
+        policy: GuardPolicy::AlwaysFa32,
+        kv_pages: 8,
+        page_tokens: 16,
+        max_queue: 16,
+        kv_store: store,
+        ..EngineConfig::default()
+    };
+    Engine::from_lab(LabModel::synthetic(residency_dims(), 42), cfg)
+}
+
+#[test]
+fn e4m3_kv_store_doubles_residency_at_fixed_byte_budget() {
+    // The tentpole acceptance bit for E4M3 KV storage: at a *fixed byte
+    // budget*, 1-byte pages must at least double the number of
+    // concurrently resident sequences. Each request below commits
+    // prompt(3 bytes + BOS = 4) + max_new(12) = 16 tokens — exactly one
+    // 16-token page per K/V chain, i.e. 2 layers × (K+V) = 4 pages, all
+    // of them allocated by the first prefill chunk. One page per chain
+    // means a slot never grows after admission, so the admission page
+    // check is exact (pages allocate lazily; a multi-page commitment
+    // could over-admit and then evict mid-decode). The f32 pool (8
+    // pages) therefore seats exactly 2 sequences at a time and the E4M3
+    // pool (32 pages in the same 8 KiB) seats all 8.
+    let mut f32_eng = residency_engine(KvStore::F32);
+    let mut e4m3_eng = residency_engine(KvStore::E4m3);
+    assert_eq!(
+        e4m3_eng.kv_pool().total_pages(),
+        4 * f32_eng.kv_pool().total_pages(),
+        "1-byte pages must quadruple the page count at a fixed byte budget"
+    );
+
+    let mut peaks = [0usize; 2];
+    for (eng, peak) in [&mut f32_eng, &mut e4m3_eng].into_iter().zip(&mut peaks) {
+        for _ in 0..8 {
+            let id = eng.fresh_id();
+            eng.submit(Request::new(id, "abc").with_params(gen(12)));
+        }
+        let mut comps = Vec::new();
+        while !eng.idle() {
+            eng.step().unwrap();
+            *peak = (*peak).max(eng.active_count());
+            comps.extend(eng.take_completions());
+        }
+        // Residency never changes correctness: every request runs to its
+        // token budget, and no pages leak on either store.
+        assert_eq!(comps.len(), 8);
+        for c in &comps {
+            assert_eq!(c.reason, FinishReason::MaxTokens);
+            assert_eq!(c.tokens.len(), 12);
+        }
+        assert_eq!(eng.kv_utilization(), 0.0, "pages leaked");
+    }
+
+    let [peak_f32, peak_e4m3] = peaks;
+    assert_eq!(peak_f32, 2, "f32 premise: page capacity binds at 2 resident");
+    assert!(
+        peak_e4m3 >= 2 * peak_f32,
+        "E4M3 must at least double residency: {peak_e4m3} vs {peak_f32}"
+    );
+    // The f32 engine had to defer admissions on KV pages; the E4M3 engine
+    // never did — the whole workload fit at once.
+    assert!(
+        f32_eng.metrics.deferrals.kv_pages > 0,
+        "f32 premise: the workload must actually hit KV backpressure"
+    );
+    assert_eq!(
+        e4m3_eng.metrics.deferrals.kv_pages, 0,
+        "E4M3 run must admit the whole workload without KV deferrals"
+    );
 }
