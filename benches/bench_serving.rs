@@ -14,7 +14,8 @@
 
 use pasa::bench::{emit_json, Bencher};
 use pasa::coordinator::{
-    Engine, EngineConfig, GenParams, GuardPolicy, KvStore, Request, SchedulerConfig,
+    Engine, EngineConfig, FaultPlan, FaultRates, FinishReason, GenParams, GuardPolicy, KvStore,
+    Request, SchedulerConfig,
 };
 use pasa::model::{ModelDims, Sampling};
 use pasa::runtime::{LabModel, ModelRuntime};
@@ -93,6 +94,65 @@ fn run_trace_store(
         ttft.p95,
         itl.p95,
         eng.metrics.deferrals.kv_pages,
+    )
+}
+
+/// Chaos cell replay: like [`run_trace`], but with a seeded fault plan
+/// installed (the same uniform per-kind rate at every seam) and **no**
+/// token-conservation assert — disruption is the measurement. The pool
+/// is sized so seizures genuinely evict, which is what gives the
+/// retry-budget axis something to recover. Returns (tokens generated,
+/// completions finished normally, completions disrupted, retries,
+/// injections logged).
+fn run_chaos(
+    sched: SchedulerConfig,
+    trace: &[Arrival],
+    rate: f64,
+    seed: u64,
+) -> (u64, u64, u64, u64, u64) {
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::Adaptive;
+    cfg.kv_pages = 160;
+    cfg.page_tokens = 16;
+    cfg.max_queue = 1024;
+    cfg.sched = sched;
+    let mut eng = Engine::from_lab(LabModel::synthetic(lab_dims(), 42), cfg);
+    let mut plan = FaultPlan::new(seed, FaultRates::uniform(rate));
+    plan.seize_pages = 64;
+    eng.install_faults(plan);
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < trace.len() || !eng.idle() {
+        while next < trace.len() && trace[next].step <= step {
+            let a = trace[next];
+            let id = eng.fresh_id();
+            eng.submit(
+                Request::new(id, prompt_of_tokens(a.prompt_tokens)).with_params(GenParams {
+                    max_new_tokens: a.max_new,
+                    sampling: Sampling::Greedy,
+                    stop_at_eos: false,
+                }),
+            );
+            next += 1;
+        }
+        eng.step().expect("lab engine step");
+        step += 1;
+        if step > 100_000 {
+            break; // safety valve; chaos runs are bounded by construction
+        }
+    }
+    let comps = eng.take_completions();
+    let ok = comps
+        .iter()
+        .filter(|c| matches!(c.reason, FinishReason::MaxTokens | FinishReason::Eos))
+        .count() as u64;
+    let disrupted = comps.len() as u64 - ok;
+    (
+        eng.metrics.tokens_generated,
+        ok,
+        disrupted,
+        eng.metrics.robustness.retries,
+        eng.metrics.robustness.faults_total(),
     )
 }
 
@@ -182,6 +242,35 @@ fn main() -> anyhow::Result<()> {
             "{kname:<12} ttft_p50={p50:>8.4}s ttft_p95={p95:>8.4}s itl_p95={itl95:>8.4}s \
              kv_deferrals={defers:<5} {r}"
         );
+    }
+
+    // ---- Part 1c: chaos grid — fault rate × retry budget ----
+    // How throughput and completion quality degrade under injected
+    // faults, and how much of the loss a retry budget claws back. The
+    // fault-0 row is the control: a zero-rate plan consumes no
+    // randomness, so it must match the fault-free scheduler exactly.
+    println!("\n# bench_serving — chaos grid (poisson-0.8, fault-rate x retry-budget)\n");
+    let chaos_trace = poisson_trace(n_requests, 0.8, shape, 11);
+    for &(rname, rate) in &[("fault-0", 0.0), ("fault-2pct", 0.02), ("fault-8pct", 0.08)] {
+        for &(bname, budget) in &[("retry-0", 0usize), ("retry-2", 2)] {
+            let sched = SchedulerConfig {
+                retry_budget: budget,
+                ..SchedulerConfig::default()
+            };
+            let (tokens, ok, disrupted, retries, injections) =
+                run_chaos(sched, &chaos_trace, rate, 0xC4A05);
+            let r = b.run_tagged(
+                &format!("serve chaos {rname} {bname}"),
+                rname,
+                bname,
+                tokens as f64,
+                || run_chaos(sched, &chaos_trace, rate, 0xC4A05),
+            );
+            println!(
+                "{rname:<12} {bname:<10} ok={ok:<3} disrupted={disrupted:<3} \
+                 retries={retries:<3} injections={injections:<4} {r}"
+            );
+        }
     }
 
     // ---- Part 2: PJRT policy sweep (needs compiled artifacts) ----

@@ -354,9 +354,10 @@ fn numeric_tokens(line: &str) -> Vec<String> {
 /// A `match` is protected when any arm *pattern* names one of these — the
 /// enums whose variants gate precision dispatch. Arm expressions don't
 /// count (constructing an `Allocation` in a body is fine).
-const PROTECTED_ENUMS: [&str; 5] = [
+const PROTECTED_ENUMS: [&str; 6] = [
     "Allocation::",
     "AttnMask::",
+    "FaultKind::",
     "GuardPolicy::",
     "SchedDecision::",
     "StreamEvent::",
@@ -397,9 +398,9 @@ pub fn check_wildcard_arms(rel: &str, sc: &Scanned, in_test: &[bool], out: &mut 
                     rel,
                     line_of[*off] + 1,
                     "`_` arm in a match over a protected enum \
-                     (Allocation / AttnMask / GuardPolicy / SchedDecision / \
-                     StreamEvent) — name every variant so new rows fail to \
-                     compile here"
+                     (Allocation / AttnMask / FaultKind / GuardPolicy / \
+                     SchedDecision / StreamEvent) — name every variant so \
+                     new rows fail to compile here"
                         .to_string(),
                 ));
             }

@@ -51,9 +51,25 @@
 //! KV-pool exhaustion mid-flight (copy-on-write growth) is backpressure:
 //! the slot finishes with [`FinishReason::Evicted`] and its pages return
 //! to the pool — never a panic, never a corrupted cache.
+//!
+//! ## Lifecycle hardening and chaos
+//!
+//! Every step additionally runs (in order, before admission): fault
+//! injection from an installed [`FaultPlan`] (seizure releases, pool
+//! seizures, scheduler stalls), the step-denominated deadline sweep
+//! (`FinishReason::DeadlineExceeded` for queued, retry-parked, and
+//! active requests alike), queue-depth load shedding
+//! (`FinishReason::Shed`), and re-enqueue of evicted requests whose
+//! retry backoff has elapsed. Decode rounds carry a per-slot
+//! non-finite-logit watchdog: a poisoned row quarantines *that slot*
+//! (`FinishReason::Faulted`) and leaves co-batched neighbours
+//! bit-identical to a fault-free run. All of it is step-denominated and
+//! seeded — no clocks, no OS entropy — so a chaos run replays exactly
+//! from its seed (`rust/tests/integration_chaos.rs`).
 
+use super::faults::{is_injected_error, FaultKind, FaultPlan, INJECTED_STEP_ERROR};
 use super::guard::{Guard, GuardPolicy, GuardSignal};
-use super::kv_cache::{KvPool, KvStore, SeqCache};
+use super::kv_cache::{KvPool, KvStore, PageId, SeqCache};
 use super::metrics::Metrics;
 use super::request::{Completion, FinishReason, Phase, Request, StreamEvent, TokenEvent};
 use super::router::{Admission, Router};
@@ -95,6 +111,13 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Continuous-batching budgets (see [`SchedulerConfig`]).
     pub sched: SchedulerConfig,
+    /// Default per-request deadline in **engine steps** (0 = none). A
+    /// request that has not finished within this many steps of its
+    /// submission is killed with [`FinishReason::DeadlineExceeded`] —
+    /// queued, mid-prefill, or decoding alike. `Request::with_deadline`
+    /// overrides per request. Step-denominated (never wall clock) so
+    /// trace replays stay deterministic.
+    pub deadline_steps: usize,
 }
 
 impl Default for EngineConfig {
@@ -107,6 +130,7 @@ impl Default for EngineConfig {
             kv_store: KvStore::F32,
             max_queue: 256,
             sched: SchedulerConfig::default(),
+            deadline_steps: 0,
         }
     }
 }
@@ -177,6 +201,17 @@ impl ActiveRequest {
 /// streams regardless of admission order or co-tenants.
 fn request_rng(id: u64) -> Pcg64 {
     Pcg64::new(0xe61e ^ id, id)
+}
+
+/// Effective deadline of a request in engine steps: the per-request
+/// override wins, otherwise the engine-wide default; 0/None means no
+/// deadline at all.
+fn deadline_of(req: &Request, engine_default: u64) -> Option<u64> {
+    match req.deadline_steps {
+        Some(d) => Some(d),
+        None if engine_default > 0 => Some(engine_default),
+        None => None,
+    }
 }
 
 /// Emit one sampled token: stream event, ITL/TTFT instants, counters.
@@ -252,6 +287,17 @@ pub struct Engine<'rt> {
     // never assembles a dense cache).
     kbatch: Vec<f32>,
     vbatch: Vec<f32>,
+    /// Engine-step clock: completed `step()` calls. The time base for
+    /// deadlines, retry backoff, and fault-injection sites.
+    step_index: u64,
+    /// Installed chaos plan, if any (`install_faults`).
+    faults: Option<FaultPlan>,
+    /// Admission is stalled until this step (scheduler-stall faults).
+    stall_until: u64,
+    /// Evicted requests parked for retry: (eligible step, request).
+    retryq: Vec<(u64, Request)>,
+    /// Pages seized by pool-exhaustion faults: (release step, pages).
+    seized: Vec<(u64, Vec<PageId>)>,
 }
 
 impl<'rt> Engine<'rt> {
@@ -302,12 +348,20 @@ impl<'rt> Engine<'rt> {
             sp,
             kbatch: vec![0.0; cache_len],
             vbatch: vec![0.0; cache_len],
+            step_index: 0,
+            faults: None,
+            stall_until: 0,
+            retryq: Vec::new(),
+            seized: Vec::new(),
             cfg,
         }
     }
 
-    /// Submit a request (admission-checked).
-    pub fn submit(&mut self, req: Request) -> Admission {
+    /// Submit a request (admission-checked). Stamps the request's
+    /// `arrival_step` with the engine-step clock — the zero point of its
+    /// step-denominated deadline, if any.
+    pub fn submit(&mut self, mut req: Request) -> Admission {
+        req.arrival_step = self.step_index;
         self.router.submit(req)
     }
 
@@ -315,9 +369,67 @@ impl<'rt> Engine<'rt> {
         self.router.fresh_id()
     }
 
-    /// True when no queued or active work remains.
+    /// True when no queued, active, retry-parked, or seized-page work
+    /// remains (a held seizure keeps the engine stepping so the pages
+    /// are released on schedule).
     pub fn idle(&self) -> bool {
-        self.router.is_empty() && self.active.is_empty()
+        self.router.is_empty()
+            && self.active.is_empty()
+            && self.retryq.is_empty()
+            && self.seized.is_empty()
+    }
+
+    /// Install a chaos fault plan (see [`super::faults`]): subsequent
+    /// steps offer it injection sites and log every firing. Installing
+    /// on a live engine is allowed — the plan's stream starts at the
+    /// next step.
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
+    }
+
+    /// The installed fault plan, if any — tests reconcile its injection
+    /// log against the metrics robustness counters.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// Engine-step clock: the number of completed [`Engine::step`]
+    /// calls. The time base for deadlines, retry backoff, and fault
+    /// sites.
+    pub fn current_step(&self) -> u64 {
+        self.step_index
+    }
+
+    /// Cancel a request wherever it currently lives — queued, parked for
+    /// retry, or active (mid-prefill or decoding). Releases its KV pages
+    /// immediately, closes its stream with a single
+    /// [`FinishReason::Cancelled`] terminal event, and returns `true`.
+    /// Returns `false` for unknown ids and for requests that already
+    /// finished this step (their terminal event is already accounted).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(req) = self.router.remove(id) {
+            self.metrics.robustness.cancellations += 1;
+            self.finish_queued(req, FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(pos) = self.retryq.iter().position(|(_, r)| r.id == id) {
+            let (_, req) = self.retryq.remove(pos);
+            self.metrics.robustness.cancellations += 1;
+            self.finish_queued(req, FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(pos) = self.active.iter().position(|s| s.req.id == id) {
+            if matches!(self.active[pos].phase, Phase::Finished(_)) {
+                return false; // already terminal; retirement owns it
+            }
+            let mut ar = self.active.remove(pos);
+            ar.phase = Phase::Finished(FinishReason::Cancelled);
+            ar.cache.release(&mut self.pool);
+            self.metrics.robustness.cancellations += 1;
+            self.finish(ar);
+            return true;
+        }
+        false
     }
 
     pub fn active_count(&self) -> usize {
@@ -379,14 +491,180 @@ impl<'rt> Engine<'rt> {
     }
 
     /// One scheduler iteration. Returns the number of active slots after
-    /// the step (0 = fully idle).
+    /// the step (0 = fully idle). Lifecycle order: fault injection
+    /// (seizure releases first), the deadline sweep, load shedding,
+    /// retry re-enqueue, then admission (unless stalled), decode,
+    /// retirement — so a freed page or expired deadline is visible to
+    /// the *same* step's admission decisions.
     pub fn step(&mut self) -> Result<usize> {
-        self.admit_and_prefill()?;
+        let step = self.step_index;
+        self.inject_step_faults(step);
+        self.enforce_deadlines(step);
+        self.shed_overload();
+        self.requeue_retries(step);
+        if step >= self.stall_until {
+            self.admit_and_prefill()?;
+        }
         if self.active.iter().any(|s| s.phase == Phase::Decoding) {
             self.decode_round()?;
         }
         self.retire_finished();
+        self.step_index += 1;
         Ok(self.active.len())
+    }
+
+    /// Release due page seizures, then (with a plan installed and work
+    /// pending) offer the step-scoped injection sites: scheduler stalls
+    /// and pool seizures. Sites are only offered while the engine has
+    /// work, so an idle drain after the trace consumes no randomness.
+    fn inject_step_faults(&mut self, step: u64) {
+        if !self.seized.is_empty() {
+            let mut held = std::mem::take(&mut self.seized);
+            held.retain(|(due, pages)| {
+                if step >= *due {
+                    self.pool.release_pages(pages);
+                    false
+                } else {
+                    true
+                }
+            });
+            self.seized = held;
+        }
+        let Engine {
+            faults,
+            metrics,
+            router,
+            active,
+            retryq,
+            pool,
+            seized,
+            stall_until,
+            ..
+        } = self;
+        let Some(plan) = faults.as_mut() else { return };
+        if router.is_empty() && active.is_empty() && retryq.is_empty() {
+            return;
+        }
+        if plan.fires(FaultKind::SchedStall, 0, step, step) {
+            metrics.robustness.fault(FaultKind::SchedStall);
+            *stall_until = step + plan.stall_steps;
+        }
+        if plan.fires(FaultKind::PoolSeize, 0, step, step) {
+            metrics.robustness.fault(FaultKind::PoolSeize);
+            let pages = pool.seize_free_pages(plan.seize_pages);
+            if !pages.is_empty() {
+                seized.push((step + plan.seize_hold_steps, pages));
+            }
+        }
+    }
+
+    /// Kill every request whose step-denominated deadline has expired —
+    /// queued, parked for retry, or active (any non-finished phase).
+    /// Active kills release their pages at retirement this same step.
+    fn enforce_deadlines(&mut self, step: u64) {
+        let engine_deadline = self.cfg.deadline_steps as u64;
+        let expired = |r: &Request| match deadline_of(r, engine_deadline) {
+            Some(d) => step.saturating_sub(r.arrival_step) >= d,
+            None => false,
+        };
+        let mut dead: Vec<Request> = self.router.drain_where(|r| expired(r));
+        let mut i = 0;
+        while i < self.retryq.len() {
+            if expired(&self.retryq[i].1) {
+                dead.push(self.retryq.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        for req in dead {
+            self.metrics.robustness.deadline_kills += 1;
+            self.finish_queued(req, FinishReason::DeadlineExceeded);
+        }
+        let Engine {
+            active, metrics, ..
+        } = self;
+        for s in active.iter_mut() {
+            if matches!(s.phase, Phase::Finished(_)) || !expired(&s.req) {
+                continue;
+            }
+            s.phase = Phase::Finished(FinishReason::DeadlineExceeded);
+            metrics.robustness.deadline_kills += 1;
+        }
+    }
+
+    /// Queue-depth load shedding: while the router holds more than
+    /// `shed_queue_depth` waiting requests, shed newest-lowest-first
+    /// with [`FinishReason::Shed`] (0 disables).
+    fn shed_overload(&mut self) {
+        let cap = self.cfg.sched.shed_queue_depth;
+        if cap == 0 {
+            return;
+        }
+        while self.router.depth() > cap {
+            let Some(req) = self.router.shed_lowest_newest() else {
+                break;
+            };
+            self.metrics.robustness.sheds += 1;
+            self.finish_queued(req, FinishReason::Shed);
+        }
+    }
+
+    /// Re-enqueue retry-parked requests whose backoff has elapsed. The
+    /// resubmission goes straight to the router (preserving the
+    /// original `arrival_step`, so deadlines keep counting across
+    /// retries); a router rejection makes the eviction terminal.
+    fn requeue_retries(&mut self, step: u64) {
+        if self.retryq.is_empty() {
+            return;
+        }
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < self.retryq.len() {
+            if self.retryq[i].0 <= step {
+                due.push(self.retryq.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        for req in due {
+            match self.router.submit(req.clone()) {
+                Admission::Queued => {}
+                Admission::Rejected(_) => {
+                    // The retry could not even re-enter the queue (router
+                    // backpressure): the eviction is terminal after all.
+                    self.finish_queued(req, FinishReason::Evicted);
+                }
+            }
+        }
+    }
+
+    /// Close the stream of a request that never held a slot (cancelled,
+    /// shed, deadline-killed, or terminally evicted while queued): one
+    /// terminal event, one completion with the true prompt echo and
+    /// queue-time attribution, zero generated tokens.
+    fn finish_queued(&mut self, req: Request, reason: FinishReason) {
+        let now = Instant::now();
+        let total = (now - req.arrival).as_secs_f64();
+        self.metrics.total_latency.record(total);
+        self.metrics.requests_completed += 1;
+        self.events.push(StreamEvent::Finished {
+            request_id: req.id,
+            reason,
+        });
+        self.completions.push(Completion {
+            id: req.id,
+            prompt: req.prompt,
+            text: String::new(),
+            tokens: Vec::new(),
+            reason,
+            prompt_tokens: req.prompt_tokens,
+            queue_time: total,
+            prefill_time: 0.0,
+            first_token_latency: 0.0,
+            total_latency: total,
+            allocation: String::new(),
+            guard_switches: 0,
+        });
     }
 
     /// Run until the queue and all slots drain; returns completions.
@@ -451,7 +729,14 @@ impl<'rt> Engine<'rt> {
             };
             match scheduler::admission(&self.cfg.sched, &st, ptoks, max_new) {
                 SchedDecision::Admit { chunk } => {
-                    let req = self.router.pop().expect("peeked head vanished");
+                    // A peek/pop disagreement would be a router bug, but
+                    // it must never abort a serving process mid-flight:
+                    // count it, skip the admission, and let the next
+                    // step re-peek a consistent head.
+                    let Some(req) = self.router.pop() else {
+                        self.metrics.robustness.router_desyncs += 1;
+                        break;
+                    };
                     budget = budget.saturating_sub(chunk);
                     self.admit(req, chunk)?;
                 }
@@ -474,8 +759,12 @@ impl<'rt> Engine<'rt> {
                 SchedDecision::RejectNeverFits => {
                     // This request can never run on this pool; surface an
                     // Evicted completion instead of spinning forever, and
-                    // keep trying the next head.
-                    let req = self.router.pop().expect("peeked head vanished");
+                    // keep trying the next head. A peek/pop disagreement
+                    // is recoverable here too — same argument as Admit.
+                    let Some(req) = self.router.pop() else {
+                        self.metrics.robustness.router_desyncs += 1;
+                        break;
+                    };
                     let now = Instant::now();
                     self.reject_evicted(req.id, req.arrival, now);
                 }
@@ -615,8 +904,16 @@ impl<'rt> Engine<'rt> {
         s.prefilled = end;
         if end == s.prompt_len {
             s.prefill_done = Some(Instant::now());
-            s.phase = Phase::Decoding;
             let row = logits.as_ref().expect("final chunk returns logits");
+            // Watchdog: a non-finite first-token row means this slot's
+            // numerics are poisoned beyond what the guard chain could
+            // rescue — quarantine it instead of sampling garbage.
+            if row.iter().any(|x| !x.is_finite()) {
+                s.phase = Phase::Finished(FinishReason::Faulted);
+                metrics.robustness.quarantines += 1;
+                return Ok(());
+            }
+            s.phase = Phase::Decoding;
             let tok = sample(row, s.req.params.sampling, &mut s.rng);
             emit_token(s, tok, metrics, events);
             apply_stop_rules(s, tok, d.max_seq, eos);
@@ -698,6 +995,13 @@ impl<'rt> Engine<'rt> {
             last_token: None,
             req,
         };
+        // Watchdog (PJRT face): quarantine a non-finite first-token row
+        // that even the replay left poisoned, instead of sampling it.
+        if last_row.iter().any(|x| !x.is_finite()) {
+            slot.phase = Phase::Finished(FinishReason::Faulted);
+            self.metrics.robustness.quarantines += 1;
+            return Ok(slot);
+        }
         let tok = sample(last_row, slot.req.params.sampling, &mut slot.rng);
         emit_token(&mut slot, tok, &mut self.metrics, &mut self.events);
         apply_stop_rules(&mut slot, tok, d.max_seq, self.sp.eos);
@@ -735,15 +1039,31 @@ impl<'rt> Engine<'rt> {
     /// Retire finished slots: release pages, emit the completion, compact
     /// the batch (`filter`). The freed budget and pages are visible to
     /// the *next* step's admission (`concatenate`).
+    ///
+    /// Evicted slots with retry budget left do **not** complete here:
+    /// the request parks in the retry queue with exponential step
+    /// backoff (`2^retries`, capped) and re-runs from scratch — its
+    /// stream re-emits from index 0, and the eventual completion carries
+    /// only the successful attempt's tokens. Exactly one terminal event
+    /// is ever emitted, at the attempt that actually finishes.
     fn retire_finished(&mut self) {
         let mut i = 0;
         while i < self.active.len() {
-            if matches!(self.active[i].phase, Phase::Finished(_)) {
-                let mut ar = self.active.remove(i);
-                ar.cache.release(&mut self.pool);
-                self.finish(ar);
-            } else {
+            let Phase::Finished(reason) = self.active[i].phase else {
                 i += 1;
+                continue;
+            };
+            let mut ar = self.active.remove(i);
+            ar.cache.release(&mut self.pool);
+            if reason == FinishReason::Evicted && ar.req.retries < self.cfg.sched.retry_budget {
+                let mut req = ar.req;
+                req.retries += 1;
+                self.metrics.robustness.retries += 1;
+                self.metrics.deferrals.retry_backoff += 1;
+                let backoff = 1u64 << (req.retries.min(6) as u32);
+                self.retryq.push((self.step_index + backoff, req));
+            } else {
+                self.finish(ar);
             }
         }
     }
@@ -801,6 +1121,56 @@ impl<'rt> Engine<'rt> {
         }
         self.metrics.decode_batch_occupancy.push(run_idx.len());
 
+        // Chaos: per-slot decode faults are drawn here, sequentially in
+        // slot order — never inside the parallel region — so the
+        // injection stream is a pure function of the seeded plan and the
+        // (request id, token index) sites offered, independent of worker
+        // interleaving. The site is the slot's generated-token count,
+        // identical in solo and batched runs (what makes the scripted
+        // co-batch bit-identity test exact).
+        #[derive(Clone, Copy, Default)]
+        struct SlotFault {
+            step_error: bool,
+            latency_spike: bool,
+            logit_nan: bool,
+        }
+        let step = self.step_index;
+        let spike_secs = self.faults.as_ref().map_or(0.0, |p| p.latency_spike_secs);
+        let slot_faults: Vec<SlotFault> = {
+            let Engine {
+                faults,
+                active,
+                metrics,
+                ..
+            } = self;
+            match faults.as_mut() {
+                None => vec![SlotFault::default(); active.len()],
+                Some(plan) => active
+                    .iter()
+                    .map(|s| {
+                        let mut f = SlotFault::default();
+                        if s.phase != Phase::Decoding {
+                            return f;
+                        }
+                        let site = (s.tokens.len() - s.prompt_len) as u64;
+                        if plan.fires(FaultKind::StepError, s.req.id, site, step) {
+                            metrics.robustness.fault(FaultKind::StepError);
+                            f.step_error = true;
+                        }
+                        if plan.fires(FaultKind::LatencySpike, s.req.id, site, step) {
+                            metrics.robustness.fault(FaultKind::LatencySpike);
+                            f.latency_spike = true;
+                        }
+                        if plan.fires(FaultKind::LogitNan, s.req.id, site, step) {
+                            metrics.robustness.fault(FaultKind::LogitNan);
+                            f.logit_nan = true;
+                        }
+                        f
+                    })
+                    .collect(),
+            }
+        };
+
         // Phase 2: the compute steps as pool tiles. The whole slot vector
         // moves into the task table (each task owns its cache and guard)
         // and shares the model and the page pool read-mostly.
@@ -827,9 +1197,16 @@ impl<'rt> Engine<'rt> {
             let pool_ref = &self.pool;
             let tasks_ref = &tasks;
             let run_ref = &run_idx;
+            let faults_ref = &slot_faults;
             crate::pool::global().run_tiles(run_ref.len(), |t| {
                 let mut slot = tasks_ref[run_ref[t]].lock().unwrap();
                 let (ar, out) = &mut *slot;
+                if faults_ref[run_ref[t]].step_error {
+                    // Simulated backend failure (drawn pre-fan-out): the
+                    // slot's step "ran" and died; the fold quarantines.
+                    out.err = Some(anyhow::anyhow!("{}", INJECTED_STEP_ERROR));
+                    return;
+                }
                 let alloc = Allocation::parse(ar.guard.allocation())
                     .expect("guard allocation maps to the lab");
                 let tok = *ar.tokens.last().unwrap();
@@ -882,13 +1259,16 @@ impl<'rt> Engine<'rt> {
             });
         }
 
-        // Phase 3: restore the slot vector in order, fold metrics, sample.
+        // Phase 3: restore the slot vector in order, fold metrics, apply
+        // injected damage, run the watchdog, sample.
         let eos = self.sp.eos;
         let mut failure: Option<anyhow::Error> = None;
         let Engine {
             active,
             metrics,
             events,
+            pool,
+            faults: plan_opt,
             ..
         } = self;
         for (i, task) in tasks.into_iter().enumerate() {
@@ -897,10 +1277,22 @@ impl<'rt> Engine<'rt> {
             if !runnable[i] {
                 continue;
             }
+            let fr = slot_faults[i];
             let s = active.last_mut().unwrap();
+            let mut first = true;
             for &lat in &out.latencies {
                 metrics.decode_steps += 1;
                 // Replayed steps are real serving latency: record them.
+                // An injected latency spike inflates the step's first
+                // sample — the observational face of a slow backend step
+                // (nothing feeds back into scheduling, so determinism is
+                // untouched).
+                let lat = if first && fr.latency_spike {
+                    lat + spike_secs
+                } else {
+                    lat
+                };
+                first = false;
                 metrics.step_latency.record(lat);
             }
             if out.overflowed {
@@ -910,12 +1302,44 @@ impl<'rt> Engine<'rt> {
             if let Some(e) = out.err {
                 if is_kv_backpressure(&e) {
                     s.phase = Phase::Finished(FinishReason::Evicted);
+                } else if is_injected_error(&e) {
+                    // A (simulated) backend step failure is this slot's
+                    // problem only: quarantine it, keep the batch alive.
+                    s.phase = Phase::Finished(FinishReason::Faulted);
+                    metrics.robustness.quarantines += 1;
                 } else if failure.is_none() {
                     failure = Some(e);
                 }
                 continue;
             }
-            advance_slot(s, &out.logits, d.max_seq, eos, metrics, events);
+            let mut logits = out.logits;
+            if fr.logit_nan {
+                logits[0] = f32::NAN;
+            }
+            // Watchdog: a non-finite logit row must never reach sampling
+            // — quarantine the slot instead of emitting garbage tokens.
+            if logits.iter().any(|x| !x.is_finite()) {
+                s.phase = Phase::Finished(FinishReason::Faulted);
+                metrics.robustness.quarantines += 1;
+                continue;
+            }
+            // KV corruption targets the row this step just wrote: the
+            // damage is read by *later* attention steps (and only by
+            // this sequence — pages are per-slot), modelling silent
+            // storage corruption in cold KV. `site` is captured before
+            // `advance_slot` grows the token stream.
+            let written_pos = s.tokens.len() - 1;
+            let site = (s.tokens.len() - s.prompt_len) as u64;
+            advance_slot(s, &logits, d.max_seq, eos, metrics, events);
+            if let Some(plan) = plan_opt.as_mut() {
+                if plan.fires(FaultKind::KvNanPoison, s.req.id, site, step) {
+                    metrics.robustness.fault(FaultKind::KvNanPoison);
+                    s.cache.corrupt_row(pool, 0, written_pos, false);
+                } else if plan.fires(FaultKind::KvBitFlip, s.req.id, site, step) {
+                    metrics.robustness.fault(FaultKind::KvBitFlip);
+                    s.cache.corrupt_row(pool, 0, written_pos, true);
+                }
+            }
         }
         if let Some(e) = failure {
             return Err(e);
@@ -1052,6 +1476,14 @@ impl<'rt> Engine<'rt> {
                 continue;
             }
             let row = &logits[i * v..(i + 1) * v];
+            // Watchdog: a row still non-finite after the group replay is
+            // quarantined — this slot only; co-batched neighbours sample
+            // their own rows untouched.
+            if row.iter().any(|x| !x.is_finite()) {
+                s.phase = Phase::Finished(FinishReason::Faulted);
+                self.metrics.robustness.quarantines += 1;
+                continue;
+            }
             advance_slot(
                 s,
                 row,

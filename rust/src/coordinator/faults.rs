@@ -1,0 +1,367 @@
+//! Deterministic fault injection (S19): the chaos harness behind the
+//! engine's request-lifecycle hardening.
+//!
+//! A [`FaultPlan`] is a seeded xorshift stream (the fuzz toolkit's
+//! [`XorShift64`] — no clocks, no OS entropy) plus per-kind Bernoulli
+//! rates and an optional list of [`ScriptedFault`]s. The engine *offers*
+//! the plan injection sites as it steps — `(kind, request, site, step)`
+//! tuples at the real seams: the KV row a decode just wrote, the backend
+//! step about to run, the pool's free list, the admission gate. The plan
+//! decides, and **logs every injection** as a [`FaultRecord`], so any
+//! run replays exactly from its seed and the `Metrics` robustness
+//! counters can be reconciled against the log one-for-one
+//! (`rust/tests/integration_chaos.rs` pins both).
+//!
+//! Sites are offered sequentially in slot order, never inside the worker
+//! pool's parallel region, so the injection stream a seed produces is
+//! independent of thread interleaving — the same certify-by-harness
+//! discipline the differential fuzzer applies to the kernels, lifted to
+//! the serving engine.
+
+use super::request::RequestId;
+use crate::testkit::XorShift64;
+
+/// Message marker carried by a simulated backend step failure. The
+/// engine classifies errors containing it with [`is_injected_error`]
+/// (the same pattern `KvPool::EXHAUSTED` uses for backpressure) and
+/// quarantines the slot instead of propagating.
+pub const INJECTED_STEP_ERROR: &str = "injected backend step fault";
+
+/// True when `e` is a fault-plan-injected backend error: quarantine the
+/// slot ([`super::request::FinishReason::Faulted`]), never abort the
+/// batch.
+pub fn is_injected_error(e: &anyhow::Error) -> bool {
+    e.to_string().contains(INJECTED_STEP_ERROR)
+}
+
+/// The operational fault kinds the harness can inject. pasa-lint
+/// protects this enum (no `_` arms in non-test matches), so adding a
+/// kind fails to compile at every dispatch site instead of silently
+/// falling through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// NaN-poison the K row a decode step just wrote — silent storage
+    /// corruption that surfaces at the *next* read as non-finite logits
+    /// (the watchdog's territory).
+    KvNanPoison,
+    /// Flip an exponent bit in the K row just written — a
+    /// huge-but-finite excursion that exercises the numeric guard's
+    /// overflow chain rather than the watchdog.
+    KvBitFlip,
+    /// Seize the pool's free pages for a hold window: an exhaustion
+    /// spike. Admission defers; in-flight growth evicts (and, with a
+    /// retry budget, comes back).
+    PoolSeize,
+    /// A backend decode step fails outright (simulated step error).
+    StepError,
+    /// A decode step takes much longer — observational only (inflates
+    /// the recorded step latency; nothing feeds back into scheduling,
+    /// so determinism is untouched).
+    LatencySpike,
+    /// The scheduler stops admitting for a window of steps.
+    SchedStall,
+    /// The logits row a decode step produced comes back non-finite.
+    LogitNan,
+}
+
+impl FaultKind {
+    pub const COUNT: usize = 7;
+
+    /// Every kind, in [`FaultKind::index`] order.
+    pub const ALL: [FaultKind; FaultKind::COUNT] = [
+        FaultKind::KvNanPoison,
+        FaultKind::KvBitFlip,
+        FaultKind::PoolSeize,
+        FaultKind::StepError,
+        FaultKind::LatencySpike,
+        FaultKind::SchedStall,
+        FaultKind::LogitNan,
+    ];
+
+    /// Dense index for per-kind counters (`0..COUNT`).
+    pub fn index(self) -> usize {
+        match self {
+            FaultKind::KvNanPoison => 0,
+            FaultKind::KvBitFlip => 1,
+            FaultKind::PoolSeize => 2,
+            FaultKind::StepError => 3,
+            FaultKind::LatencySpike => 4,
+            FaultKind::SchedStall => 5,
+            FaultKind::LogitNan => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::KvNanPoison => "kv-nan-poison",
+            FaultKind::KvBitFlip => "kv-bit-flip",
+            FaultKind::PoolSeize => "pool-seize",
+            FaultKind::StepError => "step-error",
+            FaultKind::LatencySpike => "latency-spike",
+            FaultKind::SchedStall => "sched-stall",
+            FaultKind::LogitNan => "logit-nan",
+        }
+    }
+}
+
+/// Per-site Bernoulli rates, one per [`FaultKind`]. A "site" is one
+/// offered injection point: once per step for the step-scoped kinds
+/// ([`FaultKind::PoolSeize`] / [`FaultKind::SchedStall`]), once per
+/// decoding slot per step for the slot-scoped ones.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRates {
+    pub kv_nan_poison: f64,
+    pub kv_bit_flip: f64,
+    pub pool_seize: f64,
+    pub step_error: f64,
+    pub latency_spike: f64,
+    pub sched_stall: f64,
+    pub logit_nan: f64,
+}
+
+impl FaultRates {
+    /// No random faults (the scripted-plan base).
+    pub fn zero() -> FaultRates {
+        FaultRates {
+            kv_nan_poison: 0.0,
+            kv_bit_flip: 0.0,
+            pool_seize: 0.0,
+            step_error: 0.0,
+            latency_spike: 0.0,
+            sched_stall: 0.0,
+            logit_nan: 0.0,
+        }
+    }
+
+    /// The chaos-soak mix: every seam exercised within a few hundred
+    /// steps, no single kind dominating the run.
+    pub fn standard() -> FaultRates {
+        FaultRates {
+            kv_nan_poison: 0.01,
+            kv_bit_flip: 0.01,
+            pool_seize: 0.03,
+            step_error: 0.01,
+            latency_spike: 0.02,
+            sched_stall: 0.03,
+            logit_nan: 0.01,
+        }
+    }
+
+    /// The same rate for every kind — the bench grid's single knob.
+    pub fn uniform(p: f64) -> FaultRates {
+        FaultRates {
+            kv_nan_poison: p,
+            kv_bit_flip: p,
+            pool_seize: p,
+            step_error: p,
+            latency_spike: p,
+            sched_stall: p,
+            logit_nan: p,
+        }
+    }
+
+    fn rate(&self, kind: FaultKind) -> f64 {
+        match kind {
+            FaultKind::KvNanPoison => self.kv_nan_poison,
+            FaultKind::KvBitFlip => self.kv_bit_flip,
+            FaultKind::PoolSeize => self.pool_seize,
+            FaultKind::StepError => self.step_error,
+            FaultKind::LatencySpike => self.latency_spike,
+            FaultKind::SchedStall => self.sched_stall,
+            FaultKind::LogitNan => self.logit_nan,
+        }
+    }
+}
+
+/// One precisely-placed fault: fires the first time the engine offers a
+/// matching `(kind, request, site)` tuple, then never again.
+///
+/// `site` is seam-scoped: for the slot-scoped kinds it is the request's
+/// generated-token count at the offered seam — identical in solo and
+/// batched runs, which is what makes the quarantine co-batch
+/// bit-identity test exact. For the step-scoped kinds
+/// ([`FaultKind::PoolSeize`] / [`FaultKind::SchedStall`]) it is the
+/// engine step itself (and `request_id` is 0).
+#[derive(Clone, Copy, Debug)]
+pub struct ScriptedFault {
+    pub kind: FaultKind,
+    pub request_id: RequestId,
+    pub site: u64,
+    fired: bool,
+}
+
+impl ScriptedFault {
+    pub fn new(kind: FaultKind, request_id: RequestId, site: u64) -> ScriptedFault {
+        ScriptedFault {
+            kind,
+            request_id,
+            site,
+            fired: false,
+        }
+    }
+}
+
+/// One injection, as logged: enough to replay a run's damage and to
+/// reconcile the metrics counters against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultRecord {
+    /// Engine step at which the injection fired.
+    pub step: u64,
+    pub kind: FaultKind,
+    /// The targeted request (0 for the step-scoped kinds).
+    pub target: RequestId,
+}
+
+/// A seeded, replayable fault schedule. Install on an engine with
+/// `Engine::install_faults`; the engine offers it sites as it steps.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    rng: XorShift64,
+    rates: FaultRates,
+    /// Pages grabbed from the free list per [`FaultKind::PoolSeize`]
+    /// injection.
+    pub seize_pages: usize,
+    /// Steps a seizure holds its pages before releasing them.
+    pub seize_hold_steps: u64,
+    /// Steps a [`FaultKind::SchedStall`] blocks admission.
+    pub stall_steps: u64,
+    /// Seconds a [`FaultKind::LatencySpike`] adds to the recorded step
+    /// latency (observational only).
+    pub latency_spike_secs: f64,
+    scripted: Vec<ScriptedFault>,
+    log: Vec<FaultRecord>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rates: FaultRates) -> FaultPlan {
+        FaultPlan {
+            rng: XorShift64::new(seed),
+            rates,
+            seize_pages: 8,
+            seize_hold_steps: 4,
+            stall_steps: 3,
+            latency_spike_secs: 0.25,
+            scripted: Vec::new(),
+            log: Vec::new(),
+        }
+    }
+
+    /// The chaos-soak preset: [`FaultRates::standard`] from `seed`.
+    pub fn standard(seed: u64) -> FaultPlan {
+        FaultPlan::new(seed, FaultRates::standard())
+    }
+
+    /// A plan that fires *only* the given scripted faults — zero random
+    /// rates, so the run is exact down to the single injection (and
+    /// consumes no randomness at all).
+    pub fn scripted(faults: Vec<ScriptedFault>) -> FaultPlan {
+        let mut p = FaultPlan::new(0, FaultRates::zero());
+        p.scripted = faults;
+        p
+    }
+
+    /// Offer the plan an injection site; returns whether to inject, and
+    /// logs the injection if so. Scripted faults match first (each fires
+    /// at most once); otherwise the kind's rate draws on the seeded
+    /// stream. The RNG is consulted **only when the kind's rate is
+    /// nonzero**, so a scripted plan's behaviour is independent of how
+    /// many sites the engine happens to offer.
+    pub fn fires(&mut self, kind: FaultKind, target: RequestId, site: u64, step: u64) -> bool {
+        let scripted_hit = self
+            .scripted
+            .iter_mut()
+            .find(|f| !f.fired && f.kind == kind && f.request_id == target && f.site == site);
+        let fire = if let Some(f) = scripted_hit {
+            f.fired = true;
+            true
+        } else {
+            let rate = self.rates.rate(kind);
+            rate > 0.0 && self.rng.chance(rate)
+        };
+        if fire {
+            self.log.push(FaultRecord { step, kind, target });
+        }
+        fire
+    }
+
+    /// Every injection so far, in firing order.
+    pub fn log(&self) -> &[FaultRecord] {
+        &self.log
+    }
+
+    /// Injections by kind, indexed by [`FaultKind::index`] — what the
+    /// `Metrics` robustness counters must reconcile against exactly.
+    pub fn counts(&self) -> [u64; FaultKind::COUNT] {
+        let mut out = [0u64; FaultKind::COUNT];
+        for r in &self.log {
+            out[r.kind.index()] += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_the_same_injection_stream() {
+        let run = || {
+            let mut p = FaultPlan::standard(0xC0FFEE);
+            let mut fired = Vec::new();
+            for step in 0..200u64 {
+                for id in 1..=3u64 {
+                    for kind in FaultKind::ALL {
+                        if p.fires(kind, id, step, step) {
+                            fired.push((step, id, kind));
+                        }
+                    }
+                }
+            }
+            (fired, p.log().to_vec(), p.counts())
+        };
+        let (a, log_a, counts_a) = run();
+        let (b, log_b, counts_b) = run();
+        assert_eq!(a, b, "same seed must replay the same stream");
+        assert_eq!(log_a, log_b);
+        assert_eq!(counts_a, counts_b);
+        assert!(!a.is_empty(), "standard rates over 600 sites must fire");
+        let total: u64 = counts_a.iter().sum();
+        assert_eq!(total, log_a.len() as u64, "counts must sum to the log");
+    }
+
+    #[test]
+    fn scripted_faults_fire_exactly_once_and_only_at_their_site() {
+        let mut p = FaultPlan::scripted(vec![ScriptedFault::new(FaultKind::LogitNan, 7, 3)]);
+        let mut hits = 0;
+        for step in 0..50u64 {
+            for site in 0..10u64 {
+                if p.fires(FaultKind::LogitNan, 7, site, step) {
+                    assert_eq!(site, 3, "must fire at the scripted site only");
+                    hits += 1;
+                }
+                assert!(!p.fires(FaultKind::StepError, 7, site, step));
+                assert!(!p.fires(FaultKind::LogitNan, 8, site, step));
+            }
+        }
+        assert_eq!(hits, 1, "a scripted fault fires exactly once");
+        assert_eq!(p.log().len(), 1);
+        assert_eq!(p.counts()[FaultKind::LogitNan.index()], 1);
+        assert_eq!(
+            p.log()[0],
+            FaultRecord {
+                step: 0,
+                kind: FaultKind::LogitNan,
+                target: 7
+            }
+        );
+    }
+
+    #[test]
+    fn kind_index_and_all_agree() {
+        for (i, k) in FaultKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert!(!k.name().is_empty());
+        }
+    }
+}

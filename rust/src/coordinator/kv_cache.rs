@@ -326,6 +326,54 @@ impl KvPool {
             }
         }
     }
+
+    /// Chaos seam: pull up to `n` pages out of the free list so admission
+    /// and in-flight growth see a genuinely exhausted pool — a forced
+    /// exhaustion spike. The pages are held at refcount 1 (the usual
+    /// used/free/utilization accounting reflects the seizure) and come
+    /// back through [`Self::release_pages`].
+    pub fn seize_free_pages(&mut self, n: usize) -> Vec<PageId> {
+        let mut out = Vec::with_capacity(n.min(self.free.len()));
+        for _ in 0..n {
+            match self.alloc() {
+                Ok(id) => out.push(id),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Release pages held by [`Self::seize_free_pages`].
+    pub fn release_pages(&mut self, pages: &[PageId]) {
+        for &id in pages {
+            self.release(id);
+        }
+    }
+
+    /// Chaos seam: corrupt one element of a resident page in place.
+    /// `flip_bit` toggles an exponent bit — a huge-but-finite excursion
+    /// that exercises the numeric guard — otherwise the element becomes
+    /// NaN (the non-finite watchdog's territory). Store-aware: f32 pools
+    /// corrupt the f32 word, E4M3 pools the stored byte (`0x7f` is the
+    /// E4M3 NaN encoding). Exclusive (`&mut self`) access, so injected
+    /// damage can never race a reader — it is visible only to *later*
+    /// reads, exactly like real silent storage corruption.
+    pub fn corrupt_element(&mut self, id: PageId, elem: usize, flip_bit: bool) {
+        match self.store {
+            KvStore::F32 => {
+                let page = self.page_mut(id);
+                page[elem] = if flip_bit {
+                    f32::from_bits(page[elem].to_bits() ^ 0x4000_0000)
+                } else {
+                    f32::NAN
+                };
+            }
+            KvStore::E4m3 => {
+                let page = self.page8_mut(id);
+                page[elem] = if flip_bit { page[elem] ^ 0x40 } else { 0x7f };
+            }
+        }
+    }
 }
 
 /// The attention lab reads pages straight out of the pool: a
@@ -515,6 +563,24 @@ impl SeqCache {
         pool.store_at(vid, off * w, v_row);
         self.len_tokens = self.len_tokens.max(pos + 1);
         Ok(())
+    }
+
+    /// Chaos seam: corrupt the first element of this sequence's K row at
+    /// (`layer`, `pos`) via [`KvPool::corrupt_element`]. Returns `false`
+    /// (nothing touched) when the position isn't resident. Takes `&mut
+    /// KvPool`, so injected damage can never race a reader — it is seen
+    /// only by *later* attention steps, and only by this sequence (pages
+    /// are per-sequence unless CoW-shared).
+    pub fn corrupt_row(&self, pool: &mut KvPool, layer: usize, pos: usize, flip_bit: bool) -> bool {
+        if layer >= self.n_layers || pos >= self.len_tokens {
+            return false;
+        }
+        let (kp, _) = &self.pages[layer];
+        let Some(&page) = kp.get(pos / pool.page_tokens) else {
+            return false;
+        };
+        pool.corrupt_element(page, (pos % pool.page_tokens) * pool.row_width, flip_bit);
+        true
     }
 
     /// Do everything a decode step at `pos` needs *exclusive* pool access
@@ -719,6 +785,62 @@ mod tests {
         assert!(r.is_err());
         // Failed ensure must not leak pages.
         assert_eq!(p.used_pages(), 0);
+        s.release(&mut p);
+    }
+
+    #[test]
+    fn seize_and_release_round_trip_the_free_list() {
+        let mut p = pool();
+        let total = p.free_pages();
+        let seized = p.seize_free_pages(total + 10); // over-ask caps at free
+        assert_eq!(seized.len(), total);
+        assert_eq!(p.free_pages(), 0);
+        assert!(p.seize_free_pages(1).is_empty());
+        let mut s = SeqCache::new(1);
+        assert!(s.ensure_capacity(&mut p, 4).is_err(), "pool is seized");
+        p.release_pages(&seized);
+        assert_eq!(p.free_pages(), total);
+        assert_eq!(p.used_pages(), 0);
+        s.ensure_capacity(&mut p, 4).unwrap();
+        s.release(&mut p);
+    }
+
+    #[test]
+    fn corrupt_row_poisons_then_flips_the_written_k_row() {
+        let mut p = pool();
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut p, 4).unwrap();
+        let row = [1.5f32; 8];
+        s.write_row(&mut p, 0, 2, &row, &row).unwrap();
+        // NaN poison lands on the K row's first element only.
+        assert!(s.corrupt_row(&mut p, 0, 2, false));
+        let mut dense = vec![0.0; 4 * 8];
+        s.fill_dense(&p, 0, false, &mut dense).unwrap();
+        assert!(dense[2 * 8].is_nan());
+        assert_eq!(dense[2 * 8 + 1], 1.5);
+        s.fill_dense(&p, 0, true, &mut dense).unwrap();
+        assert_eq!(dense[2 * 8], 1.5, "V rows are untouched");
+        // Bit flip produces a finite-but-huge excursion, not NaN.
+        s.write_row(&mut p, 0, 2, &row, &row).unwrap();
+        assert!(s.corrupt_row(&mut p, 0, 2, true));
+        s.fill_dense(&p, 0, false, &mut dense).unwrap();
+        assert!(dense[2 * 8].is_finite() && dense[2 * 8] != 1.5);
+        // Out-of-residency targets are refused, not panicked on.
+        assert!(!s.corrupt_row(&mut p, 0, 99, false));
+        assert!(!s.corrupt_row(&mut p, 5, 0, false));
+        s.release(&mut p);
+    }
+
+    #[test]
+    fn corrupt_row_on_an_e4m3_pool_sets_the_nan_byte() {
+        let mut p = KvPool::new_with_store(16, 4, 8, KvStore::E4m3);
+        let mut s = SeqCache::new(1);
+        s.ensure_capacity(&mut p, 4).unwrap();
+        s.write_row(&mut p, 0, 0, &[1.0; 8], &[1.0; 8]).unwrap();
+        assert!(s.corrupt_row(&mut p, 0, 0, false));
+        let mut dense = vec![0.0; 4 * 8];
+        s.fill_dense(&p, 0, false, &mut dense).unwrap();
+        assert!(dense[0].is_nan(), "0x7f dequantizes to NaN");
         s.release(&mut p);
     }
 

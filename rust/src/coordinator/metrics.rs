@@ -10,6 +10,7 @@
 //! a bounded copy — the old implementation cloned and re-sorted an
 //! ever-growing vector on *every* `percentile()` call.
 
+use super::faults::FaultKind;
 use crate::workloads::Pcg64;
 use std::time::Instant;
 
@@ -152,6 +153,45 @@ pub struct SchedDeferrals {
     pub total_tokens: u64,
     pub prefill_budget: u64,
     pub kv_pages: u64,
+    /// Evicted requests parked for retry backoff instead of completing
+    /// — the deferral-accounting face of the retry budget.
+    pub retry_backoff: u64,
+}
+
+/// Robustness counters: chaos injections by kind plus the
+/// request-lifecycle hardening outcomes. `faults_by_kind` reconciles
+/// one-for-one against the installed `FaultPlan`'s injection log (the
+/// chaos soak pins the equality).
+#[derive(Clone, Debug, Default)]
+pub struct Robustness {
+    /// Injections recorded, indexed by [`FaultKind::index`].
+    pub faults_by_kind: [u64; FaultKind::COUNT],
+    /// Evicted requests re-enqueued under the retry budget.
+    pub retries: u64,
+    /// Requests shed under queue-depth pressure.
+    pub sheds: u64,
+    /// Requests killed by a step-denominated deadline.
+    pub deadline_kills: u64,
+    /// Slots quarantined by the non-finite-logit watchdog or an
+    /// injected backend step failure.
+    pub quarantines: u64,
+    /// Requests cancelled via `Engine::cancel`.
+    pub cancellations: u64,
+    /// Router peek/pop disagreements survived (recoverable; formerly a
+    /// process abort).
+    pub router_desyncs: u64,
+}
+
+impl Robustness {
+    /// Count one injection of `kind`.
+    pub fn fault(&mut self, kind: FaultKind) {
+        self.faults_by_kind[kind.index()] += 1;
+    }
+
+    /// Total injections across all kinds.
+    pub fn faults_total(&self) -> u64 {
+        self.faults_by_kind.iter().sum()
+    }
 }
 
 /// Aggregate serving metrics.
@@ -169,6 +209,8 @@ pub struct Metrics {
     pub guard_switches: u64,
     pub overflow_steps: u64,
     pub deferrals: SchedDeferrals,
+    /// Chaos-injection and lifecycle-hardening counters.
+    pub robustness: Robustness,
     pub ttft: Histogram, // time to first token (arrival → first sample)
     /// Inter-token latency: gap between consecutive sampled tokens of the
     /// same request (the streaming smoothness metric; a chunked prefill
@@ -197,6 +239,7 @@ impl Metrics {
             guard_switches: 0,
             overflow_steps: 0,
             deferrals: SchedDeferrals::default(),
+            robustness: Robustness::default(),
             ttft: Histogram::new(),
             itl: Histogram::new(),
             total_latency: Histogram::new(),
@@ -228,7 +271,8 @@ impl Metrics {
              tok/s={:.1} ttft_mean={:.3}s ttft_p50={:.3}s ttft_p95={:.3}s \
              itl_mean={:.4}s itl_p95={:.4}s lat_mean={:.3}s \
              lat_p95={:.3}s step_mean={:.4}s guard_switches={} overflow_steps={} \
-             defers[slots={} tokens={} prefill={} kv={}]",
+             defers[slots={} tokens={} prefill={} kv={} retry={}] \
+             chaos[faults={} retries={} sheds={} deadline={} quarantine={} cancel={} desync={}]",
             self.requests_completed,
             self.tokens_generated,
             self.prefill_tokens,
@@ -250,6 +294,14 @@ impl Metrics {
             d.total_tokens,
             d.prefill_budget,
             d.kv_pages,
+            d.retry_backoff,
+            self.robustness.faults_total(),
+            self.robustness.retries,
+            self.robustness.sheds,
+            self.robustness.deadline_kills,
+            self.robustness.quarantines,
+            self.robustness.cancellations,
+            self.robustness.router_desyncs,
         )
     }
 }
@@ -320,5 +372,17 @@ mod tests {
         assert!(r.contains("occ=3.00"));
         assert!(r.contains("itl_mean="));
         assert!(r.contains("defers["));
+        assert!(r.contains("chaos["));
+    }
+
+    #[test]
+    fn robustness_counters_reconcile_by_kind() {
+        let mut rb = Robustness::default();
+        rb.fault(FaultKind::KvNanPoison);
+        rb.fault(FaultKind::LogitNan);
+        rb.fault(FaultKind::LogitNan);
+        assert_eq!(rb.faults_by_kind[FaultKind::KvNanPoison.index()], 1);
+        assert_eq!(rb.faults_by_kind[FaultKind::LogitNan.index()], 2);
+        assert_eq!(rb.faults_total(), 3);
     }
 }

@@ -2,6 +2,7 @@
 //! continuous-batching engine, adaptive PASA overflow guard, metrics.
 
 pub mod engine;
+pub mod faults;
 pub mod guard;
 pub mod kv_cache;
 pub mod metrics;
@@ -10,9 +11,10 @@ pub mod router;
 pub mod scheduler;
 
 pub use engine::{Backend, Engine, EngineConfig};
+pub use faults::{FaultKind, FaultPlan, FaultRates, FaultRecord, ScriptedFault};
 pub use guard::{Guard, GuardPolicy, GuardSignal, DEFAULT_PREEMPTIVE_FRAC};
 pub use kv_cache::{KvPool, KvStore, SeqCache};
-pub use metrics::{HistSummary, Histogram, Metrics, SchedDeferrals};
+pub use metrics::{HistSummary, Histogram, Metrics, Robustness, SchedDeferrals};
 pub use request::{
     Completion, FinishReason, GenParams, Phase, Priority, Request, StreamEvent, TokenEvent,
 };

@@ -43,8 +43,28 @@ pub enum FinishReason {
     Rejected,
     /// Evicted mid-flight: the KV pool could not grow the sequence (e.g.
     /// copy-on-write exhaustion) — backpressure, not a crash; the client
-    /// may resubmit.
+    /// may resubmit. When `SchedulerConfig::retry_budget` > 0 the engine
+    /// resubmits on the client's behalf with step-denominated backoff;
+    /// this reason then means the budget was exhausted (or the retry
+    /// could not re-enter the queue).
     Evicted,
+    /// Killed by its step-denominated deadline (`EngineConfig::
+    /// deadline_steps` or `Request::with_deadline`) before finishing —
+    /// queued, mid-prefill, or decoding alike.
+    DeadlineExceeded,
+    /// Shed under queue-depth pressure (`SchedulerConfig::
+    /// shed_queue_depth`): dropped newest-lowest-priority-first before
+    /// ever being admitted, so the work lost is the work that would have
+    /// been served last.
+    Shed,
+    /// Cancelled by the client via `Engine::cancel` — pages released,
+    /// stream closed.
+    Cancelled,
+    /// Quarantined by the engine's fault watchdog: the slot produced a
+    /// non-finite logit row (or its backend step failed outright), so it
+    /// was isolated instead of sampling garbage. Co-batched neighbours
+    /// are unaffected — bit-identical to a fault-free run.
+    Faulted,
 }
 
 /// Lifecycle state.
@@ -68,6 +88,20 @@ pub struct Request {
     pub params: GenParams,
     pub priority: Priority,
     pub arrival: Instant,
+    /// Engine-step clock value at submission, stamped by
+    /// `Engine::submit`. The zero point of the request's deadline —
+    /// step-denominated (never wall clock) so runs replay exactly.
+    pub arrival_step: u64,
+    /// Per-request deadline override in engine steps (`None` = use
+    /// `EngineConfig::deadline_steps`; `Some(0)` is never set — use
+    /// `None`). The request is killed with
+    /// [`FinishReason::DeadlineExceeded`] once
+    /// `current_step - arrival_step >= deadline`.
+    pub deadline_steps: Option<u64>,
+    /// How many times this request has been retried after an eviction
+    /// (engine-internal; compared against `SchedulerConfig::
+    /// retry_budget` and drives the exponential step backoff).
+    pub retries: usize,
 }
 
 impl Request {
@@ -80,6 +114,9 @@ impl Request {
             params: GenParams::default(),
             priority: Priority::Normal,
             arrival: Instant::now(),
+            arrival_step: 0,
+            deadline_steps: None,
+            retries: 0,
         }
     }
 
@@ -90,6 +127,13 @@ impl Request {
 
     pub fn with_priority(mut self, p: Priority) -> Self {
         self.priority = p;
+        self
+    }
+
+    /// Set a per-request deadline in engine steps (overrides the
+    /// engine-wide `EngineConfig::deadline_steps`).
+    pub fn with_deadline(mut self, steps: u64) -> Self {
+        self.deadline_steps = Some(steps);
         self
     }
 }

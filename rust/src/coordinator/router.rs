@@ -124,6 +124,65 @@ impl Router {
         r
     }
 
+    /// Remove a queued request by id (any lane, any position) — the
+    /// cancellation path. Returns the request if it was still queued.
+    /// Removing a lane's head resets that lane's bypass counter: the
+    /// starvation bound is a property of a *specific* waiting head, not
+    /// of the lane itself.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        for l in 0..3 {
+            if let Some(pos) = self.lanes[l].iter().position(|r| r.id == id) {
+                let removed = self.lanes[l].remove(pos);
+                if pos == 0 {
+                    self.bypass[l] = 0;
+                }
+                return removed;
+            }
+        }
+        None
+    }
+
+    /// Drain every queued request matching `pred`, highest lane first,
+    /// FCFS within a lane — the deadline sweep. Any lane whose head is
+    /// removed has its bypass counter reset (same argument as
+    /// [`Router::remove`]).
+    pub fn drain_where<F: FnMut(&Request) -> bool>(&mut self, mut pred: F) -> Vec<Request> {
+        let mut out = Vec::new();
+        for l in (0..3).rev() {
+            let mut kept = VecDeque::new();
+            let mut head_removed = false;
+            for (i, r) in self.lanes[l].drain(..).enumerate() {
+                if pred(&r) {
+                    if i == 0 {
+                        head_removed = true;
+                    }
+                    out.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            self.lanes[l] = kept;
+            if head_removed {
+                self.bypass[l] = 0;
+            }
+        }
+        out
+    }
+
+    /// Shed one request under queue-depth pressure: the **newest**
+    /// request of the **lowest-priority** non-empty lane — the work
+    /// that would have been served last anyway, so shedding it forfeits
+    /// the least finished progress. Resets the lane's bypass counter
+    /// only when the shed entry was also the head (single-entry lane).
+    pub fn shed_lowest_newest(&mut self) -> Option<Request> {
+        let lane = (0..3).find(|&l| !self.lanes[l].is_empty())?;
+        let shed = self.lanes[lane].pop_back();
+        if self.lanes[lane].is_empty() {
+            self.bypass[lane] = 0;
+        }
+        shed
+    }
+
     pub fn depth(&self) -> usize {
         self.lanes.iter().map(|l| l.len()).sum()
     }
@@ -238,6 +297,61 @@ mod tests {
             served_before_batch += 1;
         }
         assert_eq!(served_before_batch, 3, "batch head must pop after max_bypass bypasses");
+    }
+
+    #[test]
+    fn remove_pulls_a_queued_request_from_any_lane_position() {
+        let mut r = Router::new(16, 1024);
+        let a = req(&mut r, Priority::Normal);
+        let b = req(&mut r, Priority::Normal);
+        let c = req(&mut r, Priority::Interactive);
+        let (ia, ib, ic) = (a.id, b.id, c.id);
+        for x in [a, b, c] {
+            r.submit(x);
+        }
+        assert_eq!(r.remove(ib).map(|q| q.id), Some(ib)); // mid-lane
+        assert!(r.remove(ib).is_none(), "already removed");
+        assert!(r.remove(999).is_none(), "unknown id");
+        assert_eq!(r.depth(), 2);
+        assert_eq!(r.pop().unwrap().id, ic);
+        assert_eq!(r.pop().unwrap().id, ia);
+    }
+
+    #[test]
+    fn drain_where_sweeps_matching_requests_across_lanes() {
+        let mut r = Router::new(16, 1024);
+        let mut ids = Vec::new();
+        for p in [Priority::Batch, Priority::Interactive, Priority::Normal, Priority::Batch] {
+            let x = req(&mut r, p);
+            ids.push(x.id);
+            r.submit(x);
+        }
+        // Sweep the two batch requests (odd lane in this submission order).
+        let drained = r.drain_where(|q| q.priority == Priority::Batch);
+        assert_eq!(drained.len(), 2);
+        assert!(drained.iter().all(|q| q.priority == Priority::Batch));
+        assert_eq!(r.depth(), 2);
+        assert!(r
+            .drain_where(|q| q.priority == Priority::Batch)
+            .is_empty());
+    }
+
+    #[test]
+    fn shed_takes_newest_of_lowest_priority_lane() {
+        let mut r = Router::new(16, 1024);
+        let a = req(&mut r, Priority::Interactive);
+        let b = req(&mut r, Priority::Batch);
+        let c = req(&mut r, Priority::Batch);
+        let (ia, ib, ic) = (a.id, b.id, c.id);
+        for x in [a, b, c] {
+            r.submit(x);
+        }
+        // Newest batch entry goes first, then the older batch head, then
+        // (only once the batch lane is empty) the interactive request.
+        assert_eq!(r.shed_lowest_newest().map(|q| q.id), Some(ic));
+        assert_eq!(r.shed_lowest_newest().map(|q| q.id), Some(ib));
+        assert_eq!(r.shed_lowest_newest().map(|q| q.id), Some(ia));
+        assert!(r.shed_lowest_newest().is_none());
     }
 
     #[test]

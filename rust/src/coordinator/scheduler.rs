@@ -44,6 +44,16 @@ pub struct SchedulerConfig {
     pub waiting_served_ratio: f64,
     /// Max concurrent sequences; 0 = backend default (`decode_batch`).
     pub max_batch_size: usize,
+    /// How many times an `Evicted` (KV-backpressure) request is
+    /// re-enqueued with exponential step backoff before the eviction
+    /// becomes terminal. 0 (default) disables retry — evictions surface
+    /// to the client exactly as before.
+    pub retry_budget: usize,
+    /// Queue-depth load-shedding threshold: when the router holds more
+    /// than this many waiting requests at the start of a step, the
+    /// excess is shed newest-lowest-priority-first with
+    /// `FinishReason::Shed`. 0 (default) disables shedding.
+    pub shed_queue_depth: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -53,6 +63,8 @@ impl Default for SchedulerConfig {
             max_batch_total_tokens: 8192,
             waiting_served_ratio: 4.0,
             max_batch_size: 0,
+            retry_budget: 0,
+            shed_queue_depth: 0,
         }
     }
 }
@@ -68,6 +80,8 @@ impl SchedulerConfig {
             max_batch_total_tokens: usize::MAX / 4,
             waiting_served_ratio: f64::INFINITY,
             max_batch_size: 0,
+            retry_budget: 0,
+            shed_queue_depth: 0,
         }
     }
 

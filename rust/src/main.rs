@@ -14,7 +14,8 @@ use anyhow::{bail, Result};
 use pasa::attention::{beta, Allocation};
 use pasa::cli::Args;
 use pasa::coordinator::{
-    Engine, EngineConfig, GenParams, GuardPolicy, KvStore, Request, SchedulerConfig, StreamEvent,
+    Engine, EngineConfig, FaultKind, FaultPlan, GenParams, GuardPolicy, KvStore, Request,
+    SchedulerConfig, StreamEvent,
 };
 use pasa::experiments::{self, ExpOptions};
 use pasa::model::Sampling;
@@ -37,6 +38,8 @@ USAGE: pasa <subcommand> [flags]
         [--max-new N] [--temperature T]
         [--max-batch-prefill-tokens N] [--max-batch-total-tokens N]
         [--waiting-served-ratio R] [--max-batch-size N] [--fifo]
+        [--deadline-steps N] [--retry-budget N] [--shed-queue-depth N]
+        [--chaos-seed S]
         run the continuous-batching serving engine over a synthetic
         prompt workload. --lab uses the artifact-free pure-Rust backend
         (chunked prefill); --stream prints per-token events as they are
@@ -44,7 +47,14 @@ USAGE: pasa <subcommand> [flags]
         behaviour, the benchmark comparator). --alloc roots the
         switching policies' fallback chain: fa16_32 -> pasa, or
         fp8 -> pasa8 -> pasa (lab only). --kv-store e4m3 stores KV
-        pages as 1-byte FP8 (4x pages at the same byte budget; lab only)
+        pages as 1-byte FP8 (4x pages at the same byte budget; lab only).
+        Lifecycle hardening: --deadline-steps kills requests older than
+        N engine steps, --retry-budget re-enqueues evicted requests up
+        to N times with exponential step backoff, --shed-queue-depth
+        sheds the newest low-priority request above a queue depth
+        (0 disables each). --chaos-seed S (lab only, S != 0) installs a
+        seeded fault-injection plan; the run prints its injection log
+        and replays exactly from the same seed
   solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
         solve the optimal accuracy condition
   info  [--artifacts DIR]
@@ -150,11 +160,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_f64("waiting-served-ratio", sched.waiting_served_ratio)?;
     sched.max_batch_size = args.get_usize("max-batch-size", sched.max_batch_size)?;
 
+    // Lifecycle-hardening knobs (S19): all default to 0 = disabled, so a
+    // plain `serve` run behaves exactly as before.
+    sched.retry_budget = args.get_usize("retry-budget", sched.retry_budget)?;
+    sched.shed_queue_depth = args.get_usize("shed-queue-depth", sched.shed_queue_depth)?;
+    let deadline_steps = args.get_usize("deadline-steps", 0)?;
+    let chaos_seed = args.get_usize("chaos-seed", 0)? as u64;
+    if chaos_seed != 0 && !lab {
+        bail!(
+            "--chaos-seed needs the lab backend (--lab); the fault seams \
+             live in the lab decode path."
+        );
+    }
+
     let mut cfg = EngineConfig::default();
     cfg.policy = policy;
     cfg.start_alloc = start_alloc;
     cfg.kv_store = kv_store;
     cfg.sched = sched;
+    cfg.deadline_steps = deadline_steps;
 
     // The engine borrows a PJRT runtime; keep it alive across both arms.
     let rt;
@@ -164,6 +188,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rt = ModelRuntime::load(Path::new(&dir))?;
         Engine::new(&rt, cfg)
     };
+    if chaos_seed != 0 {
+        eng.install_faults(FaultPlan::standard(chaos_seed));
+    }
 
     let prompts = synthetic_prompts(n_requests);
     let sampling = if temp > 0.0 {
@@ -211,6 +238,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("\n{}", eng.metrics.report());
     println!("kv pool utilization at end: {:.3}", eng.kv_utilization());
+    if let Some(plan) = eng.fault_plan() {
+        let counts = plan.counts();
+        let per_kind: Vec<String> = FaultKind::ALL
+            .iter()
+            .zip(counts.iter())
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, c)| format!("{}={c}", k.name()))
+            .collect();
+        println!(
+            "chaos plan: {} injection(s) [{}] — replay with --chaos-seed {chaos_seed}",
+            plan.log().len(),
+            per_kind.join(" ")
+        );
+    }
     Ok(())
 }
 

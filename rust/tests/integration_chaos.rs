@@ -1,0 +1,537 @@
+//! Chaos soak + request-lifecycle hardening integration tests (S19).
+//!
+//! The harness under test: a seeded [`FaultPlan`] injecting faults at
+//! the engine's real seams (KV rows, the backend step, the pool free
+//! list, the admission gate), and the lifecycle machinery that has to
+//! absorb them — step-denominated deadlines, client cancellation,
+//! retry-with-backoff for evictions, queue-depth load shedding, and the
+//! non-finite-logit watchdog that quarantines a faulted slot.
+//!
+//! Invariants pinned here, under fault storms:
+//! * no panics — every seeded run drains;
+//! * every admitted request terminates with **exactly one**
+//!   `StreamEvent::Finished`, and emits no tokens after it;
+//! * token conservation — `metrics.tokens_generated` equals the token
+//!   events on the wire, and a completion's tokens are exactly its last
+//!   streamed attempt;
+//! * the KV pool drains to zero utilization (no leaked refcounts);
+//! * the `Metrics` robustness counters reconcile one-for-one against
+//!   the plan's injection log;
+//! * the same seed replays the same run — token streams and injection
+//!   log alike;
+//! * a quarantined slot leaves its co-batched neighbours' token streams
+//!   **bit-identical** to a fault-free run.
+
+use pasa::coordinator::{
+    Admission, Completion, Engine, EngineConfig, FaultKind, FaultPlan, FaultRates, FinishReason,
+    GenParams, GuardPolicy, KvStore, Priority, Request, SchedulerConfig, ScriptedFault,
+    StreamEvent,
+};
+use pasa::model::{ModelDims, Sampling};
+use pasa::runtime::LabModel;
+use pasa::workloads::{prompt_of_tokens, Pcg64};
+
+fn dims(n_layers: usize, max_seq: usize, decode_batch: usize) -> ModelDims {
+    ModelDims {
+        vocab_size: 259,
+        d_model: 16,
+        n_layers,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        max_seq,
+        prefill_seq: 16,
+        decode_batch,
+        pad: 256,
+        bos: 257,
+        eos: 258,
+    }
+}
+
+fn params(max_new_tokens: usize, sampling: Sampling) -> GenParams {
+    GenParams {
+        max_new_tokens,
+        sampling,
+        stop_at_eos: false,
+    }
+}
+
+/// Drive an engine over `(step, request)` arrivals and `(step, id)`
+/// cancellations until idle. Returns (completions, events, cancels that
+/// landed) in emission order.
+fn drive(
+    eng: &mut Engine<'_>,
+    arrivals: &[(u64, Request)],
+    cancels: &[(u64, u64)],
+) -> (Vec<Completion>, Vec<StreamEvent>, u64) {
+    let mut comps = Vec::new();
+    let mut events = Vec::new();
+    let mut landed = 0u64;
+    let mut next = 0usize;
+    let mut step = 0u64;
+    while next < arrivals.len() || !eng.idle() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            assert_eq!(
+                eng.submit(arrivals[next].1.clone()),
+                Admission::Queued,
+                "trace request must admit"
+            );
+            next += 1;
+        }
+        for &(when, id) in cancels {
+            if when == step && eng.cancel(id) {
+                landed += 1;
+            }
+        }
+        eng.step().unwrap();
+        comps.extend(eng.take_completions());
+        events.extend(eng.take_events());
+        step += 1;
+        assert!(step < 20_000, "engine failed to drain under chaos");
+    }
+    (comps, events, landed)
+}
+
+/// A request's streamed token attempts: each retry restarts the token
+/// index at 0, opening a new segment.
+fn segments(events: &[StreamEvent], id: u64) -> Vec<Vec<u32>> {
+    let mut segs: Vec<Vec<u32>> = Vec::new();
+    for e in events {
+        let StreamEvent::Token(t) = e else { continue };
+        if t.request_id != id {
+            continue;
+        }
+        if t.index == 0 {
+            segs.push(Vec::new());
+        }
+        let seg = segs.last_mut().expect("first streamed token of an attempt must have index 0");
+        assert_eq!(t.index, seg.len(), "token indices must be gapless");
+        seg.push(t.token);
+    }
+    segs
+}
+
+/// The finish reasons streamed for `id`, and the invariant that no
+/// token follows the terminal marker.
+fn finish_reasons(events: &[StreamEvent], id: u64) -> Vec<FinishReason> {
+    let mut reasons = Vec::new();
+    for e in events {
+        match e {
+            StreamEvent::Finished { request_id, reason } if *request_id == id => {
+                reasons.push(*reason)
+            }
+            StreamEvent::Token(t) if t.request_id == id => assert!(
+                reasons.is_empty(),
+                "request {id} streamed a token after its terminal event"
+            ),
+            StreamEvent::Token(_) | StreamEvent::Finished { .. } => {}
+        }
+    }
+    reasons
+}
+
+fn greedy(id: u64, prompt_tokens: usize, max_new: usize) -> Request {
+    Request::new(id, prompt_of_tokens(prompt_tokens)).with_params(params(max_new, Sampling::Greedy))
+}
+
+// ---------------------------------------------------------------------------
+// Chaos soak
+// ---------------------------------------------------------------------------
+
+struct SoakRun {
+    comps: Vec<Completion>,
+    events: Vec<StreamEvent>,
+    cancels_landed: u64,
+    n_requests: u64,
+}
+
+fn run_soak(seed: u64, store: KvStore) -> (Engine<'static>, SoakRun) {
+    let cfg = EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 64,
+        page_tokens: 4,
+        kv_store: store,
+        max_queue: 64,
+        sched: SchedulerConfig {
+            max_batch_prefill_tokens: 16,
+            max_batch_total_tokens: 150,
+            retry_budget: 2,
+            shed_queue_depth: 6,
+            ..SchedulerConfig::default()
+        },
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 3), 42), cfg);
+    eng.install_faults(FaultPlan::new(seed, FaultRates::uniform(0.05)));
+
+    // Seeded trace: staggered arrivals, mixed sampling/priority/deadline.
+    // All decisions come from `seed`, so a run is a pure function of it.
+    let n = 24u64;
+    let mut rng = Pcg64::new(seed, 0x50AC);
+    let mut at = 0u64;
+    let arrivals: Vec<(u64, Request)> = (1..=n)
+        .map(|id| {
+            at += rng.below(3) as u64;
+            let sampling = match rng.below(3) {
+                0 => Sampling::Greedy,
+                1 => Sampling::Temperature(0.9),
+                _ => Sampling::TopK { k: 8, temperature: 0.8 },
+            };
+            let mut req = Request::new(id, prompt_of_tokens(2 + rng.below(22)))
+                .with_params(params(2 + rng.below(9), sampling));
+            if rng.below(4) == 0 {
+                req = req.with_deadline(40 + rng.below(40) as u64);
+            }
+            req = match rng.below(5) {
+                0 => req.with_priority(Priority::Interactive),
+                1 => req.with_priority(Priority::Batch),
+                _ => req,
+            };
+            (at, req)
+        })
+        .collect();
+    let cancels: Vec<(u64, u64)> = (0..4)
+        .map(|_| (3 + rng.below(30) as u64, 1 + rng.below(n as usize) as u64))
+        .collect();
+
+    let (comps, events, cancels_landed) = drive(&mut eng, &arrivals, &cancels);
+    (eng, SoakRun { comps, events, cancels_landed, n_requests: n })
+}
+
+fn assert_soak_invariants(eng: &Engine<'_>, run: &SoakRun) {
+    let n = run.n_requests;
+    assert_eq!(run.comps.len() as u64, n, "every admitted request completes once");
+    assert!(eng.idle());
+    assert_eq!(eng.kv_utilization(), 0.0, "pages leaked under chaos");
+
+    for id in 1..=n {
+        let reasons = finish_reasons(&run.events, id);
+        assert_eq!(reasons.len(), 1, "request {id}: exactly one terminal event");
+        let comp: Vec<&Completion> = run.comps.iter().filter(|c| c.id == id).collect();
+        assert_eq!(comp.len(), 1, "request {id}: exactly one completion");
+        let comp = comp[0];
+        assert_eq!(comp.reason, reasons[0], "stream and completion must agree");
+        let segs = segments(&run.events, id);
+        if comp.tokens.is_empty() {
+            // Terminated without a served attempt (shed, cancelled while
+            // queued, deadline in queue, retry-exhausted eviction, ...).
+        } else {
+            let last = segs.last().expect("a completion with tokens was streamed");
+            assert_eq!(
+                &comp.tokens, last,
+                "request {id}: completion tokens must be its last streamed attempt"
+            );
+        }
+    }
+
+    // Token conservation: the wire and the counter agree.
+    let on_wire = run
+        .events
+        .iter()
+        .filter(|e| matches!(e, StreamEvent::Token(_)))
+        .count() as u64;
+    assert_eq!(eng.metrics.tokens_generated, on_wire);
+    assert_eq!(eng.metrics.requests_completed, n);
+
+    // The robustness counters reconcile one-for-one with the plan's log.
+    let plan = eng.fault_plan().expect("soak runs with a plan installed");
+    assert!(!plan.log().is_empty(), "the soak must actually inject faults");
+    assert_eq!(
+        eng.metrics.robustness.faults_by_kind,
+        plan.counts(),
+        "metrics counters must sum to the injection log"
+    );
+    assert_eq!(eng.metrics.robustness.cancellations, run.cancels_landed);
+}
+
+#[test]
+fn chaos_soak_holds_lifecycle_invariants_across_seeds_and_stores() {
+    for store in [KvStore::F32, KvStore::E4m3] {
+        for seed in [0xC0FFEEu64, 0xBADC0DE, 0x5EED1] {
+            let (eng, run) = run_soak(seed, store);
+            assert_soak_invariants(&eng, &run);
+        }
+    }
+}
+
+#[test]
+fn chaos_soak_replays_bit_identically_from_its_seed() {
+    let fingerprint = |run: &SoakRun, eng: &Engine<'_>| {
+        let tokens: Vec<(u64, usize, u32)> = run
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Token(t) => Some((t.request_id, t.index, t.token)),
+                StreamEvent::Finished { .. } => None,
+            })
+            .collect();
+        let reasons: Vec<(u64, FinishReason)> =
+            run.comps.iter().map(|c| (c.id, c.reason)).collect();
+        let log = eng.fault_plan().unwrap().log().to_vec();
+        (tokens, reasons, log)
+    };
+    let (eng_a, run_a) = run_soak(0xC0FFEE, KvStore::F32);
+    let (eng_b, run_b) = run_soak(0xC0FFEE, KvStore::F32);
+    assert_eq!(
+        fingerprint(&run_a, &eng_a),
+        fingerprint(&run_b, &eng_b),
+        "same seed must replay the same tokens, outcomes, and injections"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Scripted single-fault scenarios
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_seizure_evicts_mid_decode_and_the_retry_budget_completes_it() {
+    // 8-page pool, 4-token pages, 1 layer: a 6-token prompt + 8 new
+    // tokens commits 14 tokens = 8 pages (K+V). Prefill occupies 4;
+    // a scripted seizure at step 1 grabs the free 4, so the decode that
+    // needs a fresh page at position 8 hits genuine pool exhaustion and
+    // evicts. With retry_budget = 1 the engine re-enqueues it (backoff
+    // 2 steps), the seizure releases, and the retry runs to completion.
+    let cfg = EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 8,
+        page_tokens: 4,
+        max_queue: 16,
+        sched: SchedulerConfig {
+            retry_budget: 1,
+            ..SchedulerConfig::fifo_compat()
+        },
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 2), 42), cfg);
+    let mut plan = FaultPlan::scripted(vec![ScriptedFault::new(FaultKind::PoolSeize, 0, 1)]);
+    plan.seize_pages = 64; // grab everything free
+    plan.seize_hold_steps = 2;
+    eng.install_faults(plan);
+
+    let (comps, events, _) = drive(&mut eng, &[(0, greedy(1, 6, 8))], &[]);
+
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].reason, FinishReason::MaxTokens, "the retry must finish the request");
+    assert_eq!(finish_reasons(&events, 1).len(), 1, "eviction + retry is one stream");
+    assert_eq!(eng.metrics.robustness.retries, 1);
+    assert_eq!(eng.metrics.deferrals.retry_backoff, 1);
+
+    // Two streamed attempts: a truncated first, a complete second — and
+    // the retry replays the first attempt's tokens exactly (same prompt,
+    // same per-request RNG).
+    let segs = segments(&events, 1);
+    assert_eq!(segs.len(), 2, "expected eviction then retry, got {segs:?}");
+    assert!(!segs[0].is_empty() && segs[0].len() < 8, "first attempt must truncate");
+    assert_eq!(segs[1].len(), 8);
+    assert_eq!(segs[0][..], segs[1][..segs[0].len()], "retry must replay the prefix");
+    assert_eq!(comps[0].tokens, segs[1]);
+
+    let counts = eng.fault_plan().unwrap().counts();
+    assert_eq!(counts[FaultKind::PoolSeize.index()], 1);
+    assert_eq!(counts.iter().sum::<u64>(), 1, "a scripted plan fires nothing else");
+    assert_eq!(eng.kv_utilization(), 0.0);
+}
+
+#[test]
+fn quarantined_slot_leaves_cobatched_neighbour_bit_identical() {
+    // Request 1 takes a scripted non-finite logit row at its third
+    // generated token and must be quarantined; request 2, co-batched
+    // the whole time, must stream the exact tokens it streams in a
+    // fault-free engine of its own.
+    let cfg = || EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 256,
+        page_tokens: 8,
+        max_queue: 16,
+        ..EngineConfig::default()
+    };
+    let victim = || greedy(1, 5, 10);
+    let neighbour = || {
+        Request::new(2, prompt_of_tokens(7)).with_params(params(10, Sampling::Temperature(0.8)))
+    };
+
+    let mut chaotic = Engine::from_lab(LabModel::synthetic(dims(2, 64, 2), 42), cfg());
+    chaotic.install_faults(FaultPlan::scripted(vec![ScriptedFault::new(
+        FaultKind::LogitNan,
+        1,
+        3,
+    )]));
+    let (comps, events, _) = drive(&mut chaotic, &[(0, victim()), (0, neighbour())], &[]);
+
+    let by_id = |id: u64| comps.iter().find(|c| c.id == id).unwrap();
+    assert_eq!(by_id(1).reason, FinishReason::Faulted);
+    assert_eq!(by_id(1).tokens.len(), 3, "quarantine fires before the 4th sample");
+    assert_eq!(by_id(2).reason, FinishReason::MaxTokens);
+    assert_eq!(chaotic.metrics.robustness.quarantines, 1);
+
+    // The neighbour, solo in a fault-free engine: bit-identical stream.
+    let mut clean = Engine::from_lab(LabModel::synthetic(dims(2, 64, 2), 42), cfg());
+    let (_, clean_events, _) = drive(&mut clean, &[(0, neighbour())], &[]);
+    assert_eq!(
+        segments(&events, 2),
+        segments(&clean_events, 2),
+        "a quarantined co-batch slot must not perturb its neighbour"
+    );
+
+    // And the victim's streamed prefix matches what it produces without
+    // the fault — quarantine truncates, never corrupts.
+    let mut solo = Engine::from_lab(LabModel::synthetic(dims(2, 64, 2), 42), cfg());
+    let (_, solo_events, _) = drive(&mut solo, &[(0, victim())], &[]);
+    let full = &segments(&solo_events, 1)[0];
+    assert_eq!(by_id(1).tokens[..], full[..3]);
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines, shedding, cancellation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_deadline_kills_decoding_requests_and_per_request_override_wins() {
+    let cfg = EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 64,
+        page_tokens: 4,
+        max_queue: 16,
+        deadline_steps: 4,
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 2), 42), cfg);
+    // Request 1 inherits the engine-wide 4-step deadline and cannot
+    // finish 30 tokens in time; request 2 overrides it with a roomy
+    // per-request deadline and must complete.
+    let arrivals = [(0, greedy(1, 4, 30)), (0, greedy(2, 4, 6).with_deadline(1000))];
+    let (comps, events, _) = drive(&mut eng, &arrivals, &[]);
+
+    let by_id = |id: u64| comps.iter().find(|c| c.id == id).unwrap();
+    assert_eq!(by_id(1).reason, FinishReason::DeadlineExceeded);
+    let got = by_id(1).tokens.len();
+    assert!(got >= 1 && got < 30, "killed mid-decode, got {got} tokens");
+    assert_eq!(by_id(2).reason, FinishReason::MaxTokens);
+    assert_eq!(by_id(2).tokens.len(), 6);
+    assert_eq!(finish_reasons(&events, 1).len(), 1);
+    assert_eq!(eng.metrics.robustness.deadline_kills, 1);
+    assert_eq!(eng.kv_utilization(), 0.0);
+}
+
+#[test]
+fn deadline_expires_requests_still_waiting_in_the_queue() {
+    let cfg = EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 64,
+        page_tokens: 4,
+        max_queue: 16,
+        sched: SchedulerConfig {
+            max_batch_size: 1, // one slot: the second request waits
+            ..SchedulerConfig::default()
+        },
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 1), 42), cfg);
+    let arrivals = [(0, greedy(1, 4, 40)), (0, greedy(2, 4, 4).with_deadline(3))];
+    let (comps, _, _) = drive(&mut eng, &arrivals, &[]);
+
+    let by_id = |id: u64| comps.iter().find(|c| c.id == id).unwrap();
+    assert_eq!(by_id(2).reason, FinishReason::DeadlineExceeded);
+    assert!(by_id(2).tokens.is_empty(), "never admitted: no tokens");
+    assert_eq!(by_id(1).reason, FinishReason::MaxTokens, "the running request is untouched");
+    assert_eq!(eng.metrics.robustness.deadline_kills, 1);
+}
+
+#[test]
+fn queue_overflow_sheds_newest_lowest_priority_first() {
+    let cfg = EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 64,
+        page_tokens: 4,
+        max_queue: 64,
+        sched: SchedulerConfig {
+            max_batch_size: 1,
+            shed_queue_depth: 2,
+            ..SchedulerConfig::default()
+        },
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 1), 42), cfg);
+    // Five arrivals into a depth-2 queue: the three newest *Normal*
+    // requests shed; the interactive request survives the sweep even
+    // though it arrived last.
+    let arrivals = [
+        (0, greedy(1, 4, 4)),
+        (0, greedy(2, 4, 4)),
+        (0, greedy(3, 4, 4)),
+        (0, greedy(4, 4, 4)),
+        (0, greedy(5, 4, 4).with_priority(Priority::Interactive)),
+    ];
+    let (comps, _, _) = drive(&mut eng, &arrivals, &[]);
+
+    let reason = |id: u64| comps.iter().find(|c| c.id == id).unwrap().reason;
+    for id in [2, 3, 4] {
+        assert_eq!(reason(id), FinishReason::Shed, "request {id}");
+        assert!(comps.iter().find(|c| c.id == id).unwrap().tokens.is_empty());
+    }
+    for id in [1, 5] {
+        assert_eq!(reason(id), FinishReason::MaxTokens, "request {id}");
+    }
+    assert_eq!(eng.metrics.robustness.sheds, 3);
+}
+
+#[test]
+fn cancel_closes_the_stream_from_every_phase() {
+    let cfg = EngineConfig {
+        policy: GuardPolicy::Adaptive,
+        kv_pages: 64,
+        page_tokens: 8,
+        max_queue: 16,
+        sched: SchedulerConfig {
+            max_batch_prefill_tokens: 8, // force the 40-token prompt to chunk
+            ..SchedulerConfig::default()
+        },
+        ..EngineConfig::default()
+    };
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 2), 42), cfg);
+
+    // Phase: Queued. Cancelled before the first step ever admits it.
+    assert_eq!(eng.submit(greedy(1, 4, 4)), Admission::Queued);
+    assert_eq!(eng.submit(greedy(2, 40, 4)), Admission::Queued);
+    assert_eq!(eng.submit(greedy(3, 4, 6)), Admission::Queued);
+    assert!(eng.cancel(1), "queued request must cancel");
+    assert!(!eng.cancel(999), "unknown id");
+
+    // Phase: Prefilling. One step admits request 2 and prefills 8 of
+    // its 40 prompt tokens (the whole budget), leaving request 3 queued.
+    eng.step().unwrap();
+    assert!(eng.cancel(2), "mid-chunk prefill must cancel");
+    assert_eq!(eng.kv_utilization(), 0.0, "cancelled prefill must release its pages");
+
+    // Request 3 now runs to completion untouched.
+    while !eng.idle() {
+        eng.step().unwrap();
+    }
+
+    // Phase: Decoding. A fresh request, two steps in (prefill + decode),
+    // is mid-generation when cancelled.
+    assert_eq!(eng.submit(greedy(4, 4, 30)), Admission::Queued);
+    eng.step().unwrap();
+    eng.step().unwrap();
+    assert!(eng.cancel(4), "decoding request must cancel");
+    assert!(!eng.cancel(4), "double-cancel is a no-op");
+    while !eng.idle() {
+        eng.step().unwrap();
+    }
+
+    let comps = eng.take_completions();
+    let events = eng.take_events();
+    let by_id = |id: u64| comps.iter().find(|c| c.id == id).unwrap();
+    for id in [1, 2, 4] {
+        assert_eq!(by_id(id).reason, FinishReason::Cancelled, "request {id}");
+        assert_eq!(finish_reasons(&events, id).len(), 1, "request {id}");
+    }
+    assert!(by_id(1).tokens.is_empty());
+    assert!(by_id(2).tokens.is_empty(), "cancelled during prefill: nothing sampled");
+    assert!(!by_id(4).tokens.is_empty(), "cancelled mid-decode: partial stream kept");
+    assert_eq!(by_id(3).reason, FinishReason::MaxTokens);
+    assert_eq!(by_id(3).tokens.len(), 6);
+    assert_eq!(eng.metrics.robustness.cancellations, 3);
+    assert_eq!(eng.kv_utilization(), 0.0);
+    assert!(!eng.cancel(3), "finished request cannot cancel");
+}

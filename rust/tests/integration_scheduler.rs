@@ -113,6 +113,7 @@ fn batched_token_streams_are_bit_identical_to_sequential_runs() {
             max_batch_total_tokens: 120,
             waiting_served_ratio: 4.0,
             max_batch_size: 0,
+            ..SchedulerConfig::default()
         };
         c
     };

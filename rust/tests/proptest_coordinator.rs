@@ -1,9 +1,14 @@
 //! Property tests on the coordinator invariants (paged KV pool, router)
 //! via the crate's mini property-testing harness (rust/src/testing.rs).
 
-use pasa::coordinator::{KvPool, Priority, Request, Router, SeqCache};
+use pasa::coordinator::{
+    Engine, EngineConfig, GenParams, GuardPolicy, KvPool, Priority, Request, Router,
+    SchedulerConfig, SeqCache, StreamEvent,
+};
+use pasa::model::{ModelDims, Sampling};
+use pasa::runtime::LabModel;
 use pasa::testing::check;
-use pasa::workloads::Pcg64;
+use pasa::workloads::{prompt_of_tokens, Pcg64};
 
 /// Random op sequence for the pool: (seq index, op code, argument).
 fn gen_ops(rng: &mut Pcg64) -> Vec<(usize, usize, usize)> {
@@ -146,6 +151,114 @@ fn router_conserves_requests_and_orders_lanes() {
                 if w[1].0 == w[0].0 && w[1].1 < w[0].1 {
                     return Err(format!("FCFS violated within lane: {w:?}"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Request-lifecycle property (S19): under random deadlines, retry
+/// budgets, shed thresholds and cancellations, every submitted request
+/// reaches exactly one terminal event (legal `Phase` transitions only —
+/// a double terminal or a token after the terminal would be an illegal
+/// transition observed on the wire), the engine drains in bounded
+/// steps, and the KV pool returns to zero pages held.
+#[test]
+fn engine_lifecycle_reaches_exactly_one_terminal_per_request() {
+    let lab_dims = || ModelDims {
+        vocab_size: 259,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        max_seq: 48,
+        prefill_seq: 16,
+        decode_batch: 2,
+        pad: 256,
+        bos: 257,
+        eos: 258,
+    };
+    check(
+        25,
+        0x11FEC,
+        |rng: &mut Pcg64| (1 + rng.below(8), rng.next_u64()),
+        |&(n, seed): &(usize, u64)| {
+            let mut rng = Pcg64::new(seed, 7);
+            let cfg = EngineConfig {
+                policy: GuardPolicy::Adaptive,
+                kv_pages: 32,
+                page_tokens: 4,
+                max_queue: 64,
+                deadline_steps: rng.below(8), // 0 = engine deadline off
+                sched: SchedulerConfig {
+                    max_batch_prefill_tokens: 8,
+                    retry_budget: rng.below(3),
+                    shed_queue_depth: rng.below(4), // 0 = shedding off
+                    ..SchedulerConfig::default()
+                },
+                ..EngineConfig::default()
+            };
+            let mut eng = Engine::from_lab(LabModel::synthetic(lab_dims(), 42), cfg);
+            for id in 1..=n as u64 {
+                let mut req = Request::new(id, prompt_of_tokens(2 + rng.below(12)))
+                    .with_params(GenParams {
+                        max_new_tokens: 1 + rng.below(6),
+                        sampling: Sampling::Greedy,
+                        stop_at_eos: false,
+                    });
+                if rng.below(3) == 0 {
+                    req = req.with_deadline(2 + rng.below(20) as u64);
+                }
+                if rng.below(4) == 0 {
+                    req = req.with_priority(Priority::Interactive);
+                }
+                eng.submit(req);
+            }
+            let mut events = Vec::new();
+            let mut comps = 0usize;
+            let mut steps = 0usize;
+            while !eng.idle() {
+                // Cancellation from whatever phase the victim happens to
+                // be in — queued, mid-prefill, decoding, or retry-parked.
+                if rng.below(4) == 0 {
+                    let _ = eng.cancel(1 + rng.below(n) as u64);
+                }
+                eng.step().map_err(|e| format!("step failed: {e}"))?;
+                events.extend(eng.take_events());
+                comps += eng.take_completions().len();
+                steps += 1;
+                if steps > 2_000 {
+                    return Err("engine failed to drain".into());
+                }
+            }
+            let mut terminal: Vec<u64> = Vec::new();
+            for e in &events {
+                match e {
+                    StreamEvent::Finished { request_id, .. } => {
+                        if terminal.contains(request_id) {
+                            return Err(format!("request {request_id} finished twice"));
+                        }
+                        terminal.push(*request_id);
+                    }
+                    StreamEvent::Token(t) => {
+                        if terminal.contains(&t.request_id) {
+                            return Err(format!(
+                                "request {} streamed a token after its terminal event",
+                                t.request_id
+                            ));
+                        }
+                    }
+                }
+            }
+            if terminal.len() != n {
+                return Err(format!("{} terminals for {n} requests", terminal.len()));
+            }
+            if comps != n {
+                return Err(format!("{comps} completions for {n} requests"));
+            }
+            if eng.kv_utilization() != 0.0 {
+                return Err(format!("pages leaked: utilization {}", eng.kv_utilization()));
             }
             Ok(())
         },
