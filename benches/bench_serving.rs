@@ -19,7 +19,10 @@ use pasa::coordinator::{
 };
 use pasa::model::{ModelDims, Sampling};
 use pasa::runtime::{LabModel, ModelRuntime};
-use pasa::workloads::{bursty_trace, poisson_trace, prompt_of_tokens, Arrival, ArrivalShape};
+use pasa::workloads::{
+    bursty_trace, poisson_trace, prompt_of_tokens, shared_prefix_prompt, shared_prefix_trace,
+    Arrival, ArrivalShape,
+};
 use std::path::Path;
 use std::time::Instant;
 
@@ -93,6 +96,57 @@ fn run_trace_store(
         ttft.p50,
         ttft.p95,
         itl.p95,
+        eng.metrics.deferrals.kv_pages,
+    )
+}
+
+/// Shared-prefix cell: every request's prompt opens with the same
+/// `prefix_tokens`-token span (per-request distinct tails), replayed
+/// with the radix prefix cache capped at `cache_pages` (0 = off). The
+/// pool is ample, so the cells differ only in prefill *work*: the on
+/// cell seeds followers from shared pages and skips the page-aligned
+/// span, visible as saved prefill tokens and a lower TTFT at identical
+/// offered load. Returns (tokens, ttft_p50, ttft_p95, prefill tokens
+/// saved, kv-page deferrals).
+fn run_trace_prefix(
+    sched: SchedulerConfig,
+    trace: &[Arrival],
+    prefix_tokens: usize,
+    cache_pages: usize,
+) -> (u64, f64, f64, u64, u64) {
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::Adaptive;
+    cfg.kv_pages = 1024;
+    cfg.page_tokens = 16;
+    cfg.max_queue = 1024;
+    cfg.prefix_cache_pages = cache_pages;
+    cfg.sched = sched;
+    let mut eng = Engine::from_lab(LabModel::synthetic(lab_dims(), 42), cfg);
+    let mut next = 0usize;
+    let mut step = 0usize;
+    while next < trace.len() || !eng.idle() {
+        while next < trace.len() && trace[next].step <= step {
+            let a = trace[next];
+            let id = eng.fresh_id();
+            eng.submit(
+                Request::new(id, shared_prefix_prompt(prefix_tokens, a.prompt_tokens, next))
+                    .with_params(GenParams {
+                        max_new_tokens: a.max_new,
+                        sampling: Sampling::Greedy,
+                        stop_at_eos: false,
+                    }),
+            );
+            next += 1;
+        }
+        eng.step().expect("lab engine step");
+        step += 1;
+    }
+    let ttft = eng.metrics.ttft.summary();
+    (
+        eng.metrics.tokens_generated,
+        ttft.p50,
+        ttft.p95,
+        eng.metrics.prefix.tokens_saved,
         eng.metrics.deferrals.kv_pages,
     )
 }
@@ -244,7 +298,44 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // ---- Part 1c: chaos grid — fault rate × retry budget ----
+    // ---- Part 1c: prefix cache on a shared-prefix workload ----
+    // A fleet sharing a 48-token system prompt (3 pages at 16
+    // tokens/page) with per-request tails. Cache off vs on at the same
+    // offered load: the on cell must generate the same token count
+    // while skipping the shared span's prefill for every follower hit.
+    println!("\n# bench_serving — shared-prefix workload, prefix cache off vs on\n");
+    let px_tokens = 48usize;
+    let px_shape = ArrivalShape {
+        min_prompt_tokens: 52,
+        max_prompt_tokens: 64,
+        min_new: 4,
+        max_new: 12,
+    };
+    let px_trace = shared_prefix_trace(n_requests, 0.8, px_tokens, px_shape, 7);
+    let px_offered: u64 = px_trace.iter().map(|a| a.max_new as u64).sum();
+    for (pname, cache_pages) in [("prefix-off", 0usize), ("prefix-on", 64)] {
+        let (tokens, p50, p95, saved, defers) =
+            run_trace_prefix(SchedulerConfig::default(), &px_trace, px_tokens, cache_pages);
+        assert_eq!(tokens, px_offered, "prefix cell dropped tokens");
+        if cache_pages > 0 {
+            assert!(saved > 0, "the shared-prefix trace never hit the cache");
+        } else {
+            assert_eq!(saved, 0, "cache off must save nothing");
+        }
+        let r = b.run_tagged(
+            &format!("serve shared-prefix {pname}"),
+            "shared-prefix",
+            pname,
+            tokens as f64,
+            || run_trace_prefix(SchedulerConfig::default(), &px_trace, px_tokens, cache_pages),
+        );
+        println!(
+            "{pname:<12} ttft_p50={p50:>8.4}s ttft_p95={p95:>8.4}s \
+             prefill_saved={saved:<6} kv_deferrals={defers:<5} {r}"
+        );
+    }
+
+    // ---- Part 1d: chaos grid — fault rate × retry budget ----
     // How throughput and completion quality degrade under injected
     // faults, and how much of the loss a retry budget claws back. The
     // fault-0 row is the control: a zero-rate plan consumes no

@@ -354,11 +354,12 @@ fn numeric_tokens(line: &str) -> Vec<String> {
 /// A `match` is protected when any arm *pattern* names one of these — the
 /// enums whose variants gate precision dispatch. Arm expressions don't
 /// count (constructing an `Allocation` in a body is fine).
-const PROTECTED_ENUMS: [&str; 6] = [
+const PROTECTED_ENUMS: [&str; 7] = [
     "Allocation::",
     "AttnMask::",
     "FaultKind::",
     "GuardPolicy::",
+    "PrefixDecision::",
     "SchedDecision::",
     "StreamEvent::",
 ];
@@ -399,8 +400,8 @@ pub fn check_wildcard_arms(rel: &str, sc: &Scanned, in_test: &[bool], out: &mut 
                     line_of[*off] + 1,
                     "`_` arm in a match over a protected enum \
                      (Allocation / AttnMask / FaultKind / GuardPolicy / \
-                     SchedDecision / StreamEvent) — name every variant so \
-                     new rows fail to compile here"
+                     PrefixDecision / SchedDecision / StreamEvent) — name \
+                     every variant so new rows fail to compile here"
                         .to_string(),
                 ));
             }
@@ -721,6 +722,14 @@ mod tests {
     #[test]
     fn wildcard_arm_over_protected_enum_flagged() {
         let src = "fn f(a: Allocation) -> u32 {\n    match a {\n        Allocation::Fa32 => 1,\n        _ => 0,\n    }\n}\n";
+        let v = lint_src("rust/src/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, Rule::WildcardArm);
+    }
+
+    #[test]
+    fn wildcard_arm_over_prefix_decision_flagged() {
+        let src = "fn f(d: PrefixDecision) -> usize {\n    match d {\n        PrefixDecision::Hit { tokens } => tokens,\n        _ => 0,\n    }\n}\n";
         let v = lint_src("rust/src/x.rs", src);
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].rule, Rule::WildcardArm);

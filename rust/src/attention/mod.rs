@@ -83,7 +83,6 @@ pub use shifting::{preprocess_k, shifting_inverse, shifting_matrix};
 pub use workspace::{with_workspace, AttnWorkspace};
 
 use crate::numerics::Format;
-use crate::tensor::Matrix;
 use crate::workloads::AttentionCase;
 
 /// Round a case's Q/K/V onto the FP16 grid (the model's storage format).
@@ -93,15 +92,6 @@ pub fn to_fp16_inputs(case: &AttentionCase) -> AttentionCase {
     c.k.round_to(Format::F16);
     c.v.round_to(Format::F16);
     c
-}
-
-/// Run one attention configuration over a single-head case.
-#[deprecated(
-    since = "0.2.0",
-    note = "build an AttentionRequest and use KernelRegistry::get / AttentionRequest::run"
-)]
-pub fn run_attention(case: &AttentionCase, cfg: &AttentionConfig) -> Matrix {
-    AttentionRequest::from_case_cfg(case, *cfg).run().single()
 }
 
 #[cfg(test)]
@@ -127,8 +117,11 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_shim_agrees_with_registry() {
+    fn case_cfg_entry_point_is_registry_dispatch() {
+        // `AttentionRequest::from_case_cfg(..).run()` is the single-head
+        // entry point that replaced the removed `run_attention` shim; pin
+        // it bitwise to an explicit `KernelRegistry::get` dispatch so the
+        // convenience path can never drift from the registry path.
         let mut rng = Pcg64::new(2, 0);
         let c = to_fp16_inputs(&gen_case(
             Distribution::Uniform { x0: 1.0, am: 1.0 },
@@ -139,9 +132,10 @@ mod tests {
         ));
         for alloc in Allocation::all() {
             let cfg = AttentionConfig::new(alloc).with_blocks(32, 32);
-            let legacy = run_attention(&c, &cfg);
-            let new = AttentionRequest::from_case_cfg(&c, cfg).run().single();
-            assert_eq!(legacy.data, new.data, "{}", alloc.name());
+            let via_run = AttentionRequest::from_case_cfg(&c, cfg).run().single();
+            let req = AttentionRequest::from_case_cfg(&c, cfg);
+            let via_registry = KernelRegistry::get(alloc).forward(&req);
+            assert_eq!(via_run.data, via_registry.heads[0].data, "{}", alloc.name());
         }
     }
 }

@@ -71,6 +71,7 @@ use super::faults::{is_injected_error, FaultKind, FaultPlan, INJECTED_STEP_ERROR
 use super::guard::{Guard, GuardPolicy, GuardSignal};
 use super::kv_cache::{KvPool, KvStore, PageId, SeqCache};
 use super::metrics::Metrics;
+use super::prefix_cache::{PrefixCache, PrefixDecision};
 use super::request::{Completion, FinishReason, Phase, Request, StreamEvent, TokenEvent};
 use super::router::{Admission, Router};
 use super::scheduler::{self, BatchState, SchedDecision, SchedulerConfig};
@@ -111,6 +112,14 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Continuous-batching budgets (see [`SchedulerConfig`]).
     pub sched: SchedulerConfig,
+    /// Page-reference budget of the radix prefix cache (0 = disabled).
+    /// **Lab backend only**: the cache seeds admissions through partial
+    /// CoW forks, which the PJRT dense-cache path cannot consume. When
+    /// on, completed prefills publish their page-aligned prompt pages
+    /// into a radix tree; later admissions sharing that prefix skip its
+    /// prefill entirely, and cold prefixes are LRU-evicted under pool
+    /// pressure (`pasa serve --prefix-cache`).
+    pub prefix_cache_pages: usize,
     /// Default per-request deadline in **engine steps** (0 = none). A
     /// request that has not finished within this many steps of its
     /// submission is killed with [`FinishReason::DeadlineExceeded`] —
@@ -130,6 +139,7 @@ impl Default for EngineConfig {
             kv_store: KvStore::F32,
             max_queue: 256,
             sched: SchedulerConfig::default(),
+            prefix_cache_pages: 0,
             deadline_steps: 0,
         }
     }
@@ -298,6 +308,19 @@ pub struct Engine<'rt> {
     retryq: Vec<(u64, Request)>,
     /// Pages seized by pool-exhaustion faults: (release step, pages).
     seized: Vec<(u64, Vec<PageId>)>,
+    /// Radix prefix cache over prompt token IDs (None = disabled; see
+    /// [`EngineConfig::prefix_cache_pages`]).
+    prefix: Option<PrefixCache>,
+    /// Best-of-n fan-out registrations: (primary id, sibling ids). The
+    /// entry survives the primary's eviction-retry parking and fires
+    /// when its prefill completes ([`Engine::fire_ready_fanout`]); a
+    /// primary that terminates without decoding orphans its siblings
+    /// with the same reason.
+    fanout: Vec<(u64, Vec<u64>)>,
+    /// Primaries whose prefill completed this step, with the final
+    /// prompt row's logits — the material sibling first tokens are
+    /// sampled from.
+    fanout_ready: Vec<(u64, Vec<f32>)>,
 }
 
 impl<'rt> Engine<'rt> {
@@ -331,6 +354,8 @@ impl<'rt> Engine<'rt> {
         // truncates to its fixed prefill shape, as it always has).
         let mut router = Router::new(cfg.max_queue, dims.max_seq);
         router.max_bypass = cfg.sched.max_bypass();
+        let prefix = (cfg.prefix_cache_pages > 0 && matches!(backend, Backend::Lab(_)))
+            .then(|| PrefixCache::new(cfg.page_tokens, dims.n_layers, cfg.prefix_cache_pages));
         Engine {
             backend,
             dims,
@@ -353,6 +378,9 @@ impl<'rt> Engine<'rt> {
             stall_until: 0,
             retryq: Vec::new(),
             seized: Vec::new(),
+            prefix,
+            fanout: Vec::new(),
+            fanout_ready: Vec::new(),
             cfg,
         }
     }
@@ -367,6 +395,51 @@ impl<'rt> Engine<'rt> {
 
     pub fn fresh_id(&mut self) -> u64 {
         self.router.fresh_id()
+    }
+
+    /// Submit a request that fans out into `n` independent decode
+    /// streams sharing one prefill (TGI's `generate_best_of` shape): the
+    /// primary admits, prefills and publishes like any request; when its
+    /// prefill completes, each sibling gets a full CoW fork of the
+    /// prompt cache, its own id-seeded RNG, and a first token sampled
+    /// from the primary's final prompt logits — bit-identical to running
+    /// the sibling as its own request, at one prefill's cost for all
+    /// `n`. Returns `(admission of the primary, all n stream ids)` —
+    /// primary first. A primary that never reaches decoding (shed,
+    /// deadline, terminal eviction, quarantine, cancel) closes every
+    /// sibling stream with the same reason. **Lab backend only**: the
+    /// PJRT dense batch has no room for surprise slots.
+    pub fn submit_best_of(&mut self, req: Request, n: usize) -> Result<(Admission, Vec<u64>)> {
+        anyhow::ensure!(n >= 1, "best-of needs n >= 1 (got {n})");
+        anyhow::ensure!(
+            matches!(self.backend, Backend::Lab(_)),
+            "best-of fan-out requires the lab backend (the PJRT decode module's \
+             dense batch width cannot absorb forked slots)"
+        );
+        let primary = req.id;
+        let siblings: Vec<u64> = (1..n).map(|_| self.router.fresh_id()).collect();
+        let mut ids = vec![primary];
+        ids.extend(siblings.iter().copied());
+        let admission = self.submit(req);
+        if admission == Admission::Queued && !siblings.is_empty() {
+            self.fanout.push((primary, siblings));
+        }
+        Ok((admission, ids))
+    }
+
+    /// Release every page reference the radix prefix cache holds —
+    /// drain accounting (the chaos soak's drains-to-zero invariant) and
+    /// shutdown. Returns page references released; 0 with no cache.
+    pub fn flush_prefix_cache(&mut self) -> usize {
+        match self.prefix.as_mut() {
+            Some(pc) => pc.flush(&mut self.pool),
+            None => 0,
+        }
+    }
+
+    /// Page references the radix prefix cache currently holds.
+    pub fn prefix_pages_held(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |pc| pc.pages_held())
     }
 
     /// True when no queued, active, retry-parked, or seized-page work
@@ -505,6 +578,7 @@ impl<'rt> Engine<'rt> {
         if step >= self.stall_until {
             self.admit_and_prefill()?;
         }
+        self.fire_ready_fanout();
         if self.active.iter().any(|s| s.phase == Phase::Decoding) {
             self.decode_round()?;
         }
@@ -643,6 +717,7 @@ impl<'rt> Engine<'rt> {
     /// terminal event, one completion with the true prompt echo and
     /// queue-time attribution, zero generated tokens.
     fn finish_queued(&mut self, req: Request, reason: FinishReason) {
+        self.resolve_orphaned_fanout(req.id, reason);
         let now = Instant::now();
         let total = (now - req.arrival).as_secs_f64();
         self.metrics.total_latency.record(total);
@@ -706,14 +781,34 @@ impl<'rt> Engine<'rt> {
 
         // (b) Admissions under the remaining budget.
         loop {
-            let (ptoks, max_new) = match self.router.peek() {
+            let (ptoks, max_new, shared) = match self.router.peek() {
                 // Prompt capacity differs per backend: the PJRT prefill
                 // module is one fixed shape, the lab chunks up to max_seq.
-                Some(h) => (
-                    h.prompt_tokens
-                        .min(if is_lab { self.dims.max_seq } else { self.dims.prefill_seq }),
-                    h.params.max_new_tokens,
-                ),
+                Some(h) => {
+                    // Radix probe: how much of this prompt is already
+                    // cached. Capped at the tokens *before* the last
+                    // prompt row — its prefill must still run to produce
+                    // the first-token logits (probe truncates to page
+                    // alignment itself). Read-only: the LRU stamps move
+                    // only when the match is consumed at admission.
+                    let shared = match &self.prefix {
+                        Some(pc) => {
+                            let ids =
+                                tokenizer::encode_prompt(&h.prompt, self.dims.max_seq, self.sp);
+                            match pc.probe(&ids, ids.len().saturating_sub(1)) {
+                                PrefixDecision::Hit { tokens } => tokens,
+                                PrefixDecision::Miss => 0,
+                            }
+                        }
+                        None => 0,
+                    };
+                    (
+                        h.prompt_tokens
+                            .min(if is_lab { self.dims.max_seq } else { self.dims.prefill_seq }),
+                        h.params.max_new_tokens,
+                        shared,
+                    )
+                }
                 None => break,
             };
             let st = BatchState {
@@ -726,6 +821,7 @@ impl<'rt> Engine<'rt> {
                 n_layers: self.dims.n_layers,
                 max_seq: self.dims.max_seq,
                 chunkable: is_lab,
+                shared_tokens: shared,
             };
             match scheduler::admission(&self.cfg.sched, &st, ptoks, max_new) {
                 SchedDecision::Admit { chunk } => {
@@ -738,7 +834,7 @@ impl<'rt> Engine<'rt> {
                         break;
                     };
                     budget = budget.saturating_sub(chunk);
-                    self.admit(req, chunk)?;
+                    self.admit(req, chunk, shared)?;
                 }
                 SchedDecision::DeferSlots => {
                     self.metrics.deferrals.slots += 1;
@@ -753,10 +849,21 @@ impl<'rt> Engine<'rt> {
                     break;
                 }
                 SchedDecision::DeferKvPages => {
+                    // Cold cached prefixes are reclaimable pool space:
+                    // evict and re-decide this head before deferring.
+                    // Terminates — a round that frees nothing breaks.
+                    if self.relieve_kv_pressure(ptoks, max_new) > 0 {
+                        continue;
+                    }
                     self.metrics.deferrals.kv_pages += 1;
                     break;
                 }
                 SchedDecision::RejectNeverFits => {
+                    // Same relief before the verdict becomes terminal: a
+                    // pool mostly held by the cache is not "never fits".
+                    if self.relieve_kv_pressure(ptoks, max_new) > 0 {
+                        continue;
+                    }
                     // This request can never run on this pool; surface an
                     // Evicted completion instead of spinning forever, and
                     // keep trying the next head. A peek/pop disagreement
@@ -773,24 +880,68 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
+    /// Evict cold cached prefixes until the pool could hold a candidate
+    /// committing `ptoks + max_new` tokens (or the cache runs out of
+    /// leaves). Returns page references freed — 0 without a cache, which
+    /// keeps the defer/reject paths exactly as before the cache existed.
+    fn relieve_kv_pressure(&mut self, ptoks: usize, max_new: usize) -> usize {
+        let commit = scheduler::committed_tokens(ptoks, max_new, self.dims.max_seq);
+        let need =
+            SeqCache::pages_required(self.dims.n_layers, commit, self.pool.page_tokens.max(1));
+        let freed = match self.prefix.as_mut() {
+            Some(pc) => pc.evict_for(&mut self.pool, need),
+            None => 0,
+        };
+        self.metrics.prefix.evictions += freed as u64;
+        freed
+    }
+
     /// Admit one popped request: seat the slot, run its first prefill
-    /// chunk (lab) or its whole fixed-shape prefill (PJRT). KV
-    /// exhaustion during that first forward rejects the request as
+    /// chunk (lab) or its whole fixed-shape prefill (PJRT). `shared` is
+    /// the admission probe's cached-prefix span: the slot's cache seeds
+    /// from the radix tree's pages and prefill starts beyond them. KV
+    /// exhaustion during the first forward rejects the request as
     /// Evicted instead of killing the engine.
-    fn admit(&mut self, req: Request, first_chunk: usize) -> Result<()> {
+    fn admit(&mut self, req: Request, first_chunk: usize, shared: usize) -> Result<()> {
         let admitted = Instant::now();
         let (rid, arrival) = (req.id, req.arrival);
         if matches!(self.backend, Backend::Lab(_)) {
             let d = self.dims;
             let prompt_ids = tokenizer::encode_prompt(&req.prompt, d.max_seq, self.sp);
             let prompt_len = prompt_ids.len();
+            // Seed from the radix cache: the returned cache's
+            // `len_tokens` is the prefix actually covered (the tree may
+            // have cooled since the probe — trust the seed, not the
+            // probe). A refcount-saturation failure falls back to a cold
+            // admit; the shared rows are byte-identical to what this
+            // request's own prefill would write, so skipping them
+            // changes nothing downstream (chunked prefill is
+            // boundary-invariant).
+            let mut cache = SeqCache::new(d.n_layers);
+            if shared > 0 {
+                if let Some(pc) = self.prefix.as_mut() {
+                    if let Ok(seeded) = pc.seed(&mut self.pool, &prompt_ids, shared) {
+                        cache = seeded;
+                    }
+                }
+            }
+            let prefilled = cache.len_tokens.min(prompt_len.saturating_sub(1));
+            debug_assert_eq!(
+                prefilled,
+                cache.len_tokens,
+                "probe cap keeps the seed strictly inside the prompt"
+            );
+            if prefilled > 0 {
+                self.metrics.prefix.hits += 1;
+                self.metrics.prefix.tokens_saved += prefilled as u64;
+            }
             let rng = request_rng(req.id);
             self.active.push(ActiveRequest {
                 guard: Guard::new(self.cfg.policy).with_start(self.cfg.start_alloc),
-                cache: SeqCache::new(d.n_layers),
+                cache,
                 tokens: prompt_ids.clone(),
                 prompt_ids,
-                prefilled: 0,
+                prefilled,
                 prompt_len,
                 phase: Phase::Prefilling,
                 rng,
@@ -826,6 +977,113 @@ impl<'rt> Engine<'rt> {
         }
     }
 
+    /// Fire pending best-of fan-outs: every primary whose prefill
+    /// completed this step forks its full prompt cache (CoW — shares
+    /// every page, even the partial tail; the sibling's first decode
+    /// write privatizes what it touches) into one decode slot per
+    /// sibling. Each sibling samples its first token from the primary's
+    /// final prompt logits with its **own** id-seeded RNG — from here on
+    /// it is indistinguishable, bit for bit, from having been its own
+    /// request: same cache bytes its own prefill would have written,
+    /// same RNG stream, same guard start (the guard chain replays during
+    /// prefill leave the cache as if the final allocation ran alone, and
+    /// the primary's post-prefill guard state is exactly what the
+    /// sibling's own prefill would have produced).
+    fn fire_ready_fanout(&mut self) {
+        if self.fanout_ready.is_empty() {
+            return;
+        }
+        let d = self.dims;
+        let eos = self.sp.eos;
+        for (pid, row) in std::mem::take(&mut self.fanout_ready) {
+            let Some(fi) = self.fanout.iter().position(|(p, _)| *p == pid) else {
+                continue;
+            };
+            let (_, siblings) = self.fanout.remove(fi);
+            // The primary is still seated this step even if its first
+            // token already finished it (retirement runs after fan-out).
+            let Some(pi) = self.active.iter().position(|s| s.req.id == pid) else {
+                continue;
+            };
+            for sid in siblings {
+                let cache = match self.active[pi].cache.fork(&mut self.pool) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        // Refcount saturation: this sibling never gets a
+                        // cache — close its stream as evicted.
+                        self.finish_fanout_orphan(sid, FinishReason::Evicted);
+                        continue;
+                    }
+                };
+                let p = &self.active[pi];
+                let mut req = p.req.clone();
+                req.id = sid;
+                let mut s = ActiveRequest {
+                    guard: p.guard.clone(),
+                    cache,
+                    tokens: p.prompt_ids.clone(),
+                    prompt_ids: p.prompt_ids.clone(),
+                    prefilled: p.prompt_len,
+                    prompt_len: p.prompt_len,
+                    phase: Phase::Decoding,
+                    rng: request_rng(sid),
+                    admitted: p.admitted,
+                    prefill_done: p.prefill_done,
+                    first_token: None,
+                    last_token: None,
+                    req,
+                };
+                self.metrics.prefix.fanout_forks += 1;
+                let tok = sample(&row, s.req.params.sampling, &mut s.rng);
+                emit_token(&mut s, tok, &mut self.metrics, &mut self.events);
+                apply_stop_rules(&mut s, tok, d.max_seq, eos);
+                self.active.push(s);
+            }
+        }
+    }
+
+    /// Close the stream of a fan-out sibling that never got (or never
+    /// will get) a decode slot: the primary terminated before decoding,
+    /// or its fork failed. One terminal event, one empty completion,
+    /// the primary's terminal reason.
+    fn finish_fanout_orphan(&mut self, sid: u64, reason: FinishReason) {
+        self.metrics.requests_completed += 1;
+        self.events.push(StreamEvent::Finished {
+            request_id: sid,
+            reason,
+        });
+        self.completions.push(Completion {
+            id: sid,
+            prompt: String::new(),
+            text: String::new(),
+            tokens: Vec::new(),
+            reason,
+            prompt_tokens: 0,
+            queue_time: 0.0,
+            prefill_time: 0.0,
+            first_token_latency: 0.0,
+            total_latency: 0.0,
+            allocation: String::new(),
+            guard_switches: 0,
+        });
+    }
+
+    /// A primary reached a terminal state with its fan-out unfired
+    /// (shed, deadline-killed, cancelled, quarantined at prefill, or
+    /// terminally evicted): orphan every sibling with the same reason.
+    /// Eviction-*retry* parking never lands here — `retire_finished`
+    /// re-parks without finishing, so the registration survives the
+    /// retry and fires on the successful attempt.
+    fn resolve_orphaned_fanout(&mut self, primary: u64, reason: FinishReason) {
+        let Some(fi) = self.fanout.iter().position(|(p, _)| *p == primary) else {
+            return;
+        };
+        let (_, siblings) = self.fanout.remove(fi);
+        for sid in siblings {
+            self.finish_fanout_orphan(sid, reason);
+        }
+    }
+
     /// Complete a request that could not be admitted (pool exhaustion at
     /// prefill, or a commitment larger than the whole pool): an Evicted
     /// completion with correct time attribution — queueing up to
@@ -834,6 +1092,7 @@ impl<'rt> Engine<'rt> {
     /// (the request was consumed by the failed admission; this path
     /// trades the echo for not cloning every admitted prompt).
     fn reject_evicted(&mut self, id: u64, arrival: Instant, admitted: Instant) {
+        self.resolve_orphaned_fanout(id, FinishReason::Evicted);
         let now = Instant::now();
         self.metrics.requests_completed += 1;
         self.events.push(StreamEvent::Finished {
@@ -871,6 +1130,9 @@ impl<'rt> Engine<'rt> {
             active,
             metrics,
             events,
+            prefix,
+            fanout,
+            fanout_ready,
             ..
         } = self;
         let Backend::Lab(model) = backend else {
@@ -914,6 +1176,20 @@ impl<'rt> Engine<'rt> {
                 return Ok(());
             }
             s.phase = Phase::Decoding;
+            // Publish the finalized page-aligned prompt pages into the
+            // radix cache (best-effort, shares — never copies), then
+            // trim the cache back to its page budget. Decode never
+            // touches these pages: the write position's page is either
+            // past them or privatized by `prepare_step` first.
+            if let Some(pc) = prefix.as_mut() {
+                pc.insert(pool, &s.prompt_ids, &s.cache);
+                metrics.prefix.evictions += pc.enforce_budget(pool) as u64;
+            }
+            // A registered best-of primary hands its final prompt logits
+            // to the fan-out stage (fired after admission this step).
+            if fanout.iter().any(|(p, _)| *p == s.req.id) {
+                fanout_ready.push((s.req.id, row.clone()));
+            }
             let tok = sample(row, s.req.params.sampling, &mut s.rng);
             emit_token(s, tok, metrics, events);
             apply_stop_rules(s, tok, d.max_seq, eos);
@@ -1089,13 +1365,35 @@ impl<'rt> Engine<'rt> {
         let d = self.dims;
         // Phase 1: allocate/privatize under exclusive pool access.
         {
-            let Engine { active, pool, .. } = self;
+            let Engine {
+                active,
+                pool,
+                prefix,
+                metrics,
+                ..
+            } = self;
             for s in active.iter_mut() {
                 if s.phase != Phase::Decoding {
                     continue;
                 }
                 let pos = s.tokens.len() - 1;
-                match s.cache.prepare_step(pool, pos) {
+                let mut r = s.cache.prepare_step(pool, pos);
+                if let Err(e) = &r {
+                    if is_kv_backpressure(e) {
+                        // Cold cached prefixes are reclaimable: evict up
+                        // to a step's worst-case page demand (one fresh
+                        // page plus one CoW copy per K/V table) and retry
+                        // once before treating exhaustion as eviction.
+                        let freed = prefix
+                            .as_mut()
+                            .map_or(0, |pc| pc.evict_for(pool, 4 * d.n_layers));
+                        metrics.prefix.evictions += freed as u64;
+                        if freed > 0 {
+                            r = s.cache.prepare_step(pool, pos);
+                        }
+                    }
+                }
+                match r {
                     Ok(()) => {}
                     // KV pool exhausted: backpressure, not a crash — evict
                     // the slot, its pages free up at retirement.
@@ -1502,6 +1800,11 @@ impl<'rt> Engine<'rt> {
             Phase::Finished(r) => r,
             _ => FinishReason::MaxTokens,
         };
+        // A best-of primary finishing with its fan-out still registered
+        // never decoded (quarantine, deadline, terminal eviction):
+        // its siblings share that fate. A fired fan-out has already
+        // removed the registration, so this is a no-op then.
+        self.resolve_orphaned_fanout(ar.req.id, reason);
         // True queue wait: arrival → admission (prefill start). Prefill
         // execution is reported separately — the two used to be conflated
         // (both were arrival → prefill_done).

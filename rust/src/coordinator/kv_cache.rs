@@ -210,11 +210,30 @@ impl KvPool {
         }
     }
 
-    fn retain(&mut self, id: PageId) {
-        self.refcount[id as usize] += 1;
+    /// Add one reference to a resident page (CoW forks and radix
+    /// prefix-cache sharing). Checked: a pathological fan-out loop that
+    /// reached `u32::MAX` references would silently wrap in release
+    /// builds and corrupt CoW ownership, so the overflow surfaces as the
+    /// usual exhaustion-style `Err` — the engine already treats that
+    /// family as backpressure. On failure the count is untouched.
+    pub(super) fn retain(&mut self, id: PageId) -> Result<()> {
+        let rc = &mut self.refcount[id as usize];
+        match rc.checked_add(1) {
+            Some(n) => {
+                *rc = n;
+                Ok(())
+            }
+            None => bail!(
+                "{}: page {id} refcount saturated at u32::MAX (fan-out too deep)",
+                Self::EXHAUSTED
+            ),
+        }
     }
 
-    fn release(&mut self, id: PageId) {
+    /// Drop one reference; the page returns to the free list at zero.
+    /// Shared with the sibling prefix-cache module, whose radix nodes
+    /// hold page references of their own.
+    pub(super) fn release(&mut self, id: PageId) {
         let rc = &mut self.refcount[id as usize];
         assert!(*rc > 0, "double free of page {id}");
         *rc -= 1;
@@ -494,14 +513,79 @@ impl SeqCache {
     }
 
     /// Copy-on-write fork (prefix sharing): pages are shared, refcounted.
-    pub fn fork(&self, pool: &mut KvPool) -> SeqCache {
-        let mut out = self.clone();
-        for (kp, vp) in &mut out.pages {
-            for id in kp.iter().chain(vp.iter()) {
-                pool.retain(*id);
+    /// Fails only when a refcount would saturate ([`KvPool::retain`]) —
+    /// rolled back completely, the same backpressure `Err` family as
+    /// pool exhaustion.
+    pub fn fork(&self, pool: &mut KvPool) -> Result<SeqCache> {
+        self.fork_first_pages(pool, usize::MAX, self.len_tokens)
+    }
+
+    /// Partial-prefix copy-on-write fork: share only the pages covering
+    /// the **page-aligned** prefix of `tokens` (truncated down — a
+    /// partially filled tail page is never shared, so the fork can only
+    /// observe rows the donor had finalized by a page boundary) and
+    /// truncate `len_tokens` to that aligned match. `tokens` clamps to
+    /// the donor's `len_tokens`. The radix prefix cache seeds admissions
+    /// through this; the tail pages the donor holds beyond the cut are
+    /// simply not referenced (the "tail-page release" of a prefix fork is
+    /// never taking the reference in the first place).
+    pub fn fork_prefix(&self, pool: &mut KvPool, tokens: usize) -> Result<SeqCache> {
+        let pt = pool.page_tokens.max(1);
+        let aligned = (tokens.min(self.len_tokens) / pt) * pt;
+        self.fork_first_pages(pool, aligned / pt, aligned)
+    }
+
+    /// Shared core of [`Self::fork`] / [`Self::fork_prefix`]: clone the
+    /// first `keep` pages of every per-layer K/V table, retaining each.
+    /// A mid-way retain failure releases every reference already taken —
+    /// the pool is exactly as before the call.
+    fn fork_first_pages(&self, pool: &mut KvPool, keep: usize, len_tokens: usize) -> Result<SeqCache> {
+        let mut out = SeqCache::new(self.n_layers);
+        out.len_tokens = len_tokens;
+        for (li, (kp, vp)) in self.pages.iter().enumerate() {
+            for (src, want_v) in [(kp, false), (vp, true)] {
+                for &id in src.iter().take(keep) {
+                    if let Err(e) = pool.retain(id) {
+                        out.release(pool);
+                        return Err(e);
+                    }
+                    let (ok, ov) = &mut out.pages[li];
+                    if want_v { ov.push(id) } else { ok.push(id) }
+                }
             }
         }
-        out
+        Ok(out)
+    }
+
+    /// Assemble a sequence cache directly from already-resident shared
+    /// pages — the radix prefix cache's seeding primitive.
+    /// `page_pairs[pi][layer]` is the (K, V) page pair covering page
+    /// `pi`, so the result holds `page_pairs.len() × page_tokens`
+    /// finalized rows. Every page is retained; a mid-way retain failure
+    /// rolls back completely.
+    pub(super) fn from_shared_pages(
+        pool: &mut KvPool,
+        n_layers: usize,
+        page_pairs: &[Vec<(PageId, PageId)>],
+    ) -> Result<SeqCache> {
+        let mut out = SeqCache::new(n_layers);
+        for pair in page_pairs {
+            debug_assert_eq!(pair.len(), n_layers, "one (K, V) pair per layer");
+            for (li, &(k, v)) in pair.iter().enumerate() {
+                if let Err(e) = pool.retain(k) {
+                    out.release(pool);
+                    return Err(e);
+                }
+                out.pages[li].0.push(k);
+                if let Err(e) = pool.retain(v) {
+                    out.release(pool);
+                    return Err(e);
+                }
+                out.pages[li].1.push(v);
+            }
+        }
+        out.len_tokens = page_pairs.len() * pool.page_tokens;
+        Ok(out)
     }
 
     /// Make a shared (CoW) page private before a write. Pool exhaustion is
@@ -852,7 +936,7 @@ mod tests {
         let row = [7.0f32; 8];
         a.write_row(&mut p, 0, 0, &row, &row).unwrap();
         let used_before = p.used_pages();
-        let mut b = a.fork(&mut p);
+        let mut b = a.fork(&mut p).unwrap();
         assert_eq!(p.used_pages(), used_before, "fork must not allocate");
         // Writing through the fork triggers CoW — the original is intact.
         let row2 = [9.0f32; 8];
@@ -925,7 +1009,7 @@ mod tests {
         let row = [3.0f32; 8];
         a.write_row(&mut p, 0, 0, &row, &row).unwrap();
         assert_eq!(p.free_pages(), 0);
-        let mut b = a.fork(&mut p); // shares both pages, still 0 free
+        let mut b = a.fork(&mut p).unwrap(); // shares both pages, still 0 free
         let r = b.write_row(&mut p, 0, 1, &[4.0; 8], &[4.0; 8]);
         assert!(r.is_err(), "CoW on an exhausted pool must fail");
         let err = r.unwrap_err();
@@ -958,7 +1042,7 @@ mod tests {
         a.ensure_capacity(&mut p, 4).unwrap();
         let row = [2.0f32; 8];
         a.write_row(&mut p, 0, 0, &row, &row).unwrap();
-        let mut b = a.fork(&mut p);
+        let mut b = a.fork(&mut p).unwrap();
         b.prepare_step(&mut p, 1).unwrap();
         let row2 = [9.5f32; 8];
         b.write_row_prepared(&p, 0, 1, &row2, &row2);
@@ -992,7 +1076,7 @@ mod tests {
         let mut p = pool();
         let mut a = SeqCache::new(1);
         a.ensure_capacity(&mut p, 4).unwrap();
-        let mut b = a.fork(&mut p); // pages now shared (refcount 2)
+        let mut b = a.fork(&mut p).unwrap(); // pages now shared (refcount 2)
         b.write_row_prepared(&p, 0, 0, &[1.0; 8], &[1.0; 8]);
     }
 
@@ -1088,7 +1172,7 @@ mod tests {
         let row = [2.5f32; 8];
         a.write_row(&mut p, 0, 0, &row, &row).unwrap();
         let used_before = p.used_pages();
-        let mut b = a.fork(&mut p);
+        let mut b = a.fork(&mut p).unwrap();
         assert_eq!(p.used_pages(), used_before, "fork must not allocate");
         b.prepare_step(&mut p, 1).unwrap();
         assert!(p.used_pages() > used_before, "prepare_step privatized CoW pages");
@@ -1104,6 +1188,79 @@ mod tests {
         assert_eq!(&da[8..16], &[0.0; 8], "original must not see the fork's write");
         a.release(&mut p);
         b.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn refcount_saturation_is_backpressure_not_wraparound() {
+        // Satellite bugfix: the unchecked `refcount += 1` would wrap at
+        // u32::MAX in release builds, silently corrupting CoW ownership.
+        // It must instead fail as the usual exhaustion-style Err.
+        let mut p = pool();
+        let mut a = SeqCache::new(1);
+        a.ensure_capacity(&mut p, 4).unwrap();
+        let kid = a.page_ids(0, false)[0];
+        p.refcount[kid as usize] = u32::MAX - 1;
+        p.retain(kid).unwrap(); // reaches the ceiling exactly
+        assert_eq!(p.refcount[kid as usize], u32::MAX);
+        let err = p.retain(kid).unwrap_err();
+        assert!(
+            KvPool::is_exhausted_error(&err),
+            "saturation not classified as backpressure: {err}"
+        );
+        assert_eq!(
+            p.refcount[kid as usize],
+            u32::MAX,
+            "a failed retain must not move the count"
+        );
+        // A fork over the saturated table rolls back cleanly: the K page
+        // retain fails and no reference leaks anywhere.
+        let vid = a.page_ids(0, true)[0];
+        let v_before = p.refcount[vid as usize];
+        let used = p.used_pages();
+        assert!(a.fork(&mut p).is_err());
+        assert_eq!(p.used_pages(), used);
+        assert_eq!(p.refcount[vid as usize], v_before, "rollback released the V retain");
+        // Unwind the synthetic references so the drain accounting holds.
+        p.refcount[kid as usize] = 1;
+        a.release(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn fork_prefix_shares_only_aligned_pages() {
+        let mut p = pool(); // 4 tokens/page
+        let mut a = SeqCache::new(2);
+        a.ensure_capacity(&mut p, 10).unwrap(); // 3 pages per table
+        for pos in 0..10 {
+            let row = [pos as f32; 8];
+            a.write_row(&mut p, 0, pos, &row, &row).unwrap();
+            a.write_row(&mut p, 1, pos, &row, &row).unwrap();
+        }
+        let used = p.used_pages();
+        // 10 tokens truncate down to the 8-token page boundary: 2 of the
+        // 3 pages per table are shared; the partial tail page is not.
+        let b = a.fork_prefix(&mut p, 10).unwrap();
+        assert_eq!(b.len_tokens, 8);
+        assert_eq!(b.total_pages_held(), 2 * 2 * 2);
+        assert_eq!(p.used_pages(), used, "a prefix fork must not allocate");
+        // The fork reads the shared prefix bit-exactly.
+        let mut db = vec![0.0f32; 8 * 8];
+        b.fill_dense(&p, 1, false, &mut db).unwrap();
+        assert_eq!(&db[7 * 8..8 * 8], &[7.0f32; 8]);
+        // Aligned cuts keep exactly the asked pages; oversized asks clamp
+        // to the donor's own aligned length.
+        let c = a.fork_prefix(&mut p, 4).unwrap();
+        assert_eq!((c.len_tokens, c.total_pages_held()), (4, 2 * 2));
+        let d = a.fork_prefix(&mut p, 64).unwrap();
+        assert_eq!(d.len_tokens, 8, "clamps to the donor's aligned length");
+        // A sub-page ask shares nothing at all.
+        let e = a.fork_prefix(&mut p, 3).unwrap();
+        assert_eq!((e.len_tokens, e.total_pages_held()), (0, 0));
+        for mut s in [b, c, d, e] {
+            s.release(&mut p);
+        }
+        a.release(&mut p);
         assert_eq!(p.used_pages(), 0);
     }
 

@@ -158,6 +158,22 @@ pub struct SchedDeferrals {
     pub retry_backoff: u64,
 }
 
+/// Radix prefix-cache and fan-out counters — the observability face of
+/// `coordinator::prefix_cache`. `tokens_saved` is prefill work the cache
+/// skipped (the engine-level pin lower-bounds it for a shared-prefix
+/// fleet); `evictions` counts page references the LRU policy released.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// Admissions seeded from cached pages.
+    pub hits: u64,
+    /// Prompt tokens whose prefill was skipped via shared pages.
+    pub tokens_saved: u64,
+    /// Page references released by LRU eviction (budget or pool pressure).
+    pub evictions: u64,
+    /// Sibling decode slots created by best-of-n fan-out forks.
+    pub fanout_forks: u64,
+}
+
 /// Robustness counters: chaos injections by kind plus the
 /// request-lifecycle hardening outcomes. `faults_by_kind` reconciles
 /// one-for-one against the installed `FaultPlan`'s injection log (the
@@ -209,6 +225,8 @@ pub struct Metrics {
     pub guard_switches: u64,
     pub overflow_steps: u64,
     pub deferrals: SchedDeferrals,
+    /// Prefix-cache hit/saving/eviction and fan-out counters.
+    pub prefix: PrefixStats,
     /// Chaos-injection and lifecycle-hardening counters.
     pub robustness: Robustness,
     pub ttft: Histogram, // time to first token (arrival → first sample)
@@ -239,6 +257,7 @@ impl Metrics {
             guard_switches: 0,
             overflow_steps: 0,
             deferrals: SchedDeferrals::default(),
+            prefix: PrefixStats::default(),
             robustness: Robustness::default(),
             ttft: Histogram::new(),
             itl: Histogram::new(),
@@ -272,6 +291,7 @@ impl Metrics {
              itl_mean={:.4}s itl_p95={:.4}s lat_mean={:.3}s \
              lat_p95={:.3}s step_mean={:.4}s guard_switches={} overflow_steps={} \
              defers[slots={} tokens={} prefill={} kv={} retry={}] \
+             prefix[hits={} tokens_saved={} evictions={} forks={}] \
              chaos[faults={} retries={} sheds={} deadline={} quarantine={} cancel={} desync={}]",
             self.requests_completed,
             self.tokens_generated,
@@ -295,6 +315,10 @@ impl Metrics {
             d.prefill_budget,
             d.kv_pages,
             d.retry_backoff,
+            self.prefix.hits,
+            self.prefix.tokens_saved,
+            self.prefix.evictions,
+            self.prefix.fanout_forks,
             self.robustness.faults_total(),
             self.robustness.retries,
             self.robustness.sheds,
@@ -372,6 +396,7 @@ mod tests {
         assert!(r.contains("occ=3.00"));
         assert!(r.contains("itl_mean="));
         assert!(r.contains("defers["));
+        assert!(r.contains("prefix["));
         assert!(r.contains("chaos["));
     }
 

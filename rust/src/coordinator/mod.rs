@@ -6,6 +6,7 @@ pub mod faults;
 pub mod guard;
 pub mod kv_cache;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -14,7 +15,8 @@ pub use engine::{Backend, Engine, EngineConfig};
 pub use faults::{FaultKind, FaultPlan, FaultRates, FaultRecord, ScriptedFault};
 pub use guard::{Guard, GuardPolicy, GuardSignal, DEFAULT_PREEMPTIVE_FRAC};
 pub use kv_cache::{KvPool, KvStore, SeqCache};
-pub use metrics::{HistSummary, Histogram, Metrics, Robustness, SchedDeferrals};
+pub use metrics::{HistSummary, Histogram, Metrics, PrefixStats, Robustness, SchedDeferrals};
+pub use prefix_cache::{PrefixCache, PrefixDecision};
 pub use request::{
     Completion, FinishReason, GenParams, Phase, Priority, Request, StreamEvent, TokenEvent,
 };

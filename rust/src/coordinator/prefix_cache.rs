@@ -1,0 +1,473 @@
+//! Radix prefix cache over prompt token IDs (S12): shared-prefix KV
+//! reuse for the millions-of-users system-prompt workload.
+//!
+//! The tree is **page-granular**: every node's edge label is exactly one
+//! full page of token ids (`page_tokens` of them), because a whole page
+//! is the smallest unit the CoW pool can share — a partially matching
+//! page would mix two prompts' rows in one refcounted unit. A node owns
+//! the page run that stores its tokens' K/V rows: one `(K, V)`
+//! [`PageId`] pair per layer, each holding a pool reference
+//! ([`KvPool::retain`]) for as long as the node lives. Children extend
+//! the prefix by one more page, so a root-to-node path spells a
+//! page-aligned prompt prefix and the pages along it are exactly the
+//! cached KV for that prefix.
+//!
+//! * **Match rule**: a prompt matches the longest root path whose
+//!   concatenated edge labels are a prefix of the prompt — always a
+//!   multiple of `page_tokens`. Anything past the last full page is
+//!   re-prefilled by the consumer (and the engine additionally caps
+//!   reuse at `prompt_len − 1`, because the final prompt row must be
+//!   prefilled to produce first-token logits).
+//! * **Insert** ([`PrefixCache::insert`]) walks an admitted request's
+//!   finalized prompt pages into the tree after its prefill completes,
+//!   retaining the pages straight out of the request's own `SeqCache` —
+//!   no copy, the cache and the request *share* the pages from that
+//!   moment on. Insertion is best-effort: a refcount saturation stops it
+//!   without failing the request.
+//! * **Seed** ([`PrefixCache::seed`]) builds a [`SeqCache`] whose
+//!   leading pages are the matched nodes' pages (retained again, once
+//!   per consumer), so the consumer skips that prefix of chunked
+//!   prefill entirely. Copy-on-write isolates any later write.
+//! * **Eviction**: least-recently-used **leaves** first (`last_used`
+//!   stamps from a monotone use-clock — no wall time, so replays are
+//!   deterministic), either to honor the configured page budget after
+//!   an insert or on demand when the engine needs free pages
+//!   ([`PrefixCache::evict_for`]). Releasing a node's references only
+//!   returns pages to the free list once no live sequence shares them.
+//!
+//! Determinism: the cache stores bytes the donor's prefill wrote and
+//! hands them out bit-identically; a consumer's stream equals its
+//! cache-off run because chunked prefill is boundary-invariant and the
+//! shared rows are exactly what its own prefill would have produced.
+//! Nothing here consumes randomness or clocks.
+
+use super::kv_cache::{KvPool, PageId, SeqCache};
+use anyhow::Result;
+
+/// Outcome of an admission-time probe: how much of a prompt the radix
+/// tree already holds. Matched exhaustively in the engine (pasa-lint
+/// protects this enum from wildcard arms): a new decision kind must be
+/// handled at every dispatch site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefixDecision {
+    /// No cached page covers this prompt.
+    Miss,
+    /// The first `tokens` prompt tokens (a multiple of `page_tokens`)
+    /// are resident in shared pages: admission may charge their pages
+    /// once (they are already held) and skip their prefill.
+    Hit { tokens: usize },
+}
+
+/// One radix node: a page worth of token ids and the page run storing
+/// their K/V rows.
+struct Node {
+    /// Edge label — exactly `page_tokens` token ids.
+    tokens: Vec<u32>,
+    /// The owned page run: one (K, V) page pair per layer.
+    pages: Vec<(PageId, PageId)>,
+    /// Use-clock stamp of the last probe/seed/insert touching this node.
+    last_used: u64,
+    children: Vec<Node>,
+}
+
+/// The radix prefix cache (see module docs).
+pub struct PrefixCache {
+    page_tokens: usize,
+    n_layers: usize,
+    /// Page-reference budget: eviction trims the tree back to this many
+    /// held references after inserts.
+    max_pages: usize,
+    /// Monotone use-clock for LRU stamps (never wall time).
+    clock: u64,
+    /// Page references currently held by the tree (2 × n_layers per node).
+    pages_held: usize,
+    /// First-page nodes (the root itself holds no pages).
+    roots: Vec<Node>,
+}
+
+impl PrefixCache {
+    /// `max_pages` caps how many pool-page references the tree may hold;
+    /// inserts beyond it evict cold leaves first.
+    pub fn new(page_tokens: usize, n_layers: usize, max_pages: usize) -> PrefixCache {
+        PrefixCache {
+            page_tokens: page_tokens.max(1),
+            n_layers,
+            max_pages,
+            clock: 0,
+            pages_held: 0,
+            roots: Vec::new(),
+        }
+    }
+
+    /// Page references the tree currently holds.
+    pub fn pages_held(&self) -> usize {
+        self.pages_held
+    }
+
+    /// Longest cached prefix of `prompt`, capped at `cap_tokens`
+    /// (both truncated down to page alignment). Read-only — the LRU
+    /// stamps move when the match is actually consumed ([`Self::seed`]).
+    pub fn probe(&self, prompt: &[u32], cap_tokens: usize) -> PrefixDecision {
+        let pt = self.page_tokens;
+        let want = (cap_tokens.min(prompt.len()) / pt) * pt;
+        let mut matched = 0usize;
+        let mut level = &self.roots;
+        while matched + pt <= want {
+            let toks = &prompt[matched..matched + pt];
+            let Some(node) = level.iter().find(|n| n.tokens[..] == *toks) else {
+                break;
+            };
+            matched += pt;
+            level = &node.children;
+        }
+        if matched == 0 {
+            PrefixDecision::Miss
+        } else {
+            PrefixDecision::Hit { tokens: matched }
+        }
+    }
+
+    /// Build a [`SeqCache`] seeded with the cached pages covering the
+    /// first `tokens` tokens of `prompt` (page-aligned; normally the
+    /// `tokens` of a [`PrefixDecision::Hit`]). Stamps the matched path
+    /// as recently used. The result's `len_tokens` is the tokens
+    /// actually covered — it can fall short of the ask if the tree
+    /// changed since the probe, so callers must trust `len_tokens`, not
+    /// the ask. Fails (rolled back, nothing retained) only on refcount
+    /// saturation.
+    pub fn seed(&mut self, pool: &mut KvPool, prompt: &[u32], tokens: usize) -> Result<SeqCache> {
+        let pt = self.page_tokens;
+        let want = (tokens.min(prompt.len()) / pt) * pt;
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut pairs: Vec<Vec<(PageId, PageId)>> = Vec::new();
+        let mut level = &mut self.roots;
+        while (pairs.len() + 1) * pt <= want {
+            let lo = pairs.len() * pt;
+            let toks = &prompt[lo..lo + pt];
+            let cur = level;
+            let Some(i) = cur.iter().position(|n| n.tokens[..] == *toks) else {
+                break;
+            };
+            cur[i].last_used = stamp;
+            pairs.push(cur[i].pages.clone());
+            level = &mut cur[i].children;
+        }
+        SeqCache::from_shared_pages(pool, self.n_layers, &pairs)
+    }
+
+    /// Insert the page-aligned prefix of `prompt` whose rows `cache`
+    /// holds finalized (a completed prefill), sharing the pages — no
+    /// copy. Returns the tokens *newly* cached (already-present pages
+    /// re-stamp as used and cost nothing). Best-effort: a refcount
+    /// saturation stops the walk early instead of failing, and the
+    /// budget is enforced afterwards by [`Self::enforce_budget`].
+    pub fn insert(&mut self, pool: &mut KvPool, prompt: &[u32], cache: &SeqCache) -> usize {
+        let pt = self.page_tokens;
+        let aligned = (prompt.len().min(cache.len_tokens) / pt) * pt;
+        self.clock += 1;
+        let stamp = self.clock;
+        let n_layers = self.n_layers;
+        let mut added = 0usize;
+        let mut pi = 0usize;
+        let mut level = &mut self.roots;
+        while (pi + 1) * pt <= aligned {
+            let toks = &prompt[pi * pt..(pi + 1) * pt];
+            let cur = level;
+            let idx = match cur.iter().position(|n| n.tokens[..] == *toks) {
+                Some(i) => {
+                    cur[i].last_used = stamp;
+                    i
+                }
+                None => {
+                    let mut pages = Vec::with_capacity(n_layers);
+                    let mut ok = true;
+                    for li in 0..n_layers {
+                        let k = cache.page_ids(li, false)[pi];
+                        let v = cache.page_ids(li, true)[pi];
+                        if pool.retain(k).is_err() {
+                            ok = false;
+                            break;
+                        }
+                        if pool.retain(v).is_err() {
+                            pool.release(k);
+                            ok = false;
+                            break;
+                        }
+                        pages.push((k, v));
+                    }
+                    if !ok {
+                        for (k, v) in pages {
+                            pool.release(k);
+                            pool.release(v);
+                        }
+                        return added;
+                    }
+                    self.pages_held += 2 * n_layers;
+                    added += pt;
+                    cur.push(Node {
+                        tokens: toks.to_vec(),
+                        pages,
+                        last_used: stamp,
+                        children: Vec::new(),
+                    });
+                    cur.len() - 1
+                }
+            };
+            pi += 1;
+            level = &mut cur[idx].children;
+        }
+        added
+    }
+
+    /// Trim the tree back to its page budget, evicting least-recently
+    /// used leaves first. Returns page references released.
+    pub fn enforce_budget(&mut self, pool: &mut KvPool) -> usize {
+        let mut freed = 0usize;
+        while self.pages_held > self.max_pages && self.evict_lru_leaf(pool) {
+            freed += 2 * self.n_layers;
+        }
+        freed
+    }
+
+    /// Pool-pressure eviction: drop cold leaves until the pool shows at
+    /// least `need_free` free pages or the tree is empty. A released
+    /// reference only frees the page once no live sequence shares it, so
+    /// the loop also stops when eviction stops helping. Returns page
+    /// references released.
+    pub fn evict_for(&mut self, pool: &mut KvPool, need_free: usize) -> usize {
+        let mut freed = 0usize;
+        while pool.free_pages() < need_free && self.evict_lru_leaf(pool) {
+            freed += 2 * self.n_layers;
+        }
+        freed
+    }
+
+    /// Release every cached page reference (engine shutdown / drain
+    /// accounting). Returns page references released.
+    pub fn flush(&mut self, pool: &mut KvPool) -> usize {
+        fn drop_all(nodes: &mut Vec<Node>, pool: &mut KvPool) {
+            for mut n in nodes.drain(..) {
+                for (k, v) in n.pages.drain(..) {
+                    pool.release(k);
+                    pool.release(v);
+                }
+                drop_all(&mut n.children, pool);
+            }
+        }
+        let freed = self.pages_held;
+        drop_all(&mut self.roots, pool);
+        self.pages_held = 0;
+        freed
+    }
+
+    /// Evict the least-recently-used leaf (only leaves are evictable:
+    /// removing an interior node would orphan the deeper prefixes whose
+    /// meaning depends on the full path). Returns whether a leaf fell.
+    fn evict_lru_leaf(&mut self, pool: &mut KvPool) -> bool {
+        let Some(stamp) = Self::min_leaf_stamp(&self.roots) else {
+            return false;
+        };
+        if Self::remove_leaf_with(&mut self.roots, stamp, pool) {
+            self.pages_held -= 2 * self.n_layers;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn min_leaf_stamp(nodes: &[Node]) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for n in nodes {
+            let s = if n.children.is_empty() {
+                Some(n.last_used)
+            } else {
+                Self::min_leaf_stamp(&n.children)
+            };
+            best = match (best, s) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        best
+    }
+
+    fn remove_leaf_with(nodes: &mut Vec<Node>, stamp: u64, pool: &mut KvPool) -> bool {
+        for i in 0..nodes.len() {
+            if nodes[i].children.is_empty() {
+                if nodes[i].last_used == stamp {
+                    let mut n = nodes.remove(i);
+                    for (k, v) in n.pages.drain(..) {
+                        pool.release(k);
+                        pool.release(v);
+                    }
+                    return true;
+                }
+            } else if Self::remove_leaf_with(&mut nodes[i].children, stamp, pool) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PT: usize = 4;
+    const LAYERS: usize = 2;
+
+    fn pool() -> KvPool {
+        KvPool::new(64, PT, 8)
+    }
+
+    /// Prefill a donor cache over `prompt` with per-position marker rows.
+    fn donor(p: &mut KvPool, prompt: &[u32]) -> SeqCache {
+        let mut c = SeqCache::new(LAYERS);
+        c.ensure_capacity(p, prompt.len()).unwrap();
+        for (pos, &t) in prompt.iter().enumerate() {
+            let row = [t as f32 + pos as f32 / 100.0; 8];
+            for l in 0..LAYERS {
+                c.write_row(p, l, pos, &row, &row).unwrap();
+            }
+        }
+        c
+    }
+
+    fn prompt(prefix: &[u32], suffix: &[u32]) -> Vec<u32> {
+        let mut v = prefix.to_vec();
+        v.extend_from_slice(suffix);
+        v
+    }
+
+    #[test]
+    fn insert_then_probe_matches_page_aligned_prefix() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(PT, LAYERS, 1024);
+        let shared: Vec<u32> = (100..108).collect(); // 2 full pages
+        let a = prompt(&shared, &[1, 2, 3]);
+        let ca = donor(&mut p, &a);
+        let used = p.used_pages();
+        // 11 tokens insert their 2 aligned pages; the partial tail stays
+        // private to the donor.
+        assert_eq!(pc.insert(&mut p, &a, &ca), 8);
+        assert_eq!(pc.pages_held(), 2 * 2 * LAYERS);
+        assert_eq!(p.used_pages(), used, "insert shares, never allocates");
+        // A prompt sharing both pages, then diverging.
+        let b = prompt(&shared, &[9, 9, 9, 9]);
+        assert_eq!(pc.probe(&b, b.len()), PrefixDecision::Hit { tokens: 8 });
+        // A prompt diverging inside page 2 only matches page 1.
+        let c = prompt(&shared[..5], &[7, 7, 7]);
+        assert_eq!(pc.probe(&c, c.len()), PrefixDecision::Hit { tokens: 4 });
+        // The cap truncates down to page alignment.
+        assert_eq!(pc.probe(&b, 7), PrefixDecision::Hit { tokens: 4 });
+        assert_eq!(pc.probe(&b, 3), PrefixDecision::Miss);
+        // An unrelated prompt misses.
+        let d: Vec<u32> = (200..212).collect();
+        assert_eq!(pc.probe(&d, d.len()), PrefixDecision::Miss);
+        // Re-inserting the same prompt adds nothing new.
+        assert_eq!(pc.insert(&mut p, &a, &ca), 0);
+        let mut ca = ca;
+        ca.release(&mut p);
+        assert_eq!(pc.flush(&mut p), 2 * 2 * LAYERS);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn seed_shares_pages_and_reads_donor_rows_bit_exactly() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(PT, LAYERS, 1024);
+        let a: Vec<u32> = (10..22).collect(); // 3 full pages
+        let mut ca = donor(&mut p, &a);
+        pc.insert(&mut p, &a, &ca);
+        let used = p.used_pages();
+        let hit = match pc.probe(&a, a.len() - 1) {
+            PrefixDecision::Hit { tokens } => tokens,
+            PrefixDecision::Miss => panic!("expected a hit"),
+        };
+        assert_eq!(hit, 8, "cap at prompt_len - 1 truncates to 2 pages");
+        let mut s = pc.seed(&mut p, &a, hit).unwrap();
+        assert_eq!(s.len_tokens, 8);
+        assert_eq!(p.used_pages(), used, "seeding shares, never allocates");
+        // The seeded cache reads exactly the donor's rows.
+        let mut want = vec![0.0f32; 12 * 8];
+        ca.fill_dense(&p, 1, false, &mut want).unwrap();
+        let mut got = vec![0.0f32; 8 * 8];
+        s.fill_dense(&p, 1, false, &mut got).unwrap();
+        assert_eq!(&got[..], &want[..8 * 8]);
+        // Donor release keeps the cached pages resident (tree still
+        // holds references); consumer release too; flush drains fully.
+        ca.release(&mut p);
+        s.release(&mut p);
+        assert!(p.used_pages() > 0);
+        pc.flush(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_drops_cold_leaves_first() {
+        let mut p = pool();
+        // Budget of one node's pages: 2 layers × (K, V) = 4.
+        let mut pc = PrefixCache::new(PT, LAYERS, 2 * LAYERS);
+        let a: Vec<u32> = (10..14).collect();
+        let b: Vec<u32> = (20..24).collect();
+        let mut ca = donor(&mut p, &a);
+        let mut cb = donor(&mut p, &b);
+        assert_eq!(pc.insert(&mut p, &a, &ca), 4);
+        assert_eq!(pc.insert(&mut p, &b, &cb), 4);
+        assert_eq!(pc.pages_held(), 4 * LAYERS, "over budget until enforced");
+        let freed = pc.enforce_budget(&mut p);
+        assert_eq!(freed, 2 * LAYERS);
+        // `a` was colder (b's insert stamped later): a is gone, b stays.
+        assert_eq!(pc.probe(&a, 4), PrefixDecision::Miss);
+        assert_eq!(pc.probe(&b, 4), PrefixDecision::Hit { tokens: 4 });
+        ca.release(&mut p);
+        cb.release(&mut p);
+        // Pool-pressure eviction drops the rest on demand.
+        let total = p.total_pages();
+        let freed = pc.evict_for(&mut p, total);
+        assert_eq!(freed, 2 * LAYERS);
+        assert_eq!(pc.pages_held(), 0);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn seeding_bumps_lru_so_hot_prefixes_survive() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(PT, LAYERS, 2 * LAYERS);
+        let a: Vec<u32> = (10..14).collect();
+        let b: Vec<u32> = (20..24).collect();
+        let mut ca = donor(&mut p, &a);
+        let mut cb = donor(&mut p, &b);
+        pc.insert(&mut p, &a, &ca);
+        pc.insert(&mut p, &b, &cb);
+        // Touch `a` after b's insert: now b is the cold one.
+        let mut s = pc.seed(&mut p, &a, 4).unwrap();
+        pc.enforce_budget(&mut p);
+        assert_eq!(pc.probe(&a, 4), PrefixDecision::Hit { tokens: 4 });
+        assert_eq!(pc.probe(&b, 4), PrefixDecision::Miss);
+        s.release(&mut p);
+        ca.release(&mut p);
+        cb.release(&mut p);
+        pc.flush(&mut p);
+        assert_eq!(p.used_pages(), 0);
+    }
+
+    #[test]
+    fn deep_paths_evict_leaf_before_parent() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(PT, LAYERS, 1024);
+        let a: Vec<u32> = (10..22).collect(); // 3 pages → a 3-deep path
+        let mut ca = donor(&mut p, &a);
+        pc.insert(&mut p, &a, &ca);
+        ca.release(&mut p);
+        // Evict everything on demand: leaves must fall deepest-first (an
+        // interior eviction would orphan the deeper prefix meaning).
+        let total = p.total_pages();
+        let freed = pc.evict_for(&mut p, total);
+        assert_eq!(freed, 3 * 2 * LAYERS);
+        assert_eq!(pc.pages_held(), 0);
+        assert_eq!(p.used_pages(), 0);
+    }
+}

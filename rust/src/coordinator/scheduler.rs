@@ -118,6 +118,12 @@ pub struct BatchState {
     /// Whether the backend can split this prompt's prefill into chunks
     /// (lab: yes; PJRT: its AOT prefill module is one fixed shape).
     pub chunkable: bool,
+    /// Prompt tokens of the candidate already resident in radix
+    /// prefix-cache pages (page-aligned; 0 without a cache). Their pages
+    /// are charged once — they are *already held* by the cache, so the
+    /// candidate only needs pages beyond them — and their prefill is
+    /// skipped, so chunking covers only the fresh remainder.
+    pub shared_tokens: usize,
 }
 
 /// The scheduler's verdict on one candidate admission. Every variant is
@@ -162,7 +168,14 @@ pub fn admission(
     max_new: usize,
 ) -> SchedDecision {
     let commit = committed_tokens(prompt_tokens, max_new, st.max_seq);
-    let need_pages = pages_for(commit, st.n_layers, st.page_tokens);
+    // Radix-shared pages are charged once: the prefix cache already holds
+    // the pages covering `shared_tokens`, so the candidate's *new* page
+    // demand is only what lies beyond them. Pricing shared prefixes at
+    // full private residency over-counted and produced spurious
+    // DeferKvPages/RejectNeverFits for shared-prefix fleets (bugfix).
+    let shared = st.shared_tokens.min(commit);
+    let need_pages = pages_for(commit, st.n_layers, st.page_tokens)
+        .saturating_sub(pages_for(shared, st.n_layers, st.page_tokens));
     if need_pages > st.free_pages {
         // Page check first: it distinguishes "wait for retirements" from
         // "can never run". With no active slots there are no retirements
@@ -173,13 +186,19 @@ pub fn admission(
             SchedDecision::DeferKvPages
         };
     }
+    // Prefill covers only the tokens the prefix cache doesn't: seeded
+    // rows are already finalized KV. The engine caps sharing at
+    // `prompt_tokens − 1` (the last prompt row must prefill to produce
+    // first-token logits), so `fresh ≥ 1` whenever a cache is in play;
+    // the `.max(1)` guards the pure function against a hostile snapshot.
+    let fresh = prompt_tokens.saturating_sub(st.shared_tokens).max(1);
     // An empty batch always makes progress: budgets defer *relative to*
     // other work, and there is none.
     if st.active_slots == 0 {
         let chunk = if st.chunkable {
-            prompt_tokens.min(st.prefill_budget_left.max(1))
+            fresh.min(st.prefill_budget_left.max(1))
         } else {
-            prompt_tokens
+            fresh
         };
         return SchedDecision::Admit { chunk };
     }
@@ -189,13 +208,13 @@ pub fn admission(
     if st.committed_tokens.saturating_add(commit) > cfg.max_batch_total_tokens {
         return SchedDecision::DeferTotalTokens;
     }
-    if st.prefill_budget_left == 0 || (!st.chunkable && prompt_tokens > st.prefill_budget_left) {
+    if st.prefill_budget_left == 0 || (!st.chunkable && fresh > st.prefill_budget_left) {
         return SchedDecision::DeferPrefillBudget;
     }
     let chunk = if st.chunkable {
-        prompt_tokens.min(st.prefill_budget_left)
+        fresh.min(st.prefill_budget_left)
     } else {
-        prompt_tokens
+        fresh
     };
     SchedDecision::Admit { chunk }
 }
@@ -215,6 +234,7 @@ mod tests {
             n_layers: 2,
             max_seq: 128,
             chunkable: true,
+            shared_tokens: 0,
         }
     }
 
@@ -283,6 +303,43 @@ mod tests {
         // ...but a pool that can never hold it is a hard reject.
         s.free_pages = 2;
         assert_eq!(admission(&cfg, &s, 100, 8), SchedDecision::RejectNeverFits);
+    }
+
+    #[test]
+    fn shared_prefix_pages_are_charged_once() {
+        // Regression (radix prefix cache): feasibility used to price every
+        // candidate at full private residency, so a shared-prefix request
+        // hit DeferKvPages even though the cache already held most of its
+        // pages. Commit 72 tokens → 36 pages; only 8 free.
+        let cfg = SchedulerConfig::default();
+        let mut s = st();
+        s.free_pages = 8;
+        assert_eq!(admission(&cfg, &s, 64, 8), SchedDecision::DeferKvPages);
+        // 56 of the 64 prompt tokens (7 full pages → 28 page refs) are
+        // cache-resident: the new demand is 36 − 28 = 8 pages, which fits,
+        // and the admit chunk covers only the 8 fresh tokens.
+        s.shared_tokens = 56;
+        assert_eq!(admission(&cfg, &s, 64, 8), SchedDecision::Admit { chunk: 8 });
+        // Same discount flips an empty-batch hard reject into progress.
+        let mut s = st();
+        s.active_slots = 0;
+        s.free_pages = 8;
+        assert_eq!(admission(&cfg, &s, 64, 8), SchedDecision::RejectNeverFits);
+        s.shared_tokens = 56;
+        assert_eq!(admission(&cfg, &s, 64, 8), SchedDecision::Admit { chunk: 8 });
+    }
+
+    #[test]
+    fn chunk_budget_is_spent_on_fresh_tokens_only() {
+        // A 100-token prompt with 96 cache-resident tokens needs a 4-token
+        // prefill, not a budget-sized chunk of already-finalized rows.
+        let cfg = SchedulerConfig::default();
+        let mut s = st();
+        s.shared_tokens = 96;
+        assert_eq!(admission(&cfg, &s, 100, 8), SchedDecision::Admit { chunk: 4 });
+        // An unchunkable prompt compares its *fresh* span to the budget.
+        s.chunkable = false;
+        assert_eq!(admission(&cfg, &s, 100, 8), SchedDecision::Admit { chunk: 4 });
     }
 
     #[test]

@@ -39,7 +39,8 @@ USAGE: pasa <subcommand> [flags]
         [--max-batch-prefill-tokens N] [--max-batch-total-tokens N]
         [--waiting-served-ratio R] [--max-batch-size N] [--fifo]
         [--deadline-steps N] [--retry-budget N] [--shed-queue-depth N]
-        [--chaos-seed S]
+        [--chaos-seed S] [--prefix-cache] [--prefix-cache-pages N]
+        [--best-of N]
         run the continuous-batching serving engine over a synthetic
         prompt workload. --lab uses the artifact-free pure-Rust backend
         (chunked prefill); --stream prints per-token events as they are
@@ -54,7 +55,12 @@ USAGE: pasa <subcommand> [flags]
         sheds the newest low-priority request above a queue depth
         (0 disables each). --chaos-seed S (lab only, S != 0) installs a
         seeded fault-injection plan; the run prints its injection log
-        and replays exactly from the same seed
+        and replays exactly from the same seed. --prefix-cache (lab
+        only) shares page-aligned prompt-prefix KV pages across requests
+        through a radix tree (--prefix-cache-pages caps its residency,
+        default half the pool; LRU leaves evict under pressure).
+        --best-of N (lab only) fans each prompt's single prefill out
+        into N decode slots over copy-on-write forks
   solve-beta [--n 128] [--init 0.984375] [--fmt fp16|bf16]
         solve the optimal accuracy condition
   info  [--artifacts DIR]
@@ -173,12 +179,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    // Prefix sharing and fan-out (S20): both ride the lab backend's paged
+    // CoW cache; the PJRT dense-cache path has no pages to share.
+    let prefix_cache_pages = args.get_usize("prefix-cache-pages", 0)?;
+    let prefix_cache = args.has("prefix-cache") || prefix_cache_pages > 0;
+    if prefix_cache && !lab {
+        bail!(
+            "--prefix-cache needs the lab backend (--lab); prompt-prefix \
+             sharing lives in the paged KV pool."
+        );
+    }
+    let best_of = args.get_usize("best-of", 1)?;
+    if best_of == 0 {
+        bail!("--best-of must be at least 1");
+    }
+    if best_of > 1 && !lab {
+        bail!(
+            "--best-of needs the lab backend (--lab); fan-out forks the \
+             paged KV cache copy-on-write."
+        );
+    }
+
     let mut cfg = EngineConfig::default();
     cfg.policy = policy;
     cfg.start_alloc = start_alloc;
     cfg.kv_store = kv_store;
     cfg.sched = sched;
     cfg.deadline_steps = deadline_steps;
+    if prefix_cache {
+        cfg.prefix_cache_pages = if prefix_cache_pages > 0 {
+            prefix_cache_pages
+        } else {
+            cfg.kv_pages / 2
+        };
+    }
 
     // The engine borrows a PJRT runtime; keep it alive across both arms.
     let rt;
@@ -205,7 +239,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             sampling,
             stop_at_eos: true,
         });
-        eng.submit(req);
+        if best_of > 1 {
+            eng.submit_best_of(req, best_of)?;
+        } else {
+            eng.submit(req);
+        }
     }
 
     let stream = args.has("stream");
@@ -237,6 +275,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("\n{}", eng.metrics.report());
+    if prefix_cache {
+        println!(
+            "prefix cache pages resident at end: {} (flushing)",
+            eng.prefix_pages_held()
+        );
+        eng.flush_prefix_cache();
+    }
     println!("kv pool utilization at end: {:.3}", eng.kv_utilization());
     if let Some(plan) = eng.fault_plan() {
         let counts = plan.counts();

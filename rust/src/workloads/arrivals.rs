@@ -110,6 +110,66 @@ pub fn prompt_of_tokens(tokens: usize) -> String {
     "x".repeat(tokens - 1)
 }
 
+/// A prompt of exactly `total_tokens` whose first `prefix_tokens` tokens
+/// are identical for every `idx` and whose suffix is distinct per `idx`:
+/// the workload shape the radix prefix cache is built for (a fleet
+/// sharing one system prompt, each request with its own tail).
+///
+/// BOS counts as token 0 of the shared prefix, so the shared byte span is
+/// `prefix_tokens - 1` bytes of a fixed pattern. The suffix encodes `idx`
+/// in base-26 letters (little-endian, `'a'`-filled), so any two requests
+/// with `idx < 26^suffix_len` get different suffixes while staying
+/// byte-level-tokenizer clean.
+pub fn shared_prefix_prompt(prefix_tokens: usize, total_tokens: usize, idx: usize) -> String {
+    assert!(prefix_tokens >= 1, "the shared prefix includes at least BOS");
+    assert!(
+        total_tokens > prefix_tokens,
+        "a request needs at least one token beyond the shared prefix"
+    );
+    let mut s = String::with_capacity(total_tokens - 1);
+    // Shared span: a fixed uppercase cycle, identical across the fleet.
+    for j in 0..prefix_tokens - 1 {
+        s.push((b'A' + (j % 23) as u8) as char);
+    }
+    // Distinct tail: idx in base-26, little-endian, 'a'-filled.
+    let mut v = idx;
+    for _ in 0..total_tokens - prefix_tokens {
+        s.push((b'a' + (v % 26) as u8) as char);
+        v /= 26;
+    }
+    s
+}
+
+/// Poisson arrivals shaped for prefix-cache studies: every prompt is at
+/// least `prefix_tokens + 1` long, so each request carries the full
+/// shared prefix plus a distinct tail (pair with
+/// [`shared_prefix_prompt`] at submission time, indexed by trace
+/// position). Same inter-arrival structure and determinism contract as
+/// [`poisson_trace`], under its own stream salt.
+pub fn shared_prefix_trace(
+    n: usize,
+    rate_per_step: f64,
+    prefix_tokens: usize,
+    shape: ArrivalShape,
+    seed: u64,
+) -> Vec<Arrival> {
+    assert!(rate_per_step > 0.0, "rate must be positive");
+    let mut rng = Pcg64::new(seed, 0x5A8E);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f64();
+            t += -(1.0 - u).ln() / rate_per_step;
+            let (p, max_new) = draw_shape(&mut rng, &shape);
+            Arrival {
+                step: t as usize,
+                prompt_tokens: p.max(prefix_tokens + 1),
+                max_new,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +203,39 @@ mod tests {
         for n in [1usize, 2, 17, 81] {
             assert_eq!(tokenizer::token_len(&prompt_of_tokens(n)), n);
         }
+    }
+
+    #[test]
+    fn shared_prefix_prompts_share_bytes_and_differ_in_tail() {
+        let pre = 17usize;
+        let total = 40usize;
+        let a = shared_prefix_prompt(pre, total, 0);
+        let b = shared_prefix_prompt(pre, total, 7);
+        let c = shared_prefix_prompt(pre, total, 7 + 26 * 26 * 26);
+        assert_eq!(tokenizer::token_len(&a), total);
+        assert_eq!(a.as_bytes()[..pre - 1], b.as_bytes()[..pre - 1]);
+        assert_eq!(a.as_bytes()[..pre - 1], c.as_bytes()[..pre - 1]);
+        assert_ne!(a, b, "distinct idx must yield a distinct tail");
+        assert_ne!(b, c, "base-26 digits must not alias within the tail");
+        // Same idx replays the same prompt.
+        assert_eq!(b, shared_prefix_prompt(pre, total, 7));
+    }
+
+    #[test]
+    fn shared_prefix_trace_keeps_prompts_beyond_the_prefix() {
+        let pre = 32usize;
+        let t = shared_prefix_trace(48, 0.5, pre, ArrivalShape::default(), 11);
+        assert_eq!(
+            t,
+            shared_prefix_trace(48, 0.5, pre, ArrivalShape::default(), 11),
+            "same seed must replay the same trace"
+        );
+        assert!(t.windows(2).all(|w| w[0].step <= w[1].step));
+        assert!(t.iter().all(|r| r.prompt_tokens > pre));
+        assert_ne!(
+            t,
+            shared_prefix_trace(48, 0.5, pre, ArrivalShape::default(), 12)
+        );
     }
 
     #[test]

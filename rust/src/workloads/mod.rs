@@ -8,7 +8,10 @@ pub mod resonance;
 pub mod rng;
 pub mod traces;
 
-pub use arrivals::{bursty_trace, poisson_trace, prompt_of_tokens, Arrival, ArrivalShape};
+pub use arrivals::{
+    bursty_trace, poisson_trace, prompt_of_tokens, shared_prefix_prompt, shared_prefix_trace,
+    Arrival, ArrivalShape,
+};
 pub use distributions::{
     gen_case, gen_gqa_multihead, gen_multihead, gen_padded_lens, gen_padded_multihead,
     gen_paged_decode_case, gqa_kv_head, AttentionCase, Distribution, MultiHeadCase, PAD_GARBAGE,

@@ -35,9 +35,12 @@ use pasa::attention::{
     Allocation, AttentionOutput, AttentionRequest, KernelRegistry, KvPair, KvView, PageId,
 };
 use pasa::coordinator::{KvPool, KvStore, SeqCache};
+use pasa::model::{sample, ModelDims, Sampling};
 use pasa::numerics::relative_rmse;
 use pasa::pool;
+use pasa::runtime::LabModel;
 use pasa::testkit::{fuzz_case, matrix_bits, paged_fixture, FixturePool, FuzzRegime};
+use pasa::workloads::Pcg64;
 
 /// Cases per allocation (the acceptance count).
 const CASES: u64 = 200;
@@ -301,6 +304,208 @@ fn kv_quant_gate(
         // 8-bit compute stacks its own stored-score quantization on top.
         Allocation::Fp8 | Allocation::Pasa8 => 1.0,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Forked ≡ fresh (PR 10): a CoW prefix fork of a prefilled sequence must
+// decode bit-identically to a from-scratch twin prefilled over the same
+// prefix — and must never write through the donor's pages. This is the
+// numerics contract of the radix prefix cache and best-of-n fan-out: page
+// sharing introduces ZERO new error sites, so a cache hit can never
+// perturb a PASA token stream.
+// ---------------------------------------------------------------------------
+
+/// Cases per KV store for the fork sweep (full lab forwards per case, so
+/// far fewer than the kernel-level streams).
+const FORK_CASES: u64 = 12;
+
+/// Decode steps compared after the cut.
+const FORK_DECODE_STEPS: usize = 4;
+
+fn fork_dims() -> ModelDims {
+    ModelDims {
+        vocab_size: 259,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        max_seq: 48,
+        prefill_seq: 16,
+        decode_batch: 2,
+        pad: 256,
+        bos: 257,
+        eos: 258,
+    }
+}
+
+/// Snapshot every valid row of a cache as bits (all layers, K and V).
+fn cache_bits(cache: &SeqCache, pool: &KvPool, n_layers: usize, width: usize) -> Vec<u32> {
+    let mut dense = vec![0.0f32; fork_dims().max_seq * width];
+    let mut out = Vec::new();
+    for l in 0..n_layers {
+        for want_v in [false, true] {
+            cache.fill_dense(pool, l, want_v, &mut dense).unwrap();
+            out.extend(dense[..cache.len_tokens * width].iter().map(|x| x.to_bits()));
+        }
+    }
+    out
+}
+
+/// The fork sweep body: random prompts prefilled into a donor cache,
+/// forked at a random page-aligned cut, decoded against a from-scratch
+/// twin under the engine's per-request RNG contract.
+fn fuzz_forked_equals_fresh(store: KvStore, stream: u64) {
+    let _mode = pool::test_mode_guard();
+    let dims = fork_dims();
+    let width = dims.head_width();
+    let alloc = Allocation::Pasa16;
+    let model = LabModel::synthetic(dims, 0xF08C);
+    for i in 0..FORK_CASES {
+        let seed = (stream << 32) | i;
+        // Alternate the worker-pool mode so sharing is pinned under both
+        // execution paths, not just the pooled fan-out.
+        pool::set_parallel(i % 2 == 0);
+        let mut rng = Pcg64::new(seed, 0xF08C);
+        let n = 2 * PAGE_TOKENS + 2 + rng.below(12); // 16..=27 prompt rows
+        let ids: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+        // Page-aligned cut strictly inside the prompt: ≥ 1 page, and the
+        // donor keeps rows past the cut so "later pages untouched" is a
+        // real assertion.
+        let max_pages = (n - 1) / PAGE_TOKENS;
+        let cut = PAGE_TOKENS * (1 + rng.below(max_pages));
+        assert!(cut < n);
+
+        let mut p = KvPool::new_with_store(96, PAGE_TOKENS, width, store);
+        let mut donor = SeqCache::new(dims.n_layers);
+        model
+            .prefill_chunk(alloc, &ids, 0, n, &mut donor, &mut p)
+            .unwrap_or_else(|e| panic!("donor prefill failed ({e}) — replay seed {seed:#018x}"));
+        let donor_before = cache_bits(&donor, &p, dims.n_layers, width);
+
+        // Forked: share the donor's aligned prefix pages (zero copies).
+        let mut forked = donor
+            .fork_prefix(&mut p, cut)
+            .unwrap_or_else(|e| panic!("fork_prefix failed ({e}) — replay seed {seed:#018x}"));
+        assert_eq!(forked.len_tokens, cut, "replay seed {seed:#018x}");
+
+        // Fresh: an independent twin prefilled over prompt[..cut].
+        let mut fresh = SeqCache::new(dims.n_layers);
+        model
+            .prefill_chunk(alloc, &ids, 0, cut, &mut fresh, &mut p)
+            .unwrap_or_else(|e| panic!("twin prefill failed ({e}) — replay seed {seed:#018x}"));
+        assert_eq!(
+            cache_bits(&forked, &p, dims.n_layers, width),
+            cache_bits(&fresh, &p, dims.n_layers, width),
+            "shared prefix rows differ from recomputed rows — replay seed {seed:#018x}"
+        );
+
+        // Decode both under the engine's per-request RNG contract
+        // (`request_rng(id) = Pcg64::new(0xe61e ^ id, id)`): same id on
+        // both sides, so any token divergence is a numerics difference.
+        let policy = Sampling::TopK { k: 8, temperature: 0.8 };
+        let mut rng_forked = Pcg64::new(0xe61e ^ seed, seed);
+        let mut rng_fresh = Pcg64::new(0xe61e ^ seed, seed);
+        let mut tok_forked = ids[cut];
+        let mut tok_fresh = ids[cut];
+        for step in 0..FORK_DECODE_STEPS {
+            let pos = cut + step;
+            let (lf, _) = model
+                .decode_step(alloc, tok_forked, pos, &mut forked, &mut p)
+                .unwrap_or_else(|e| {
+                    panic!("forked decode failed ({e}) — replay seed {seed:#018x}")
+                });
+            let (lg, _) = model
+                .decode_step(alloc, tok_fresh, pos, &mut fresh, &mut p)
+                .unwrap_or_else(|e| {
+                    panic!("fresh decode failed ({e}) — replay seed {seed:#018x}")
+                });
+            assert_eq!(
+                lf.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                lg.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "forked vs fresh logits diverged at step {step} — replay seed {seed:#018x}"
+            );
+            tok_forked = sample(&lf, policy, &mut rng_forked);
+            tok_fresh = sample(&lg, policy, &mut rng_fresh);
+            assert_eq!(
+                tok_forked, tok_fresh,
+                "forked vs fresh token streams diverged at step {step} — \
+                 replay seed {seed:#018x}"
+            );
+        }
+
+        // The donor never observed the fork: the shared pages and the
+        // pages past the cut (which the prefix fork never referenced) are
+        // all bit-intact.
+        assert_eq!(
+            donor_before,
+            cache_bits(&donor, &p, dims.n_layers, width),
+            "fork decode disturbed the donor's pages — replay seed {seed:#018x}"
+        );
+        forked.release(&mut p);
+        fresh.release(&mut p);
+
+        // Full fork (the best-of-n fan-out path): the donor's partially
+        // filled tail page IS shared here, so the first decode write must
+        // CoW-privatize it — the donor row bits still must not move, and
+        // the fork must decode bit-identically to a from-scratch twin
+        // prefilled over the whole prompt.
+        let mut fanned = donor
+            .fork(&mut p)
+            .unwrap_or_else(|e| panic!("full fork failed ({e}) — replay seed {seed:#018x}"));
+        let mut twin = SeqCache::new(dims.n_layers);
+        model
+            .prefill_chunk(alloc, &ids, 0, n, &mut twin, &mut p)
+            .unwrap_or_else(|e| panic!("full twin prefill failed ({e}) — replay seed {seed:#018x}"));
+        let mut tok_a = ids[0];
+        let mut tok_b = ids[0];
+        for step in 0..FORK_DECODE_STEPS {
+            let pos = n + step;
+            let (la, _) = model
+                .decode_step(alloc, tok_a, pos, &mut fanned, &mut p)
+                .unwrap_or_else(|e| {
+                    panic!("fan-out decode failed ({e}) — replay seed {seed:#018x}")
+                });
+            let (lb, _) = model
+                .decode_step(alloc, tok_b, pos, &mut twin, &mut p)
+                .unwrap_or_else(|e| {
+                    panic!("full-twin decode failed ({e}) — replay seed {seed:#018x}")
+                });
+            assert_eq!(
+                la.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                lb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "fan-out vs fresh logits diverged at step {step} — replay seed {seed:#018x}"
+            );
+            tok_a = sample(&la, policy, &mut rng_forked);
+            tok_b = sample(&lb, policy, &mut rng_fresh);
+            assert_eq!(
+                tok_a, tok_b,
+                "fan-out vs fresh token streams diverged at step {step} — \
+                 replay seed {seed:#018x}"
+            );
+        }
+        assert_eq!(
+            donor_before,
+            cache_bits(&donor, &p, dims.n_layers, width),
+            "fan-out decode wrote through a shared page — replay seed {seed:#018x}"
+        );
+
+        fanned.release(&mut p);
+        twin.release(&mut p);
+        donor.release(&mut p);
+        assert_eq!(p.used_pages(), 0, "page leak — replay seed {seed:#018x}");
+    }
+    pool::set_parallel(true);
+}
+
+#[test]
+fn fuzz_forked_equals_fresh_f32_pool() {
+    fuzz_forked_equals_fresh(KvStore::F32, 0xc1);
+}
+
+#[test]
+fn fuzz_forked_equals_fresh_e4m3_pool() {
+    fuzz_forked_equals_fresh(KvStore::E4m3, 0xc2);
 }
 
 #[test]

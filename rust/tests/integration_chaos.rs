@@ -29,7 +29,7 @@ use pasa::coordinator::{
 };
 use pasa::model::{ModelDims, Sampling};
 use pasa::runtime::LabModel;
-use pasa::workloads::{prompt_of_tokens, Pcg64};
+use pasa::workloads::{prompt_of_tokens, shared_prefix_prompt, Pcg64};
 
 fn dims(n_layers: usize, max_seq: usize, decode_batch: usize) -> ModelDims {
     ModelDims {
@@ -146,12 +146,27 @@ struct SoakRun {
 }
 
 fn run_soak(seed: u64, store: KvStore) -> (Engine<'static>, SoakRun) {
+    run_soak_with(seed, store, 0)
+}
+
+/// The soak body; `prefix_cache_pages > 0` turns on the radix prefix
+/// cache and switches the trace to shared-prefix prompts (a 16-token
+/// common span — 4 pages at page_tokens = 4 — with per-request tails),
+/// so page sharing, CoW forks, and cache eviction relief are all live
+/// under the same 5% fault storm.
+fn run_soak_with(
+    seed: u64,
+    store: KvStore,
+    prefix_cache_pages: usize,
+) -> (Engine<'static>, SoakRun) {
+    const SHARED: usize = 16;
     let cfg = EngineConfig {
         policy: GuardPolicy::Adaptive,
         kv_pages: 64,
         page_tokens: 4,
         kv_store: store,
         max_queue: 64,
+        prefix_cache_pages,
         sched: SchedulerConfig {
             max_batch_prefill_tokens: 16,
             max_batch_total_tokens: 150,
@@ -177,7 +192,12 @@ fn run_soak(seed: u64, store: KvStore) -> (Engine<'static>, SoakRun) {
                 1 => Sampling::Temperature(0.9),
                 _ => Sampling::TopK { k: 8, temperature: 0.8 },
             };
-            let mut req = Request::new(id, prompt_of_tokens(2 + rng.below(22)))
+            let prompt = if prefix_cache_pages > 0 {
+                shared_prefix_prompt(SHARED, SHARED + 2 + rng.below(12), id as usize)
+            } else {
+                prompt_of_tokens(2 + rng.below(22))
+            };
+            let mut req = Request::new(id, prompt)
                 .with_params(params(2 + rng.below(9), sampling));
             if rng.below(4) == 0 {
                 req = req.with_deadline(40 + rng.below(40) as u64);
@@ -252,6 +272,59 @@ fn chaos_soak_holds_lifecycle_invariants_across_seeds_and_stores() {
             assert_soak_invariants(&eng, &run);
         }
     }
+}
+
+#[test]
+fn chaos_soak_with_shared_prefix_cache_drains_to_zero() {
+    // The shared-prefix cell: prefix cache on, every prompt sharing a
+    // 16-token span, 5% uniform fault rates — sharing must survive pool
+    // seizures, evictions and retries, and a post-drain flush must
+    // return the pool to exactly zero pages (no leaked refcounts on
+    // either side of the radix tree).
+    for store in [KvStore::F32, KvStore::E4m3] {
+        for seed in [0xC0FFEEu64, 0x5EED1] {
+            let (mut eng, run) = run_soak_with(seed, store, 32);
+            assert!(
+                eng.metrics.prefix.hits > 0,
+                "the shared-prefix cell never hit the cache (seed {seed:#x})"
+            );
+            assert_eq!(
+                run.comps.len() as u64,
+                run.n_requests,
+                "every request completes under chaos with sharing on"
+            );
+            // The cache legitimately holds the hot prefix at idle;
+            // flushing it must drain the pool to zero utilization.
+            eng.flush_prefix_cache();
+            assert_soak_invariants(&eng, &run);
+        }
+    }
+}
+
+#[test]
+fn shared_prefix_chaos_replays_bit_identically_from_its_seed() {
+    // Determinism survives the prefix cache: its LRU clock is a step
+    // counter, not wall time, so the same seed must replay the same
+    // tokens, outcomes, injections — and the same hit/eviction counts.
+    let (mut a, run_a) = run_soak_with(0xC0FFEE, KvStore::F32, 32);
+    let (mut b, run_b) = run_soak_with(0xC0FFEE, KvStore::F32, 32);
+    let tokens = |run: &SoakRun| -> Vec<(u64, usize, u32)> {
+        run.events
+            .iter()
+            .filter_map(|e| match e {
+                StreamEvent::Token(t) => Some((t.request_id, t.index, t.token)),
+                StreamEvent::Finished { .. } => None,
+            })
+            .collect()
+    };
+    assert_eq!(tokens(&run_a), tokens(&run_b));
+    assert_eq!(a.metrics.prefix.hits, b.metrics.prefix.hits);
+    assert_eq!(a.metrics.prefix.tokens_saved, b.metrics.prefix.tokens_saved);
+    assert_eq!(a.metrics.prefix.evictions, b.metrics.prefix.evictions);
+    a.flush_prefix_cache();
+    b.flush_prefix_cache();
+    assert_eq!(a.kv_utilization(), 0.0);
+    assert_eq!(b.kv_utilization(), 0.0);
 }
 
 #[test]

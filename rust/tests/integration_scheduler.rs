@@ -21,7 +21,7 @@ use pasa::coordinator::{
 use pasa::model::{ModelDims, Sampling};
 use pasa::runtime::{LabModel, NormMode};
 use pasa::tensor::Matrix;
-use pasa::workloads::{prompt_of_tokens, Pcg64};
+use pasa::workloads::{prompt_of_tokens, shared_prefix_prompt, Pcg64};
 
 fn dims(n_layers: usize, max_seq: usize, decode_batch: usize) -> ModelDims {
     ModelDims {
@@ -425,6 +425,200 @@ fn multibyte_prompt_serves_end_to_end_on_token_admission() {
     // 81 tokens / 16-token chunks = 6 prefill rounds.
     assert_eq!(eng.metrics.prefill_chunks, 6);
     assert_eq!(eng.kv_utilization(), 0.0);
+}
+
+#[test]
+fn shared_prefix_fleet_saves_prefill_and_keeps_streams_bit_identical() {
+    // The prefix-cache acceptance pin: a fleet of 6 sharing a 64-token
+    // system prompt (4 pages at page_tokens = 16). The leader's prefill
+    // populates the radix cache; every follower must seed its cache from
+    // the shared pages and skip that whole page-aligned span — and every
+    // token stream must be bit-identical to a prefix-cache-off run.
+    const PREFIX: usize = 64;
+    const FLEET: usize = 6;
+    let cfg = |cache_pages: usize| {
+        let mut c = EngineConfig::default();
+        c.policy = GuardPolicy::Adaptive;
+        c.kv_pages = 256;
+        c.page_tokens = 16;
+        c.max_queue = 16;
+        c.prefix_cache_pages = cache_pages;
+        c.sched.max_batch_prefill_tokens = 128;
+        c
+    };
+    // Leader at step 0 (its prefill completion inserts the prefix);
+    // followers two steps later, with per-request distinct tails and a
+    // mix of sampling modes so the per-request RNG contract is live.
+    let arrivals: Vec<(usize, Request)> = (0..FLEET)
+        .map(|i| {
+            let s = match i % 3 {
+                0 => Sampling::Greedy,
+                1 => Sampling::Temperature(0.8),
+                _ => Sampling::TopK { k: 8, temperature: 0.9 },
+            };
+            let r = Request::new(i as u64 + 1, shared_prefix_prompt(PREFIX, 70 + i, i))
+                .with_params(params(4, s));
+            (if i == 0 { 0 } else { 2 }, r)
+        })
+        .collect();
+
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(2, 128, 4), 42), cfg(128));
+    let (comps, _) = drive(&mut eng, &arrivals);
+    assert_eq!(comps.len(), FLEET);
+
+    // Every follower hit the full page-aligned prefix: ≥ (fleet − 1) × 64
+    // prompt tokens never re-prefilled.
+    let pm = eng.metrics.prefix;
+    assert!(
+        pm.tokens_saved >= ((FLEET - 1) * PREFIX) as u64,
+        "saved only {} prefill tokens (hits {})",
+        pm.tokens_saved,
+        pm.hits
+    );
+    assert!(pm.hits >= (FLEET - 1) as u64, "hits = {}", pm.hits);
+    assert_eq!(
+        eng.metrics.prefill_tokens as usize,
+        arrivals.iter().map(|(_, r)| 70 + r.id as usize - 1).sum::<usize>()
+            - (FLEET - 1) * PREFIX,
+        "prefill work must shrink by exactly the shared spans"
+    );
+
+    // The cache keeps the prefix resident after the fleet drains; a
+    // flush returns the pool to empty — no leaked references.
+    assert!(eng.idle());
+    assert!(eng.prefix_pages_held() > 0, "prefix must stay resident");
+    assert!(eng.kv_utilization() > 0.0);
+    assert!(eng.flush_prefix_cache() > 0);
+    assert_eq!(eng.kv_utilization(), 0.0, "pages leaked past the flush");
+
+    // Bit-identity: the same trace with the cache disabled must produce
+    // the very same stream for every request — page sharing introduces
+    // zero new error sites.
+    let mut off = Engine::from_lab(LabModel::synthetic(dims(2, 128, 4), 42), cfg(0));
+    let (comps_off, _) = drive(&mut off, &arrivals);
+    assert_eq!(off.metrics.prefix.hits, 0);
+    for c in &comps {
+        let o = comps_off.iter().find(|o| o.id == c.id).unwrap();
+        assert_eq!(
+            c.tokens, o.tokens,
+            "request {}: prefix-cache run diverged from the cold run",
+            c.id
+        );
+        assert_eq!(c.reason, o.reason);
+    }
+}
+
+#[test]
+fn shared_pages_are_charged_once_at_admission() {
+    // Engine-level regression for the scheduler over-count bugfix: a
+    // pool too small for a follower's *full* KV price must still admit
+    // it when the shared prefix pages are already resident — the
+    // feasibility check may charge radix-shared pages only once.
+    const PREFIX: usize = 32; // 4 pages at page_tokens = 8
+    let mut cfg = EngineConfig::default();
+    cfg.policy = GuardPolicy::AlwaysPasa;
+    cfg.kv_pages = 12;
+    cfg.page_tokens = 8;
+    cfg.prefix_cache_pages = 8;
+    cfg.sched.max_batch_prefill_tokens = 64;
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(1, 64, 2), 7), cfg);
+
+    // Leader: 36-token prompt, full price 2 × ceil(38/8) = 10 ≤ 12 pages.
+    let a = eng.fresh_id();
+    eng.submit(
+        Request::new(a, shared_prefix_prompt(PREFIX, 36, 0)).with_params(params(2, Sampling::Greedy)),
+    );
+    let comps = eng.run_to_completion().unwrap();
+    assert_eq!(comps[0].reason, FinishReason::MaxTokens);
+    // The radix cache keeps the 4-page prefix (K + V) resident: 8 pages
+    // held, 4 free — a cold follower (full price 10 pages for 36 + 4
+    // tokens) could never fit.
+    assert_eq!(eng.prefix_pages_held(), 8);
+
+    let b = eng.fresh_id();
+    eng.submit(
+        Request::new(b, shared_prefix_prompt(PREFIX, 36, 1)).with_params(params(4, Sampling::Greedy)),
+    );
+    let comps = eng.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 1);
+    assert_eq!(
+        comps[0].reason,
+        FinishReason::MaxTokens,
+        "follower must serve out of the shared pages"
+    );
+    assert_eq!(comps[0].tokens.len(), 4);
+    assert_eq!(
+        eng.metrics.deferrals.kv_pages, 0,
+        "shared pages were double-charged at admission"
+    );
+    assert_eq!(eng.metrics.prefix.hits, 1);
+    assert_eq!(eng.metrics.prefix.tokens_saved, PREFIX as u64);
+    eng.flush_prefix_cache();
+    assert_eq!(eng.kv_utilization(), 0.0);
+}
+
+#[test]
+fn best_of_fan_out_streams_match_independent_runs() {
+    // One prefill fans out into n decode slots over CoW forks. The pin:
+    // each stream — primary and siblings — is bit-identical to an
+    // independent engine run submitting the same (id, prompt, params)
+    // normally, under temperature sampling (so the per-request RNG is
+    // doing real work and any fork-path perturbation shows up).
+    let cfg = || {
+        let mut c = EngineConfig::default();
+        c.policy = GuardPolicy::Adaptive;
+        c.kv_pages = 128;
+        c.page_tokens = 8;
+        c.prefix_cache_pages = 32;
+        c
+    };
+    let prompt = prompt_of_tokens(21);
+    let gp = params(6, Sampling::Temperature(0.9));
+
+    let mut eng = Engine::from_lab(LabModel::synthetic(dims(2, 64, 4), 13), cfg());
+    let primary = eng.fresh_id();
+    let (adm, ids) = eng
+        .submit_best_of(Request::new(primary, prompt.clone()).with_params(gp), 3)
+        .unwrap();
+    assert_eq!(adm, Admission::Queued);
+    assert_eq!(ids.len(), 3);
+    assert_eq!(ids[0], primary);
+    let comps = eng.run_to_completion().unwrap();
+    assert_eq!(comps.len(), 3, "primary + 2 forked siblings must complete");
+    assert_eq!(eng.metrics.prefix.fanout_forks, 2);
+    // One prefill for the whole fan: the prompt was processed once.
+    assert_eq!(eng.metrics.prefill_tokens, 21);
+    for id in &ids {
+        let c = comps.iter().find(|c| c.id == *id).unwrap();
+        assert_eq!(c.tokens.len(), 6);
+        assert_eq!(c.reason, FinishReason::MaxTokens);
+    }
+    // Distinct RNG streams actually diverge under temperature sampling.
+    let streams: Vec<&Vec<u32>> = ids
+        .iter()
+        .map(|id| &comps.iter().find(|c| c.id == *id).unwrap().tokens)
+        .collect();
+    assert!(
+        streams[0] != streams[1] || streams[0] != streams[2],
+        "sibling RNGs are aliased — every fan decoded the same tokens"
+    );
+    eng.flush_prefix_cache();
+    assert_eq!(eng.kv_utilization(), 0.0);
+
+    // Certification: each fan ≡ its independent run.
+    for id in ids {
+        let mut solo = Engine::from_lab(LabModel::synthetic(dims(2, 64, 4), 13), cfg());
+        let (sc, _) = drive(
+            &mut solo,
+            &[(0, Request::new(id, prompt.clone()).with_params(gp))],
+        );
+        assert_eq!(sc.len(), 1);
+        let fanned = comps.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(
+            sc[0].tokens, fanned.tokens,
+            "fan {id}: forked stream diverged from its independent run"
+        );
+    }
 }
 
 #[test]
